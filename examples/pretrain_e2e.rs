@@ -1,0 +1,98 @@
+//! End-to-end pretraining driver — the repo's system validation run.
+//!
+//! Exercises every layer on a real workload: synthetic corpus -> BPE
+//! tokenizer -> deterministic prefetching batcher -> AOT train-step
+//! executables (Pallas/JAX-lowered, PJRT CPU) -> two-stage target-precision
+//! schedule -> eval + GLUE-proxy probes -> loss-curve CSV.
+//!
+//!     cargo run --release --example pretrain_e2e -- --steps 300
+//!     cargo run --release --example pretrain_e2e -- --paper-scale  # Table-4 GPT-2 125M
+//!
+//! Results are recorded in EXPERIMENTS.md §End-to-end.
+
+use std::path::Path;
+
+use fp4train::config::RunConfig;
+use fp4train::coordinator::trainer::{build_dataset, Trainer};
+use fp4train::eval::probes::{run_probe, PROBES};
+use fp4train::reproduce::features::doc_features;
+use fp4train::runtime::Runtime;
+use fp4train::util::args::Cli;
+
+fn main() -> anyhow::Result<()> {
+    fp4train::util::logger::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cli = Cli::new("pretrain_e2e", "end-to-end FP4 pretraining driver")
+        .opt("steps", Some("300"), "training steps")
+        .opt("model", None, "model preset (default: largest proxy)")
+        .opt("recipe", Some("ours"), "precision recipe")
+        .opt("target-frac", Some("0.08"), "fp16 tail fraction (§3.3)")
+        .opt("docs", Some("6000"), "corpus size")
+        .opt("seed", Some("0"), "seed")
+        .flag("paper-scale", "use the verbatim Table-4 GPT-2 125M config (needs `make artifacts-paper`; hours on 1 CPU core)");
+    let args = match cli.parse(&argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+
+    let rt = Runtime::open(Path::new("artifacts"))?;
+    let model = if args.has_flag("paper-scale") {
+        "paper-gpt2-125m".to_string()
+    } else {
+        args.get("model").unwrap_or("gpt2-l-proxy").to_string()
+    };
+    let info = rt.manifest.model(&model)?;
+    println!(
+        "== pretrain_e2e: {} ({:.2}M params, {} layers, d={}, seq={}) ==",
+        model,
+        info.param_count as f64 / 1e6,
+        info.layers,
+        info.d_model,
+        info.seq
+    );
+
+    let mut cfg = RunConfig::default();
+    cfg.model = model.clone();
+    cfg.recipe = args.get("recipe").unwrap_or("ours").into();
+    cfg.steps = args.usize_or("steps", 300).unwrap() as u64;
+    cfg.seed = args.usize_or("seed", 0).unwrap() as u64;
+    cfg.target_precision_frac = args.f64_or("target-frac", 0.08).unwrap();
+    cfg.data.n_docs = args.usize_or("docs", 6000).unwrap();
+    cfg.eval_every = (cfg.steps / 6).max(1);
+    cfg.log_every = (cfg.steps / 30).max(1);
+    cfg.out_dir = "runs/e2e".into();
+
+    let t0 = std::time::Instant::now();
+    let res = Trainer::new(&rt, cfg.clone()).run(None)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    // downstream probe suite on the final weights
+    let (_, tok) = build_dataset(&rt, &cfg)?;
+    let (feats, metas) = doc_features(&rt, &model, &res.state, &tok, 240, cfg.seed)?;
+    println!("\nGLUE-proxy probes (linear probes on pooled hidden states):");
+    let mut mean = 0.0;
+    let mut n = 0;
+    for (name, desc) in PROBES {
+        let pr = run_probe(name, &feats, &metas, cfg.seed);
+        println!("  {name:<12} acc {:.3} (chance {:.3})  — {desc}", pr.accuracy, pr.chance);
+        if *name != "parity" {
+            mean += pr.accuracy;
+            n += 1;
+        }
+    }
+    println!("  probe mean (excl. control): {:.4}", mean / n as f64);
+
+    let tokens_per_step = rt.manifest.batch * info.seq;
+    println!("\n== e2e summary ==");
+    println!("  steps              : {}", cfg.steps);
+    println!("  final train loss   : {:.4}", res.final_train_loss);
+    println!("  final val loss/ppl : {:.4} / {:.3}", res.final_val_nll, res.final_val_ppl);
+    println!("  mean step time     : {:.1} ms", res.metrics.mean_step_ms());
+    println!("  throughput         : {:.0} tokens/s", res.metrics.tokens_per_second(tokens_per_step));
+    println!("  wall time          : {wall:.1} s");
+    println!("  loss curve         : runs/e2e/{}__{}__steps.csv", cfg.model, cfg.recipe);
+    Ok(())
+}

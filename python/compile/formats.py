@@ -1,0 +1,215 @@
+"""Simulated low-precision floating-point formats (paper Appendix A, Eq. 1-7).
+
+Implements *fake quantization*: a value is clipped and rounded onto the grid
+of a narrow floating-point format (FP4 E2M1, FP8 E4M3, FP8 E5M2) after
+scaling, then immediately rescaled back to f32.  This matches the paper's
+own methodology ("the model adopts a simulated FP4 approach", §6) and the
+quantization formulae of Appendix A:
+
+    Q_max = (2 - 2^-m) * 2^(2^e - b - 1)              (Eq. 2)
+    X'_R  = Clip(X_R, -alpha*Q_max, alpha*Q_max)      (Eq. 3-4)
+    v     = 2^(floor(log2|X'_R/alpha|) - m)  (normals)(Eq. 6)
+    X_FP  = alpha * v * round(X'_R / (alpha * v))     (Eq. 7)
+
+which is round-to-nearest-even on the format's representable grid with a
+saturating clip.  Scaling granularities: per-tensor, per-token (rows of the
+matmul LHS), per-channel (columns of the matmul RHS), and per-block along
+the contraction dimension with block size 128 (§3.2).
+
+This module is pure jnp and is shared by the L1 Pallas kernels' reference
+oracle (kernels/ref.py), the L2 model (qlinear.py), and the pytest suite.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class FpFormat:
+    """A narrow floating-point format: 1 sign bit, `exp` exponent bits with
+    bias `bias`, `man` mantissa bits, and saturating max `max_value` (which
+    may be below the naive formula when the top code is reserved, as in
+    E4M3)."""
+
+    name: str
+    exp: int
+    man: int
+    bias: int
+    max_value: float
+
+    @property
+    def min_normal(self) -> float:
+        return 2.0 ** (1 - self.bias)
+
+    @property
+    def min_subnormal(self) -> float:
+        return 2.0 ** (1 - self.bias - self.man)
+
+    @property
+    def bits(self) -> int:
+        return 1 + self.exp + self.man
+
+
+# FP4 E2M1 (OCP MX / Blackwell NVFP4 element format):
+#   codes: +-{0, 0.5, 1, 1.5, 2, 3, 4, 6}
+FP4_E2M1 = FpFormat("fp4_e2m1", exp=2, man=1, bias=1, max_value=6.0)
+
+# FP8 E4M3 (Micikevicius et al., 2022): S.1111.111 is NaN, so max = 448.
+FP8_E4M3 = FpFormat("fp8_e4m3", exp=4, man=3, bias=7, max_value=448.0)
+
+# FP8 E5M2: IEEE-like with inf; max finite = 57344.
+FP8_E5M2 = FpFormat("fp8_e5m2", exp=5, man=2, bias=15, max_value=57344.0)
+
+FORMATS = {f.name: f for f in (FP4_E2M1, FP8_E4M3, FP8_E5M2)}
+# Short aliases used in recipe configs.
+FORMATS["fp4"] = FP4_E2M1
+FORMATS["fp8"] = FP8_E4M3
+
+
+def quantize_to_grid(x: jnp.ndarray, fmt: FpFormat) -> jnp.ndarray:
+    """Round `x` (f32) to the nearest representable value of `fmt`
+    (round-to-nearest-even), saturating at +-max_value.  No scaling: this is
+    the raw grid projection of Eq. 6-7 with alpha=1.
+
+    Implementation (perf iteration #1, EXPERIMENTS.md §Perf): the binade
+    2^floor(log2|x|) is extracted by masking the f32 exponent field — one
+    bitcast+and instead of frexp/ldexp, bit-exact and ~1.7x faster on the
+    CPU backend (log2/exp2 would be approximate — see git history).  For
+    |x| = 0 or f32-subnormal the masked field is 0 and the max() clamps the
+    step to the format's subnormal spacing, reproducing the Eq. 6 clamp.
+    """
+    ax = jnp.abs(x)
+    pow2 = jax.lax.bitcast_convert_type(
+        jax.lax.bitcast_convert_type(ax, jnp.int32) & jnp.int32(0x7F80_0000),
+        jnp.float32,
+    )
+    # Quantization step v = 2^(e - m), clamped at subnormal spacing (Eq. 6).
+    min_step = jnp.float32(2.0 ** (1 - fmt.bias - fmt.man))
+    v = jnp.maximum(pow2 * jnp.float32(2.0**-fmt.man), min_step)
+    # RNE on the grid (jnp.round is round-half-to-even), then saturate (Eq. 4).
+    q = jnp.round(x / v) * v
+    return jnp.clip(q, -fmt.max_value, fmt.max_value).astype(jnp.float32)
+
+
+# --- scaling granularities -------------------------------------------------
+
+GRANULARITIES = ("tensor", "token", "channel", "block")
+DEFAULT_BLOCK = 128  # paper §3.2: "block size is set to 128"
+
+
+def _absmax(x: jnp.ndarray, axis, keepdims=True) -> jnp.ndarray:
+    if (
+        keepdims
+        and isinstance(axis, int)
+        and axis % max(x.ndim, 1) == x.ndim - 1
+        and x.shape[-1] > 1
+    ):
+        # Perf iteration #1 (EXPERIMENTS.md §Perf): XLA CPU lowers a
+        # minor-axis reduce to a scalar loop (~0.13 Gelem/s); an explicit
+        # pairwise maximum tree vectorizes (~1 Gelem/s, 8x).  Zero-padding
+        # to a power of two is exact for max(|x|).
+        ax = jnp.abs(x)
+        n = ax.shape[-1]
+        p = 1 << (n - 1).bit_length()
+        if p != n:
+            pad = [(0, 0)] * (x.ndim - 1) + [(0, p - n)]
+            ax = jnp.pad(ax, pad)
+        while ax.shape[-1] > 1:
+            ax = jnp.maximum(ax[..., ::2], ax[..., 1::2])
+        m = ax
+    else:
+        m = jnp.max(jnp.abs(x), axis=axis, keepdims=keepdims)
+    # Guard all-zero groups: scale 1 keeps zeros exactly representable.
+    return jnp.where(m == 0.0, jnp.ones_like(m), m)
+
+
+def fake_quant(
+    x: jnp.ndarray,
+    fmt: FpFormat,
+    granularity: str = "tensor",
+    axis: Optional[int] = None,
+    block: int = DEFAULT_BLOCK,
+) -> jnp.ndarray:
+    """Fake-quantize `x` to `fmt` with absmax scaling at the given
+    granularity.
+
+    granularity:
+      * "tensor"  — one scale for the whole array.
+      * "token"   — one scale per slice along every axis except `axis`
+                    (i.e. rows of a matmul LHS when axis=-1).
+      * "channel" — one scale per slice along `axis` == one scale per
+                    output channel of a matmul RHS when axis=0.
+      * "block"   — 1-D blocks of length `block` along `axis` (the
+                    contraction dimension); one scale per block (§3.2).
+
+    The scale is alpha = absmax/Q_max (Eq. 3), applied as
+    dequant(quantize_to_grid(x/alpha)) * alpha.
+    """
+    if granularity == "tensor":
+        scale = _absmax(x, axis=None) / fmt.max_value
+        return quantize_to_grid(x / scale, fmt) * scale
+
+    if axis is None:
+        raise ValueError("token/channel/block granularity requires axis")
+    axis = axis % x.ndim
+
+    if granularity == "token":
+        scale = _absmax(x, axis=axis) / fmt.max_value
+        return quantize_to_grid(x / scale, fmt) * scale
+
+    if granularity == "channel":
+        reduce_axes = tuple(a for a in range(x.ndim) if a != axis)
+        scale = _absmax(x, axis=reduce_axes) / fmt.max_value
+        return quantize_to_grid(x / scale, fmt) * scale
+
+    if granularity == "block":
+        k = x.shape[axis]
+        if k % block != 0:
+            # Degenerate geometry (e.g. tiny test batches): treat the whole
+            # axis as a single block rather than failing — identical
+            # semantics to block == k.  Real training shapes are always
+            # 128-aligned (checked by test_presets_all_valid).
+            block = k
+        nb = k // block
+        # reshape axis -> (nb, block), scale over the block sub-axis.
+        new_shape = x.shape[:axis] + (nb, block) + x.shape[axis + 1 :]
+        xb = x.reshape(new_shape)
+        scale = _absmax(xb, axis=axis + 1) / fmt.max_value
+        q = quantize_to_grid(xb / scale, fmt) * scale
+        return q.reshape(x.shape)
+
+    raise ValueError(f"unknown granularity {granularity!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """How one matmul operand is quantized: a format name from FORMATS (or
+    "none" for full precision), a granularity, and a block size."""
+
+    fmt: str = "none"  # none | fp4 | fp8 | fp8_e4m3 | fp8_e5m2
+    granularity: str = "block"
+    block: int = DEFAULT_BLOCK
+
+    def apply(self, x: jnp.ndarray, axis: int) -> jnp.ndarray:
+        if self.fmt == "none":
+            return x
+        return fake_quant(
+            x, FORMATS[self.fmt], self.granularity, axis=axis, block=self.block
+        )
+
+    @property
+    def enabled(self) -> bool:
+        return self.fmt != "none"
+
+    def tag(self) -> str:
+        if not self.enabled:
+            return "none"
+        return f"{self.fmt}.{self.granularity}"
+
+
+NONE_SPEC = QuantSpec(fmt="none")

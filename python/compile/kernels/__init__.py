@@ -1,0 +1,11 @@
+"""L1 Pallas kernels (build-time only; lowered into the AOT HLO artifacts).
+
+* ``fp_quant.block_fake_quant`` — per-block FP4/FP8 fake quantization.
+* ``quant_matmul.quant_matmul`` — per-block-quantized GEMM (the hot spot).
+* ``ref`` — pure-jnp oracles used by pytest.
+"""
+
+from .fp_quant import block_fake_quant
+from .quant_matmul import quant_matmul
+
+__all__ = ["block_fake_quant", "quant_matmul"]

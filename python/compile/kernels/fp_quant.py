@@ -1,0 +1,93 @@
+"""L1 Pallas kernel: per-block fake quantization (paper §3.2).
+
+The kernel tiles the input into (rows, 128) VMEM blocks — 128 matches both
+the paper's per-block scale granularity and the TPU lane width / MXU edge —
+computes the absmax scale per 128-wide block *inside* the tile (one VMEM
+residency, no cross-tile traffic), projects onto the FP4/FP8 grid with
+round-to-nearest-even, and rescales.
+
+Hardware adaptation note (DESIGN.md §Hardware-Adaptation): the paper's CUDA
+formulation assigns a threadblock per quantization block; on TPU the same
+schedule is expressed with a BlockSpec grid, and the absmax reduction
+vectorizes across the 8×128 VPU registers.  Kernels are lowered with
+``interpret=True`` (CPU PJRT cannot execute Mosaic custom-calls); the HLO
+produced is portable.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..formats import FpFormat, FORMATS, DEFAULT_BLOCK
+
+# Rows per VMEM tile.  8 f32 sublanes × 128 lanes is the native VPU tile;
+# 256 rows keeps the tile ≥ 128 KiB to amortize grid overhead while staying
+# ≪ VMEM (256×128×4 B = 128 KiB in + 128 KiB out).
+_TILE_ROWS = 256
+
+
+def _quant_block_body(x, fmt: FpFormat):
+    """Fake-quantize a (rows, block) tile with one absmax scale per row of
+    the tile (each tile row is exactly one quantization block).
+
+    Same perf-iteration-#1 structure as formats.py: pairwise-tree absmax
+    (VPU-friendly; XLA CPU's minor-axis reduce is scalar) and the
+    exponent-field bit mask instead of frexp/ldexp — both bit-exact.
+    """
+    am = jnp.abs(x)
+    while am.shape[-1] > 1:
+        am = jnp.maximum(am[..., ::2], am[..., 1::2])
+    s = am / fmt.max_value
+    s = jnp.where(s == 0.0, jnp.ones_like(s), s)
+    xs = x / s
+    ax = jnp.abs(xs)
+    pow2 = jax.lax.bitcast_convert_type(
+        jax.lax.bitcast_convert_type(ax, jnp.int32) & jnp.int32(0x7F80_0000),
+        jnp.float32,
+    )
+    min_step = jnp.float32(2.0 ** (1 - fmt.bias - fmt.man))
+    v = jnp.maximum(pow2 * jnp.float32(2.0**-fmt.man), min_step)
+    q = jnp.clip(jnp.round(xs / v) * v, -fmt.max_value, fmt.max_value)
+    return q * s
+
+
+def _kernel(x_ref, o_ref, *, fmt: FpFormat):
+    o_ref[...] = _quant_block_body(x_ref[...], fmt)
+
+
+@functools.partial(jax.jit, static_argnames=("fmt_name", "block"))
+def block_fake_quant(
+    x: jnp.ndarray, fmt_name: str, block: int = DEFAULT_BLOCK
+) -> jnp.ndarray:
+    """Per-block fake-quant of a 2-D array along its last axis.
+
+    `x` is (M, K) with K % block == 0; each (row, 128-block) gets its own
+    absmax scale.  Returns f32 values lying exactly on the scaled grid.
+    """
+    fmt = FORMATS[fmt_name]
+    m, k = x.shape
+    if k % block != 0:
+        raise ValueError(f"K={k} not divisible by block={block}")
+    rows = min(_TILE_ROWS, m)
+    while m % rows != 0:
+        rows //= 2
+    rows = max(rows, 1)
+    grid = (m // rows, k // block)
+    return pl.pallas_call(
+        functools.partial(_kernel, fmt=fmt),
+        out_shape=jax.ShapeDtypeStruct((m, k), jnp.float32),
+        grid=grid,
+        in_specs=[pl.BlockSpec((rows, block), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((rows, block), lambda i, j: (i, j)),
+        interpret=True,
+    )(x)
+
+
+def vmem_footprint_bytes(rows: int = _TILE_ROWS, block: int = DEFAULT_BLOCK) -> int:
+    """Analytic VMEM footprint of one grid step (in + out tiles, f32).
+    Used by EXPERIMENTS.md §Perf for the TPU estimate."""
+    return 2 * rows * block * 4

@@ -1,0 +1,114 @@
+"""L1 Pallas kernel: per-block-quantized matmul — the paper's compute
+hot-spot (a quantized linear layer's GEMM).
+
+C[M,N] = Qx(X)[M,K] @ Qw(W)[K,N], where Qx/Qw project each 128-long slice
+of the contraction dimension onto the FP4/FP8 grid with its own absmax
+scale (paper §3.2, B=128).
+
+Schedule (BlockSpec): grid (M/bm, N/bn, K/128); each step loads an
+(bm, 128) X tile and a (128, bn) W tile into VMEM, quantizes both in
+registers (the K-tile is exactly one scale block, so the absmax reduction
+is tile-local), and accumulates the dot into the revisited (bm, bn) output
+block.  On real TPU hardware the dot maps onto the 128×128 MXU and the
+quantize epilogue onto the VPU; double-buffering of the K-stream is
+provided by the Pallas pipeline.  Lowered with interpret=True for CPU PJRT
+(see fp_quant.py).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..formats import FpFormat, FORMATS, DEFAULT_BLOCK
+from .fp_quant import _quant_block_body
+
+# Output tile 128×128 == one MXU pass per K-step.
+_BM = 128
+_BN = 128
+
+
+def _mm_kernel(x_ref, w_ref, o_ref, *, x_fmt: Optional[FpFormat],
+               w_fmt: Optional[FpFormat], nk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    w = w_ref[...]
+    if x_fmt is not None:
+        # (bm, 128): one scale per row — each row-slice is one K-block.
+        x = _quant_block_body(x, x_fmt)
+    if w_fmt is not None:
+        # (128, bn): one scale per column; transpose the body's row-wise
+        # reduction.
+        w = _quant_block_body(w.T, w_fmt).T
+    o_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("x_fmt_name", "w_fmt_name", "block")
+)
+def quant_matmul(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    x_fmt_name: Optional[str] = "fp4",
+    w_fmt_name: Optional[str] = "fp4",
+    block: int = DEFAULT_BLOCK,
+) -> jnp.ndarray:
+    """Per-block-quantized (M,K)@(K,N) matmul.  Formats of None/"none" skip
+    quantization of that operand.  K must be a multiple of `block`; M and N
+    are padded to the tile size internally if needed."""
+    x_fmt = None if x_fmt_name in (None, "none") else FORMATS[x_fmt_name]
+    w_fmt = None if w_fmt_name in (None, "none") else FORMATS[w_fmt_name]
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    if k % block != 0:
+        raise ValueError(f"K={k} not divisible by block={block}")
+
+    bm = min(_BM, m)
+    bn = min(_BN, n)
+    pm = (-m) % bm
+    pn = (-n) % bn
+    if pm:
+        x = jnp.pad(x, ((0, pm), (0, 0)))
+    if pn:
+        w = jnp.pad(w, ((0, 0), (0, pn)))
+    mp, np_ = m + pm, n + pn
+    nk = k // block
+
+    out = pl.pallas_call(
+        functools.partial(_mm_kernel, x_fmt=x_fmt, w_fmt=w_fmt, nk=nk),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        grid=(mp // bm, np_ // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, block), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        interpret=True,
+    )(x, w)
+    return out[:m, :n]
+
+
+def vmem_footprint_bytes(bm: int = _BM, bn: int = _BN,
+                         block: int = DEFAULT_BLOCK) -> int:
+    """Analytic per-step VMEM footprint: X tile + W tile + output
+    accumulator, f32.  With Pallas double-buffering of the two input
+    streams the pipeline footprint is 2×(in tiles) + out."""
+    return 2 * (bm * block + block * bn) * 4 + bm * bn * 4
+
+
+def mxu_utilization_estimate(bm: int = _BM, bn: int = _BN,
+                             block: int = DEFAULT_BLOCK) -> float:
+    """Fraction of MXU issue slots doing useful work per K-step, assuming
+    the quantize epilogue (VPU) overlaps the next tile's DMA: a full
+    128×128×128 dot is one MXU pass, so utilization is bounded by tile
+    alignment only."""
+    full = (bm / 128) * (bn / 128) * (block / 128)
+    return min(1.0, full)

@@ -1,0 +1,90 @@
+"""Pure-jnp reference oracles for the L1 Pallas kernels.
+
+Two independent implementations of FP4/FP8 grid projection are kept:
+
+* ``formats.quantize_to_grid`` — the exponent/step formula of the paper's
+  Appendix A (Eq. 5-7).
+* ``grid_round_lut`` — brute-force nearest-neighbour (ties-to-even) against
+  the explicitly enumerated code grid of the format.
+
+The pytest suite asserts the two agree everywhere, then uses either as the
+oracle for the Pallas kernels.  This guards the formula implementation
+against off-by-one-binade errors that a single self-consistent
+implementation would hide.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+import jax.numpy as jnp
+
+from ..formats import FpFormat, fake_quant, quantize_to_grid
+
+
+def enumerate_grid(fmt: FpFormat) -> np.ndarray:
+    """All non-negative representable values of `fmt`, ascending."""
+    vals = {0.0}
+    # subnormals: m * 2^(1-bias-man), m in [1, 2^man)
+    for m in range(1, 2**fmt.man):
+        vals.add(m * 2.0 ** (1 - fmt.bias - fmt.man))
+    # normals: (1 + m/2^man) * 2^(e-bias), e in [1, 2^exp)
+    for e in range(1, 2**fmt.exp):
+        for m in range(2**fmt.man):
+            v = (1.0 + m / 2**fmt.man) * 2.0 ** (e - fmt.bias)
+            if v <= fmt.max_value:
+                vals.add(v)
+    return np.array(sorted(vals), dtype=np.float32)
+
+
+def grid_round_lut(x: np.ndarray, fmt: FpFormat) -> np.ndarray:
+    """Nearest representable value of `fmt`, ties-to-even, saturating."""
+    pos = enumerate_grid(fmt)
+    grid = np.concatenate([-pos[::-1], pos[1:]])  # full signed grid
+    x = np.asarray(x, dtype=np.float32)
+    idx = np.searchsorted(grid, x)
+    idx = np.clip(idx, 1, len(grid) - 1)
+    lo, hi = grid[idx - 1], grid[idx]
+    dlo, dhi = np.abs(x - lo), np.abs(hi - x)
+    take_hi = dhi < dlo
+    # Ties: consecutive grid points alternate mantissa parity within a
+    # binade, and the signed-grid index parity relative to the position of
+    # zero tracks that parity, so "even grid index" == "even mantissa".
+    zero_pos = len(pos) - 1  # index of 0.0 in `grid`
+    tie = dhi == dlo
+    hi_even = (idx - zero_pos) % 2 == 0
+    take_hi = np.where(tie, hi_even, take_hi)
+    out = np.where(take_hi, hi, lo)
+    return np.clip(out, -fmt.max_value, fmt.max_value).astype(np.float32)
+
+
+def ref_block_fake_quant(
+    x: jnp.ndarray, fmt: FpFormat, block: int = 128
+) -> jnp.ndarray:
+    """Oracle for the per-block fake-quant kernel: blocks along the last
+    axis, absmax scale per block (paper §3.2, B=128)."""
+    return fake_quant(x, fmt, "block", axis=-1, block=block)
+
+
+def ref_quant_matmul(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    x_fmt: Optional[FpFormat],
+    w_fmt: Optional[FpFormat],
+    block: int = 128,
+) -> jnp.ndarray:
+    """Oracle for the quantized matmul kernel: per-block scaling along the
+    contraction dimension of both operands, then a plain f32 matmul."""
+    xq = x if x_fmt is None else fake_quant(x, x_fmt, "block", axis=-1, block=block)
+    wq = w if w_fmt is None else fake_quant(w, w_fmt, "block", axis=0, block=block)
+    return xq @ wq
+
+
+__all__ = [
+    "enumerate_grid",
+    "grid_round_lut",
+    "ref_block_fake_quant",
+    "ref_quant_matmul",
+    "quantize_to_grid",
+]

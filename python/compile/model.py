@@ -1,0 +1,277 @@
+"""L2: transformer language models (GPT-2 and LLaMA families) with
+per-module mixed-precision quantization (paper §3).
+
+Module-precision mapping (paper Fig. 1(d)-(e)):
+
+* **Attention-neighbour linears** (QKV projection, output projection) use
+  the recipe's ``attn`` spec — FP8 in the paper's headline recipe, to
+  "protect" the attention mechanism (§3.1).
+* **FFN linears** use the ``ffn`` spec — FP4 per-block (§3.2).
+* **Multi-head attention itself** (QK^T, softmax, PV) is never quantized
+  (the paper keeps it in FP16 FlashAttention; we keep exact f32 attention —
+  FlashAttention is an IO optimization, not part of the contribution).
+* **Backward**: weight-gradient GEMMs use the ``wgrad`` spec (FP8);
+  activation-gradient GEMMs use ``agrad`` (identity in the paper).
+* Embeddings, layernorms, biases stay f32 ("relatively small", Appendix B).
+
+Parameters are a dict pytree; layers are stacked along a leading axis and
+iterated with ``jax.lax.scan`` so the lowered HLO stays compact for deep
+configs (L2 perf: scan vs unroll is benched in EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .formats import QuantSpec, NONE_SPEC
+from .qlinear import LinearRecipe, apply_qlinear
+
+
+# --------------------------------------------------------------------------
+# configuration
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # "gpt2" | "llama"
+    vocab: int
+    layers: int
+    d_model: int
+    n_head: int
+    d_ff: int
+    seq: int
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_head == 0
+        return self.d_model // self.n_head
+
+    def param_count(self) -> int:
+        """Exact trainable-parameter count (tied LM head)."""
+        d, f, v, l = self.d_model, self.d_ff, self.vocab, self.layers
+        if self.family == "gpt2":
+            per_layer = (
+                2 * 2 * d            # ln1, ln2 (g, b)
+                + d * 3 * d + 3 * d  # qkv + bias
+                + d * d + d          # out proj + bias
+                + d * f + f          # fc1 + bias
+                + f * d + d          # fc2 + bias
+            )
+            top = v * d + self.seq * d + 2 * d  # wte, wpe, ln_f
+        else:
+            per_layer = (
+                2 * d                # rms1, rms2
+                + 3 * d * d          # wq wk wv
+                + d * d              # wo
+                + 2 * d * f          # w1 (gate), w3 (up)
+                + f * d              # w2 (down)
+            )
+            top = v * d + d  # wte, rms_f
+        return l * per_layer + top
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionRecipe:
+    """The paper's per-module training recipe (one row of Table 2)."""
+
+    name: str
+    attn: QuantSpec = NONE_SPEC   # QKV + out-proj forward
+    ffn: QuantSpec = NONE_SPEC    # FFN linears forward
+    wgrad: QuantSpec = NONE_SPEC  # weight-grad GEMMs (all quantized linears)
+    agrad: QuantSpec = NONE_SPEC  # act-grad GEMMs (paper: identity)
+
+    def attn_linear(self) -> LinearRecipe:
+        return LinearRecipe(fwd=self.attn, wgrad=self.wgrad, agrad=self.agrad)
+
+    def ffn_linear(self) -> LinearRecipe:
+        return LinearRecipe(fwd=self.ffn, wgrad=self.wgrad, agrad=self.agrad)
+
+
+# --------------------------------------------------------------------------
+# initialization
+
+Params = Dict[str, jnp.ndarray]
+
+
+def init_params(cfg: ModelConfig, key: jnp.ndarray) -> Params:
+    """GPT-2-style init: N(0, 0.02), residual projections scaled by
+    1/sqrt(2L), zeros for biases, ones for norm gains."""
+    d, f, v, l, t = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.layers, cfg.seq
+    std = 0.02
+    resid_std = std / math.sqrt(2.0 * l)
+    ks = jax.random.split(key, 16)
+
+    def norm(k, *shape, s=std):
+        return jax.random.normal(k, shape, jnp.float32) * s
+
+    p: Params = {"wte": norm(ks[0], v, d)}
+    if cfg.family == "gpt2":
+        p["wpe"] = norm(ks[1], t, d)
+        p["ln_f_g"] = jnp.ones((d,), jnp.float32)
+        p["ln_f_b"] = jnp.zeros((d,), jnp.float32)
+        p.update(
+            ln1_g=jnp.ones((l, d)), ln1_b=jnp.zeros((l, d)),
+            ln2_g=jnp.ones((l, d)), ln2_b=jnp.zeros((l, d)),
+            w_qkv=norm(ks[2], l, d, 3 * d), b_qkv=jnp.zeros((l, 3 * d)),
+            w_o=norm(ks[3], l, d, d, s=resid_std), b_o=jnp.zeros((l, d)),
+            w_fc1=norm(ks[4], l, d, f), b_fc1=jnp.zeros((l, f)),
+            w_fc2=norm(ks[5], l, f, d, s=resid_std), b_fc2=jnp.zeros((l, d)),
+        )
+    else:
+        p["rms_f_g"] = jnp.ones((d,), jnp.float32)
+        p.update(
+            rms1_g=jnp.ones((l, d)), rms2_g=jnp.ones((l, d)),
+            w_q=norm(ks[2], l, d, d), w_k=norm(ks[3], l, d, d),
+            w_v=norm(ks[4], l, d, d), w_o=norm(ks[5], l, d, d, s=resid_std),
+            w_gate=norm(ks[6], l, d, f), w_up=norm(ks[7], l, d, f),
+            w_down=norm(ks[8], l, f, d, s=resid_std),
+        )
+    return {k: jnp.asarray(val, jnp.float32) for k, val in p.items()}
+
+
+# --------------------------------------------------------------------------
+# forward
+
+
+def _layernorm(x, g, b, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _rmsnorm(x, g, eps=1e-5):
+    ms = (x * x).mean(-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * g
+
+
+def _rope(x, base=10000.0):
+    """Rotary embeddings over (B, H, T, Dh)."""
+    b, h, t, dh = x.shape
+    half = dh // 2
+    freqs = 1.0 / (base ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    pos = jnp.arange(t, dtype=jnp.float32)
+    ang = pos[:, None] * freqs[None, :]  # (T, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+
+
+def _attention(q, k, v, cfg: ModelConfig):
+    """Exact causal attention in f32 (never quantized — §3.1).  Returns the
+    context and the attention probabilities (for the Fig. 1(c) capture)."""
+    b, t, d = q.shape
+    h, dh = cfg.n_head, cfg.head_dim
+    q = q.reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+    k = k.reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+    v = v.reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+    if cfg.family == "llama":
+        q, k = _rope(q), _rope(k)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(dh))
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+    ctx = ctx.transpose(0, 2, 1, 3).reshape(b, t, d)
+    return ctx, probs
+
+
+def _gpt2_block(x, lp, cfg: ModelConfig, recipe: PrecisionRecipe):
+    al, fl = recipe.attn_linear(), recipe.ffn_linear()
+    h = _layernorm(x, lp["ln1_g"], lp["ln1_b"])
+    qkv = apply_qlinear(h, lp["w_qkv"], al, lp["b_qkv"])
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    ctx, probs = _attention(q, k, v, cfg)
+    x = x + apply_qlinear(ctx, lp["w_o"], al, lp["b_o"])
+    h = _layernorm(x, lp["ln2_g"], lp["ln2_b"])
+    h = apply_qlinear(h, lp["w_fc1"], fl, lp["b_fc1"])
+    h = jax.nn.gelu(h)
+    x = x + apply_qlinear(h, lp["w_fc2"], fl, lp["b_fc2"])
+    return x, probs
+
+
+def _llama_block(x, lp, cfg: ModelConfig, recipe: PrecisionRecipe):
+    al, fl = recipe.attn_linear(), recipe.ffn_linear()
+    h = _rmsnorm(x, lp["rms1_g"])
+    q = apply_qlinear(h, lp["w_q"], al)
+    k = apply_qlinear(h, lp["w_k"], al)
+    v = apply_qlinear(h, lp["w_v"], al)
+    ctx, probs = _attention(q, k, v, cfg)
+    x = x + apply_qlinear(ctx, lp["w_o"], al)
+    h = _rmsnorm(x, lp["rms2_g"])
+    gate = apply_qlinear(h, lp["w_gate"], fl)
+    up = apply_qlinear(h, lp["w_up"], fl)
+    x = x + apply_qlinear(jax.nn.silu(gate) * up, lp["w_down"], fl)
+    return x, probs
+
+
+_LAYER_KEYS = {
+    "gpt2": ("ln1_g", "ln1_b", "ln2_g", "ln2_b", "w_qkv", "b_qkv",
+             "w_o", "b_o", "w_fc1", "b_fc1", "w_fc2", "b_fc2"),
+    "llama": ("rms1_g", "rms2_g", "w_q", "w_k", "w_v", "w_o",
+              "w_gate", "w_up", "w_down"),
+}
+
+
+def forward(
+    params: Params,
+    tokens: jnp.ndarray,  # (B, T) int32
+    cfg: ModelConfig,
+    recipe: PrecisionRecipe,
+    capture_attn: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (logits (B,T,V), attn_probs (L,B,H,T,T) or scalar dummy)."""
+    b, t = tokens.shape
+    x = params["wte"][tokens]
+    if cfg.family == "gpt2":
+        x = x + params["wpe"][:t]
+    block = _gpt2_block if cfg.family == "gpt2" else _llama_block
+    layer_params = {k: params[k] for k in _LAYER_KEYS[cfg.family]}
+
+    def body(x, lp):
+        x, probs = block(x, lp, cfg, recipe)
+        return x, (probs if capture_attn else jnp.zeros((), jnp.float32))
+
+    x, probs = jax.lax.scan(body, x, layer_params)
+    if cfg.family == "gpt2":
+        x = _layernorm(x, params["ln_f_g"], params["ln_f_b"])
+    else:
+        x = _rmsnorm(x, params["rms_f_g"])
+    logits = jnp.einsum("btd,vd->btv", x, params["wte"])  # tied head
+    return logits, probs
+
+
+def hidden_features(
+    params: Params,
+    tokens: jnp.ndarray,
+    cfg: ModelConfig,
+    recipe: PrecisionRecipe = None,
+    pool: bool = True,
+) -> jnp.ndarray:
+    """Final hidden states in the given precision (default full).  With
+    ``pool`` the result is the mean-pooled (B, d) representation used by the
+    downstream probe suite (GLUE substitute); without, the raw (B, T, d)
+    activations captured for Fig. 1(b)."""
+    b, t = tokens.shape
+    x = params["wte"][tokens]
+    if cfg.family == "gpt2":
+        x = x + params["wpe"][:t]
+    block = _gpt2_block if cfg.family == "gpt2" else _llama_block
+    recipe = recipe or PrecisionRecipe(name="fp16")
+    layer_params = {k: params[k] for k in _LAYER_KEYS[cfg.family]}
+
+    def body(x, lp):
+        x, _ = block(x, lp, cfg, recipe)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, layer_params)
+    if cfg.family == "gpt2":
+        x = _layernorm(x, params["ln_f_g"], params["ln_f_b"])
+    else:
+        x = _rmsnorm(x, params["rms_f_g"])
+    return x.mean(axis=1) if pool else x

@@ -1,0 +1,86 @@
+"""Model presets and precision recipes shared by aot.py and the manifest.
+
+Model presets come in two groups:
+
+* ``*-proxy`` — width/depth-scaled versions of the paper's Table 4 configs
+  sized for the CPU PJRT testbed (see DESIGN.md §Substitutions).  Depth,
+  family, activation, and norm follow the paper; widths are divided by ~6
+  and the vocabulary is the synthetic-corpus BPE vocab.
+* ``paper-*`` — the verbatim Table 4 configurations, exported on demand for
+  the ``--paper-scale`` path of examples/pretrain_e2e.rs.
+
+All hidden sizes are multiples of 128 so the per-block (B=128) granularity
+of §3.2 divides every contraction dimension.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+from .formats import QuantSpec, NONE_SPEC
+from .model import ModelConfig, PrecisionRecipe
+
+VOCAB = 512  # synthetic-corpus BPE vocabulary (rust data/tokenizer.rs)
+# The reproduction testbed is a SINGLE CPU core (see EXPERIMENTS.md §Testbed);
+# proxy geometry is sized so the full table/figure sweep completes in
+# minutes while preserving the paper's family/depth/width *ratios*.
+# Hidden sizes stay multiples of 128 so per-block (B=128) scaling divides
+# every contraction dimension.
+SEQ = 128
+PAPER_VOCAB = 8192
+
+MODELS: Dict[str, ModelConfig] = {
+    m.name: m
+    for m in [
+        # GPT-2 family proxies (Table 1 rows): three strictly increasing
+        # capacities mirroring 125M/335M/774M.
+        ModelConfig("gpt2-s-proxy", "gpt2", VOCAB, 2, 128, 4, 512, SEQ),
+        ModelConfig("gpt2-m-proxy", "gpt2", VOCAB, 4, 128, 4, 512, SEQ),
+        ModelConfig("gpt2-l-proxy", "gpt2", VOCAB, 4, 256, 8, 1024, SEQ),
+        # LLaMA family proxies (Tables 2-3). LLaMA-125M is 12×768 in the
+        # paper; LLaMA-1B is 48×1280 (8x deeper, wider).
+        ModelConfig("llama-125m-proxy", "llama", VOCAB, 2, 128, 4, 384, SEQ),
+        ModelConfig("llama-1b-proxy", "llama", VOCAB, 4, 256, 8, 640, SEQ),
+        # Verbatim Table 4 configs (PAPER_VOCAB synthetic BPE instead of
+        # GPT-2's 50257 — vocabulary is corpus-, not method-, dependent).
+        ModelConfig("paper-gpt2-125m", "gpt2", PAPER_VOCAB, 12, 768, 12, 3072, 1024),
+        ModelConfig("paper-llama-125m", "llama", PAPER_VOCAB, 12, 768, 12, 3072, 2048),
+    ]
+}
+
+_FP4B = QuantSpec("fp4", "block", 128)
+_FP8B = QuantSpec("fp8", "block", 128)
+_FP4T = QuantSpec("fp4", "token", 128)
+_FP8T = QuantSpec("fp8", "token", 128)
+
+RECIPES: Dict[str, PrecisionRecipe] = {
+    r.name: r
+    for r in [
+        # FP16 baseline: no quantization anywhere.
+        PrecisionRecipe("fp16"),
+        # The paper's headline recipe (§3, Tables 1 & 3): attention linears
+        # FP8, FFN linears FP4 per-block, weight-grad FP8, act-grad exact.
+        PrecisionRecipe("ours", attn=_FP8B, ffn=_FP4B, wgrad=_FP8B),
+        # Table 2 ablation rows (attn / ffn / backward):
+        PrecisionRecipe("fp4_fp4_fp4", attn=_FP4B, ffn=_FP4B, wgrad=_FP4B),
+        PrecisionRecipe("fp4_fp8_fp8", attn=_FP4B, ffn=_FP8B, wgrad=_FP8B),
+        PrecisionRecipe("fp8_fp4_fp4", attn=_FP8B, ffn=_FP4B, wgrad=_FP4B),
+        # (fp8_fp4_fp8 is "ours"; fp16_fp16_fp16 is "fp16".)
+        # Appendix-B small-model strategy: per-token/per-channel FP4
+        # everywhere (works for GPT-125M, degrades at larger scale).
+        PrecisionRecipe("fp4_token", attn=_FP4T, ffn=_FP4T, wgrad=_FP4T),
+        # Granularity ablation: headline recipe at per-token granularity.
+        PrecisionRecipe("ours_token", attn=_FP8T, ffn=_FP4T, wgrad=_FP8T),
+        # Stress recipe: quantizing the activation gradient too — the paper
+        # asserts this breaks convergence (§3.2); exported for the ablation
+        # bench to demonstrate it.
+        PrecisionRecipe("fp4_agrad", attn=_FP8B, ffn=_FP4B, wgrad=_FP8B,
+                        agrad=QuantSpec("fp4", "token", 128)),
+    ]
+}
+
+# Table 2 row order (recipe names; cost column computed by rust costmodel).
+TABLE2_ROWS = ["fp4_fp4_fp4", "fp4_fp8_fp8", "fp8_fp4_fp4", "ours", "fp16"]
+
+# Default training geometry for proxy runs (rust config can override batch).
+BATCH = 8

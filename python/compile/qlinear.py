@@ -1,0 +1,118 @@
+"""L2: quantized linear layer implementing the paper's mixed-precision
+recipe (§3.1-§3.2) as a ``jax.custom_vjp``.
+
+A linear layer ``y = x @ w (+ b)`` has three GEMMs per training step:
+
+  forward     y  = Qf(x)  @ Qf(w)        — module's forward format
+  act-grad    dx = Qa(g)  @ Qf(w)^T      — paper: NOT quantized (Qa = id);
+                                            quantizing it breaks convergence
+  weight-grad dw = Qb(x)^T @ Qb(g)       — backward format (FP8 in the
+                                            paper's headline recipe)
+
+Every operand is quantized along its *contraction* dimension so scales
+factor out of the dot product exactly as they would on real FP4/FP8 tensor
+core hardware (per-token for the LHS rows, per-channel for the RHS columns,
+or per-128-block along K).  The master weights stay f32; the gradient of
+the fake-quantized weight is passed straight through to the master copy
+(straight-through estimator, paper Appendix).
+
+The actual quantize-matmul computation dispatches either to the fused jnp
+expression or to the L1 Pallas kernel (``kernels.quant_matmul``) — both are
+verified equal by pytest; artifacts record which path they were built with.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .formats import QuantSpec, NONE_SPEC
+
+# Toggled by aot.py: route forward GEMMs through the Pallas kernel so the
+# exported HLO contains the L1 kernel's lowering.  The jnp path produces the
+# same numbers (pytest-verified) and lowers to a flat fused HLO that runs
+# faster on the CPU PJRT backend used in this testbed.
+USE_PALLAS = False
+
+
+@dataclasses.dataclass(frozen=True)
+class LinearRecipe:
+    """Per-GEMM quantization of one linear layer."""
+
+    fwd: QuantSpec = NONE_SPEC  # forward: both x and w
+    wgrad: QuantSpec = NONE_SPEC  # weight-grad: both x and g
+    agrad: QuantSpec = NONE_SPEC  # act-grad: g only (paper keeps id)
+
+    @property
+    def enabled(self) -> bool:
+        return self.fwd.enabled or self.wgrad.enabled or self.agrad.enabled
+
+    def tag(self) -> str:
+        return f"f{self.fwd.tag()}|w{self.wgrad.tag()}|a{self.agrad.tag()}"
+
+
+def _q2d(x2d: jnp.ndarray, spec: QuantSpec, axis: int) -> jnp.ndarray:
+    """Quantize a 2-D matmul operand along its contraction axis."""
+    return spec.apply(x2d, axis=axis)
+
+
+def _fwd_matmul(xq: jnp.ndarray, wq: jnp.ndarray) -> jnp.ndarray:
+    if USE_PALLAS:
+        from .kernels.quant_matmul import quant_matmul
+
+        # Operands are already fake-quantized; the kernel's own quantizers
+        # are disabled here (idempotent either way for block granularity —
+        # see tests/test_qlinear.py::test_pallas_path_matches).
+        return quant_matmul(xq, wq, None, None)
+    return jnp.dot(xq, wq, preferred_element_type=jnp.float32)
+
+
+def make_qlinear(recipe: LinearRecipe):
+    """Build ``qlinear(x, w) -> y`` for 2-D x (tokens, K) and w (K, N)."""
+
+    @jax.custom_vjp
+    def qlinear(x, w):
+        xq = _q2d(x, recipe.fwd, axis=1)
+        wq = _q2d(w, recipe.fwd, axis=0)
+        return _fwd_matmul(xq, wq)
+
+    def fwd(x, w):
+        return qlinear(x, w), (x, w)
+
+    def bwd(res, g):
+        x, w = res
+        # act-grad: dx = Qa(g) @ Qf(w)^T — contraction over N.
+        gq = _q2d(g, recipe.agrad, axis=1)
+        wq = _q2d(w, recipe.fwd, axis=0)
+        dx = jnp.dot(gq, wq.T, preferred_element_type=jnp.float32)
+        # weight-grad: dw = Qb(x)^T @ Qb(g) — contraction over tokens.
+        xq = _q2d(x, recipe.wgrad, axis=0)
+        gqb = _q2d(g, recipe.wgrad, axis=0)
+        dw = jnp.dot(xq.T, gqb, preferred_element_type=jnp.float32)
+        return dx, dw
+
+    qlinear.defvjp(fwd, bwd)
+    return qlinear
+
+
+def apply_qlinear(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    recipe: LinearRecipe,
+    b: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Apply a (possibly quantized) linear to x of shape (..., K)."""
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    x2d = x.reshape(-1, k)
+    if recipe.enabled:
+        y2d = make_qlinear(recipe)(x2d, w)
+    else:
+        y2d = jnp.dot(x2d, w, preferred_element_type=jnp.float32)
+    y = y2d.reshape(*lead, w.shape[-1])
+    if b is not None:
+        y = y + b
+    return y

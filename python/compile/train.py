@@ -1,0 +1,224 @@
+"""L2: loss, AdamW optimizer, LR schedule, and the exported step functions.
+
+Training hyperparameters follow the paper's Appendix B: AdamW with
+β1=0.9, β2=0.95, ε=1e-8, weight decay 0.1, warmup over 0.15 % of total
+steps then cosine decay to 10 % of the peak LR.  The master weights and
+optimizer moments are f32 (the paper keeps an FP32 master copy).
+
+Exported step functions (all pure, all state passed explicitly so the rust
+coordinator owns the loop):
+
+* ``init_state``     seeds            -> params ++ opt
+* ``train_step``     state, batch     -> state', loss          (fused)
+* ``grad_step``      params, batch    -> grads, loss           (for DP)
+* ``apply_step``     state, grads     -> state'                (for DP)
+* ``eval_step``      params, batch    -> (sum_nll, n_tokens)
+* ``capture_step``   params, batch    -> diagnostics (Fig. 1b/1c)
+* ``features_step``  params, tokens   -> pooled hidden states (probes)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .model import ModelConfig, Params, PrecisionRecipe, forward, hidden_features
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainHParams:
+    peak_lr: float = 6e-4  # GPT family (paper: 6e-4 GPT, 1e-4 LLaMA)
+    weight_decay: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    warmup_frac: float = 0.0015
+    final_lr_frac: float = 0.10
+    total_steps: int = 1000
+    grad_clip: float = 1.0
+
+
+def lr_at(step: jnp.ndarray, hp: TrainHParams) -> jnp.ndarray:
+    """Warmup (0.15 % of steps) + cosine decay to 10 % of peak (App. B)."""
+    warm = jnp.maximum(1.0, hp.warmup_frac * hp.total_steps)
+    t = step.astype(jnp.float32)
+    warm_lr = hp.peak_lr * jnp.minimum(1.0, (t + 1.0) / warm)
+    prog = jnp.clip((t - warm) / jnp.maximum(1.0, hp.total_steps - warm), 0.0, 1.0)
+    floor = hp.final_lr_frac * hp.peak_lr
+    cos_lr = floor + 0.5 * (hp.peak_lr - floor) * (1.0 + jnp.cos(jnp.pi * prog))
+    return jnp.where(t < warm, warm_lr, cos_lr)
+
+
+# --- loss ------------------------------------------------------------------
+
+
+def next_token_loss(
+    params: Params, batch: jnp.ndarray, cfg: ModelConfig, recipe: PrecisionRecipe
+) -> jnp.ndarray:
+    """Mean next-token cross-entropy.  `batch` is (B, T+1) int32."""
+    tokens, targets = batch[:, :-1], batch[:, 1:]
+    logits, _ = forward(params, tokens, cfg, recipe)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return nll.mean()
+
+
+def sum_nll(
+    params: Params, batch: jnp.ndarray, cfg: ModelConfig, recipe: PrecisionRecipe
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    tokens, targets = batch[:, :-1], batch[:, 1:]
+    logits, _ = forward(params, tokens, cfg, recipe)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return nll.sum(), jnp.float32(nll.size)
+
+
+# --- optimizer ---------------------------------------------------------------
+
+# Parameters exempt from weight decay (norm gains/biases, biases).
+_NO_DECAY = ("ln", "rms", "b_")
+
+
+def _decay_mask(name: str) -> float:
+    return 0.0 if any(name.startswith(p) for p in _NO_DECAY) else 1.0
+
+
+def adamw_update(
+    params: Params,
+    grads: Params,
+    m: Params,
+    v: Params,
+    step: jnp.ndarray,
+    hp: TrainHParams,
+):
+    """One AdamW step with global-norm gradient clipping."""
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in grads.values())
+    )
+    clip = jnp.minimum(1.0, hp.grad_clip / jnp.maximum(gnorm, 1e-12))
+    lr = lr_at(step, hp)
+    t = step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - hp.beta1**t
+    bc2 = 1.0 - hp.beta2**t
+    new_p, new_m, new_v = {}, {}, {}
+    for k in params:
+        g = grads[k] * clip
+        m2 = hp.beta1 * m[k] + (1.0 - hp.beta1) * g
+        v2 = hp.beta2 * v[k] + (1.0 - hp.beta2) * g * g
+        mh = m2 / bc1
+        vh = v2 / bc2
+        upd = mh / (jnp.sqrt(vh) + hp.eps) + hp.weight_decay * _decay_mask(k) * params[k]
+        new_p[k] = params[k] - lr * upd
+        new_m[k] = m2
+        new_v[k] = v2
+    return new_p, new_m, new_v, gnorm
+
+
+# --- exported step functions -------------------------------------------------
+
+
+def flat_param_names(params: Params) -> List[str]:
+    return sorted(params.keys())
+
+
+def make_steps(cfg: ModelConfig, recipe: PrecisionRecipe, hp: TrainHParams):
+    """Build the step functions for one (model, recipe) pair.  All take and
+    return *flat, name-sorted lists* of arrays so the AOT parameter order is
+    deterministic and recorded in the manifest."""
+
+    from .model import init_params
+
+    names: List[str] = flat_param_names(init_params(cfg, jax.random.PRNGKey(0)))
+
+    def pack(d: Params) -> List[jnp.ndarray]:
+        return [d[k] for k in names]
+
+    def unpack(lst) -> Params:
+        return dict(zip(names, lst))
+
+    def init_fn(seed):
+        """[seed scalar] -> params ++ m ++ v ++ [step=0]"""
+        p = init_params(cfg, jax.random.PRNGKey(seed))
+        m = [jnp.zeros_like(x) for x in pack(p)]
+        v = [jnp.zeros_like(x) for x in pack(p)]
+        return pack(p) + m + v + [jnp.zeros((), jnp.int32)]
+
+    n = len(names)
+
+    def split_state(state):
+        params = unpack(state[:n])
+        m = unpack(state[n : 2 * n])
+        v = unpack(state[2 * n : 3 * n])
+        step = state[3 * n]
+        return params, m, v, step
+
+    def train_step(*args):
+        """state (3n params + step) ++ [batch] -> state' ++ [loss, gnorm]"""
+        state, batch = list(args[:-1]), args[-1]
+        params, m, v, step = split_state(state)
+        loss, grads = jax.value_and_grad(next_token_loss)(params, batch, cfg, recipe)
+        new_p, new_m, new_v, gnorm = adamw_update(params, grads, m, v, step, hp)
+        out = pack(new_p) + pack(new_m) + pack(new_v) + [step + 1]
+        return tuple(out + [loss, gnorm])
+
+    def grad_step(*args):
+        """params ++ [batch] -> grads ++ [loss]  (for data-parallel)"""
+        params, batch = unpack(list(args[:-1])), args[-1]
+        loss, grads = jax.value_and_grad(next_token_loss)(params, batch, cfg, recipe)
+        return tuple(pack(grads) + [loss])
+
+    def apply_step(*args):
+        """state ++ grads -> state'  (for data-parallel)"""
+        state, gflat = list(args[: 3 * n + 1]), list(args[3 * n + 1 :])
+        params, m, v, step = split_state(state)
+        grads = unpack(gflat)
+        new_p, new_m, new_v, gnorm = adamw_update(params, grads, m, v, step, hp)
+        return tuple(pack(new_p) + pack(new_m) + pack(new_v) + [step + 1, gnorm])
+
+    fp16 = PrecisionRecipe(name="fp16")
+
+    def eval_step(*args):
+        """params ++ [batch] -> (sum_nll, n_tokens).  Full-precision
+        forward: evaluation measures the learned weights, not the training
+        noise (§3.3 discussion)."""
+        params, batch = unpack(list(args[:-1])), args[-1]
+        s, c = sum_nll(params, batch, cfg, fp16)
+        return s, c
+
+    def capture_step(*args):
+        """params ++ [batch] -> diagnostics for Fig. 1(b)/(c): the
+        last-layer attention map under the recipe-quantized forward, the
+        FFN down-projection weight gradient, and the recipe-forward hidden
+        activations.  The rust analysis layer computes histograms and
+        FP4/FP8 underflow rates from these (Fig. 1(b)) and renders the
+        heatmap (Fig. 1(c))."""
+        params, batch = unpack(list(args[:-1])), args[-1]
+        tokens = batch[:, :-1]
+        _, probs = forward(params, tokens, cfg, recipe, capture_attn=True)
+        _, grads = jax.value_and_grad(next_token_loss)(params, batch, cfg, recipe)
+        wg_key = "w_fc2" if cfg.family == "gpt2" else "w_down"
+        acts = hidden_features(params, tokens, cfg, recipe, pool=False)
+        # last-layer, FIRST-sample, head-0 attention map (T, T): batch
+        # averaging would wash out per-sample token-importance structure,
+        # which is exactly what Fig. 1(c) visualizes.
+        attn_map = probs[-1, 0, 0]
+        return (attn_map, grads[wg_key], acts)
+
+    def features_step(*args):
+        """params ++ [tokens (B,T)] -> (B, d) pooled hidden states."""
+        params, tokens = unpack(list(args[:-1])), args[-1]
+        return hidden_features(params, tokens, cfg)
+
+    return {
+        "names": names,
+        "init": init_fn,
+        "train": train_step,
+        "grad": grad_step,
+        "apply": apply_step,
+        "eval": eval_step,
+        "capture": capture_step,
+        "features": features_step,
+    }

@@ -1,0 +1,87 @@
+"""AOT export pipeline: lowering, HLO-text validity, manifest consistency,
+and the cross-layer reference vectors."""
+
+import json
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.aot import ExportUnit, build_export_list, export_unit, to_hlo_text, write_formats_reference
+from compile.presets import MODELS, RECIPES, TABLE2_ROWS
+
+
+def test_export_lists_cover_experiments():
+    quick = build_export_list("quick")
+    full = build_export_list("full")
+    paper = build_export_list("paper")
+    assert len(quick) < len(full) < len(paper)
+    # quick: full step set on the smallest model, both headline recipes
+    steps = {(u.recipe, u.step) for u in quick if u.model == "gpt2-s-proxy"}
+    for s in ["init", "train", "grad", "apply", "eval", "capture", "features"]:
+        assert ("ours", s) in steps, s
+    # full: every Table-2 row has a train artifact
+    t2 = {u.recipe for u in full if u.model == "llama-125m-proxy" and u.step == "train"}
+    assert set(TABLE2_ROWS) - {"fp16"} <= t2 | {"ours"}
+    # pallas variant present
+    assert any(u.use_pallas for u in quick)
+
+
+def test_filenames_are_unique():
+    full = build_export_list("paper")
+    names = [u.filename for u in full]
+    assert len(names) == len(set(names))
+
+
+def test_hlo_text_lowering_roundtrippable():
+    """The exported text must be XLA-parsable HLO (starts with HloModule,
+    has an ENTRY computation) — the contract the rust loader relies on."""
+    fn = lambda x: (x @ x + 1.0,)
+    spec = jax.ShapeDtypeStruct((4, 4), jnp.float32)
+    text = to_hlo_text(jax.jit(fn).lower(spec))
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    assert "f32[4,4]" in text
+
+
+def test_export_unit_writes_file_and_entry():
+    with tempfile.TemporaryDirectory() as d:
+        unit = ExportUnit("gpt2-s-proxy", "ours", "eval")
+        entry = export_unit(unit, d, total_steps=10, batch=2)
+        path = os.path.join(d, entry["file"])
+        assert os.path.exists(path)
+        with open(path) as f:
+            assert f.read(9) == "HloModule"
+        # eval outputs = (sum_nll, count) scalars; last input is the batch
+        assert entry["outputs"][0]["shape"] == []
+        assert entry["outputs"][1]["shape"] == []
+        assert entry["inputs"][-1]["shape"] == [2, MODELS["gpt2-s-proxy"].seq + 1]
+        assert entry["sha256"]
+
+
+def test_formats_reference_content():
+    with tempfile.TemporaryDirectory() as d:
+        write_formats_reference(d)
+        with open(os.path.join(d, "formats_reference.json")) as f:
+            j = json.load(f)
+        xs = np.array(j["inputs"], np.float32)
+        assert len(xs) >= 1024
+        for name in ["fp4_e2m1", "fp8_e4m3", "fp8_e5m2"]:
+            q = np.array(j[f"grid_{name}"], np.float32)
+            assert q.shape == xs.shape
+            # quantized values are idempotent under re-quantization
+            from compile.formats import FORMATS, quantize_to_grid
+            q2 = np.asarray(quantize_to_grid(jnp.asarray(q), FORMATS[name]))
+            np.testing.assert_array_equal(q, q2)
+        assert len(j["block_fp4_rows4_cols256"]) == 1024
+
+
+def test_recipe_table_is_consistent():
+    assert set(TABLE2_ROWS) <= set(RECIPES) | {"fp16"}
+    # the headline recipe matches §3: attn fp8, ffn fp4, wgrad fp8, agrad none
+    r = RECIPES["ours"]
+    assert (r.attn.fmt, r.ffn.fmt, r.wgrad.fmt, r.agrad.fmt) == ("fp8", "fp4", "fp8", "none")
+    assert r.ffn.granularity == "block" and r.ffn.block == 128

@@ -1,0 +1,146 @@
+"""Format-grid correctness: the Appendix-A formula implementation vs an
+independent LUT nearest-neighbour oracle, plus scaling-granularity
+invariants."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.formats import (
+    FP4_E2M1, FP8_E4M3, FP8_E5M2, FORMATS,
+    fake_quant, quantize_to_grid,
+)
+from compile.kernels.ref import enumerate_grid, grid_round_lut
+
+FMTS = [FP4_E2M1, FP8_E4M3, FP8_E5M2]
+
+
+def test_fp4_grid_is_the_e2m1_grid():
+    np.testing.assert_allclose(
+        enumerate_grid(FP4_E2M1), [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0]
+    )
+
+
+def test_fp8_e4m3_extremes():
+    g = enumerate_grid(FP8_E4M3)
+    assert g.max() == 448.0
+    assert g[1] == 2.0 ** -9  # min subnormal = 2^(1-7-3)
+
+
+def test_fp8_e5m2_extremes():
+    g = enumerate_grid(FP8_E5M2)
+    assert g.max() == 57344.0
+    assert g[1] == 2.0 ** -16
+
+
+@pytest.mark.parametrize("fmt", FMTS, ids=lambda f: f.name)
+def test_formula_matches_lut_dense(fmt):
+    """Dense sweep across the format's dynamic range, both signs."""
+    mags = np.concatenate([
+        np.linspace(0, fmt.max_value * 1.5, 20011),
+        np.geomspace(fmt.min_subnormal / 8, fmt.max_value, 4001),
+    ])
+    x = np.concatenate([mags, -mags]).astype(np.float32)
+    got = np.asarray(quantize_to_grid(jnp.asarray(x), fmt))
+    want = grid_round_lut(x, fmt)
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("fmt", FMTS, ids=lambda f: f.name)
+def test_grid_projection_idempotent(fmt):
+    g = enumerate_grid(fmt)
+    x = np.concatenate([-g[::-1], g]).astype(np.float32)
+    got = np.asarray(quantize_to_grid(jnp.asarray(x), fmt))
+    np.testing.assert_array_equal(got, x)
+
+
+@pytest.mark.parametrize("fmt", FMTS, ids=lambda f: f.name)
+def test_halfway_points_round_to_even(fmt):
+    g = enumerate_grid(fmt)
+    mid = (g[:-1] + g[1:]) / 2.0
+    got = np.asarray(quantize_to_grid(jnp.asarray(mid.astype(np.float32)), fmt))
+    want = grid_round_lut(mid.astype(np.float32), fmt)
+    np.testing.assert_array_equal(got, want)
+
+
+@given(st.lists(st.floats(-1e4, 1e4, width=32), min_size=1, max_size=64))
+@settings(max_examples=200, deadline=None)
+def test_formula_matches_lut_hypothesis(xs):
+    x = np.asarray(xs, np.float32)
+    for fmt in FMTS:
+        got = np.asarray(quantize_to_grid(jnp.asarray(x), fmt))
+        want = grid_round_lut(x, fmt)
+        np.testing.assert_array_equal(got, want, err_msg=fmt.name)
+
+
+# --- scaling granularities --------------------------------------------------
+
+
+def _rand(shape, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+@pytest.mark.parametrize("gran,axis", [
+    ("tensor", None), ("token", -1), ("channel", 0), ("block", -1),
+])
+def test_fake_quant_zero_preserved(gran, axis):
+    x = _rand((4, 256), 1)
+    x[0, :5] = 0.0
+    q = np.asarray(fake_quant(jnp.asarray(x), FP4_E2M1, gran, axis=axis))
+    assert (q[0, :5] == 0.0).all()
+
+
+def test_fake_quant_absmax_exact():
+    """The absmax of every scale group is exactly representable (maps to
+    the format max), so it survives quantization unchanged."""
+    x = _rand((4, 256), 2, scale=3.0)
+    q = np.asarray(fake_quant(jnp.asarray(x), FP4_E2M1, "block", axis=-1))
+    xb = x.reshape(4, 2, 128)
+    qb = q.reshape(4, 2, 128)
+    am = np.abs(xb).max(-1)
+    got = np.abs(qb).max(-1)
+    np.testing.assert_allclose(got, am, rtol=1e-6)
+
+
+def test_fake_quant_block_matches_manual():
+    x = _rand((2, 256), 3)
+    q = np.asarray(fake_quant(jnp.asarray(x), FP4_E2M1, "block", axis=-1))
+    for r in range(2):
+        for b in range(2):
+            blk = x[r, b * 128:(b + 1) * 128]
+            s = np.abs(blk).max() / 6.0
+            want = grid_round_lut((blk / s).astype(np.float32), FP4_E2M1) * s
+            np.testing.assert_allclose(q[r, b * 128:(b + 1) * 128], want, rtol=1e-6)
+
+
+def test_fake_quant_scale_invariance_pow2():
+    """Scaling inputs by powers of two rescales outputs exactly (absmax
+    scaling is exponent-shift equivariant)."""
+    x = _rand((4, 128), 4)
+    q1 = np.asarray(fake_quant(jnp.asarray(x), FP4_E2M1, "token", axis=-1))
+    q2 = np.asarray(fake_quant(jnp.asarray(x * 4.0), FP4_E2M1, "token", axis=-1))
+    np.testing.assert_allclose(q2, q1 * 4.0, rtol=1e-6)
+
+
+def test_fake_quant_error_bound():
+    """Per-block FP4: relative-to-scale error bounded by half the largest
+    grid gap (1.0 after scaling to max 6)."""
+    x = _rand((8, 256), 5, scale=10.0)
+    q = np.asarray(fake_quant(jnp.asarray(x), FP4_E2M1, "block", axis=-1))
+    xb, qb = x.reshape(-1, 128), q.reshape(-1, 128)
+    s = np.abs(xb).max(-1, keepdims=True) / 6.0
+    assert (np.abs(qb - xb) <= 0.5 * 2.0 * s + 1e-7).all()
+
+
+def test_fp8_strictly_finer_than_fp4():
+    x = _rand((16, 256), 6, scale=2.0)
+    e4 = np.abs(np.asarray(fake_quant(jnp.asarray(x), FP4_E2M1, "block", axis=-1)) - x).mean()
+    e8 = np.abs(np.asarray(fake_quant(jnp.asarray(x), FP8_E4M3, "block", axis=-1)) - x).mean()
+    assert e8 < e4 / 4
+
+
+def test_format_aliases():
+    assert FORMATS["fp4"] is FP4_E2M1
+    assert FORMATS["fp8"] is FP8_E4M3

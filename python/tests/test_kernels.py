@@ -1,0 +1,137 @@
+"""L1 Pallas kernels vs the pure-jnp oracle (ref.py): the core correctness
+signal for the kernel layer.  Hypothesis sweeps shapes and formats."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.formats import FP4_E2M1, FP8_E4M3, FORMATS
+from compile.kernels.fp_quant import block_fake_quant
+from compile.kernels.quant_matmul import quant_matmul
+from compile.kernels.ref import ref_block_fake_quant, ref_quant_matmul
+
+
+def _rand(shape, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+@pytest.mark.parametrize("fmt", ["fp4", "fp8", "fp8_e5m2"])
+@pytest.mark.parametrize("shape", [(8, 128), (256, 256), (512, 384), (1, 128)])
+def test_block_quant_matches_ref(fmt, shape):
+    x = jnp.asarray(_rand(shape, seed=hash((fmt, shape)) % 2**31, scale=3.0))
+    got = block_fake_quant(x, fmt)
+    want = ref_block_fake_quant(x, FORMATS[fmt])
+    # 1-ulp tolerance: XLA fuses the scale division differently in the
+    # pallas-interpret and jnp lowerings.  Bit-exactness with power-of-two
+    # scales is asserted separately below.
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-6, atol=1e-7)
+
+
+@given(
+    rows=st.integers(1, 64),
+    kblocks=st.integers(1, 4),
+    fmt=st.sampled_from(["fp4", "fp8"]),
+    scale=st.floats(1e-3, 1e3),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=40, deadline=None)
+def test_block_quant_hypothesis(rows, kblocks, fmt, scale, seed):
+    x = jnp.asarray(_rand((rows, kblocks * 128), seed=seed, scale=scale))
+    got = np.asarray(block_fake_quant(x, fmt))
+    want = np.asarray(ref_block_fake_quant(x, FORMATS[fmt]))
+    np.testing.assert_allclose(got, want, rtol=3e-6, atol=1e-7)
+
+
+def test_block_quant_bit_exact_pow2_scales():
+    """With power-of-two block absmax the scale arithmetic is exact, so the
+    kernel and the oracle must agree bit-for-bit."""
+    rng = np.random.default_rng(42)
+    x = (rng.standard_normal((32, 256)) * 2.0).astype(np.float32)
+    # Force each 128-block's absmax to 6 * 2^k (scale = 2^k exactly).
+    xb = x.reshape(-1, 128)
+    xb[:, 0] = 6.0 * np.exp2(rng.integers(-3, 4, size=xb.shape[0])).astype(np.float32)
+    xb = np.clip(xb, -np.abs(xb[:, :1]), np.abs(xb[:, :1]))
+    x = jnp.asarray(xb.reshape(32, 256))
+    got = np.asarray(block_fake_quant(x, "fp4"))
+    want = np.asarray(ref_block_fake_quant(x, FORMATS["fp4"]))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_block_quant_idempotent():
+    """Idempotent up to 1 ulp: with a non-power-of-two scale s, the
+    round-trip (g*s)/s of an on-grid value can move one f32 ulp, which is
+    inherent to f32 scale storage (exact for power-of-two scales, covered
+    by test_block_quant_bit_exact_pow2_scales)."""
+    x = jnp.asarray(_rand((64, 256), 7))
+    q1 = block_fake_quant(x, "fp4")
+    q2 = block_fake_quant(q1, "fp4")
+    np.testing.assert_allclose(np.asarray(q1), np.asarray(q2), rtol=3e-7, atol=0)
+
+
+@pytest.mark.parametrize("m,k,n", [
+    (128, 128, 128), (64, 256, 96), (200, 384, 130), (8, 128, 8),
+])
+@pytest.mark.parametrize("xf,wf", [("fp4", "fp4"), ("fp8", "fp8"),
+                                   ("fp4", "fp8"), (None, None)])
+def test_quant_matmul_matches_ref(m, k, n, xf, wf):
+    x = jnp.asarray(_rand((m, k), seed=m * 31 + k, scale=2.0))
+    w = jnp.asarray(_rand((k, n), seed=n * 17 + k, scale=0.5))
+    got = quant_matmul(x, w, xf, wf)
+    fx = None if xf is None else FORMATS[xf]
+    fw = None if wf is None else FORMATS[wf]
+    want = ref_quant_matmul(x, w, fx, fw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-4)
+
+
+@given(
+    m=st.integers(1, 150),
+    kb=st.integers(1, 3),
+    n=st.integers(1, 150),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=25, deadline=None)
+def test_quant_matmul_hypothesis(m, kb, n, seed):
+    k = kb * 128
+    x = jnp.asarray(_rand((m, k), seed=seed, scale=1.5))
+    w = jnp.asarray(_rand((k, n), seed=seed + 1, scale=0.7))
+    got = quant_matmul(x, w, "fp4", "fp4")
+    want = ref_quant_matmul(x, w, FP4_E2M1, FP4_E2M1)
+    # Accumulation order differs between the K-loop kernel and the fused
+    # jnp matmul; bound the float32 reduction noise, not exact equality.
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-4)
+
+
+def test_quant_matmul_rejects_bad_k():
+    x = jnp.zeros((4, 100), jnp.float32)
+    w = jnp.zeros((100, 4), jnp.float32)
+    with pytest.raises(ValueError):
+        quant_matmul(x, w, "fp4", "fp4")
+
+
+def test_quant_error_shrinks_with_fp8():
+    x = jnp.asarray(_rand((128, 256), 9, scale=2.0))
+    w = jnp.asarray(_rand((256, 128), 10, scale=0.5))
+    exact = np.asarray(x) @ np.asarray(w)
+    e4 = np.abs(np.asarray(quant_matmul(x, w, "fp4", "fp4")) - exact).mean()
+    e8 = np.abs(np.asarray(quant_matmul(x, w, "fp8", "fp8")) - exact).mean()
+    assert e8 < e4 / 4
+
+
+def test_vmem_footprint_estimates():
+    import importlib
+
+    # kernels/__init__ re-exports functions under the submodule names, so
+    # attribute-style import would shadow the modules
+    fp_quant = importlib.import_module("compile.kernels.fp_quant")
+    qm = importlib.import_module("compile.kernels.quant_matmul")
+    # Quant kernel: in+out tiles fit well inside 16 MiB VMEM.
+    assert fp_quant.vmem_footprint_bytes() <= 1 << 20
+    # Matmul kernel: double-buffered tiles + accumulator under 1 MiB.
+    assert qm.vmem_footprint_bytes() <= 1 << 20
+    assert qm.mxu_utilization_estimate() == 1.0

@@ -1,0 +1,201 @@
+"""L2 model semantics: shapes, causality, recipe effects, loss/optimizer
+behaviour, and per-module precision mapping."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.formats import QuantSpec
+from compile.model import (
+    ModelConfig, PrecisionRecipe, forward, hidden_features, init_params,
+)
+from compile.presets import MODELS, RECIPES
+from compile.train import TrainHParams, adamw_update, lr_at, make_steps, next_token_loss
+
+CFG_G = ModelConfig("t-gpt2", "gpt2", 64, 2, 128, 4, 256, 32)
+CFG_L = ModelConfig("t-llama", "llama", 64, 2, 128, 4, 256, 32)
+FP16 = RECIPES["fp16"]
+OURS = RECIPES["ours"]
+
+
+@pytest.fixture(scope="module")
+def params_g():
+    return init_params(CFG_G, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def params_l():
+    return init_params(CFG_L, jax.random.PRNGKey(0))
+
+
+def _tokens(cfg, b=2, seed=0):
+    return jax.random.randint(jax.random.PRNGKey(seed), (b, cfg.seq), 0, cfg.vocab)
+
+
+@pytest.mark.parametrize("cfg_name", ["t-gpt2", "t-llama"])
+def test_forward_shapes(cfg_name, params_g, params_l):
+    cfg = CFG_G if cfg_name == "t-gpt2" else CFG_L
+    p = params_g if cfg_name == "t-gpt2" else params_l
+    logits, _ = forward(p, _tokens(cfg), cfg, FP16)
+    assert logits.shape == (2, cfg.seq, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_param_count_matches_init(params_g, params_l):
+    for cfg, p in [(CFG_G, params_g), (CFG_L, params_l)]:
+        n = sum(int(np.prod(v.shape)) for v in p.values())
+        assert n == cfg.param_count()
+
+
+@pytest.mark.parametrize("cfg_name", ["t-gpt2", "t-llama"])
+def test_causality(cfg_name, params_g, params_l):
+    """Changing a future token never changes past logits."""
+    cfg = CFG_G if cfg_name == "t-gpt2" else CFG_L
+    p = params_g if cfg_name == "t-gpt2" else params_l
+    t1 = _tokens(cfg, 1, 1)
+    t2 = t1.at[0, -1].set((t1[0, -1] + 1) % cfg.vocab)
+    l1, _ = forward(p, t1, cfg, FP16)
+    l2, _ = forward(p, t2, cfg, FP16)
+    np.testing.assert_allclose(np.asarray(l1[0, :-1]), np.asarray(l2[0, :-1]),
+                               atol=1e-5)
+    assert np.abs(np.asarray(l1[0, -1] - l2[0, -1])).max() > 1e-6
+
+
+def test_attention_probs_causal_and_normalized(params_g):
+    _, probs = forward(params_g, _tokens(CFG_G), CFG_G, FP16, capture_attn=True)
+    assert probs.shape == (CFG_G.layers, 2, CFG_G.n_head, CFG_G.seq, CFG_G.seq)
+    p0 = np.asarray(probs[0, 0, 0])
+    np.testing.assert_allclose(p0.sum(-1), 1.0, rtol=1e-5)
+    assert np.triu(p0, 1).max() < 1e-8  # causal mask
+
+
+def test_recipe_changes_logits_but_not_wildly(params_g):
+    t = _tokens(CFG_G)
+    l16, _ = forward(params_g, t, CFG_G, FP16)
+    lq, _ = forward(params_g, t, CFG_G, OURS)
+    d = np.abs(np.asarray(l16 - lq))
+    assert d.max() > 0          # quantization does something
+    assert d.max() < 1.0        # but is a perturbation, not a blow-up
+
+
+def test_fp4_noisier_than_fp8(params_g):
+    t = _tokens(CFG_G)
+    l16, _ = forward(params_g, t, CFG_G, FP16)
+    l8, _ = forward(params_g, t, CFG_G,
+                    PrecisionRecipe("a", attn=QuantSpec("fp8", "block"),
+                                    ffn=QuantSpec("fp8", "block")))
+    l4, _ = forward(params_g, t, CFG_G,
+                    PrecisionRecipe("b", attn=QuantSpec("fp4", "block"),
+                                    ffn=QuantSpec("fp4", "block")))
+    e8 = np.abs(np.asarray(l8 - l16)).mean()
+    e4 = np.abs(np.asarray(l4 - l16)).mean()
+    assert e8 < e4 / 3
+
+
+def test_loss_at_init_near_log_vocab(params_g):
+    batch = jax.random.randint(jax.random.PRNGKey(3), (2, CFG_G.seq + 1), 0, CFG_G.vocab)
+    loss = next_token_loss(params_g, batch, CFG_G, FP16)
+    assert abs(float(loss) - np.log(CFG_G.vocab)) < 0.5
+
+
+def test_gradients_nonzero_for_every_param(params_g):
+    batch = jax.random.randint(jax.random.PRNGKey(4), (2, CFG_G.seq + 1), 0, CFG_G.vocab)
+    grads = jax.grad(next_token_loss)(params_g, batch, CFG_G, OURS)
+    for k, g in grads.items():
+        assert np.isfinite(np.asarray(g)).all(), k
+        assert np.abs(np.asarray(g)).max() > 0, k
+
+
+def test_hidden_features_shapes(params_g):
+    t = _tokens(CFG_G)
+    f = hidden_features(params_g, t, CFG_G)
+    assert f.shape == (2, CFG_G.d_model)
+    h = hidden_features(params_g, t, CFG_G, OURS, pool=False)
+    assert h.shape == (2, CFG_G.seq, CFG_G.d_model)
+
+
+# --- optimizer / schedule ----------------------------------------------------
+
+
+def test_lr_schedule_shape():
+    hp = TrainHParams(peak_lr=1e-3, total_steps=1000)
+    lrs = np.array([float(lr_at(jnp.int32(s), hp)) for s in
+                    [0, 1, 2, 100, 500, 999, 1500]])
+    assert lrs[0] < lrs[1] <= hp.peak_lr * (1 + 1e-5)  # warmup ascending
+    assert lrs[3] > lrs[4] > lrs[5]                 # cosine descending
+    assert abs(lrs[5] - 0.1 * hp.peak_lr) < 2e-5    # floor at 10% peak
+    assert abs(lrs[6] - 0.1 * hp.peak_lr) < 1e-7    # clamped past end
+
+
+def test_adamw_moves_params_and_decays():
+    hp = TrainHParams(peak_lr=1e-2, total_steps=100)
+    p = {"w_x": jnp.ones((4, 4)), "ln1_g": jnp.ones((4,))}
+    g = {"w_x": jnp.zeros((4, 4)), "ln1_g": jnp.zeros((4,))}
+    m = {k: jnp.zeros_like(v) for k, v in p.items()}
+    v = {k: jnp.zeros_like(v) for k, v in p.items()}
+    p2, m2, v2, gn = adamw_update(p, g, m, v, jnp.int32(50), hp)
+    # zero grad, nonzero weight decay: weights shrink, norm gains exempt.
+    assert float(p2["w_x"][0, 0]) < 1.0
+    assert float(p2["ln1_g"][0]) == 1.0
+    assert float(gn) == 0.0
+
+
+def test_train_step_descends():
+    cfg = CFG_G
+    steps = make_steps(cfg, OURS, TrainHParams(peak_lr=3e-3, total_steps=50))
+    p = init_params(cfg, jax.random.PRNGKey(0))
+    names = steps["names"]
+    flat = [p[k] for k in names]
+    state = flat + [jnp.zeros_like(x) for x in flat] * 2 + [jnp.zeros((), jnp.int32)]
+    batch = jax.random.randint(jax.random.PRNGKey(5), (4, cfg.seq + 1), 0, cfg.vocab)
+    step = jax.jit(steps["train"])
+    losses = []
+    for _ in range(8):
+        out = step(*state, batch)
+        state, losses = list(out[:-2]), losses + [float(out[-2])]
+    assert losses[-1] < losses[0] - 0.3  # same batch memorized fast
+    assert int(state[-1]) == 8
+
+
+def test_grad_apply_equals_fused_train():
+    """grad_step + apply_step (the data-parallel path) must reproduce the
+    fused train_step exactly."""
+    cfg = CFG_G
+    hp = TrainHParams(peak_lr=1e-3, total_steps=50)
+    steps = make_steps(cfg, OURS, hp)
+    p = init_params(cfg, jax.random.PRNGKey(1))
+    flat = [p[k] for k in steps["names"]]
+    n = len(flat)
+    state = flat + [jnp.zeros_like(x) for x in flat] * 2 + [jnp.zeros((), jnp.int32)]
+    batch = jax.random.randint(jax.random.PRNGKey(6), (4, cfg.seq + 1), 0, cfg.vocab)
+    fused = jax.jit(steps["train"])(*state, batch)
+    gout = jax.jit(steps["grad"])(*flat, batch)
+    grads, loss_g = list(gout[:-1]), gout[-1]
+    applied = jax.jit(steps["apply"])(*state, *grads)
+    np.testing.assert_allclose(float(loss_g), float(fused[-2]), rtol=1e-6)
+    for a, b in zip(applied[:n], fused[:n]):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-7)
+
+
+def test_eval_step_full_precision():
+    """eval_step ignores the recipe (always full-precision forward)."""
+    cfg = CFG_G
+    hp = TrainHParams(total_steps=10)
+    p = init_params(cfg, jax.random.PRNGKey(2))
+    flat_names = make_steps(cfg, OURS, hp)["names"]
+    flat = [p[k] for k in flat_names]
+    batch = jax.random.randint(jax.random.PRNGKey(7), (2, cfg.seq + 1), 0, cfg.vocab)
+    e_ours = jax.jit(make_steps(cfg, OURS, hp)["eval"])(*flat, batch)
+    e_fp16 = jax.jit(make_steps(cfg, FP16, hp)["eval"])(*flat, batch)
+    np.testing.assert_allclose(float(e_ours[0]), float(e_fp16[0]), rtol=1e-6)
+    assert float(e_ours[1]) == 2 * cfg.seq
+
+
+def test_presets_all_valid():
+    for name, cfg in MODELS.items():
+        assert cfg.d_model % cfg.n_head == 0, name
+        assert cfg.d_model % 128 == 0, name   # per-block B=128 divides K
+        assert cfg.d_ff % 128 == 0, name
+        assert cfg.param_count() > 0
+    assert "ours" in RECIPES and "fp16" in RECIPES

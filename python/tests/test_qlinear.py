@@ -1,0 +1,113 @@
+"""Quantized-linear recipe semantics: forward/backward quantization points,
+STE, and jnp-vs-pallas path equivalence."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import qlinear as ql
+from compile.formats import FP4_E2M1, FP8_E4M3, QuantSpec, NONE_SPEC, fake_quant
+from compile.qlinear import LinearRecipe, apply_qlinear, make_qlinear
+
+FP4B = QuantSpec("fp4", "block", 128)
+FP8B = QuantSpec("fp8", "block", 128)
+
+
+def _rand(shape, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray((rng.standard_normal(shape) * scale).astype(np.float32))
+
+
+def test_forward_equals_fakequant_matmul():
+    x, w = _rand((256, 128), 0), _rand((128, 64), 1, 0.5)
+    y = make_qlinear(LinearRecipe(fwd=FP4B))(x, w)
+    xq = fake_quant(x, FP4_E2M1, "block", axis=-1)
+    wq = fake_quant(w, FP4_E2M1, "block", axis=0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(xq @ wq), rtol=1e-5)
+
+
+def test_disabled_recipe_is_plain_matmul():
+    x, w = _rand((32, 128), 2), _rand((128, 16), 3)
+    y = apply_qlinear(x, w, LinearRecipe())
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w), rtol=1e-6)
+
+
+def test_agrad_identity_dx_uses_quantized_w():
+    """dx = g @ Qf(w)^T with unquantized g (the paper's §3.2 choice)."""
+    x, w = _rand((256, 128), 4), _rand((128, 128), 5, 0.5)
+    f = make_qlinear(LinearRecipe(fwd=FP4B))
+    y, vjp = jax.vjp(f, x, w)
+    g = _rand(y.shape, 6)
+    dx, dw = vjp(g)
+    wq = fake_quant(w, FP4_E2M1, "block", axis=0)
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(g @ wq.T),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_wgrad_quantizes_both_operands():
+    """dw = Qb(x)^T @ Qb(g), blocks along the token dimension."""
+    x, w = _rand((256, 128), 7), _rand((128, 128), 8, 0.5)
+    f = make_qlinear(LinearRecipe(fwd=FP4B, wgrad=FP8B))
+    y, vjp = jax.vjp(f, x, w)
+    g = _rand(y.shape, 9)
+    _, dw = vjp(g)
+    xq = fake_quant(x, FP8_E4M3, "block", axis=0)
+    gq = fake_quant(g, FP8_E4M3, "block", axis=0)
+    np.testing.assert_allclose(np.asarray(dw), np.asarray(xq.T @ gq),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_ste_gradient_flows_to_master_weights():
+    """With quantization enabled the loss still differentiates w.r.t. the
+    f32 master weights (STE); with it disabled the gradient is exact."""
+    x, w = _rand((256, 128), 10), _rand((128, 64), 11, 0.5)
+
+    def loss(w, recipe):
+        return (make_qlinear(recipe)(x, w) ** 2).sum()
+
+    g_none = jax.grad(loss, argnums=0)(w, LinearRecipe())
+    np.testing.assert_allclose(np.asarray(g_none),
+                               np.asarray(2.0 * x.T @ (x @ w)),
+                               rtol=1e-3, atol=1e-3)
+    g_q = jax.grad(loss, argnums=0)(w, LinearRecipe(fwd=FP4B, wgrad=FP8B))
+    assert np.isfinite(np.asarray(g_q)).all()
+    assert np.abs(np.asarray(g_q)).max() > 0
+    # STE: quantized-path gradient correlates strongly with the exact one.
+    a, b = np.asarray(g_q).ravel(), np.asarray(g_none).ravel()
+    corr = np.dot(a, b) / (np.linalg.norm(a) * np.linalg.norm(b))
+    assert corr > 0.95
+
+
+def test_agrad_quantization_changes_dx():
+    x, w = _rand((256, 128), 12), _rand((128, 128), 13, 0.5)
+    g = _rand((256, 128), 14)
+    f_id = make_qlinear(LinearRecipe(fwd=FP8B))
+    f_q = make_qlinear(LinearRecipe(fwd=FP8B, agrad=QuantSpec("fp4", "token")))
+    dx_id = jax.vjp(f_id, x, w)[1](g)[0]
+    dx_q = jax.vjp(f_q, x, w)[1](g)[0]
+    assert np.abs(np.asarray(dx_id - dx_q)).max() > 0
+
+
+def test_pallas_path_matches_jnp_path():
+    x, w = _rand((256, 128), 15), _rand((128, 128), 16, 0.5)
+    rec = LinearRecipe(fwd=FP4B)
+    y_jnp = make_qlinear(rec)(x, w)
+    ql.USE_PALLAS = True
+    try:
+        y_pal = make_qlinear(rec)(x, w)
+    finally:
+        ql.USE_PALLAS = False
+    np.testing.assert_allclose(np.asarray(y_jnp), np.asarray(y_pal),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_3d_input_reshape():
+    x = _rand((4, 64, 128), 17)
+    w = _rand((128, 32), 18)
+    b = _rand((32,), 19)
+    y = apply_qlinear(x, w, LinearRecipe(fwd=FP4B), b)
+    assert y.shape == (4, 64, 32)
+    y2 = apply_qlinear(x.reshape(-1, 128), w, LinearRecipe(fwd=FP4B), b)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y2.reshape(4, 64, 32)),
+                               rtol=1e-6)

@@ -1,0 +1,48 @@
+//! Data-pipeline benches: corpus generation, BPE training/encoding, and
+//! batcher throughput — verifies the prefetcher can always outrun the
+//! train step (L3 perf target).
+
+use fp4train::bench::Bencher;
+use fp4train::data::batcher::{DatasetConfig, Prefetcher, TokenDataset};
+use fp4train::data::corpus::{CorpusConfig, CorpusGen};
+use fp4train::data::tokenizer::Tokenizer;
+
+fn main() {
+    let mut b = Bencher::new(1, 5);
+
+    b.section("corpus generation");
+    b.bench("generate/2000 docs", Some((2000.0, "docs/s")), || {
+        std::hint::black_box(
+            CorpusGen::new(CorpusConfig { n_docs: 2000, ..Default::default() }).generate(),
+        );
+    });
+
+    let (text, _) = CorpusGen::new(CorpusConfig { n_docs: 3000, ..Default::default() }).generate();
+    b.section(&format!("BPE tokenizer ({} chars)", text.len()));
+    b.bench("train/vocab 512", None, || {
+        std::hint::black_box(Tokenizer::train(&text, 512));
+    });
+    let tok = Tokenizer::train(&text, 512);
+    b.bench("encode/full corpus", Some((text.len() as f64, "bytes/s")), || {
+        std::hint::black_box(tok.encode(&text));
+    });
+
+    let tokens = tok.encode(&text);
+    let n_tok = tokens.len();
+    let ds = TokenDataset::new(
+        tokens,
+        DatasetConfig { seq: 128, batch: 8, val_frac: 0.05, seed: 0 },
+    );
+    b.section(&format!("batcher ({n_tok} tokens)"));
+    let mut step = 0u64;
+    b.bench("train_batch/sequential", Some((8.0 * 129.0, "tokens/s")), || {
+        std::hint::black_box(ds.train_batch(step, 0, 1));
+        step += 1;
+    });
+    b.bench("prefetcher/100 batches", Some((100.0 * 8.0 * 129.0, "tokens/s")), || {
+        let pf = Prefetcher::new(ds.clone(), 0, 0, 1, 4);
+        for _ in 0..100 {
+            std::hint::black_box(pf.next());
+        }
+    });
+}

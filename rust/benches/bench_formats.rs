@@ -1,0 +1,58 @@
+//! L1/host numeric-format benches: grid projection, codec, fake-quant at
+//! every granularity — the hot host-side paths (checkpoint compression,
+//! analysis) plus the Appendix-A formula cost.
+
+use fp4train::bench::Bencher;
+use fp4train::formats::codec::{decode_slice, encode_slice, pack_fp4, unpack_fp4};
+use fp4train::formats::{fake_quant_rows, Granularity, FP4_E2M1, FP8_E4M3};
+use fp4train::quant::{default_fp4, dequantize};
+use fp4train::tensor::Tensor;
+use fp4train::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::new(3, 15);
+    let mut rng = Rng::new(1);
+    let n = 1 << 20;
+    let data: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+
+    b.section("grid projection (1M f32)");
+    for fmt in [FP4_E2M1, FP8_E4M3] {
+        b.bench(&format!("quantize/{}", fmt.name), Some((n as f64, "elem/s")), || {
+            let mut acc = 0.0f32;
+            for &x in &data {
+                acc += fmt.quantize(x);
+            }
+            std::hint::black_box(acc);
+        });
+    }
+
+    b.section("fake-quant granularities (1M f32, fp4)");
+    for (name, g) in [
+        ("per_tensor", Granularity::PerTensor),
+        ("per_row", Granularity::PerRow),
+        ("per_block128", Granularity::PerBlock(128)),
+    ] {
+        b.bench(&format!("fake_quant/{name}"), Some((n as f64, "elem/s")), || {
+            std::hint::black_box(fake_quant_rows(&data, n / 128, 128, FP4_E2M1, g));
+        });
+    }
+
+    b.section("codec + packing (1M f32)");
+    b.bench("encode/fp4", Some((n as f64, "elem/s")), || {
+        std::hint::black_box(encode_slice(FP4_E2M1, &data));
+    });
+    let codes = encode_slice(FP4_E2M1, &data);
+    b.bench("decode/fp4", Some((n as f64, "elem/s")), || {
+        std::hint::black_box(decode_slice(FP4_E2M1, &codes));
+    });
+    b.bench("pack+unpack/fp4", Some((n as f64, "elem/s")), || {
+        let p = pack_fp4(&codes);
+        std::hint::black_box(unpack_fp4(&p, codes.len()));
+    });
+
+    b.section("checkpoint codec (1M-param tensor)");
+    let t = Tensor::from_vec(&[2048, 512], data.clone());
+    b.bench("quantize+dequantize/fp4_block128", Some((n as f64, "elem/s")), || {
+        std::hint::black_box(dequantize(&default_fp4(&t)));
+    });
+}

@@ -1,0 +1,71 @@
+//! Runtime benches: artifact compile time, host<->device transfer, and
+//! train-step latency per recipe — the denominators behind the paper's
+//! theoretical-cost model (EXPERIMENTS.md §Perf compares these ratios to
+//! the FP8=2x/FP4=4x idealization and to fp16).
+//!
+//! Requires `make artifacts`; exits quietly if they're missing.
+
+use std::path::Path;
+
+use fp4train::bench::Bencher;
+use fp4train::runtime::state::TrainState;
+use fp4train::runtime::Runtime;
+use fp4train::tensor::TensorI32;
+
+fn main() {
+    if !Path::new("artifacts/manifest.json").exists() {
+        println!("bench_runtime: artifacts missing; run `make artifacts`");
+        return;
+    }
+    let rt = Runtime::open(Path::new("artifacts")).unwrap();
+    let mut b = Bencher::new(2, 8);
+    let model = "gpt2-s-proxy";
+    let info = rt.manifest.model(model).unwrap();
+    let batch_shape = rt.manifest.batch * (info.seq + 1);
+    let tokens: Vec<i32> = (0..batch_shape).map(|i| (i % info.vocab) as i32).collect();
+    let batch_t = TensorI32::from_vec(&[rt.manifest.batch, info.seq + 1], tokens);
+
+    b.section("host <-> device");
+    b.bench("upload/batch i32", Some((batch_shape as f64, "elem/s")), || {
+        std::hint::black_box(rt.upload_i32(&batch_t).unwrap());
+    });
+
+    b.section(format!("train step, {model} ({} params)", info.param_count).as_str());
+    let tokens_per_step = (rt.manifest.batch * info.seq) as f64;
+    for recipe in ["fp16", "ours", "fp4_fp4_fp4"] {
+        if rt.manifest.find(model, recipe, "train", false).is_none() {
+            continue;
+        }
+        let exe = rt.load(model, recipe, "train").unwrap();
+        let batch = rt.upload_i32(&batch_t).unwrap();
+        let mut st = Some(TrainState::init(&rt, model, "ours", 0).unwrap());
+        b.bench(&format!("train_step/{recipe}"), Some((tokens_per_step, "tok/s")), || {
+            let (s2, _, _) = st.take().unwrap().train_step(&exe, &batch).unwrap();
+            st = Some(s2);
+        });
+    }
+
+    b.section("pallas-kernel artifact vs jnp lowering");
+    for (label, pal) in [("jnp", false), ("pallas", true)] {
+        if rt.manifest.find(model, "ours", "train", pal).is_none() {
+            continue;
+        }
+        let exe = rt.load_variant(model, "ours", "train", pal).unwrap();
+        let batch = rt.upload_i32(&batch_t).unwrap();
+        let mut st = Some(TrainState::init(&rt, model, "ours", 0).unwrap());
+        b.bench(&format!("train_step/ours/{label}"), Some((tokens_per_step, "tok/s")), || {
+            let (s2, _, _) = st.take().unwrap().train_step(&exe, &batch).unwrap();
+            st = Some(s2);
+        });
+    }
+
+    b.section("eval + capture");
+    let eval = rt.load(model, "ours", "eval").unwrap();
+    let st = TrainState::init(&rt, model, "ours", 0).unwrap();
+    let batch = rt.upload_i32(&batch_t).unwrap();
+    b.bench("eval_step", Some((tokens_per_step, "tok/s")), || {
+        let mut args = st.param_refs();
+        args.push(&batch);
+        std::hint::black_box(eval.run(&args).unwrap());
+    });
+}

@@ -1,0 +1,32 @@
+//! Table/figure regeneration benches: time a reduced-step version of every
+//! reproduce driver so `cargo bench` exercises each experiment end-to-end
+//! (tables 1-4, figures 1a-2).  The full-scale rows live in
+//! reproduce_out/ via `fp4train reproduce`; this harness asserts the
+//! drivers run and reports their cost.
+
+use std::path::Path;
+
+use fp4train::bench::Bencher;
+use fp4train::reproduce::{self, ReproduceOpts};
+use fp4train::runtime::Runtime;
+
+fn main() {
+    if !Path::new("artifacts/manifest.json").exists() {
+        println!("bench_tables: artifacts missing; run `make artifacts`");
+        return;
+    }
+    let rt = Runtime::open(Path::new("artifacts")).unwrap();
+    let opts = ReproduceOpts {
+        steps: 12,
+        out_dir: "reproduce_out/bench".into(),
+        seed: 0,
+        n_docs: 600,
+    };
+    let mut b = Bencher::new(0, 1);
+    b.section("reproduce drivers (12-step reduced runs)");
+    for what in ["fig1a", "table4", "fig1b", "fig1c", "fig2", "table2", "table3", "table1"] {
+        b.bench(&format!("reproduce/{what}"), None, || {
+            reproduce::run(&rt, what, &opts).unwrap();
+        });
+    }
+}

@@ -1,0 +1,128 @@
+//! Fig. 1(c): attention-map analysis — under FP4 the attention scores
+//! flatten toward uniform, destroying token-importance discrimination.
+
+use crate::tensor::Tensor;
+
+/// Attention-map sharpness metrics for a (T, T) causal attention map.
+#[derive(Clone, Copy, Debug)]
+pub struct AttnStats {
+    /// Mean row entropy in nats, normalized by ln(row_len) into [0, 1]
+    /// (1 = fully uniform / "flattened").
+    pub norm_entropy: f64,
+    /// Mean max-probability per row (higher = sharper).
+    pub mean_peak: f64,
+}
+
+pub fn attn_stats(map: &Tensor) -> AttnStats {
+    assert_eq!(map.rank(), 2);
+    let t = map.shape[0];
+    let mut ent_sum = 0.0;
+    let mut peak_sum = 0.0;
+    let mut rows = 0.0;
+    for q in 1..t {
+        // row q attends over keys 0..=q
+        let row = &map.data[q * t..q * t + q + 1];
+        let sum: f64 = row.iter().map(|&p| p as f64).sum();
+        if sum <= 0.0 {
+            continue;
+        }
+        let mut ent = 0.0;
+        let mut peak = 0.0f64;
+        for &p in row {
+            let p = (p as f64 / sum).max(1e-12);
+            ent -= p * p.ln();
+            peak = peak.max(p);
+        }
+        ent_sum += ent / ((q + 1) as f64).ln().max(1e-9);
+        peak_sum += peak;
+        rows += 1.0;
+    }
+    AttnStats { norm_entropy: ent_sum / rows, mean_peak: peak_sum / rows }
+}
+
+/// Render a coarse ASCII heatmap (paper Fig. 1(c) analogue) by average-
+/// pooling the (T, T) map down to `cells` × `cells`.
+pub fn render_heatmap(map: &Tensor, cells: usize) -> String {
+    let t = map.shape[0];
+    let bucket = (t / cells).max(1);
+    let shades = [' ', '.', ':', '-', '=', '+', '*', '#', '%', '@'];
+    let mut pooled = vec![0.0f64; cells * cells];
+    let mut counts = vec![0u32; cells * cells];
+    for q in 0..t {
+        for k in 0..=q {
+            let (cq, ck) = ((q / bucket).min(cells - 1), (k / bucket).min(cells - 1));
+            pooled[cq * cells + ck] += map.data[q * t + k] as f64;
+            counts[cq * cells + ck] += 1;
+        }
+    }
+    let vals: Vec<f64> = pooled
+        .iter()
+        .zip(&counts)
+        .map(|(&s, &c)| if c == 0 { 0.0 } else { s / c as f64 })
+        .collect();
+    let vmax = vals.iter().cloned().fold(1e-12, f64::max);
+    let mut out = String::new();
+    for q in 0..cells {
+        for k in 0..cells {
+            let v = vals[q * cells + k] / vmax;
+            let idx = ((v * (shades.len() - 1) as f64).round() as usize).min(shades.len() - 1);
+            out.push(shades[idx]);
+            out.push(shades[idx]); // double-width cells render squarer
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn uniform_map(t: usize) -> Tensor {
+        let mut data = vec![0.0f32; t * t];
+        for q in 0..t {
+            for k in 0..=q {
+                data[q * t + k] = 1.0 / (q + 1) as f32;
+            }
+        }
+        Tensor::from_vec(&[t, t], data)
+    }
+
+    fn sharp_map(t: usize) -> Tensor {
+        let mut data = vec![0.0f32; t * t];
+        for q in 0..t {
+            // attends mostly to positions divisible by 3 (paper's "tokens
+            // 0, 3, 6, 9 are more important")
+            let targets: Vec<usize> = (0..=q).filter(|k| k % 3 == 0).collect();
+            for &k in &targets {
+                data[q * t + k] = 0.9 / targets.len() as f32;
+            }
+            for k in 0..=q {
+                data[q * t + k] += 0.1 / (q + 1) as f32;
+            }
+        }
+        Tensor::from_vec(&[t, t], data)
+    }
+
+    #[test]
+    fn uniform_has_entropy_one() {
+        let s = attn_stats(&uniform_map(32));
+        assert!((s.norm_entropy - 1.0).abs() < 1e-6, "{s:?}");
+    }
+
+    #[test]
+    fn sharp_map_scores_lower_entropy_higher_peak() {
+        let u = attn_stats(&uniform_map(32));
+        let s = attn_stats(&sharp_map(32));
+        assert!(s.norm_entropy < u.norm_entropy - 0.05, "{s:?} vs {u:?}");
+        assert!(s.mean_peak > u.mean_peak + 0.05);
+    }
+
+    #[test]
+    fn heatmap_renders_lower_triangle() {
+        let h = render_heatmap(&sharp_map(64), 8);
+        assert_eq!(h.lines().count(), 8);
+        // top-right (future positions) must stay blank
+        assert!(h.lines().next().unwrap().ends_with("  "));
+    }
+}

@@ -1,0 +1,141 @@
+//! Fig. 2: loss-curve assembly — merge step CSVs from schedule/recipe
+//! variants and render terminal plots + combined CSV.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+#[derive(Clone, Debug)]
+pub struct Curve {
+    pub label: String,
+    pub steps: Vec<u64>,
+    pub values: Vec<f64>,
+}
+
+impl Curve {
+    pub fn from_step_csv(label: &str, path: &Path) -> Result<Curve> {
+        let src = std::fs::read_to_string(path).with_context(|| format!("{path:?}"))?;
+        let mut steps = Vec::new();
+        let mut values = Vec::new();
+        for line in src.lines().skip(1) {
+            let mut it = line.split(',');
+            let (Some(s), Some(l)) = (it.next(), it.next()) else { continue };
+            steps.push(s.parse::<u64>()?);
+            values.push(l.parse::<f64>()?);
+        }
+        Ok(Curve { label: label.to_string(), steps, values })
+    }
+
+    /// Exponential smoothing for display.
+    pub fn smoothed(&self, alpha: f64) -> Curve {
+        let mut out = self.clone();
+        let mut ema = None;
+        for v in out.values.iter_mut() {
+            let e = match ema {
+                None => *v,
+                Some(prev) => alpha * *v + (1.0 - alpha) * prev,
+            };
+            ema = Some(e);
+            *v = e;
+        }
+        out
+    }
+}
+
+/// ASCII multi-curve plot (rows = value axis, cols = step axis).
+pub fn render(curves: &[Curve], width: usize, height: usize) -> String {
+    let marks = ['o', 'x', '+', '*', '#'];
+    let max_step = curves.iter().flat_map(|c| c.steps.iter().copied()).max().unwrap_or(1).max(1);
+    let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+    for c in curves {
+        for &v in &c.values {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+    }
+    if !lo.is_finite() || hi <= lo {
+        return String::from("(no data)\n");
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    for (ci, c) in curves.iter().enumerate() {
+        for (&s, &v) in c.steps.iter().zip(&c.values) {
+            let x = ((s as f64 / max_step as f64) * (width - 1) as f64) as usize;
+            let y = (((hi - v) / (hi - lo)) * (height - 1) as f64) as usize;
+            grid[y.min(height - 1)][x.min(width - 1)] = marks[ci % marks.len()];
+        }
+    }
+    let mut out = String::new();
+    for (i, row) in grid.iter().enumerate() {
+        let val = hi - (hi - lo) * i as f64 / (height - 1) as f64;
+        out.push_str(&format!("{val:>8.4} |"));
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!("{:>8} +{}\n", "", "-".repeat(width)));
+    out.push_str(&format!("{:>10}0 .. {max_step} steps; ", ""));
+    for (ci, c) in curves.iter().enumerate() {
+        out.push_str(&format!("[{}] {}  ", marks[ci % marks.len()], c.label));
+    }
+    out.push('\n');
+    out
+}
+
+/// Combined CSV for external plotting.
+pub fn write_combined_csv(curves: &[Curve], path: &Path) -> Result<()> {
+    use std::io::Write;
+    if let Some(d) = path.parent() {
+        std::fs::create_dir_all(d)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "label,step,value")?;
+    for c in curves {
+        for (&s, &v) in c.steps.iter().zip(&c.values) {
+            writeln!(f, "{},{s},{v}", c.label)?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn curve(label: &str, f: impl Fn(u64) -> f64) -> Curve {
+        let steps: Vec<u64> = (0..50).collect();
+        let values = steps.iter().map(|&s| f(s)).collect();
+        Curve { label: label.into(), steps, values }
+    }
+
+    #[test]
+    fn smoothing_reduces_wiggle() {
+        let noisy = curve("n", |s| 5.0 - s as f64 * 0.01 + if s % 2 == 0 { 0.5 } else { -0.5 });
+        let sm = noisy.smoothed(0.2);
+        let wiggle = |c: &Curve| {
+            c.values.windows(2).map(|w| (w[1] - w[0]).abs()).sum::<f64>()
+        };
+        assert!(wiggle(&sm) < wiggle(&noisy) / 2.0);
+    }
+
+    #[test]
+    fn render_has_all_labels() {
+        let s = render(&[curve("fp4", |s| 5.0 - s as f64 * 0.02), curve("fp16", |s| 4.8 - s as f64 * 0.02)], 60, 12);
+        assert!(s.contains("fp4") && s.contains("fp16"));
+        assert_eq!(s.lines().count(), 14);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let c = curve("a", |s| s as f64);
+        let dir = std::env::temp_dir().join("fp4curves");
+        let p = dir.join("steps.csv");
+        std::fs::create_dir_all(&dir).unwrap();
+        // write in the trainer's step-csv format then parse back
+        let mut src = String::from("step,loss,grad_norm,stage,step_ms\n");
+        for (&s, &v) in c.steps.iter().zip(&c.values) {
+            src.push_str(&format!("{s},{v},1.0,0,5.0\n"));
+        }
+        std::fs::write(&p, src).unwrap();
+        let back = Curve::from_step_csv("a", &p).unwrap();
+        assert_eq!(back.values, c.values);
+    }
+}

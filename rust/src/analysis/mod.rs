@@ -1,0 +1,11 @@
+//! Analysis layer: turns captured tensors and metric streams into the
+//! paper's figures.
+//!
+//! * `distributions` — Fig. 1(b): activation/gradient histograms and the
+//!   FP4-vs-FP8 underflow / disagreement rates.
+//! * `attention`     — Fig. 1(c): attention-map flattening under FP4.
+//! * `curves`        — Fig. 2: loss-curve assembly from metric CSVs.
+
+pub mod attention;
+pub mod curves;
+pub mod distributions;

@@ -1,0 +1,117 @@
+//! From-scratch micro/macro-benchmark harness (criterion is not in the
+//! offline registry): warmup, timed iterations, median/MAD reporting, and
+//! simple regression guards.  Used by every `[[bench]]` target.
+
+use std::time::Instant;
+
+use crate::util::stats::{mad, median};
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median_ns: f64,
+    pub mad_ns: f64,
+    pub throughput: Option<(f64, &'static str)>,
+}
+
+impl BenchResult {
+    pub fn line(&self) -> String {
+        let t = if self.median_ns > 1e9 {
+            format!("{:>9.3} s ", self.median_ns / 1e9)
+        } else if self.median_ns > 1e6 {
+            format!("{:>9.3} ms", self.median_ns / 1e6)
+        } else if self.median_ns > 1e3 {
+            format!("{:>9.3} µs", self.median_ns / 1e3)
+        } else {
+            format!("{:>9.0} ns", self.median_ns)
+        };
+        let tp = match self.throughput {
+            Some((v, unit)) => format!("   {v:>12.2} {unit}"),
+            None => String::new(),
+        };
+        format!(
+            "{:<44} {t} ± {:>5.1}%{tp}",
+            self.name,
+            100.0 * self.mad_ns / self.median_ns.max(1e-9)
+        )
+    }
+}
+
+pub struct Bencher {
+    pub warmup: usize,
+    pub iters: usize,
+    pub results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup: 3, iters: 10, results: Vec::new() }
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup: usize, iters: usize) -> Self {
+        Bencher { warmup, iters, results: Vec::new() }
+    }
+
+    /// Time `f`; `work` units per call feed the throughput column
+    /// (e.g. elements, tokens).
+    pub fn bench<F: FnMut()>(&mut self, name: &str, work: Option<(f64, &'static str)>, mut f: F) {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+        let med = median(&samples);
+        let r = BenchResult {
+            name: name.to_string(),
+            iters: self.iters,
+            median_ns: med,
+            mad_ns: mad(&samples),
+            throughput: work.map(|(w, unit)| (w / (med / 1e9), unit)),
+        };
+        println!("{}", r.line());
+        self.results.push(r);
+    }
+
+    pub fn section(&self, title: &str) {
+        println!("\n=== {title} ===");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bencher::new(1, 5);
+        let mut acc = 0u64;
+        b.bench("spin", Some((1000.0, "ops/s")), || {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+        });
+        assert_eq!(b.results.len(), 1);
+        assert!(b.results[0].median_ns > 0.0);
+        assert!(b.results[0].throughput.unwrap().0 > 0.0);
+        assert!(acc > 0);
+    }
+
+    #[test]
+    fn line_formats_units() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            median_ns: 2.5e6,
+            mad_ns: 1e4,
+            throughput: None,
+        };
+        assert!(r.line().contains("ms"));
+    }
+}

@@ -1,0 +1,212 @@
+//! Run configuration: TOML-subset files + CLI overrides resolved into a
+//! typed `RunConfig`.  Model presets and precision recipes are owned by
+//! the AOT manifest (python/compile/presets.py is the source of truth);
+//! this module holds the *runtime* knobs.
+
+use crate::util::args::Args;
+use crate::util::tomlmini::{TomlDoc, TomlValue};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunConfig {
+    pub model: String,
+    pub recipe: String,
+    pub steps: u64,
+    pub seed: u64,
+    pub workers: usize,
+    pub eval_every: u64,
+    pub log_every: u64,
+    /// Target-precision schedule (§3.3): fraction of steps run in the
+    /// high-precision tail (0.0 disables the second stage).
+    pub target_precision_frac: f64,
+    /// Recipe used for the tail stage (paper: FP16).
+    pub target_recipe: String,
+    pub checkpoint_every: u64,
+    pub checkpoint_dir: String,
+    pub out_dir: String,
+    pub artifacts_dir: String,
+    pub data: DataConfig,
+    pub use_pallas_artifact: bool,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct DataConfig {
+    pub n_docs: usize,
+    pub corpus_seed: u64,
+    pub val_frac: f64,
+    pub prefetch_depth: usize,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            model: "gpt2-s-proxy".into(),
+            recipe: "ours".into(),
+            steps: 300,
+            seed: 0,
+            workers: 1,
+            eval_every: 50,
+            log_every: 10,
+            target_precision_frac: 0.08, // paper: 5-10% of total steps
+            target_recipe: "fp16".into(),
+            checkpoint_every: 0, // disabled unless set
+            checkpoint_dir: "checkpoints".into(),
+            out_dir: "runs".into(),
+            artifacts_dir: "artifacts".into(),
+            data: DataConfig { n_docs: 4000, corpus_seed: 1234, val_frac: 0.05, prefetch_depth: 4 },
+            use_pallas_artifact: false,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Load from an optional TOML file then apply CLI overrides.
+    pub fn resolve(file: Option<&str>, args: &Args) -> Result<RunConfig, String> {
+        let mut doc = TomlDoc::default();
+        if let Some(path) = file {
+            let src = std::fs::read_to_string(path)
+                .map_err(|e| format!("cannot read config {path}: {e}"))?;
+            doc = TomlDoc::parse(&src).map_err(|e| e.to_string())?;
+        }
+        // CLI overrides (flat names mirror the dotted config keys)
+        for (cli, key) in [
+            ("model", "model"),
+            ("recipe", "recipe"),
+            ("target-recipe", "schedule.target_recipe"),
+            ("artifacts", "artifacts_dir"),
+            ("out", "out_dir"),
+            ("checkpoint-dir", "checkpoint.dir"),
+        ] {
+            if let Some(v) = args.get(cli) {
+                doc.set(key, TomlValue::Str(v.to_string()));
+            }
+        }
+        for (cli, key) in [
+            ("steps", "steps"),
+            ("seed", "seed"),
+            ("workers", "workers"),
+            ("eval-every", "eval_every"),
+            ("log-every", "log_every"),
+            ("checkpoint-every", "checkpoint.every"),
+            ("docs", "data.n_docs"),
+        ] {
+            if let Some(v) = args.get(cli) {
+                let i: i64 = v.parse().map_err(|_| format!("--{cli} must be an integer"))?;
+                doc.set(key, TomlValue::Int(i));
+            }
+        }
+        if let Some(v) = args.get("target-frac") {
+            let f: f64 = v.parse().map_err(|_| "--target-frac must be a float".to_string())?;
+            doc.set("schedule.target_precision_frac", TomlValue::Float(f));
+        }
+        if args.has_flag("pallas") {
+            doc.set("use_pallas_artifact", TomlValue::Bool(true));
+        }
+
+        let d = RunConfig::default();
+        let cfg = RunConfig {
+            model: doc.str_or("model", &d.model),
+            recipe: doc.str_or("recipe", &d.recipe),
+            steps: doc.i64_or("steps", d.steps as i64).max(1) as u64,
+            seed: doc.i64_or("seed", d.seed as i64) as u64,
+            workers: doc.i64_or("workers", d.workers as i64).max(1) as usize,
+            eval_every: doc.i64_or("eval_every", d.eval_every as i64).max(1) as u64,
+            log_every: doc.i64_or("log_every", d.log_every as i64).max(1) as u64,
+            target_precision_frac: doc
+                .f64_or("schedule.target_precision_frac", d.target_precision_frac)
+                .clamp(0.0, 0.5),
+            target_recipe: doc.str_or("schedule.target_recipe", &d.target_recipe),
+            checkpoint_every: doc.i64_or("checkpoint.every", 0).max(0) as u64,
+            checkpoint_dir: doc.str_or("checkpoint.dir", &d.checkpoint_dir),
+            out_dir: doc.str_or("out_dir", &d.out_dir),
+            artifacts_dir: doc.str_or("artifacts_dir", &d.artifacts_dir),
+            data: DataConfig {
+                n_docs: doc.i64_or("data.n_docs", d.data.n_docs as i64).max(50) as usize,
+                corpus_seed: doc.i64_or("data.corpus_seed", d.data.corpus_seed as i64) as u64,
+                val_frac: doc.f64_or("data.val_frac", d.data.val_frac).clamp(0.01, 0.5),
+                prefetch_depth: doc.i64_or("data.prefetch_depth", d.data.prefetch_depth as i64).max(1)
+                    as usize,
+            },
+            use_pallas_artifact: doc.bool_or("use_pallas_artifact", false),
+        };
+        Ok(cfg)
+    }
+
+    /// Steps spent in stage 1 (low precision) under the §3.3 schedule.
+    pub fn stage1_steps(&self) -> u64 {
+        let tail = (self.steps as f64 * self.target_precision_frac) as u64;
+        self.steps - tail.min(self.steps)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::args::Cli;
+
+    fn parse(argv: &[&str]) -> Args {
+        Cli::new("t", "t")
+            .opt("model", None, "")
+            .opt("recipe", None, "")
+            .opt("steps", None, "")
+            .opt("seed", None, "")
+            .opt("workers", None, "")
+            .opt("target-frac", None, "")
+            .opt("target-recipe", None, "")
+            .opt("eval-every", None, "")
+            .opt("log-every", None, "")
+            .opt("checkpoint-every", None, "")
+            .opt("checkpoint-dir", None, "")
+            .opt("docs", None, "")
+            .opt("artifacts", None, "")
+            .opt("out", None, "")
+            .flag("pallas", "")
+            .parse(&argv.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+            .unwrap()
+    }
+
+    #[test]
+    fn defaults_without_inputs() {
+        let cfg = RunConfig::resolve(None, &parse(&[])).unwrap();
+        assert_eq!(cfg, RunConfig::default());
+    }
+
+    #[test]
+    fn cli_overrides_apply() {
+        let cfg = RunConfig::resolve(
+            None,
+            &parse(&["--model", "llama-125m-proxy", "--steps", "42", "--target-frac", "0.1", "--pallas"]),
+        )
+        .unwrap();
+        assert_eq!(cfg.model, "llama-125m-proxy");
+        assert_eq!(cfg.steps, 42);
+        assert!((cfg.target_precision_frac - 0.1).abs() < 1e-12);
+        assert!(cfg.use_pallas_artifact);
+    }
+
+    #[test]
+    fn file_then_cli_priority() {
+        let dir = std::env::temp_dir().join("fp4cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run.toml");
+        std::fs::write(&path, "steps = 99\nmodel = \"gpt2-m-proxy\"\n[schedule]\ntarget_precision_frac = 0.2\n").unwrap();
+        let cfg = RunConfig::resolve(Some(path.to_str().unwrap()), &parse(&["--steps", "7"])).unwrap();
+        assert_eq!(cfg.steps, 7); // CLI wins
+        assert_eq!(cfg.model, "gpt2-m-proxy"); // file applies
+        assert!((cfg.target_precision_frac - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stage1_steps_schedule() {
+        let mut cfg = RunConfig::default();
+        cfg.steps = 100;
+        cfg.target_precision_frac = 0.1;
+        assert_eq!(cfg.stage1_steps(), 90);
+        cfg.target_precision_frac = 0.0;
+        assert_eq!(cfg.stage1_steps(), 100);
+    }
+
+    #[test]
+    fn missing_file_is_error() {
+        assert!(RunConfig::resolve(Some("/nonexistent/x.toml"), &parse(&[])).is_err());
+    }
+}

@@ -1,0 +1,299 @@
+//! Checkpointing: serialize the full train state (params, Adam moments,
+//! step) to a single flate2-compressed binary file.
+//!
+//! Format (little-endian):
+//!   magic "FP4CKPT1" | json header length u32 | json header bytes |
+//!   payload blobs in header order.
+//! The header records tensor names/shapes/encodings.  Weight payloads can
+//! optionally be stored FP4/FP8-quantized (per-block 128 codes + scales,
+//! via `quant`) — the low-precision formats doing double duty as a
+//! storage codec; Adam moments and the step are always f32/i32.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+use flate2::read::GzDecoder;
+use flate2::write::GzEncoder;
+use flate2::Compression;
+
+use crate::formats::{FP4_E2M1, FP8_E4M3};
+use crate::quant::{dequantize, quantize, GranSpec, QuantizedTensor};
+use crate::tensor::Tensor;
+use crate::util::json::{obj, Json};
+
+const MAGIC: &[u8; 8] = b"FP4CKPT1";
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum WeightCodec {
+    F32,
+    Fp8Block,
+    Fp4Block,
+}
+
+impl WeightCodec {
+    fn name(self) -> &'static str {
+        match self {
+            WeightCodec::F32 => "f32",
+            WeightCodec::Fp8Block => "fp8_block128",
+            WeightCodec::Fp4Block => "fp4_block128",
+        }
+    }
+
+    fn parse(s: &str) -> Result<WeightCodec> {
+        match s {
+            "f32" => Ok(WeightCodec::F32),
+            "fp8_block128" => Ok(WeightCodec::Fp8Block),
+            "fp4_block128" => Ok(WeightCodec::Fp4Block),
+            _ => bail!("unknown weight codec {s}"),
+        }
+    }
+}
+
+pub struct Checkpoint {
+    pub params: Vec<(String, Tensor)>,
+    pub m: Vec<Tensor>,
+    pub v: Vec<Tensor>,
+    pub step: i64,
+}
+
+fn tensor_blob(t: &Tensor, codec: WeightCodec) -> (Json, Vec<u8>) {
+    match codec {
+        WeightCodec::F32 => {
+            let mut bytes = Vec::with_capacity(t.data.len() * 4);
+            for x in &t.data {
+                bytes.extend_from_slice(&x.to_le_bytes());
+            }
+            (
+                obj(vec![
+                    ("codec", codec.name().into()),
+                    ("shape", t.shape.clone().into()),
+                    ("bytes", bytes.len().into()),
+                ]),
+                bytes,
+            )
+        }
+        WeightCodec::Fp8Block | WeightCodec::Fp4Block => {
+            let fmt = if codec == WeightCodec::Fp8Block { FP8_E4M3 } else { FP4_E2M1 };
+            let q = quantize(t, fmt, GranSpec::PerBlock(128));
+            let mut bytes = Vec::with_capacity(q.packed.len() + q.scales.len() * 4);
+            bytes.extend_from_slice(&q.packed);
+            for s in &q.scales {
+                bytes.extend_from_slice(&s.to_le_bytes());
+            }
+            (
+                obj(vec![
+                    ("codec", codec.name().into()),
+                    ("shape", t.shape.clone().into()),
+                    ("packed", q.packed.len().into()),
+                    ("scales", q.scales.len().into()),
+                    ("bytes", bytes.len().into()),
+                ]),
+                bytes,
+            )
+        }
+    }
+}
+
+fn blob_tensor(h: &Json, bytes: &[u8]) -> Result<Tensor> {
+    let codec = WeightCodec::parse(h.get("codec").and_then(|c| c.as_str()).unwrap_or(""))?;
+    let shape: Vec<usize> = h
+        .get("shape")
+        .and_then(|s| s.as_arr())
+        .ok_or_else(|| anyhow!("shape"))?
+        .iter()
+        .map(|x| x.as_usize().unwrap_or(0))
+        .collect();
+    match codec {
+        WeightCodec::F32 => {
+            let n: usize = shape.iter().product();
+            if bytes.len() != n * 4 {
+                bail!("blob size mismatch");
+            }
+            let data = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            Ok(Tensor::from_vec(&shape, data))
+        }
+        WeightCodec::Fp8Block | WeightCodec::Fp4Block => {
+            let n_packed = h.get("packed").and_then(|x| x.as_usize()).unwrap_or(0);
+            let n_scales = h.get("scales").and_then(|x| x.as_usize()).unwrap_or(0);
+            if bytes.len() != n_packed + 4 * n_scales {
+                bail!("quantized blob size mismatch");
+            }
+            let packed = bytes[..n_packed].to_vec();
+            let scales = bytes[n_packed..]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            let fmt_name = if codec == WeightCodec::Fp8Block { "fp8_e4m3" } else { "fp4_e2m1" };
+            let q = QuantizedTensor {
+                fmt_name: fmt_name.to_string(),
+                shape,
+                granularity: GranSpec::PerBlock(128),
+                packed,
+                scales,
+            };
+            Ok(dequantize(&q))
+        }
+    }
+}
+
+/// Write a checkpoint.  `weight_codec` applies to 2-D+ parameter tensors;
+/// 1-D/scalars (norms, biases) and optimizer moments stay f32.
+pub fn save(ckpt: &Checkpoint, path: &Path, weight_codec: WeightCodec) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut headers = Vec::new();
+    let mut payload = Vec::new();
+    let mut push = |name: String, t: &Tensor, codec: WeightCodec| {
+        let (mut h, bytes) = tensor_blob(t, codec);
+        if let Json::Obj(kvs) = &mut h {
+            kvs.insert(0, ("name".into(), Json::Str(name)));
+        }
+        headers.push(h);
+        payload.extend_from_slice(&bytes);
+    };
+    for (name, t) in &ckpt.params {
+        let codec = if t.shape.len() >= 2 { weight_codec } else { WeightCodec::F32 };
+        push(format!("p/{name}"), t, codec);
+    }
+    for (i, t) in ckpt.m.iter().enumerate() {
+        push(format!("m/{i}"), t, WeightCodec::F32);
+    }
+    for (i, t) in ckpt.v.iter().enumerate() {
+        push(format!("v/{i}"), t, WeightCodec::F32);
+    }
+    let header = obj(vec![
+        ("version", 1usize.into()),
+        ("step", (ckpt.step as i64).into()),
+        ("n_params", ckpt.params.len().into()),
+        ("tensors", Json::Arr(headers)),
+    ])
+    .to_string_compact();
+
+    let file = std::fs::File::create(path).with_context(|| format!("{path:?}"))?;
+    let mut enc = GzEncoder::new(file, Compression::fast());
+    enc.write_all(MAGIC)?;
+    enc.write_all(&(header.len() as u32).to_le_bytes())?;
+    enc.write_all(header.as_bytes())?;
+    enc.write_all(&payload)?;
+    enc.finish()?;
+    Ok(())
+}
+
+pub fn load(path: &Path) -> Result<Checkpoint> {
+    let file = std::fs::File::open(path).with_context(|| format!("{path:?}"))?;
+    let mut dec = GzDecoder::new(file);
+    let mut buf = Vec::new();
+    dec.read_to_end(&mut buf)?;
+    if buf.len() < 12 || &buf[..8] != MAGIC {
+        bail!("not an FP4CKPT1 checkpoint: {}", path.display());
+    }
+    let hlen = u32::from_le_bytes([buf[8], buf[9], buf[10], buf[11]]) as usize;
+    let header = std::str::from_utf8(&buf[12..12 + hlen])?;
+    let j = Json::parse(header).map_err(|e| anyhow!("ckpt header: {e}"))?;
+    let step = j.get("step").and_then(|s| s.as_i64()).unwrap_or(0);
+    let n_params = j.get("n_params").and_then(|s| s.as_usize()).unwrap_or(0);
+    let mut off = 12 + hlen;
+    let mut params = Vec::new();
+    let mut m = Vec::new();
+    let mut v = Vec::new();
+    for h in j.get("tensors").and_then(|t| t.as_arr()).unwrap_or(&[]) {
+        let nbytes = h.get("bytes").and_then(|b| b.as_usize()).ok_or_else(|| anyhow!("bytes"))?;
+        let t = blob_tensor(h, &buf[off..off + nbytes])?;
+        off += nbytes;
+        let name = h.get("name").and_then(|n| n.as_str()).unwrap_or("");
+        if let Some(p) = name.strip_prefix("p/") {
+            params.push((p.to_string(), t));
+        } else if name.starts_with("m/") {
+            m.push(t);
+        } else {
+            v.push(t);
+        }
+    }
+    if params.len() != n_params {
+        bail!("expected {n_params} params, found {}", params.len());
+    }
+    Ok(Checkpoint { params, m, v, step })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn sample() -> Checkpoint {
+        let mut rng = Rng::new(11);
+        let params = vec![
+            ("wte".to_string(), Tensor::randn(&[32, 128], 0.02, &mut rng)),
+            ("ln_g".to_string(), Tensor::randn(&[128], 1.0, &mut rng)),
+        ];
+        let m = params.iter().map(|(_, t)| Tensor::zeros(&t.shape)).collect();
+        let v = params.iter().map(|(_, t)| Tensor::randn(&t.shape, 1e-4, &mut rng)).collect();
+        Checkpoint { params, m, v, step: 123 }
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join("fp4ckpt").join(name)
+    }
+
+    #[test]
+    fn f32_roundtrip_exact() {
+        let c = sample();
+        let p = tmp("f32.ckpt");
+        save(&c, &p, WeightCodec::F32).unwrap();
+        let c2 = load(&p).unwrap();
+        assert_eq!(c2.step, 123);
+        for ((n1, t1), (n2, t2)) in c.params.iter().zip(&c2.params) {
+            assert_eq!(n1, n2);
+            assert_eq!(t1.data, t2.data);
+        }
+        assert_eq!(c.v[0].data, c2.v[0].data);
+    }
+
+    #[test]
+    fn fp8_weights_lossy_but_close_and_smaller() {
+        let c = sample();
+        let pf = tmp("f32b.ckpt");
+        let pq = tmp("fp8.ckpt");
+        save(&c, &pf, WeightCodec::F32).unwrap();
+        save(&c, &pq, WeightCodec::Fp8Block).unwrap();
+        let c2 = load(&pq).unwrap();
+        // 2-D weights quantized but close
+        let (a, b) = (&c.params[0].1, &c2.params[0].1);
+        let max_rel = a
+            .data
+            .iter()
+            .zip(&b.data)
+            .map(|(x, y)| (x - y).abs() / x.abs().max(1e-6))
+            .fold(0.0f32, f32::max);
+        assert!(max_rel < 0.1, "{max_rel}");
+        assert_ne!(a.data, b.data);
+        // 1-D stays exact
+        assert_eq!(c.params[1].1.data, c2.params[1].1.data);
+    }
+
+    #[test]
+    fn fp4_weights_roundtrip_on_grid() {
+        let c = sample();
+        let p = tmp("fp4.ckpt");
+        save(&c, &p, WeightCodec::Fp4Block).unwrap();
+        let c2 = load(&p).unwrap();
+        // re-saving the dequantized checkpoint is lossless (idempotent)
+        let p2 = tmp("fp4b.ckpt");
+        save(&c2, &p2, WeightCodec::Fp4Block).unwrap();
+        let c3 = load(&p2).unwrap();
+        assert_eq!(c2.params[0].1.data, c3.params[0].1.data);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let p = tmp("garbage.ckpt");
+        std::fs::create_dir_all(p.parent().unwrap()).unwrap();
+        std::fs::write(&p, b"not a checkpoint").unwrap();
+        assert!(load(&p).is_err());
+    }
+}

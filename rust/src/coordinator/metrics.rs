@@ -1,0 +1,165 @@
+//! Metrics sink: step records accumulate in memory and stream to a CSV
+//! file; run summaries serialize as JSON.  These CSVs are the data behind
+//! Fig. 2 and the loss columns of Tables 1-3.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{obj, Json};
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StepRecord {
+    pub step: u64,
+    pub loss: f32,
+    pub grad_norm: f32,
+    /// 0 = low-precision stage, 1 = target-precision tail (§3.3).
+    pub stage: u8,
+    pub step_ms: f64,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EvalRecord {
+    pub step: u64,
+    pub val_nll: f64,
+    pub val_ppl: f64,
+}
+
+#[derive(Default)]
+pub struct Metrics {
+    pub steps: Vec<StepRecord>,
+    pub evals: Vec<EvalRecord>,
+}
+
+impl Metrics {
+    pub fn push_step(&mut self, r: StepRecord) {
+        self.steps.push(r);
+    }
+
+    pub fn push_eval(&mut self, step: u64, val_nll: f64) {
+        self.evals.push(EvalRecord { step, val_nll, val_ppl: val_nll.exp() });
+    }
+
+    pub fn last_eval(&self) -> Option<&EvalRecord> {
+        self.evals.last()
+    }
+
+    /// Smoothed training loss over the trailing window.
+    pub fn smoothed_loss(&self, window: usize) -> Option<f64> {
+        if self.steps.is_empty() {
+            return None;
+        }
+        let tail = &self.steps[self.steps.len().saturating_sub(window)..];
+        Some(tail.iter().map(|r| r.loss as f64).sum::<f64>() / tail.len() as f64)
+    }
+
+    pub fn mean_step_ms(&self) -> f64 {
+        if self.steps.is_empty() {
+            return f64::NAN;
+        }
+        self.steps.iter().map(|r| r.step_ms).sum::<f64>() / self.steps.len() as f64
+    }
+
+    pub fn tokens_per_second(&self, tokens_per_step: usize) -> f64 {
+        1000.0 / self.mean_step_ms() * tokens_per_step as f64
+    }
+
+    pub fn write_csv(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path).with_context(|| format!("{path:?}"))?;
+        writeln!(f, "step,loss,grad_norm,stage,step_ms")?;
+        for r in &self.steps {
+            writeln!(f, "{},{},{},{},{:.3}", r.step, r.loss, r.grad_norm, r.stage, r.step_ms)?;
+        }
+        Ok(())
+    }
+
+    pub fn write_eval_csv(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "step,val_nll,val_ppl")?;
+        for r in &self.evals {
+            writeln!(f, "{},{},{}", r.step, r.val_nll, r.val_ppl)?;
+        }
+        Ok(())
+    }
+
+    pub fn summary_json(&self, name: &str) -> Json {
+        obj(vec![
+            ("run", name.into()),
+            ("steps", self.steps.len().into()),
+            ("final_loss", self.smoothed_loss(20).unwrap_or(f64::NAN).into()),
+            (
+                "final_val_nll",
+                self.last_eval().map(|e| e.val_nll).unwrap_or(f64::NAN).into(),
+            ),
+            (
+                "final_val_ppl",
+                self.last_eval().map(|e| e.val_ppl).unwrap_or(f64::NAN).into(),
+            ),
+            ("mean_step_ms", self.mean_step_ms().into()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Metrics {
+        let mut m = Metrics::default();
+        for s in 0..30u64 {
+            m.push_step(StepRecord {
+                step: s,
+                loss: 6.0 - s as f32 * 0.1,
+                grad_norm: 1.0,
+                stage: (s >= 25) as u8,
+                step_ms: 10.0,
+            });
+        }
+        m.push_eval(29, 3.0);
+        m
+    }
+
+    #[test]
+    fn smoothed_loss_trails() {
+        let m = sample();
+        let s = m.smoothed_loss(5).unwrap();
+        assert!((s - (6.0 - 27.0 * 0.1)).abs() < 0.11, "{s}");
+    }
+
+    #[test]
+    fn ppl_is_exp_nll() {
+        let m = sample();
+        assert!((m.last_eval().unwrap().val_ppl - 3.0f64.exp()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn throughput() {
+        let m = sample();
+        assert!((m.tokens_per_second(100) - 10_000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn csv_roundtrip_lines() {
+        let m = sample();
+        let dir = std::env::temp_dir().join("fp4metrics");
+        let p = dir.join("steps.csv");
+        m.write_csv(&p).unwrap();
+        let content = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(content.lines().count(), 31); // header + 30
+        assert!(content.lines().nth(26).unwrap().ends_with(",1,10.000")); // stage flip
+    }
+
+    #[test]
+    fn summary_has_fields() {
+        let j = sample().summary_json("t");
+        assert_eq!(j.get("steps").unwrap().as_usize(), Some(30));
+        assert!(j.get("final_val_ppl").unwrap().as_f64().unwrap() > 19.0);
+    }
+}

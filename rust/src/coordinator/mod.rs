@@ -1,0 +1,15 @@
+//! L3 coordinator: the training framework around the AOT compute.
+//!
+//! * `trainer`    — the step loop with the §3.3 target-precision schedule
+//!                  controller (stage switch = swap executables; the
+//!                  device-resident state carries over untouched).
+//! * `metrics`    — loss-curve / throughput sink (CSV + JSONL).
+//! * `checkpoint` — save/restore full train state (flate2-compressed, with
+//!                  optional FP4/FP8-quantized weight payloads).
+//! * `dp`         — data-parallel worker pool: per-worker grad steps and a
+//!                  host-side gradient all-reduce feeding one apply step.
+
+pub mod checkpoint;
+pub mod dp;
+pub mod metrics;
+pub mod trainer;

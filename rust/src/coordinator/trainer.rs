@@ -1,0 +1,211 @@
+//! The training loop + the paper's §3.3 Target-Precision Training Schedule
+//! controller.
+//!
+//! Stage 1 runs the configured low-precision recipe for (1 - frac) of the
+//! steps; stage 2 swaps in the target-recipe (FP16) executable for the
+//! final 5-10 %.  The swap is pure L3 coordination: both artifacts share
+//! the same state layout, so the device-resident buffers flow across the
+//! boundary untouched — exactly the "continuing the FP4 pretraining
+//! process with FP16" of the paper.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::checkpoint::{self, Checkpoint, WeightCodec};
+use super::metrics::{Metrics, StepRecord};
+use crate::config::RunConfig;
+use crate::data::batcher::{DatasetConfig, Prefetcher, TokenDataset};
+use crate::data::corpus::{CorpusConfig, CorpusGen};
+use crate::data::tokenizer::Tokenizer;
+use crate::runtime::state::{eval_nll, TrainState};
+use crate::runtime::Runtime;
+
+pub struct Trainer<'rt> {
+    pub rt: &'rt Runtime,
+    pub cfg: RunConfig,
+    pub metrics: Metrics,
+}
+
+pub struct RunResult {
+    pub final_train_loss: f64,
+    pub final_val_nll: f64,
+    pub final_val_ppl: f64,
+    pub metrics: Metrics,
+    /// Final device-resident state (probe suites and held-out evals reuse
+    /// it without retraining).
+    pub state: TrainState,
+}
+
+/// Build the corpus → tokenizer → dataset chain for a run configuration.
+pub fn build_dataset(rt: &Runtime, cfg: &RunConfig) -> Result<(TokenDataset, Tokenizer)> {
+    let info = rt.manifest.model(&cfg.model)?;
+    let (text, _meta) = CorpusGen::new(CorpusConfig {
+        n_docs: cfg.data.n_docs,
+        seed: cfg.data.corpus_seed,
+        ..Default::default()
+    })
+    .generate();
+    let tok = Tokenizer::train(&text, info.vocab);
+    let tokens = tok.encode(&text);
+    log::info!(
+        "corpus: {} docs, {} chars -> {} tokens (vocab {})",
+        cfg.data.n_docs,
+        text.len(),
+        tokens.len(),
+        tok.vocab_size()
+    );
+    let ds = TokenDataset::new(
+        tokens,
+        DatasetConfig {
+            seq: info.seq,
+            batch: rt.manifest.batch,
+            val_frac: cfg.data.val_frac,
+            seed: cfg.seed,
+        },
+    );
+    Ok((ds, tok))
+}
+
+impl<'rt> Trainer<'rt> {
+    pub fn new(rt: &'rt Runtime, cfg: RunConfig) -> Self {
+        Trainer { rt, cfg, metrics: Metrics::default() }
+    }
+
+    fn ckpt_path(&self, step: u64) -> PathBuf {
+        PathBuf::from(&self.cfg.checkpoint_dir).join(format!(
+            "{}__{}__{step}.ckpt",
+            self.cfg.model, self.cfg.recipe
+        ))
+    }
+
+    /// Run the full 2-stage schedule, returning final metrics.  Optionally
+    /// resume from a checkpoint path.
+    pub fn run(mut self, resume: Option<&str>) -> Result<RunResult> {
+        let rt = self.rt;
+        let cfg = self.cfg.clone();
+        let stage1 = cfg.stage1_steps();
+
+        let exe_stage1 = rt.load_variant(&cfg.model, &cfg.recipe, "train", cfg.use_pallas_artifact)?;
+        // stage-2 executable loaded lazily (may equal stage 1 when frac=0)
+        let exe_stage2 = if stage1 < cfg.steps {
+            Some(rt.load(&cfg.model, &cfg.target_recipe, "train")?)
+        } else {
+            None
+        };
+        let eval_exe = rt.load(
+            &cfg.model,
+            // eval artifacts are exported per-model under the recipe that
+            // exported the full step set
+            self.pick_eval_recipe()?,
+            "eval",
+        )?;
+
+        let (ds, _tok) = build_dataset(rt, &cfg)?;
+        let val_batches = ds.val_batches();
+        let val_slice = &val_batches[..val_batches.len().min(4)];
+
+        let mut state = match resume {
+            Some(path) => {
+                let c = checkpoint::load(std::path::Path::new(path))
+                    .with_context(|| format!("resume from {path}"))?;
+                log::info!("resumed from {path} at step {}", c.step);
+                let params: Vec<_> = c.params.iter().map(|(_, t)| t.clone()).collect();
+                TrainState::upload(rt, &params, &c.m, &c.v, c.step as i32)?
+            }
+            None => TrainState::init(rt, &cfg.model, self.pick_eval_recipe()?, cfg.seed as i32)?,
+        };
+
+        let start_step = state.step()? as u64;
+        let pf = Prefetcher::new(ds.clone(), start_step, 0, 1, cfg.data.prefetch_depth);
+
+        log::info!(
+            "training {} / {} for {} steps (stage 2 at {stage1}, recipe {} -> {})",
+            cfg.model,
+            cfg.recipe,
+            cfg.steps,
+            cfg.recipe,
+            cfg.target_recipe
+        );
+        for step in start_step..cfg.steps {
+            let stage2 = step >= stage1;
+            let exe = if stage2 { exe_stage2.as_ref().unwrap() } else { &exe_stage1 };
+            let batch_host = pf.next();
+            let t0 = Instant::now();
+            let batch = rt.upload_i32(&batch_host)?;
+            let (st, loss, gnorm) = state.train_step(exe, &batch)?;
+            state = st;
+            let ms = t0.elapsed().as_secs_f64() * 1000.0;
+            self.metrics.push_step(StepRecord {
+                step,
+                loss,
+                grad_norm: gnorm,
+                stage: stage2 as u8,
+                step_ms: ms,
+            });
+            if (step + 1) % cfg.log_every == 0 || step + 1 == cfg.steps {
+                log::info!(
+                    "step {:>5}/{} [{}] loss {:.4} |g| {:.3} {:.0} ms",
+                    step + 1,
+                    cfg.steps,
+                    if stage2 { "tgt" } else { "low" },
+                    loss,
+                    gnorm,
+                    ms
+                );
+            }
+            if (step + 1) % cfg.eval_every == 0 || step + 1 == cfg.steps {
+                let nll = eval_nll(rt, &eval_exe, &state, val_slice)?;
+                self.metrics.push_eval(step + 1, nll);
+                log::info!("eval @ {:>5}: val nll {nll:.4} ppl {:.3}", step + 1, nll.exp());
+            }
+            if cfg.checkpoint_every > 0 && (step + 1) % cfg.checkpoint_every == 0 {
+                self.save_checkpoint(&state, step + 1)?;
+            }
+        }
+
+        let out_dir = PathBuf::from(&cfg.out_dir);
+        std::fs::create_dir_all(&out_dir)?;
+        let tag = format!("{}__{}", cfg.model, cfg.recipe);
+        self.metrics.write_csv(&out_dir.join(format!("{tag}__steps.csv")))?;
+        self.metrics.write_eval_csv(&out_dir.join(format!("{tag}__eval.csv")))?;
+
+        let final_val = self.metrics.last_eval().map(|e| e.val_nll).unwrap_or(f64::NAN);
+        Ok(RunResult {
+            final_train_loss: self.metrics.smoothed_loss(20).unwrap_or(f64::NAN),
+            final_val_nll: final_val,
+            final_val_ppl: final_val.exp(),
+            metrics: self.metrics,
+            state,
+        })
+    }
+
+    /// init/eval artifacts are exported once per model (under one recipe);
+    /// find which recipe owns them.
+    fn pick_eval_recipe(&self) -> Result<&str> {
+        let m = &self.rt.manifest;
+        for candidate in [self.cfg.recipe.as_str(), "ours", "fp16"] {
+            if m.find(&self.cfg.model, candidate, "eval", false).is_some() {
+                return Ok(m.find(&self.cfg.model, candidate, "eval", false).unwrap().recipe.as_str());
+            }
+        }
+        anyhow::bail!("no eval artifact for model {}", self.cfg.model)
+    }
+
+    fn save_checkpoint(&self, state: &TrainState, step: u64) -> Result<()> {
+        let (p, m, v, st) = state.download_all()?;
+        let info = self.rt.manifest.model(&self.cfg.model)?;
+        let named: Vec<(String, crate::tensor::Tensor)> = info
+            .params
+            .iter()
+            .map(|e| e.name.clone())
+            .zip(p)
+            .collect();
+        let ck = Checkpoint { params: named, m, v, step: st };
+        let path = self.ckpt_path(step);
+        checkpoint::save(&ck, &path, WeightCodec::F32)?;
+        log::info!("checkpoint -> {}", path.display());
+        Ok(())
+    }
+}

@@ -1,0 +1,157 @@
+//! Theoretical computation-cost model (paper Appendix B): count the matmul
+//! FLOPs of a transformer block per precision assignment, assuming FP8
+//! runs 2x and FP4 runs 4x faster than FP16.  Reproduces Fig. 1(a) and the
+//! "Computation cost" columns of Tables 2-3.
+
+/// One GEMM: FLOPs and its precision speedup factor.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Prec {
+    Fp16,
+    Fp8,
+    Fp4,
+}
+
+impl Prec {
+    pub fn speedup(self) -> f64 {
+        match self {
+            Prec::Fp16 => 1.0,
+            Prec::Fp8 => 2.0,
+            Prec::Fp4 => 4.0,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Prec> {
+        match s {
+            "fp16" | "none" => Some(Prec::Fp16),
+            "fp8" | "fp8_e4m3" | "fp8_e5m2" => Some(Prec::Fp8),
+            "fp4" | "fp4_e2m1" => Some(Prec::Fp4),
+            _ => None,
+        }
+    }
+}
+
+/// Transformer geometry for FLOP counting.
+#[derive(Clone, Copy, Debug)]
+pub struct BlockGeom {
+    pub d_model: usize,
+    pub d_ff: usize,
+    pub seq: usize,
+    pub n_kv_proj: usize, // 3 for fused qkv; kept for clarity
+    /// SwiGLU has 3 FFN mats (gate, up, down); GELU has 2.
+    pub swiglu: bool,
+}
+
+impl BlockGeom {
+    pub fn llama7b_4k() -> BlockGeom {
+        BlockGeom { d_model: 4096, d_ff: 11008, seq: 4096, n_kv_proj: 3, swiglu: true }
+    }
+
+    /// Forward GEMM FLOPs (per token) of each component:
+    /// (attn_linear, attn_matmul, ffn_linear).
+    pub fn fwd_flops_per_token(&self) -> (f64, f64, f64) {
+        let d = self.d_model as f64;
+        let f = self.d_ff as f64;
+        let t = self.seq as f64;
+        let attn_linear = 2.0 * d * d * (self.n_kv_proj as f64 + 1.0); // qkv + out
+        let attn_matmul = 2.0 * t * d * 2.0; // QK^T + PV per token
+        let ffn_mats = if self.swiglu { 3.0 } else { 2.0 };
+        let ffn_linear = 2.0 * d * f * ffn_mats;
+        (attn_linear, attn_matmul, ffn_linear)
+    }
+
+    /// Fig. 1(a): fractional share of (attention linears, attention
+    /// matmuls, FFN linears) in total forward GEMM compute.
+    pub fn fwd_shares(&self) -> (f64, f64, f64) {
+        let (a, m, f) = self.fwd_flops_per_token();
+        let tot = a + m + f;
+        (a / tot, m / tot, f / tot)
+    }
+}
+
+/// Precision assignment for the cost model — mirrors PrecisionRecipe: the
+/// forward precision of attention/FFN linears, the weight-grad precision,
+/// and the act-grad precision (fp16 in the paper).
+#[derive(Clone, Copy, Debug)]
+pub struct CostRecipe {
+    pub attn_fwd: Prec,
+    pub ffn_fwd: Prec,
+    pub wgrad: Prec,
+    pub agrad: Prec,
+}
+
+impl CostRecipe {
+    pub const FP16: CostRecipe = CostRecipe {
+        attn_fwd: Prec::Fp16,
+        ffn_fwd: Prec::Fp16,
+        wgrad: Prec::Fp16,
+        agrad: Prec::Fp16,
+    };
+}
+
+/// Theoretical cost of one training step relative to full FP16 (the
+/// paper's "Computation cost" columns; lower is better).
+///
+/// Per linear layer, training does 3 GEMMs of equal FLOPs: forward,
+/// act-grad, weight-grad.  Attention matmuls (QK^T, PV) run at FP16 both
+/// ways (never quantized) and backward doubles them.
+pub fn relative_cost(geom: &BlockGeom, r: &CostRecipe) -> f64 {
+    let (attn_l, attn_m, ffn_l) = geom.fwd_flops_per_token();
+    // time units at FP16 = flops / speedup
+    let time = |flops: f64, p: Prec| flops / p.speedup();
+
+    // fp16 baseline: every GEMM at 1x
+    let base = 3.0 * attn_l + 3.0 * ffn_l + 3.0 * attn_m;
+
+    let ours = time(attn_l, r.attn_fwd)
+        + time(ffn_l, r.ffn_fwd)
+        + time(attn_l + ffn_l, r.agrad)
+        + time(attn_l + ffn_l, r.wgrad)
+        + 3.0 * attn_m; // attention matmuls stay fp16 fwd+bwd
+
+    ours / base
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1a_ffn_dominates_llama7b() {
+        // paper Fig 1(a): FFN ≈ 57% of a LLaMA-7B block at 4K context
+        let (attn_l, attn_m, ffn_l) = BlockGeom::llama7b_4k().fwd_shares();
+        assert!((ffn_l - 0.57).abs() < 0.05, "ffn share {ffn_l}");
+        assert!(attn_l > 0.1 && attn_l < 0.4);
+        assert!(attn_m > 0.05 && attn_m < 0.35);
+        assert!((attn_l + attn_m + ffn_l - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fp16_recipe_costs_100pct() {
+        let g = BlockGeom::llama7b_4k();
+        assert!((relative_cost(&g, &CostRecipe::FP16) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table2_cost_ordering() {
+        // proxy for the paper's LLaMA-125M training geometry
+        let g = BlockGeom { d_model: 768, d_ff: 3072, seq: 2048, n_kv_proj: 3, swiglu: true };
+        let all4 = relative_cost(&g, &CostRecipe {
+            attn_fwd: Prec::Fp4, ffn_fwd: Prec::Fp4, wgrad: Prec::Fp4, agrad: Prec::Fp16 });
+        let ours = relative_cost(&g, &CostRecipe {
+            attn_fwd: Prec::Fp8, ffn_fwd: Prec::Fp4, wgrad: Prec::Fp8, agrad: Prec::Fp16 });
+        let mid = relative_cost(&g, &CostRecipe {
+            attn_fwd: Prec::Fp8, ffn_fwd: Prec::Fp4, wgrad: Prec::Fp4, agrad: Prec::Fp16 });
+        // paper Table 2 ordering: all-FP4 < (FP8,FP4,FP4) < (FP8,FP4,FP8) < 1
+        assert!(all4 < mid && mid < ours && ours < 1.0, "{all4} {mid} {ours}");
+        // and the magnitudes land in the paper's 55-75% band
+        assert!(all4 > 0.4 && ours < 0.85, "{all4} {ours}");
+    }
+
+    #[test]
+    fn quantizing_more_is_never_slower() {
+        let g = BlockGeom::llama7b_4k();
+        let r8 = CostRecipe { attn_fwd: Prec::Fp8, ffn_fwd: Prec::Fp8, wgrad: Prec::Fp8, agrad: Prec::Fp16 };
+        let r4 = CostRecipe { attn_fwd: Prec::Fp4, ffn_fwd: Prec::Fp4, wgrad: Prec::Fp4, agrad: Prec::Fp16 };
+        assert!(relative_cost(&g, &r4) < relative_cost(&g, &r8));
+    }
+}

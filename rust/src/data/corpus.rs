@@ -1,0 +1,278 @@
+//! Synthetic corpus generator: a templated micro-language with Zipfian
+//! vocabulary and planted document attributes.
+//!
+//! Structure an LM can learn (and that FP4 noise can degrade):
+//!   * word spellings (syllabic words over a small alphabet → BPE structure)
+//!   * sentence templates (word-class order, with agreement suffixes)
+//!   * topic-conditional vocabulary (content words cluster by topic)
+//!   * sentiment/formality marker words
+//!   * long-range repetition: the doc's theme word recurs across sentences
+//!
+//! Every document also carries `DocMeta` ground truth for the nine
+//! GLUE-proxy probe tasks (eval::probes).
+
+use crate::util::rng::{Rng, Zipf};
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DocMeta {
+    pub topic: u8,        // 0..N_TOPICS        (proxy: mnli-style multiclass)
+    pub sentiment: u8,    // 0/1                (proxy: sst2)
+    pub formality: u8,    // 0/1                (proxy: cola-adjacent style)
+    pub template: u8,     // 0..N_TEMPLATES     (proxy: structure id)
+    pub grammatical: u8,  // 1 = clean, 0 = shuffled words (proxy: cola)
+    pub length_class: u8, // 0/1/2              (proxy: stsb-like ordinal)
+    pub rare_word: u8,    // 0/1 contains a tail word (proxy: wnli-ish)
+}
+
+pub const N_TOPICS: usize = 8;
+pub const N_TEMPLATES: usize = 4;
+
+#[derive(Clone, Debug)]
+pub struct CorpusConfig {
+    pub n_docs: usize,
+    pub sentences_per_doc: usize,
+    pub n_content_words: usize,
+    pub zipf_s: f64,
+    pub seed: u64,
+    /// Fraction of documents with shuffled (ungrammatical) word order.
+    pub corrupt_frac: f64,
+}
+
+impl Default for CorpusConfig {
+    fn default() -> Self {
+        CorpusConfig {
+            n_docs: 2000,
+            sentences_per_doc: 8,
+            n_content_words: 800,
+            zipf_s: 1.05,
+            seed: 0,
+            corrupt_frac: 0.12,
+        }
+    }
+}
+
+/// Deterministic syllabic word: CV(CV...) pattern from a word id.
+pub fn word_string(id: usize) -> String {
+    const C: &[u8] = b"bcdfgklmnprstvz";
+    const V: &[u8] = b"aeiou";
+    let mut s = String::new();
+    let mut x = id as u64 * 2654435761 + 12345;
+    let syllables = 2 + (x % 2) as usize + (id % 3 == 0) as usize;
+    for _ in 0..syllables {
+        x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        s.push(C[(x >> 33) as usize % C.len()] as char);
+        x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        s.push(V[(x >> 33) as usize % V.len()] as char);
+    }
+    s
+}
+
+const FUNCTION_WORDS: &[&str] = &["the", "a", "of", "and", "to", "in", "is", "it"];
+const POS_MARKERS: &[&str] = &["zestful", "bright", "fine"];
+const NEG_MARKERS: &[&str] = &["grim", "dull", "sour"];
+const FORMAL_MARKERS: &[&str] = &["hence", "thus"];
+const INFORMAL_MARKERS: &[&str] = &["yeah", "kinda"];
+
+pub struct CorpusGen {
+    cfg: CorpusConfig,
+    zipf: Zipf,
+    rng: Rng,
+}
+
+#[derive(Clone, Debug)]
+pub struct Document {
+    pub text: String,
+    pub meta: DocMeta,
+}
+
+impl CorpusGen {
+    pub fn new(cfg: CorpusConfig) -> Self {
+        let zipf = Zipf::new(cfg.n_content_words, cfg.zipf_s);
+        let rng = Rng::new(cfg.seed ^ 0xC0FFEE);
+        CorpusGen { cfg, zipf, rng }
+    }
+
+    /// Topic-conditioned content word: topics own disjoint head regions of
+    /// the Zipf ranking, with a shared tail.
+    fn content_word(&mut self, topic: u8) -> (usize, String) {
+        let rank = self.zipf.sample(&mut self.rng);
+        let id = if rank < self.cfg.n_content_words / 2 {
+            // head region: rotate by topic so head words are topic-specific
+            let region = self.cfg.n_content_words / 2;
+            (rank + topic as usize * region / N_TOPICS) % region
+        } else {
+            rank // shared tail
+        };
+        (id, word_string(id))
+    }
+
+    fn sentence(&mut self, meta: DocMeta, theme: &str) -> String {
+        let mut words: Vec<String> = Vec::new();
+        let (_, n1) = self.content_word(meta.topic);
+        let (_, n2) = self.content_word(meta.topic);
+        let (_, v) = self.content_word(meta.topic);
+        let det = FUNCTION_WORDS[self.rng.below(2) as usize]; // the | a
+        match meta.template % N_TEMPLATES as u8 {
+            0 => {
+                // Det N V-su Det N
+                words.extend([det.into(), n1, format!("{v}su"), "the".into(), n2]);
+            }
+            1 => {
+                // N of N V-ta
+                words.extend([n1, "of".into(), n2, format!("{v}ta")]);
+            }
+            2 => {
+                // Det N is Adj(N2)
+                words.extend([det.into(), n1, "is".into(), format!("{n2}ik")]);
+            }
+            _ => {
+                // N and N V-su to N(theme)
+                words.extend([n1, "and".into(), n2, format!("{v}su"), "to".into(), theme.into()]);
+            }
+        }
+        // marker words carry sentiment/formality signal
+        if self.rng.f64() < 0.6 {
+            let m = if meta.sentiment == 1 {
+                POS_MARKERS[self.rng.below(POS_MARKERS.len() as u64) as usize]
+            } else {
+                NEG_MARKERS[self.rng.below(NEG_MARKERS.len() as u64) as usize]
+            };
+            words.push(m.to_string());
+        }
+        if self.rng.f64() < 0.3 {
+            let m = if meta.formality == 1 {
+                FORMAL_MARKERS[self.rng.below(2) as usize]
+            } else {
+                INFORMAL_MARKERS[self.rng.below(2) as usize]
+            };
+            words.insert(0, m.to_string());
+        }
+        // theme recurrence: long-range signal within the document
+        if self.rng.f64() < 0.35 {
+            words.push("it".into());
+            words.push(theme.to_string());
+        }
+        if meta.grammatical == 0 {
+            self.rng.shuffle(&mut words);
+        }
+        words.join(" ") + "."
+    }
+
+    pub fn next_doc(&mut self) -> Document {
+        let topic = self.rng.below(N_TOPICS as u64) as u8;
+        let n_sent = match self.rng.below(3) {
+            0 => self.cfg.sentences_per_doc / 2,
+            1 => self.cfg.sentences_per_doc,
+            _ => self.cfg.sentences_per_doc * 2,
+        }
+        .max(1);
+        let length_class = if n_sent < self.cfg.sentences_per_doc {
+            0
+        } else if n_sent == self.cfg.sentences_per_doc {
+            1
+        } else {
+            2
+        };
+        let meta = DocMeta {
+            topic,
+            sentiment: self.rng.below(2) as u8,
+            formality: self.rng.below(2) as u8,
+            template: self.rng.below(N_TEMPLATES as u64) as u8,
+            grammatical: (self.rng.f64() >= self.cfg.corrupt_frac) as u8,
+            length_class,
+            rare_word: 0,
+        };
+        let (theme_id, theme) = self.content_word(topic);
+        let mut meta = meta;
+        // plant a rare (deep-tail) word in ~35% of docs
+        let rare = self.rng.f64() < 0.35;
+        meta.rare_word = rare as u8;
+        let mut sents: Vec<String> = (0..n_sent).map(|_| self.sentence(meta, &theme)).collect();
+        if rare {
+            let tail_id = self.cfg.n_content_words + 37 + theme_id % 11;
+            let pos = self.rng.below(sents.len() as u64) as usize;
+            sents[pos] = format!("{} {}", word_string(tail_id), sents[pos]);
+        }
+        Document { text: sents.join(" ") + "\n", meta }
+    }
+
+    /// Generate the whole corpus (text concatenation + per-doc metadata
+    /// with byte offsets).
+    pub fn generate(mut self) -> (String, Vec<(usize, DocMeta)>) {
+        let mut text = String::new();
+        let mut metas = Vec::with_capacity(self.cfg.n_docs);
+        for _ in 0..self.cfg.n_docs {
+            let d = self.next_doc();
+            metas.push((text.len(), d.meta));
+            text.push_str(&d.text);
+        }
+        (text, metas)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> CorpusConfig {
+        CorpusConfig { n_docs: 200, sentences_per_doc: 4, ..Default::default() }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (t1, m1) = CorpusGen::new(small()).generate();
+        let (t2, m2) = CorpusGen::new(small()).generate();
+        assert_eq!(t1, t2);
+        assert_eq!(m1, m2);
+    }
+
+    #[test]
+    fn different_seed_differs() {
+        let (t1, _) = CorpusGen::new(small()).generate();
+        let (t2, _) = CorpusGen::new(CorpusConfig { seed: 9, ..small() }).generate();
+        assert_ne!(t1, t2);
+    }
+
+    #[test]
+    fn word_strings_are_pronounceable_and_stable() {
+        let w = word_string(17);
+        assert_eq!(w, word_string(17));
+        assert!(w.len() >= 4 && w.len() <= 8, "{w}");
+        assert!(w.bytes().all(|b| b.is_ascii_lowercase()));
+    }
+
+    #[test]
+    fn zipf_head_words_dominate() {
+        let (text, _) = CorpusGen::new(small()).generate();
+        let head = word_string(0);
+        let tail = word_string(700);
+        let ch = text.matches(&head).count();
+        let ct = text.matches(&tail).count();
+        assert!(ch > ct, "head {ch} tail {ct}");
+    }
+
+    #[test]
+    fn metadata_covers_all_classes() {
+        let (_, metas) = CorpusGen::new(small()).generate();
+        for t in 0..N_TOPICS as u8 {
+            assert!(metas.iter().any(|(_, m)| m.topic == t), "topic {t}");
+        }
+        assert!(metas.iter().any(|(_, m)| m.grammatical == 0));
+        assert!(metas.iter().any(|(_, m)| m.sentiment == 0));
+        assert!(metas.iter().any(|(_, m)| m.sentiment == 1));
+        assert!(metas.iter().any(|(_, m)| m.rare_word == 1));
+    }
+
+    #[test]
+    fn sentiment_markers_present_in_text() {
+        let (text, _) = CorpusGen::new(small()).generate();
+        assert!(POS_MARKERS.iter().any(|m| text.contains(m)));
+        assert!(NEG_MARKERS.iter().any(|m| text.contains(m)));
+    }
+
+    #[test]
+    fn docs_end_with_newline_separator() {
+        let (text, metas) = CorpusGen::new(small()).generate();
+        assert_eq!(text.lines().count(), metas.len());
+    }
+}

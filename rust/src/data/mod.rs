@@ -1,0 +1,13 @@
+//! Data pipeline substrates: synthetic corpus generation, BPE tokenizer,
+//! token shards, and the deterministic prefetching batcher.
+//!
+//! The paper pretrains on RedPajama-WikiText, which is data-gated here;
+//! DESIGN.md §Substitutions explains why a learnable synthetic language
+//! preserves the quantization phenomena under study.  Documents carry
+//! planted metadata (topic, sentiment, grammaticality, ...) that the
+//! GLUE-proxy probe suite (eval::probes) predicts from pooled hidden
+//! states.
+
+pub mod batcher;
+pub mod corpus;
+pub mod tokenizer;

@@ -1,0 +1,268 @@
+//! Byte-pair-encoding tokenizer trained on the synthetic corpus.
+//!
+//! GPT-2-style word-level BPE: text is split on whitespace into words
+//! (whitespace is encoded as a leading-space marker on the following
+//! word), merges are learned over word-frequency counts, and encoding
+//! caches per-word token sequences.  Vocabulary = 256 byte tokens + merges
+//! + 1 newline token; ids are stable across runs for a fixed corpus.
+
+use std::collections::HashMap;
+
+pub const NEWLINE_TOKEN: i32 = 256; // reserved right after the byte range
+
+#[derive(Clone, Debug)]
+pub struct Tokenizer {
+    /// learned merges in order: (left_id, right_id) -> new_id
+    pub merges: Vec<(i32, i32)>,
+    merge_rank: HashMap<(i32, i32), usize>,
+    /// id -> byte string
+    pub vocab: Vec<Vec<u8>>,
+}
+
+impl Tokenizer {
+    pub fn vocab_size(&self) -> usize {
+        self.vocab.len()
+    }
+
+    /// Train on `text` until the vocabulary reaches `vocab_size`.
+    pub fn train(text: &str, vocab_size: usize) -> Tokenizer {
+        assert!(vocab_size > 257, "need room beyond byte tokens + newline");
+        // id space: 0..256 bytes, 256 newline, 257.. merges
+        let mut vocab: Vec<Vec<u8>> = (0..=255u8).map(|b| vec![b]).collect();
+        vocab.push(b"\n".to_vec()); // NEWLINE_TOKEN (id 256) — never merged
+
+        // word frequency table; words carry their leading space
+        let mut word_freq: HashMap<Vec<i32>, u64> = HashMap::new();
+        for line in text.lines() {
+            for (i, w) in line.split_whitespace().enumerate() {
+                let mut ids: Vec<i32> = Vec::with_capacity(w.len() + 1);
+                if i > 0 {
+                    ids.push(b' ' as i32);
+                }
+                ids.extend(w.bytes().map(|b| b as i32));
+                if ids.is_empty() {
+                    continue;
+                }
+                *word_freq.entry(ids).or_insert(0) += 1;
+            }
+        }
+        let mut words: Vec<(Vec<i32>, u64)> = word_freq.into_iter().collect();
+        words.sort(); // deterministic iteration order
+
+        let mut merges: Vec<(i32, i32)> = Vec::new();
+        while vocab.len() < vocab_size {
+            // count all adjacent pairs
+            let mut pair_counts: HashMap<(i32, i32), u64> = HashMap::new();
+            for (ids, f) in &words {
+                for win in ids.windows(2) {
+                    *pair_counts.entry((win[0], win[1])).or_insert(0) += f;
+                }
+            }
+            // best pair: max count, ties broken by smallest pair for determinism
+            let Some((&best, &cnt)) = pair_counts
+                .iter()
+                .max_by(|(pa, ca), (pb, cb)| ca.cmp(cb).then(pb.cmp(pa)))
+            else {
+                break;
+            };
+            if cnt < 2 {
+                break; // nothing worth merging
+            }
+            let new_id = vocab.len() as i32;
+            let mut tok = vocab[best.0 as usize].clone();
+            tok.extend_from_slice(&vocab[best.1 as usize]);
+            vocab.push(tok);
+            merges.push(best);
+            // apply merge to every word
+            for (ids, _) in words.iter_mut() {
+                let mut out = Vec::with_capacity(ids.len());
+                let mut i = 0;
+                while i < ids.len() {
+                    if i + 1 < ids.len() && ids[i] == best.0 && ids[i + 1] == best.1 {
+                        out.push(new_id);
+                        i += 2;
+                    } else {
+                        out.push(ids[i]);
+                        i += 1;
+                    }
+                }
+                *ids = out;
+            }
+        }
+        let merge_rank = merges
+            .iter()
+            .enumerate()
+            .map(|(i, &p)| (p, i))
+            .collect();
+        Tokenizer { merges, merge_rank, vocab }
+    }
+
+    fn encode_word(&self, word: &[u8]) -> Vec<i32> {
+        let mut ids: Vec<i32> = word.iter().map(|&b| b as i32).collect();
+        loop {
+            // find the lowest-rank applicable merge
+            let mut best: Option<(usize, usize)> = None; // (rank, pos)
+            for (pos, win) in ids.windows(2).enumerate() {
+                if let Some(&rank) = self.merge_rank.get(&(win[0], win[1])) {
+                    if best.is_none() || rank < best.unwrap().0 {
+                        best = Some((rank, pos));
+                    }
+                }
+            }
+            let Some((rank, pos)) = best else { break };
+            let new_id = 257 + rank as i32;
+            ids.splice(pos..pos + 2, [new_id]);
+        }
+        ids
+    }
+
+    /// Encode text to token ids (newlines become NEWLINE_TOKEN).
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        let mut out = Vec::with_capacity(text.len() / 3);
+        let mut cache: HashMap<&str, Vec<i32>> = HashMap::new();
+        for (li, line) in text.split('\n').enumerate() {
+            if li > 0 {
+                out.push(NEWLINE_TOKEN);
+            }
+            for (i, w) in line.split_whitespace().enumerate() {
+                if i == 0 {
+                    // line starts carry no leading-space marker
+                    out.extend(self.encode_word(w.as_bytes()));
+                } else {
+                    let toks = cache.entry(w).or_insert_with(|| {
+                        let mut bytes = Vec::with_capacity(w.len() + 1);
+                        bytes.push(b' ');
+                        bytes.extend(w.bytes());
+                        self.encode_word(&bytes)
+                    });
+                    out.extend(toks.iter());
+                }
+            }
+        }
+        out
+    }
+
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let mut bytes = Vec::new();
+        for &id in ids {
+            if id == NEWLINE_TOKEN {
+                bytes.push(b'\n');
+            } else if (id as usize) < self.vocab.len() {
+                bytes.extend_from_slice(&self.vocab[id as usize]);
+            }
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    /// Serialize to a compact JSON string (merges only — vocab rebuilds).
+    pub fn to_json(&self) -> String {
+        use crate::util::json::Json;
+        let merges: Vec<Json> = self
+            .merges
+            .iter()
+            .map(|&(a, b)| Json::Arr(vec![Json::Num(a as f64), Json::Num(b as f64)]))
+            .collect();
+        crate::util::json::obj(vec![
+            ("version", Json::Num(1.0)),
+            ("merges", Json::Arr(merges)),
+        ])
+        .to_string_compact()
+    }
+
+    pub fn from_json(s: &str) -> Result<Tokenizer, String> {
+        use crate::util::json::Json;
+        let j = Json::parse(s).map_err(|e| e.to_string())?;
+        let merges: Vec<(i32, i32)> = j
+            .get("merges")
+            .and_then(|m| m.as_arr())
+            .ok_or("missing merges")?
+            .iter()
+            .map(|p| {
+                let a = p.idx(0).and_then(|x| x.as_i64()).unwrap_or(0) as i32;
+                let b = p.idx(1).and_then(|x| x.as_i64()).unwrap_or(0) as i32;
+                (a, b)
+            })
+            .collect();
+        let mut vocab: Vec<Vec<u8>> = (0..=255u8).map(|b| vec![b]).collect();
+        vocab.push(b"\n".to_vec());
+        for &(a, b) in &merges {
+            let mut tok = vocab[a as usize].clone();
+            tok.extend_from_slice(&vocab[b as usize]);
+            vocab.push(tok);
+        }
+        let merge_rank = merges.iter().enumerate().map(|(i, &p)| (p, i)).collect();
+        Ok(Tokenizer { merges, merge_rank, vocab })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::{CorpusConfig, CorpusGen};
+
+    fn corpus() -> String {
+        CorpusGen::new(CorpusConfig { n_docs: 300, ..Default::default() }).generate().0
+    }
+
+    #[test]
+    fn trains_to_requested_vocab() {
+        let t = Tokenizer::train(&corpus(), 512);
+        assert_eq!(t.vocab_size(), 512);
+        assert_eq!(t.merges.len(), 512 - 257);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let text = corpus();
+        let t = Tokenizer::train(&text, 400);
+        let sample = &text[..2000.min(text.len())];
+        let ids = t.encode(sample);
+        let back = t.decode(&ids);
+        // whitespace normalizes to single spaces; compare word streams
+        let orig_words: Vec<&str> = sample.split_whitespace().collect();
+        let back_words: Vec<&str> = back.split_whitespace().collect();
+        assert_eq!(orig_words, back_words);
+    }
+
+    #[test]
+    fn compression_beats_bytes() {
+        let text = corpus();
+        let t = Tokenizer::train(&text, 512);
+        let ids = t.encode(&text);
+        let ratio = text.len() as f64 / ids.len() as f64;
+        assert!(ratio > 2.0, "bytes/token = {ratio}");
+    }
+
+    #[test]
+    fn all_ids_in_vocab_range() {
+        let text = corpus();
+        let t = Tokenizer::train(&text, 350);
+        let ids = t.encode(&text[..5000]);
+        assert!(ids.iter().all(|&i| (i as usize) < t.vocab_size()));
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_encoding() {
+        let text = corpus();
+        let t = Tokenizer::train(&text, 320);
+        let t2 = Tokenizer::from_json(&t.to_json()).unwrap();
+        let sample = &text[..1000];
+        assert_eq!(t.encode(sample), t2.encode(sample));
+    }
+
+    #[test]
+    fn training_is_deterministic() {
+        let text = corpus();
+        let a = Tokenizer::train(&text, 300);
+        let b = Tokenizer::train(&text, 300);
+        assert_eq!(a.merges, b.merges);
+    }
+
+    #[test]
+    fn newline_token_reserved() {
+        let t = Tokenizer::train(&corpus(), 300);
+        let ids = t.encode("abc\ndef");
+        assert!(ids.contains(&NEWLINE_TOKEN));
+        assert_eq!(t.decode(&[NEWLINE_TOKEN]), "\n");
+    }
+}

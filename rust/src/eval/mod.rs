@@ -1,0 +1,4 @@
+//! Evaluation: held-out perplexity (in runtime::state::eval_nll) and the
+//! downstream probe suite standing in for GLUE (DESIGN.md §Substitutions).
+
+pub mod probes;

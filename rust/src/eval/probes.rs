@@ -1,0 +1,307 @@
+//! GLUE-proxy probe suite: nine classification/regression probes over the
+//! pretrained model's pooled hidden states, one per planted corpus
+//! attribute (data::corpus::DocMeta).  Mirrors Table 1's GLUE block: if
+//! FP4 pretraining damaged the representations, linear probes on them
+//! score worse than the FP16 baseline's.
+//!
+//! The probe trainer is a from-scratch multinomial logistic regression
+//! (softmax + L2, full-batch gradient descent) on host tensors — simple,
+//! deterministic, and fast at (N ≤ few hundred, d ≤ 512).
+
+use crate::data::corpus::{DocMeta, N_TEMPLATES, N_TOPICS};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// The nine probe tasks (GLUE-proxy names in parentheses).
+pub const PROBES: &[(&str, &str)] = &[
+    ("topic", "mnli-proxy: 8-way topic id"),
+    ("sentiment", "sst2-proxy: binary sentiment"),
+    ("formality", "cola-proxy-style: binary register"),
+    ("template", "structure id (4-way)"),
+    ("grammatical", "cola-proxy: corrupted word order"),
+    ("length", "stsb-proxy: length class (3-way ordinal)"),
+    ("rare_word", "wnli-proxy: tail-word presence"),
+    ("topic_pair", "qqp-proxy: same-topic pair detection"),
+    ("parity", "control: random labels (should stay at chance)"),
+];
+
+pub fn label_of(probe: &str, meta: &DocMeta, rng: &mut Rng) -> usize {
+    match probe {
+        "topic" => meta.topic as usize,
+        "sentiment" => meta.sentiment as usize,
+        "formality" => meta.formality as usize,
+        "template" => meta.template as usize,
+        "grammatical" => meta.grammatical as usize,
+        "length" => meta.length_class as usize,
+        "rare_word" => meta.rare_word as usize,
+        _ => rng.below(2) as usize, // parity control
+    }
+}
+
+pub fn n_classes(probe: &str) -> usize {
+    match probe {
+        "topic" => N_TOPICS,
+        "template" => N_TEMPLATES,
+        "length" => 3,
+        _ => 2,
+    }
+}
+
+/// Multinomial logistic regression: W (d, C), b (C).
+pub struct Probe {
+    pub w: Tensor,
+    pub b: Vec<f32>,
+    pub classes: usize,
+}
+
+pub struct ProbeResult {
+    pub name: String,
+    pub accuracy: f64,
+    pub chance: f64,
+}
+
+fn softmax_rows(logits: &mut [f32], n: usize, c: usize) {
+    for r in 0..n {
+        let row = &mut logits[r * c..(r + 1) * c];
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut z = 0.0;
+        for x in row.iter_mut() {
+            *x = (*x - m).exp();
+            z += *x;
+        }
+        for x in row.iter_mut() {
+            *x /= z;
+        }
+    }
+}
+
+impl Probe {
+    /// Full-batch GD with L2; features should be roughly unit scale.
+    pub fn fit(x: &Tensor, y: &[usize], classes: usize, epochs: usize, lr: f32) -> Probe {
+        let (n, d) = (x.shape[0], x.shape[1]);
+        assert_eq!(n, y.len());
+        let mut w = Tensor::zeros(&[d, classes]);
+        let mut b = vec![0.0f32; classes];
+        let l2 = 1e-3f32;
+        for _ in 0..epochs {
+            // logits = x @ w + b
+            let mut logits = x.matmul(&w);
+            for r in 0..n {
+                for c in 0..classes {
+                    logits.data[r * classes + c] += b[c];
+                }
+            }
+            softmax_rows(&mut logits.data, n, classes);
+            // grad = x^T (p - onehot) / n
+            for (r, &label) in y.iter().enumerate() {
+                logits.data[r * classes + label] -= 1.0;
+            }
+            let mut gw = vec![0.0f32; d * classes];
+            let mut gb = vec![0.0f32; classes];
+            for r in 0..n {
+                for c in 0..classes {
+                    let g = logits.data[r * classes + c] / n as f32;
+                    gb[c] += g;
+                    if g != 0.0 {
+                        for k in 0..d {
+                            gw[k * classes + c] += x.data[r * d + k] * g;
+                        }
+                    }
+                }
+            }
+            for (wv, g) in w.data.iter_mut().zip(&gw) {
+                *wv -= lr * (g + l2 * *wv);
+            }
+            for (bv, g) in b.iter_mut().zip(&gb) {
+                *bv -= lr * g;
+            }
+        }
+        Probe { w, b, classes }
+    }
+
+    pub fn predict(&self, x: &Tensor) -> Vec<usize> {
+        let n = x.shape[0];
+        let mut logits = x.matmul(&self.w);
+        for r in 0..n {
+            for c in 0..self.classes {
+                logits.data[r * self.classes + c] += self.b[c];
+            }
+        }
+        (0..n)
+            .map(|r| {
+                let row = &logits.data[r * self.classes..(r + 1) * self.classes];
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0
+            })
+            .collect()
+    }
+
+    pub fn accuracy(&self, x: &Tensor, y: &[usize]) -> f64 {
+        let pred = self.predict(x);
+        pred.iter().zip(y).filter(|(a, b)| a == b).count() as f64 / y.len() as f64
+    }
+}
+
+/// Normalize features to zero mean / unit variance per dimension (fitted
+/// on train, applied to both splits).
+pub fn standardize(train: &mut Tensor, test: &mut Tensor) {
+    let (n, d) = (train.shape[0], train.shape[1]);
+    for k in 0..d {
+        let mut mu = 0.0f64;
+        for r in 0..n {
+            mu += train.data[r * d + k] as f64;
+        }
+        mu /= n as f64;
+        let mut var = 0.0f64;
+        for r in 0..n {
+            let dv = train.data[r * d + k] as f64 - mu;
+            var += dv * dv;
+        }
+        let sd = (var / n as f64).sqrt().max(1e-6) as f32;
+        let mu = mu as f32;
+        for r in 0..n {
+            train.data[r * d + k] = (train.data[r * d + k] - mu) / sd;
+        }
+        let nt = test.shape[0];
+        for r in 0..nt {
+            test.data[r * d + k] = (test.data[r * d + k] - mu) / sd;
+        }
+    }
+}
+
+/// Run one probe: split features/labels 80/20, fit, report test accuracy.
+pub fn run_probe(name: &str, features: &Tensor, metas: &[DocMeta], seed: u64) -> ProbeResult {
+    let n = features.shape[0];
+    let d = features.shape[1];
+    assert_eq!(n, metas.len());
+    let mut rng = Rng::new(seed ^ 0xBEEF);
+    let labels: Vec<usize> = metas.iter().map(|m| label_of(name, m, &mut rng)).collect();
+    let classes = n_classes(name);
+    // pair probe: concatenate feature pairs, label = same topic
+    let (feats, labels): (Tensor, Vec<usize>) = if name == "topic_pair" {
+        let mut data = Vec::new();
+        let mut ls = Vec::new();
+        for i in 0..n / 2 {
+            let a = i;
+            // half the pairs share topic, half random
+            let b = if i % 2 == 0 {
+                match (0..n).find(|&j| j != a && metas[j].topic == metas[a].topic) {
+                    Some(j) => j,
+                    None => (a + 1) % n,
+                }
+            } else {
+                (a + 7 * i + 1) % n
+            };
+            data.extend_from_slice(&features.data[a * d..(a + 1) * d]);
+            data.extend_from_slice(&features.data[b * d..(b + 1) * d]);
+            ls.push((metas[a].topic == metas[b].topic) as usize);
+        }
+        (Tensor::from_vec(&[n / 2, 2 * d], data), ls)
+    } else {
+        (features.clone(), labels)
+    };
+
+    let n2 = feats.shape[0];
+    let d2 = feats.shape[1];
+    let mut idx: Vec<usize> = (0..n2).collect();
+    rng.shuffle(&mut idx);
+    let split = (n2 * 4) / 5;
+    let take = |ids: &[usize]| -> (Tensor, Vec<usize>) {
+        let mut data = Vec::with_capacity(ids.len() * d2);
+        let mut ys = Vec::with_capacity(ids.len());
+        for &i in ids {
+            data.extend_from_slice(&feats.data[i * d2..(i + 1) * d2]);
+            ys.push(labels[i]);
+        }
+        (Tensor::from_vec(&[ids.len(), d2], data), ys)
+    };
+    let (mut xtr, ytr) = take(&idx[..split]);
+    let (mut xte, yte) = take(&idx[split..]);
+    standardize(&mut xtr, &mut xte);
+    let probe = Probe::fit(&xtr, &ytr, classes, 200, 0.5);
+    // chance = majority-class frequency on test
+    let mut counts = vec![0usize; classes];
+    for &y in &yte {
+        counts[y] += 1;
+    }
+    let chance = *counts.iter().max().unwrap() as f64 / yte.len() as f64;
+    ProbeResult { name: name.to_string(), accuracy: probe.accuracy(&xte, &yte), chance }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synthetic_features(n: usize, d: usize, metas: &[DocMeta], signal: f32) -> Tensor {
+        // features linearly encode topic and sentiment + noise
+        let mut rng = Rng::new(42);
+        let mut data = vec![0.0f32; n * d];
+        for (i, m) in metas.iter().enumerate() {
+            for k in 0..d {
+                let mut v = rng.normal_f32(0.0, 1.0);
+                if k < N_TOPICS {
+                    v += signal * ((m.topic as usize == k) as u32 as f32);
+                }
+                if k == N_TOPICS {
+                    v += signal * m.sentiment as f32;
+                }
+                data[i * d + k] = v;
+            }
+        }
+        Tensor::from_vec(&[n, d], data)
+    }
+
+    fn metas(n: usize) -> Vec<DocMeta> {
+        let mut rng = Rng::new(7);
+        (0..n)
+            .map(|_| DocMeta {
+                topic: rng.below(N_TOPICS as u64) as u8,
+                sentiment: rng.below(2) as u8,
+                formality: rng.below(2) as u8,
+                template: rng.below(N_TEMPLATES as u64) as u8,
+                grammatical: rng.below(2) as u8,
+                length_class: rng.below(3) as u8,
+                rare_word: rng.below(2) as u8,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn probe_learns_linear_signal() {
+        let ms = metas(400);
+        let x = synthetic_features(400, 32, &ms, 3.0);
+        let r = run_probe("topic", &x, &ms, 0);
+        assert!(r.accuracy > 0.8, "acc {}", r.accuracy);
+        let r2 = run_probe("sentiment", &x, &ms, 0);
+        assert!(r2.accuracy > 0.8, "acc {}", r2.accuracy);
+    }
+
+    #[test]
+    fn weaker_signal_scores_lower() {
+        let ms = metas(400);
+        let strong = run_probe("topic", &synthetic_features(400, 32, &ms, 3.0), &ms, 0);
+        let weak = run_probe("topic", &synthetic_features(400, 32, &ms, 0.5), &ms, 0);
+        assert!(strong.accuracy > weak.accuracy + 0.05, "{} vs {}", strong.accuracy, weak.accuracy);
+    }
+
+    #[test]
+    fn control_probe_stays_near_chance() {
+        let ms = metas(400);
+        let x = synthetic_features(400, 32, &ms, 3.0);
+        let r = run_probe("parity", &x, &ms, 0);
+        assert!((r.accuracy - 0.5).abs() < 0.15, "{}", r.accuracy);
+    }
+
+    #[test]
+    fn all_probe_names_resolve() {
+        let ms = metas(64);
+        let mut rng = Rng::new(0);
+        for (name, _) in PROBES {
+            let _ = label_of(name, &ms[0], &mut rng);
+            assert!(n_classes(name) >= 2);
+        }
+    }
+}

@@ -1,0 +1,160 @@
+//! Quantization-error analysis: underflow/overflow rates, SQNR, MSE —
+//! the machinery behind Fig. 1(b) ("8.6 % difference between FP4 and
+//! FP8/FP16" gradients; "~18 %" activation underflow).
+
+use super::{FpFormat, Granularity};
+
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct QuantErrorStats {
+    /// Fraction of nonzero inputs that quantize to exactly 0 (underflow).
+    pub underflow: f64,
+    /// Fraction of inputs that hit the saturating clamp (overflow).
+    pub overflow: f64,
+    /// Mean squared error.
+    pub mse: f64,
+    /// Signal-to-quantization-noise ratio in dB (inf when error is 0).
+    pub sqnr_db: f64,
+    /// Mean |relative| error over nonzero inputs.
+    pub mean_rel_err: f64,
+}
+
+/// Quantize `x` (viewed as rows × cols) at the given scale granularity and
+/// measure the damage.
+pub fn measure(
+    x: &[f32],
+    rows: usize,
+    cols: usize,
+    fmt: FpFormat,
+    g: Granularity,
+) -> QuantErrorStats {
+    let q = super::fake_quant_rows(x, rows, cols, fmt, g);
+    let mut under = 0u64;
+    let mut over = 0u64;
+    let mut nonzero = 0u64;
+    let mut se = 0.0f64;
+    let mut sig = 0.0f64;
+    let mut rel = 0.0f64;
+    // overflow detection: against the per-group clamp threshold
+    for (&a, &b) in x.iter().zip(&q) {
+        let e = (a - b) as f64;
+        se += e * e;
+        sig += (a as f64) * (a as f64);
+        if a != 0.0 {
+            nonzero += 1;
+            rel += (e.abs() / a.abs() as f64).min(1.0);
+            if b == 0.0 {
+                under += 1;
+            }
+        }
+        if a.abs() > b.abs() && b.abs() > 0.0 && (a.abs() / b.abs()) > 1.04 && b.abs() >= fmt.max_value * 0.99 {
+            over += 1;
+        }
+    }
+    let n = x.len().max(1) as f64;
+    let mse = se / n;
+    QuantErrorStats {
+        underflow: if nonzero == 0 { 0.0 } else { under as f64 / nonzero as f64 },
+        overflow: over as f64 / n,
+        mse,
+        sqnr_db: if se == 0.0 { f64::INFINITY } else { 10.0 * (sig / se).log10() },
+        mean_rel_err: if nonzero == 0 { 0.0 } else { rel / nonzero as f64 },
+    }
+}
+
+/// Fraction of values whose FP-`a` and FP-`b` quantizations differ by more
+/// than `tol` relative — the paper's "difference between FP4 and FP8/FP16"
+/// measure for Fig. 1(b).
+pub fn disagreement_rate(
+    x: &[f32],
+    rows: usize,
+    cols: usize,
+    a: FpFormat,
+    b: FpFormat,
+    g: Granularity,
+    tol: f32,
+) -> f64 {
+    let qa = super::fake_quant_rows(x, rows, cols, a, g);
+    let qb = super::fake_quant_rows(x, rows, cols, b, g);
+    let mut diff = 0u64;
+    let mut nz = 0u64;
+    for (&va, (&vb, &orig)) in qa.iter().zip(qb.iter().zip(x)) {
+        if orig == 0.0 {
+            continue;
+        }
+        nz += 1;
+        let denom = orig.abs().max(1e-30);
+        if ((va - vb).abs() / denom) > tol {
+            diff += 1;
+        }
+    }
+    if nz == 0 {
+        0.0
+    } else {
+        diff as f64 / nz as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::{FP4_E2M1, FP8_E4M3};
+    use crate::util::rng::Rng;
+
+    fn gaussian(n: usize, std: f32, seed: u64) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| r.normal_f32(0.0, std)).collect()
+    }
+
+    #[test]
+    fn fp4_underflows_more_than_fp8() {
+        // heavy-tailed data: many small values vanish at FP4's 16-point grid
+        let mut x = gaussian(4096, 1.0, 1);
+        for (i, v) in x.iter_mut().enumerate() {
+            if i % 2 == 0 {
+                *v *= 0.01; // small-magnitude cluster
+            }
+        }
+        let s4 = measure(&x, 1, 4096, FP4_E2M1, Granularity::PerTensor);
+        let s8 = measure(&x, 1, 4096, FP8_E4M3, Granularity::PerTensor);
+        assert!(s4.underflow > s8.underflow * 3.0, "{s4:?} {s8:?}");
+        assert!(s4.sqnr_db < s8.sqnr_db);
+    }
+
+    #[test]
+    fn finer_granularity_reduces_error() {
+        // rows with very different scales: per-row must beat per-tensor
+        let mut x = gaussian(2048, 1.0, 2);
+        for v in x[1024..].iter_mut() {
+            *v *= 1e-3;
+        }
+        let coarse = measure(&x, 2, 1024, FP4_E2M1, Granularity::PerTensor);
+        let fine = measure(&x, 2, 1024, FP4_E2M1, Granularity::PerRow);
+        // the small-magnitude row underflows under the shared scale but
+        // survives with its own scale
+        assert!(fine.underflow < coarse.underflow / 3.0, "{fine:?} {coarse:?}");
+        assert!(fine.mean_rel_err < coarse.mean_rel_err / 2.0);
+        let finer = measure(&x, 2, 1024, FP4_E2M1, Granularity::PerBlock(128));
+        assert!(finer.underflow <= fine.underflow + 0.01);
+    }
+
+    #[test]
+    fn exact_data_has_no_error() {
+        let x = vec![0.0, 3.0, -6.0, 1.5, 0.5];
+        // scale = 1 when absmax == max_value; all inputs lie on the grid
+        let s = measure(&x, 1, 5, FP4_E2M1, Granularity::PerTensor);
+        assert_eq!(s.mse, 0.0);
+        assert_eq!(s.underflow, 0.0);
+        assert!(s.sqnr_db.is_infinite());
+    }
+
+    #[test]
+    fn disagreement_rate_behaves() {
+        let x = gaussian(8192, 0.02, 3); // gradient-like scale (paper Fig 1b)
+        let d = disagreement_rate(&x, 1, 8192, FP4_E2M1, FP8_E4M3,
+                                  Granularity::PerTensor, 0.05);
+        assert!(d > 0.02 && d < 0.9, "{d}");
+        let same = disagreement_rate(&x, 1, 8192, FP4_E2M1, FP4_E2M1,
+                                     Granularity::PerTensor, 0.05);
+        assert_eq!(same, 0.0);
+    }
+}

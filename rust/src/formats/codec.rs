@@ -1,0 +1,194 @@
+//! Bitwise encode/decode for the narrow formats, plus packed storage
+//! (two FP4 codes per byte) — the basis of compressed checkpoints and the
+//! Fig. 1(b) underflow analysis.
+//!
+//! Code layout (value bits, no payloads): `s | eeee | mmm` from MSB.
+//! Encoding is value-preserving for on-grid inputs and RNE otherwise;
+//! decode(encode(x)) == quantize(x) for all finite x (property-tested).
+
+use super::{exp2i, frexp_exp, FpFormat};
+
+/// Encode one f32 into the format's code (low `bits()` bits of the u8).
+/// Saturates out-of-range magnitudes to ±max; NaN encodes as +max (the
+/// formats here are used post-scale where NaN would already be a bug).
+pub fn encode(fmt: FpFormat, x: f32) -> u8 {
+    let bits = fmt.bits();
+    debug_assert!(bits <= 8);
+    let sign = if x.is_sign_negative() { 1u8 << (bits - 1) } else { 0 };
+    let q = fmt.quantize(if x.is_nan() { fmt.max_value } else { x });
+    let a = q.abs();
+    if a == 0.0 {
+        return sign; // ±0 keep the sign bit (decode maps both to 0.0)
+    }
+    let e_val = (frexp_exp(a) - 1).max(1 - fmt.bias); // unbiased exponent
+    let man_scale = exp2i(e_val - fmt.man as i32);
+    let frac = a / man_scale; // in [2^man, 2^(man+1)) for normals
+    let e_field: u8;
+    let m_field: u8;
+    if e_val == 1 - fmt.bias && frac < (1u32 << fmt.man) as f32 {
+        // subnormal: e field 0, mantissa = a / min_subnormal
+        e_field = 0;
+        m_field = frac as u8;
+    } else {
+        e_field = (e_val + fmt.bias) as u8;
+        m_field = (frac as u32 - (1 << fmt.man)) as u8;
+    }
+    sign | (e_field << fmt.man) | m_field
+}
+
+/// Decode a code (low bits) back to f32.
+pub fn decode(fmt: FpFormat, code: u8) -> f32 {
+    let bits = fmt.bits();
+    let sign = if code >> (bits - 1) & 1 == 1 { -1.0f32 } else { 1.0 };
+    let e_field = (code >> fmt.man) & ((1 << fmt.exp) - 1);
+    let m_field = code & ((1 << fmt.man) - 1);
+    if e_field == 0 {
+        sign * m_field as f32 * fmt.min_subnormal()
+    } else {
+        let v = (1.0 + m_field as f32 / (1u32 << fmt.man) as f32)
+            * exp2i(e_field as i32 - fmt.bias);
+        sign * v.min(fmt.max_value)
+    }
+}
+
+/// Pack FP4 codes two-per-byte (low nibble first).
+pub fn pack_fp4(codes: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity((codes.len() + 1) / 2);
+    for pair in codes.chunks(2) {
+        let lo = pair[0] & 0x0F;
+        let hi = if pair.len() > 1 { pair[1] & 0x0F } else { 0 };
+        out.push(lo | (hi << 4));
+    }
+    out
+}
+
+/// Unpack `n` FP4 codes.
+pub fn unpack_fp4(packed: &[u8], n: usize) -> Vec<u8> {
+    let mut out = Vec::with_capacity(n);
+    for (i, &b) in packed.iter().enumerate() {
+        out.push(b & 0x0F);
+        if 2 * i + 1 < n {
+            out.push(b >> 4);
+        }
+        if out.len() >= n {
+            break;
+        }
+    }
+    out.truncate(n);
+    out
+}
+
+/// Encode a whole slice; returns (codes, one per value).
+pub fn encode_slice(fmt: FpFormat, xs: &[f32]) -> Vec<u8> {
+    xs.iter().map(|&x| encode(fmt, x)).collect()
+}
+
+pub fn decode_slice(fmt: FpFormat, codes: &[u8]) -> Vec<f32> {
+    codes.iter().map(|&c| decode(fmt, c)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::{FP4_E2M1, FP8_E4M3, FP8_E5M2};
+    use crate::prop_assert;
+    use crate::util::proptest::prop_check;
+
+    #[test]
+    fn fp4_exhaustive_roundtrip() {
+        // all 16 codes decode then re-encode to the same code (modulo -0)
+        for code in 0u8..16 {
+            let v = decode(FP4_E2M1, code);
+            let back = encode(FP4_E2M1, v);
+            if v == 0.0 {
+                assert_eq!(back & 0x7, 0);
+            } else {
+                assert_eq!(back, code, "code {code} -> {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn fp8_exhaustive_roundtrip() {
+        for fmt in [FP8_E4M3, FP8_E5M2] {
+            for code in 0u8..=255 {
+                let v = decode(fmt, code);
+                if v.abs() > fmt.max_value {
+                    continue; // reserved/NaN codes decode saturated
+                }
+                let back = encode(fmt, v);
+                if v == 0.0 {
+                    assert_eq!(back & 0x7F, 0, "{} code {code}", fmt.name);
+                } else {
+                    assert_eq!(decode(fmt, back), v, "{} code {code} v {v}", fmt.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn decode_encode_equals_quantize() {
+        for fmt in [FP4_E2M1, FP8_E4M3, FP8_E5M2] {
+            prop_check("decode∘encode == quantize", 3000, |c| {
+                let x = c.f32_in(-fmt.max_value * 2.0, fmt.max_value * 2.0);
+                let via_codec = decode(fmt, encode(fmt, x));
+                let via_grid = fmt.quantize(x);
+                prop_assert!(
+                    via_codec == via_grid,
+                    "{}: x={x} codec={via_codec} grid={via_grid}",
+                    fmt.name
+                );
+                Ok(())
+            });
+        }
+    }
+
+    #[test]
+    fn known_fp4_codes() {
+        // E2M1: 0x0=0, 0x1=0.5, 0x2=1.0, 0x3=1.5, 0x4=2, 0x5=3, 0x6=4, 0x7=6
+        let want = [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0];
+        for (code, &w) in want.iter().enumerate() {
+            assert_eq!(decode(FP4_E2M1, code as u8), w);
+            assert_eq!(decode(FP4_E2M1, code as u8 | 0x8), -w);
+        }
+    }
+
+    #[test]
+    fn known_fp8_codes() {
+        assert_eq!(decode(FP8_E4M3, 0x01), 2.0f32.powi(-9)); // min subnormal
+        assert_eq!(decode(FP8_E4M3, 0x08), 2.0f32.powi(-6)); // min normal
+        assert_eq!(decode(FP8_E4M3, 0x7E), 448.0); // max (0x7F is NaN slot)
+        assert_eq!(encode(FP8_E4M3, 448.0), 0x7E);
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        prop_check("fp4 pack roundtrip", 300, |c| {
+            let n = c.usize_in(0, 257);
+            let codes: Vec<u8> = (0..n).map(|_| (c.rng.next_u32() & 0xF) as u8).collect();
+            let packed = pack_fp4(&codes);
+            prop_assert!(packed.len() == (n + 1) / 2);
+            prop_assert!(unpack_fp4(&packed, n) == codes);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn slice_roundtrip_wild_values() {
+        prop_check("slice codec", 200, |c| {
+            let xs = c.f32_vec_wild(1, 300);
+            for fmt in [FP4_E2M1, FP8_E4M3] {
+                let dec = decode_slice(fmt, &encode_slice(fmt, &xs));
+                for (&x, &d) in xs.iter().zip(&dec) {
+                    prop_assert!(d == fmt.quantize(x), "{}: {x} -> {d}", fmt.name);
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn nan_saturates() {
+        assert_eq!(decode(FP4_E2M1, encode(FP4_E2M1, f32::NAN)), 6.0);
+    }
+}

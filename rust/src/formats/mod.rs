@@ -1,0 +1,328 @@
+//! Narrow floating-point formats (FP4 E2M1, FP8 E4M3, FP8 E5M2, BF16):
+//! grid projection, bitwise encode/decode, packed storage, and error
+//! analysis.  The rust mirror of `python/compile/formats.py` — the two are
+//! kept bit-identical (tests/cross_layer.rs checks against artifacts).
+
+pub mod analysis;
+pub mod codec;
+
+/// A narrow float format: 1 sign bit, `exp` exponent bits (bias `bias`),
+/// `man` mantissa bits, saturating at `max_value` (may be below the naive
+/// formula where top codes are reserved, as in E4M3's NaN).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FpFormat {
+    pub name: &'static str,
+    pub exp: u32,
+    pub man: u32,
+    pub bias: i32,
+    pub max_value: f32,
+}
+
+/// FP4 E2M1 (OCP MX / NVFP4 element): ±{0, .5, 1, 1.5, 2, 3, 4, 6}.
+pub const FP4_E2M1: FpFormat =
+    FpFormat { name: "fp4_e2m1", exp: 2, man: 1, bias: 1, max_value: 6.0 };
+
+/// FP8 E4M3 (Micikevicius et al. 2022): S.1111.111 is NaN → max 448.
+pub const FP8_E4M3: FpFormat =
+    FpFormat { name: "fp8_e4m3", exp: 4, man: 3, bias: 7, max_value: 448.0 };
+
+/// FP8 E5M2: IEEE-like with inf; max finite 57344.
+pub const FP8_E5M2: FpFormat =
+    FpFormat { name: "fp8_e5m2", exp: 5, man: 2, bias: 15, max_value: 57344.0 };
+
+impl FpFormat {
+    pub fn by_name(name: &str) -> Option<FpFormat> {
+        match name {
+            "fp4" | "fp4_e2m1" => Some(FP4_E2M1),
+            "fp8" | "fp8_e4m3" => Some(FP8_E4M3),
+            "fp8_e5m2" => Some(FP8_E5M2),
+            _ => None,
+        }
+    }
+
+    pub fn bits(&self) -> u32 {
+        1 + self.exp + self.man
+    }
+
+    pub fn min_normal(&self) -> f32 {
+        exp2i(1 - self.bias)
+    }
+
+    pub fn min_subnormal(&self) -> f32 {
+        exp2i(1 - self.bias - self.man as i32)
+    }
+
+    /// Number of distinct non-negative representable values.
+    pub fn grid_size(&self) -> usize {
+        self.grid().len()
+    }
+
+    /// All non-negative representable values, ascending (incl. 0).
+    pub fn grid(&self) -> Vec<f32> {
+        let mut g = vec![0.0f32];
+        for m in 1..(1u32 << self.man) {
+            g.push(m as f32 * self.min_subnormal());
+        }
+        for e in 1..(1i32 << self.exp) {
+            for m in 0..(1u32 << self.man) {
+                let v = (1.0 + m as f32 / (1u32 << self.man) as f32) * exp2i(e - self.bias);
+                if v <= self.max_value {
+                    g.push(v);
+                }
+            }
+        }
+        g
+    }
+
+    /// Round `x` to the nearest representable value (RNE), saturating.
+    /// Mirror of python `quantize_to_grid` (paper Eq. 5-7).
+    pub fn quantize(&self, x: f32) -> f32 {
+        if x == 0.0 || x.is_nan() {
+            return if x.is_nan() { f32::NAN } else { 0.0 };
+        }
+        let ax = x.abs();
+        // Binade exponent via bit extraction (exact, like jnp.frexp).
+        let e_raw = frexp_exp(ax); // ax = m * 2^e_raw, m in [0.5, 1)
+        let e = (e_raw - 1).max(1 - self.bias);
+        let v = exp2i(e - self.man as i32); // quantization step
+        let q = round_half_even(x / v) * v;
+        q.clamp(-self.max_value, self.max_value)
+    }
+}
+
+/// 2^k as f32 (exact for the exponent ranges these formats use).
+#[inline]
+pub fn exp2i(k: i32) -> f32 {
+    if k >= -126 {
+        f32::from_bits(((k + 127) as u32) << 23)
+    } else {
+        // subnormal f32 range (not reached by supported formats' grids)
+        (2.0f64).powi(k) as f32
+    }
+}
+
+/// Exponent e with |x| = m * 2^e, m in [0.5, 1) — bit-exact frexp.
+#[inline]
+pub fn frexp_exp(ax: f32) -> i32 {
+    debug_assert!(ax > 0.0);
+    let bits = ax.to_bits();
+    let biased = ((bits >> 23) & 0xFF) as i32;
+    if biased == 0 {
+        // subnormal f32 input: normalize via leading zeros of the mantissa
+        let man = bits & 0x7F_FFFF;
+        let shift = man.leading_zeros() as i32 - 8; // 9 header bits - 1
+        -126 - shift
+    } else {
+        biased - 126
+    }
+}
+
+/// Round-half-to-even, matching jnp.round / XLA round_nearest_even.
+#[inline]
+pub fn round_half_even(x: f32) -> f32 {
+    x.round_ties_even()
+}
+
+/// Fake quantization scale granularity (paper §3.2).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Granularity {
+    PerTensor,
+    /// One scale per slice orthogonal to the contraction axis.
+    PerRow,
+    /// One scale per `block`-long segment of the contraction axis.
+    PerBlock(usize),
+}
+
+/// Fake-quantize a row-major (rows, cols) matrix along its columns axis
+/// with absmax scaling — the rust mirror of `fake_quant(axis=-1)`.
+pub fn fake_quant_rows(x: &[f32], rows: usize, cols: usize, fmt: FpFormat, g: Granularity) -> Vec<f32> {
+    assert_eq!(x.len(), rows * cols);
+    let mut out = vec![0.0f32; x.len()];
+    match g {
+        Granularity::PerTensor => {
+            let s = scale_of(x.iter().copied(), fmt);
+            for (o, &v) in out.iter_mut().zip(x) {
+                *o = fmt.quantize(v / s) * s;
+            }
+        }
+        Granularity::PerRow => {
+            for r in 0..rows {
+                let row = &x[r * cols..(r + 1) * cols];
+                let s = scale_of(row.iter().copied(), fmt);
+                for (o, &v) in out[r * cols..(r + 1) * cols].iter_mut().zip(row) {
+                    *o = fmt.quantize(v / s) * s;
+                }
+            }
+        }
+        Granularity::PerBlock(b) => {
+            let b = if cols % b == 0 { b } else { cols }; // degenerate fallback (mirrors python)
+            for r in 0..rows {
+                for blk in 0..cols / b {
+                    let seg = &x[r * cols + blk * b..r * cols + blk * b + b];
+                    let s = scale_of(seg.iter().copied(), fmt);
+                    let dst = &mut out[r * cols + blk * b..r * cols + blk * b + b];
+                    for (o, &v) in dst.iter_mut().zip(seg) {
+                        *o = fmt.quantize(v / s) * s;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+fn scale_of(xs: impl Iterator<Item = f32>, fmt: FpFormat) -> f32 {
+    let absmax = xs.fold(0.0f32, |a, x| a.max(x.abs()));
+    if absmax == 0.0 {
+        1.0
+    } else {
+        absmax / fmt.max_value
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::proptest::prop_check;
+
+    #[test]
+    fn fp4_grid_exact() {
+        assert_eq!(FP4_E2M1.grid(), vec![0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0]);
+    }
+
+    #[test]
+    fn fp8_extremes() {
+        let g = FP8_E4M3.grid();
+        assert_eq!(*g.last().unwrap(), 448.0);
+        assert_eq!(g[1], FP8_E4M3.min_subnormal());
+        assert_eq!(FP8_E4M3.min_subnormal(), 2.0f32.powi(-9));
+        assert_eq!(*FP8_E5M2.grid().last().unwrap(), 57344.0);
+    }
+
+    #[test]
+    fn quantize_grid_idempotent() {
+        for fmt in [FP4_E2M1, FP8_E4M3, FP8_E5M2] {
+            for v in fmt.grid() {
+                assert_eq!(fmt.quantize(v), v, "{} {v}", fmt.name);
+                assert_eq!(fmt.quantize(-v), -v, "{} -{v}", fmt.name);
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_matches_nearest_neighbour() {
+        // brute-force oracle: nearest grid value, ties to even index
+        for fmt in [FP4_E2M1, FP8_E4M3] {
+            let pos = fmt.grid();
+            let mut grid: Vec<f32> = pos.iter().rev().map(|v| -v).collect();
+            grid.extend(pos.iter().skip(1));
+            prop_check(fmt.name, 2000, |c| {
+                let x = c.f32_in(-fmt.max_value * 1.5, fmt.max_value * 1.5);
+                let got = fmt.quantize(x);
+                // nearest neighbour distance check
+                let best = grid
+                    .iter()
+                    .map(|&g| (x - g).abs())
+                    .fold(f32::INFINITY, f32::min);
+                prop_assert!(
+                    (x - got).abs() <= best + best * 1e-6,
+                    "x={x} got={got} best_dist={best}"
+                );
+                Ok(())
+            });
+        }
+    }
+
+    #[test]
+    fn ties_round_to_even() {
+        // FP4 midpoints: 0.25->0 (even), 0.75->1 (1.0 has even mantissa0),
+        // 1.25->1.0? grid 1.0,1.5: tie at 1.25 → even mantissa = 1.0.
+        assert_eq!(FP4_E2M1.quantize(0.25), 0.0);
+        assert_eq!(FP4_E2M1.quantize(1.25), 1.0);
+        assert_eq!(FP4_E2M1.quantize(1.75), 2.0);
+        assert_eq!(FP4_E2M1.quantize(2.5), 2.0);
+        assert_eq!(FP4_E2M1.quantize(3.5), 4.0);
+        assert_eq!(FP4_E2M1.quantize(5.0), 4.0);
+        assert_eq!(FP4_E2M1.quantize(-5.0), -4.0);
+    }
+
+    #[test]
+    fn saturates_at_max() {
+        assert_eq!(FP4_E2M1.quantize(100.0), 6.0);
+        assert_eq!(FP4_E2M1.quantize(-100.0), -6.0);
+        assert_eq!(FP8_E4M3.quantize(460.0), 448.0);
+        assert_eq!(FP8_E4M3.quantize(1e9), 448.0);
+    }
+
+    #[test]
+    fn zero_and_signs() {
+        assert_eq!(FP4_E2M1.quantize(0.0), 0.0);
+        for fmt in [FP4_E2M1, FP8_E4M3, FP8_E5M2] {
+            prop_check("sign symmetry", 500, |c| {
+                let x = c.f32_in(0.0, fmt.max_value * 2.0);
+                prop_assert!(fmt.quantize(-x) == -fmt.quantize(x));
+                Ok(())
+            });
+        }
+    }
+
+    #[test]
+    fn frexp_exact() {
+        assert_eq!(frexp_exp(1.0), 1);
+        assert_eq!(frexp_exp(0.5), 0);
+        assert_eq!(frexp_exp(0.75), 0);
+        assert_eq!(frexp_exp(2.0f32.powi(-16)), -15);
+        assert_eq!(frexp_exp(6.0), 3);
+        assert_eq!(frexp_exp(448.0), 9);
+    }
+
+    #[test]
+    fn exp2i_exact() {
+        for k in -30..30 {
+            assert_eq!(exp2i(k), (2.0f64).powi(k) as f32);
+        }
+    }
+
+    #[test]
+    fn fake_quant_per_block_scales_independently() {
+        let mut x = vec![0.0f32; 256];
+        for (i, v) in x.iter_mut().enumerate() {
+            *v = if i < 128 { 1.0 + i as f32 / 128.0 } else { 100.0 + i as f32 };
+        }
+        let q = fake_quant_rows(&x, 1, 256, FP4_E2M1, Granularity::PerBlock(128));
+        // absmax of each block survives exactly
+        let am1 = x[..128].iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        let am2 = x[128..].iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        assert_eq!(q[..128].iter().fold(0.0f32, |a, &v| a.max(v.abs())), am1);
+        assert_eq!(q[128..].iter().fold(0.0f32, |a, &v| a.max(v.abs())), am2);
+    }
+
+    #[test]
+    fn fake_quant_zero_rows_stay_zero() {
+        let x = vec![0.0f32; 64];
+        for g in [Granularity::PerTensor, Granularity::PerRow, Granularity::PerBlock(32)] {
+            assert!(fake_quant_rows(&x, 2, 32, FP4_E2M1, g).iter().all(|&v| v == 0.0));
+        }
+    }
+
+    #[test]
+    fn fake_quant_error_bound_per_row() {
+        prop_check("fq error bound", 200, |c| {
+            let rows = c.usize_in(1, 8);
+            let cols = 64;
+            let x = c.f32_vec(rows * cols, rows * cols, -50.0, 50.0);
+            let q = fake_quant_rows(&x, rows, cols, FP4_E2M1, Granularity::PerRow);
+            for r in 0..rows {
+                let row = &x[r * cols..(r + 1) * cols];
+                let s = row.iter().fold(0.0f32, |a, &v| a.max(v.abs())) / 6.0;
+                let qrow = &q[r * cols..(r + 1) * cols];
+                for (a, b) in row.iter().zip(qrow) {
+                    // max grid gap after scaling = 2.0 * s; RNE error ≤ half
+                    prop_assert!((a - b).abs() <= s * 1.0 + 1e-6, "err {} s {}", (a - b).abs(), s);
+                }
+            }
+            Ok(())
+        });
+    }
+}

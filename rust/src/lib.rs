@@ -1,0 +1,27 @@
+//! fp4train: a reproduction of "Towards Efficient Pre-training: Exploring
+//! FP4 Precision in Large Language Models" (Zhou et al., 2025) as a
+//! three-layer Rust + JAX + Pallas system.
+//!
+//! * Layer 1 (python/compile/kernels): Pallas per-block FP4/FP8 fake-quant
+//!   and quantized-matmul kernels.
+//! * Layer 2 (python/compile): GPT-2/LLaMA models with the paper's
+//!   per-module mixed-precision recipe, AOT-lowered to HLO text.
+//! * Layer 3 (this crate): the training framework — data pipeline,
+//!   PJRT runtime, schedule controller (§3.3), data-parallel workers,
+//!   metrics/checkpoints, and the table/figure reproduction harness.
+//!
+//! See DESIGN.md for the experiment index and substitution notes.
+
+pub mod analysis;
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod costmodel;
+pub mod data;
+pub mod eval;
+pub mod formats;
+pub mod quant;
+pub mod reproduce;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

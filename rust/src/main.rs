@@ -1,0 +1,279 @@
+//! fp4train CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//!   train       run one pretraining job (schedule-aware)
+//!   reproduce   regenerate a paper table/figure (table1..4, fig1a..2, all)
+//!   presets     list model presets and precision recipes
+//!   data        corpus/tokenizer statistics
+//!   inspect     numeric-format explorer (grids, quantize values)
+//!   bench-step  step-latency probe across recipes (perf pass helper)
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use fp4train::config::RunConfig;
+use fp4train::coordinator::dp::DataParallel;
+use fp4train::coordinator::trainer::{build_dataset, Trainer};
+use fp4train::formats::FpFormat;
+use fp4train::reproduce::{self, ReproduceOpts};
+use fp4train::runtime::state::TrainState;
+use fp4train::runtime::Runtime;
+use fp4train::util::args::Cli;
+use fp4train::util::logger;
+
+fn cli() -> Cli {
+    Cli::new("fp4train", "FP4 mixed-precision LLM pretraining (Zhou et al., 2025 reproduction)")
+        .sub("train", "run one pretraining job")
+        .sub("reproduce", "regenerate paper tables/figures")
+        .sub("presets", "list model presets and recipes")
+        .sub("data", "corpus + tokenizer statistics")
+        .sub("inspect", "numeric format explorer")
+        .sub("bench-step", "step latency across recipes")
+        .opt("config", None, "TOML run config file")
+        .opt("model", None, "model preset (see `presets`)")
+        .opt("recipe", None, "precision recipe (see `presets`)")
+        .opt("steps", None, "training steps")
+        .opt("seed", None, "run seed")
+        .opt("workers", None, "data-parallel workers")
+        .opt("target-frac", None, "fraction of steps in the fp16 tail (§3.3)")
+        .opt("target-recipe", None, "tail-stage recipe")
+        .opt("eval-every", None, "eval cadence")
+        .opt("log-every", None, "log cadence")
+        .opt("checkpoint-every", None, "checkpoint cadence (0=off)")
+        .opt("checkpoint-dir", None, "checkpoint directory")
+        .opt("resume", None, "checkpoint file to resume from")
+        .opt("docs", None, "synthetic corpus size (documents)")
+        .opt("artifacts", Some("artifacts"), "AOT artifacts directory")
+        .opt("out", None, "output directory")
+        .opt("what", Some("all"), "reproduce target: table1..4 | fig1a|fig1b|fig1c|fig2 | all")
+        .opt("value", None, "inspect: value(s) to quantize, comma-separated")
+        .opt("format", Some("fp4"), "inspect: fp4 | fp8 | fp8_e5m2")
+        .flag("pallas", "use the pallas-kernel train artifact")
+}
+
+fn main() {
+    logger::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cli = cli();
+    let args = match cli.parse(&argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &fp4train::util::args::Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("train") => cmd_train(args),
+        Some("reproduce") => cmd_reproduce(args),
+        Some("presets") => cmd_presets(args),
+        Some("data") => cmd_data(args),
+        Some("inspect") => cmd_inspect(args),
+        Some("bench-step") => cmd_bench_step(args),
+        _ => {
+            println!("{}", cli().help_text());
+            Ok(())
+        }
+    }
+}
+
+fn open_runtime(args: &fp4train::util::args::Args) -> Result<Runtime> {
+    let dir = args.get("artifacts").unwrap_or("artifacts");
+    Runtime::open(Path::new(dir))
+        .map_err(|e| anyhow!("{e}\nhint: run `make artifacts` first"))
+}
+
+fn cmd_train(args: &fp4train::util::args::Args) -> Result<()> {
+    let cfg = RunConfig::resolve(args.get("config"), args).map_err(|e| anyhow!(e))?;
+    let rt = open_runtime(args)?;
+    if cfg.workers > 1 {
+        return cmd_train_dp(&rt, cfg);
+    }
+    let res = Trainer::new(&rt, cfg.clone()).run(args.get("resume"))?;
+    println!(
+        "done: {} / {} — final train loss {:.4}, val loss {:.4}, val ppl {:.3}",
+        cfg.model, cfg.recipe, res.final_train_loss, res.final_val_nll, res.final_val_ppl
+    );
+    println!("metrics: {}/{}__{}__steps.csv", cfg.out_dir, cfg.model, cfg.recipe);
+    Ok(())
+}
+
+fn cmd_train_dp(rt: &Runtime, cfg: RunConfig) -> Result<()> {
+    // Data-parallel path: grad/apply artifacts + host all-reduce.
+    let (ds, _tok) = build_dataset(rt, &cfg)?;
+    let dp = DataParallel::new(rt, &cfg.model, &cfg.recipe, cfg.workers)?;
+    let mut state = TrainState::init(rt, &cfg.model, pick_init_recipe(rt, &cfg.model)?, cfg.seed as i32)?;
+    log::info!("data-parallel: {} workers, global batch {}", cfg.workers, cfg.workers * rt.manifest.batch);
+    let mut last_loss = f32::NAN;
+    for step in 0..cfg.steps {
+        let t0 = std::time::Instant::now();
+        let (s2, loss, gnorm) = dp.step(state, &ds, step)?;
+        state = s2;
+        last_loss = loss;
+        if (step + 1) % cfg.log_every == 0 {
+            log::info!(
+                "dp step {:>5}/{} loss {:.4} |g| {:.3} {:.0} ms",
+                step + 1, cfg.steps, loss, gnorm,
+                t0.elapsed().as_secs_f64() * 1000.0
+            );
+        }
+    }
+    println!("dp done: final loss {last_loss:.4}");
+    Ok(())
+}
+
+fn pick_init_recipe<'a>(rt: &'a Runtime, model: &str) -> Result<&'a str> {
+    ["ours", "fp16"]
+        .into_iter()
+        .find(|r| rt.manifest.find(model, r, "init", false).is_some())
+        .ok_or_else(|| anyhow!("no init artifact for {model}"))
+}
+
+fn cmd_reproduce(args: &fp4train::util::args::Args) -> Result<()> {
+    let rt = open_runtime(args)?;
+    let mut opts = ReproduceOpts::default();
+    if let Some(s) = args.get("steps") {
+        opts.steps = s.parse().map_err(|_| anyhow!("--steps"))?;
+    }
+    if let Some(s) = args.get("docs") {
+        opts.n_docs = s.parse().map_err(|_| anyhow!("--docs"))?;
+    }
+    if let Some(s) = args.get("seed") {
+        opts.seed = s.parse().map_err(|_| anyhow!("--seed"))?;
+    }
+    if let Some(o) = args.get("out") {
+        opts.out_dir = o.to_string();
+    }
+    let what = args.get("what").unwrap_or("all").to_string();
+    reproduce::run(&rt, &what, &opts)
+}
+
+fn cmd_presets(args: &fp4train::util::args::Args) -> Result<()> {
+    let rt = open_runtime(args)?;
+    println!("model presets (artifacts/manifest.json):");
+    let mut names: Vec<_> = rt.manifest.models.keys().collect();
+    names.sort();
+    for n in names {
+        let m = &rt.manifest.models[n];
+        println!(
+            "  {:<18} {}  L={} d={} h={} ff={} T={} V={}  ~{:.2}M params",
+            n, m.family, m.layers, m.d_model, m.n_head, m.d_ff, m.seq, m.vocab,
+            m.param_count as f64 / 1e6
+        );
+    }
+    println!("\nprecision recipes:");
+    let mut rs: Vec<_> = rt.manifest.recipes.keys().collect();
+    rs.sort();
+    for r in rs {
+        let s = &rt.manifest.recipes[r];
+        println!(
+            "  {:<14} attn={:<5} ffn={:<5} wgrad={:<5} agrad={:<5} ({})",
+            r, s.attn, s.ffn, s.wgrad, s.agrad, s.granularity
+        );
+    }
+    println!("\nartifacts: {} HLO modules", rt.manifest.artifacts.len());
+    Ok(())
+}
+
+fn cmd_data(args: &fp4train::util::args::Args) -> Result<()> {
+    use fp4train::data::corpus::{CorpusConfig, CorpusGen};
+    use fp4train::data::tokenizer::Tokenizer;
+    let n_docs = args.usize_or("docs", 2000).map_err(|e| anyhow!(e))?;
+    let seed = args.usize_or("seed", 1234).map_err(|e| anyhow!(e))? as u64;
+    let (text, metas) = CorpusGen::new(CorpusConfig { n_docs, seed, ..Default::default() }).generate();
+    println!("corpus: {} docs, {} bytes", metas.len(), text.len());
+    let tok = Tokenizer::train(&text, 512);
+    let ids = tok.encode(&text);
+    println!(
+        "tokenizer: vocab {}, {} tokens, {:.2} bytes/token",
+        tok.vocab_size(),
+        ids.len(),
+        text.len() as f64 / ids.len() as f64
+    );
+    let mut topic_counts = [0usize; fp4train::data::corpus::N_TOPICS];
+    for (_, m) in &metas {
+        topic_counts[m.topic as usize] += 1;
+    }
+    println!("topic distribution: {topic_counts:?}");
+    println!("sample: {}", &text[..240.min(text.len())]);
+    Ok(())
+}
+
+fn cmd_inspect(args: &fp4train::util::args::Args) -> Result<()> {
+    let fmt_name = args.get("format").unwrap_or("fp4");
+    let fmt = FpFormat::by_name(fmt_name).ok_or_else(|| anyhow!("unknown format {fmt_name}"))?;
+    println!(
+        "{}: 1+{}+{} bits, bias {}, max {}, min normal {}, min subnormal {}",
+        fmt.name, fmt.exp, fmt.man, fmt.bias, fmt.max_value, fmt.min_normal(), fmt.min_subnormal()
+    );
+    let grid = fmt.grid();
+    println!("non-negative grid ({} points): {:?}{}", grid.len(),
+        &grid[..grid.len().min(16)], if grid.len() > 16 { " ..." } else { "" });
+    if let Some(vals) = args.get("value") {
+        for v in vals.split(',') {
+            let x: f32 = v.trim().parse().map_err(|_| anyhow!("bad value {v}"))?;
+            let q = fmt.quantize(x);
+            let code = fp4train::formats::codec::encode(fmt, x);
+            println!(
+                "  {x} -> {q}  (code 0b{code:0width$b}, rel err {:.4})",
+                if x == 0.0 { 0.0 } else { (x - q).abs() / x.abs() },
+                width = fmt.bits() as usize
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_bench_step(args: &fp4train::util::args::Args) -> Result<()> {
+    let rt = open_runtime(args)?;
+    let model = args.get("model").unwrap_or("gpt2-s-proxy").to_string();
+    let steps = args.usize_or("steps", 5).map_err(|e| anyhow!(e))?;
+    let info = rt.manifest.model(&model)?;
+    let tokens_per_step = rt.manifest.batch * info.seq;
+    println!("step latency, {model} ({} params), batch {} x seq {}:",
+        info.param_count, rt.manifest.batch, info.seq);
+    let mut recipes: Vec<String> = rt
+        .manifest
+        .artifacts
+        .iter()
+        .filter(|a| a.model == model && a.step == "train" && !a.use_pallas)
+        .map(|a| a.recipe.clone())
+        .collect();
+    recipes.dedup();
+    for recipe in recipes {
+        let exe = rt.load(&model, &recipe, "train")?;
+        let mut st = TrainState::init(&rt, &model, pick_init_recipe(&rt, &model)?, 0)?;
+        let fake: Vec<i32> = (0..rt.manifest.batch * (info.seq + 1))
+            .map(|i| (i % info.vocab) as i32)
+            .collect();
+        let batch = rt.upload_i32(&fp4train::tensor::TensorI32::from_vec(
+            &[rt.manifest.batch, info.seq + 1],
+            fake,
+        ))?;
+        // warmup
+        let (s2, _, _) = st.train_step(&exe, &batch)?;
+        st = s2;
+        let t0 = std::time::Instant::now();
+        for _ in 0..steps {
+            let (s2, _, _) = st.train_step(&exe, &batch)?;
+            st = s2;
+        }
+        let ms = t0.elapsed().as_secs_f64() * 1000.0 / steps as f64;
+        println!(
+            "  {recipe:<14} {ms:>8.1} ms/step   {:>9.0} tokens/s",
+            tokens_per_step as f64 / (ms / 1000.0)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! Document features for the probe suite: tokenize each corpus document,
+//! pad/truncate to the model's context, and push batches through the
+//! `features` artifact (full-precision pooled hidden states).
+
+use anyhow::Result;
+
+use crate::data::corpus::{CorpusConfig, CorpusGen, DocMeta};
+use crate::data::tokenizer::{Tokenizer, NEWLINE_TOKEN};
+use crate::runtime::state::TrainState;
+use crate::runtime::{download_f32, Runtime};
+use crate::tensor::{Tensor, TensorI32};
+
+/// Extract pooled features for `n_docs` fresh documents (held out from the
+/// training corpus by seed offset).
+pub fn doc_features(
+    rt: &Runtime,
+    model: &str,
+    state: &TrainState,
+    tok: &Tokenizer,
+    n_docs: usize,
+    seed: u64,
+) -> Result<(Tensor, Vec<DocMeta>)> {
+    let info = rt.manifest.model(model)?;
+    let recipe = ["ours", "fp16"]
+        .iter()
+        .find(|r| rt.manifest.find(model, r, "features", false).is_some())
+        .ok_or_else(|| anyhow::anyhow!("no features artifact for {model}"))?;
+    let feat_exe = rt.load(model, recipe, "features")?;
+    let b = rt.manifest.batch;
+    let t = info.seq;
+
+    let mut gen = CorpusGen::new(CorpusConfig {
+        n_docs,
+        seed: seed ^ 0x5EED_D0C5, // held-out split
+        ..Default::default()
+    });
+    let mut metas = Vec::with_capacity(n_docs);
+    let mut rows: Vec<Vec<i32>> = Vec::with_capacity(n_docs);
+    for _ in 0..n_docs {
+        let d = gen.next_doc();
+        let mut ids = tok.encode(&d.text);
+        ids.truncate(t);
+        while ids.len() < t {
+            ids.push(NEWLINE_TOKEN);
+        }
+        rows.push(ids);
+        metas.push(d.meta);
+    }
+    // batch through the executable (pad the ragged tail by repeating row 0)
+    let d_model = info.d_model;
+    let mut feats = vec![0.0f32; n_docs * d_model];
+    let mut i = 0;
+    while i < n_docs {
+        let mut batch = Vec::with_capacity(b * t);
+        for r in 0..b {
+            let src = rows.get(i + r).unwrap_or(&rows[0]);
+            batch.extend_from_slice(src);
+        }
+        let tokens = TensorI32::from_vec(&[b, t], batch);
+        let tb = rt.upload_i32(&tokens)?;
+        let mut args = state.param_refs();
+        args.push(&tb);
+        let out = feat_exe.run(&args)?;
+        let f = download_f32(&out[0])?; // (B, d)
+        for r in 0..b.min(n_docs - i) {
+            feats[(i + r) * d_model..(i + r + 1) * d_model]
+                .copy_from_slice(&f.data[r * d_model..(r + 1) * d_model]);
+        }
+        i += b;
+    }
+    Ok((Tensor::from_vec(&[n_docs, d_model], feats), metas))
+}

@@ -1,0 +1,59 @@
+//! Report sink: tee human-readable text to stdout and a file, and collect
+//! machine-readable CSV rows alongside.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+pub struct Report {
+    path: PathBuf,
+    buf: String,
+}
+
+impl Report {
+    pub fn new(out_dir: &str, name: &str) -> Result<Report> {
+        std::fs::create_dir_all(out_dir)?;
+        Ok(Report { path: Path::new(out_dir).join(format!("{name}.txt")), buf: String::new() })
+    }
+
+    pub fn line(&mut self, s: impl AsRef<str>) {
+        println!("{}", s.as_ref());
+        self.buf.push_str(s.as_ref());
+        self.buf.push('\n');
+    }
+
+    pub fn finish(self) -> Result<PathBuf> {
+        let mut f = std::fs::File::create(&self.path)?;
+        f.write_all(self.buf.as_bytes())?;
+        Ok(self.path)
+    }
+
+    pub fn sibling_csv(&self, rows: &[Vec<String>]) -> Result<PathBuf> {
+        let p = self.path.with_extension("csv");
+        let mut f = std::fs::File::create(&p)?;
+        for r in rows {
+            writeln!(f, "{}", r.join(","))?;
+        }
+        Ok(p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_text_and_csv() {
+        let dir = std::env::temp_dir().join("fp4report");
+        let mut r = Report::new(dir.to_str().unwrap(), "t").unwrap();
+        r.line("hello");
+        r.sibling_csv(&[vec!["a".into(), "b".into()]]).unwrap();
+        let p = r.finish().unwrap();
+        assert_eq!(std::fs::read_to_string(p).unwrap(), "hello\n");
+        assert_eq!(
+            std::fs::read_to_string(dir.join("t.csv")).unwrap(),
+            "a,b\n"
+        );
+    }
+}

@@ -1,0 +1,252 @@
+//! Typed view of `artifacts/manifest.json` (written by python/compile/aot.py):
+//! model configs, parameter layouts, recipe descriptions, and the artifact
+//! table with input/output shapes.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShapeEntry {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl ShapeEntry {
+    fn from_json(j: &Json) -> Result<ShapeEntry> {
+        let shape = j
+            .get("shape")
+            .and_then(|s| s.as_arr())
+            .ok_or_else(|| anyhow!("shape missing"))?
+            .iter()
+            .map(|d| d.as_usize().unwrap_or(0))
+            .collect();
+        let dtype = j.get("dtype").and_then(|d| d.as_str()).unwrap_or("float32").to_string();
+        Ok(ShapeEntry { shape, dtype })
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub name: String,
+    pub family: String,
+    pub vocab: usize,
+    pub layers: usize,
+    pub d_model: usize,
+    pub n_head: usize,
+    pub d_ff: usize,
+    pub seq: usize,
+    pub param_count: usize,
+    /// Flat, name-sorted parameter layout — the AOT argument order.
+    pub params: Vec<ParamEntry>,
+}
+
+#[derive(Clone, Debug)]
+pub struct RecipeSpec {
+    pub attn: String,
+    pub ffn: String,
+    pub wgrad: String,
+    pub agrad: String,
+    pub granularity: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub file: String,
+    pub model: String,
+    pub recipe: String,
+    pub step: String,
+    pub use_pallas: bool,
+    pub inputs: Vec<ShapeEntry>,
+    pub outputs: Vec<ShapeEntry>,
+    pub sha256: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub batch: usize,
+    pub total_steps: u64,
+    pub models: HashMap<String, ModelInfo>,
+    pub recipes: HashMap<String, RecipeSpec>,
+    pub table2_rows: Vec<String>,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let src = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&src)
+    }
+
+    pub fn parse(src: &str) -> Result<Manifest> {
+        let j = Json::parse(src).map_err(|e| anyhow!("manifest json: {e}"))?;
+        let batch = j.get("batch").and_then(|b| b.as_usize()).ok_or_else(|| anyhow!("batch"))?;
+        let total_steps = j.get("total_steps").and_then(|b| b.as_i64()).unwrap_or(0) as u64;
+
+        let mut models = HashMap::new();
+        for (name, m) in j.get("models").and_then(|m| m.members()).unwrap_or(&[]) {
+            let params = m
+                .get("params")
+                .and_then(|p| p.as_arr())
+                .unwrap_or(&[])
+                .iter()
+                .map(|p| {
+                    Ok(ParamEntry {
+                        name: p.get("name").and_then(|n| n.as_str()).unwrap_or("").to_string(),
+                        shape: ShapeEntry::from_json(p)?.shape,
+                        dtype: p.get("dtype").and_then(|d| d.as_str()).unwrap_or("float32").to_string(),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let g = |k: &str| m.get(k).and_then(|v| v.as_usize()).unwrap_or(0);
+            models.insert(
+                name.clone(),
+                ModelInfo {
+                    name: name.clone(),
+                    family: m.get("family").and_then(|f| f.as_str()).unwrap_or("gpt2").to_string(),
+                    vocab: g("vocab"),
+                    layers: g("layers"),
+                    d_model: g("d_model"),
+                    n_head: g("n_head"),
+                    d_ff: g("d_ff"),
+                    seq: g("seq"),
+                    param_count: g("param_count"),
+                    params,
+                },
+            );
+        }
+
+        let mut recipes = HashMap::new();
+        for (name, r) in j.get("recipes").and_then(|m| m.members()).unwrap_or(&[]) {
+            let spec = |k: &str| -> (String, String) {
+                let fmt = r.at(&[k, "fmt"]).and_then(|v| v.as_str()).unwrap_or("none").to_string();
+                let gran = r.at(&[k, "granularity"]).and_then(|v| v.as_str()).unwrap_or("block").to_string();
+                (fmt, gran)
+            };
+            let (attn, gran) = spec("attn");
+            recipes.insert(
+                name.clone(),
+                RecipeSpec {
+                    attn,
+                    ffn: spec("ffn").0,
+                    wgrad: spec("wgrad").0,
+                    agrad: spec("agrad").0,
+                    granularity: gran,
+                },
+            );
+        }
+
+        let table2_rows = j
+            .get("table2_rows")
+            .and_then(|a| a.as_arr())
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|v| v.as_str().map(String::from))
+            .collect();
+
+        let mut artifacts = Vec::new();
+        for a in j.get("artifacts").and_then(|a| a.as_arr()).unwrap_or(&[]) {
+            let shapes = |k: &str| -> Result<Vec<ShapeEntry>> {
+                a.get(k)
+                    .and_then(|x| x.as_arr())
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(ShapeEntry::from_json)
+                    .collect()
+            };
+            artifacts.push(ArtifactMeta {
+                file: a.get("file").and_then(|f| f.as_str()).unwrap_or("").to_string(),
+                model: a.get("model").and_then(|f| f.as_str()).unwrap_or("").to_string(),
+                recipe: a.get("recipe").and_then(|f| f.as_str()).unwrap_or("").to_string(),
+                step: a.get("step").and_then(|f| f.as_str()).unwrap_or("").to_string(),
+                use_pallas: a.get("use_pallas").and_then(|f| f.as_bool()).unwrap_or(false),
+                inputs: shapes("inputs")?,
+                outputs: shapes("outputs")?,
+                sha256: a.get("sha256").and_then(|f| f.as_str()).unwrap_or("").to_string(),
+            });
+        }
+        Ok(Manifest { batch, total_steps, models, recipes, table2_rows, artifacts })
+    }
+
+    pub fn find(&self, model: &str, recipe: &str, step: &str, use_pallas: bool) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| a.model == model && a.recipe == recipe && a.step == step && a.use_pallas == use_pallas)
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.models.get(name).ok_or_else(|| anyhow!("unknown model preset {name}"))
+    }
+
+    /// Number of flat parameter tensors of a model (state = 3n + 1).
+    pub fn n_params(&self, model: &str) -> Result<usize> {
+        Ok(self.model(model)?.params.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SRC: &str = r#"{
+      "version": 1, "batch": 8, "total_steps": 1200,
+      "models": {"m": {"family": "gpt2", "vocab": 512, "layers": 4,
+        "d_model": 128, "n_head": 4, "d_ff": 512, "seq": 256,
+        "param_count": 1000,
+        "params": [{"name": "a", "shape": [4, 128], "dtype": "float32"},
+                   {"name": "b", "shape": [], "dtype": "float32"}]}},
+      "recipes": {"ours": {"attn": {"fmt": "fp8", "granularity": "block", "block": 128},
+                           "ffn": {"fmt": "fp4", "granularity": "block", "block": 128},
+                           "wgrad": {"fmt": "fp8", "granularity": "block", "block": 128},
+                           "agrad": {"fmt": "none", "granularity": "block", "block": 128}}},
+      "table2_rows": ["ours"],
+      "artifacts": [{"file": "m__ours__train.hlo.txt", "model": "m",
+        "recipe": "ours", "step": "train", "use_pallas": false,
+        "inputs": [{"shape": [4, 128], "dtype": "float32"}],
+        "outputs": [{"shape": [], "dtype": "float32"}],
+        "sha256": "x", "lower_seconds": 1.0}]
+    }"#;
+
+    #[test]
+    fn parses_everything() {
+        let m = Manifest::parse(SRC).unwrap();
+        assert_eq!(m.batch, 8);
+        assert_eq!(m.model("m").unwrap().params.len(), 2);
+        assert_eq!(m.recipes["ours"].ffn, "fp4");
+        assert_eq!(m.recipes["ours"].agrad, "none");
+        let a = m.find("m", "ours", "train", false).unwrap();
+        assert_eq!(a.inputs[0].shape, vec![4, 128]);
+        assert_eq!(a.outputs[0].numel(), 1);
+        assert!(m.find("m", "ours", "train", true).is_none());
+    }
+
+    #[test]
+    fn real_manifest_loads_if_present() {
+        let p = Path::new("artifacts/manifest.json");
+        if p.exists() {
+            let m = Manifest::load(p).unwrap();
+            assert!(m.models.contains_key("gpt2-s-proxy"));
+            assert!(m.find("gpt2-s-proxy", "ours", "train", false).is_some());
+            // state inputs = 3n+1 (+1 batch)
+            let n = m.n_params("gpt2-s-proxy").unwrap();
+            let t = m.find("gpt2-s-proxy", "ours", "train", false).unwrap();
+            assert_eq!(t.inputs.len(), 3 * n + 2);
+            assert_eq!(t.outputs.len(), 3 * n + 3); // + loss + gnorm
+        }
+    }
+}

@@ -1,0 +1,154 @@
+//! PJRT runtime: load the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py`, compile them on the CPU PJRT client, and run
+//! training/eval steps with device-resident state.
+//!
+//! Key properties:
+//! * HLO **text** interchange (xla_extension 0.5.1 rejects jax≥0.5 protos).
+//! * The vendored `xla` crate is patched to set
+//!   `ExecuteOptions::untuple_result`, so a step's tuple output arrives as
+//!   one `PjRtBuffer` per element — outputs chain directly into the next
+//!   `execute_b` call with zero host round-trips (L3 perf §Perf).
+
+pub mod manifest;
+pub mod state;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::tensor::{Tensor, TensorI32};
+use manifest::{ArtifactMeta, Manifest};
+
+/// A PJRT client plus the artifact registry for one artifacts directory.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    dir: PathBuf,
+    cache: std::cell::RefCell<HashMap<String, std::rc::Rc<Executable>>>,
+}
+
+/// One compiled step function.
+pub struct Executable {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and read `manifest.json` from `dir`.
+    pub fn open(dir: &Path) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt: {e}"))?;
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        Ok(Runtime { client, manifest, dir: dir.to_path_buf(), cache: Default::default() })
+    }
+
+    /// Load + compile an artifact by (model, recipe, step), memoized.
+    pub fn load(&self, model: &str, recipe: &str, step: &str) -> Result<std::rc::Rc<Executable>> {
+        self.load_variant(model, recipe, step, false)
+    }
+
+    pub fn load_variant(
+        &self,
+        model: &str,
+        recipe: &str,
+        step: &str,
+        use_pallas: bool,
+    ) -> Result<std::rc::Rc<Executable>> {
+        let meta = self
+            .manifest
+            .find(model, recipe, step, use_pallas)
+            .ok_or_else(|| {
+                anyhow!("artifact not found: {model}/{recipe}/{step} (pallas={use_pallas}); re-run `make artifacts`")
+            })?
+            .clone();
+        let key = meta.file.clone();
+        if let Some(e) = self.cache.borrow().get(&key) {
+            return Ok(e.clone());
+        }
+        let path = self.dir.join(&meta.file);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e}", path.display()))?;
+        log::debug!("compiled {} in {:.2?}", meta.file, t0.elapsed());
+        let rc = std::rc::Rc::new(Executable { meta, exe });
+        self.cache.borrow_mut().insert(key, rc.clone());
+        Ok(rc)
+    }
+
+    /// Upload a host f32 tensor.
+    pub fn upload_f32(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
+        let dims: Vec<usize> = t.shape.clone();
+        self.client
+            .buffer_from_host_buffer(&t.data, &dims, None)
+            .map_err(|e| anyhow!("upload f32: {e}"))
+    }
+
+    /// Upload a host i32 tensor.
+    pub fn upload_i32(&self, t: &TensorI32) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(&t.data, &t.shape, None)
+            .map_err(|e| anyhow!("upload i32: {e}"))
+    }
+
+    pub fn upload_scalar_i32(&self, v: i32) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(&[v], &[], None)
+            .map_err(|e| anyhow!("upload scalar: {e}"))
+    }
+}
+
+/// Download a device buffer to a host f32 tensor.
+pub fn download_f32(buf: &xla::PjRtBuffer) -> Result<Tensor> {
+    let lit = buf.to_literal_sync().map_err(|e| anyhow!("download: {e}"))?;
+    let shape = lit.array_shape().map_err(|e| anyhow!("shape: {e}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e}"))?;
+    Ok(Tensor::from_vec(&dims, data))
+}
+
+pub fn download_scalar_f32(buf: &xla::PjRtBuffer) -> Result<f32> {
+    Ok(download_f32(buf)?.item())
+}
+
+pub fn download_i32(buf: &xla::PjRtBuffer) -> Result<TensorI32> {
+    let lit = buf.to_literal_sync().map_err(|e| anyhow!("download: {e}"))?;
+    let shape = lit.array_shape().map_err(|e| anyhow!("shape: {e}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit.to_vec::<i32>().map_err(|e| anyhow!("to_vec i32: {e}"))?;
+    Ok(TensorI32::from_vec(&dims, data))
+}
+
+impl Executable {
+    /// Execute with device buffers; returns one buffer per output.
+    pub fn run(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::PjRtBuffer>> {
+        if args.len() != self.meta.inputs.len() {
+            return Err(anyhow!(
+                "{}: expected {} inputs, got {}",
+                self.meta.file,
+                self.meta.inputs.len(),
+                args.len()
+            ));
+        }
+        let mut outs = self
+            .exe
+            .execute_b(args)
+            .map_err(|e| anyhow!("execute {}: {e}", self.meta.file))?;
+        let replica0 = outs.swap_remove(0);
+        if replica0.len() != self.meta.outputs.len() {
+            return Err(anyhow!(
+                "{}: manifest says {} outputs, runtime returned {} \
+                 (is the vendored xla untuple patch active?)",
+                self.meta.file,
+                self.meta.outputs.len(),
+                replica0.len()
+            ));
+        }
+        Ok(replica0)
+    }
+}

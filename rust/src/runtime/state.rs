@@ -1,0 +1,149 @@
+//! Device-resident training state: the flat buffer list
+//! `[params.. , m.. , v.. , step]` that train/apply steps consume and
+//! produce.  Buffers never leave the device during the steady-state loop;
+//! host copies happen only for init upload, checkpointing, and eval
+//! scalars.
+
+use anyhow::{anyhow, Result};
+use xla::PjRtBuffer;
+
+use super::{download_f32, download_i32, Executable, Runtime};
+use crate::tensor::Tensor;
+
+/// Flat device state. Layout: n params, n first moments, n second moments,
+/// then the i32 step counter.
+pub struct TrainState {
+    pub bufs: Vec<PjRtBuffer>,
+    pub n_params: usize,
+}
+
+impl TrainState {
+    pub fn from_bufs(bufs: Vec<PjRtBuffer>, n_params: usize) -> Result<TrainState> {
+        if bufs.len() != 3 * n_params + 1 {
+            return Err(anyhow!(
+                "state expects {} buffers, got {}",
+                3 * n_params + 1,
+                bufs.len()
+            ));
+        }
+        Ok(TrainState { bufs, n_params })
+    }
+
+    /// Run the model's `init` executable (seeded) and wrap the result.
+    pub fn init(rt: &Runtime, model: &str, recipe: &str, seed: i32) -> Result<TrainState> {
+        let init = rt.load(model, recipe, "init")?;
+        let seed_buf = rt.upload_scalar_i32(seed)?;
+        let out = init.run(&[&seed_buf])?;
+        let n = rt.manifest.n_params(model)?;
+        TrainState::from_bufs(out, n)
+    }
+
+    pub fn params(&self) -> &[PjRtBuffer] {
+        &self.bufs[..self.n_params]
+    }
+
+    pub fn param_refs(&self) -> Vec<&PjRtBuffer> {
+        self.bufs[..self.n_params].iter().collect()
+    }
+
+    pub fn all_refs(&self) -> Vec<&PjRtBuffer> {
+        self.bufs.iter().collect()
+    }
+
+    /// Current step counter (host round-trip; used at schedule boundaries).
+    pub fn step(&self) -> Result<i64> {
+        let t = download_i32(&self.bufs[3 * self.n_params])?;
+        Ok(t.data[0] as i64)
+    }
+
+    /// Download all parameters (checkpointing).
+    pub fn download_params(&self) -> Result<Vec<Tensor>> {
+        self.params().iter().map(download_f32).collect()
+    }
+
+    /// Download the full optimizer state (params, m, v, step).
+    pub fn download_all(&self) -> Result<(Vec<Tensor>, Vec<Tensor>, Vec<Tensor>, i64)> {
+        let n = self.n_params;
+        let p = self.bufs[..n].iter().map(download_f32).collect::<Result<Vec<_>>>()?;
+        let m = self.bufs[n..2 * n].iter().map(download_f32).collect::<Result<Vec<_>>>()?;
+        let v = self.bufs[2 * n..3 * n].iter().map(download_f32).collect::<Result<Vec<_>>>()?;
+        let step = self.step()?;
+        Ok((p, m, v, step))
+    }
+
+    /// Rebuild device state from host tensors (checkpoint restore).
+    pub fn upload(
+        rt: &Runtime,
+        params: &[Tensor],
+        m: &[Tensor],
+        v: &[Tensor],
+        step: i32,
+    ) -> Result<TrainState> {
+        let n = params.len();
+        if m.len() != n || v.len() != n {
+            return Err(anyhow!("moment count mismatch"));
+        }
+        let mut bufs = Vec::with_capacity(3 * n + 1);
+        for t in params.iter().chain(m).chain(v) {
+            bufs.push(rt.upload_f32(t)?);
+        }
+        bufs.push(rt.upload_scalar_i32(step)?);
+        TrainState::from_bufs(bufs, n)
+    }
+
+    /// One fused train step: consumes self, returns (new state, loss, gnorm).
+    pub fn train_step(
+        self,
+        exe: &Executable,
+        batch: &PjRtBuffer,
+    ) -> Result<(TrainState, f32, f32)> {
+        let mut args: Vec<&PjRtBuffer> = self.bufs.iter().collect();
+        args.push(batch);
+        let mut out = exe.run(&args)?;
+        let gnorm_buf = out.pop().ok_or_else(|| anyhow!("missing gnorm output"))?;
+        let loss_buf = out.pop().ok_or_else(|| anyhow!("missing loss output"))?;
+        let loss = super::download_scalar_f32(&loss_buf)?;
+        let gnorm = super::download_scalar_f32(&gnorm_buf)?;
+        let st = TrainState::from_bufs(out, self.n_params)?;
+        Ok((st, loss, gnorm))
+    }
+
+    /// Apply externally averaged gradients (data-parallel path):
+    /// state ++ grads -> state' ++ [gnorm].
+    pub fn apply_step(
+        self,
+        exe: &Executable,
+        grads: &[PjRtBuffer],
+    ) -> Result<(TrainState, f32)> {
+        let mut args: Vec<&PjRtBuffer> = self.bufs.iter().collect();
+        args.extend(grads.iter());
+        let mut out = exe.run(&args)?;
+        let gnorm_buf = out.pop().ok_or_else(|| anyhow!("missing gnorm output"))?;
+        let gnorm = super::download_scalar_f32(&gnorm_buf)?;
+        let st = TrainState::from_bufs(out, self.n_params)?;
+        Ok((st, gnorm))
+    }
+}
+
+/// Evaluate mean NLL over validation batches (full-precision forward).
+pub fn eval_nll(
+    rt: &Runtime,
+    exe: &Executable,
+    state: &TrainState,
+    batches: &[crate::tensor::TensorI32],
+) -> Result<f64> {
+    let mut total = 0.0f64;
+    let mut count = 0.0f64;
+    for b in batches {
+        let bb = rt.upload_i32(b)?;
+        let mut args = state.param_refs();
+        args.push(&bb);
+        let out = exe.run(&args)?;
+        total += super::download_scalar_f32(&out[0])? as f64;
+        count += super::download_scalar_f32(&out[1])? as f64;
+    }
+    if count == 0.0 {
+        return Err(anyhow!("no eval batches"));
+    }
+    Ok(total / count)
+}

@@ -1,0 +1,173 @@
+//! Minimal host tensor: row-major f32/i32 arrays with shape, used at the
+//! rust↔PJRT boundary and by the analysis/eval layers.  Deliberately tiny —
+//! heavy math lives in the AOT-compiled XLA executables; host-side code
+//! only needs construction, indexing, simple reductions, and the small
+//! dense ops the probe trainer uses.
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorI32 {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+pub fn numel(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; numel(shape)] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(numel(shape), data.len(), "shape {shape:?} vs len {}", data.len());
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn randn(shape: &[usize], std: f32, rng: &mut Rng) -> Self {
+        let data = (0..numel(shape)).map(|_| rng.normal_f32(0.0, std)).collect();
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Row-major strides.
+    pub fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1; self.shape.len()];
+        for i in (0..self.shape.len().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.shape[i + 1];
+        }
+        s
+    }
+
+    pub fn at(&self, idx: &[usize]) -> f32 {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let s = self.strides();
+        let off: usize = idx.iter().zip(&s).map(|(i, st)| i * st).sum();
+        self.data[off]
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(numel(shape), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    pub fn item(&self) -> f32 {
+        assert_eq!(self.data.len(), 1, "item() on non-scalar {:?}", self.shape);
+        self.data[0]
+    }
+
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            return f32::NAN;
+        }
+        self.data.iter().sum::<f32>() / self.data.len() as f32
+    }
+
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |a, &x| a.max(x.abs()))
+    }
+
+    pub fn l2(&self) -> f32 {
+        self.data.iter().map(|&x| x * x).sum::<f32>().sqrt()
+    }
+
+    /// (rows, cols) matmul for small host-side math (the probe trainer).
+    pub fn matmul(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        assert_eq!(other.rank(), 2);
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let (k2, n) = (other.shape[0], other.shape[1]);
+        assert_eq!(k, k2);
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                let a = self.data[i * k + kk];
+                if a == 0.0 {
+                    continue;
+                }
+                let row = &other.data[kk * n..(kk + 1) * n];
+                let dst = &mut out[i * n..(i + 1) * n];
+                for (o, &b) in dst.iter_mut().zip(row) {
+                    *o += a * b;
+                }
+            }
+        }
+        Tensor::from_vec(&[m, n], out)
+    }
+}
+
+impl TensorI32 {
+    pub fn from_vec(shape: &[usize], data: Vec<i32>) -> Self {
+        assert_eq!(numel(shape), data.len());
+        TensorI32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        TensorI32 { shape: shape.to_vec(), data: vec![0; numel(shape)] }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strides_and_at() {
+        let t = Tensor::from_vec(&[2, 3], vec![0., 1., 2., 3., 4., 5.]);
+        assert_eq!(t.strides(), vec![3, 1]);
+        assert_eq!(t.at(&[1, 2]), 5.0);
+        assert_eq!(t.at(&[0, 1]), 1.0);
+    }
+
+    #[test]
+    fn matmul_matches_manual() {
+        let a = Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::from_vec(&[2, 2], vec![5., 6., 7., 8.]);
+        assert_eq!(a.matmul(&b).data, vec![19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn reductions() {
+        let t = Tensor::from_vec(&[4], vec![1., -3., 2., 0.]);
+        assert_eq!(t.mean(), 0.0);
+        assert_eq!(t.abs_max(), 3.0);
+        assert!((t.l2() - 14.0f32.sqrt()).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::from_vec(&[2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn randn_deterministic() {
+        let mut r1 = Rng::new(1);
+        let mut r2 = Rng::new(1);
+        assert_eq!(Tensor::randn(&[8], 1.0, &mut r1), Tensor::randn(&[8], 1.0, &mut r2));
+    }
+}

@@ -1,0 +1,215 @@
+//! Tiny CLI argument parser: `prog <subcommand> [--key value] [--flag]
+//! [positional...]`.  Declarative option registry gives automatic `--help`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+#[derive(Debug)]
+pub struct ArgError(pub String);
+
+impl std::fmt::Display for ArgError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+impl std::error::Error for ArgError {}
+
+pub struct Cli {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub specs: Vec<ArgSpec>,
+    pub subcommands: Vec<(&'static str, &'static str)>,
+}
+
+impl Cli {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Cli { name, about, specs: Vec::new(), subcommands: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: Option<&'static str>, help: &'static str) -> Self {
+        self.specs.push(ArgSpec { name, help, default, is_flag: false });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    pub fn sub(mut self, name: &'static str, help: &'static str) -> Self {
+        self.subcommands.push((name, help));
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} [subcommand] [options]\n", self.name, self.about, self.name);
+        if !self.subcommands.is_empty() {
+            s.push_str("\nSUBCOMMANDS:\n");
+            for (n, h) in &self.subcommands {
+                s.push_str(&format!("  {n:<18} {h}\n"));
+            }
+        }
+        s.push_str("\nOPTIONS:\n");
+        for spec in &self.specs {
+            let d = spec.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+            let kind = if spec.is_flag { "" } else { " <value>" };
+            s.push_str(&format!("  --{}{kind:<10} {}{d}\n", spec.name, spec.help));
+        }
+        s.push_str("  --help             print this help\n");
+        s
+    }
+
+    /// Parse argv (without the program name).
+    pub fn parse(&self, argv: &[String]) -> Result<Args, ArgError> {
+        let mut out = Args::default();
+        for spec in &self.specs {
+            if let Some(d) = spec.default {
+                out.values.insert(spec.name.to_string(), d.to_string());
+            }
+        }
+        let mut it = argv.iter().peekable();
+        // optional subcommand first
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') && self.subcommands.iter().any(|(n, _)| *n == first.as_str()) {
+                out.subcommand = Some(it.next().unwrap().clone());
+            }
+        }
+        while let Some(a) = it.next() {
+            if a == "--help" || a == "-h" {
+                return Err(ArgError(self.help_text()));
+            }
+            if let Some(name) = a.strip_prefix("--") {
+                let (key, inline) = match name.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (name, None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| ArgError(format!("unknown option --{key}\n\n{}", self.help_text())))?;
+                if spec.is_flag {
+                    if inline.is_some() {
+                        return Err(ArgError(format!("--{key} is a flag")));
+                    }
+                    out.flags.push(key.to_string());
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| ArgError(format!("--{key} needs a value")))?
+                            .clone(),
+                    };
+                    out.values.insert(key.to_string(), v);
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn req(&self, key: &str) -> Result<&str, ArgError> {
+        self.get(key).ok_or_else(|| ArgError(format!("missing --{key}")))
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>, ArgError> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| ArgError(format!("bad value for --{key}: {s}"))),
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize, ArgError> {
+        Ok(self.get_parsed::<usize>(key)?.unwrap_or(default))
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64, ArgError> {
+        Ok(self.get_parsed::<f64>(key)?.unwrap_or(default))
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .sub("train", "train a model")
+            .sub("eval", "evaluate")
+            .opt("steps", Some("100"), "number of steps")
+            .opt("model", None, "model preset")
+            .flag("verbose", "noisy output")
+    }
+
+    fn argv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let a = cli().parse(&argv(&["train", "--steps", "5", "--verbose", "extra"])).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 5);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn equals_syntax_and_defaults() {
+        let a = cli().parse(&argv(&["--model=gpt2"])).unwrap();
+        assert_eq!(a.get("model"), Some("gpt2"));
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 100); // default
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(cli().parse(&argv(&["--nope"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(cli().parse(&argv(&["--model"])).is_err());
+    }
+
+    #[test]
+    fn bad_parse_rejected() {
+        let a = cli().parse(&argv(&["--steps", "abc"])).unwrap();
+        assert!(a.usize_or("steps", 0).is_err());
+    }
+
+    #[test]
+    fn help_lists_everything() {
+        let h = cli().help_text();
+        assert!(h.contains("--steps") && h.contains("train") && h.contains("default: 100"));
+    }
+}

@@ -1,0 +1,55 @@
+//! Minimal `log` facade backend: timestamped stderr lines with a level
+//! filter from `FP4TRAIN_LOG` (error|warn|info|debug|trace).
+
+use log::{Level, LevelFilter, Metadata, Record};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+struct StderrLogger;
+
+static LOGGER: StderrLogger = StderrLogger;
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, _m: &Metadata) -> bool {
+        true
+    }
+
+    fn log(&self, record: &Record) {
+        if self.enabled(record.metadata()) {
+            let t = SystemTime::now().duration_since(UNIX_EPOCH).unwrap_or_default();
+            let secs = t.as_secs();
+            let (h, m, s) = ((secs / 3600) % 24, (secs / 60) % 60, secs % 60);
+            let lvl = match record.level() {
+                Level::Error => "ERROR",
+                Level::Warn => "WARN ",
+                Level::Info => "INFO ",
+                Level::Debug => "DEBUG",
+                Level::Trace => "TRACE",
+            };
+            eprintln!("[{h:02}:{m:02}:{s:02}.{:03} {lvl} {}] {}", t.subsec_millis(), record.target(), record.args());
+        }
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger once; level from `FP4TRAIN_LOG` (default info).
+pub fn init() {
+    let level = match std::env::var("FP4TRAIN_LOG").as_deref() {
+        Ok("error") => LevelFilter::Error,
+        Ok("warn") => LevelFilter::Warn,
+        Ok("debug") => LevelFilter::Debug,
+        Ok("trace") => LevelFilter::Trace,
+        _ => LevelFilter::Info,
+    };
+    let _ = log::set_logger(&LOGGER).map(|_| log::set_max_level(level));
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logger smoke");
+    }
+}

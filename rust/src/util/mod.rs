@@ -1,0 +1,16 @@
+//! From-scratch utility substrates.
+//!
+//! This build environment is fully offline with only the `xla` crate's
+//! dependency closure available, so the usual ecosystem crates (serde,
+//! clap, rand, criterion...) are reimplemented here at the scale this
+//! project needs.  Each module is self-contained and unit/property tested.
+
+pub mod args;
+pub mod json;
+pub mod logger;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod tomlmini;
+
+pub use rng::Rng;

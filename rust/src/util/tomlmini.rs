@@ -1,0 +1,251 @@
+//! TOML-subset config parser: enough of TOML for run configuration files —
+//! `[table.subtable]` headers, `key = value` with strings, integers,
+//! floats, booleans, and flat arrays, plus `#` comments.
+//!
+//! Values are exposed through dotted-path lookup (`cfg.get("train.steps")`).
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    entries: BTreeMap<String, TomlValue>,
+}
+
+#[derive(Debug)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for TomlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "config error on line {}: {}", self.line, self.msg)
+    }
+}
+impl std::error::Error for TomlError {}
+
+impl TomlDoc {
+    pub fn parse(src: &str) -> Result<TomlDoc, TomlError> {
+        let mut doc = TomlDoc::default();
+        let mut prefix = String::new();
+        for (ln, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(table) = line.strip_prefix('[') {
+                let table = table
+                    .strip_suffix(']')
+                    .ok_or_else(|| err(ln, "unterminated table header"))?
+                    .trim();
+                if table.is_empty() {
+                    return Err(err(ln, "empty table name"));
+                }
+                prefix = table.to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| err(ln, "expected key = value"))?;
+            let key = k.trim();
+            if key.is_empty() {
+                return Err(err(ln, "empty key"));
+            }
+            let full = if prefix.is_empty() { key.to_string() } else { format!("{prefix}.{key}") };
+            let val = parse_value(v.trim(), ln)?;
+            doc.entries.insert(full, val);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, dotted: &str) -> Option<&TomlValue> {
+        self.entries.get(dotted)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).and_then(|v| v.as_str()).unwrap_or(default).to_string()
+    }
+
+    pub fn i64_or(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(|v| v.as_i64()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(|s| s.as_str())
+    }
+
+    /// Merge another doc over this one (CLI overrides over file).
+    pub fn merge_from(&mut self, other: TomlDoc) {
+        for (k, v) in other.entries {
+            self.entries.insert(k, v);
+        }
+    }
+
+    pub fn set(&mut self, key: &str, v: TomlValue) {
+        self.entries.insert(key.to_string(), v);
+    }
+}
+
+fn err(ln: usize, msg: &str) -> TomlError {
+    TomlError { line: ln + 1, msg: msg.to_string() }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, ln: usize) -> Result<TomlValue, TomlError> {
+    if s.is_empty() {
+        return Err(err(ln, "empty value"));
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| err(ln, "unterminated string"))?;
+        return Ok(TomlValue::Str(inner.replace("\\n", "\n").replace("\\\"", "\"")));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| err(ln, "unterminated array"))?
+            .trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Arr(vec![]));
+        }
+        let mut xs = Vec::new();
+        for part in inner.split(',') {
+            xs.push(parse_value(part.trim(), ln)?);
+        }
+        return Ok(TomlValue::Arr(xs));
+    }
+    let clean = s.replace('_', "");
+    if let Ok(i) = clean.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(err(ln, &format!("cannot parse value `{s}`")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SRC: &str = r#"
+# run config
+name = "quickstart"     # inline comment
+steps = 1_000
+
+[model]
+preset = "gpt2-s-proxy"
+lr = 6e-4
+use_pallas = false
+
+[schedule]
+stages = [0.9, 0.1]
+"#;
+
+    #[test]
+    fn parses_tables_and_types() {
+        let d = TomlDoc::parse(SRC).unwrap();
+        assert_eq!(d.str_or("name", ""), "quickstart");
+        assert_eq!(d.i64_or("steps", 0), 1000);
+        assert_eq!(d.str_or("model.preset", ""), "gpt2-s-proxy");
+        assert!((d.f64_or("model.lr", 0.0) - 6e-4).abs() < 1e-12);
+        assert!(!d.bool_or("model.use_pallas", true));
+        match d.get("schedule.stages").unwrap() {
+            TomlValue::Arr(xs) => assert_eq!(xs.len(), 2),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn comment_inside_string_kept() {
+        let d = TomlDoc::parse(r##"k = "a # b""##).unwrap();
+        assert_eq!(d.str_or("k", ""), "a # b");
+    }
+
+    #[test]
+    fn merge_overrides() {
+        let mut a = TomlDoc::parse("x = 1\ny = 2").unwrap();
+        let b = TomlDoc::parse("y = 3").unwrap();
+        a.merge_from(b);
+        assert_eq!(a.i64_or("x", 0), 1);
+        assert_eq!(a.i64_or("y", 0), 3);
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = TomlDoc::parse("ok = 1\nbad line").unwrap_err();
+        assert_eq!(e.line, 2);
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        assert!(TomlDoc::parse("k = ").is_err());
+        assert!(TomlDoc::parse("k = [1, 2").is_err());
+        assert!(TomlDoc::parse("k = \"x").is_err());
+        assert!(TomlDoc::parse("k = zzz").is_err());
+    }
+}

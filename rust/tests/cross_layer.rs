@@ -1,0 +1,92 @@
+//! Cross-layer consistency: the rust `formats` module must agree
+//! bit-for-bit with the python `compile.formats` implementation that the
+//! AOT artifacts were built from (reference vectors emitted by aot.py).
+//!
+//! This is the contract that makes the rust-side analysis (Fig. 1(b)
+//! underflow rates) and FP4/FP8 checkpoint codecs interchangeable with
+//! the in-graph quantization.
+
+use std::path::Path;
+
+use fp4train::formats::{fake_quant_rows, FpFormat, Granularity};
+use fp4train::util::json::Json;
+
+fn reference() -> Option<Json> {
+    let p = Path::new("artifacts/formats_reference.json");
+    if !p.exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Json::parse(&std::fs::read_to_string(p).unwrap()).unwrap())
+}
+
+fn floats(j: &Json, key: &str) -> Vec<f32> {
+    j.get(key)
+        .and_then(|a| a.as_arr())
+        .unwrap_or_else(|| panic!("missing {key}"))
+        .iter()
+        .map(|v| v.as_f64().unwrap() as f32)
+        .collect()
+}
+
+#[test]
+fn grid_projection_bit_exact_vs_python() {
+    let Some(j) = reference() else { return };
+    let inputs = floats(&j, "inputs");
+    for name in ["fp4_e2m1", "fp8_e4m3", "fp8_e5m2"] {
+        let fmt = FpFormat::by_name(name).unwrap();
+        let want = floats(&j, &format!("grid_{name}"));
+        assert_eq!(inputs.len(), want.len());
+        for (i, (&x, &w)) in inputs.iter().zip(&want).enumerate() {
+            let got = fmt.quantize(x);
+            assert!(
+                got == w || (got == 0.0 && w == 0.0),
+                "{name}[{i}]: quantize({x}) = {got}, python says {w}"
+            );
+        }
+    }
+}
+
+#[test]
+fn block_fake_quant_bit_exact_vs_python() {
+    let Some(j) = reference() else { return };
+    let inputs = floats(&j, "inputs");
+    let want = floats(&j, "block_fp4_rows4_cols256");
+    let x = &inputs[..1024];
+    let got = fake_quant_rows(
+        x,
+        4,
+        256,
+        FpFormat::by_name("fp4").unwrap(),
+        Granularity::PerBlock(128),
+    );
+    let mut mismatches = 0;
+    for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
+        if g != w {
+            // scales are not powers of two; allow 1-ulp divergence from
+            // fused-multiply ordering but nothing more
+            let ulp = (g - w).abs() / g.abs().max(f32::MIN_POSITIVE);
+            assert!(ulp < 3e-7, "idx {i}: rust {g} vs python {w}");
+            mismatches += 1;
+        }
+    }
+    assert!(
+        mismatches < want.len() / 100,
+        "too many 1-ulp mismatches: {mismatches}/{}",
+        want.len()
+    );
+}
+
+#[test]
+fn codec_roundtrip_matches_python_grid() {
+    let Some(j) = reference() else { return };
+    let inputs = floats(&j, "inputs");
+    for name in ["fp4_e2m1", "fp8_e4m3"] {
+        let fmt = FpFormat::by_name(name).unwrap();
+        let want = floats(&j, &format!("grid_{name}"));
+        for (&x, &w) in inputs.iter().zip(&want) {
+            let via = fp4train::formats::codec::decode(fmt, fp4train::formats::codec::encode(fmt, x));
+            assert!(via == w || (via == 0.0 && w == 0.0), "{name}: {x} -> {via} vs {w}");
+        }
+    }
+}

@@ -1,0 +1,113 @@
+//! Integration: the L3 coordinator end-to-end — schedule switch, DP
+//! equivalence, checkpoint resume.  Requires `make artifacts`.
+
+use std::path::Path;
+
+use fp4train::config::RunConfig;
+use fp4train::coordinator::dp::DataParallel;
+use fp4train::coordinator::trainer::{build_dataset, Trainer};
+use fp4train::runtime::state::TrainState;
+use fp4train::runtime::{download_f32, Runtime};
+
+fn runtime() -> Option<Runtime> {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::open(dir).expect("runtime"))
+}
+
+fn tiny_cfg(steps: u64) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.steps = steps;
+    cfg.eval_every = steps;
+    cfg.log_every = steps;
+    cfg.data.n_docs = 400;
+    cfg.out_dir = std::env::temp_dir().join("fp4runs").to_str().unwrap().to_string();
+    cfg
+}
+
+#[test]
+fn trainer_descends_and_switches_stage() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg = tiny_cfg(14);
+    cfg.target_precision_frac = 0.3; // stage 2 for the last ~4 steps
+    let res = Trainer::new(&rt, cfg).run(None).unwrap();
+    assert!(res.final_val_nll.is_finite());
+    let stages: Vec<u8> = res.metrics.steps.iter().map(|r| r.stage).collect();
+    assert_eq!(stages[..9], vec![0u8; 9][..]); // 14 - floor(14*0.3)=4 -> 10 low
+    assert!(stages.ends_with(&[1, 1, 1, 1]), "{stages:?}");
+    let first = res.metrics.steps[0].loss;
+    let last = res.metrics.steps.last().unwrap().loss;
+    assert!(last < first, "loss {first} -> {last}");
+    // metrics CSVs written
+    assert!(res.metrics.steps.len() == 14);
+}
+
+#[test]
+fn dp_two_workers_matches_sequential_grad_average() {
+    let Some(rt) = runtime() else { return };
+    let cfg = tiny_cfg(1);
+    let (ds, _) = build_dataset(&rt, &cfg).unwrap();
+
+    // DP step with 2 workers
+    let dp = DataParallel::new(&rt, "gpt2-s-proxy", "ours", 2).unwrap();
+    let st = TrainState::init(&rt, "gpt2-s-proxy", "ours", 5).unwrap();
+    let (st_dp, loss_dp, _) = dp.step(st, &ds, 0).unwrap();
+
+    // manual: same two shards through the 1-worker grad exe, averaged
+    let grad_exe = rt.load("gpt2-s-proxy", "ours", "grad").unwrap();
+    let apply_exe = rt.load("gpt2-s-proxy", "ours", "apply").unwrap();
+    let st2 = TrainState::init(&rt, "gpt2-s-proxy", "ours", 5).unwrap();
+    let mut gs = Vec::new();
+    let mut losses = Vec::new();
+    for w in 0..2 {
+        let b = ds.train_batch(0, w, 2);
+        let bb = rt.upload_i32(&b).unwrap();
+        let mut args = st2.param_refs();
+        args.push(&bb);
+        let mut out = grad_exe.run(&args).unwrap();
+        losses.push(download_f32(&out.pop().unwrap()).unwrap().item());
+        gs.push(out.iter().map(|b| download_f32(b).unwrap()).collect::<Vec<_>>());
+    }
+    let mean = fp4train::coordinator::dp::allreduce_mean(&mut gs);
+    let bufs: Vec<_> = mean.iter().map(|t| rt.upload_f32(t).unwrap()).collect();
+    let (st_manual, _) = st2.apply_step(&apply_exe, &bufs).unwrap();
+
+    assert!((loss_dp - (losses[0] + losses[1]) / 2.0).abs() < 1e-6);
+    for (a, b) in st_dp.params().iter().zip(st_manual.params()) {
+        let (ta, tb) = (download_f32(a).unwrap(), download_f32(b).unwrap());
+        for (x, y) in ta.data.iter().zip(&tb.data) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+}
+
+#[test]
+fn checkpoint_resume_reproduces_uninterrupted_run() {
+    let Some(rt) = runtime() else { return };
+    let dir = std::env::temp_dir().join("fp4ckpt_resume");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // uninterrupted 6-step run
+    let mut cfg = tiny_cfg(6);
+    cfg.seed = 9;
+    cfg.target_precision_frac = 0.0;
+    let res_full = Trainer::new(&rt, cfg.clone()).run(None).unwrap();
+
+    // interrupted: 3 steps + checkpoint, then resume to 6
+    let mut cfg_a = cfg.clone();
+    cfg_a.steps = 3;
+    cfg_a.checkpoint_every = 3;
+    cfg_a.checkpoint_dir = dir.to_str().unwrap().to_string();
+    Trainer::new(&rt, cfg_a).run(None).unwrap();
+    let ckpt = dir.join("gpt2-s-proxy__ours__3.ckpt");
+    assert!(ckpt.exists());
+    let res_resumed = Trainer::new(&rt, cfg).run(Some(ckpt.to_str().unwrap())).unwrap();
+
+    // same final losses (identical batches + f32 checkpoint)
+    let l_full = res_full.metrics.steps.last().unwrap().loss;
+    let l_res = res_resumed.metrics.steps.last().unwrap().loss;
+    assert!((l_full - l_res).abs() < 1e-5, "{l_full} vs {l_res}");
+}

@@ -1,0 +1,160 @@
+//! Integration: AOT artifacts × PJRT runtime — init, train, grad/apply
+//! equivalence, eval, and device-resident chaining.  Requires
+//! `make artifacts` (skipped gracefully when artifacts are absent).
+
+use std::path::Path;
+
+use fp4train::data::batcher::{DatasetConfig, TokenDataset};
+use fp4train::runtime::state::{eval_nll, TrainState};
+use fp4train::runtime::{download_f32, Runtime};
+use fp4train::tensor::TensorI32;
+
+fn runtime() -> Option<Runtime> {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::open(dir).expect("runtime"))
+}
+
+fn fake_batch(rt: &Runtime, model: &str, seed: u64) -> TensorI32 {
+    let info = rt.manifest.model(model).unwrap();
+    let b = rt.manifest.batch;
+    let tokens: Vec<i32> = (0..(b * (info.seq + 1)) as u64)
+        .map(|i| ((i.wrapping_mul(2654435761).wrapping_add(seed * 97)) % info.vocab as u64) as i32)
+        .collect();
+    TensorI32::from_vec(&[b, info.seq + 1], tokens)
+}
+
+#[test]
+fn init_produces_manifest_shapes() {
+    let Some(rt) = runtime() else { return };
+    let st = TrainState::init(&rt, "gpt2-s-proxy", "ours", 7).unwrap();
+    let info = rt.manifest.model("gpt2-s-proxy").unwrap();
+    assert_eq!(st.n_params, info.params.len());
+    for (buf, spec) in st.params().iter().zip(&info.params) {
+        let t = download_f32(buf).unwrap();
+        assert_eq!(t.shape, spec.shape, "param {}", spec.name);
+    }
+    assert_eq!(st.step().unwrap(), 0);
+}
+
+#[test]
+fn init_is_seed_deterministic() {
+    let Some(rt) = runtime() else { return };
+    let a = TrainState::init(&rt, "gpt2-s-proxy", "ours", 3).unwrap();
+    let b = TrainState::init(&rt, "gpt2-s-proxy", "ours", 3).unwrap();
+    let c = TrainState::init(&rt, "gpt2-s-proxy", "ours", 4).unwrap();
+    // compare a randomly initialized tensor (biases/gains are constant)
+    let info = rt.manifest.model("gpt2-s-proxy").unwrap();
+    let i = info.params.iter().position(|p| p.name == "wte").unwrap();
+    let ta = download_f32(&a.params()[i]).unwrap();
+    let tb = download_f32(&b.params()[i]).unwrap();
+    let tc = download_f32(&c.params()[i]).unwrap();
+    assert_eq!(ta.data, tb.data);
+    assert_ne!(ta.data, tc.data);
+}
+
+#[test]
+fn train_step_reduces_loss_on_repeated_batch() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.load("gpt2-s-proxy", "ours", "train").unwrap();
+    let mut st = TrainState::init(&rt, "gpt2-s-proxy", "ours", 0).unwrap();
+    let batch = rt.upload_i32(&fake_batch(&rt, "gpt2-s-proxy", 1)).unwrap();
+    let mut losses = Vec::new();
+    for _ in 0..6 {
+        let (st2, loss, gnorm) = st.train_step(&exe, &batch).unwrap();
+        assert!(loss.is_finite() && gnorm.is_finite());
+        losses.push(loss);
+        st = st2;
+    }
+    assert_eq!(st.step().unwrap(), 6);
+    assert!(
+        losses.last().unwrap() < &(losses[0] - 0.05),
+        "no descent: {losses:?}"
+    );
+    // loss at init ≈ ln(vocab)
+    let vocab = rt.manifest.model("gpt2-s-proxy").unwrap().vocab as f32;
+    assert!((losses[0] - vocab.ln()).abs() < 1.0, "{}", losses[0]);
+}
+
+#[test]
+fn grad_then_apply_matches_fused_train() {
+    let Some(rt) = runtime() else { return };
+    let train = rt.load("gpt2-s-proxy", "ours", "train").unwrap();
+    let grad = rt.load("gpt2-s-proxy", "ours", "grad").unwrap();
+    let apply = rt.load("gpt2-s-proxy", "ours", "apply").unwrap();
+    let batch_t = fake_batch(&rt, "gpt2-s-proxy", 2);
+
+    // fused path
+    let st_a = TrainState::init(&rt, "gpt2-s-proxy", "ours", 1).unwrap();
+    let batch = rt.upload_i32(&batch_t).unwrap();
+    let (st_a, loss_fused, _) = st_a.train_step(&train, &batch).unwrap();
+
+    // split path
+    let st_b = TrainState::init(&rt, "gpt2-s-proxy", "ours", 1).unwrap();
+    let mut args = st_b.param_refs();
+    args.push(&batch);
+    let mut gout = grad.run(&args).unwrap();
+    let loss_buf = gout.pop().unwrap();
+    let loss_split = download_f32(&loss_buf).unwrap().item();
+    let (st_b, _) = st_b.apply_step(&apply, &gout).unwrap();
+
+    assert!((loss_fused - loss_split).abs() < 1e-5, "{loss_fused} vs {loss_split}");
+    for (a, b) in st_a.params().iter().zip(st_b.params()) {
+        let (ta, tb) = (download_f32(a).unwrap(), download_f32(b).unwrap());
+        for (x, y) in ta.data.iter().zip(&tb.data) {
+            assert!((x - y).abs() < 1e-6, "{x} vs {y}");
+        }
+    }
+}
+
+#[test]
+fn eval_full_precision_near_log_vocab_at_init() {
+    let Some(rt) = runtime() else { return };
+    let eval = rt.load("gpt2-s-proxy", "ours", "eval").unwrap();
+    let st = TrainState::init(&rt, "gpt2-s-proxy", "ours", 0).unwrap();
+    let info = rt.manifest.model("gpt2-s-proxy").unwrap();
+    let tokens: Vec<i32> = (0..200_000).map(|i| (i % 512) as i32).collect();
+    let ds = TokenDataset::new(
+        tokens,
+        DatasetConfig { seq: info.seq, batch: rt.manifest.batch, val_frac: 0.2, seed: 0 },
+    );
+    let nll = eval_nll(&rt, &eval, &st, &ds.val_batches()[..2]).unwrap();
+    assert!((nll - (512f64).ln()).abs() < 1.0, "{nll}");
+}
+
+#[test]
+fn pallas_artifact_runs_and_matches_jnp_variant() {
+    let Some(rt) = runtime() else { return };
+    let jnp = rt.load("gpt2-s-proxy", "ours", "train").unwrap();
+    let pal = rt.load_variant("gpt2-s-proxy", "ours", "train", true).unwrap();
+    let batch = rt.upload_i32(&fake_batch(&rt, "gpt2-s-proxy", 3)).unwrap();
+
+    let st1 = TrainState::init(&rt, "gpt2-s-proxy", "ours", 2).unwrap();
+    let (_, loss_jnp, _) = st1.train_step(&jnp, &batch).unwrap();
+    let st2 = TrainState::init(&rt, "gpt2-s-proxy", "ours", 2).unwrap();
+    let (_, loss_pal, _) = st2.train_step(&pal, &batch).unwrap();
+    assert!(
+        (loss_jnp - loss_pal).abs() < 1e-4,
+        "jnp {loss_jnp} vs pallas {loss_pal}"
+    );
+}
+
+#[test]
+fn capture_step_shapes() {
+    let Some(rt) = runtime() else { return };
+    let cap = rt.load("gpt2-s-proxy", "ours", "capture").unwrap();
+    let st = TrainState::init(&rt, "gpt2-s-proxy", "ours", 0).unwrap();
+    let batch = rt.upload_i32(&fake_batch(&rt, "gpt2-s-proxy", 4)).unwrap();
+    let mut args = st.param_refs();
+    args.push(&batch);
+    let out = cap.run(&args).unwrap();
+    let info = rt.manifest.model("gpt2-s-proxy").unwrap();
+    let attn = download_f32(&out[0]).unwrap();
+    assert_eq!(attn.shape, vec![info.seq, info.seq]);
+    // rows sum to 1 (softmax)
+    let row: f32 = attn.data[..info.seq].iter().sum();
+    assert!((row - 1.0).abs() < 1e-4, "{row}");
+}
