@@ -5,6 +5,7 @@
 use fp4train::bench::Bencher;
 use fp4train::formats::codec::{decode_slice, encode_slice, pack_fp4, unpack_fp4};
 use fp4train::formats::{fake_quant_rows, Granularity, FP4_E2M1, FP8_E4M3};
+use fp4train::kernels::fake_quant_rows_auto;
 use fp4train::quant::{default_fp4, dequantize};
 use fp4train::tensor::Tensor;
 use fp4train::util::rng::Rng;
@@ -35,6 +36,9 @@ fn main() {
         b.bench(&format!("fake_quant/{name}"), Some((n as f64, "elem/s")), || {
             std::hint::black_box(fake_quant_rows(&data, n / 128, 128, FP4_E2M1, g));
         });
+        b.bench(&format!("fake_quant_fast/{name}"), Some((n as f64, "elem/s")), || {
+            std::hint::black_box(fake_quant_rows_auto(&data, n / 128, 128, FP4_E2M1, g));
+        });
     }
 
     b.section("codec + packing (1M f32)");
@@ -55,4 +59,6 @@ fn main() {
     b.bench("quantize+dequantize/fp4_block128", Some((n as f64, "elem/s")), || {
         std::hint::black_box(dequantize(&default_fp4(&t)));
     });
+
+    b.write_json("BENCH_formats.json").expect("write BENCH_formats.json");
 }

@@ -1,0 +1,121 @@
+//! Kernel benches: scalar reference vs fused LUT vs parallel paths for
+//! the quantization hot loops, plus the blocked matmul.  Emits
+//! `BENCH_kernels.json` (name, iters, median_ns, mad_ns, throughput) so
+//! the perf trajectory is tracked across PRs.
+//!
+//! Acceptance anchor: `quantize_pack/64x4096/block128/fused` must beat
+//! `quantize_pack/64x4096/block128/scalar` by ≥ 3× median (checked and
+//! printed at the end of the run).
+
+use fp4train::bench::Bencher;
+use fp4train::formats::codec::encode_slice;
+use fp4train::formats::{fake_quant_rows, Granularity, FP4_E2M1, FP8_E4M3};
+use fp4train::kernels::lut::encode_slice_fast;
+use fp4train::kernels::{
+    fake_quant_rows_auto, fake_quant_rows_fast, matmul_f32, quantize_pack_rows,
+    quantize_pack_rows_auto,
+};
+use fp4train::quant::{self, GranSpec};
+use fp4train::tensor::Tensor;
+use fp4train::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::new(3, 15);
+    let mut rng = Rng::new(7);
+
+    // The acceptance-criterion shape: a 64×4096 weight matrix, FP4
+    // per-block-128 — one checkpoint-compression unit.
+    let (rows, cols) = (64usize, 4096usize);
+    let n = rows * cols;
+    let data: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 0.5)).collect();
+    let t = Tensor::from_vec(&[rows, cols], data.clone());
+    let g = Granularity::PerBlock(128);
+
+    // correctness guard: a bench comparing unequal outputs is meaningless
+    let fast = quantize_pack_rows(&data, rows, cols, FP4_E2M1, g);
+    let slow = quant::quantize_scalar(&t, FP4_E2M1, GranSpec::PerBlock(128));
+    assert_eq!(fast.0, slow.packed, "fused != scalar — bench aborted");
+    assert_eq!(
+        quantize_pack_rows_auto(&data, rows, cols, FP4_E2M1, g).0,
+        slow.packed,
+        "parallel != scalar — bench aborted"
+    );
+
+    b.section("quantize+pack, 64x4096 fp4 per-block-128 (acceptance anchor)");
+    b.bench("quantize_pack/64x4096/block128/scalar", Some((n as f64, "elem/s")), || {
+        std::hint::black_box(quant::quantize_scalar(&t, FP4_E2M1, GranSpec::PerBlock(128)));
+    });
+    b.bench("quantize_pack/64x4096/block128/fused", Some((n as f64, "elem/s")), || {
+        std::hint::black_box(quantize_pack_rows(&data, rows, cols, FP4_E2M1, g));
+    });
+    b.bench("quantize_pack/64x4096/block128/parallel", Some((n as f64, "elem/s")), || {
+        std::hint::black_box(quantize_pack_rows_auto(&data, rows, cols, FP4_E2M1, g));
+    });
+
+    b.section("fake-quant, 64x4096 fp4 per-block-128");
+    b.bench("fake_quant/64x4096/scalar", Some((n as f64, "elem/s")), || {
+        std::hint::black_box(fake_quant_rows(&data, rows, cols, FP4_E2M1, g));
+    });
+    b.bench("fake_quant/64x4096/fused", Some((n as f64, "elem/s")), || {
+        std::hint::black_box(fake_quant_rows_fast(&data, rows, cols, FP4_E2M1, g));
+    });
+    b.bench("fake_quant/64x4096/parallel", Some((n as f64, "elem/s")), || {
+        std::hint::black_box(fake_quant_rows_auto(&data, rows, cols, FP4_E2M1, g));
+    });
+
+    b.section("raw encode, 256k f32");
+    let sample = &data[..1 << 18];
+    for fmt in [FP4_E2M1, FP8_E4M3] {
+        b.bench(&format!("encode/{}/scalar", fmt.name), Some((sample.len() as f64, "elem/s")), || {
+            std::hint::black_box(encode_slice(fmt, sample));
+        });
+        b.bench(&format!("encode/{}/lut", fmt.name), Some((sample.len() as f64, "elem/s")), || {
+            std::hint::black_box(encode_slice_fast(fmt, sample));
+        });
+    }
+
+    b.section("checkpoint roundtrip (quantize+dequantize, 64x4096 fp4)");
+    b.bench("ckpt_roundtrip/fp4_block128", Some((n as f64, "elem/s")), || {
+        std::hint::black_box(quant::dequantize(&quant::default_fp4(&t)));
+    });
+
+    b.section("matmul (probe trainer shapes)");
+    let (m, k, nn) = (512usize, 512usize, 64usize);
+    let a: Vec<f32> = (0..m * k).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let bb: Vec<f32> = (0..k * nn).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let macs = (m * k * nn) as f64;
+    b.bench("matmul/512x512x64/naive", Some((macs, "mac/s")), || {
+        // the pre-kernels loop, inlined here as the baseline
+        let mut out = vec![0.0f32; m * nn];
+        for i in 0..m {
+            for kk in 0..k {
+                let av = a[i * k + kk];
+                if av == 0.0 {
+                    continue;
+                }
+                let row = &bb[kk * nn..(kk + 1) * nn];
+                let dst = &mut out[i * nn..(i + 1) * nn];
+                for (o, &bv) in dst.iter_mut().zip(row) {
+                    *o += av * bv;
+                }
+            }
+        }
+        std::hint::black_box(out);
+    });
+    b.bench("matmul/512x512x64/blocked", Some((macs, "mac/s")), || {
+        std::hint::black_box(matmul_f32(&a, &bb, m, k, nn));
+    });
+
+    b.write_json("BENCH_kernels.json").expect("write BENCH_kernels.json");
+
+    let anchor = b
+        .speedup("quantize_pack/64x4096/block128/scalar", "quantize_pack/64x4096/block128/fused")
+        .unwrap();
+    let par = b
+        .speedup("quantize_pack/64x4096/block128/scalar", "quantize_pack/64x4096/block128/parallel")
+        .unwrap();
+    println!("\nacceptance anchor: fused {anchor:.2}x vs scalar (target >= 3x), parallel {par:.2}x");
+    if anchor < 3.0 {
+        println!("WARNING: fused speedup below the 3x acceptance bar");
+    }
+}

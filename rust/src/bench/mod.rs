@@ -1,9 +1,12 @@
 //! From-scratch micro/macro-benchmark harness (criterion is not in the
-//! offline registry): warmup, timed iterations, median/MAD reporting, and
-//! simple regression guards.  Used by every `[[bench]]` target.
+//! offline registry): warmup, timed iterations, median/MAD reporting,
+//! simple regression guards, and machine-readable JSON dumps
+//! (`BENCH_<name>.json`) so the perf trajectory is tracked across PRs.
+//! Used by every `[[bench]]` target.
 
 use std::time::Instant;
 
+use crate::util::json::{obj, Json};
 use crate::util::stats::{mad, median};
 
 #[derive(Clone, Debug)]
@@ -16,6 +19,23 @@ pub struct BenchResult {
 }
 
 impl BenchResult {
+    /// Machine-readable form: {name, iters, median_ns, mad_ns,
+    /// throughput, throughput_unit} (throughput fields null when unset).
+    pub fn to_json(&self) -> Json {
+        let (tp, unit) = match self.throughput {
+            Some((v, u)) => (Json::Num(v), Json::Str(u.to_string())),
+            None => (Json::Null, Json::Null),
+        };
+        obj(vec![
+            ("name", self.name.as_str().into()),
+            ("iters", self.iters.into()),
+            ("median_ns", Json::Num(self.median_ns)),
+            ("mad_ns", Json::Num(self.mad_ns)),
+            ("throughput", tp),
+            ("throughput_unit", unit),
+        ])
+    }
+
     pub fn line(&self) -> String {
         let t = if self.median_ns > 1e9 {
             format!("{:>9.3} s ", self.median_ns / 1e9)
@@ -82,6 +102,25 @@ impl Bencher {
     pub fn section(&self, title: &str) {
         println!("\n=== {title} ===");
     }
+
+    /// Median nanoseconds of a recorded result, by exact name.
+    pub fn median_of(&self, name: &str) -> Option<f64> {
+        self.results.iter().find(|r| r.name == name).map(|r| r.median_ns)
+    }
+
+    /// Speedup of `fast` relative to `base` (e.g. 3.2 = 3.2× faster).
+    pub fn speedup(&self, base: &str, fast: &str) -> Option<f64> {
+        Some(self.median_of(base)? / self.median_of(fast)?.max(1e-9))
+    }
+
+    /// Write every recorded result as a JSON array to `path` — the
+    /// cross-PR perf-trajectory artifact (e.g. `BENCH_kernels.json`).
+    pub fn write_json(&self, path: &str) -> std::io::Result<()> {
+        let arr = Json::Arr(self.results.iter().map(|r| r.to_json()).collect());
+        std::fs::write(path, arr.to_string_pretty() + "\n")?;
+        println!("\nwrote {} results to {path}", self.results.len());
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -101,6 +140,31 @@ mod tests {
         assert!(b.results[0].median_ns > 0.0);
         assert!(b.results[0].throughput.unwrap().0 > 0.0);
         assert!(acc > 0);
+    }
+
+    #[test]
+    fn json_roundtrips_and_reports_speedup() {
+        let mut b = Bencher::new(0, 1);
+        b.results.push(BenchResult {
+            name: "scalar".into(),
+            iters: 1,
+            median_ns: 300.0,
+            mad_ns: 1.0,
+            throughput: Some((1e6, "elem/s")),
+        });
+        b.results.push(BenchResult {
+            name: "lut".into(),
+            iters: 1,
+            median_ns: 100.0,
+            mad_ns: 1.0,
+            throughput: None,
+        });
+        assert_eq!(b.speedup("scalar", "lut"), Some(3.0));
+        let j = Json::Arr(b.results.iter().map(|r| r.to_json()).collect());
+        let parsed = Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(parsed.idx(0).unwrap().get("median_ns").unwrap().as_f64(), Some(300.0));
+        assert_eq!(parsed.idx(0).unwrap().get("throughput_unit").unwrap().as_str(), Some("elem/s"));
+        assert_eq!(parsed.idx(1).unwrap().get("throughput"), Some(&Json::Null));
     }
 
     #[test]

@@ -8,6 +8,9 @@
 //! optionally be stored FP4/FP8-quantized (per-block 128 codes + scales,
 //! via `quant`) — the low-precision formats doing double duty as a
 //! storage codec; Adam moments and the step are always f32/i32.
+//! Compression runs on the fused LUT kernels and goes row-parallel for
+//! large weight matrices (see `kernels::parallel`), so checkpoint cadence
+//! doesn't stall the train loop.
 
 use std::io::{Read, Write};
 use std::path::Path;
@@ -18,7 +21,7 @@ use flate2::write::GzEncoder;
 use flate2::Compression;
 
 use crate::formats::{FP4_E2M1, FP8_E4M3};
-use crate::quant::{dequantize, quantize, GranSpec, QuantizedTensor};
+use crate::quant::{dequantize, quantize_block128, GranSpec, QuantizedTensor};
 use crate::tensor::Tensor;
 use crate::util::json::{obj, Json};
 
@@ -75,7 +78,7 @@ fn tensor_blob(t: &Tensor, codec: WeightCodec) -> (Json, Vec<u8>) {
         }
         WeightCodec::Fp8Block | WeightCodec::Fp4Block => {
             let fmt = if codec == WeightCodec::Fp8Block { FP8_E4M3 } else { FP4_E2M1 };
-            let q = quantize(t, fmt, GranSpec::PerBlock(128));
+            let q = quantize_block128(t, fmt);
             let mut bytes = Vec::with_capacity(q.packed.len() + q.scales.len() * 4);
             bytes.extend_from_slice(&q.packed);
             for s in &q.scales {

@@ -77,12 +77,17 @@ fn softmax_rows(logits: &mut [f32], n: usize, c: usize) {
 
 impl Probe {
     /// Full-batch GD with L2; features should be roughly unit scale.
+    /// Both matmuls (forward logits and the x^T-residual gradient) run on
+    /// the cache-blocked `kernels::matmul_f32` via `Tensor::matmul`, which
+    /// also goes row-parallel for large feature matrices — the probe-eval
+    /// hot path.
     pub fn fit(x: &Tensor, y: &[usize], classes: usize, epochs: usize, lr: f32) -> Probe {
         let (n, d) = (x.shape[0], x.shape[1]);
         assert_eq!(n, y.len());
         let mut w = Tensor::zeros(&[d, classes]);
         let mut b = vec![0.0f32; classes];
         let l2 = 1e-3f32;
+        let xt = x.transpose2(); // hoisted: reused by every epoch's gradient
         for _ in 0..epochs {
             // logits = x @ w + b
             let mut logits = x.matmul(&w);
@@ -92,24 +97,22 @@ impl Probe {
                 }
             }
             softmax_rows(&mut logits.data, n, classes);
-            // grad = x^T (p - onehot) / n
+            // residual = (p - onehot) / n
             for (r, &label) in y.iter().enumerate() {
                 logits.data[r * classes + label] -= 1.0;
             }
-            let mut gw = vec![0.0f32; d * classes];
+            for v in logits.data.iter_mut() {
+                *v /= n as f32;
+            }
             let mut gb = vec![0.0f32; classes];
             for r in 0..n {
                 for c in 0..classes {
-                    let g = logits.data[r * classes + c] / n as f32;
-                    gb[c] += g;
-                    if g != 0.0 {
-                        for k in 0..d {
-                            gw[k * classes + c] += x.data[r * d + k] * g;
-                        }
-                    }
+                    gb[c] += logits.data[r * classes + c];
                 }
             }
-            for (wv, g) in w.data.iter_mut().zip(&gw) {
+            // gw = x^T @ residual, (d, n) @ (n, C)
+            let gw = xt.matmul(&logits);
+            for (wv, g) in w.data.iter_mut().zip(&gw.data) {
                 *wv -= lr * (g + l2 * *wv);
             }
             for (bv, g) in b.iter_mut().zip(&gb) {

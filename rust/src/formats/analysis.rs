@@ -27,7 +27,7 @@ pub fn measure(
     fmt: FpFormat,
     g: Granularity,
 ) -> QuantErrorStats {
-    let q = super::fake_quant_rows(x, rows, cols, fmt, g);
+    let q = crate::kernels::fake_quant_rows_auto(x, rows, cols, fmt, g);
     let mut under = 0u64;
     let mut over = 0u64;
     let mut nonzero = 0u64;
@@ -73,8 +73,8 @@ pub fn disagreement_rate(
     g: Granularity,
     tol: f32,
 ) -> f64 {
-    let qa = super::fake_quant_rows(x, rows, cols, a, g);
-    let qb = super::fake_quant_rows(x, rows, cols, b, g);
+    let qa = crate::kernels::fake_quant_rows_auto(x, rows, cols, a, g);
+    let qb = crate::kernels::fake_quant_rows_auto(x, rows, cols, b, g);
     let mut diff = 0u64;
     let mut nz = 0u64;
     for (&va, (&vb, &orig)) in qa.iter().zip(qb.iter().zip(x)) {

@@ -62,19 +62,16 @@ pub fn pack_fp4(codes: &[u8]) -> Vec<u8> {
     out
 }
 
-/// Unpack `n` FP4 codes.
+/// Unpack `n` FP4 codes (short `packed` yields what is available, as
+/// before — corrupt checkpoints surface as a size error downstream, not a
+/// panic here).
 pub fn unpack_fp4(packed: &[u8], n: usize) -> Vec<u8> {
+    let n = n.min(packed.len() * 2);
     let mut out = Vec::with_capacity(n);
-    for (i, &b) in packed.iter().enumerate() {
-        out.push(b & 0x0F);
-        if 2 * i + 1 < n {
-            out.push(b >> 4);
-        }
-        if out.len() >= n {
-            break;
-        }
+    for i in 0..n {
+        let b = packed[i / 2];
+        out.push(if i & 1 == 0 { b & 0x0F } else { b >> 4 });
     }
-    out.truncate(n);
     out
 }
 
@@ -171,6 +168,15 @@ mod tests {
             prop_assert!(unpack_fp4(&packed, n) == codes);
             Ok(())
         });
+    }
+
+    #[test]
+    fn unpack_tolerates_short_input() {
+        // legacy behavior: a too-short packed buffer yields what it holds
+        assert_eq!(unpack_fp4(&[0xAB], 4), vec![0x0B, 0x0A]);
+        assert_eq!(unpack_fp4(&[], 3), Vec::<u8>::new());
+        // and a too-long one is ignored past n
+        assert_eq!(unpack_fp4(&[0x21, 0x43], 3), vec![1, 2, 3]);
     }
 
     #[test]

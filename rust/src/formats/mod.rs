@@ -133,8 +133,26 @@ pub enum Granularity {
     PerBlock(usize),
 }
 
+/// Effective block length for `PerBlock(b)` over `cols`-long rows: the
+/// block itself when it divides the row, else the whole row (mirrors the
+/// python fallback).  The single source of truth for this geometry —
+/// `fake_quant_rows`, `quant::quantize`/`dequantize`, and the fused
+/// kernels all call it, so packed codes and scales can never disagree on
+/// group boundaries.
+#[inline]
+pub fn effective_block(cols: usize, b: usize) -> usize {
+    if cols % b == 0 {
+        b
+    } else {
+        cols
+    }
+}
+
 /// Fake-quantize a row-major (rows, cols) matrix along its columns axis
 /// with absmax scaling — the rust mirror of `fake_quant(axis=-1)`.
+/// This is the scalar reference implementation; the production hot path is
+/// `kernels::fake_quant_rows_auto`, which is property-tested bit-identical
+/// to it.
 pub fn fake_quant_rows(x: &[f32], rows: usize, cols: usize, fmt: FpFormat, g: Granularity) -> Vec<f32> {
     assert_eq!(x.len(), rows * cols);
     let mut out = vec![0.0f32; x.len()];
@@ -155,7 +173,7 @@ pub fn fake_quant_rows(x: &[f32], rows: usize, cols: usize, fmt: FpFormat, g: Gr
             }
         }
         Granularity::PerBlock(b) => {
-            let b = if cols % b == 0 { b } else { cols }; // degenerate fallback (mirrors python)
+            let b = effective_block(cols, b);
             for r in 0..rows {
                 for blk in 0..cols / b {
                     let seg = &x[r * cols + blk * b..r * cols + blk * b + b];
@@ -171,7 +189,10 @@ pub fn fake_quant_rows(x: &[f32], rows: usize, cols: usize, fmt: FpFormat, g: Gr
     out
 }
 
-fn scale_of(xs: impl Iterator<Item = f32>, fmt: FpFormat) -> f32 {
+/// Absmax group scale: `absmax / max_value`, or 1.0 for all-zero groups.
+/// Shared by the scalar reference, `quant`, and the fused kernels so every
+/// path folds the maximum in the same order (bit-identical scales).
+pub fn scale_of(xs: impl Iterator<Item = f32>, fmt: FpFormat) -> f32 {
     let absmax = xs.fold(0.0f32, |a, x| a.max(x.abs()));
     if absmax == 0.0 {
         1.0
@@ -296,6 +317,14 @@ mod tests {
         let am2 = x[128..].iter().fold(0.0f32, |a, &v| a.max(v.abs()));
         assert_eq!(q[..128].iter().fold(0.0f32, |a, &v| a.max(v.abs())), am1);
         assert_eq!(q[128..].iter().fold(0.0f32, |a, &v| a.max(v.abs())), am2);
+    }
+
+    #[test]
+    fn effective_block_fallback() {
+        assert_eq!(effective_block(256, 128), 128);
+        assert_eq!(effective_block(256, 256), 256);
+        assert_eq!(effective_block(100, 32), 100); // degenerate: whole row
+        assert_eq!(effective_block(129, 43), 43);
     }
 
     #[test]

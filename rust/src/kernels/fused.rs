@@ -1,0 +1,260 @@
+//! Single-pass fused row kernels: group absmax → scale → project/encode →
+//! (FP4) nibble-pack, one sweep per group, bit-identical to the scalar
+//! reference (`formats::fake_quant_rows`, `quant::quantize_scalar`).
+//!
+//! The per-element `x / s` is replaced by `x * (1/s)` only when `s` is a
+//! normal power of two: then the reciprocal is exact and both operations
+//! correctly round the same real value, so the results agree bit-for-bit.
+//! For every other scale the division stays — the speedup comes from the
+//! LUT/bit-twiddle encode, not from approximating the divide.
+
+use crate::formats::{effective_block, scale_of, FpFormat, Granularity};
+
+use super::lut::{encode_fast, lut_of};
+
+/// Contiguous group length for a flat (rows × cols) sweep: the whole
+/// tensor, one row, or one block (with the shared degenerate fallback).
+pub(crate) fn group_len(n: usize, cols: usize, g: Granularity) -> usize {
+    match g {
+        Granularity::PerTensor => n.max(1),
+        Granularity::PerRow => cols.max(1),
+        Granularity::PerBlock(b) => effective_block(cols.max(1), b),
+    }
+}
+
+/// `1/s` when it is exactly representable and multiplication by it is
+/// bit-identical to division by `s` (s a normal power of two), else None.
+#[inline]
+fn exact_recip(s: f32) -> Option<f32> {
+    let b = s.to_bits();
+    let exp = (b >> 23) & 0xFF;
+    if b & 0x7F_FFFF == 0 && exp != 0 && exp != 255 {
+        Some(1.0 / s)
+    } else {
+        None
+    }
+}
+
+/// One fake-quant element: edge cases (±0, non-finite) take the scalar
+/// reference so legacy NaN/inf behavior is reproduced exactly; the hot
+/// path is one table load.
+#[inline(always)]
+fn fq_one(fmt: FpFormat, table: &[f32], y: f32, s: f32) -> f32 {
+    if y == 0.0 || !y.is_finite() {
+        fmt.quantize(y) * s
+    } else {
+        table[encode_fast(fmt, y) as usize] * s
+    }
+}
+
+/// Fused fake-quant over consecutive `glen`-long groups of `x` into `out`.
+pub(crate) fn fake_quant_groups(x: &[f32], glen: usize, fmt: FpFormat, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    if x.is_empty() {
+        return;
+    }
+    let table = lut_of(fmt);
+    for (seg, dst) in x.chunks(glen).zip(out.chunks_mut(glen)) {
+        let s = scale_of(seg.iter().copied(), fmt);
+        let recip = exact_recip(s);
+        match (table, recip) {
+            (Some(t), Some(r)) => {
+                for (o, &v) in dst.iter_mut().zip(seg) {
+                    *o = fq_one(fmt, t, v * r, s);
+                }
+            }
+            (Some(t), None) => {
+                for (o, &v) in dst.iter_mut().zip(seg) {
+                    *o = fq_one(fmt, t, v / s, s);
+                }
+            }
+            // no LUT for this format: plain scalar reference
+            (None, _) => {
+                for (o, &v) in dst.iter_mut().zip(seg) {
+                    *o = fmt.quantize(v / s) * s;
+                }
+            }
+        }
+    }
+}
+
+/// Fused, LUT-based fake quantization — drop-in, bit-identical replacement
+/// for `formats::fake_quant_rows`.
+pub fn fake_quant_rows_fast(
+    x: &[f32],
+    rows: usize,
+    cols: usize,
+    fmt: FpFormat,
+    g: Granularity,
+) -> Vec<f32> {
+    assert_eq!(x.len(), rows * cols);
+    let mut out = vec![0.0f32; x.len()];
+    fake_quant_groups(x, group_len(x.len(), cols, g), fmt, &mut out);
+    out
+}
+
+/// Fused quantize+encode(+pack) over consecutive `glen`-long groups.
+/// Returns (packed codes — two per byte for ≤4-bit formats, one per byte
+/// otherwise — and one f32 scale per group), matching
+/// `codec::pack_fp4(codec::encode_slice(..))` byte-for-byte.
+pub(crate) fn quantize_pack_groups(
+    x: &[f32],
+    glen: usize,
+    fmt: FpFormat,
+) -> (Vec<u8>, Vec<f32>) {
+    let n = x.len();
+    let pack = fmt.bits() <= 4;
+    let mut scales = Vec::with_capacity(if n == 0 { 0 } else { n.div_ceil(glen) });
+    let mut out = Vec::with_capacity(if pack { n.div_ceil(2) } else { n });
+    let mut carry = 0u8; // pending low nibble (packing can straddle groups)
+    let mut have_carry = false;
+    for seg in x.chunks(glen) {
+        let s = scale_of(seg.iter().copied(), fmt);
+        scales.push(s);
+        let recip = exact_recip(s);
+        for &v in seg {
+            let y = match recip {
+                Some(r) => v * r,
+                None => v / s,
+            };
+            let c = encode_fast(fmt, y);
+            if pack {
+                if have_carry {
+                    out.push(carry | (c << 4));
+                    have_carry = false;
+                } else {
+                    carry = c & 0x0F;
+                    have_carry = true;
+                }
+            } else {
+                out.push(c);
+            }
+        }
+    }
+    if have_carry {
+        out.push(carry);
+    }
+    (out, scales)
+}
+
+/// Fused quantize+pack for a row-major (rows × cols) matrix along its
+/// columns axis — the single-pass core of `quant::quantize`.
+pub fn quantize_pack_rows(
+    x: &[f32],
+    rows: usize,
+    cols: usize,
+    fmt: FpFormat,
+    g: Granularity,
+) -> (Vec<u8>, Vec<f32>) {
+    assert_eq!(x.len(), rows * cols);
+    quantize_pack_groups(x, group_len(x.len(), cols, g), fmt)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::codec::{encode_slice, pack_fp4};
+    use crate::formats::{fake_quant_rows, FP4_E2M1, FP8_E4M3, FP8_E5M2};
+    use crate::prop_assert;
+    use crate::util::proptest::prop_check;
+
+    fn grans(cols: usize) -> Vec<Granularity> {
+        vec![
+            Granularity::PerTensor,
+            Granularity::PerRow,
+            Granularity::PerBlock(32),
+            Granularity::PerBlock(cols), // exercises full-row blocks
+            Granularity::PerBlock(7),    // degenerate fallback unless 7 | cols
+        ]
+    }
+
+    #[test]
+    fn fused_fake_quant_bit_identical_to_scalar() {
+        for fmt in [FP4_E2M1, FP8_E4M3, FP8_E5M2] {
+            prop_check("fake_quant_rows_fast == fake_quant_rows", 120, |c| {
+                let rows = c.usize_in(1, 5);
+                let cols = [31usize, 32, 64, 96, 128][c.usize_in(0, 4)];
+                let x = c.f32_vec_wild(rows * cols, rows * cols);
+                for g in grans(cols) {
+                    let fast = fake_quant_rows_fast(&x, rows, cols, fmt, g);
+                    let slow = fake_quant_rows(&x, rows, cols, fmt, g);
+                    for (i, (a, b)) in fast.iter().zip(&slow).enumerate() {
+                        let same = a.to_bits() == b.to_bits()
+                            || (a.is_nan() && b.is_nan());
+                        prop_assert!(same, "{} {g:?} idx {i}: {a} vs {b}", fmt.name);
+                    }
+                }
+                Ok(())
+            });
+        }
+    }
+
+    #[test]
+    fn fused_pack_byte_identical_to_codec_pipeline() {
+        for fmt in [FP4_E2M1, FP8_E4M3] {
+            prop_check("quantize_pack_rows == encode+pack", 120, |c| {
+                let rows = c.usize_in(1, 5);
+                let cols = [31usize, 32, 33, 64, 128][c.usize_in(0, 4)];
+                let x = c.f32_vec_wild(rows * cols, rows * cols);
+                for g in grans(cols) {
+                    let (packed, scales) = quantize_pack_rows(&x, rows, cols, fmt, g);
+                    // reference: per-group scalar encode, then one global pack
+                    let glen = group_len(x.len(), cols, g);
+                    let mut ref_codes = Vec::new();
+                    let mut ref_scales = Vec::new();
+                    for seg in x.chunks(glen) {
+                        let s = scale_of(seg.iter().copied(), fmt);
+                        ref_scales.push(s);
+                        let scaled: Vec<f32> = seg.iter().map(|&v| v / s).collect();
+                        ref_codes.extend(encode_slice(fmt, &scaled));
+                    }
+                    let ref_packed =
+                        if fmt.bits() <= 4 { pack_fp4(&ref_codes) } else { ref_codes };
+                    prop_assert!(
+                        scales.iter().map(|s| s.to_bits()).eq(
+                            ref_scales.iter().map(|s| s.to_bits())
+                        ),
+                        "{} {g:?} scales differ", fmt.name
+                    );
+                    prop_assert!(packed == ref_packed, "{} {g:?} bytes differ", fmt.name);
+                }
+                Ok(())
+            });
+        }
+    }
+
+    #[test]
+    fn exact_recip_only_for_powers_of_two() {
+        assert_eq!(exact_recip(2.0), Some(0.5));
+        assert_eq!(exact_recip(0.25), Some(4.0));
+        assert_eq!(exact_recip(1.0), Some(1.0));
+        assert_eq!(exact_recip(3.0), None);
+        assert_eq!(exact_recip(1.0 / 6.0), None);
+        assert_eq!(exact_recip(0.0), None);
+        assert_eq!(exact_recip(f32::INFINITY), None);
+        assert_eq!(exact_recip(f32::MIN_POSITIVE / 2.0), None); // subnormal
+    }
+
+    #[test]
+    fn recip_path_engages_and_stays_exact() {
+        // absmax 6.0 → scale 1.0 for FP4 (power of two): multiply path
+        let x: Vec<f32> = (0..64).map(|i| (i as f32 / 11.0) - 3.0).collect();
+        let mut x = x;
+        x[0] = 6.0;
+        let fast = fake_quant_rows_fast(&x, 1, 64, FP4_E2M1, Granularity::PerRow);
+        let slow = fake_quant_rows(&x, 1, 64, FP4_E2M1, Granularity::PerRow);
+        assert_eq!(
+            fast.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            slow.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn empty_and_zero_inputs() {
+        let (p, s) = quantize_pack_rows(&[], 0, 0, FP4_E2M1, Granularity::PerRow);
+        assert!(p.is_empty() && s.is_empty());
+        let z = vec![0.0f32; 64];
+        let fq = fake_quant_rows_fast(&z, 2, 32, FP4_E2M1, Granularity::PerBlock(16));
+        assert!(fq.iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,297 @@
+//! Decode LUTs and direct f32-bits → code encoders.
+//!
+//! Contract: for every f32 bit pattern `x` and every supported format,
+//! `encode_fast(fmt, x) == codec::encode(fmt, x)` and for every code `c`,
+//! `decode_lut(fmt)[c] == codec::decode(fmt, c)` — bit-for-bit, including
+//! the sign of zero.  Non-finite inputs take the scalar path so even the
+//! legacy inf/NaN quirks are reproduced exactly.
+
+use std::sync::OnceLock;
+
+use crate::formats::{codec, exp2i, FpFormat, FP4_E2M1, FP8_E4M3, FP8_E5M2};
+
+/// FP4 E2M1 decode table, indexed by the 4-bit code `s|ee|m`.
+/// Codes 8..16 are the negative mirror; code 8 is −0.0 (as `codec::decode`
+/// returns `-1.0 * 0.0`).
+pub const FP4_DECODE: [f32; 16] = [
+    0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0, //
+    -0.0, -0.5, -1.0, -1.5, -2.0, -3.0, -4.0, -6.0,
+];
+
+static FP8_E4M3_DECODE: OnceLock<[f32; 256]> = OnceLock::new();
+static FP8_E5M2_DECODE: OnceLock<[f32; 256]> = OnceLock::new();
+
+fn build_fp8_table(fmt: FpFormat) -> [f32; 256] {
+    let mut t = [0.0f32; 256];
+    for (c, slot) in t.iter_mut().enumerate() {
+        *slot = codec::decode(fmt, c as u8);
+    }
+    t
+}
+
+/// The decode table for a supported format, or None for formats that have
+/// no LUT (callers then fall back to `codec::decode`).
+pub(crate) fn lut_of(fmt: FpFormat) -> Option<&'static [f32]> {
+    if fmt == FP4_E2M1 {
+        Some(&FP4_DECODE)
+    } else if fmt == FP8_E4M3 {
+        Some(FP8_E4M3_DECODE.get_or_init(|| build_fp8_table(FP8_E4M3)))
+    } else if fmt == FP8_E5M2 {
+        Some(FP8_E5M2_DECODE.get_or_init(|| build_fp8_table(FP8_E5M2)))
+    } else {
+        None
+    }
+}
+
+/// The decode table for `fmt`; panics for formats without one.
+pub fn decode_lut(fmt: FpFormat) -> &'static [f32] {
+    lut_of(fmt).unwrap_or_else(|| panic!("no decode LUT for {}", fmt.name))
+}
+
+/// LUT decode, falling back to the scalar codec for unknown formats.
+#[inline]
+pub fn decode_fast(fmt: FpFormat, code: u8) -> f32 {
+    match lut_of(fmt) {
+        Some(t) => t[code as usize],
+        None => codec::decode(fmt, code),
+    }
+}
+
+/// FP4 E2M1 encode: a 7-comparison chain against the RNE decision
+/// boundaries of the grid ±{0, .5, 1, 1.5, 2, 3, 4, 6}.  Ties land on the
+/// even-mantissa neighbour, which fixes whether each boundary is strict:
+/// 0.25→0, 0.75→1.0, 1.25→1.0, 1.75→2.0, 2.5→2.0, 3.5→4.0, 5.0→4.0.
+#[inline(always)]
+pub fn encode4_fast(x: f32) -> u8 {
+    if !x.is_finite() {
+        return codec::encode(FP4_E2M1, x);
+    }
+    let sign = (((x.to_bits() >> 31) as u8) & 1) << 3;
+    let a = x.abs();
+    let code = (a > 0.25) as u8
+        + (a >= 0.75) as u8
+        + (a > 1.25) as u8
+        + (a >= 1.75) as u8
+        + (a > 2.5) as u8
+        + (a >= 3.5) as u8
+        + (a > 5.0) as u8;
+    sign | code
+}
+
+/// Magnitude code of `max_value` — the saturation result.  Constant for
+/// the known formats (E4M3: `s|1111|110` = 0x7E, the slot below NaN;
+/// E5M2: `s|11110|11` = 0x7B); scalar-derived otherwise.
+#[inline(always)]
+fn max_code8(fmt: FpFormat) -> u8 {
+    if fmt == FP8_E4M3 {
+        0x7E
+    } else if fmt == FP8_E5M2 {
+        0x7B
+    } else {
+        codec::encode(fmt, fmt.max_value)
+    }
+}
+
+/// FP8 encode (any 1+e+m = 8 format): integer RNE on the raw f32 mantissa
+/// bits — add (half − 1) plus the kept-LSB parity, shift, carry the
+/// mantissa overflow into the exponent.  Subnormal targets round against
+/// `min_subnormal` directly (the 2^man overflow naturally lands on the
+/// min-normal code); magnitudes at or above `max_value` saturate, which is
+/// exactly what the scalar clamp produces since the grid point below max
+/// rounds up only as far as max itself.
+#[inline(always)]
+pub fn encode8_fast(fmt: FpFormat, x: f32) -> u8 {
+    debug_assert_eq!(fmt.bits(), 8);
+    if !x.is_finite() {
+        return codec::encode(fmt, x);
+    }
+    let bits = x.to_bits();
+    let sign = (((bits >> 31) as u8) & 1) << 7;
+    let a = f32::from_bits(bits & 0x7FFF_FFFF);
+    if a >= fmt.max_value {
+        return sign | max_code8(fmt);
+    }
+    if a < fmt.min_normal() {
+        // subnormal range: mantissa = RNE(a / min_subnormal), exact because
+        // the divisor is a power of two (done as an exact multiply)
+        let m = (a * exp2i(fmt.bias - 1 + fmt.man as i32)).round_ties_even() as u32;
+        return sign | m as u8;
+    }
+    // a is f32-normal here (min_normal of both FP8 formats is >= 2^-14)
+    let e_val = ((bits >> 23) & 0xFF) as i32 - 127;
+    let shift = 23 - fmt.man;
+    let man = bits & 0x7F_FFFF;
+    let half = 1u32 << (shift - 1);
+    let r = man + (half - 1) + ((man >> shift) & 1);
+    let mut m = r >> shift;
+    let mut e_field = (e_val + fmt.bias) as u32;
+    if m >> fmt.man != 0 {
+        m = 0;
+        e_field += 1;
+    }
+    sign | ((e_field as u8) << fmt.man) | m as u8
+}
+
+/// Dispatching fast encode; falls back to `codec::encode` for formats
+/// without a specialized kernel.  Bit-identical to `codec::encode` always.
+#[inline(always)]
+pub fn encode_fast(fmt: FpFormat, x: f32) -> u8 {
+    if fmt == FP4_E2M1 {
+        encode4_fast(x)
+    } else if fmt.bits() == 8 {
+        encode8_fast(fmt, x)
+    } else {
+        codec::encode(fmt, x)
+    }
+}
+
+/// Encode a whole slice with the fast path (drop-in for
+/// `codec::encode_slice`).
+pub fn encode_slice_fast(fmt: FpFormat, xs: &[f32]) -> Vec<u8> {
+    xs.iter().map(|&x| encode_fast(fmt, x)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::proptest::prop_check;
+
+    const FMTS: [FpFormat; 3] = [FP4_E2M1, FP8_E4M3, FP8_E5M2];
+
+    #[test]
+    fn decode_luts_match_codec_for_all_codes() {
+        for c in 0u8..16 {
+            assert_eq!(
+                FP4_DECODE[c as usize].to_bits(),
+                codec::decode(FP4_E2M1, c).to_bits(),
+                "fp4 code {c}"
+            );
+        }
+        for fmt in [FP8_E4M3, FP8_E5M2] {
+            let t = decode_lut(fmt);
+            for c in 0u16..=255 {
+                assert_eq!(
+                    t[c as usize].to_bits(),
+                    codec::decode(fmt, c as u8).to_bits(),
+                    "{} code {c}",
+                    fmt.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn max_code_constants_match_scalar_encode() {
+        for fmt in [FP8_E4M3, FP8_E5M2] {
+            assert_eq!(max_code8(fmt), codec::encode(fmt, fmt.max_value), "{}", fmt.name);
+        }
+    }
+
+    #[test]
+    fn encode_fast_matches_codec_on_boundary_values() {
+        // every tie midpoint, grid point, and nextafter-neighbour of both,
+        // positive and negative — the exact spots where an RNE kernel can
+        // go wrong by one ULP of decision
+        for fmt in FMTS {
+            let grid = fmt.grid();
+            let mut probes: Vec<f32> = Vec::new();
+            for w in grid.windows(2) {
+                probes.push((w[0] + w[1]) / 2.0); // tie midpoint
+            }
+            probes.extend(grid.iter().copied());
+            probes.push(fmt.max_value * 1.5);
+            probes.push(fmt.min_subnormal() / 2.0);
+            let mut all = Vec::new();
+            for &p in &probes {
+                for v in [p, -p] {
+                    all.push(v);
+                    all.push(f32::from_bits(v.to_bits().wrapping_add(1)));
+                    all.push(f32::from_bits(v.to_bits().wrapping_sub(1)));
+                }
+            }
+            all.extend([0.0, -0.0, f32::NAN, f32::MIN_POSITIVE, f32::MAX]);
+            for x in all {
+                assert_eq!(
+                    encode_fast(fmt, x),
+                    codec::encode(fmt, x),
+                    "{}: x={x} ({:#010x})",
+                    fmt.name,
+                    x.to_bits()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn encode_fast_matches_codec_strided_bit_sweep() {
+        // deterministic sweep over the full u32 space at a prime stride:
+        // ~66k patterns covering every exponent byte and mantissa phase
+        for fmt in FMTS {
+            let mut bits = 0u32;
+            loop {
+                let x = f32::from_bits(bits);
+                if x.is_finite() {
+                    assert_eq!(
+                        encode_fast(fmt, x),
+                        codec::encode(fmt, x),
+                        "{}: bits {bits:#010x} x={x}",
+                        fmt.name
+                    );
+                }
+                let (next, wrapped) = bits.overflowing_add(65_521);
+                if wrapped {
+                    break;
+                }
+                bits = next;
+            }
+        }
+    }
+
+    #[test]
+    #[ignore = "exhaustive 3 x 2^32 sweep (~minutes); run via cargo test -- --ignored"]
+    fn encode_fast_matches_codec_exhaustive() {
+        for fmt in FMTS {
+            let mut bits = 0u32;
+            loop {
+                let x = f32::from_bits(bits);
+                if x.is_finite() {
+                    let (fast, slow) = (encode_fast(fmt, x), codec::encode(fmt, x));
+                    assert_eq!(fast, slow, "{}: bits {bits:#010x} x={x}", fmt.name);
+                }
+                bits = bits.wrapping_add(1);
+                if bits == 0 {
+                    break;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn encode_fast_matches_codec_wild_proptest() {
+        for fmt in FMTS {
+            prop_check("encode_fast == codec::encode", 400, |c| {
+                for x in c.f32_vec_wild(1, 200) {
+                    prop_assert!(
+                        encode_fast(fmt, x) == codec::encode(fmt, x),
+                        "{}: x={x}",
+                        fmt.name
+                    );
+                }
+                Ok(())
+            });
+        }
+    }
+
+    #[test]
+    fn fast_roundtrip_equals_quantize() {
+        for fmt in FMTS {
+            prop_check("lut decode∘encode == quantize", 500, |c| {
+                let x = c.f32_in(-fmt.max_value * 2.0, fmt.max_value * 2.0);
+                let via = decode_fast(fmt, encode_fast(fmt, x));
+                prop_assert!(via == fmt.quantize(x), "{}: {x} -> {via}", fmt.name);
+                Ok(())
+            });
+        }
+    }
+}

@@ -1,0 +1,121 @@
+//! Cache-blocked f32 matmul for host-side math (the probe trainer).
+//!
+//! The inner kernel keeps the contraction index ascending for every output
+//! element, so accumulation order — and therefore the f32 result — is
+//! identical to the naive `for i { for k { for j } }` loop it replaces,
+//! while the k/j tiling keeps the B panel resident in L1/L2.  Above
+//! [`PAR_MIN_FLOPS`] multiply-adds the row dimension is split across
+//! threads (rows are independent, so this too is bit-exact).
+
+/// k-tile: 256 f32 of A row + a 256-row B panel slice stay cache-hot.
+const KB: usize = 256;
+/// j-tile: 1024 f32 = 4 KiB per B row slice.
+const JB: usize = 1024;
+
+/// Minimum multiply-add count before threads are used.
+pub const PAR_MIN_FLOPS: usize = 1 << 22;
+
+/// Multiply the `a_rows.len()/k` rows of A against B (k × n), accumulating
+/// into `out_rows` (must be zeroed).
+fn matmul_rows(a_rows: &[f32], b: &[f32], k: usize, n: usize, out_rows: &mut [f32]) {
+    let m = if k == 0 { 0 } else { a_rows.len() / k };
+    for i in 0..m {
+        let arow = &a_rows[i * k..(i + 1) * k];
+        let orow = &mut out_rows[i * n..(i + 1) * n];
+        for k0 in (0..k).step_by(KB) {
+            let k1 = (k0 + KB).min(k);
+            for j0 in (0..n).step_by(JB) {
+                let j1 = (j0 + JB).min(n);
+                for (kk, &av) in arow[k0..k1].iter().enumerate() {
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let kk = k0 + kk;
+                    let brow = &b[kk * n + j0..kk * n + j1];
+                    let dst = &mut orow[j0..j1];
+                    for (o, &bv) in dst.iter_mut().zip(brow) {
+                        *o += av * bv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// (m × k) @ (k × n) row-major matmul; cache-blocked, thread-parallel for
+/// large problems, bit-identical to the naive loop.
+pub fn matmul_f32(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k, "A is {m}x{k}");
+    assert_eq!(b.len(), k * n, "B is {k}x{n}");
+    let mut out = vec![0.0f32; m * n];
+    let flops = m * k * n;
+    let nt = if flops < PAR_MIN_FLOPS { 1 } else { super::worker_threads(m) };
+    if nt < 2 {
+        matmul_rows(a, b, k, n, &mut out);
+        return out;
+    }
+    let rows_per = m.div_ceil(nt);
+    std::thread::scope(|sc| {
+        for (ar, or) in a.chunks(rows_per * k).zip(out.chunks_mut(rows_per * n)) {
+            sc.spawn(move || matmul_rows(ar, b, k, n, or));
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn naive(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                let av = a[i * k + kk];
+                if av == 0.0 {
+                    continue;
+                }
+                for j in 0..n {
+                    out[i * n + j] += av * b[kk * n + j];
+                }
+            }
+        }
+        out
+    }
+
+    fn randvec(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn blocked_matches_naive_bitwise() {
+        // sizes straddling the tile edges and the parallel threshold
+        for (m, k, n) in [(1, 1, 1), (3, 5, 7), (8, 300, 33), (64, 257, 129), (130, 512, 70)] {
+            let a = randvec(m * k, (m * k) as u64);
+            let b = randvec(k * n, (k * n) as u64 + 1);
+            let got = matmul_f32(&a, &b, m, k, n);
+            let want = naive(&a, &b, m, k, n);
+            assert_eq!(
+                got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "{m}x{k}x{n}"
+            );
+        }
+    }
+
+    #[test]
+    fn parallel_path_matches_naive_bitwise() {
+        let (m, k, n) = (256, 256, 128); // 8.4M MACs > PAR_MIN_FLOPS
+        let a = randvec(m * k, 9);
+        let b = randvec(k * n, 10);
+        assert_eq!(matmul_f32(&a, &b, m, k, n), naive(&a, &b, m, k, n));
+    }
+
+    #[test]
+    fn zero_dims() {
+        assert!(matmul_f32(&[], &[], 0, 0, 5).is_empty());
+        assert_eq!(matmul_f32(&[], &[], 2, 0, 2), vec![0.0; 4]);
+    }
+}

@@ -1,0 +1,72 @@
+//! Fused, table-driven quantization kernels — the host-side hot path.
+//!
+//! The scalar reference (`formats::FpFormat::quantize`, `formats::codec`)
+//! pays a frexp, a divide, and a round-half-even per element, twice over
+//! when encoding (quantize first, then field re-derivation).  This module
+//! replaces that with branch-light kernels that are **bit-identical** to
+//! the reference:
+//!
+//! * [`lut`] — decode LUTs and direct f32-bits → code encoders.
+//!   - FP4 decode is a const 16-entry table (`FP4_DECODE`): index = the
+//!     4-bit code `s|ee|m`, entry = the exact grid value, so
+//!     `FP4_DECODE[c] == codec::decode(FP4_E2M1, c)` for every code.
+//!   - FP8 decode is a lazily built 256-entry table per format (one for
+//!     E4M3, one for E5M2), populated *from* `codec::decode` so equality
+//!     holds by construction.
+//!   - FP4 encode is a 7-comparison chain against the RNE decision
+//!     boundaries (ties-to-even baked into `<` vs `<=`); FP8 encode is
+//!     integer mantissa rounding on the raw f32 bits (add-half-minus-one
+//!     plus the LSB parity bit), with the subnormal and saturation ranges
+//!     peeled off first.  Non-finite inputs fall back to the scalar
+//!     reference so the contract `encode_fast(f, x) == codec::encode(f, x)`
+//!     holds for **every** f32 bit pattern (exhaustively testable via
+//!     `cargo test -- --ignored`).
+//! * [`fused`] — single-pass row kernels: group absmax, scale, project /
+//!   encode, and (FP4) nibble-pack in one sweep.  The per-element scale
+//!   division is hoisted to a multiply by the reciprocal **only when the
+//!   scale is a power of two** (reciprocal exact ⇒ `x * (1/s) == x / s`
+//!   bit-for-bit); otherwise the divide stays.  Output is bit-identical to
+//!   `formats::fake_quant_rows` / `quant::quantize_scalar` (property-tested
+//!   across every `Granularity`).
+//! * [`parallel`] — a `std::thread::scope` row sweep for large tensors
+//!   (checkpoint compression, probe eval).  Engages only when the tensor
+//!   has at least [`parallel::PAR_MIN_ELEMS`] elements (currently 1 << 16)
+//!   and more than one row group; below that the serial kernel wins on
+//!   thread-spawn cost alone.
+//! * [`matmul`] — cache-blocked (and, above the same threshold,
+//!   row-parallel) f32 matmul for the probe trainer.  Accumulation order
+//!   over the contraction axis is preserved, so results match the old
+//!   naive loop exactly.
+//!
+//! Bit-exactness contract: the python mirror (`python/compile/formats.py`)
+//! and this crate agree element-wise on fake-quant outputs (checked by
+//! tests/cross_layer.rs against AOT artifacts).  Everything in this module
+//! therefore has to reproduce the *reference* numerics exactly — any
+//! kernel that is merely "close" would silently break the cross-layer
+//! artifact checks.  When adding a kernel, property-test it against the
+//! scalar path first, speed it up second.
+
+pub mod fused;
+pub mod lut;
+pub mod matmul;
+pub mod parallel;
+
+/// Hard cap on worker threads for every parallel kernel here (they are
+/// memory-bound; more threads than memory channels just adds contention).
+pub const PAR_MAX_THREADS: usize = 8;
+
+/// Worker-thread count for `units` independent work items: hardware
+/// parallelism (queried once, cached — it's a syscall), clamped by the
+/// unit count and [`PAR_MAX_THREADS`].  The single threading policy for
+/// all kernels in this module.
+pub(crate) fn worker_threads(units: usize) -> usize {
+    static HW: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    let hw =
+        *HW.get_or_init(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1));
+    hw.min(units).min(PAR_MAX_THREADS)
+}
+
+pub use fused::{fake_quant_rows_fast, quantize_pack_rows};
+pub use lut::{decode_fast, decode_lut, encode_fast};
+pub use matmul::matmul_f32;
+pub use parallel::{fake_quant_rows_auto, quantize_pack_rows_auto};

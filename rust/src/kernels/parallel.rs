@@ -1,0 +1,148 @@
+//! `std::thread::scope` row-parallel sweep over group-contiguous kernels.
+//!
+//! Splitting is always on group boundaries, so every group's absmax/scale
+//! is computed by exactly one thread and results are bit-identical to the
+//! serial kernels regardless of thread count.  Small tensors (fewer than
+//! [`PAR_MIN_ELEMS`] elements) or single-group sweeps (PerTensor) stay on
+//! the serial path — thread spawn/join costs more than the work below
+//! that size.
+
+use crate::formats::{FpFormat, Granularity};
+
+use super::fused::{fake_quant_groups, group_len, quantize_pack_groups};
+use super::worker_threads;
+
+/// Minimum element count before the parallel sweep engages.
+pub const PAR_MIN_ELEMS: usize = 1 << 16;
+
+/// `fake_quant_rows_fast` with automatic row-parallelism for large inputs.
+pub fn fake_quant_rows_auto(
+    x: &[f32],
+    rows: usize,
+    cols: usize,
+    fmt: FpFormat,
+    g: Granularity,
+) -> Vec<f32> {
+    assert_eq!(x.len(), rows * cols);
+    let n = x.len();
+    let glen = group_len(n, cols, g);
+    let n_groups = if n == 0 { 0 } else { n / glen };
+    let mut out = vec![0.0f32; n];
+    // size checks first: small sweeps never pay the thread-count lookup
+    let nt = if n < PAR_MIN_ELEMS || n_groups < 2 { 1 } else { worker_threads(n_groups) };
+    if nt < 2 {
+        fake_quant_groups(x, glen, fmt, &mut out);
+        return out;
+    }
+    let chunk = n_groups.div_ceil(nt) * glen;
+    std::thread::scope(|sc| {
+        for (xs, os) in x.chunks(chunk).zip(out.chunks_mut(chunk)) {
+            sc.spawn(move || fake_quant_groups(xs, glen, fmt, os));
+        }
+    });
+    out
+}
+
+/// `quantize_pack_rows` with automatic row-parallelism for large inputs.
+pub fn quantize_pack_rows_auto(
+    x: &[f32],
+    rows: usize,
+    cols: usize,
+    fmt: FpFormat,
+    g: Granularity,
+) -> (Vec<u8>, Vec<f32>) {
+    assert_eq!(x.len(), rows * cols);
+    let n = x.len();
+    let glen = group_len(n, cols, g);
+    let n_groups = if n == 0 { 0 } else { n / glen };
+    let nt = if n < PAR_MIN_ELEMS || n_groups < 2 { 1 } else { worker_threads(n_groups) };
+    if nt < 2 {
+        return quantize_pack_groups(x, glen, fmt);
+    }
+    let mut chunk_groups = n_groups.div_ceil(nt);
+    // FP4 packs two codes per byte; keep every chunk but the last an even
+    // number of elements so per-chunk packed bytes concatenate exactly as
+    // one global pack would.
+    if fmt.bits() <= 4 && (chunk_groups * glen) % 2 == 1 {
+        chunk_groups += 1;
+    }
+    let chunk = chunk_groups * glen;
+    let parts: Vec<(Vec<u8>, Vec<f32>)> = std::thread::scope(|sc| {
+        let handles: Vec<_> = x
+            .chunks(chunk)
+            .map(|xs| sc.spawn(move || quantize_pack_groups(xs, glen, fmt)))
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("kernel worker panicked")).collect()
+    });
+    let mut packed = Vec::with_capacity(if fmt.bits() <= 4 { n.div_ceil(2) } else { n });
+    let mut scales = Vec::with_capacity(n_groups);
+    for (p, s) in parts {
+        packed.extend_from_slice(&p);
+        scales.extend_from_slice(&s);
+    }
+    (packed, scales)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::{fake_quant_rows, FP4_E2M1, FP8_E4M3};
+    use crate::kernels::fused::quantize_pack_rows;
+    use crate::util::rng::Rng;
+
+    fn randvec(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn parallel_fake_quant_matches_serial_above_threshold() {
+        let (rows, cols) = (1024, 128); // 128k elems > PAR_MIN_ELEMS
+        let x = randvec(rows * cols, 3);
+        for g in [Granularity::PerRow, Granularity::PerBlock(32)] {
+            let par = fake_quant_rows_auto(&x, rows, cols, FP4_E2M1, g);
+            let ser = fake_quant_rows(&x, rows, cols, FP4_E2M1, g);
+            assert_eq!(
+                par.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                ser.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "{g:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn parallel_pack_matches_serial_including_odd_groups() {
+        // odd cols → odd group length → chunk evening logic engages
+        let (rows, cols) = (1024, 129);
+        let x = randvec(rows * cols, 4);
+        for fmt in [FP4_E2M1, FP8_E4M3] {
+            for g in [Granularity::PerRow, Granularity::PerBlock(43)] {
+                let (pp, ps) = quantize_pack_rows_auto(&x, rows, cols, fmt, g);
+                let (sp, ss) = quantize_pack_rows(&x, rows, cols, fmt, g);
+                assert_eq!(pp, sp, "{} {g:?} packed", fmt.name);
+                assert_eq!(
+                    ps.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    ss.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "{} {g:?} scales",
+                    fmt.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn per_tensor_stays_serial_and_correct() {
+        let x = randvec(1 << 17, 5);
+        let a = fake_quant_rows_auto(&x, 1024, 128, FP4_E2M1, Granularity::PerTensor);
+        let b = fake_quant_rows(&x, 1024, 128, FP4_E2M1, Granularity::PerTensor);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn small_inputs_stay_serial() {
+        let x = randvec(256, 6);
+        let (p, s) = quantize_pack_rows_auto(&x, 2, 128, FP4_E2M1, Granularity::PerRow);
+        let (p2, s2) = quantize_pack_rows(&x, 2, 128, FP4_E2M1, Granularity::PerRow);
+        assert_eq!((p, s), (p2, s2));
+    }
+}

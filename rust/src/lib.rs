@@ -20,6 +20,7 @@ pub mod costmodel;
 pub mod data;
 pub mod eval;
 pub mod formats;
+pub mod kernels;
 pub mod quant;
 pub mod reproduce;
 pub mod runtime;

@@ -2,8 +2,14 @@
 //! used for compressed checkpoints and offline analysis.  The numerics
 //! mirror `formats::fake_quant_rows` exactly (dequantize(quantize(x)) ==
 //! fake_quant(x), property-tested).
+//!
+//! `quantize` runs on the fused LUT kernels (`kernels::quantize_pack_rows
+//! _auto`), thread-parallel above the size threshold; `quantize_scalar`
+//! keeps the original per-element codec path as the bit-exact reference
+//! for property tests and the scalar-vs-fused benches.
 
-use crate::formats::{codec, FpFormat, Granularity, FP4_E2M1};
+use crate::formats::{codec, effective_block, scale_of, FpFormat, Granularity, FP4_E2M1};
+use crate::kernels;
 use crate::tensor::Tensor;
 
 /// A quantized tensor: codes (packed for FP4), one f32 scale per group,
@@ -45,13 +51,31 @@ fn rows_cols(shape: &[usize]) -> (usize, usize) {
 }
 
 /// Quantize `t` along its last axis with the given format + granularity.
+/// Fused single-pass kernel; row-parallel for large tensors.
 pub fn quantize(t: &Tensor, fmt: FpFormat, g: GranSpec) -> QuantizedTensor {
+    let (rows, cols) = rows_cols(&t.shape);
+    let (packed, scales) =
+        kernels::quantize_pack_rows_auto(&t.data, rows, cols, fmt, g.to_granularity());
+    QuantizedTensor {
+        fmt_name: fmt.name.to_string(),
+        shape: t.shape.clone(),
+        granularity: g,
+        packed,
+        scales,
+    }
+}
+
+/// The original scalar quantize path — one `codec::encode` per element,
+/// one global `pack_fp4`.  Kept as the reference the fused kernels are
+/// property-tested against (and as the bench baseline).  Must not be
+/// "optimized": its value is being obviously correct.
+pub fn quantize_scalar(t: &Tensor, fmt: FpFormat, g: GranSpec) -> QuantizedTensor {
     let (rows, cols) = rows_cols(&t.shape);
     let groups: Vec<(usize, usize)> = match g {
         GranSpec::PerTensor => vec![(0, rows * cols)],
         GranSpec::PerRow => (0..rows).map(|r| (r * cols, cols)).collect(),
         GranSpec::PerBlock(b0) => {
-            let b = if cols % b0 == 0 { b0 } else { cols };
+            let b = effective_block(cols, b0);
             (0..rows)
                 .flat_map(|r| (0..cols / b).map(move |k| (r * cols + k * b, b)))
                 .collect()
@@ -61,8 +85,7 @@ pub fn quantize(t: &Tensor, fmt: FpFormat, g: GranSpec) -> QuantizedTensor {
     let mut codes = Vec::with_capacity(t.data.len());
     for &(off, len) in &groups {
         let seg = &t.data[off..off + len];
-        let absmax = seg.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
-        let s = if absmax == 0.0 { 1.0 } else { absmax / fmt.max_value };
+        let s = scale_of(seg.iter().copied(), fmt);
         scales.push(s);
         for &x in seg {
             codes.push(codec::encode(fmt, x / s));
@@ -78,7 +101,8 @@ pub fn quantize(t: &Tensor, fmt: FpFormat, g: GranSpec) -> QuantizedTensor {
     }
 }
 
-/// Reconstruct the fake-quantized tensor.
+/// Reconstruct the fake-quantized tensor (LUT decode — one table load and
+/// one multiply per element).
 pub fn dequantize(q: &QuantizedTensor) -> Tensor {
     let fmt = FpFormat::by_name(&q.fmt_name).expect("unknown format");
     let n: usize = q.shape.iter().product::<usize>().max(1);
@@ -87,18 +111,13 @@ pub fn dequantize(q: &QuantizedTensor) -> Tensor {
     let group_len = match q.granularity {
         GranSpec::PerTensor => rows * cols,
         GranSpec::PerRow => cols,
-        GranSpec::PerBlock(b0) => {
-            if cols % b0 == 0 {
-                b0
-            } else {
-                cols
-            }
-        }
+        GranSpec::PerBlock(b0) => effective_block(cols, b0),
     };
+    let table = kernels::decode_lut(fmt); // hoisted: no per-element dispatch
     let mut data = Vec::with_capacity(n);
     for (i, &c) in codes.iter().enumerate() {
         let s = q.scales[i / group_len];
-        data.push(codec::decode(fmt, c) * s);
+        data.push(table[c as usize] * s);
     }
     Tensor { shape: q.shape.clone(), data }
 }
@@ -117,6 +136,12 @@ pub fn compression_ratio(q: &QuantizedTensor) -> f64 {
 /// Default checkpoint compression: FP4 per-block-128 along the last axis.
 pub fn default_fp4(t: &Tensor) -> QuantizedTensor {
     quantize(t, FP4_E2M1, GranSpec::PerBlock(128))
+}
+
+/// Block-128 compression in the given format (the checkpoint weight
+/// codecs) — one place to keep the geometry constant.
+pub fn quantize_block128(t: &Tensor, fmt: FpFormat) -> QuantizedTensor {
+    quantize(t, fmt, GranSpec::PerBlock(128))
 }
 
 #[cfg(test)]
@@ -147,6 +172,35 @@ mod tests {
                     // identically — must agree bit-for-bit
                     prop_assert!(a == b, "{} idx {i}: {a} vs {b}", fmt.name);
                 }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fused_quantize_equals_scalar_reference() {
+        prop_check("quantize == quantize_scalar", 100, |c| {
+            let rows = c.usize_in(1, 6);
+            let cols = [31usize, 32, 64, 129][c.usize_in(0, 3)];
+            let data = c.f32_vec_wild(rows * cols, rows * cols);
+            let t = Tensor::from_vec(&[rows, cols], data);
+            for (fmt, g) in [
+                (FP4_E2M1, GranSpec::PerTensor),
+                (FP4_E2M1, GranSpec::PerRow),
+                (FP4_E2M1, GranSpec::PerBlock(32)),
+                (FP8_E4M3, GranSpec::PerRow),
+                (FP8_E4M3, GranSpec::PerBlock(43)),
+            ] {
+                let fast = quantize(&t, fmt, g);
+                let slow = quantize_scalar(&t, fmt, g);
+                prop_assert!(fast.packed == slow.packed, "{} {g:?} codes", fmt.name);
+                prop_assert!(
+                    fast.scales.iter().map(|s| s.to_bits()).eq(
+                        slow.scales.iter().map(|s| s.to_bits())
+                    ),
+                    "{} {g:?} scales",
+                    fmt.name
+                );
             }
             Ok(())
         });

@@ -91,28 +91,30 @@ impl Tensor {
         self.data.iter().map(|&x| x * x).sum::<f32>().sqrt()
     }
 
-    /// (rows, cols) matmul for small host-side math (the probe trainer).
+    /// (rows, cols) matmul for host-side math (the probe trainer).
+    /// Cache-blocked and thread-parallel for large problems via
+    /// `kernels::matmul_f32`; accumulation order matches the naive loop,
+    /// so results are bit-identical at every size.
     pub fn matmul(&self, other: &Tensor) -> Tensor {
         assert_eq!(self.rank(), 2);
         assert_eq!(other.rank(), 2);
         let (m, k) = (self.shape[0], self.shape[1]);
         let (k2, n) = (other.shape[0], other.shape[1]);
         assert_eq!(k, k2);
+        Tensor::from_vec(&[m, n], crate::kernels::matmul_f32(&self.data, &other.data, m, k, n))
+    }
+
+    /// Row-major transpose (used to feed gradient matmuls).
+    pub fn transpose2(&self) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        let (m, n) = (self.shape[0], self.shape[1]);
         let mut out = vec![0.0f32; m * n];
         for i in 0..m {
-            for kk in 0..k {
-                let a = self.data[i * k + kk];
-                if a == 0.0 {
-                    continue;
-                }
-                let row = &other.data[kk * n..(kk + 1) * n];
-                let dst = &mut out[i * n..(i + 1) * n];
-                for (o, &b) in dst.iter_mut().zip(row) {
-                    *o += a * b;
-                }
+            for j in 0..n {
+                out[j * m + i] = self.data[i * n + j];
             }
         }
-        Tensor::from_vec(&[m, n], out)
+        Tensor::from_vec(&[n, m], out)
     }
 }
 
@@ -148,6 +150,15 @@ mod tests {
         let a = Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]);
         let b = Tensor::from_vec(&[2, 2], vec![5., 6., 7., 8.]);
         assert_eq!(a.matmul(&b).data, vec![19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn transpose2_roundtrip() {
+        let a = Tensor::from_vec(&[2, 3], vec![0., 1., 2., 3., 4., 5.]);
+        let t = a.transpose2();
+        assert_eq!(t.shape, vec![3, 2]);
+        assert_eq!(t.data, vec![0., 3., 1., 4., 2., 5.]);
+        assert_eq!(t.transpose2(), a);
     }
 
     #[test]

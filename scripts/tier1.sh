@@ -1,0 +1,30 @@
+#!/usr/bin/env bash
+# Tier-1 verification: release build, full test suite, and a compile check
+# of every bench target so benches can't silently rot.
+#
+#   scripts/tier1.sh           # build + test + bench --no-run
+#   scripts/tier1.sh --fast    # skip the release build (debug test only)
+#
+# Exit codes: 0 ok, 2 toolchain missing, else the failing cargo status.
+
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "tier1: cargo not found on PATH — rust toolchain missing in this" >&2
+    echo "tier1: environment; cannot verify (see ROADMAP.md 'Verification')" >&2
+    exit 2
+fi
+
+if [[ "${1:-}" != "--fast" ]]; then
+    echo "== cargo build --release =="
+    cargo build --release
+fi
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "== cargo bench --no-run (bench targets must compile) =="
+cargo bench --no-run
+
+echo "tier1: OK"
