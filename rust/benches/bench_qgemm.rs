@@ -1,0 +1,80 @@
+//! Packed-operand GEMM bench: dequantize-then-matmul vs `qgemm` on the
+//! acceptance shape 64×4096 @ 4096×512 (FP4 per-block-128, plus the FP8
+//! variant).  Emits `BENCH_qgemm.json` via `Bencher::write_json` so the
+//! perf trajectory is tracked across PRs.
+//!
+//! Acceptance anchor: `qgemm/64x4096x512/fp4b128/qgemm` must beat
+//! `qgemm/64x4096x512/fp4b128/dequant+matmul` by ≥ 1.5× median, with a
+//! much smaller peak B-operand footprint than the f32 matrix: packed
+//! codes + scales are ~7.75× smaller; adding the fixed-size decode panel
+//! the working set is ~5× smaller at this shape (and approaches the
+//! storage ratio as B grows — the panel is capped at QKB×QJB f32).
+
+use fp4train::bench::Bencher;
+use fp4train::formats::{FP4_E2M1, FP8_E4M3};
+use fp4train::kernels::qgemm::{QJB, QKB};
+use fp4train::kernels::{matmul_f32, qgemm_into, Workspace};
+use fp4train::quant::{self, GranSpec};
+use fp4train::tensor::Tensor;
+use fp4train::util::rng::Rng;
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn main() {
+    let mut b = Bencher::new(3, 15);
+    let mut rng = Rng::new(21);
+
+    // Acceptance shape: one attention/FFN-sized projection, B packed.
+    let (m, k, n) = (64usize, 4096usize, 512usize);
+    let macs = (m * k * n) as f64;
+    let a: Vec<f32> = (0..m * k).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let bt = Tensor::randn(&[k, n], 0.5, &mut rng);
+    let q4 = quant::quantize(&bt, FP4_E2M1, GranSpec::PerBlock(128));
+    let q8 = quant::quantize(&bt, FP8_E4M3, GranSpec::PerBlock(128));
+
+    // correctness guard: a bench comparing unequal outputs is meaningless
+    let mut ws = Workspace::new();
+    let mut out = vec![0.0f32; m * n];
+    for q in [&q4, &q8] {
+        qgemm_into(&a, q, m, k, n, &mut out, &mut ws);
+        let want = matmul_f32(&a, &quant::dequantize(q).data, m, k, n);
+        assert_eq!(bits(&out), bits(&want), "{} qgemm != dequant+matmul — bench aborted", q.fmt_name);
+    }
+
+    b.section("A(64x4096) @ B(4096x512), B packed per-block-128 (acceptance anchor)");
+    b.bench("qgemm/64x4096x512/fp4b128/dequant+matmul", Some((macs, "mac/s")), || {
+        std::hint::black_box(matmul_f32(&a, &quant::dequantize(&q4).data, m, k, n));
+    });
+    b.bench("qgemm/64x4096x512/fp4b128/qgemm", Some((macs, "mac/s")), || {
+        qgemm_into(&a, &q4, m, k, n, &mut out, &mut ws);
+        std::hint::black_box(&out);
+    });
+    b.bench("qgemm/64x4096x512/fp8b128/dequant+matmul", Some((macs, "mac/s")), || {
+        std::hint::black_box(matmul_f32(&a, &quant::dequantize(&q8).data, m, k, n));
+    });
+    b.bench("qgemm/64x4096x512/fp8b128/qgemm", Some((macs, "mac/s")), || {
+        qgemm_into(&a, &q8, m, k, n, &mut out, &mut ws);
+        std::hint::black_box(&out);
+    });
+
+    b.write_json("BENCH_qgemm.json").expect("write BENCH_qgemm.json");
+
+    // Peak B-operand bytes: what the dequantize round trip materializes vs
+    // what qgemm touches (packed codes + scales + one decode panel).
+    let f32_bytes = k * n * 4;
+    let packed_bytes = q4.packed.len() + q4.scales.len() * 4 + QKB * QJB.min(n) * 4;
+    println!(
+        "\nB-operand peak: dequant+matmul {f32_bytes} B vs qgemm {packed_bytes} B ({:.1}x smaller)",
+        f32_bytes as f64 / packed_bytes as f64
+    );
+
+    let anchor = b
+        .speedup("qgemm/64x4096x512/fp4b128/dequant+matmul", "qgemm/64x4096x512/fp4b128/qgemm")
+        .unwrap();
+    println!("acceptance anchor: qgemm {anchor:.2}x vs dequant+matmul (target >= 1.5x)");
+    if anchor < 1.5 {
+        println!("WARNING: qgemm speedup below the 1.5x acceptance bar");
+    }
+}

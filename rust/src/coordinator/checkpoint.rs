@@ -60,6 +60,61 @@ pub struct Checkpoint {
     pub step: i64,
 }
 
+/// A parameter exactly as stored on disk: raw f32, or packed low-precision
+/// codes + scales.  Packed weights feed `kernels::qgemm` directly via
+/// [`StoredTensor::matmul_a`] — consumers only pay the f32
+/// materialization if they explicitly ask for [`StoredTensor::to_tensor`].
+#[derive(Clone, Debug)]
+pub enum StoredTensor {
+    F32(Tensor),
+    Quantized(QuantizedTensor),
+}
+
+impl StoredTensor {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            StoredTensor::F32(t) => &t.shape,
+            StoredTensor::Quantized(q) => &q.shape,
+        }
+    }
+
+    /// Materialize as f32 (dequantizing if packed).
+    pub fn to_tensor(&self) -> Tensor {
+        match self {
+            StoredTensor::F32(t) => t.clone(),
+            StoredTensor::Quantized(q) => dequantize(q),
+        }
+    }
+
+    pub fn into_tensor(self) -> Tensor {
+        match self {
+            StoredTensor::F32(t) => t,
+            StoredTensor::Quantized(q) => dequantize(&q),
+        }
+    }
+
+    /// `a @ self` — the packed GEMM when quantized (B is decoded
+    /// panel-by-panel; no f32 weight copy), the blocked f32 matmul
+    /// otherwise.  Bit-identical to `a.matmul(&self.to_tensor())` either
+    /// way.
+    pub fn matmul_a(&self, a: &Tensor, ws: &mut crate::kernels::Workspace) -> Tensor {
+        match self {
+            StoredTensor::F32(t) => a.matmul(t),
+            StoredTensor::Quantized(q) => a.matmul_quant(q, ws),
+        }
+    }
+}
+
+/// A checkpoint whose weight payloads keep their on-disk encoding —
+/// quantized weights stay packed for qgemm consumers.  Optimizer moments
+/// are always f32.
+pub struct PackedCheckpoint {
+    pub params: Vec<(String, StoredTensor)>,
+    pub m: Vec<Tensor>,
+    pub v: Vec<Tensor>,
+    pub step: i64,
+}
+
 fn tensor_blob(t: &Tensor, codec: WeightCodec) -> (Json, Vec<u8>) {
     match codec {
         WeightCodec::F32 => {
@@ -98,7 +153,7 @@ fn tensor_blob(t: &Tensor, codec: WeightCodec) -> (Json, Vec<u8>) {
     }
 }
 
-fn blob_tensor(h: &Json, bytes: &[u8]) -> Result<Tensor> {
+fn blob_stored(h: &Json, bytes: &[u8]) -> Result<StoredTensor> {
     let codec = WeightCodec::parse(h.get("codec").and_then(|c| c.as_str()).unwrap_or(""))?;
     let shape: Vec<usize> = h
         .get("shape")
@@ -117,7 +172,7 @@ fn blob_tensor(h: &Json, bytes: &[u8]) -> Result<Tensor> {
                 .chunks_exact(4)
                 .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
                 .collect();
-            Ok(Tensor::from_vec(&shape, data))
+            Ok(StoredTensor::F32(Tensor::from_vec(&shape, data)))
         }
         WeightCodec::Fp8Block | WeightCodec::Fp4Block => {
             let n_packed = h.get("packed").and_then(|x| x.as_usize()).unwrap_or(0);
@@ -131,14 +186,13 @@ fn blob_tensor(h: &Json, bytes: &[u8]) -> Result<Tensor> {
                 .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
                 .collect();
             let fmt_name = if codec == WeightCodec::Fp8Block { "fp8_e4m3" } else { "fp4_e2m1" };
-            let q = QuantizedTensor {
+            Ok(StoredTensor::Quantized(QuantizedTensor {
                 fmt_name: fmt_name.to_string(),
                 shape,
                 granularity: GranSpec::PerBlock(128),
                 packed,
                 scales,
-            };
-            Ok(dequantize(&q))
+            }))
         }
     }
 }
@@ -187,7 +241,10 @@ pub fn save(ckpt: &Checkpoint, path: &Path, weight_codec: WeightCodec) -> Result
     Ok(())
 }
 
-pub fn load(path: &Path) -> Result<Checkpoint> {
+/// Load a checkpoint keeping weight payloads in their on-disk encoding —
+/// quantized weights come back as packed `QuantizedTensor`s ready for
+/// `kernels::qgemm`, never dequantized here.
+pub fn load_packed(path: &Path) -> Result<PackedCheckpoint> {
     let file = std::fs::File::open(path).with_context(|| format!("{path:?}"))?;
     let mut dec = GzDecoder::new(file);
     let mut buf = Vec::new();
@@ -206,21 +263,33 @@ pub fn load(path: &Path) -> Result<Checkpoint> {
     let mut v = Vec::new();
     for h in j.get("tensors").and_then(|t| t.as_arr()).unwrap_or(&[]) {
         let nbytes = h.get("bytes").and_then(|b| b.as_usize()).ok_or_else(|| anyhow!("bytes"))?;
-        let t = blob_tensor(h, &buf[off..off + nbytes])?;
+        let t = blob_stored(h, &buf[off..off + nbytes])?;
         off += nbytes;
         let name = h.get("name").and_then(|n| n.as_str()).unwrap_or("");
         if let Some(p) = name.strip_prefix("p/") {
             params.push((p.to_string(), t));
         } else if name.starts_with("m/") {
-            m.push(t);
+            m.push(t.into_tensor()); // moments are always stored f32
         } else {
-            v.push(t);
+            v.push(t.into_tensor());
         }
     }
     if params.len() != n_params {
         bail!("expected {n_params} params, found {}", params.len());
     }
-    Ok(Checkpoint { params, m, v, step })
+    Ok(PackedCheckpoint { params, m, v, step })
+}
+
+/// Load a checkpoint with all weights materialized as f32 (dequantizing
+/// packed payloads) — the train-resume path.
+pub fn load(path: &Path) -> Result<Checkpoint> {
+    let p = load_packed(path)?;
+    Ok(Checkpoint {
+        params: p.params.into_iter().map(|(n, t)| (n, t.into_tensor())).collect(),
+        m: p.m,
+        v: p.v,
+        step: p.step,
+    })
 }
 
 #[cfg(test)]
@@ -290,6 +359,31 @@ mod tests {
         save(&c2, &p2, WeightCodec::Fp4Block).unwrap();
         let c3 = load(&p2).unwrap();
         assert_eq!(c2.params[0].1.data, c3.params[0].1.data);
+    }
+
+    #[test]
+    fn packed_load_feeds_qgemm_bit_identical() {
+        let c = sample();
+        let p = tmp("packed.ckpt");
+        save(&c, &p, WeightCodec::Fp4Block).unwrap();
+        let pk = load_packed(&p).unwrap();
+        assert_eq!(pk.step, 123);
+        // 2-D weight stays packed; 1-D stays f32
+        assert!(matches!(pk.params[0].1, StoredTensor::Quantized(_)));
+        assert!(matches!(pk.params[1].1, StoredTensor::F32(_)));
+        // consuming the packed weight through qgemm == dequantize + matmul
+        let mut rng = Rng::new(12);
+        let acts = Tensor::randn(&[5, 32], 1.0, &mut rng); // (5, 32) @ (32, 128)
+        let mut ws = crate::kernels::Workspace::new();
+        let via_qgemm = pk.params[0].1.matmul_a(&acts, &mut ws);
+        let full = load(&p).unwrap();
+        let via_f32 = acts.matmul(&full.params[0].1);
+        assert_eq!(
+            via_qgemm.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            via_f32.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        // and the f32 view of the packed load matches the legacy loader
+        assert_eq!(pk.params[0].1.to_tensor().data, full.params[0].1.data);
     }
 
     #[test]

@@ -9,6 +9,7 @@
 //! deterministic, and fast at (N ≤ few hundred, d ≤ 512).
 
 use crate::data::corpus::{DocMeta, N_TEMPLATES, N_TOPICS};
+use crate::kernels;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -77,10 +78,13 @@ fn softmax_rows(logits: &mut [f32], n: usize, c: usize) {
 
 impl Probe {
     /// Full-batch GD with L2; features should be roughly unit scale.
-    /// Both matmuls (forward logits and the x^T-residual gradient) run on
-    /// the cache-blocked `kernels::matmul_f32` via `Tensor::matmul`, which
-    /// also goes row-parallel for large feature matrices — the probe-eval
-    /// hot path.
+    /// Both matmuls (forward logits with the bias folded into the kernel
+    /// epilogue, and the x^T-residual gradient) run on the cache-blocked
+    /// `kernels::matmul_bias_into`/`matmul_into`, which go row-parallel
+    /// for large feature matrices — the probe-eval hot path.  The logits,
+    /// gradient, and bias-gradient buffers are allocated once and reused
+    /// by all `epochs` iterations: the epoch loop performs zero heap
+    /// allocations.
     pub fn fit(x: &Tensor, y: &[usize], classes: usize, epochs: usize, lr: f32) -> Probe {
         let (n, d) = (x.shape[0], x.shape[1]);
         assert_eq!(n, y.len());
@@ -88,31 +92,29 @@ impl Probe {
         let mut b = vec![0.0f32; classes];
         let l2 = 1e-3f32;
         let xt = x.transpose2(); // hoisted: reused by every epoch's gradient
+        let mut logits = vec![0.0f32; n * classes];
+        let mut gw = vec![0.0f32; d * classes];
+        let mut gb = vec![0.0f32; classes];
         for _ in 0..epochs {
-            // logits = x @ w + b
-            let mut logits = x.matmul(&w);
-            for r in 0..n {
-                for c in 0..classes {
-                    logits.data[r * classes + c] += b[c];
-                }
-            }
-            softmax_rows(&mut logits.data, n, classes);
+            // logits = x @ w + b (bias added in the matmul epilogue)
+            kernels::matmul_bias_into(&x.data, &w.data, &b, n, d, classes, &mut logits);
+            softmax_rows(&mut logits, n, classes);
             // residual = (p - onehot) / n
             for (r, &label) in y.iter().enumerate() {
-                logits.data[r * classes + label] -= 1.0;
+                logits[r * classes + label] -= 1.0;
             }
-            for v in logits.data.iter_mut() {
+            for v in logits.iter_mut() {
                 *v /= n as f32;
             }
-            let mut gb = vec![0.0f32; classes];
+            gb.fill(0.0);
             for r in 0..n {
                 for c in 0..classes {
-                    gb[c] += logits.data[r * classes + c];
+                    gb[c] += logits[r * classes + c];
                 }
             }
             // gw = x^T @ residual, (d, n) @ (n, C)
-            let gw = xt.matmul(&logits);
-            for (wv, g) in w.data.iter_mut().zip(&gw.data) {
+            kernels::matmul_into(&xt.data, &logits, d, n, classes, &mut gw);
+            for (wv, g) in w.data.iter_mut().zip(&gw) {
                 *wv -= lr * (g + l2 * *wv);
             }
             for (bv, g) in b.iter_mut().zip(&gb) {
@@ -123,16 +125,12 @@ impl Probe {
     }
 
     pub fn predict(&self, x: &Tensor) -> Vec<usize> {
-        let n = x.shape[0];
-        let mut logits = x.matmul(&self.w);
-        for r in 0..n {
-            for c in 0..self.classes {
-                logits.data[r * self.classes + c] += self.b[c];
-            }
-        }
+        let (n, d) = (x.shape[0], x.shape[1]);
+        let mut logits = vec![0.0f32; n * self.classes];
+        kernels::matmul_bias_into(&x.data, &self.w.data, &self.b, n, d, self.classes, &mut logits);
         (0..n)
             .map(|r| {
-                let row = &logits.data[r * self.classes..(r + 1) * self.classes];
+                let row = &logits[r * self.classes..(r + 1) * self.classes];
                 row.iter()
                     .enumerate()
                     .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
@@ -185,13 +183,25 @@ pub fn run_probe(name: &str, features: &Tensor, metas: &[DocMeta], seed: u64) ->
     let classes = n_classes(name);
     // pair probe: concatenate feature pairs, label = same topic
     let (feats, labels): (Tensor, Vec<usize>) = if name == "topic_pair" {
+        // topic → ascending doc indices, built once.  The shared-topic mate
+        // below is the first index != a with the same topic — the same
+        // document the old O(n²) `(0..n).find(..)`-per-pair scan selected.
+        let mut by_topic: Vec<Vec<usize>> = Vec::new();
+        for (j, m) in metas.iter().enumerate() {
+            let t = m.topic as usize;
+            if t >= by_topic.len() {
+                by_topic.resize(t + 1, Vec::new());
+            }
+            by_topic[t].push(j);
+        }
         let mut data = Vec::new();
         let mut ls = Vec::new();
         for i in 0..n / 2 {
             let a = i;
             // half the pairs share topic, half random
             let b = if i % 2 == 0 {
-                match (0..n).find(|&j| j != a && metas[j].topic == metas[a].topic) {
+                let mates = &by_topic[metas[a].topic as usize];
+                match mates.iter().copied().find(|&j| j != a) {
                     Some(j) => j,
                     None => (a + 1) % n,
                 }

@@ -18,16 +18,14 @@ pub struct QuantErrorStats {
     pub mean_rel_err: f64,
 }
 
-/// Quantize `x` (viewed as rows × cols) at the given scale granularity and
-/// measure the damage.
-pub fn measure(
-    x: &[f32],
-    rows: usize,
-    cols: usize,
-    fmt: FpFormat,
-    g: Granularity,
-) -> QuantErrorStats {
-    let q = crate::kernels::fake_quant_rows_auto(x, rows, cols, fmt, g);
+/// Error statistics of an approximation `q` of reference values `x`
+/// (element-wise).  Shared by the tensor-level [`measure`] and the
+/// GEMM-level [`gemm_error`].  `clamp` enables the saturation heuristic:
+/// it only makes sense when `q` is itself a fake-quantized copy of `x`
+/// (values near `max_value` were clamped); GEMM *outputs* are contraction
+/// sums that legitimately exceed the format range, so that caller passes
+/// None and `overflow` stays 0.
+fn diff_stats(x: &[f32], q: &[f32], clamp: Option<FpFormat>) -> QuantErrorStats {
     let mut under = 0u64;
     let mut over = 0u64;
     let mut nonzero = 0u64;
@@ -35,7 +33,7 @@ pub fn measure(
     let mut sig = 0.0f64;
     let mut rel = 0.0f64;
     // overflow detection: against the per-group clamp threshold
-    for (&a, &b) in x.iter().zip(&q) {
+    for (&a, &b) in x.iter().zip(q) {
         let e = (a - b) as f64;
         se += e * e;
         sig += (a as f64) * (a as f64);
@@ -46,8 +44,10 @@ pub fn measure(
                 under += 1;
             }
         }
-        if a.abs() > b.abs() && b.abs() > 0.0 && (a.abs() / b.abs()) > 1.04 && b.abs() >= fmt.max_value * 0.99 {
-            over += 1;
+        if let Some(fmt) = clamp {
+            if a.abs() > b.abs() && b.abs() > 0.0 && (a.abs() / b.abs()) > 1.04 && b.abs() >= fmt.max_value * 0.99 {
+                over += 1;
+            }
         }
     }
     let n = x.len().max(1) as f64;
@@ -59,6 +59,42 @@ pub fn measure(
         sqnr_db: if se == 0.0 { f64::INFINITY } else { 10.0 * (sig / se).log10() },
         mean_rel_err: if nonzero == 0 { 0.0 } else { rel / nonzero as f64 },
     }
+}
+
+/// Quantize `x` (viewed as rows × cols) at the given scale granularity and
+/// measure the damage.
+pub fn measure(
+    x: &[f32],
+    rows: usize,
+    cols: usize,
+    fmt: FpFormat,
+    g: Granularity,
+) -> QuantErrorStats {
+    let q = crate::kernels::fake_quant_rows_auto(x, rows, cols, fmt, g);
+    diff_stats(x, &q, Some(fmt))
+}
+
+/// GEMM-level quantization error: quantize the (k × n) B operand at the
+/// given granularity, contract it against A through the packed GEMM
+/// (`kernels::qgemm` — B is decoded panel-by-panel, never materialized as
+/// a dequantized f32 copy), and measure the damage on the (m × n) outputs
+/// against the exact f32 GEMM.  This is the error that actually reaches
+/// downstream activations, as opposed to the element-wise view of
+/// [`measure`].
+pub fn gemm_error(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    fmt: FpFormat,
+    g: Granularity,
+) -> QuantErrorStats {
+    let q = crate::quant::quantize_rows(b, k, n, fmt, crate::quant::GranSpec::from_granularity(g));
+    let exact = crate::kernels::matmul_f32(a, b, m, k, n);
+    let approx = crate::kernels::qgemm(a, &q, m, k, n);
+    // no clamp heuristic: GEMM outputs legitimately exceed the format range
+    diff_stats(&exact, &approx, None)
 }
 
 /// Fraction of values whose FP-`a` and FP-`b` quantizations differ by more
@@ -145,6 +181,34 @@ mod tests {
         assert_eq!(s.mse, 0.0);
         assert_eq!(s.underflow, 0.0);
         assert!(s.sqnr_db.is_infinite());
+    }
+
+    #[test]
+    fn gemm_error_tracks_format_width() {
+        let (m, k, n) = (8usize, 128usize, 64usize);
+        let a = gaussian(m * k, 1.0, 7);
+        let b = gaussian(k * n, 1.0, 8);
+        let e4 = gemm_error(&a, &b, m, k, n, FP4_E2M1, Granularity::PerBlock(32));
+        let e8 = gemm_error(&a, &b, m, k, n, FP8_E4M3, Granularity::PerBlock(32));
+        assert!(e4.mse > e8.mse, "{e4:?} vs {e8:?}");
+        assert!(e4.sqnr_db < e8.sqnr_db);
+    }
+
+    #[test]
+    fn gemm_error_zero_for_on_grid_b() {
+        // B on the FP4 grid with absmax == max_value → scale 1, quantization
+        // is exact, and the packed GEMM reproduces the f32 GEMM bit-for-bit
+        let (m, k, n) = (3usize, 4usize, 5usize);
+        let a = gaussian(m * k, 1.0, 9);
+        let grid = [0.0f32, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0];
+        let mut b = vec![0.0f32; k * n];
+        for (i, v) in b.iter_mut().enumerate() {
+            *v = grid[i % grid.len()] * if i % 3 == 0 { -1.0 } else { 1.0 };
+        }
+        b[0] = 6.0; // pin absmax to max_value → power-of-two (unit) scale
+        let e = gemm_error(&a, &b, m, k, n, FP4_E2M1, Granularity::PerTensor);
+        assert_eq!(e.mse, 0.0, "{e:?}");
+        assert!(e.sqnr_db.is_infinite());
     }
 
     #[test]

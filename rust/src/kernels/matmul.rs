@@ -1,4 +1,6 @@
-//! Cache-blocked f32 matmul for host-side math (the probe trainer).
+//! Cache-blocked f32 matmul for host-side math (the probe trainer), with
+//! zero-allocation `_into` variants for hot loops that reuse output
+//! buffers across calls.
 //!
 //! The inner kernel keeps the contraction index ascending for every output
 //! element, so accumulation order — and therefore the f32 result — is
@@ -6,6 +8,11 @@
 //! while the k/j tiling keeps the B panel resident in L1/L2.  Above
 //! [`PAR_MIN_FLOPS`] multiply-adds the row dimension is split across
 //! threads (rows are independent, so this too is bit-exact).
+//!
+//! [`matmul_bias_into`] folds a row-broadcast bias add into the kernel
+//! epilogue: the bias is added once per output element after its
+//! contraction completes, which is bit-identical to a separate add pass
+//! but saves re-streaming the output matrix.
 
 /// k-tile: 256 f32 of A row + a 256-row B panel slice stay cache-hot.
 const KB: usize = 256;
@@ -15,10 +22,11 @@ const JB: usize = 1024;
 /// Minimum multiply-add count before threads are used.
 pub const PAR_MIN_FLOPS: usize = 1 << 22;
 
-/// Multiply the `a_rows.len()/k` rows of A against B (k × n), accumulating
-/// into `out_rows` (must be zeroed).
-fn matmul_rows(a_rows: &[f32], b: &[f32], k: usize, n: usize, out_rows: &mut [f32]) {
-    let m = if k == 0 { 0 } else { a_rows.len() / k };
+/// Multiply the rows of A present in `a_rows` against B (k × n),
+/// accumulating into `out_rows` (must be zeroed; its length fixes the row
+/// count).  When `bias` is set, it is added to each completed output row.
+fn matmul_rows(a_rows: &[f32], b: &[f32], k: usize, n: usize, out_rows: &mut [f32], bias: Option<&[f32]>) {
+    let m = if n == 0 { 0 } else { out_rows.len() / n };
     for i in 0..m {
         let arow = &a_rows[i * k..(i + 1) * k];
         let orow = &mut out_rows[i * n..(i + 1) * n];
@@ -39,27 +47,59 @@ fn matmul_rows(a_rows: &[f32], b: &[f32], k: usize, n: usize, out_rows: &mut [f3
                 }
             }
         }
+        if let Some(bs) = bias {
+            for (o, &bv) in orow.iter_mut().zip(bs) {
+                *o += bv;
+            }
+        }
     }
+}
+
+fn matmul_impl(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32], bias: Option<&[f32]>) {
+    assert_eq!(a.len(), m * k, "A is {m}x{k}");
+    assert_eq!(b.len(), k * n, "B is {k}x{n}");
+    assert_eq!(out.len(), m * n, "out is {m}x{n}");
+    out.fill(0.0);
+    let flops = m * k * n;
+    let nt = if flops < PAR_MIN_FLOPS { 1 } else { super::worker_threads(m) };
+    if nt < 2 {
+        matmul_rows(a, b, k, n, out, bias);
+        return;
+    }
+    let rows_per = m.div_ceil(nt);
+    std::thread::scope(|sc| {
+        for (ar, or) in a.chunks(rows_per * k).zip(out.chunks_mut(rows_per * n)) {
+            sc.spawn(move || matmul_rows(ar, b, k, n, or, bias));
+        }
+    });
+}
+
+/// (m × k) @ (k × n) row-major matmul into a caller-owned buffer (zeroed
+/// here) — the zero-allocation core all other entry points wrap.
+pub fn matmul_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    matmul_impl(a, b, m, k, n, out, None);
+}
+
+/// `matmul_into` plus a fused epilogue adding `bias` (length n) to every
+/// output row — bit-identical to matmul followed by a separate bias pass.
+pub fn matmul_bias_into(
+    a: &[f32],
+    b: &[f32],
+    bias: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(bias.len(), n, "bias is len-{n}");
+    matmul_impl(a, b, m, k, n, out, Some(bias));
 }
 
 /// (m × k) @ (k × n) row-major matmul; cache-blocked, thread-parallel for
 /// large problems, bit-identical to the naive loop.
 pub fn matmul_f32(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    assert_eq!(a.len(), m * k, "A is {m}x{k}");
-    assert_eq!(b.len(), k * n, "B is {k}x{n}");
     let mut out = vec![0.0f32; m * n];
-    let flops = m * k * n;
-    let nt = if flops < PAR_MIN_FLOPS { 1 } else { super::worker_threads(m) };
-    if nt < 2 {
-        matmul_rows(a, b, k, n, &mut out);
-        return out;
-    }
-    let rows_per = m.div_ceil(nt);
-    std::thread::scope(|sc| {
-        for (ar, or) in a.chunks(rows_per * k).zip(out.chunks_mut(rows_per * n)) {
-            sc.spawn(move || matmul_rows(ar, b, k, n, or));
-        }
-    });
+    matmul_impl(a, b, m, k, n, &mut out, None);
     out
 }
 
@@ -117,5 +157,51 @@ mod tests {
     fn zero_dims() {
         assert!(matmul_f32(&[], &[], 0, 0, 5).is_empty());
         assert_eq!(matmul_f32(&[], &[], 2, 0, 2), vec![0.0; 4]);
+    }
+
+    #[test]
+    fn into_reuses_dirty_buffer_bitwise() {
+        let (m, k, n) = (5, 37, 11);
+        let a = randvec(m * k, 21);
+        let b = randvec(k * n, 22);
+        let want = matmul_f32(&a, &b, m, k, n);
+        let mut out = vec![f32::NAN; m * n]; // dirty: must be fully overwritten
+        matmul_into(&a, &b, m, k, n, &mut out);
+        assert_eq!(out, want);
+        // second call into the same buffer: same bits again
+        matmul_into(&a, &b, m, k, n, &mut out);
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn bias_epilogue_matches_separate_add() {
+        for (m, k, n) in [(4, 30, 9), (256, 256, 128)] {
+            // second shape crosses PAR_MIN_FLOPS: epilogue on the threaded path
+            let a = randvec(m * k, 31);
+            let b = randvec(k * n, 32);
+            let bias = randvec(n, 33);
+            let mut want = matmul_f32(&a, &b, m, k, n);
+            for r in 0..m {
+                for j in 0..n {
+                    want[r * n + j] += bias[j];
+                }
+            }
+            let mut out = vec![0.0f32; m * n];
+            matmul_bias_into(&a, &b, &bias, m, k, n, &mut out);
+            assert_eq!(
+                out.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "{m}x{k}x{n}"
+            );
+        }
+    }
+
+    #[test]
+    fn bias_applies_even_with_empty_contraction() {
+        // k == 0: the product is all-zero, so out must equal the bias rows
+        let bias = vec![1.5f32, -2.0];
+        let mut out = vec![f32::NAN; 6];
+        matmul_bias_into(&[], &[], &bias, 3, 0, 2, &mut out);
+        assert_eq!(out, vec![1.5, -2.0, 1.5, -2.0, 1.5, -2.0]);
     }
 }

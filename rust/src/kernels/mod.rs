@@ -1,55 +1,55 @@
-//! Fused, table-driven quantization kernels — the host-side hot path.
+//! Host-side compute kernels — three families, one contract.
 //!
-//! The scalar reference (`formats::FpFormat::quantize`, `formats::codec`)
-//! pays a frexp, a divide, and a round-half-even per element, twice over
-//! when encoding (quantize first, then field re-derivation).  This module
-//! replaces that with branch-light kernels that are **bit-identical** to
-//! the reference:
+//! # The three kernel families
 //!
-//! * [`lut`] — decode LUTs and direct f32-bits → code encoders.
-//!   - FP4 decode is a const 16-entry table (`FP4_DECODE`): index = the
-//!     4-bit code `s|ee|m`, entry = the exact grid value, so
-//!     `FP4_DECODE[c] == codec::decode(FP4_E2M1, c)` for every code.
-//!   - FP8 decode is a lazily built 256-entry table per format (one for
-//!     E4M3, one for E5M2), populated *from* `codec::decode` so equality
-//!     holds by construction.
-//!   - FP4 encode is a 7-comparison chain against the RNE decision
-//!     boundaries (ties-to-even baked into `<` vs `<=`); FP8 encode is
-//!     integer mantissa rounding on the raw f32 bits (add-half-minus-one
-//!     plus the LSB parity bit), with the subnormal and saturation ranges
-//!     peeled off first.  Non-finite inputs fall back to the scalar
-//!     reference so the contract `encode_fast(f, x) == codec::encode(f, x)`
-//!     holds for **every** f32 bit pattern (exhaustively testable via
-//!     `cargo test -- --ignored`).
-//! * [`fused`] — single-pass row kernels: group absmax, scale, project /
-//!   encode, and (FP4) nibble-pack in one sweep.  The per-element scale
-//!   division is hoisted to a multiply by the reciprocal **only when the
-//!   scale is a power of two** (reciprocal exact ⇒ `x * (1/s) == x / s`
-//!   bit-for-bit); otherwise the divide stays.  Output is bit-identical to
-//!   `formats::fake_quant_rows` / `quant::quantize_scalar` (property-tested
-//!   across every `Granularity`).
-//! * [`parallel`] — a `std::thread::scope` row sweep for large tensors
-//!   (checkpoint compression, probe eval).  Engages only when the tensor
-//!   has at least [`parallel::PAR_MIN_ELEMS`] elements (currently 1 << 16)
-//!   and more than one row group; below that the serial kernel wins on
-//!   thread-spawn cost alone.
-//! * [`matmul`] — cache-blocked (and, above the same threshold,
-//!   row-parallel) f32 matmul for the probe trainer.  Accumulation order
-//!   over the contraction axis is preserved, so results match the old
-//!   naive loop exactly.
+//! **1. Encode/decode LUTs** ([`lut`]) — the element codecs.  FP4 decode
+//! is a const 16-entry table (`FP4_DECODE`); FP8 decode is a lazily built
+//! 256-entry table per format, populated *from* `codec::decode` so
+//! equality holds by construction.  FP4 encode is a 7-comparison chain
+//! against the RNE decision boundaries; FP8 encode is integer mantissa
+//! rounding on the raw f32 bits, with subnormal and saturation ranges
+//! peeled off first.  Non-finite inputs fall back to the scalar reference
+//! so `encode_fast(f, x) == codec::encode(f, x)` holds for **every** f32
+//! bit pattern (exhaustively testable via `cargo test -- --ignored`).
+//! Use these when touching individual values or building a new kernel.
 //!
-//! Bit-exactness contract: the python mirror (`python/compile/formats.py`)
-//! and this crate agree element-wise on fake-quant outputs (checked by
-//! tests/cross_layer.rs against AOT artifacts).  Everything in this module
-//! therefore has to reproduce the *reference* numerics exactly — any
-//! kernel that is merely "close" would silently break the cross-layer
-//! artifact checks.  When adding a kernel, property-test it against the
-//! scalar path first, speed it up second.
+//! **2. Fused quantize sweeps** ([`fused`], [`parallel`]) — single-pass
+//! row kernels: group absmax, scale, project/encode, and (FP4)
+//! nibble-pack in one sweep, with the per-element scale division hoisted
+//! to an exact reciprocal multiply when the scale is a power of two.
+//! [`parallel`] adds a `std::thread::scope` row sweep that engages above
+//! [`parallel::PAR_MIN_ELEMS`] elements.  Use these whenever a whole
+//! tensor is quantized or fake-quantized: checkpoint compression,
+//! analysis, probe features.
+//!
+//! **3. GEMM engines** ([`matmul`], [`qgemm`]) — the contraction hot
+//! paths.  [`matmul`] is the cache-blocked, row-parallel f32 GEMM with
+//! zero-allocation `matmul_into` / `matmul_bias_into` variants for loops
+//! that reuse output buffers (the probe trainer runs 200 epochs on two
+//! preallocated buffers).  [`qgemm`] consumes a **packed**
+//! `QuantizedTensor` B operand directly — FP4 nibbles or FP8 bytes plus
+//! scales — decoding panels through the family-1 LUTs inside the tile
+//! loop, so the full f32 B matrix never exists.  Use `matmul` when both
+//! operands are f32; use `qgemm` whenever B is already quantized
+//! (checkpoint-restored weights, compressed operands, GEMM-level error
+//! analysis) instead of `dequantize` + `matmul`.
+//!
+//! # Bit-exactness contract
+//!
+//! The python mirror (`python/compile/formats.py`) and this crate agree
+//! element-wise on fake-quant outputs (checked by tests/cross_layer.rs
+//! against AOT artifacts), and both GEMMs preserve naive ascending-k
+//! accumulation per output element.  Everything in this module therefore
+//! has to reproduce the *reference* numerics exactly — any kernel that is
+//! merely "close" would silently break the cross-layer artifact checks.
+//! When adding a kernel, property-test it against the scalar path first,
+//! speed it up second.
 
 pub mod fused;
 pub mod lut;
 pub mod matmul;
 pub mod parallel;
+pub mod qgemm;
 
 /// Hard cap on worker threads for every parallel kernel here (they are
 /// memory-bound; more threads than memory channels just adds contention).
@@ -68,5 +68,6 @@ pub(crate) fn worker_threads(units: usize) -> usize {
 
 pub use fused::{fake_quant_rows_fast, quantize_pack_rows};
 pub use lut::{decode_fast, decode_lut, encode_fast};
-pub use matmul::matmul_f32;
+pub use matmul::{matmul_bias_into, matmul_f32, matmul_into};
 pub use parallel::{fake_quant_rows_auto, quantize_pack_rows_auto};
+pub use qgemm::{qgemm, qgemm_into, Workspace};

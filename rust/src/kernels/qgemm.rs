@@ -1,0 +1,411 @@
+//! Packed-operand quantized GEMM: `f32 A @ QuantizedTensor B` without ever
+//! materializing the f32 B matrix.
+//!
+//! The B operand stays in its storage form (FP4 nibbles or FP8 bytes plus
+//! per-tensor/row/block scales).  Inside the k/j tile loop each B panel is
+//! decoded through the PR-1 LUTs into a small reusable scratch buffer
+//! ([`QJB`] × [`QKB`] f32 at most, usually far less), multiplied, and
+//! discarded — so peak B-side memory is the packed codes + scales + one
+//! panel instead of the full `k × n × 4` bytes a dequantize-then-matmul
+//! round trip allocates.
+//!
+//! Bit-exactness: every decoded panel element is `decode_lut[code] *
+//! scale` — the exact expression `quant::dequantize` uses — and for every
+//! output element the contraction index is consumed in ascending order
+//! with the same `a == 0.0` skip as [`super::matmul`].  Both therefore
+//! equal the naive `for i { for k { for j } }` loop, so
+//! `qgemm(a, q) == matmul_f32(a, dequantize(q))` bit-for-bit at every
+//! shape, format, and granularity (property-tested, see below and
+//! `tests/kernels_bitexact.rs`).  Tiling and the column-stripe thread
+//! split never reorder a single element's accumulation, only interleave
+//! independent elements.
+//!
+//! Parallelism prefers splitting the *output columns* (not rows like the
+//! f32 path): each worker decodes only its own column stripe of B, so the
+//! packed operand is decoded exactly once in total regardless of thread
+//! count.  When the output is too narrow to stripe, large GEMMs fall back
+//! to the f32 path's row split over A (workers re-decode the then-small
+//! panels) so narrow-n shapes never lose the threading the
+//! dequantize-then-matmul path had.
+
+use crate::quant::QuantizedTensor;
+
+use super::lut::decode_lut;
+use super::matmul::PAR_MIN_FLOPS;
+use super::worker_threads;
+
+/// k-tile: rows of B decoded per panel.
+pub const QKB: usize = 256;
+/// j-tile: columns decoded per panel (panel ≤ 256 × 512 f32 = 512 KiB;
+/// column-striped workers use `n / threads` when that is smaller).
+pub const QJB: usize = 512;
+
+/// Minimum output columns per worker before the column split engages —
+/// below this the stripes are too narrow to amortize panel decode.
+const MIN_STRIPE: usize = 64;
+
+/// Borrowed view of a packed B operand, resolved once per GEMM call:
+/// codes, scales, grouping geometry, and the static decode table.
+struct PackedB<'a> {
+    packed: &'a [u8],
+    scales: &'a [f32],
+    /// Elements per scale group (contiguous in flat row-major order).
+    glen: usize,
+    /// Row stride = output columns.
+    n: usize,
+    table: &'static [f32],
+    fp4: bool,
+}
+
+impl<'a> PackedB<'a> {
+    fn new(q: &'a QuantizedTensor, k: usize, n: usize) -> PackedB<'a> {
+        let fmt = q.fmt();
+        assert_eq!(q.rows_cols(), (k, n), "B is {k}x{n}");
+        let glen = q.group_len();
+        let fp4 = fmt.bits() <= 4;
+        let need = if fp4 { (k * n).div_ceil(2) } else { k * n };
+        assert!(q.packed.len() >= need, "packed B too short: {} < {need}", q.packed.len());
+        assert!(
+            q.scales.len() >= (k * n).max(1).div_ceil(glen),
+            "scale count vs geometry"
+        );
+        PackedB { packed: &q.packed, scales: &q.scales, glen, n, table: decode_lut(fmt), fp4 }
+    }
+
+    /// Decode the (k0..k1) × (j0..j1) panel into `panel` (row-major,
+    /// `j1-j0` stride).  One scale load per group segment; each element is
+    /// `table[code] * scale`, bit-identical to `quant::dequantize`.
+    fn decode_panel(&self, k0: usize, k1: usize, j0: usize, j1: usize, panel: &mut [f32]) {
+        let jw = j1 - j0;
+        for kk in k0..k1 {
+            let row_off = kk * self.n;
+            let dst = &mut panel[(kk - k0) * jw..(kk - k0 + 1) * jw];
+            let mut j = j0;
+            while j < j1 {
+                let g = (row_off + j) / self.glen;
+                let gend = j1.min((g + 1) * self.glen - row_off);
+                let s = self.scales[g];
+                if self.fp4 {
+                    for jj in j..gend {
+                        let idx = row_off + jj;
+                        let c = (self.packed[idx >> 1] >> ((idx & 1) * 4)) & 0x0F;
+                        dst[jj - j0] = self.table[c as usize] * s;
+                    }
+                } else {
+                    for jj in j..gend {
+                        dst[jj - j0] = self.table[self.packed[row_off + jj] as usize] * s;
+                    }
+                }
+                j = gend;
+            }
+        }
+    }
+}
+
+/// Per-worker scratch for the column-striped parallel path.
+#[derive(Default)]
+struct Lane {
+    panel: Vec<f32>,
+    stripe: Vec<f32>,
+}
+
+/// Reusable qgemm scratch: the serial panel buffer plus one lane (panel +
+/// output stripe) per worker thread.  Buffers grow on first use and are
+/// reused verbatim afterwards — repeated `qgemm_into` calls with the same
+/// workspace perform zero heap allocations once warm.  Reuse never changes
+/// results: every buffer element is overwritten (or zeroed) before it is
+/// read.
+#[derive(Default)]
+pub struct Workspace {
+    panel: Vec<f32>,
+    lanes: Vec<Lane>,
+}
+
+impl Workspace {
+    pub fn new() -> Workspace {
+        Workspace::default()
+    }
+}
+
+/// Sweep columns `[j_lo, j_hi)`: decode one panel per (j, k) tile and
+/// accumulate all `m` rows of A against it.  `dst` holds columns
+/// `[j_lo, j_hi)` at row stride `dst_stride` and must be zeroed.
+///
+/// Loop order is j-tile → k-tile → A-row → k → j: each panel is decoded
+/// exactly once, and each output element still accumulates its k terms in
+/// ascending order (its single j-tile iterates k0 then kk ascending).
+fn sweep_cols(
+    a: &[f32],
+    m: usize,
+    k: usize,
+    b: &PackedB,
+    j_lo: usize,
+    j_hi: usize,
+    panel: &mut Vec<f32>,
+    dst: &mut [f32],
+    dst_stride: usize,
+) {
+    let jw_max = QJB.min(j_hi.saturating_sub(j_lo));
+    if panel.len() < QKB * jw_max {
+        panel.resize(QKB * jw_max, 0.0);
+    }
+    for j0 in (j_lo..j_hi).step_by(QJB) {
+        let j1 = (j0 + QJB).min(j_hi);
+        let jw = j1 - j0;
+        for k0 in (0..k).step_by(QKB) {
+            let k1 = (k0 + QKB).min(k);
+            let panel_t = &mut panel[..(k1 - k0) * jw];
+            b.decode_panel(k0, k1, j0, j1, panel_t);
+            for i in 0..m {
+                let arow = &a[i * k + k0..i * k + k1];
+                let drow = &mut dst[i * dst_stride + (j0 - j_lo)..][..jw];
+                for (kk, &av) in arow.iter().enumerate() {
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &panel_t[kk * jw..(kk + 1) * jw];
+                    for (o, &bv) in drow.iter_mut().zip(brow) {
+                        *o += av * bv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// (m × k) f32 A @ packed (k × n) B into a caller-owned buffer, decoding B
+/// panel-by-panel through `ws` scratch.  Bit-identical to
+/// `matmul_f32(a, &dequantize(q).data, m, k, n)`; the full f32 B matrix is
+/// never allocated.
+pub fn qgemm_into(
+    a: &[f32],
+    q: &QuantizedTensor,
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+    ws: &mut Workspace,
+) {
+    assert_eq!(a.len(), m * k, "A is {m}x{k}");
+    assert_eq!(out.len(), m * n, "out is {m}x{n}");
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        // empty contraction: A @ B is all-zero, matching `matmul_f32` (a
+        // zero-row B can't even express its geometry through rows_cols)
+        out.fill(0.0);
+        return;
+    }
+    let b = PackedB::new(q, k, n);
+    let bref = &b;
+    let flops = m * k * n;
+    // Preferred split: output columns, so each worker decodes its stripe of
+    // B exactly once.  Too-narrow outputs fall back to splitting A's rows
+    // like the f32 path (workers re-decode the — then small — panels), so
+    // large-m/narrow-n GEMMs still use threads.  Neither split changes any
+    // element's accumulation order.
+    let nt_cols = if flops < PAR_MIN_FLOPS { 1 } else { worker_threads(n / MIN_STRIPE) };
+    if nt_cols >= 2 {
+        let stripe = n.div_ceil(nt_cols);
+        if ws.lanes.len() < nt_cols {
+            ws.lanes.resize_with(nt_cols, Lane::default);
+        }
+        std::thread::scope(|sc| {
+            for (li, lane) in ws.lanes.iter_mut().take(nt_cols).enumerate() {
+                let c0 = li * stripe;
+                if c0 >= n {
+                    break;
+                }
+                let c1 = (c0 + stripe).min(n);
+                let Lane { panel, stripe: sout } = lane;
+                sc.spawn(move || {
+                    let w = c1 - c0;
+                    if sout.len() < m * w {
+                        sout.resize(m * w, 0.0);
+                    }
+                    sout[..m * w].fill(0.0);
+                    sweep_cols(a, m, k, bref, c0, c1, panel, &mut sout[..m * w], w);
+                });
+            }
+        });
+        // stitch the column stripes back into row-major out
+        for (li, lane) in ws.lanes.iter().take(nt_cols).enumerate() {
+            let c0 = li * stripe;
+            if c0 >= n {
+                break;
+            }
+            let c1 = (c0 + stripe).min(n);
+            let w = c1 - c0;
+            for i in 0..m {
+                out[i * n + c0..i * n + c1].copy_from_slice(&lane.stripe[i * w..(i + 1) * w]);
+            }
+        }
+        return;
+    }
+    let nt_rows = if flops < PAR_MIN_FLOPS { 1 } else { worker_threads(m) };
+    out.fill(0.0);
+    if nt_rows < 2 {
+        sweep_cols(a, m, k, &b, 0, n, &mut ws.panel, out, n);
+        return;
+    }
+    let rows_per = m.div_ceil(nt_rows);
+    if ws.lanes.len() < nt_rows {
+        ws.lanes.resize_with(nt_rows, Lane::default);
+    }
+    std::thread::scope(|sc| {
+        for ((ar, or), lane) in a
+            .chunks(rows_per * k)
+            .zip(out.chunks_mut(rows_per * n))
+            .zip(ws.lanes.iter_mut())
+        {
+            let panel = &mut lane.panel;
+            sc.spawn(move || {
+                let mrows = or.len() / n;
+                sweep_cols(ar, mrows, k, bref, 0, n, panel, or, n);
+            });
+        }
+    });
+}
+
+/// Allocating convenience wrapper around [`qgemm_into`] with a throwaway
+/// workspace — for one-shot callers (analysis, tests).  Hot loops should
+/// hold a [`Workspace`] and an output buffer and call `qgemm_into`.
+pub fn qgemm(a: &[f32], q: &QuantizedTensor, m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    let mut ws = Workspace::new();
+    qgemm_into(a, q, m, k, n, &mut out, &mut ws);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::{FP4_E2M1, FP8_E4M3, FP8_E5M2};
+    use crate::kernels::matmul_f32;
+    use crate::prop_assert;
+    use crate::quant::{dequantize, quantize_rows, GranSpec};
+    use crate::util::proptest::prop_check;
+    use crate::util::rng::Rng;
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    fn reference(a: &[f32], q: &QuantizedTensor, m: usize, k: usize, n: usize) -> Vec<f32> {
+        matmul_f32(a, &dequantize(q).data, m, k, n)
+    }
+
+    #[test]
+    fn qgemm_bit_identical_to_dequant_matmul() {
+        // shapes straddle the QKB/QJB tile edges; wild A exercises the
+        // zero-skip and extreme-magnitude paths
+        for fmt in [FP4_E2M1, FP8_E4M3, FP8_E5M2] {
+            prop_check("qgemm == matmul(dequantize)", 30, |c| {
+                let m = c.usize_in(1, 5);
+                let k = [1usize, 7, 64, 255, 256, 257][c.usize_in(0, 5)];
+                let n = [1usize, 8, 130, 511, 512, 513][c.usize_in(0, 5)];
+                let a = c.f32_vec_wild(m * k, m * k);
+                let bdata = c.f32_vec_wild(k * n, k * n);
+                for g in [GranSpec::PerTensor, GranSpec::PerRow, GranSpec::PerBlock(32)] {
+                    let q = quantize_rows(&bdata, k, n, fmt, g);
+                    let got = qgemm(&a, &q, m, k, n);
+                    let want = reference(&a, &q, m, k, n);
+                    for (i, (x, y)) in got.iter().zip(&want).enumerate() {
+                        let same = x.to_bits() == y.to_bits() || (x.is_nan() && y.is_nan());
+                        prop_assert!(same, "{} {g:?} {m}x{k}x{n} idx {i}: {x} vs {y}", fmt.name);
+                    }
+                }
+                Ok(())
+            });
+        }
+    }
+
+    #[test]
+    fn parallel_path_bit_identical() {
+        // 64*512*640 ≈ 21M MACs > PAR_MIN_FLOPS and n/MIN_STRIPE = 10
+        // stripes → the column-split threaded path with a ragged last stripe
+        let (m, k, n) = (64usize, 512usize, 640usize);
+        let mut rng = Rng::new(40);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let bdata: Vec<f32> = (0..k * n).map(|_| rng.normal_f32(0.0, 0.5)).collect();
+        for fmt in [FP4_E2M1, FP8_E4M3] {
+            for g in [GranSpec::PerRow, GranSpec::PerBlock(128)] {
+                let q = quantize_rows(&bdata, k, n, fmt, g);
+                assert_eq!(
+                    bits(&qgemm(&a, &q, m, k, n)),
+                    bits(&reference(&a, &q, m, k, n)),
+                    "{} {g:?}",
+                    fmt.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn narrow_output_row_split_bit_identical() {
+        // 512*256*64 ≈ 8.4M MACs > PAR_MIN_FLOPS but n/MIN_STRIPE = 1, so
+        // the column split can't engage — the A-row fallback must, and it
+        // must match the reference bits exactly
+        let (m, k, n) = (512usize, 256usize, 64usize);
+        let mut rng = Rng::new(44);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let bdata: Vec<f32> = (0..k * n).map(|_| rng.normal_f32(0.0, 0.5)).collect();
+        let q = quantize_rows(&bdata, k, n, FP4_E2M1, GranSpec::PerBlock(32));
+        assert_eq!(bits(&qgemm(&a, &q, m, k, n)), bits(&reference(&a, &q, m, k, n)));
+    }
+
+    #[test]
+    fn workspace_reuse_same_bits() {
+        // one workspace across differently-shaped calls, including a
+        // parallel-path call in between: every reuse must reproduce the
+        // fresh-workspace bits exactly
+        let mut rng = Rng::new(41);
+        let mut ws = Workspace::new();
+        let shapes = [(3usize, 100usize, 37usize), (64, 512, 640), (3, 100, 37), (2, 256, 512)];
+        for (m, k, n) in shapes {
+            let a: Vec<f32> = (0..m * k).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let bdata: Vec<f32> = (0..k * n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let q = quantize_rows(&bdata, k, n, FP4_E2M1, GranSpec::PerBlock(32));
+            let mut out = vec![f32::NAN; m * n]; // dirty output buffer too
+            qgemm_into(&a, &q, m, k, n, &mut out, &mut ws);
+            assert_eq!(bits(&out), bits(&qgemm(&a, &q, m, k, n)), "{m}x{k}x{n}");
+            // second call, same buffers: identical bits
+            let first = out.clone();
+            qgemm_into(&a, &q, m, k, n, &mut out, &mut ws);
+            assert_eq!(bits(&out), bits(&first), "{m}x{k}x{n} reuse");
+        }
+    }
+
+    #[test]
+    fn degenerate_block_and_scalar_geometries() {
+        // PerBlock with a width that doesn't divide cols falls back to
+        // whole-row groups; cols=1 packs nibbles across rows
+        let mut rng = Rng::new(42);
+        for (k, n, g) in [
+            (5usize, 3usize, GranSpec::PerBlock(2)),
+            (7, 1, GranSpec::PerRow),
+            (16, 16, GranSpec::PerBlock(16)),
+        ] {
+            let a: Vec<f32> = (0..2 * k).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let bdata: Vec<f32> = (0..k * n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let q = quantize_rows(&bdata, k, n, FP4_E2M1, g);
+            assert_eq!(bits(&qgemm(&a, &q, 2, k, n)), bits(&reference(&a, &q, 2, k, n)), "{g:?}");
+        }
+    }
+
+    #[test]
+    fn empty_m_leaves_out_untouched_shapewise() {
+        let q = quantize_rows(&[1.0, 2.0, 3.0, 4.0], 2, 2, FP4_E2M1, GranSpec::PerRow);
+        assert!(qgemm(&[], &q, 0, 2, 2).is_empty());
+    }
+
+    #[test]
+    fn empty_contraction_yields_zeros_like_matmul() {
+        // k == 0: matmul_f32 returns zeros for the same shape; qgemm must
+        // agree instead of tripping over the unrepresentable B geometry
+        let q = quantize_rows(&[], 0, 4, FP4_E2M1, GranSpec::PerTensor);
+        assert_eq!(qgemm(&[], &q, 2, 0, 4), vec![0.0; 8]);
+        assert_eq!(matmul_f32(&[], &[], 2, 0, 4), vec![0.0; 8]);
+    }
+}

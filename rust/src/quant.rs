@@ -39,6 +39,41 @@ impl GranSpec {
             GranSpec::PerBlock(b) => Granularity::PerBlock(b),
         }
     }
+
+    /// The inverse of [`GranSpec::to_granularity`].
+    pub fn from_granularity(g: Granularity) -> GranSpec {
+        match g {
+            Granularity::PerTensor => GranSpec::PerTensor,
+            Granularity::PerRow => GranSpec::PerRow,
+            Granularity::PerBlock(b) => GranSpec::PerBlock(b),
+        }
+    }
+}
+
+impl QuantizedTensor {
+    /// Runtime format (never fails for tensors built by this crate — the
+    /// name is written from an `FpFormat` constant).
+    pub fn fmt(&self) -> FpFormat {
+        FpFormat::by_name(&self.fmt_name).expect("unknown format")
+    }
+
+    /// (rows, cols) view along the quantization axis — leading dims
+    /// flattened, scalars viewed as 1×1.  The geometry `kernels::qgemm`
+    /// consumes the packed operand with.
+    pub fn rows_cols(&self) -> (usize, usize) {
+        rows_cols(&self.shape)
+    }
+
+    /// Elements per scale group (contiguous in flat row-major order):
+    /// scale index of flat element `i` is `i / group_len()`.
+    pub fn group_len(&self) -> usize {
+        let (rows, cols) = self.rows_cols();
+        match self.granularity {
+            GranSpec::PerTensor => rows * cols,
+            GranSpec::PerRow => cols,
+            GranSpec::PerBlock(b0) => effective_block(cols, b0),
+        }
+    }
 }
 
 fn rows_cols(shape: &[usize]) -> (usize, usize) {
@@ -59,6 +94,22 @@ pub fn quantize(t: &Tensor, fmt: FpFormat, g: GranSpec) -> QuantizedTensor {
     QuantizedTensor {
         fmt_name: fmt.name.to_string(),
         shape: t.shape.clone(),
+        granularity: g,
+        packed,
+        scales,
+    }
+}
+
+/// Quantize a raw row-major (rows × cols) buffer — same kernels as
+/// [`quantize`] for callers that hold a slice, not a `Tensor` (the
+/// GEMM-level analysis path quantizes B operands without copying them
+/// into a tensor first).
+pub fn quantize_rows(x: &[f32], rows: usize, cols: usize, fmt: FpFormat, g: GranSpec) -> QuantizedTensor {
+    assert_eq!(x.len(), rows * cols);
+    let (packed, scales) = kernels::quantize_pack_rows_auto(x, rows, cols, fmt, g.to_granularity());
+    QuantizedTensor {
+        fmt_name: fmt.name.to_string(),
+        shape: vec![rows, cols],
         granularity: g,
         packed,
         scales,
@@ -102,22 +153,28 @@ pub fn quantize_scalar(t: &Tensor, fmt: FpFormat, g: GranSpec) -> QuantizedTenso
 }
 
 /// Reconstruct the fake-quantized tensor (LUT decode — one table load and
-/// one multiply per element).
+/// one multiply per element).  Iterates group-wise: one scale load per
+/// group and a tight slice loop inside, instead of a division per element.
 pub fn dequantize(q: &QuantizedTensor) -> Tensor {
-    let fmt = FpFormat::by_name(&q.fmt_name).expect("unknown format");
-    let n: usize = q.shape.iter().product::<usize>().max(1);
-    let codes = if fmt.bits() <= 4 { codec::unpack_fp4(&q.packed, n) } else { q.packed.clone() };
-    let (rows, cols) = rows_cols(&q.shape);
-    let group_len = match q.granularity {
-        GranSpec::PerTensor => rows * cols,
-        GranSpec::PerRow => cols,
-        GranSpec::PerBlock(b0) => effective_block(cols, b0),
+    let fmt = q.fmt();
+    // note: an empty product is already 1, so scalars ([]) decode one
+    // element while zero-dim shapes decode none (and carry zero scales)
+    let n: usize = q.shape.iter().product::<usize>();
+    let unpacked;
+    let codes: &[u8] = if fmt.bits() <= 4 {
+        unpacked = codec::unpack_fp4(&q.packed, n);
+        &unpacked
+    } else {
+        &q.packed
     };
+    let glen = q.group_len();
+    assert!(q.scales.len() >= n.div_ceil(glen), "scale count vs geometry");
     let table = kernels::decode_lut(fmt); // hoisted: no per-element dispatch
     let mut data = Vec::with_capacity(n);
-    for (i, &c) in codes.iter().enumerate() {
-        let s = q.scales[i / group_len];
-        data.push(table[c as usize] * s);
+    for (seg, &s) in codes.chunks(glen).zip(&q.scales) {
+        for &c in seg {
+            data.push(table[c as usize] * s);
+        }
     }
     Tensor { shape: q.shape.clone(), data }
 }

@@ -104,6 +104,24 @@ impl Tensor {
         Tensor::from_vec(&[m, n], crate::kernels::matmul_f32(&self.data, &other.data, m, k, n))
     }
 
+    /// `self @ q` where the right operand stays in packed quantized form —
+    /// `kernels::qgemm` decodes B panel-by-panel, so no f32 copy of B is
+    /// ever materialized.  Bit-identical to
+    /// `self.matmul(&quant::dequantize(q))`.
+    pub fn matmul_quant(
+        &self,
+        q: &crate::quant::QuantizedTensor,
+        ws: &mut crate::kernels::Workspace,
+    ) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let (k2, n) = q.rows_cols();
+        assert_eq!(k, k2, "A cols {k} vs B rows {k2}");
+        let mut out = vec![0.0f32; m * n];
+        crate::kernels::qgemm_into(&self.data, q, m, k, n, &mut out, ws);
+        Tensor::from_vec(&[m, n], out)
+    }
+
     /// Row-major transpose (used to feed gradient matmuls).
     pub fn transpose2(&self) -> Tensor {
         assert_eq!(self.rank(), 2);
@@ -173,6 +191,18 @@ mod tests {
     #[should_panic]
     fn shape_mismatch_panics() {
         Tensor::from_vec(&[2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn matmul_quant_matches_dequantized_matmul() {
+        use crate::formats::FP4_E2M1;
+        use crate::quant::{dequantize, quantize, GranSpec};
+        let mut rng = Rng::new(3);
+        let a = Tensor::randn(&[4, 32], 1.0, &mut rng);
+        let b = Tensor::randn(&[32, 8], 1.0, &mut rng);
+        let q = quantize(&b, FP4_E2M1, GranSpec::PerRow);
+        let mut ws = crate::kernels::Workspace::new();
+        assert_eq!(a.matmul_quant(&q, &mut ws), a.matmul(&dequantize(&q)));
     }
 
     #[test]

@@ -7,8 +7,9 @@
 use fp4train::formats::codec;
 use fp4train::formats::{fake_quant_rows, Granularity, FP4_E2M1, FP8_E4M3, FP8_E5M2};
 use fp4train::kernels::{
-    decode_fast, encode_fast, fake_quant_rows_auto, fake_quant_rows_fast, matmul_f32,
-    quantize_pack_rows, quantize_pack_rows_auto,
+    decode_fast, encode_fast, fake_quant_rows_auto, fake_quant_rows_fast, matmul_bias_into,
+    matmul_f32, matmul_into, qgemm, qgemm_into, quantize_pack_rows, quantize_pack_rows_auto,
+    Workspace,
 };
 use fp4train::quant::{self, GranSpec};
 use fp4train::tensor::Tensor;
@@ -107,6 +108,54 @@ fn codec_fast_paths_agree_on_all_codes() {
             let v = codec::decode(fmt, c);
             assert_eq!(encode_fast(fmt, v), codec::encode(fmt, v), "{} code {c}", fmt.name);
         }
+    }
+}
+
+#[test]
+fn qgemm_equals_dequant_matmul_across_formats_grans_and_shapes() {
+    // tile-edge shapes (QKB=256, QJB=512) plus one shape past the parallel
+    // threshold so the column-striped threaded path is covered
+    let shapes = [(2usize, 33usize, 7usize), (3, 257, 513), (5, 256, 512), (64, 512, 640)];
+    for fmt in [FP4_E2M1, FP8_E4M3, FP8_E5M2] {
+        for &(m, k, n) in &shapes {
+            let a = wild(m * k, 7 * m as u64 + k as u64);
+            let bdata = wild(k * n, 11 * k as u64 + n as u64);
+            for g in [GranSpec::PerTensor, GranSpec::PerRow, GranSpec::PerBlock(32)] {
+                let q = quant::quantize_rows(&bdata, k, n, fmt, g);
+                let got = qgemm(&a, &q, m, k, n);
+                let want = matmul_f32(&a, &quant::dequantize(&q).data, m, k, n);
+                assert_eq!(bits(&got), bits(&want), "{} {m}x{k}x{n} {g:?}", fmt.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn workspace_and_into_buffers_are_reusable_bitwise() {
+    let mut rng = Rng::new(23);
+    let (m, k, n) = (6usize, 300usize, 40usize);
+    let a: Vec<f32> = (0..m * k).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let bdata: Vec<f32> = (0..k * n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let bias: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    // f32 path: _into with a dirty reused buffer, bias folded in
+    let mut out = vec![f32::NAN; m * n];
+    matmul_into(&a, &bdata, m, k, n, &mut out);
+    let mut want = matmul_f32(&a, &bdata, m, k, n);
+    assert_eq!(bits(&out), bits(&want));
+    matmul_bias_into(&a, &bdata, &bias, m, k, n, &mut out);
+    for r in 0..m {
+        for j in 0..n {
+            want[r * n + j] += bias[j];
+        }
+    }
+    assert_eq!(bits(&out), bits(&want));
+    // packed path: one workspace across repeated + reshaped calls
+    let q = quant::quantize_rows(&bdata, k, n, FP4_E2M1, GranSpec::PerBlock(32));
+    let mut ws = Workspace::new();
+    let fresh = qgemm(&a, &q, m, k, n);
+    for _ in 0..2 {
+        qgemm_into(&a, &q, m, k, n, &mut out, &mut ws);
+        assert_eq!(bits(&out), bits(&fresh));
     }
 }
 

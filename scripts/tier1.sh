@@ -5,14 +5,24 @@
 #   scripts/tier1.sh           # build + test + bench --no-run
 #   scripts/tier1.sh --fast    # skip the release build (debug test only)
 #
-# Exit codes: 0 ok, 2 toolchain missing, else the failing cargo status.
+# When `cargo` is missing, scripts/toolchain.sh is invoked to bootstrap a
+# pinned toolchain (rustup; needs network on first run).
+#
+# Exit codes: 0 ok, 2 toolchain missing and unbootstrappable, else the
+# failing cargo status.
 
 set -euo pipefail
-cd "$(dirname "$0")/../rust"
+SCRIPT_DIR="$(cd "$(dirname "$0")" && pwd)"
+cd "$SCRIPT_DIR/../rust"
 
 if ! command -v cargo >/dev/null 2>&1; then
-    echo "tier1: cargo not found on PATH — rust toolchain missing in this" >&2
-    echo "tier1: environment; cannot verify (see ROADMAP.md 'Verification')" >&2
+    if TOOLDIR="$("$SCRIPT_DIR/toolchain.sh")"; then
+        export PATH="$TOOLDIR:$PATH"
+    fi
+fi
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "tier1: cargo not found and toolchain bootstrap failed — rust" >&2
+    echo "tier1: toolchain missing; cannot verify (see ROADMAP.md)" >&2
     exit 2
 fi
 

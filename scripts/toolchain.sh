@@ -1,0 +1,72 @@
+#!/usr/bin/env bash
+# Ensure a rust toolchain is available, bootstrapping a *pinned* one when
+# `cargo` is absent, and print the directory containing `cargo` on stdout
+# so callers can prepend it to PATH:
+#
+#   PATH="$(scripts/toolchain.sh):$PATH"
+#
+# Resolution order:
+#   1. cargo already on PATH                 -> print its directory
+#   2. a previous bootstrap in $CARGO_HOME   -> print that bin directory
+#   3. rustup available                      -> install the pinned toolchain
+#   4. curl available                        -> bootstrap rustup itself
+#      (pinned toolchain, minimal profile), then as 3
+#
+# Pin with RUST_TOOLCHAIN=<version> for reproducible CI runs; all
+# diagnostics go to stderr so stdout stays a clean path.
+#
+# Exit codes: 0 ok (cargo bin dir on stdout), 2 no toolchain and no way to
+# obtain one (offline container without rustup — see ROADMAP.md).
+
+set -euo pipefail
+
+PIN="${RUST_TOOLCHAIN:-1.82.0}"
+RUSTUP_URL="https://sh.rustup.rs"
+CARGO_BIN="${CARGO_HOME:-$HOME/.cargo}/bin"
+
+say() { echo "toolchain: $*" >&2; }
+
+if command -v cargo >/dev/null 2>&1; then
+    dirname "$(command -v cargo)"
+    exit 0
+fi
+
+if [[ -x "$CARGO_BIN/cargo" ]]; then
+    echo "$CARGO_BIN"
+    exit 0
+fi
+
+if ! command -v rustup >/dev/null 2>&1; then
+    if ! command -v curl >/dev/null 2>&1; then
+        say "no cargo, no rustup, no curl — cannot bootstrap a toolchain"
+        exit 2
+    fi
+    say "no cargo/rustup on PATH; bootstrapping rustup with pinned toolchain $PIN"
+    if ! curl --proto '=https' --tlsv1.2 -sSf --max-time 120 "$RUSTUP_URL" \
+        | sh -s -- -y --no-modify-path --profile minimal --default-toolchain "$PIN" >&2; then
+        say "rustup bootstrap failed (offline container?)"
+        exit 2
+    fi
+fi
+
+RUSTUP="$(command -v rustup 2>/dev/null || echo "$CARGO_BIN/rustup")"
+if ! "$RUSTUP" toolchain install "$PIN" --profile minimal >&2; then
+    say "pinned toolchain $PIN install failed"
+    exit 2
+fi
+
+# Scope the pin to this invocation: print the pinned toolchain's own bin
+# directory rather than flipping the user's machine-wide rustup default.
+TOOLCHAIN_CARGO="$("$RUSTUP" which --toolchain "$PIN" cargo 2>/dev/null || true)"
+if [[ -n "$TOOLCHAIN_CARGO" && -x "$TOOLCHAIN_CARGO" ]]; then
+    dirname "$TOOLCHAIN_CARGO"
+    exit 0
+fi
+# Shim fallback: a fresh rustup-init bootstrap above already made $PIN the
+# default of its brand-new $CARGO_HOME (no preexisting default to clobber).
+if [[ -x "$CARGO_BIN/cargo" ]]; then
+    echo "$CARGO_BIN"
+    exit 0
+fi
+say "bootstrap finished but no usable cargo found for toolchain $PIN"
+exit 2
