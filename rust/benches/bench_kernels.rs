@@ -1,7 +1,13 @@
 //! Kernel benches: scalar reference vs fused LUT vs parallel paths for
 //! the quantization hot loops, plus the blocked matmul.  Emits
 //! `BENCH_kernels.json` (name, iters, median_ns, mad_ns, throughput) so
-//! the perf trajectory is tracked across PRs.
+//! the perf trajectory is tracked across PRs (compare against committed
+//! baselines with `scripts/bench_diff.sh`).
+//!
+//! The `/parallel` entries and the blocked matmul run on the persistent
+//! `kernels::pool` workers — their medians include pool dispatch but no
+//! longer any per-call thread spawn/join (which dominated fixed costs
+//! at these sizes before PR 3).
 //!
 //! Acceptance anchor: `quantize_pack/64x4096/block128/fused` must beat
 //! `quantize_pack/64x4096/block128/scalar` by ≥ 3× median (checked and

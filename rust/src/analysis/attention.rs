@@ -37,6 +37,11 @@ pub fn attn_stats(map: &Tensor) -> AttnStats {
         peak_sum += peak;
         rows += 1.0;
     }
+    if rows == 0.0 {
+        // t < 2 maps (or all-zero rows) contribute no scorable rows —
+        // report zeroed stats instead of 0/0 = NaN
+        return AttnStats { norm_entropy: 0.0, mean_peak: 0.0 };
+    }
     AttnStats { norm_entropy: ent_sum / rows, mean_peak: peak_sum / rows }
 }
 
@@ -102,6 +107,21 @@ mod tests {
             }
         }
         Tensor::from_vec(&[t, t], data)
+    }
+
+    #[test]
+    fn tiny_and_empty_maps_yield_zeroed_stats_not_nan() {
+        // t < 2 has no row with q >= 1, so there is nothing to score:
+        // the stats must be zeros, not 0/0 = NaN (regression)
+        for t in [0usize, 1] {
+            let s = attn_stats(&Tensor::zeros(&[t, t]));
+            assert_eq!(s.norm_entropy, 0.0, "t={t} {s:?}");
+            assert_eq!(s.mean_peak, 0.0, "t={t} {s:?}");
+        }
+        // all-zero rows are skipped the same way at any t
+        let s = attn_stats(&Tensor::zeros(&[8, 8]));
+        assert!(!s.norm_entropy.is_nan() && !s.mean_peak.is_nan(), "{s:?}");
+        assert_eq!((s.norm_entropy, s.mean_peak), (0.0, 0.0));
     }
 
     #[test]

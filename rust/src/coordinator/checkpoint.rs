@@ -97,11 +97,25 @@ impl StoredTensor {
     /// panel-by-panel; no f32 weight copy), the blocked f32 matmul
     /// otherwise.  Bit-identical to `a.matmul(&self.to_tensor())` either
     /// way.
+    ///
+    /// Inference over a restored checkpoint multiplies against the same
+    /// packed weights every step — use [`StoredTensor::gemm_workspace`]
+    /// (or any cache-enabled `Workspace`) so each weight panel is decoded
+    /// once for the whole session instead of once per call.
     pub fn matmul_a(&self, a: &Tensor, ws: &mut crate::kernels::Workspace) -> Tensor {
         match self {
             StoredTensor::F32(t) => a.matmul(t),
             StoredTensor::Quantized(q) => a.matmul_quant(q, ws),
         }
+    }
+
+    /// A [`matmul_a`](StoredTensor::matmul_a) workspace with a panel
+    /// cache sized for repeated multiplies against restored weights —
+    /// the `checkpoint::load_packed` inference hot path.
+    pub fn gemm_workspace() -> crate::kernels::Workspace {
+        crate::kernels::Workspace::with_panel_cache(
+            crate::kernels::qgemm::DEFAULT_PANEL_CACHE_BYTES,
+        )
     }
 }
 
@@ -186,13 +200,14 @@ fn blob_stored(h: &Json, bytes: &[u8]) -> Result<StoredTensor> {
                 .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
                 .collect();
             let fmt_name = if codec == WeightCodec::Fp8Block { "fp8_e4m3" } else { "fp4_e2m1" };
-            Ok(StoredTensor::Quantized(QuantizedTensor {
-                fmt_name: fmt_name.to_string(),
+            // `new` assigns the fresh tensor id qgemm's panel cache keys by
+            Ok(StoredTensor::Quantized(QuantizedTensor::new(
+                fmt_name.to_string(),
                 shape,
-                granularity: GranSpec::PerBlock(128),
+                GranSpec::PerBlock(128),
                 packed,
                 scales,
-            }))
+            )))
         }
     }
 }
@@ -384,6 +399,36 @@ mod tests {
         );
         // and the f32 view of the packed load matches the legacy loader
         assert_eq!(pk.params[0].1.to_tensor().data, full.params[0].1.data);
+    }
+
+    #[test]
+    fn repeated_matmul_a_reuses_cached_panels_bit_identical() {
+        // the load_packed inference pattern: many activations against the
+        // same restored packed weight — panels decode once, bits never move
+        let c = sample();
+        let p = tmp("panelcache.ckpt");
+        save(&c, &p, WeightCodec::Fp4Block).unwrap();
+        let pk = load_packed(&p).unwrap();
+        let w = &pk.params[0].1;
+        let mut ws = StoredTensor::gemm_workspace();
+        let mut rng = Rng::new(13);
+        let mut first_misses = None;
+        for round in 0..3 {
+            let acts = Tensor::randn(&[4, 32], 1.0, &mut rng);
+            let got = w.matmul_a(&acts, &mut ws);
+            let want = acts.matmul(&w.to_tensor());
+            assert_eq!(
+                got.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                want.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "round {round}"
+            );
+            let stats = ws.panel_cache_stats().unwrap();
+            match first_misses {
+                None => first_misses = Some(stats.misses),
+                Some(m0) => assert_eq!(stats.misses, m0, "later rounds must not re-decode"),
+            }
+        }
+        assert!(ws.panel_cache_stats().unwrap().hits > 0);
     }
 
     #[test]

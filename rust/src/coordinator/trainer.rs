@@ -134,6 +134,8 @@ impl<'rt> Trainer<'rt> {
             let batch_host = pf.next();
             let t0 = Instant::now();
             let batch = rt.upload_i32(&batch_host)?;
+            // uploaded: hand the host window buffer back for reuse
+            pf.recycle(batch_host);
             let (st, loss, gnorm) = state.train_step(exe, &batch)?;
             state = st;
             let ms = t0.elapsed().as_secs_f64() * 1000.0;

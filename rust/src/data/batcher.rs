@@ -12,7 +12,7 @@
 //! the backpressure mechanism (L3 perf target: data never stalls the step
 //! loop; see EXPERIMENTS.md §Perf).
 
-use std::sync::mpsc::{sync_channel, Receiver};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender};
 use std::thread::JoinHandle;
 
 use crate::tensor::TensorI32;
@@ -68,7 +68,30 @@ impl TokenDataset {
     }
 
     /// The batch for a global step (deterministic; worker-sharded).
+    /// One-shot form of [`TokenDataset::train_batch_with`] — allocates a
+    /// fresh window buffer and epoch permutation per call.
     pub fn train_batch(&self, step: u64, worker: usize, n_workers: usize) -> TensorI32 {
+        self.train_batch_with(step, worker, n_workers, &mut BatchScratch::default(), Vec::new())
+    }
+
+    /// [`TokenDataset::train_batch`] with recycled allocations: `buf` (a
+    /// previously consumed batch's storage, or empty) is cleared and
+    /// refilled, and `scratch` keeps the epoch permutation alive across
+    /// sequential steps so it is reshuffled once per epoch instead of
+    /// once per batch.  Bit-identical batches either way — the
+    /// permutation is a pure function of (seed, epoch), and `buf`
+    /// contents are discarded before use.
+    ///
+    /// `scratch` is only valid for one (dataset, batch-geometry) pair;
+    /// use a fresh `BatchScratch` per dataset.
+    pub fn train_batch_with(
+        &self,
+        step: u64,
+        worker: usize,
+        n_workers: usize,
+        scratch: &mut BatchScratch,
+        buf: Vec<i32>,
+    ) -> TensorI32 {
         let seq = self.cfg.seq;
         let b = self.cfg.batch;
         let n_windows = Self::window_starts(&self.train, seq);
@@ -77,14 +100,20 @@ impl TokenDataset {
         let global_batch = (b * n_workers) as u64;
         let epoch = step * global_batch / windows_per_epoch as u64;
         let pos_in_epoch = (step * global_batch % windows_per_epoch as u64) as usize;
-        // epoch-seeded permutation, materialized lazily via index hashing:
-        // a full Fisher-Yates per epoch is fine at this scale.
-        let mut perm: Vec<u32> = (0..windows_per_epoch as u32).collect();
-        let mut rng = Rng::new(self.cfg.seed ^ (epoch.wrapping_mul(0x9E3779B97F4A7C15)));
-        rng.shuffle(&mut perm);
-        let mut data = Vec::with_capacity(b * (seq + 1));
+        if scratch.epoch != Some(epoch) || scratch.perm.len() != windows_per_epoch {
+            // epoch-seeded permutation (full Fisher-Yates is fine at this
+            // scale), rebuilt only on epoch boundaries when reused
+            scratch.perm.clear();
+            scratch.perm.extend(0..windows_per_epoch as u32);
+            let mut rng = Rng::new(self.cfg.seed ^ (epoch.wrapping_mul(0x9E3779B97F4A7C15)));
+            rng.shuffle(&mut scratch.perm);
+            scratch.epoch = Some(epoch);
+        }
+        let mut data = buf;
+        data.clear();
+        data.reserve(b * (seq + 1));
         for i in 0..b {
-            let idx = perm[pos_in_epoch + worker + i * n_workers] as usize;
+            let idx = scratch.perm[pos_in_epoch + worker + i * n_workers] as usize;
             data.extend_from_slice(Self::window(&self.train, seq, idx));
         }
         TensorI32::from_vec(&[b, seq + 1], data)
@@ -111,30 +140,57 @@ impl TokenDataset {
     }
 }
 
+/// Reusable batch-generation scratch: the epoch permutation, rebuilt only
+/// when the epoch (or window count) changes.  Owned by sequential batch
+/// producers ([`Prefetcher`]); one per dataset.
+#[derive(Default)]
+pub struct BatchScratch {
+    epoch: Option<u64>,
+    perm: Vec<u32>,
+}
+
 /// Prefetching wrapper: producer thread keeps up to `depth` batches ready.
+///
+/// Consumers that are done with a batch should hand it back via
+/// [`Prefetcher::recycle`]: the producer then refills the returned
+/// `(B, T+1)` window buffer in place instead of allocating a fresh one
+/// per batch (it also reuses one epoch permutation across the whole
+/// epoch).  Recycling is optional — unreturned batches just cost the
+/// old per-batch allocation.
 pub struct Prefetcher {
     rx: Receiver<TensorI32>,
+    recycle_tx: Sender<Vec<i32>>,
     _handle: JoinHandle<()>,
 }
 
 impl Prefetcher {
     pub fn new(ds: TokenDataset, start_step: u64, worker: usize, n_workers: usize, depth: usize) -> Self {
         let (tx, rx) = sync_channel(depth);
+        let (recycle_tx, recycle_rx) = channel::<Vec<i32>>();
         let handle = std::thread::spawn(move || {
             let mut step = start_step;
+            let mut scratch = BatchScratch::default();
             loop {
-                let b = ds.train_batch(step, worker, n_workers);
+                // drain at most one returned buffer; empty Vec = fresh alloc
+                let buf = recycle_rx.try_recv().unwrap_or_default();
+                let b = ds.train_batch_with(step, worker, n_workers, &mut scratch, buf);
                 if tx.send(b).is_err() {
                     return; // consumer dropped
                 }
                 step += 1;
             }
         });
-        Prefetcher { rx, _handle: handle }
+        Prefetcher { rx, recycle_tx, _handle: handle }
     }
 
     pub fn next(&self) -> TensorI32 {
         self.rx.recv().expect("prefetcher thread died")
+    }
+
+    /// Return a consumed batch so the producer can reuse its allocation.
+    /// A no-op if the producer already exited.
+    pub fn recycle(&self, batch: TensorI32) {
+        let _ = self.recycle_tx.send(batch.data);
     }
 }
 
@@ -220,6 +276,34 @@ mod tests {
         let pf = Prefetcher::new(ds.clone(), 0, 0, 1, 4);
         for step in 0..6 {
             assert_eq!(pf.next().data, ds.train_batch(step, 0, 1).data);
+        }
+    }
+
+    #[test]
+    fn prefetcher_with_recycling_matches_direct() {
+        // handing buffers back must not change a single batch
+        let ds = TokenDataset::new(toks(10_000), cfg());
+        let pf = Prefetcher::new(ds.clone(), 0, 0, 1, 2);
+        for step in 0..12 {
+            let b = pf.next();
+            assert_eq!(b.data, ds.train_batch(step, 0, 1).data, "step {step}");
+            pf.recycle(b);
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_is_bit_identical_across_epochs() {
+        // one scratch + one recycled buffer driven across an epoch
+        // boundary equals the allocate-per-call path exactly
+        let ds = TokenDataset::new(toks(2000), cfg());
+        let mut scratch = BatchScratch::default();
+        let mut buf = Vec::new();
+        for step in 0..300 {
+            let got = ds.train_batch_with(step, 0, 1, &mut scratch, std::mem::take(&mut buf));
+            let want = ds.train_batch(step, 0, 1);
+            assert_eq!(got.data, want.data, "step {step}");
+            assert_eq!(got.shape, want.shape);
+            buf = got.data; // recycle
         }
     }
 }

@@ -80,11 +80,13 @@ impl Probe {
     /// Full-batch GD with L2; features should be roughly unit scale.
     /// Both matmuls (forward logits with the bias folded into the kernel
     /// epilogue, and the x^T-residual gradient) run on the cache-blocked
-    /// `kernels::matmul_bias_into`/`matmul_into`, which go row-parallel
-    /// for large feature matrices — the probe-eval hot path.  The logits,
-    /// gradient, and bias-gradient buffers are allocated once and reused
-    /// by all `epochs` iterations: the epoch loop performs zero heap
-    /// allocations.
+    /// `kernels::matmul_bias_into`/`kernels::matmul_into`, which fan out
+    /// over the persistent `kernels::pool` workers for large feature
+    /// matrices — the probe-eval hot path.  The logits, gradient, and
+    /// bias-gradient buffers are allocated once and reused by all
+    /// `epochs` iterations: the epoch loop performs zero heap
+    /// allocations and, since the pool, zero thread spawns (previously
+    /// every parallel epoch matmul paid a spawn/join round trip).
     pub fn fit(x: &Tensor, y: &[usize], classes: usize, epochs: usize, lr: f32) -> Probe {
         let (n, d) = (x.shape[0], x.shape[1]);
         assert_eq!(n, y.len());

@@ -80,7 +80,9 @@ pub fn measure(
 /// a dequantized f32 copy), and measure the damage on the (m × n) outputs
 /// against the exact f32 GEMM.  This is the error that actually reaches
 /// downstream activations, as opposed to the element-wise view of
-/// [`measure`].
+/// [`measure`].  One-shot by design: the throwaway `qgemm` workspace
+/// carries no panel cache, so the measurement keeps the strict
+/// packed-plus-one-panel memory footprint.
 pub fn gemm_error(
     a: &[f32],
     b: &[f32],

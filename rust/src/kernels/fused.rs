@@ -1,6 +1,8 @@
 //! Single-pass fused row kernels: group absmax → scale → project/encode →
 //! (FP4) nibble-pack, one sweep per group, bit-identical to the scalar
 //! reference (`formats::fake_quant_rows`, `quant::quantize_scalar`).
+//! These are the serial group sweeps that [`super::parallel`] fans out
+//! over the persistent [`super::pool`] workers for large tensors.
 //!
 //! The per-element `x / s` is replaced by `x * (1/s)` only when `s` is a
 //! normal power of two: then the reciprocal is exact and both operations

@@ -6,8 +6,9 @@
 //! element, so accumulation order — and therefore the f32 result — is
 //! identical to the naive `for i { for k { for j } }` loop it replaces,
 //! while the k/j tiling keeps the B panel resident in L1/L2.  Above
-//! [`PAR_MIN_FLOPS`] multiply-adds the row dimension is split across
-//! threads (rows are independent, so this too is bit-exact).
+//! [`PAR_MIN_FLOPS`] multiply-adds the row dimension is split across the
+//! persistent [`super::pool`] workers (rows are independent, so this too
+//! is bit-exact, and no threads are spawned per call).
 //!
 //! [`matmul_bias_into`] folds a row-broadcast bias add into the kernel
 //! epilogue: the bias is added once per output element after its
@@ -67,7 +68,7 @@ fn matmul_impl(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f3
         return;
     }
     let rows_per = m.div_ceil(nt);
-    std::thread::scope(|sc| {
+    super::pool::scope(|sc| {
         for (ar, or) in a.chunks(rows_per * k).zip(out.chunks_mut(rows_per * n)) {
             sc.spawn(move || matmul_rows(ar, b, k, n, or, bias));
         }

@@ -1,4 +1,17 @@
-//! Host-side compute kernels — three families, one contract.
+//! Host-side compute kernels — three families on one shared runtime, one
+//! contract.
+//!
+//! # The runtime: persistent worker pool ([`pool`])
+//!
+//! All thread-parallel kernels route through `kernels::pool`, a
+//! lazily-initialized pool of long-lived workers with a scoped spawn API
+//! (`pool::scope`) shaped like `std::thread::scope`.  No kernel ever
+//! spawns or joins an OS thread per call — the dominant fixed cost of the
+//! PR-1/PR-2 parallel paths.  Thread count comes from
+//! `pool::configured_threads()` (`PALLAS_THREADS` override, else hardware
+//! parallelism capped at [`PAR_MAX_THREADS`]).  The pool only schedules;
+//! work splitting stays in the kernels, on group/row boundaries, so
+//! results are bit-identical at every thread count.
 //!
 //! # The three kernel families
 //!
@@ -17,57 +30,66 @@
 //! row kernels: group absmax, scale, project/encode, and (FP4)
 //! nibble-pack in one sweep, with the per-element scale division hoisted
 //! to an exact reciprocal multiply when the scale is a power of two.
-//! [`parallel`] adds a `std::thread::scope` row sweep that engages above
-//! [`parallel::PAR_MIN_ELEMS`] elements.  Use these whenever a whole
-//! tensor is quantized or fake-quantized: checkpoint compression,
-//! analysis, probe features.
+//! [`parallel`] fans the sweep out over pool workers above
+//! [`parallel::PAR_MIN_ELEMS`] elements, splitting on group boundaries.
+//! Use these whenever a whole tensor is quantized or fake-quantized:
+//! checkpoint compression, analysis, probe features.
 //!
 //! **3. GEMM engines** ([`matmul`], [`qgemm`]) — the contraction hot
 //! paths.  [`matmul`] is the cache-blocked, row-parallel f32 GEMM with
 //! zero-allocation `matmul_into` / `matmul_bias_into` variants for loops
 //! that reuse output buffers (the probe trainer runs 200 epochs on two
-//! preallocated buffers).  [`qgemm`] consumes a **packed**
-//! `QuantizedTensor` B operand directly — FP4 nibbles or FP8 bytes plus
-//! scales — decoding panels through the family-1 LUTs inside the tile
-//! loop, so the full f32 B matrix never exists.  Use `matmul` when both
-//! operands are f32; use `qgemm` whenever B is already quantized
-//! (checkpoint-restored weights, compressed operands, GEMM-level error
-//! analysis) instead of `dequantize` + `matmul`.
+//! preallocated buffers and, since the pool, zero thread spawns).
+//! [`qgemm`] consumes a **packed** `QuantizedTensor` B operand directly —
+//! FP4 nibbles or FP8 bytes plus scales — decoding panels through the
+//! family-1 LUTs inside the tile loop, so the full f32 B matrix never
+//! exists.  Its inner loop is a BLIS-style register-blocked 1×4
+//! microkernel (k innermost, four accumulators live in registers), the
+//! loop shape the upcoming SIMD pass will vectorize.  A
+//! [`qgemm::PanelCache`] can be attached to a [`qgemm::Workspace`]
+//! (`Workspace::with_panel_cache`) to memoize decoded B panels across
+//! calls keyed by (tensor id, panel coords) — repeated GEMMs against the
+//! same packed weights (checkpoint-restored inference, probe sweeps over
+//! a fixed feature matrix) decode each panel exactly once.  Use `matmul`
+//! when both operands are f32; use `qgemm` whenever B is already
+//! quantized instead of `dequantize` + `matmul`.
 //!
 //! # Bit-exactness contract
 //!
 //! The python mirror (`python/compile/formats.py`) and this crate agree
 //! element-wise on fake-quant outputs (checked by tests/cross_layer.rs
 //! against AOT artifacts), and both GEMMs preserve naive ascending-k
-//! accumulation per output element.  Everything in this module therefore
-//! has to reproduce the *reference* numerics exactly — any kernel that is
-//! merely "close" would silently break the cross-layer artifact checks.
-//! When adding a kernel, property-test it against the scalar path first,
-//! speed it up second.
+//! accumulation per output element — the microkernel interleaves
+//! *independent* output elements only, never one element's partial sums.
+//! Everything in this module therefore has to reproduce the *reference*
+//! numerics exactly — any kernel that is merely "close" would silently
+//! break the cross-layer artifact checks.  When adding a kernel,
+//! property-test it against the scalar path first, speed it up second
+//! (`tests/pool_determinism.rs` shows the shape of the thread-count
+//! sweep such a test should include).
 
 pub mod fused;
 pub mod lut;
 pub mod matmul;
 pub mod parallel;
+pub mod pool;
 pub mod qgemm;
 
-/// Hard cap on worker threads for every parallel kernel here (they are
-/// memory-bound; more threads than memory channels just adds contention).
+/// Soft cap on worker threads when the count is auto-detected (the
+/// kernels are memory-bound; more threads than memory channels just adds
+/// contention).  An explicit `PALLAS_THREADS` override may exceed it.
 pub const PAR_MAX_THREADS: usize = 8;
 
-/// Worker-thread count for `units` independent work items: hardware
-/// parallelism (queried once, cached — it's a syscall), clamped by the
-/// unit count and [`PAR_MAX_THREADS`].  The single threading policy for
-/// all kernels in this module.
+/// Worker-thread count for `units` independent work items: the pool's
+/// configured thread count (`PALLAS_THREADS` override, else hardware
+/// parallelism capped at [`PAR_MAX_THREADS`]), clamped by the unit
+/// count.  The single threading policy for all kernels in this module.
 pub(crate) fn worker_threads(units: usize) -> usize {
-    static HW: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
-    let hw =
-        *HW.get_or_init(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1));
-    hw.min(units).min(PAR_MAX_THREADS)
+    pool::configured_threads().min(units)
 }
 
 pub use fused::{fake_quant_rows_fast, quantize_pack_rows};
 pub use lut::{decode_fast, decode_lut, encode_fast};
 pub use matmul::{matmul_bias_into, matmul_f32, matmul_into};
 pub use parallel::{fake_quant_rows_auto, quantize_pack_rows_auto};
-pub use qgemm::{qgemm, qgemm_into, Workspace};
+pub use qgemm::{qgemm, qgemm_into, PanelCache, PanelCacheStats, Workspace};

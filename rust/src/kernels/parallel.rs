@@ -1,16 +1,17 @@
-//! `std::thread::scope` row-parallel sweep over group-contiguous kernels.
+//! Pool-parallel row sweep over group-contiguous kernels (on the
+//! persistent [`super::pool`] workers — no per-call thread spawn/join).
 //!
 //! Splitting is always on group boundaries, so every group's absmax/scale
-//! is computed by exactly one thread and results are bit-identical to the
+//! is computed by exactly one task and results are bit-identical to the
 //! serial kernels regardless of thread count.  Small tensors (fewer than
 //! [`PAR_MIN_ELEMS`] elements) or single-group sweeps (PerTensor) stay on
-//! the serial path — thread spawn/join costs more than the work below
+//! the serial path — even pool dispatch costs more than the work below
 //! that size.
 
 use crate::formats::{FpFormat, Granularity};
 
 use super::fused::{fake_quant_groups, group_len, quantize_pack_groups};
-use super::worker_threads;
+use super::{pool, worker_threads};
 
 /// Minimum element count before the parallel sweep engages.
 pub const PAR_MIN_ELEMS: usize = 1 << 16;
@@ -35,7 +36,7 @@ pub fn fake_quant_rows_auto(
         return out;
     }
     let chunk = n_groups.div_ceil(nt) * glen;
-    std::thread::scope(|sc| {
+    pool::scope(|sc| {
         for (xs, os) in x.chunks(chunk).zip(out.chunks_mut(chunk)) {
             sc.spawn(move || fake_quant_groups(xs, glen, fmt, os));
         }
@@ -67,12 +68,13 @@ pub fn quantize_pack_rows_auto(
         chunk_groups += 1;
     }
     let chunk = chunk_groups * glen;
-    let parts: Vec<(Vec<u8>, Vec<f32>)> = std::thread::scope(|sc| {
-        let handles: Vec<_> = x
-            .chunks(chunk)
-            .map(|xs| sc.spawn(move || quantize_pack_groups(xs, glen, fmt)))
-            .collect();
-        handles.into_iter().map(|h| h.join().expect("kernel worker panicked")).collect()
+    // one result slot per chunk; each pool task fills exactly one, so the
+    // concatenation below is in deterministic chunk order
+    let mut parts: Vec<(Vec<u8>, Vec<f32>)> = vec![Default::default(); x.len().div_ceil(chunk)];
+    pool::scope(|sc| {
+        for (part, xs) in parts.iter_mut().zip(x.chunks(chunk)) {
+            sc.spawn(move || *part = quantize_pack_groups(xs, glen, fmt));
+        }
     });
     let mut packed = Vec::with_capacity(if fmt.bits() <= 4 { n.div_ceil(2) } else { n });
     let mut scales = Vec::with_capacity(n_groups);

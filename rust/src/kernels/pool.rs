@@ -1,0 +1,304 @@
+//! Persistent worker-thread runtime for the kernel layer.
+//!
+//! Every parallel kernel used to pay a `std::thread::scope` spawn/join
+//! round trip per call — tens of microseconds of syscalls that dwarf the
+//! work for mid-sized sweeps and GEMMs, and recur on *every* quantize /
+//! matmul of a training step.  This module replaces that with a
+//! lazily-initialized pool of long-lived workers and a scoped spawn API
+//! ([`scope`]) shaped like `std::thread::scope`, so the kernel families
+//! ([`super::parallel`] sweeps, [`super::matmul`] row blocks, both
+//! [`super::qgemm`] split strategies) route through it with the same
+//! borrow structure they had before.
+//!
+//! # Sizing and `PALLAS_THREADS`
+//!
+//! The worker count comes from [`configured_threads`]: the
+//! `PALLAS_THREADS` environment variable when set (clamped to
+//! [1, [`MAX_THREADS`]], and allowed to exceed the memory-bandwidth cap
+//! [`super::PAR_MAX_THREADS`] — an explicit override wins), otherwise
+//! `std::thread::available_parallelism()` capped at `PAR_MAX_THREADS`.
+//! The pool spawns `configured_threads() - 1` workers on first use (the
+//! submitting thread is the remaining lane — it *helps* run queued tasks
+//! instead of blocking, which also makes nested scopes deadlock-free).
+//! `PALLAS_THREADS` is re-read on every [`configured_threads`] call, so
+//! tests can vary the task-splitting policy per call; the worker count
+//! itself is fixed at first-use.  Running with fewer live workers than
+//! the policy asks for only changes *where* tasks execute, never how the
+//! work is chunked — results stay bit-identical (see below).
+//!
+//! # Determinism contract
+//!
+//! The pool schedules; it never splits.  Chunk boundaries are computed by
+//! the callers on group/row boundaries exactly as the serial kernels
+//! would, each task writes a disjoint output region, and no kernel task
+//! reads another task's output.  Therefore results are bit-identical to
+//! the serial path at *any* thread count, worker count, or scheduling
+//! order — the property `tests/pool_determinism.rs` asserts for thread
+//! counts 1/2/3/8.
+//!
+//! # Panics
+//!
+//! A panicking task is caught on the worker, the scope still joins every
+//! other task, and [`scope`] re-panics on the submitting thread — same
+//! observable behavior as the `std::thread::scope` code it replaces.
+
+use std::collections::VecDeque;
+use std::marker::PhantomData;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// Hard ceiling on the configurable thread count (an explicit
+/// `PALLAS_THREADS` may exceed [`super::PAR_MAX_THREADS`] but not this).
+pub const MAX_THREADS: usize = 64;
+
+/// A queued unit of work: the erased closure plus the scope it belongs to.
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+struct ScopeState {
+    /// Tasks spawned but not yet finished (queued or running).
+    pending: Mutex<usize>,
+    done: Condvar,
+    panicked: AtomicBool,
+}
+
+struct Shared {
+    queue: Mutex<VecDeque<(Arc<ScopeState>, Task)>>,
+    work: Condvar,
+}
+
+/// The thread-count *policy*: `PALLAS_THREADS` when set (explicit
+/// override, clamped to [1, [`MAX_THREADS`]]), else hardware parallelism
+/// capped at [`super::PAR_MAX_THREADS`].  Re-read per call so the env var
+/// can steer task splitting at runtime (the determinism tests rely on
+/// this); the pool's worker count is sampled from it once, at first use.
+pub fn configured_threads() -> usize {
+    if let Ok(v) = std::env::var("PALLAS_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            return n.clamp(1, MAX_THREADS);
+        }
+    }
+    static HW: OnceLock<usize> = OnceLock::new();
+    let hw =
+        *HW.get_or_init(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1));
+    hw.min(super::PAR_MAX_THREADS)
+}
+
+/// The process-wide pool, spawned on first use with
+/// `configured_threads() - 1` workers (possibly zero: then every task
+/// runs on the submitting thread via the help loop — still correct).
+fn shared() -> &'static Shared {
+    static POOL: OnceLock<&'static Shared> = OnceLock::new();
+    *POOL.get_or_init(|| {
+        let sh: &'static Shared =
+            Box::leak(Box::new(Shared { queue: Mutex::new(VecDeque::new()), work: Condvar::new() }));
+        for i in 0..configured_threads().saturating_sub(1) {
+            std::thread::Builder::new()
+                .name(format!("pallas-pool-{i}"))
+                .spawn(move || worker_loop(sh))
+                .expect("spawn pool worker");
+        }
+        sh
+    })
+}
+
+fn worker_loop(sh: &'static Shared) {
+    let mut q = sh.queue.lock().expect("pool queue poisoned");
+    loop {
+        match q.pop_front() {
+            Some((state, task)) => {
+                drop(q);
+                run_task(&state, task);
+                q = sh.queue.lock().expect("pool queue poisoned");
+            }
+            None => q = sh.work.wait(q).expect("pool queue poisoned"),
+        }
+    }
+}
+
+/// Execute one task and retire it from its scope, catching panics so a
+/// bad task can neither kill a long-lived worker nor wedge its scope.
+fn run_task(state: &ScopeState, task: Task) {
+    if catch_unwind(AssertUnwindSafe(task)).is_err() {
+        state.panicked.store(true, Ordering::SeqCst);
+    }
+    let mut pending = state.pending.lock().expect("scope state poisoned");
+    *pending -= 1;
+    if *pending == 0 {
+        state.done.notify_all();
+    }
+}
+
+/// Handle for spawning borrowed tasks onto the pool; see [`scope`].
+///
+/// Invariant in `'env` (like `crossbeam::scope` / `std::thread::Scope`)
+/// so the borrow region can't be shrunk out from under the spawned tasks.
+pub struct Scope<'env> {
+    state: Arc<ScopeState>,
+    sh: &'static Shared,
+    _env: PhantomData<&'env mut &'env ()>,
+}
+
+impl<'env> Scope<'env> {
+    /// Queue `f` for execution by the pool.  The closure may borrow from
+    /// the enclosing [`scope`] call (`'env`); it is guaranteed to have
+    /// finished before `scope` returns.
+    pub fn spawn<F: FnOnce() + Send + 'env>(&self, f: F) {
+        *self.state.pending.lock().expect("scope state poisoned") += 1;
+        let task: Box<dyn FnOnce() + Send + 'env> = Box::new(f);
+        // SAFETY: `scope` joins every spawned task (pending == 0) before
+        // returning — including when the closure or a task panics — so
+        // every `'env` borrow captured by `task` outlives its execution.
+        let task: Task = unsafe { std::mem::transmute(task) };
+        self.sh.queue.lock().expect("pool queue poisoned").push_back((self.state.clone(), task));
+        self.sh.work.notify_one();
+    }
+}
+
+/// Scoped parallel region on the persistent pool — a drop-in for the
+/// `std::thread::scope` pattern the kernels used, minus the per-call
+/// thread spawn/join.  Tasks spawned via [`Scope::spawn`] may borrow
+/// local data; all of them have completed when `scope` returns.
+///
+/// The calling thread participates: after `f` returns it runs queued
+/// tasks itself until its own scope drains (helping other concurrent
+/// scopes' tasks if it pops them — harmless, and it makes nested or
+/// worker-initiated scopes deadlock-free even with zero pool workers).
+pub fn scope<'env, F, R>(f: F) -> R
+where
+    F: FnOnce(&Scope<'env>) -> R,
+{
+    let sh = shared();
+    let sc = Scope {
+        state: Arc::new(ScopeState {
+            pending: Mutex::new(0),
+            done: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        }),
+        sh,
+        _env: PhantomData,
+    };
+    // Run `f` under catch_unwind so a panic between spawns still joins
+    // the already-queued tasks before unwinding (the soundness condition
+    // for the lifetime erasure in `spawn`).
+    let out = catch_unwind(AssertUnwindSafe(|| f(&sc)));
+    // Help: drain tasks until this scope's are all retired.
+    loop {
+        if *sc.state.pending.lock().expect("scope state poisoned") == 0 {
+            break;
+        }
+        let popped = sh.queue.lock().expect("pool queue poisoned").pop_front();
+        match popped {
+            Some((state, task)) => run_task(&state, task),
+            None => {
+                // queue empty: our remaining tasks are running on workers
+                let mut pending = sc.state.pending.lock().expect("scope state poisoned");
+                while *pending != 0 {
+                    pending = sc.state.done.wait(pending).expect("scope state poisoned");
+                }
+                break;
+            }
+        }
+    }
+    if sc.state.panicked.load(Ordering::SeqCst) {
+        panic!("kernel pool task panicked");
+    }
+    match out {
+        Ok(r) => r,
+        Err(p) => resume_unwind(p),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn scope_runs_every_task_with_borrows() {
+        let mut out = vec![0usize; 64];
+        scope(|sc| {
+            for (i, slot) in out.iter_mut().enumerate() {
+                sc.spawn(move || *slot = i * i);
+            }
+        });
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i * i);
+        }
+    }
+
+    #[test]
+    fn scopes_nest_and_run_from_tasks() {
+        // a task that itself opens a scope must not deadlock (the help
+        // loop guarantees progress even if every worker is busy)
+        let hits = AtomicUsize::new(0);
+        scope(|outer| {
+            for _ in 0..4 {
+                outer.spawn(|| {
+                    scope(|inner| {
+                        for _ in 0..4 {
+                            inner.spawn(|| {
+                                hits.fetch_add(1, Ordering::Relaxed);
+                            });
+                        }
+                    });
+                });
+            }
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 16);
+    }
+
+    #[test]
+    fn empty_scope_returns_value() {
+        assert_eq!(scope(|_| 7), 7);
+    }
+
+    #[test]
+    fn concurrent_scopes_do_not_cross_results() {
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                std::thread::spawn(move || {
+                    let mut out = vec![0usize; 32];
+                    scope(|sc| {
+                        for (i, slot) in out.iter_mut().enumerate() {
+                            sc.spawn(move || *slot = t * 1000 + i);
+                        }
+                    });
+                    out.iter().enumerate().all(|(i, &v)| v == t * 1000 + i)
+                })
+            })
+            .collect();
+        for h in handles {
+            assert!(h.join().unwrap());
+        }
+    }
+
+    #[test]
+    fn task_panic_propagates_after_join() {
+        let done = AtomicUsize::new(0);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            scope(|sc| {
+                sc.spawn(|| panic!("boom"));
+                for _ in 0..8 {
+                    sc.spawn(|| {
+                        done.fetch_add(1, Ordering::SeqCst);
+                    });
+                }
+            });
+        }));
+        assert!(r.is_err());
+        // every sibling task still ran to completion before the re-panic
+        assert_eq!(done.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn configured_threads_is_sane() {
+        // env-override behavior (incl. clamping) is asserted in
+        // tests/pool_determinism.rs, which owns PALLAS_THREADS in its own
+        // process — unit tests share this binary with the kernel suites,
+        // whose panel-cache stat assertions need a stable thread policy,
+        // so this test must not touch the env var.
+        let auto = configured_threads();
+        assert!((1..=MAX_THREADS).contains(&auto));
+    }
+}

@@ -9,30 +9,62 @@
 //! panel instead of the full `k × n × 4` bytes a dequantize-then-matmul
 //! round trip allocates.
 //!
-//! Bit-exactness: every decoded panel element is `decode_lut[code] *
-//! scale` — the exact expression `quant::dequantize` uses — and for every
-//! output element the contraction index is consumed in ascending order
-//! with the same `a == 0.0` skip as [`super::matmul`].  Both therefore
-//! equal the naive `for i { for k { for j } }` loop, so
-//! `qgemm(a, q) == matmul_f32(a, dequantize(q))` bit-for-bit at every
-//! shape, format, and granularity (property-tested, see below and
-//! `tests/kernels_bitexact.rs`).  Tiling and the column-stripe thread
-//! split never reorder a single element's accumulation, only interleave
-//! independent elements.
+//! # Microkernel
 //!
-//! Parallelism prefers splitting the *output columns* (not rows like the
-//! f32 path): each worker decodes only its own column stripe of B, so the
-//! packed operand is decoded exactly once in total regardless of thread
-//! count.  When the output is too narrow to stripe, large GEMMs fall back
-//! to the f32 path's row split over A (workers re-decode the then-small
-//! panels) so narrow-n shapes never lose the threading the
-//! dequantize-then-matmul path had.
+//! The multiply itself is a BLIS-style register-blocked 1×4 microkernel
+//! ([`mac_panel`]): four output columns accumulate in registers while the
+//! contraction index k runs innermost over the decoded panel, plus a
+//! 1-wide edge loop for the ragged tail.  Per output element the k terms
+//! are still consumed in strictly ascending order with the same
+//! `a == 0.0` skip as [`super::matmul`] — the tile only interleaves
+//! *independent* elements — so the result is bit-identical to the scalar
+//! j-by-j loop it replaces.  This k-innermost/4-wide shape is exactly
+//! what the planned SIMD pass will turn into fma lanes.
+//!
+//! # Panel cache
+//!
+//! Pretraining and packed-checkpoint inference multiply against the same
+//! packed weights call after call; decoding the same panels every time is
+//! pure waste.  A [`PanelCache`] attached to a [`Workspace`]
+//! ([`Workspace::with_panel_cache`]) memoizes decoded panels keyed by
+//! (tensor id, k0, j0, panel width): the first GEMM against a tensor
+//! decodes each panel once, every later GEMM reuses the cached f32 bits.
+//! Decoding is deterministic, so cache hits are bit-identical to fresh
+//! decodes; the capacity cap only controls *whether* a panel is retained,
+//! never its contents.  One-shot callers (analysis, tests) simply leave
+//! the cache off and keep the strict small-footprint behavior.
+//!
+//! # Bit-exactness
+//!
+//! Every decoded panel element is `decode_lut[code] * scale` — the exact
+//! expression `quant::dequantize` uses — and for every output element the
+//! contraction index is consumed in ascending order with the `a == 0.0`
+//! skip preserved.  Both therefore equal the naive
+//! `for i { for k { for j } }` loop, so
+//! `qgemm(a, q) == matmul_f32(a, dequantize(q))` bit-for-bit at every
+//! shape, format, granularity, thread count, and cache state
+//! (property-tested here, in `tests/kernels_bitexact.rs`, and across
+//! thread counts in `tests/pool_determinism.rs`).
+//!
+//! # Parallelism
+//!
+//! Both splits run on the persistent [`super::pool`] workers — no thread
+//! spawn/join per call.  The preferred split is over *output columns*
+//! (not rows like the f32 path): each worker decodes only its own column
+//! stripe of B, so the packed operand is decoded exactly once in total
+//! regardless of thread count.  When the output is too narrow to stripe,
+//! large GEMMs fall back to the f32 path's row split over A (workers
+//! re-decode the then-small panels — or share them through the panel
+//! cache when one is attached).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 
 use crate::quant::QuantizedTensor;
 
 use super::lut::decode_lut;
 use super::matmul::PAR_MIN_FLOPS;
-use super::worker_threads;
+use super::{pool, worker_threads};
 
 /// k-tile: rows of B decoded per panel.
 pub const QKB: usize = 256;
@@ -44,8 +76,13 @@ pub const QJB: usize = 512;
 /// below this the stripes are too narrow to amortize panel decode.
 const MIN_STRIPE: usize = 64;
 
+/// Default [`PanelCache`] capacity: enough for a fully decoded
+/// 4096 × 4096 f32 operand, far above any host-side weight here.
+pub const DEFAULT_PANEL_CACHE_BYTES: usize = 64 << 20;
+
 /// Borrowed view of a packed B operand, resolved once per GEMM call:
-/// codes, scales, grouping geometry, and the static decode table.
+/// codes, scales, grouping geometry, identity, and the static decode
+/// table.
 struct PackedB<'a> {
     packed: &'a [u8],
     scales: &'a [f32],
@@ -55,6 +92,8 @@ struct PackedB<'a> {
     n: usize,
     table: &'static [f32],
     fp4: bool,
+    /// `QuantizedTensor::id` — the panel-cache key component.
+    id: u64,
 }
 
 impl<'a> PackedB<'a> {
@@ -69,7 +108,15 @@ impl<'a> PackedB<'a> {
             q.scales.len() >= (k * n).max(1).div_ceil(glen),
             "scale count vs geometry"
         );
-        PackedB { packed: &q.packed, scales: &q.scales, glen, n, table: decode_lut(fmt), fp4 }
+        PackedB {
+            packed: &q.packed,
+            scales: &q.scales,
+            glen,
+            n,
+            table: decode_lut(fmt),
+            fp4,
+            id: q.id(),
+        }
     }
 
     /// Decode the (k0..k1) × (j0..j1) panel into `panel` (row-major,
@@ -102,38 +149,239 @@ impl<'a> PackedB<'a> {
     }
 }
 
-/// Per-worker scratch for the column-striped parallel path.
+/// Snapshot of a [`PanelCache`]'s counters (cumulative since creation).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PanelCacheStats {
+    /// Panel lookups served from the cache.
+    pub hits: u64,
+    /// Panel lookups that had to decode.
+    pub misses: u64,
+    /// Decoded panels currently retained.
+    pub panels: usize,
+    /// Bytes currently retained (f32 payload only).
+    pub bytes: usize,
+}
+
+/// (tensor id, k0, panel height, j0, panel width, row stride n).  Width
+/// is part of the key because the j extent of a panel at a given j0
+/// depends on the stripe layout the call used — two thread counts may
+/// tile the same tensor differently.  Height and n are defense in depth:
+/// `PackedB::new` already pins (k, n) to the tensor's own `rows_cols`,
+/// but keying the full decode geometry means even a contract violation
+/// (mutating a tensor's pub `shape` after construction) can never serve
+/// a panel decoded at the wrong stride.
+type PanelKey = (u64, u32, u32, u32, u32, u32);
+
+struct PanelCacheInner {
+    map: HashMap<PanelKey, Arc<[f32]>>,
+    bytes: usize,
+    cap_bytes: usize,
+    hits: u64,
+    misses: u64,
+}
+
+/// Cross-call memo of decoded B panels, shared by all worker lanes of a
+/// [`Workspace`] (interior Mutex — lock traffic is one get/insert per
+/// panel, negligible next to the decode+MAC it guards).
+///
+/// Capacity is a soft cap: once retained bytes would exceed `cap_bytes`,
+/// further panels are decoded into the lane's reusable scratch exactly
+/// like the uncached path (no per-panel allocation), just not retained.
+/// Contents are bit-exact by construction — panels are the deterministic
+/// output of [`PackedB::decode_panel`], so hit, miss, and cache-full
+/// paths produce identical GEMM results.
+pub struct PanelCache {
+    inner: Mutex<PanelCacheInner>,
+}
+
+impl PanelCache {
+    pub fn new(cap_bytes: usize) -> PanelCache {
+        PanelCache {
+            inner: Mutex::new(PanelCacheInner {
+                map: HashMap::new(),
+                bytes: 0,
+                cap_bytes,
+                hits: 0,
+                misses: 0,
+            }),
+        }
+    }
+
+    pub fn stats(&self) -> PanelCacheStats {
+        let inner = self.inner.lock().expect("panel cache poisoned");
+        PanelCacheStats {
+            hits: inner.hits,
+            misses: inner.misses,
+            panels: inner.map.len(),
+            bytes: inner.bytes,
+        }
+    }
+
+    /// Drop every retained panel (counters survive — they are cumulative).
+    pub fn clear(&self) {
+        let mut inner = self.inner.lock().expect("panel cache poisoned");
+        inner.map.clear();
+        inner.bytes = 0;
+    }
+
+    /// Retained panel for `key`, counting a hit or a miss (a miss means
+    /// the caller must decode, whether or not the result will be kept).
+    fn lookup(&self, key: PanelKey) -> Option<Arc<[f32]>> {
+        let mut inner = self.inner.lock().expect("panel cache poisoned");
+        match inner.map.get(&key) {
+            Some(p) => {
+                let p = p.clone();
+                inner.hits += 1;
+                Some(p)
+            }
+            None => {
+                inner.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Whether a panel of `bytes` would fit under the cap right now —
+    /// callers decode into a fresh retained allocation only when it
+    /// would, and into reusable scratch otherwise (advisory: `insert`
+    /// re-checks under the same lock that mutates).
+    fn would_retain(&self, bytes: usize) -> bool {
+        let inner = self.inner.lock().expect("panel cache poisoned");
+        inner.bytes + bytes <= inner.cap_bytes
+    }
+
+    /// Retain a freshly decoded panel.  Concurrent misses on the same
+    /// key may both decode; the decode is deterministic so whichever
+    /// copy lands is bit-identical, and the loser is simply dropped.
+    fn insert(&self, key: PanelKey, panel: &Arc<[f32]>) {
+        let mut inner = self.inner.lock().expect("panel cache poisoned");
+        if !inner.map.contains_key(&key) && inner.bytes + panel.len() * 4 <= inner.cap_bytes {
+            inner.bytes += panel.len() * 4;
+            inner.map.insert(key, panel.clone());
+        }
+    }
+}
+
+/// Per-worker scratch for the parallel paths.
 #[derive(Default)]
 struct Lane {
     panel: Vec<f32>,
     stripe: Vec<f32>,
 }
 
-/// Reusable qgemm scratch: the serial panel buffer plus one lane (panel +
-/// output stripe) per worker thread.  Buffers grow on first use and are
-/// reused verbatim afterwards — repeated `qgemm_into` calls with the same
-/// workspace perform zero heap allocations once warm.  Reuse never changes
-/// results: every buffer element is overwritten (or zeroed) before it is
-/// read.
+/// Reusable qgemm scratch: the serial panel buffer, one lane (panel +
+/// output stripe) per worker, and an optional cross-call [`PanelCache`].
+/// Buffers grow on first use and are reused verbatim afterwards —
+/// repeated `qgemm_into` calls with the same workspace perform zero heap
+/// allocations once warm (a cache miss allocates only the panel it will
+/// retain; hits and cap-reached misses allocate nothing — the latter
+/// decode into the reusable scratch).  Reuse never changes results:
+/// every scratch element is
+/// overwritten (or zeroed) before it is read, and cached panels are
+/// bit-identical to fresh decodes.
 #[derive(Default)]
 pub struct Workspace {
     panel: Vec<f32>,
     lanes: Vec<Lane>,
+    cache: Option<PanelCache>,
 }
 
 impl Workspace {
     pub fn new() -> Workspace {
         Workspace::default()
     }
+
+    /// Workspace with a panel cache attached — for callers that GEMM
+    /// against the same packed tensors repeatedly (packed-checkpoint
+    /// inference, probe sweeps).  `cap_bytes` bounds the retained decoded
+    /// panels; [`DEFAULT_PANEL_CACHE_BYTES`] is a safe default.
+    pub fn with_panel_cache(cap_bytes: usize) -> Workspace {
+        Workspace { cache: Some(PanelCache::new(cap_bytes)), ..Workspace::default() }
+    }
+
+    /// Attach (or replace) the panel cache on an existing workspace.
+    pub fn enable_panel_cache(&mut self, cap_bytes: usize) {
+        self.cache = Some(PanelCache::new(cap_bytes));
+    }
+
+    /// Counter snapshot of the attached cache, if any.
+    pub fn panel_cache_stats(&self) -> Option<PanelCacheStats> {
+        self.cache.as_ref().map(|c| c.stats())
+    }
 }
 
-/// Sweep columns `[j_lo, j_hi)`: decode one panel per (j, k) tile and
-/// accumulate all `m` rows of A against it.  `dst` holds columns
-/// `[j_lo, j_hi)` at row stride `dst_stride` and must be zeroed.
+/// The register-blocked 1×4 microkernel: accumulate one A row segment
+/// (`arow`, the k0..k1 slice) against a decoded panel (`(arow.len()) × jw`
+/// row-major) into `drow` (`jw` output columns).
 ///
-/// Loop order is j-tile → k-tile → A-row → k → j: each panel is decoded
-/// exactly once, and each output element still accumulates its k terms in
-/// ascending order (its single j-tile iterates k0 then kk ascending).
+/// Four output columns live in registers while k runs innermost; the
+/// ragged tail (`jw % 4`) falls to a 1-wide loop.  Each output element
+/// accumulates its k terms in ascending order with the `a == 0.0` skip —
+/// the exact per-element operation sequence of the scalar loop, so the
+/// result is bit-identical.
+#[inline]
+fn mac_panel(arow: &[f32], panel: &[f32], jw: usize, drow: &mut [f32]) {
+    debug_assert_eq!(panel.len(), arow.len() * jw);
+    debug_assert_eq!(drow.len(), jw);
+    let mut jj = 0;
+    while jj + 4 <= jw {
+        let mut c = [drow[jj], drow[jj + 1], drow[jj + 2], drow[jj + 3]];
+        for (&av, prow) in arow.iter().zip(panel.chunks_exact(jw)) {
+            if av != 0.0 {
+                let p = &prow[jj..jj + 4];
+                c[0] += av * p[0];
+                c[1] += av * p[1];
+                c[2] += av * p[2];
+                c[3] += av * p[3];
+            }
+        }
+        drow[jj] = c[0];
+        drow[jj + 1] = c[1];
+        drow[jj + 2] = c[2];
+        drow[jj + 3] = c[3];
+        jj += 4;
+    }
+    for j in jj..jw {
+        let mut c = drow[j];
+        for (&av, prow) in arow.iter().zip(panel.chunks_exact(jw)) {
+            if av != 0.0 {
+                c += av * prow[j];
+            }
+        }
+        drow[j] = c;
+    }
+}
+
+/// Decode one panel into the reusable scratch buffer (grown on demand,
+/// capped by geometry at QKB × stripe width) — the zero-allocation
+/// steady state of the uncached and cache-full paths.
+fn scratch_decode<'p>(
+    panel: &'p mut Vec<f32>,
+    b: &PackedB,
+    k0: usize,
+    k1: usize,
+    j0: usize,
+    j1: usize,
+) -> &'p mut [f32] {
+    let len = (k1 - k0) * (j1 - j0);
+    if panel.len() < len {
+        panel.resize(len, 0.0);
+    }
+    let pt = &mut panel[..len];
+    b.decode_panel(k0, k1, j0, j1, pt);
+    pt
+}
+
+/// Sweep columns `[j_lo, j_hi)`: resolve one panel per (j, k) tile —
+/// from `cache` when attached, else decoded into `panel` scratch — and
+/// accumulate all `m` rows of A against it through [`mac_panel`].  `dst`
+/// holds columns `[j_lo, j_hi)` at row stride `dst_stride` and must be
+/// zeroed.
+///
+/// Loop order is j-tile → k-tile → A-row → microkernel: each panel is
+/// resolved exactly once per call, and each output element still
+/// accumulates its k terms in ascending order (its single j-tile iterates
+/// k-tiles, then k within each, ascending).
 fn sweep_cols(
     a: &[f32],
     m: usize,
@@ -142,39 +390,57 @@ fn sweep_cols(
     j_lo: usize,
     j_hi: usize,
     panel: &mut Vec<f32>,
+    cache: Option<&PanelCache>,
     dst: &mut [f32],
     dst_stride: usize,
 ) {
-    let jw_max = QJB.min(j_hi.saturating_sub(j_lo));
-    if panel.len() < QKB * jw_max {
-        panel.resize(QKB * jw_max, 0.0);
-    }
     for j0 in (j_lo..j_hi).step_by(QJB) {
         let j1 = (j0 + QJB).min(j_hi);
         let jw = j1 - j0;
         for k0 in (0..k).step_by(QKB) {
             let k1 = (k0 + QKB).min(k);
-            let panel_t = &mut panel[..(k1 - k0) * jw];
-            b.decode_panel(k0, k1, j0, j1, panel_t);
+            let len = (k1 - k0) * jw;
+            let cached;
+            let panel_t: &[f32] = match cache {
+                None => scratch_decode(panel, b, k0, k1, j0, j1),
+                Some(c) => {
+                    let key: PanelKey = (
+                        b.id,
+                        k0 as u32,
+                        (k1 - k0) as u32,
+                        j0 as u32,
+                        jw as u32,
+                        b.n as u32,
+                    );
+                    if let Some(p) = c.lookup(key) {
+                        cached = p;
+                        &cached
+                    } else if c.would_retain(len * 4) {
+                        let mut v = vec![0.0f32; len];
+                        b.decode_panel(k0, k1, j0, j1, &mut v);
+                        let p: Arc<[f32]> = v.into();
+                        c.insert(key, &p);
+                        cached = p;
+                        &cached
+                    } else {
+                        // cap reached: same zero-allocation cost model as
+                        // the uncached path, just without retention
+                        scratch_decode(panel, b, k0, k1, j0, j1)
+                    }
+                }
+            };
             for i in 0..m {
                 let arow = &a[i * k + k0..i * k + k1];
                 let drow = &mut dst[i * dst_stride + (j0 - j_lo)..][..jw];
-                for (kk, &av) in arow.iter().enumerate() {
-                    if av == 0.0 {
-                        continue;
-                    }
-                    let brow = &panel_t[kk * jw..(kk + 1) * jw];
-                    for (o, &bv) in drow.iter_mut().zip(brow) {
-                        *o += av * bv;
-                    }
-                }
+                mac_panel(arow, panel_t, jw, drow);
             }
         }
     }
 }
 
 /// (m × k) f32 A @ packed (k × n) B into a caller-owned buffer, decoding B
-/// panel-by-panel through `ws` scratch.  Bit-identical to
+/// panel-by-panel through `ws` scratch (and its panel cache, when
+/// attached).  Bit-identical to
 /// `matmul_f32(a, &dequantize(q).data, m, k, n)`; the full f32 B matrix is
 /// never allocated.
 pub fn qgemm_into(
@@ -200,19 +466,21 @@ pub fn qgemm_into(
     let b = PackedB::new(q, k, n);
     let bref = &b;
     let flops = m * k * n;
+    let Workspace { panel, lanes, cache } = ws;
+    let cache = cache.as_ref();
     // Preferred split: output columns, so each worker decodes its stripe of
     // B exactly once.  Too-narrow outputs fall back to splitting A's rows
-    // like the f32 path (workers re-decode the — then small — panels), so
-    // large-m/narrow-n GEMMs still use threads.  Neither split changes any
-    // element's accumulation order.
+    // like the f32 path (workers re-decode the — then small — panels, or
+    // share them via the cache), so large-m/narrow-n GEMMs still use
+    // threads.  Neither split changes any element's accumulation order.
     let nt_cols = if flops < PAR_MIN_FLOPS { 1 } else { worker_threads(n / MIN_STRIPE) };
     if nt_cols >= 2 {
         let stripe = n.div_ceil(nt_cols);
-        if ws.lanes.len() < nt_cols {
-            ws.lanes.resize_with(nt_cols, Lane::default);
+        if lanes.len() < nt_cols {
+            lanes.resize_with(nt_cols, Lane::default);
         }
-        std::thread::scope(|sc| {
-            for (li, lane) in ws.lanes.iter_mut().take(nt_cols).enumerate() {
+        pool::scope(|sc| {
+            for (li, lane) in lanes.iter_mut().take(nt_cols).enumerate() {
                 let c0 = li * stripe;
                 if c0 >= n {
                     break;
@@ -225,12 +493,12 @@ pub fn qgemm_into(
                         sout.resize(m * w, 0.0);
                     }
                     sout[..m * w].fill(0.0);
-                    sweep_cols(a, m, k, bref, c0, c1, panel, &mut sout[..m * w], w);
+                    sweep_cols(a, m, k, bref, c0, c1, panel, cache, &mut sout[..m * w], w);
                 });
             }
         });
         // stitch the column stripes back into row-major out
-        for (li, lane) in ws.lanes.iter().take(nt_cols).enumerate() {
+        for (li, lane) in lanes.iter().take(nt_cols).enumerate() {
             let c0 = li * stripe;
             if c0 >= n {
                 break;
@@ -246,23 +514,23 @@ pub fn qgemm_into(
     let nt_rows = if flops < PAR_MIN_FLOPS { 1 } else { worker_threads(m) };
     out.fill(0.0);
     if nt_rows < 2 {
-        sweep_cols(a, m, k, &b, 0, n, &mut ws.panel, out, n);
+        sweep_cols(a, m, k, &b, 0, n, panel, cache, out, n);
         return;
     }
     let rows_per = m.div_ceil(nt_rows);
-    if ws.lanes.len() < nt_rows {
-        ws.lanes.resize_with(nt_rows, Lane::default);
+    if lanes.len() < nt_rows {
+        lanes.resize_with(nt_rows, Lane::default);
     }
-    std::thread::scope(|sc| {
+    pool::scope(|sc| {
         for ((ar, or), lane) in a
             .chunks(rows_per * k)
             .zip(out.chunks_mut(rows_per * n))
-            .zip(ws.lanes.iter_mut())
+            .zip(lanes.iter_mut())
         {
             let panel = &mut lane.panel;
             sc.spawn(move || {
                 let mrows = or.len() / n;
-                sweep_cols(ar, mrows, k, bref, 0, n, panel, or, n);
+                sweep_cols(ar, mrows, k, bref, 0, n, panel, cache, or, n);
             });
         }
     });
@@ -270,7 +538,8 @@ pub fn qgemm_into(
 
 /// Allocating convenience wrapper around [`qgemm_into`] with a throwaway
 /// workspace — for one-shot callers (analysis, tests).  Hot loops should
-/// hold a [`Workspace`] and an output buffer and call `qgemm_into`.
+/// hold a [`Workspace`] (cache-enabled when the weights repeat) and an
+/// output buffer and call `qgemm_into`.
 pub fn qgemm(a: &[f32], q: &QuantizedTensor, m: usize, k: usize, n: usize) -> Vec<f32> {
     let mut out = vec![0.0f32; m * n];
     let mut ws = Workspace::new();
@@ -298,13 +567,13 @@ mod tests {
 
     #[test]
     fn qgemm_bit_identical_to_dequant_matmul() {
-        // shapes straddle the QKB/QJB tile edges; wild A exercises the
-        // zero-skip and extreme-magnitude paths
+        // shapes straddle the QKB/QJB tile edges and every jw % 4 edge
+        // width; wild A exercises the zero-skip and extreme-magnitude paths
         for fmt in [FP4_E2M1, FP8_E4M3, FP8_E5M2] {
             prop_check("qgemm == matmul(dequantize)", 30, |c| {
                 let m = c.usize_in(1, 5);
                 let k = [1usize, 7, 64, 255, 256, 257][c.usize_in(0, 5)];
-                let n = [1usize, 8, 130, 511, 512, 513][c.usize_in(0, 5)];
+                let n = [1usize, 2, 3, 8, 130, 511, 512, 513][c.usize_in(0, 7)];
                 let a = c.f32_vec_wild(m * k, m * k);
                 let bdata = c.f32_vec_wild(k * n, k * n);
                 for g in [GranSpec::PerTensor, GranSpec::PerRow, GranSpec::PerBlock(32)] {
@@ -324,7 +593,7 @@ mod tests {
     #[test]
     fn parallel_path_bit_identical() {
         // 64*512*640 ≈ 21M MACs > PAR_MIN_FLOPS and n/MIN_STRIPE = 10
-        // stripes → the column-split threaded path with a ragged last stripe
+        // stripes → the column-split pooled path with a ragged last stripe
         let (m, k, n) = (64usize, 512usize, 640usize);
         let mut rng = Rng::new(40);
         let a: Vec<f32> = (0..m * k).map(|_| rng.normal_f32(0.0, 1.0)).collect();
@@ -375,6 +644,70 @@ mod tests {
             qgemm_into(&a, &q, m, k, n, &mut out, &mut ws);
             assert_eq!(bits(&out), bits(&first), "{m}x{k}x{n} reuse");
         }
+    }
+
+    #[test]
+    fn panel_cache_hit_and_miss_paths_bit_identical() {
+        let mut rng = Rng::new(45);
+        // serial shape and a column-split shape, both repeated: first call
+        // populates (miss path), second call replays from cache (hit path)
+        for (m, k, n) in [(3usize, 300usize, 70usize), (64, 512, 640)] {
+            let a: Vec<f32> = (0..m * k).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let bdata: Vec<f32> = (0..k * n).map(|_| rng.normal_f32(0.0, 0.5)).collect();
+            let q = quantize_rows(&bdata, k, n, FP4_E2M1, GranSpec::PerBlock(32));
+            let want = reference(&a, &q, m, k, n);
+            let mut ws = Workspace::with_panel_cache(DEFAULT_PANEL_CACHE_BYTES);
+            let mut out = vec![f32::NAN; m * n];
+            qgemm_into(&a, &q, m, k, n, &mut out, &mut ws);
+            assert_eq!(bits(&out), bits(&want), "{m}x{k}x{n} miss path");
+            let s1 = ws.panel_cache_stats().unwrap();
+            assert!(s1.misses > 0 && s1.panels > 0, "{s1:?}");
+            out.fill(f32::NAN);
+            qgemm_into(&a, &q, m, k, n, &mut out, &mut ws);
+            assert_eq!(bits(&out), bits(&want), "{m}x{k}x{n} hit path");
+            let s2 = ws.panel_cache_stats().unwrap();
+            assert!(s2.hits >= s1.misses, "second call should replay: {s2:?}");
+            assert_eq!(s2.misses, s1.misses, "second call must not re-decode: {s2:?}");
+        }
+    }
+
+    #[test]
+    fn panel_cache_distinguishes_tensors_and_layouts() {
+        // same shape, different payloads: ids differ, so cached panels of
+        // q1 must never serve q2
+        let mut rng = Rng::new(46);
+        let (m, k, n) = (4usize, 200usize, 48usize);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let b1: Vec<f32> = (0..k * n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let b2: Vec<f32> = (0..k * n).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+        let q1 = quantize_rows(&b1, k, n, FP4_E2M1, GranSpec::PerRow);
+        let q2 = quantize_rows(&b2, k, n, FP4_E2M1, GranSpec::PerRow);
+        assert_ne!(q1.id(), q2.id());
+        let mut ws = Workspace::with_panel_cache(DEFAULT_PANEL_CACHE_BYTES);
+        let mut out = vec![0.0f32; m * n];
+        for q in [&q1, &q2, &q1, &q2] {
+            qgemm_into(&a, q, m, k, n, &mut out, &mut ws);
+            assert_eq!(bits(&out), bits(&reference(&a, q, m, k, n)));
+        }
+    }
+
+    #[test]
+    fn panel_cache_cap_disables_retention_not_correctness() {
+        let mut rng = Rng::new(47);
+        let (m, k, n) = (3usize, 280usize, 64usize);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let bdata: Vec<f32> = (0..k * n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let q = quantize_rows(&bdata, k, n, FP4_E2M1, GranSpec::PerRow);
+        let want = reference(&a, &q, m, k, n);
+        let mut ws = Workspace::with_panel_cache(16); // below any panel size
+        let mut out = vec![0.0f32; m * n];
+        qgemm_into(&a, &q, m, k, n, &mut out, &mut ws);
+        qgemm_into(&a, &q, m, k, n, &mut out, &mut ws);
+        assert_eq!(bits(&out), bits(&want));
+        let s = ws.panel_cache_stats().unwrap();
+        assert_eq!(s.panels, 0, "nothing fits under a 16-byte cap: {s:?}");
+        assert_eq!(s.hits, 0);
+        assert!(s.misses > 0);
     }
 
     #[test]

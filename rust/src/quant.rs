@@ -14,6 +14,14 @@ use crate::tensor::Tensor;
 
 /// A quantized tensor: codes (packed for FP4), one f32 scale per group,
 /// and the grouping geometry needed to reverse it.
+///
+/// Every tensor built through [`QuantizedTensor::new`] carries a unique
+/// [`id`](QuantizedTensor::id) that `kernels::qgemm`'s `PanelCache` keys
+/// decoded B panels by.  Clones share the id — their codes are identical
+/// bytes, so cached panels are interchangeable.  The payload fields stay
+/// `pub` for serialization; treat them as immutable after construction
+/// (mutating `packed`/`scales` in place would leave stale panels behind —
+/// rebuild through `new` instead).
 #[derive(Clone, Debug)]
 pub struct QuantizedTensor {
     pub fmt_name: String,
@@ -21,6 +29,7 @@ pub struct QuantizedTensor {
     pub granularity: GranSpec,
     pub packed: Vec<u8>,
     pub scales: Vec<f32>,
+    id: u64,
 }
 
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -51,6 +60,27 @@ impl GranSpec {
 }
 
 impl QuantizedTensor {
+    /// The one constructor: assigns a process-unique id (the panel-cache
+    /// key component) alongside the payload.
+    pub fn new(
+        fmt_name: String,
+        shape: Vec<usize>,
+        granularity: GranSpec,
+        packed: Vec<u8>,
+        scales: Vec<f32>,
+    ) -> QuantizedTensor {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+        let id = NEXT_ID.fetch_add(1, Ordering::Relaxed);
+        QuantizedTensor { fmt_name, shape, granularity, packed, scales, id }
+    }
+
+    /// Process-unique identity of this tensor's payload (shared by
+    /// clones), used to key cached decoded panels across GEMM calls.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
     /// Runtime format (never fails for tensors built by this crate — the
     /// name is written from an `FpFormat` constant).
     pub fn fmt(&self) -> FpFormat {
@@ -91,13 +121,7 @@ pub fn quantize(t: &Tensor, fmt: FpFormat, g: GranSpec) -> QuantizedTensor {
     let (rows, cols) = rows_cols(&t.shape);
     let (packed, scales) =
         kernels::quantize_pack_rows_auto(&t.data, rows, cols, fmt, g.to_granularity());
-    QuantizedTensor {
-        fmt_name: fmt.name.to_string(),
-        shape: t.shape.clone(),
-        granularity: g,
-        packed,
-        scales,
-    }
+    QuantizedTensor::new(fmt.name.to_string(), t.shape.clone(), g, packed, scales)
 }
 
 /// Quantize a raw row-major (rows × cols) buffer — same kernels as
@@ -107,13 +131,7 @@ pub fn quantize(t: &Tensor, fmt: FpFormat, g: GranSpec) -> QuantizedTensor {
 pub fn quantize_rows(x: &[f32], rows: usize, cols: usize, fmt: FpFormat, g: GranSpec) -> QuantizedTensor {
     assert_eq!(x.len(), rows * cols);
     let (packed, scales) = kernels::quantize_pack_rows_auto(x, rows, cols, fmt, g.to_granularity());
-    QuantizedTensor {
-        fmt_name: fmt.name.to_string(),
-        shape: vec![rows, cols],
-        granularity: g,
-        packed,
-        scales,
-    }
+    QuantizedTensor::new(fmt.name.to_string(), vec![rows, cols], g, packed, scales)
 }
 
 /// The original scalar quantize path — one `codec::encode` per element,
@@ -143,13 +161,7 @@ pub fn quantize_scalar(t: &Tensor, fmt: FpFormat, g: GranSpec) -> QuantizedTenso
         }
     }
     let packed = if fmt.bits() <= 4 { codec::pack_fp4(&codes) } else { codes };
-    QuantizedTensor {
-        fmt_name: fmt.name.to_string(),
-        shape: t.shape.clone(),
-        granularity: g,
-        packed,
-        scales,
-    }
+    QuantizedTensor::new(fmt.name.to_string(), t.shape.clone(), g, packed, scales)
 }
 
 /// Reconstruct the fake-quantized tensor (LUT decode — one table load and

@@ -108,6 +108,11 @@ impl Tensor {
     /// `kernels::qgemm` decodes B panel-by-panel, so no f32 copy of B is
     /// ever materialized.  Bit-identical to
     /// `self.matmul(&quant::dequantize(q))`.
+    ///
+    /// Callers that multiply against the same `q` repeatedly should pass
+    /// a cache-enabled workspace (`Workspace::with_panel_cache`): decoded
+    /// panels are then reused across calls instead of re-decoded, with
+    /// identical bits either way.
     pub fn matmul_quant(
         &self,
         q: &crate::quant::QuantizedTensor,
@@ -203,6 +208,13 @@ mod tests {
         let q = quantize(&b, FP4_E2M1, GranSpec::PerRow);
         let mut ws = crate::kernels::Workspace::new();
         assert_eq!(a.matmul_quant(&q, &mut ws), a.matmul(&dequantize(&q)));
+        // cache-enabled workspace: same bits on the miss and the hit pass
+        let mut cws = crate::kernels::Workspace::with_panel_cache(1 << 20);
+        let want = a.matmul(&dequantize(&q));
+        assert_eq!(a.matmul_quant(&q, &mut cws), want);
+        assert_eq!(a.matmul_quant(&q, &mut cws), want);
+        let stats = cws.panel_cache_stats().unwrap();
+        assert!(stats.hits > 0 && stats.misses > 0, "{stats:?}");
     }
 
     #[test]

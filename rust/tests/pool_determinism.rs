@@ -1,0 +1,143 @@
+//! Pool determinism: every parallel kernel must produce bit-identical
+//! output at thread counts 1, 2, 3, and 8, forced via `PALLAS_THREADS`.
+//!
+//! The persistent pool (`kernels::pool`) only schedules — work splitting
+//! stays on group/row boundaries in the kernels — so the thread-count
+//! policy must never move a single output bit.  This file pins that
+//! contract for the three kernel families (`fake_quant_rows_auto`,
+//! `matmul_f32`, `qgemm`), including the qgemm panel-cache miss and hit
+//! paths.
+//!
+//! `PALLAS_THREADS` is re-read by `pool::configured_threads()` on every
+//! call, so setting it between runs inside one process changes the task
+//! splitting immediately (the pool's worker count is fixed at first use —
+//! it is initialized at 8 here, before the sweep, so the higher counts
+//! exercise real cross-thread scheduling too).  Integration tests run in
+//! their own process, so the env mutation cannot leak into other suites.
+
+use fp4train::formats::{Granularity, FP4_E2M1, FP8_E4M3};
+use fp4train::kernels::{fake_quant_rows_auto, matmul_f32, qgemm_into, Workspace};
+use fp4train::quant::{self, GranSpec};
+use fp4train::util::rng::Rng;
+
+const THREAD_COUNTS: [usize; 4] = [8, 3, 2, 1]; // 8 first: pool inits at full width
+
+/// Serializes the tests in this binary: the panel-cache stat assertions
+/// need PALLAS_THREADS stable for the duration of a pass (the *results*
+/// are thread-count-invariant, but stripe layout — and therefore which
+/// panel keys a pass touches — is not).
+static ENV_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn set_threads(n: usize) {
+    std::env::set_var("PALLAS_THREADS", n.to_string());
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn randvec(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+}
+
+#[test]
+fn kernels_bit_identical_across_thread_counts() {
+    let _env = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    // --- inputs sized past every parallel threshold ---
+    // fake-quant sweep: 1024*129 = 132k elems > PAR_MIN_ELEMS, odd cols
+    let (qrows, qcols) = (1024usize, 129usize);
+    let qx = randvec(qrows * qcols, 51);
+    // f32 GEMM: 256*256*128 ≈ 8.4M MACs > PAR_MIN_FLOPS
+    let (fm, fk, fn_) = (256usize, 256usize, 128usize);
+    let fa = randvec(fm * fk, 52);
+    let fb = randvec(fk * fn_, 53);
+    // qgemm, column-split shape (ragged last stripe) and narrow row-split
+    // shape, both > PAR_MIN_FLOPS
+    let (cm, ck, cn) = (64usize, 512usize, 640usize);
+    let ca = randvec(cm * ck, 54);
+    let cq = quant::quantize_rows(&randvec(ck * cn, 55), ck, cn, FP4_E2M1, GranSpec::PerBlock(128));
+    let (rm, rk, rn) = (512usize, 256usize, 64usize);
+    let ra = randvec(rm * rk, 56);
+    let rq = quant::quantize_rows(&randvec(rk * rn, 57), rk, rn, FP8_E4M3, GranSpec::PerRow);
+
+    let mut reference: Option<(Vec<u32>, Vec<u32>, Vec<u32>, Vec<u32>, Vec<u32>, Vec<u32>)> = None;
+    for nt in THREAD_COUNTS {
+        set_threads(nt);
+
+        let fq = fake_quant_rows_auto(&qx, qrows, qcols, FP4_E2M1, Granularity::PerBlock(43));
+        let mm = matmul_f32(&fa, &fb, fm, fk, fn_);
+
+        // qgemm three ways per thread count: uncached, cache-miss pass
+        // (fresh cache), cache-hit pass (same cache, second call)
+        let mut plain = vec![0.0f32; cm * cn];
+        qgemm_into(&ca, &cq, cm, ck, cn, &mut plain, &mut Workspace::new());
+        let mut cws = Workspace::with_panel_cache(64 << 20);
+        let mut miss = vec![f32::NAN; cm * cn];
+        qgemm_into(&ca, &cq, cm, ck, cn, &mut miss, &mut cws);
+        let s = cws.panel_cache_stats().unwrap();
+        assert!(s.misses > 0 && s.hits == 0, "nt={nt} first pass must all-miss: {s:?}");
+        let mut hit = vec![f32::NAN; cm * cn];
+        qgemm_into(&ca, &cq, cm, ck, cn, &mut hit, &mut cws);
+        let s2 = cws.panel_cache_stats().unwrap();
+        assert!(s2.hits > 0 && s2.misses == s.misses, "nt={nt} second pass must replay: {s2:?}");
+
+        // narrow output → the A-row split fallback, cached and not
+        let mut narrow = vec![0.0f32; rm * rn];
+        qgemm_into(&ra, &rq, rm, rk, rn, &mut narrow, &mut cws);
+
+        let got = (bits(&fq), bits(&mm), bits(&plain), bits(&miss), bits(&hit), bits(&narrow));
+        match &reference {
+            None => {
+                // sanity anchor for the packed paths before pinning
+                let want = matmul_f32(&ca, &quant::dequantize(&cq).data, cm, ck, cn);
+                assert_eq!(got.2, bits(&want), "qgemm != dequant+matmul at nt={nt}");
+                reference = Some(got);
+            }
+            Some(r) => {
+                assert_eq!(&got.0, &r.0, "fake_quant_rows_auto diverged at nt={nt}");
+                assert_eq!(&got.1, &r.1, "matmul_f32 diverged at nt={nt}");
+                assert_eq!(&got.2, &r.2, "qgemm (uncached) diverged at nt={nt}");
+                assert_eq!(&got.3, &r.3, "qgemm (cache miss) diverged at nt={nt}");
+                assert_eq!(&got.4, &r.4, "qgemm (cache hit) diverged at nt={nt}");
+                assert_eq!(&got.5, &r.5, "qgemm (row split) diverged at nt={nt}");
+            }
+        }
+    }
+    std::env::remove_var("PALLAS_THREADS");
+}
+
+#[test]
+fn configured_threads_env_override_and_clamping() {
+    let _env = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    use fp4train::kernels::pool::{configured_threads, MAX_THREADS};
+    set_threads(3);
+    assert_eq!(configured_threads(), 3);
+    std::env::set_var("PALLAS_THREADS", "0"); // clamped up
+    assert_eq!(configured_threads(), 1);
+    std::env::set_var("PALLAS_THREADS", "10000"); // clamped down
+    assert_eq!(configured_threads(), MAX_THREADS);
+    std::env::set_var("PALLAS_THREADS", "not a number"); // ignored
+    let auto = configured_threads();
+    assert!((1..=MAX_THREADS).contains(&auto));
+    std::env::remove_var("PALLAS_THREADS");
+}
+
+#[test]
+fn pack_sweep_bit_identical_across_thread_counts() {
+    let _env = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    // quantize+pack has the extra FP4 chunk-evening rule — sweep it too
+    let (rows, cols) = (1024usize, 129usize);
+    let x = randvec(rows * cols, 58);
+    let mut reference: Option<(Vec<u8>, Vec<u32>)> = None;
+    for nt in THREAD_COUNTS {
+        set_threads(nt);
+        let q = quant::quantize_rows(&x, rows, cols, FP4_E2M1, GranSpec::PerBlock(43));
+        let got = (q.packed.clone(), q.scales.iter().map(|s| s.to_bits()).collect::<Vec<_>>());
+        match &reference {
+            None => reference = Some(got),
+            Some(r) => assert_eq!(&got, r, "quantize_pack diverged at nt={nt}"),
+        }
+    }
+    std::env::remove_var("PALLAS_THREADS");
+}

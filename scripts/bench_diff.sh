@@ -1,0 +1,86 @@
+#!/usr/bin/env bash
+# Compare freshly emitted bench JSONs against committed baselines.
+#
+# `cargo bench --bench bench_<x>` (run from rust/) writes BENCH_<x>.json
+# into rust/.  This script matches each fresh file against
+# bench/baselines/BENCH_<x>.json by entry name and warns when a median_ns
+# regressed by more than the threshold (default 10 %).  Entries present
+# on only one side are reported but never fail the run (new benches land
+# before their baselines; renames are ROADMAP-documented).
+#
+#   scripts/bench_diff.sh            # warn only, always exit 0
+#   scripts/bench_diff.sh --strict   # exit 1 if any entry regresses
+#   BENCH_DIFF_THRESHOLD=25 scripts/bench_diff.sh   # custom % threshold
+#
+# No-ops (exit 0 with a note) when no fresh BENCH_*.json exist — so
+# `tier1.sh --bench-diff` is safe whether or not benches actually ran —
+# or when python3 is unavailable.
+#
+# Refreshing baselines after an intentional perf change, on the
+# reference machine:  cp rust/BENCH_*.json bench/baselines/
+
+set -euo pipefail
+SCRIPT_DIR="$(cd "$(dirname "$0")" && pwd)"
+REPO="$SCRIPT_DIR/.."
+FRESH_DIR="$REPO/rust"
+BASE_DIR="$REPO/bench/baselines"
+THRESHOLD="${BENCH_DIFF_THRESHOLD:-10}"
+STRICT=0
+[[ "${1:-}" == "--strict" ]] && STRICT=1
+
+shopt -s nullglob
+fresh=("$FRESH_DIR"/BENCH_*.json)
+if [[ ${#fresh[@]} -eq 0 ]]; then
+    echo "bench_diff: no fresh BENCH_*.json in rust/ (benches not run) — nothing to compare"
+    exit 0
+fi
+if ! command -v python3 >/dev/null 2>&1; then
+    echo "bench_diff: python3 not available — skipping comparison" >&2
+    exit 0
+fi
+
+fail=0
+for f in "${fresh[@]}"; do
+    base="$BASE_DIR/$(basename "$f")"
+    if [[ ! -f "$base" ]]; then
+        echo "bench_diff: no baseline for $(basename "$f") — copy it to bench/baselines/ to track"
+        continue
+    fi
+    if ! python3 - "$base" "$f" "$THRESHOLD" <<'PY'
+import json, sys
+
+base_path, fresh_path, threshold = sys.argv[1], sys.argv[2], float(sys.argv[3])
+base = {r["name"]: r for r in json.load(open(base_path))}
+fresh = {r["name"]: r for r in json.load(open(fresh_path))}
+name = fresh_path.split("/")[-1]
+ok = True
+for n, r in fresh.items():
+    b = base.get(n)
+    if b is None:
+        print(f"bench_diff: {name}: '{n}' has no baseline entry (new bench?)")
+        continue
+    old, new = b["median_ns"], r["median_ns"]
+    if old <= 0:
+        continue
+    delta = 100.0 * (new - old) / old
+    if delta > threshold:
+        print(f"bench_diff: WARNING {name}: '{n}' regressed {delta:+.1f}% "
+              f"({old/1e6:.3f} ms -> {new/1e6:.3f} ms, threshold {threshold:.0f}%)")
+        ok = False
+    else:
+        print(f"bench_diff: {name}: '{n}' {delta:+.1f}%")
+for n in base:
+    if n not in fresh:
+        print(f"bench_diff: {name}: baseline entry '{n}' missing from fresh run")
+sys.exit(0 if ok else 3)
+PY
+    then
+        fail=1
+    fi
+done
+
+if [[ $fail -ne 0 ]]; then
+    echo "bench_diff: regressions above ${THRESHOLD}% detected"
+    [[ $STRICT -eq 1 ]] && exit 1
+fi
+exit 0

@@ -2,8 +2,11 @@
 # Tier-1 verification: release build, full test suite, and a compile check
 # of every bench target so benches can't silently rot.
 #
-#   scripts/tier1.sh           # build + test + bench --no-run
-#   scripts/tier1.sh --fast    # skip the release build (debug test only)
+#   scripts/tier1.sh               # build + test + bench --no-run
+#   scripts/tier1.sh --fast        # skip the release build (debug test only)
+#   scripts/tier1.sh --bench-diff  # additionally diff any fresh
+#                                  # BENCH_*.json against bench/baselines/
+#                                  # (no-op when benches haven't been run)
 #
 # When `cargo` is missing, scripts/toolchain.sh is invoked to bootstrap a
 # pinned toolchain (rustup; needs network on first run).
@@ -13,6 +16,17 @@
 
 set -euo pipefail
 SCRIPT_DIR="$(cd "$(dirname "$0")" && pwd)"
+
+BENCH_DIFF=0
+FAST=0
+for arg in "$@"; do
+    case "$arg" in
+        --fast) FAST=1 ;;
+        --bench-diff) BENCH_DIFF=1 ;;
+        *) echo "tier1: unknown flag $arg" >&2; exit 64 ;;
+    esac
+done
+
 cd "$SCRIPT_DIR/../rust"
 
 if ! command -v cargo >/dev/null 2>&1; then
@@ -26,7 +40,7 @@ if ! command -v cargo >/dev/null 2>&1; then
     exit 2
 fi
 
-if [[ "${1:-}" != "--fast" ]]; then
+if [[ $FAST -ne 1 ]]; then
     echo "== cargo build --release =="
     cargo build --release
 fi
@@ -36,5 +50,10 @@ cargo test -q
 
 echo "== cargo bench --no-run (bench targets must compile) =="
 cargo bench --no-run
+
+if [[ $BENCH_DIFF -eq 1 ]]; then
+    echo "== bench_diff (fresh BENCH_*.json vs bench/baselines) =="
+    "$SCRIPT_DIR/bench_diff.sh"
+fi
 
 echo "tier1: OK"
