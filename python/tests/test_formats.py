@@ -5,6 +5,8 @@ invariants."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not in this environment")
 from hypothesis import given, settings, strategies as st
 
 from compile.formats import (

@@ -5,6 +5,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not in this environment")
 from hypothesis import given, settings, strategies as st
 
 from compile.formats import FP4_E2M1, FP8_E4M3, FORMATS

@@ -38,16 +38,25 @@ pub struct RunResult {
     pub state: TrainState,
 }
 
-/// Build the corpus → tokenizer → dataset chain for a run configuration.
-pub fn build_dataset(rt: &Runtime, cfg: &RunConfig) -> Result<(TokenDataset, Tokenizer)> {
-    let info = rt.manifest.model(&cfg.model)?;
+/// Build the corpus → tokenizer → dataset chain for a run configuration
+/// and an explicit (seq, batch, vocab) geometry — shared by the PJRT
+/// trainer (geometry from the artifact manifest) and the `--host`
+/// refmodel engine (geometry from `refmodel::presets`, no manifest
+/// needed).  Identical (cfg, geometry) pairs yield identical datasets on
+/// both paths.
+pub fn dataset_from_geometry(
+    seq: usize,
+    batch: usize,
+    vocab: usize,
+    cfg: &RunConfig,
+) -> (TokenDataset, Tokenizer) {
     let (text, _meta) = CorpusGen::new(CorpusConfig {
         n_docs: cfg.data.n_docs,
         seed: cfg.data.corpus_seed,
         ..Default::default()
     })
     .generate();
-    let tok = Tokenizer::train(&text, info.vocab);
+    let tok = Tokenizer::train(&text, vocab);
     let tokens = tok.encode(&text);
     log::info!(
         "corpus: {} docs, {} chars -> {} tokens (vocab {})",
@@ -58,14 +67,15 @@ pub fn build_dataset(rt: &Runtime, cfg: &RunConfig) -> Result<(TokenDataset, Tok
     );
     let ds = TokenDataset::new(
         tokens,
-        DatasetConfig {
-            seq: info.seq,
-            batch: rt.manifest.batch,
-            val_frac: cfg.data.val_frac,
-            seed: cfg.seed,
-        },
+        DatasetConfig { seq, batch, val_frac: cfg.data.val_frac, seed: cfg.seed },
     );
-    Ok((ds, tok))
+    (ds, tok)
+}
+
+/// Build the corpus → tokenizer → dataset chain for a run configuration.
+pub fn build_dataset(rt: &Runtime, cfg: &RunConfig) -> Result<(TokenDataset, Tokenizer)> {
+    let info = rt.manifest.model(&cfg.model)?;
+    Ok(dataset_from_geometry(info.seq, rt.manifest.batch, info.vocab, cfg))
 }
 
 impl<'rt> Trainer<'rt> {

@@ -246,6 +246,20 @@ pub fn run_probe(name: &str, features: &Tensor, metas: &[DocMeta], seed: u64) ->
     ProbeResult { name: name.to_string(), accuracy: probe.accuracy(&xte, &yte), chance }
 }
 
+/// Run the full non-control probe suite (every probe except the `parity`
+/// random-label control) and return the per-probe results in [`PROBES`]
+/// order plus their mean accuracy — the Table 1 "GLUE" block, shared by
+/// the PJRT and `--host` reproduce drivers.
+pub fn run_probe_suite(features: &Tensor, metas: &[DocMeta], seed: u64) -> (Vec<ProbeResult>, f64) {
+    let results: Vec<ProbeResult> = PROBES
+        .iter()
+        .filter(|(n, _)| *n != "parity")
+        .map(|(name, _)| run_probe(name, features, metas, seed))
+        .collect();
+    let mean = results.iter().map(|r| r.accuracy).sum::<f64>() / results.len().max(1) as f64;
+    (results, mean)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -308,6 +322,17 @@ mod tests {
         let x = synthetic_features(400, 32, &ms, 3.0);
         let r = run_probe("parity", &x, &ms, 0);
         assert!((r.accuracy - 0.5).abs() < 0.15, "{}", r.accuracy);
+    }
+
+    #[test]
+    fn suite_excludes_parity_and_averages() {
+        let ms = metas(200);
+        let x = synthetic_features(200, 32, &ms, 3.0);
+        let (results, mean) = run_probe_suite(&x, &ms, 0);
+        assert_eq!(results.len(), PROBES.len() - 1);
+        assert!(results.iter().all(|r| r.name != "parity"));
+        let want = results.iter().map(|r| r.accuracy).sum::<f64>() / results.len() as f64;
+        assert!((mean - want).abs() < 1e-12);
     }
 
     #[test]

@@ -1,14 +1,19 @@
-//! Cache-blocked f32 matmul for host-side math (the probe trainer), with
-//! zero-allocation `_into` variants for hot loops that reuse output
-//! buffers across calls.
+//! Cache-blocked f32 matmul for host-side math (the probe trainer and the
+//! refmodel engine's f32/backward GEMMs), with zero-allocation `_into`
+//! variants for hot loops that reuse output buffers across calls.
 //!
-//! The inner kernel keeps the contraction index ascending for every output
-//! element, so accumulation order — and therefore the f32 result — is
-//! identical to the naive `for i { for k { for j } }` loop it replaces,
-//! while the k/j tiling keeps the B panel resident in L1/L2.  Above
-//! [`PAR_MIN_FLOPS`] multiply-adds the row dimension is split across the
-//! persistent [`super::pool`] workers (rows are independent, so this too
-//! is bit-exact, and no threads are spawned per call).
+//! The inner loop is the same 1×4 register-blocked, k-innermost tile as
+//! `qgemm::mac_panel`: four output columns accumulate in registers while
+//! the contraction index runs innermost over the (k, j) cache tile, with
+//! a 1-wide edge loop for the ragged tail.  Per output element the k
+//! terms are still consumed in strictly ascending order with the same
+//! `a == 0.0` skip as the naive `for i { for k { for j } }` loop — the
+//! tile only interleaves *independent* elements — so the f32 result is
+//! bit-identical to the scalar loop it replaces (property-tested across
+//! tile-edge shapes below).  Above [`PAR_MIN_FLOPS`] multiply-adds the
+//! row dimension is split across the persistent [`super::pool`] workers
+//! (rows are independent, so this too is bit-exact, and no threads are
+//! spawned per call).
 //!
 //! [`matmul_bias_into`] folds a row-broadcast bias add into the kernel
 //! epilogue: the bias is added once per output element after its
@@ -33,18 +38,40 @@ fn matmul_rows(a_rows: &[f32], b: &[f32], k: usize, n: usize, out_rows: &mut [f3
         let orow = &mut out_rows[i * n..(i + 1) * n];
         for k0 in (0..k).step_by(KB) {
             let k1 = (k0 + KB).min(k);
+            let aseg = &arow[k0..k1];
             for j0 in (0..n).step_by(JB) {
                 let j1 = (j0 + JB).min(n);
-                for (kk, &av) in arow[k0..k1].iter().enumerate() {
-                    if av == 0.0 {
-                        continue;
+                // 1×4 register tile, k innermost (qgemm `mac_panel` shape):
+                // four accumulators live in registers across the k sweep;
+                // ascending k + the a == 0.0 skip keep it bit-exact vs the
+                // naive loop.  Each accumulator column is an fma lane for
+                // the planned SIMD pass.
+                let mut jj = j0;
+                while jj + 4 <= j1 {
+                    let mut c = [orow[jj], orow[jj + 1], orow[jj + 2], orow[jj + 3]];
+                    for (kk, &av) in aseg.iter().enumerate() {
+                        if av != 0.0 {
+                            let p = &b[(k0 + kk) * n + jj..][..4];
+                            c[0] += av * p[0];
+                            c[1] += av * p[1];
+                            c[2] += av * p[2];
+                            c[3] += av * p[3];
+                        }
                     }
-                    let kk = k0 + kk;
-                    let brow = &b[kk * n + j0..kk * n + j1];
-                    let dst = &mut orow[j0..j1];
-                    for (o, &bv) in dst.iter_mut().zip(brow) {
-                        *o += av * bv;
+                    orow[jj] = c[0];
+                    orow[jj + 1] = c[1];
+                    orow[jj + 2] = c[2];
+                    orow[jj + 3] = c[3];
+                    jj += 4;
+                }
+                for j in jj..j1 {
+                    let mut cv = orow[j];
+                    for (kk, &av) in aseg.iter().enumerate() {
+                        if av != 0.0 {
+                            cv += av * b[(k0 + kk) * n + j];
+                        }
                     }
+                    orow[j] = cv;
                 }
             }
         }
@@ -136,6 +163,31 @@ mod tests {
         for (m, k, n) in [(1, 1, 1), (3, 5, 7), (8, 300, 33), (64, 257, 129), (130, 512, 70)] {
             let a = randvec(m * k, (m * k) as u64);
             let b = randvec(k * n, (k * n) as u64 + 1);
+            let got = matmul_f32(&a, &b, m, k, n);
+            let want = naive(&a, &b, m, k, n);
+            assert_eq!(
+                got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "{m}x{k}x{n}"
+            );
+        }
+    }
+
+    #[test]
+    fn register_tile_edges_match_naive_bitwise() {
+        // every n mod 4 residue (1-wide edge loop), k crossing the KB tile
+        // boundary, and a zero-heavy A exercising the skip inside the tile
+        for (m, k, n) in [
+            (2, 300, 1), (3, 257, 2), (5, 300, 3), (4, 520, 4), (4, 259, 5),
+            (7, 256, 6), (1, 512, 9), (6, 255, 8),
+        ] {
+            let mut a = randvec(m * k, (m * k * n) as u64);
+            for (i, v) in a.iter_mut().enumerate() {
+                if i % 3 == 0 {
+                    *v = 0.0; // a == 0.0 skip must not change any bit
+                }
+            }
+            let b = randvec(k * n, (k * n) as u64 + 9);
             let got = matmul_f32(&a, &b, m, k, n);
             let want = naive(&a, &b, m, k, n);
             assert_eq!(

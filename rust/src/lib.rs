@@ -8,7 +8,9 @@
 //!   per-module mixed-precision recipe, AOT-lowered to HLO text.
 //! * Layer 3 (this crate): the training framework — data pipeline,
 //!   PJRT runtime, schedule controller (§3.3), data-parallel workers,
-//!   metrics/checkpoints, and the table/figure reproduction harness.
+//!   metrics/checkpoints, the table/figure reproduction harness, and the
+//!   pure-Rust `refmodel` golden engine (the `--host` executable fallback
+//!   when no PJRT runtime or artifacts are present).
 //!
 //! See DESIGN.md for the experiment index and substitution notes.
 
@@ -22,6 +24,7 @@ pub mod eval;
 pub mod formats;
 pub mod kernels;
 pub mod quant;
+pub mod refmodel;
 pub mod reproduce;
 pub mod runtime;
 pub mod tensor;

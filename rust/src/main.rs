@@ -1,8 +1,10 @@
 //! fp4train CLI — the L3 leader entrypoint.
 //!
 //! Subcommands:
-//!   train       run one pretraining job (schedule-aware)
-//!   reproduce   regenerate a paper table/figure (table1..4, fig1a..2, all)
+//!   train       run one pretraining job (schedule-aware; --host for the
+//!               pure-Rust refmodel engine, no artifacts/PJRT needed)
+//!   reproduce   regenerate a paper table/figure (table1..4, fig1a..2, all;
+//!               --host runs fig2/table1..4 on the refmodel engine)
 //!   presets     list model presets and precision recipes
 //!   data        corpus/tokenizer statistics
 //!   inspect     numeric-format explorer (grids, quantize values)
@@ -50,6 +52,7 @@ fn cli() -> Cli {
         .opt("value", None, "inspect: value(s) to quantize, comma-separated")
         .opt("format", Some("fp4"), "inspect: fp4 | fp8 | fp8_e5m2")
         .flag("pallas", "use the pallas-kernel train artifact")
+        .flag("host", "run on the pure-Rust refmodel engine (no artifacts/PJRT needed)")
 }
 
 fn main() {
@@ -91,11 +94,20 @@ fn run(args: &fp4train::util::args::Args) -> Result<()> {
 fn open_runtime(args: &fp4train::util::args::Args) -> Result<Runtime> {
     let dir = args.get("artifacts").unwrap_or("artifacts");
     Runtime::open(Path::new(dir))
-        .map_err(|e| anyhow!("{e}\nhint: run `make artifacts` first"))
+        .map_err(|e| anyhow!("{e}\nhint: run `make artifacts` first, or pass --host to run on the refmodel engine"))
 }
 
 fn cmd_train(args: &fp4train::util::args::Args) -> Result<()> {
     let cfg = RunConfig::resolve(args.get("config"), args).map_err(|e| anyhow!(e))?;
+    if args.has_flag("host") {
+        let res = fp4train::refmodel::train_host(&cfg)?;
+        println!(
+            "host done: {} / {} — final train loss {:.4}, val loss {:.4}, val ppl {:.3}",
+            cfg.model, cfg.recipe, res.final_train_loss, res.final_val_nll, res.final_val_ppl
+        );
+        println!("metrics: {}/{}__{}__host__steps.csv", cfg.out_dir, cfg.model, cfg.recipe);
+        return Ok(());
+    }
     let rt = open_runtime(args)?;
     if cfg.workers > 1 {
         return cmd_train_dp(&rt, cfg);
@@ -141,8 +153,8 @@ fn pick_init_recipe<'a>(rt: &'a Runtime, model: &str) -> Result<&'a str> {
 }
 
 fn cmd_reproduce(args: &fp4train::util::args::Args) -> Result<()> {
-    let rt = open_runtime(args)?;
     let mut opts = ReproduceOpts::default();
+    opts.host = args.has_flag("host");
     if let Some(s) = args.get("steps") {
         opts.steps = s.parse().map_err(|_| anyhow!("--steps"))?;
     }
@@ -156,6 +168,11 @@ fn cmd_reproduce(args: &fp4train::util::args::Args) -> Result<()> {
         opts.out_dir = o.to_string();
     }
     let what = args.get("what").unwrap_or("all").to_string();
+    if opts.host {
+        // no Runtime: the host path must work with no artifacts at all
+        return reproduce::run_host(&what, &opts);
+    }
+    let rt = open_runtime(args)?;
     reproduce::run(&rt, &what, &opts)
 }
 

@@ -1,0 +1,269 @@
+//! The host training loop: AdamW (mirror of `python/compile/train.py` —
+//! β₁=0.9, β₂=0.95, weight decay 0.1 with norm/bias exemptions, global
+//! grad-norm clip 1.0, warmup + cosine LR) driving [`RefModel`] under the
+//! §3.3 target-precision schedule.  This is the `--host` engine behind
+//! `reproduce`: same corpus → tokenizer → dataset chain as the PJRT
+//! trainer, same metrics sinks, no artifacts or PJRT runtime required.
+//!
+//! Determinism: batches are a pure function of (seed, step); gradients
+//! come from the bit-identical-at-any-thread-count kernels; the optimizer
+//! is sequential scalar code.  Two runs with equal configs produce
+//! bit-identical weights at every `PALLAS_THREADS` setting.
+//!
+//! The qgemm scratch deliberately has **no** panel cache: the engine
+//! re-packs weights after every optimizer update, so cached panels could
+//! never be reused across steps (cache-enabled workspaces produce the
+//! same bits — `tests/refmodel_determinism.rs` pins that).
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::RunConfig;
+use crate::coordinator::metrics::{Metrics, StepRecord};
+use crate::coordinator::trainer::dataset_from_geometry;
+use crate::data::batcher::BatchScratch;
+use crate::data::tokenizer::Tokenizer;
+
+use super::model::{Grads, RefModel};
+use super::presets;
+use super::qlinear::Scratch;
+
+/// Training hyperparameters (mirror of python `TrainHParams`).
+#[derive(Clone, Copy, Debug)]
+pub struct HParams {
+    pub peak_lr: f32,
+    pub weight_decay: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub warmup_frac: f32,
+    pub final_lr_frac: f32,
+    pub total_steps: u64,
+    pub grad_clip: f32,
+}
+
+impl HParams {
+    /// Paper Appendix B: peak LR 6e-4 for the GPT family, 1e-4 for LLaMA.
+    pub fn for_family(family: &str, total_steps: u64) -> HParams {
+        HParams {
+            peak_lr: if family == "llama" { 1e-4 } else { 6e-4 },
+            weight_decay: 0.1,
+            beta1: 0.9,
+            beta2: 0.95,
+            eps: 1e-8,
+            warmup_frac: 0.0015,
+            final_lr_frac: 0.10,
+            total_steps,
+            grad_clip: 1.0,
+        }
+    }
+}
+
+/// Warmup over 0.15 % of steps, then cosine decay to 10 % of peak.
+pub fn lr_at(step: u64, hp: &HParams) -> f32 {
+    let warm = (hp.warmup_frac * hp.total_steps as f32).max(1.0);
+    let t = step as f32;
+    if t < warm {
+        hp.peak_lr * ((t + 1.0) / warm).min(1.0)
+    } else {
+        let prog = ((t - warm) / (hp.total_steps as f32 - warm).max(1.0)).clamp(0.0, 1.0);
+        let floor = hp.final_lr_frac * hp.peak_lr;
+        floor + 0.5 * (hp.peak_lr - floor) * (1.0 + (std::f32::consts::PI * prog).cos())
+    }
+}
+
+/// AdamW state aligned with the model's canonical parameter order.
+pub struct AdamW {
+    hp: HParams,
+    names: Vec<String>,
+    decay: Vec<f32>,
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    step: u64,
+}
+
+/// Parameters exempt from weight decay (python `_NO_DECAY`).
+fn decay_mask(name: &str) -> f32 {
+    if name.starts_with("ln") || name.starts_with("rms") || name.starts_with("b_") {
+        0.0
+    } else {
+        1.0
+    }
+}
+
+impl AdamW {
+    pub fn new(model: &mut RefModel, hp: HParams) -> AdamW {
+        let mut names = Vec::new();
+        let mut decay = Vec::new();
+        let mut m = Vec::new();
+        let mut v = Vec::new();
+        for (name, p) in model.params_mut() {
+            decay.push(decay_mask(&name));
+            m.push(vec![0.0; p.len()]);
+            v.push(vec![0.0; p.len()]);
+            names.push(name);
+        }
+        AdamW { hp, names, decay, m, v, step: 0 }
+    }
+
+    pub fn step_count(&self) -> u64 {
+        self.step
+    }
+
+    /// One AdamW update with global-norm clipping; returns the raw
+    /// gradient norm.  Caller must `model.refresh_packed()` afterwards.
+    pub fn step(&mut self, model: &mut RefModel, grads: &Grads) -> f32 {
+        let gflat = grads.flat();
+        let mut params = model.params_mut();
+        assert_eq!(gflat.len(), params.len());
+        let mut sq = 0.0f64;
+        for (_, g) in &gflat {
+            for &x in *g {
+                sq += (x as f64) * (x as f64);
+            }
+        }
+        let gnorm = sq.sqrt() as f32;
+        let clip = (self.hp.grad_clip / gnorm.max(1e-12)).min(1.0);
+        let lr = lr_at(self.step, &self.hp);
+        let t = (self.step + 1) as f64;
+        let bc1 = (1.0 - (self.hp.beta1 as f64).powf(t)) as f32;
+        let bc2 = (1.0 - (self.hp.beta2 as f64).powf(t)) as f32;
+        let (b1, b2, eps, wd) = (self.hp.beta1, self.hp.beta2, self.hp.eps, self.hp.weight_decay);
+        for (i, ((name, g), (pname, p))) in gflat.iter().zip(params.iter_mut()).enumerate() {
+            debug_assert_eq!(name, pname);
+            let dk = self.decay[i] * wd;
+            let (ms, vs) = (&mut self.m[i], &mut self.v[i]);
+            for (j, pv) in p.iter_mut().enumerate() {
+                let gv = g[j] * clip;
+                ms[j] = b1 * ms[j] + (1.0 - b1) * gv;
+                vs[j] = b2 * vs[j] + (1.0 - b2) * gv * gv;
+                let mh = ms[j] / bc1;
+                let vh = vs[j] / bc2;
+                *pv -= lr * (mh / (vh.sqrt() + eps) + dk * *pv);
+            }
+        }
+        self.step += 1;
+        gnorm
+    }
+}
+
+/// Result of one host training run — field-compatible with the PJRT
+/// trainer's `RunResult` where the drivers consume it, plus the trained
+/// model and tokenizer so probe features and held-out evals run without
+/// retraining.
+pub struct HostRunResult {
+    pub final_train_loss: f64,
+    pub final_val_nll: f64,
+    pub final_val_ppl: f64,
+    pub metrics: Metrics,
+    pub model: RefModel,
+    pub tok: Tokenizer,
+}
+
+/// Run one host training job under the §3.3 schedule (stage 1 in
+/// `cfg.recipe`, the final `target_precision_frac` of steps in
+/// `cfg.target_recipe`).
+pub fn train_host(cfg: &RunConfig) -> Result<HostRunResult> {
+    let info = presets::model(&cfg.model)
+        .ok_or_else(|| anyhow!("unknown host model preset {}", cfg.model))?;
+    let recipe = presets::recipe(&cfg.recipe)
+        .ok_or_else(|| anyhow!("unknown host recipe {}", cfg.recipe))?;
+    let target = presets::recipe(&cfg.target_recipe)
+        .ok_or_else(|| anyhow!("unknown host target recipe {}", cfg.target_recipe))?;
+    let stage1 = cfg.stage1_steps();
+
+    let (ds, tok) = dataset_from_geometry(info.seq, presets::BATCH, info.vocab, cfg);
+    let val_batches = ds.val_batches();
+    let val_slice = &val_batches[..val_batches.len().min(4)];
+
+    let mut model = RefModel::new(info.clone(), recipe.clone(), cfg.seed);
+    let mut opt = AdamW::new(&mut model, HParams::for_family(&info.family, cfg.steps));
+    let mut sc = Scratch::default();
+    let mut metrics = Metrics::default();
+    let mut bscratch = BatchScratch::default();
+    let mut buf: Vec<i32> = Vec::new();
+
+    log::info!(
+        "host training {} / {} for {} steps (stage 2 at {stage1}, recipe {} -> {})",
+        cfg.model, cfg.recipe, cfg.steps, cfg.recipe, cfg.target_recipe
+    );
+    for step in 0..cfg.steps {
+        let stage2 = step >= stage1;
+        if stage2 && step == stage1 {
+            model.set_recipe(target.clone());
+        }
+        let batch = ds.train_batch_with(step, 0, 1, &mut bscratch, std::mem::take(&mut buf));
+        let t0 = Instant::now();
+        let (loss, grads, _cache) = model.loss_and_grads(&batch, &mut sc);
+        let gnorm = opt.step(&mut model, &grads);
+        model.refresh_packed();
+        buf = batch.data; // recycle the window buffer
+        let ms = t0.elapsed().as_secs_f64() * 1000.0;
+        metrics.push_step(StepRecord { step, loss, grad_norm: gnorm, stage: stage2 as u8, step_ms: ms });
+        if (step + 1) % cfg.log_every == 0 || step + 1 == cfg.steps {
+            log::info!(
+                "host step {:>5}/{} [{}] loss {:.4} |g| {:.3} {:.0} ms",
+                step + 1, cfg.steps, if stage2 { "tgt" } else { "low" }, loss, gnorm, ms
+            );
+        }
+        if (step + 1) % cfg.eval_every == 0 || step + 1 == cfg.steps {
+            let mut sum = 0.0f64;
+            let mut count = 0usize;
+            for vb in val_slice {
+                let (s, c) = model.eval_nll(vb, &mut sc);
+                sum += s;
+                count += c;
+            }
+            let nll = if count == 0 { f64::NAN } else { sum / count as f64 };
+            metrics.push_eval(step + 1, nll);
+            log::info!("host eval @ {:>5}: val nll {nll:.4} ppl {:.3}", step + 1, nll.exp());
+        }
+    }
+
+    let out_dir = PathBuf::from(&cfg.out_dir);
+    std::fs::create_dir_all(&out_dir)?;
+    let tag = format!("{}__{}__host", cfg.model, cfg.recipe);
+    metrics.write_csv(&out_dir.join(format!("{tag}__steps.csv")))?;
+    metrics.write_eval_csv(&out_dir.join(format!("{tag}__eval.csv")))?;
+
+    let final_val = metrics.last_eval().map(|e| e.val_nll).unwrap_or(f64::NAN);
+    Ok(HostRunResult {
+        final_train_loss: metrics.smoothed_loss(20).unwrap_or(f64::NAN),
+        final_val_nll: final_val,
+        final_val_ppl: final_val.exp(),
+        metrics,
+        model,
+        tok,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_schedule_shape() {
+        let hp = HParams::for_family("gpt2", 1000);
+        assert!(lr_at(0, &hp) > 0.0);
+        assert!(lr_at(0, &hp) <= hp.peak_lr);
+        // post-warmup peak then monotone-ish decay to the floor
+        let peak = lr_at(2, &hp);
+        assert!((peak - hp.peak_lr).abs() < 1e-7, "{peak}");
+        let end = lr_at(999, &hp);
+        assert!((end - hp.final_lr_frac * hp.peak_lr).abs() < 1e-5 * hp.peak_lr, "{end}");
+        assert!(lr_at(500, &hp) < peak && lr_at(500, &hp) > end);
+    }
+
+    #[test]
+    fn decay_mask_mirrors_python() {
+        assert_eq!(decay_mask("ln1_g.0"), 0.0);
+        assert_eq!(decay_mask("ln_f_b"), 0.0);
+        assert_eq!(decay_mask("b_qkv.1"), 0.0);
+        assert_eq!(decay_mask("rms1_g.0"), 0.0);
+        assert_eq!(decay_mask("w_qkv.0"), 1.0);
+        assert_eq!(decay_mask("wte"), 1.0);
+        assert_eq!(decay_mask("wpe"), 1.0);
+    }
+}

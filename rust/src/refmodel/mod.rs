@@ -1,0 +1,174 @@
+//! Host-side reference FP4 training engine — the executable golden-model
+//! oracle for the whole stack.
+//!
+//! A pure-Rust, deterministic tiny-transformer training engine whose every
+//! quantized linear runs through the packed kernel stack: forward GEMMs on
+//! `kernels::qgemm` over packed FP4/FP8 weights, fake-quant of activations
+//! and gradients on `kernels::fused`, f32 GEMMs on `kernels::matmul` — so
+//! the reproduce drivers (`fig2 --host`, `table2 --host`, …) and the probe
+//! feature extraction execute for real in a container with no PJRT
+//! runtime, and the kernel stack is exercised end-to-end by tier-1 tests.
+//!
+//! # Module-precision mapping (paper §3.1–3.2, Table 2)
+//!
+//! | GEMM                                   | recipe knob | headline ("ours") |
+//! |----------------------------------------|-------------|-------------------|
+//! | QKV projection, attention out-proj     | `attn`      | FP8 per-block-128 |
+//! | FFN linears (fc1, fc2)                 | `ffn`       | FP4 per-block-128 |
+//! | weight-grad `dw = Qb(x)^T @ Qb(g)`     | `wgrad`     | FP8 per-block-128 |
+//! | act-grad `dx = Qa(g) @ Qf(w)^T`        | `agrad`     | exact (identity)  |
+//! | attention itself (QKᵀ, softmax, PV)    | —           | exact f32 (§3.1)  |
+//! | embeddings, norms, biases, tied head   | —           | exact f32 (App. B)|
+//!
+//! The §3.3 target-precision schedule swaps every linear's recipe to the
+//! target recipe (FP16 ⇒ all-exact) at the stage boundary
+//! ([`engine::train_host`]); master weights and Adam moments stay f32
+//! throughout, with straight-through gradients onto the master copy.
+//!
+//! # Quantization axes
+//!
+//! Every fake-quantized operand is grouped along its **trailing axis**;
+//! operands whose contraction axis is not trailing are transposed first
+//! (the backward needs those transposes anyway).  Activations and
+//! gradients are therefore grouped along the contraction dimension
+//! exactly as the paper's per-token / per-block-128 scheme.  The weight
+//! `(K, N)` is grouped along its trailing storage axis N — the geometry
+//! `quant::quantize` packs and `kernels::qgemm` consumes — instead of the
+//! paper's contraction axis K; the *format table* above is followed
+//! exactly.  The python mirror of this engine
+//! (`python/compile/kernels/ref.py`, `NpRefModel`) shares the contract
+//! and is validated against jax autodiff through the repo's L2 model;
+//! the checked-in golden fixtures (`rust/tests/golden/`) are dumped from
+//! it and replayed by `rust/tests/refmodel_golden.rs`.
+//!
+//! # Architecture
+//!
+//! One family is implemented: the GPT-2-style pre-norm block (layernorm →
+//! fused-QKV causal attention → out-proj; layernorm → GELU MLP), learned
+//! positions, tied LM head, mean next-token cross-entropy — the same
+//! function as `python/compile/model.py`'s gpt2 family.  LLaMA presets
+//! are *proxied* onto this architecture (their geometry — layers, widths,
+//! heads, d_ff — is kept; rmsnorm/rope/swiglu are not replicated): the
+//! host engine is an oracle for the kernel stack, the precision recipes,
+//! and the schedule, not a bit-reproduction of the AOT artifacts.
+//!
+//! # Determinism
+//!
+//! Training is bit-identical at every `PALLAS_THREADS` setting and with
+//! the qgemm panel cache on or off: all parallel kernels preserve
+//! per-element accumulation order (see `kernels`), and everything else is
+//! sequential scalar code (pinned by `tests/refmodel_determinism.rs`).
+
+pub mod engine;
+pub mod model;
+pub mod presets;
+pub mod qlinear;
+
+use crate::formats::{FpFormat, Granularity};
+
+/// Host-model geometry (mirror of `python/compile/presets.py` presets and
+/// the manifest's `ModelInfo`, minus artifact bookkeeping).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RefConfig {
+    pub name: String,
+    /// "gpt2" | "llama" — the *preset* family; the host engine proxies
+    /// both onto the gpt2-style block (see module doc).
+    pub family: String,
+    pub vocab: usize,
+    pub layers: usize,
+    pub d_model: usize,
+    pub n_head: usize,
+    pub d_ff: usize,
+    pub seq: usize,
+}
+
+impl RefConfig {
+    pub fn head_dim(&self) -> usize {
+        debug_assert_eq!(self.d_model % self.n_head, 0);
+        self.d_model / self.n_head
+    }
+
+    /// Exact trainable-parameter count of the *preset* (family-faithful
+    /// mirror of `ModelConfig.param_count` — used by the table4 listing).
+    pub fn param_count(&self) -> usize {
+        let (d, f, v, l) = (self.d_model, self.d_ff, self.vocab, self.layers);
+        if self.family == "gpt2" {
+            let per_layer = 2 * 2 * d + d * 3 * d + 3 * d + d * d + d + d * f + f + f * d + d;
+            l * per_layer + v * d + self.seq * d + 2 * d
+        } else {
+            let per_layer = 2 * d + 3 * d * d + d * d + 2 * d * f + f * d;
+            l * per_layer + v * d + d
+        }
+    }
+}
+
+/// One operand-quantization spec: format + trailing-axis grouping.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QSpec {
+    pub fmt: FpFormat,
+    pub gran: Granularity,
+}
+
+/// Per-GEMM precision of one linear layer (mirror of python
+/// `LinearRecipe`): `None` = exact f32.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LinearPrec {
+    pub fwd: Option<QSpec>,
+    pub wgrad: Option<QSpec>,
+    pub agrad: Option<QSpec>,
+}
+
+impl LinearPrec {
+    pub const EXACT: LinearPrec = LinearPrec { fwd: None, wgrad: None, agrad: None };
+}
+
+/// A full module-precision recipe (one row of the paper's Table 2).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RecipePrec {
+    pub name: String,
+    pub attn: Option<QSpec>,
+    pub ffn: Option<QSpec>,
+    pub wgrad: Option<QSpec>,
+    pub agrad: Option<QSpec>,
+}
+
+impl RecipePrec {
+    /// The all-exact recipe (FP16 baseline / schedule target).
+    pub fn exact(name: &str) -> RecipePrec {
+        RecipePrec { name: name.into(), attn: None, ffn: None, wgrad: None, agrad: None }
+    }
+
+    pub fn attn_linear(&self) -> LinearPrec {
+        LinearPrec { fwd: self.attn, wgrad: self.wgrad, agrad: self.agrad }
+    }
+
+    pub fn ffn_linear(&self) -> LinearPrec {
+        LinearPrec { fwd: self.ffn, wgrad: self.wgrad, agrad: self.agrad }
+    }
+
+    /// Cost-model precision class of one knob — the single place the
+    /// format-width → {FP16, FP8, FP4} classification lives (display
+    /// labels and the table2/3 cost columns both derive from it).
+    pub fn prec_of(spec: &Option<QSpec>) -> crate::costmodel::Prec {
+        use crate::costmodel::Prec;
+        match spec {
+            None => Prec::Fp16,
+            Some(q) if q.fmt.bits() <= 4 => Prec::Fp4,
+            Some(_) => Prec::Fp8,
+        }
+    }
+
+    /// Display string for one knob ("FP4", "FP8", "FP16") — table rows.
+    pub fn fmt_name(spec: &Option<QSpec>) -> &'static str {
+        use crate::costmodel::Prec;
+        match Self::prec_of(spec) {
+            Prec::Fp16 => "FP16",
+            Prec::Fp8 => "FP8",
+            Prec::Fp4 => "FP4",
+        }
+    }
+}
+
+pub use engine::{train_host, HostRunResult};
+pub use model::RefModel;
+pub use qlinear::QLinear;

@@ -1,0 +1,693 @@
+//! The reference transformer: GPT-2-family pre-norm block with quantized
+//! linears, forward with full activation cache and manual backward —
+//! line-by-line port of `NpRefModel` in `python/compile/kernels/ref.py`
+//! (the executable spec, itself validated against jax autodiff through
+//! the repo's L2 model; see the module doc in `refmodel`).
+//!
+//! All heavy math routes through `kernels`: quantized forward GEMMs on
+//! `qgemm` (packed weights), f32 GEMMs on `matmul_into`, fake-quant on
+//! the fused LUT sweeps.  Attention, norms, GELU, softmax/CE are
+//! sequential scalar code — deterministic at any thread count by
+//! construction.
+
+use crate::tensor::{transpose_into, Tensor, TensorI32};
+use crate::util::rng::Rng;
+
+use super::qlinear::{QLinear, Scratch};
+use super::{RecipePrec, RefConfig};
+
+/// sqrt(2/pi), f64-computed then f32-cast (matches the numpy constant).
+const GELU_C: f32 = 0.797_884_56_f32;
+const GELU_A: f32 = 0.044_715_f32;
+const LN_EPS: f32 = 1e-5;
+
+pub struct Norm {
+    pub g: Vec<f32>,
+    pub b: Vec<f32>,
+}
+
+pub struct Block {
+    pub ln1: Norm,
+    pub qkv: QLinear,  // (d, 3d)
+    pub proj: QLinear, // (d, d)
+    pub ln2: Norm,
+    pub fc1: QLinear, // (d, f)
+    pub fc2: QLinear, // (f, d)
+}
+
+pub struct RefModel {
+    pub cfg: RefConfig,
+    recipe: RecipePrec,
+    pub wte: Tensor, // (V, d)
+    pub wpe: Tensor, // (T, d)
+    pub lnf: Norm,
+    pub blocks: Vec<Block>,
+}
+
+/// Gradients, one buffer per parameter (same shapes as the params).
+pub struct BlockGrads {
+    pub ln1_g: Vec<f32>,
+    pub ln1_b: Vec<f32>,
+    pub w_qkv: Vec<f32>,
+    pub b_qkv: Vec<f32>,
+    pub w_o: Vec<f32>,
+    pub b_o: Vec<f32>,
+    pub ln2_g: Vec<f32>,
+    pub ln2_b: Vec<f32>,
+    pub w_fc1: Vec<f32>,
+    pub b_fc1: Vec<f32>,
+    pub w_fc2: Vec<f32>,
+    pub b_fc2: Vec<f32>,
+}
+
+pub struct Grads {
+    pub wte: Vec<f32>,
+    pub wpe: Vec<f32>,
+    pub lnf_g: Vec<f32>,
+    pub lnf_b: Vec<f32>,
+    pub blocks: Vec<BlockGrads>,
+}
+
+impl Grads {
+    pub fn zeros(cfg: &RefConfig) -> Grads {
+        let (d, f, v, t) = (cfg.d_model, cfg.d_ff, cfg.vocab, cfg.seq);
+        Grads {
+            wte: vec![0.0; v * d],
+            wpe: vec![0.0; t * d],
+            lnf_g: vec![0.0; d],
+            lnf_b: vec![0.0; d],
+            blocks: (0..cfg.layers)
+                .map(|_| BlockGrads {
+                    ln1_g: vec![0.0; d],
+                    ln1_b: vec![0.0; d],
+                    w_qkv: vec![0.0; d * 3 * d],
+                    b_qkv: vec![0.0; 3 * d],
+                    w_o: vec![0.0; d * d],
+                    b_o: vec![0.0; d],
+                    ln2_g: vec![0.0; d],
+                    ln2_b: vec![0.0; d],
+                    w_fc1: vec![0.0; d * f],
+                    b_fc1: vec![0.0; f],
+                    w_fc2: vec![0.0; f * d],
+                    b_fc2: vec![0.0; d],
+                })
+                .collect(),
+        }
+    }
+
+    /// (name, grad) pairs in the canonical parameter order — names match
+    /// the python fixture keys (`w_qkv.0`, `ln_f_g`, …).
+    pub fn flat(&self) -> Vec<(String, &[f32])> {
+        let mut out: Vec<(String, &[f32])> = vec![
+            ("wte".into(), &self.wte[..]),
+            ("wpe".into(), &self.wpe[..]),
+            ("ln_f_g".into(), &self.lnf_g[..]),
+            ("ln_f_b".into(), &self.lnf_b[..]),
+        ];
+        for (i, b) in self.blocks.iter().enumerate() {
+            for (n, v) in [
+                ("ln1_g", &b.ln1_g),
+                ("ln1_b", &b.ln1_b),
+                ("w_qkv", &b.w_qkv),
+                ("b_qkv", &b.b_qkv),
+                ("w_o", &b.w_o),
+                ("b_o", &b.b_o),
+                ("ln2_g", &b.ln2_g),
+                ("ln2_b", &b.ln2_b),
+                ("w_fc1", &b.w_fc1),
+                ("b_fc1", &b.b_fc1),
+                ("w_fc2", &b.w_fc2),
+                ("b_fc2", &b.b_fc2),
+            ] {
+                out.push((format!("{n}.{i}"), &v[..]));
+            }
+        }
+        out
+    }
+}
+
+/// Per-layer forward cache (everything the backward reads).
+struct LayerCache {
+    h1: Vec<f32>,       // ln1 output (m, d) — qkv input
+    ln1_xhat: Vec<f32>, // (m, d)
+    ln1_inv: Vec<f32>,  // (m)
+    qkv: Vec<f32>,      // (m, 3d) incl. bias
+    probs: Vec<f32>,    // (b*h, t, t) causal attention probabilities
+    ctx: Vec<f32>,      // (m, d) — proj input
+    x1: Vec<f32>,       // post-attention residual (m, d)
+    ln2_xhat: Vec<f32>,
+    ln2_inv: Vec<f32>,
+    h2: Vec<f32>,     // ln2 output (m, d) — fc1 input
+    u: Vec<f32>,      // fc1 output incl. bias (m, f)
+    tanh_u: Vec<f32>, // tanh of the GELU inner (m, f)
+    a: Vec<f32>,      // GELU output (m, f) — fc2 input
+    x2: Vec<f32>,     // block output (m, d)
+}
+
+/// Full forward artifacts of one batch.
+pub struct Cache {
+    pub b: usize,
+    pub t: usize,
+    pub x0: Vec<f32>, // embedding output (m, d)
+    layers: Vec<LayerCache>,
+    lnf_xhat: Vec<f32>,
+    lnf_inv: Vec<f32>,
+    pub hf: Vec<f32>,     // final hidden (m, d)
+    pub logits: Vec<f32>, // (m, V)
+}
+
+impl Cache {
+    /// Block output of layer `i` (m × d) — golden-fixture comparisons.
+    pub fn block_out(&self, i: usize) -> &[f32] {
+        &self.layers[i].x2
+    }
+
+    /// Last-layer attention probabilities, (b*h, t, t).
+    pub fn attn_probs(&self) -> &[f32] {
+        &self.layers.last().expect("no layers").probs
+    }
+}
+
+// --- scalar building blocks -------------------------------------------------
+
+fn layernorm_fwd(
+    x: &[f32],
+    g: &[f32],
+    b: &[f32],
+    m: usize,
+    d: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut y = vec![0.0f32; m * d];
+    let mut xhat = vec![0.0f32; m * d];
+    let mut inv = vec![0.0f32; m];
+    for r in 0..m {
+        let row = &x[r * d..(r + 1) * d];
+        let mu = row.iter().sum::<f32>() / d as f32;
+        let var = row.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+        let iv = 1.0 / (var + LN_EPS).sqrt();
+        inv[r] = iv;
+        for j in 0..d {
+            let xh = (row[j] - mu) * iv;
+            xhat[r * d + j] = xh;
+            y[r * d + j] = xh * g[j] + b[j];
+        }
+    }
+    (y, xhat, inv)
+}
+
+/// Returns dx; accumulates dg/db.
+fn layernorm_bwd(
+    dy: &[f32],
+    g: &[f32],
+    xhat: &[f32],
+    inv: &[f32],
+    m: usize,
+    d: usize,
+    dg: &mut [f32],
+    db: &mut [f32],
+) -> Vec<f32> {
+    let mut dx = vec![0.0f32; m * d];
+    for r in 0..m {
+        let dyr = &dy[r * d..(r + 1) * d];
+        let xhr = &xhat[r * d..(r + 1) * d];
+        let mut m1 = 0.0f32;
+        let mut m2 = 0.0f32;
+        for j in 0..d {
+            let dxh = dyr[j] * g[j];
+            m1 += dxh;
+            m2 += dxh * xhr[j];
+        }
+        m1 /= d as f32;
+        m2 /= d as f32;
+        let iv = inv[r];
+        for j in 0..d {
+            let dxh = dyr[j] * g[j];
+            dx[r * d + j] = iv * (dxh - m1 - xhr[j] * m2);
+            dg[j] += dyr[j] * xhr[j];
+            db[j] += dyr[j];
+        }
+    }
+    dx
+}
+
+fn gelu_fwd(u: &[f32]) -> (Vec<f32>, Vec<f32>) {
+    let mut a = vec![0.0f32; u.len()];
+    let mut tv = vec![0.0f32; u.len()];
+    for (i, &x) in u.iter().enumerate() {
+        let t = (GELU_C * (x + GELU_A * x * x * x)).tanh();
+        tv[i] = t;
+        a[i] = 0.5 * x * (1.0 + t);
+    }
+    (a, tv)
+}
+
+fn gelu_bwd(dy: &[f32], u: &[f32], tanh_u: &[f32]) -> Vec<f32> {
+    let mut du = vec![0.0f32; u.len()];
+    for i in 0..u.len() {
+        let (x, t) = (u[i], tanh_u[i]);
+        let d_inner = GELU_C * (1.0 + 3.0 * GELU_A * x * x);
+        du[i] = dy[i] * (0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * d_inner);
+    }
+    du
+}
+
+// --- the model ---------------------------------------------------------------
+
+impl RefModel {
+    /// Seeded GPT-2-style init (N(0, 0.02), residual projections scaled by
+    /// 1/sqrt(2L), unit gains, zero biases) under the given recipe.
+    pub fn new(cfg: RefConfig, recipe: RecipePrec, seed: u64) -> RefModel {
+        let (d, f, v, t, l) = (cfg.d_model, cfg.d_ff, cfg.vocab, cfg.seq, cfg.layers);
+        let mut rng = Rng::new(seed ^ 0x5EED_40DE);
+        let std = 0.02f32;
+        let resid = std / (2.0 * l as f32).sqrt();
+        let wte = Tensor::randn(&[v, d], std, &mut rng);
+        let wpe = Tensor::randn(&[t, d], std, &mut rng);
+        let norm = |dd: usize| Norm { g: vec![1.0; dd], b: vec![0.0; dd] };
+        let mut blocks = Vec::with_capacity(l);
+        for _ in 0..l {
+            let al = recipe.attn_linear();
+            let fl = recipe.ffn_linear();
+            blocks.push(Block {
+                ln1: norm(d),
+                qkv: QLinear::new(Tensor::randn(&[d, 3 * d], std, &mut rng), vec![0.0; 3 * d], al),
+                proj: QLinear::new(Tensor::randn(&[d, d], resid, &mut rng), vec![0.0; d], al),
+                ln2: norm(d),
+                fc1: QLinear::new(Tensor::randn(&[d, f], std, &mut rng), vec![0.0; f], fl),
+                fc2: QLinear::new(Tensor::randn(&[f, d], resid, &mut rng), vec![0.0; d], fl),
+            });
+        }
+        RefModel { cfg, recipe, wte, wpe, lnf: norm(d), blocks }
+    }
+
+    pub fn recipe(&self) -> &RecipePrec {
+        &self.recipe
+    }
+
+    /// Swap the precision recipe on every linear (the §3.3 stage
+    /// boundary): device state — master weights, moments — is untouched,
+    /// exactly as the PJRT schedule swap flows buffers across executables.
+    pub fn set_recipe(&mut self, recipe: RecipePrec) {
+        for blk in &mut self.blocks {
+            blk.qkv.set_prec(recipe.attn_linear());
+            blk.proj.set_prec(recipe.attn_linear());
+            blk.fc1.set_prec(recipe.ffn_linear());
+            blk.fc2.set_prec(recipe.ffn_linear());
+        }
+        self.recipe = recipe;
+    }
+
+    /// Re-pack every linear's quantized state from the master weights —
+    /// call after each optimizer update.
+    pub fn refresh_packed(&mut self) {
+        for blk in &mut self.blocks {
+            blk.qkv.refresh();
+            blk.proj.refresh();
+            blk.fc1.refresh();
+            blk.fc2.refresh();
+        }
+    }
+
+    /// (name, master-parameter) pairs in canonical order (mutable: the
+    /// optimizer walks this, then calls [`RefModel::refresh_packed`]).
+    pub fn params_mut(&mut self) -> Vec<(String, &mut Vec<f32>)> {
+        let mut out: Vec<(String, &mut Vec<f32>)> = vec![
+            ("wte".into(), &mut self.wte.data),
+            ("wpe".into(), &mut self.wpe.data),
+            ("ln_f_g".into(), &mut self.lnf.g),
+            ("ln_f_b".into(), &mut self.lnf.b),
+        ];
+        for (i, b) in self.blocks.iter_mut().enumerate() {
+            let Block { ln1, qkv, proj, ln2, fc1, fc2 } = b;
+            for (n, v) in [
+                ("ln1_g", &mut ln1.g),
+                ("ln1_b", &mut ln1.b),
+                ("w_qkv", &mut qkv.w.data),
+                ("b_qkv", &mut qkv.b),
+                ("w_o", &mut proj.w.data),
+                ("b_o", &mut proj.b),
+                ("ln2_g", &mut ln2.g),
+                ("ln2_b", &mut ln2.b),
+                ("w_fc1", &mut fc1.w.data),
+                ("b_fc1", &mut fc1.b),
+                ("w_fc2", &mut fc2.w.data),
+                ("b_fc2", &mut fc2.b),
+            ] {
+                out.push((format!("{n}.{i}"), v));
+            }
+        }
+        out
+    }
+
+    /// Overwrite named parameters in bulk (fixture/checkpoint loading)
+    /// with a **single** re-pack at the end; panics on unknown names or
+    /// shape mismatches.
+    pub fn set_params(&mut self, entries: &[(&str, &[f32])]) {
+        {
+            let mut params = self.params_mut();
+            for (name, data) in entries {
+                let (_, v) = params
+                    .iter_mut()
+                    .find(|(n, _)| n == name)
+                    .unwrap_or_else(|| panic!("unknown param {name}"));
+                assert_eq!(v.len(), data.len(), "param {name} len");
+                v.copy_from_slice(data);
+            }
+        }
+        self.refresh_packed();
+    }
+
+    /// Overwrite one named parameter — [`RefModel::set_params`] for a
+    /// single entry (each call re-packs; prefer the bulk form in loops).
+    pub fn set_param(&mut self, name: &str, data: &[f32]) {
+        self.set_params(&[(name, data)]);
+    }
+
+    /// Forward pass.  `tokens` is (b × t) row-major; `exact` bypasses all
+    /// quantizers (eval / feature extraction).
+    pub fn forward(&self, tokens: &[i32], b: usize, t: usize, exact: bool, sc: &mut Scratch) -> Cache {
+        let cfg = &self.cfg;
+        let (d, f, h) = (cfg.d_model, cfg.d_ff, cfg.n_head);
+        let dh = cfg.head_dim();
+        let m = b * t;
+        assert_eq!(tokens.len(), m);
+        assert!(t <= cfg.seq, "t {t} > seq {}", cfg.seq);
+        let scale = 1.0 / (dh as f32).sqrt();
+
+        // embedding: wte[token] + wpe[pos]
+        let mut x = vec![0.0f32; m * d];
+        for (row, &tok) in tokens.iter().enumerate() {
+            let tok = tok as usize;
+            assert!(tok < cfg.vocab, "token {tok} out of vocab");
+            let pos = row % t;
+            let wt = &self.wte.data[tok * d..(tok + 1) * d];
+            let wp = &self.wpe.data[pos * d..(pos + 1) * d];
+            for j in 0..d {
+                x[row * d + j] = wt[j] + wp[j];
+            }
+        }
+        let x0 = x.clone();
+
+        let mut layers = Vec::with_capacity(cfg.layers);
+        for blk in &self.blocks {
+            // ln1 -> fused qkv
+            let (h1, ln1_xhat, ln1_inv) = layernorm_fwd(&x, &blk.ln1.g, &blk.ln1.b, m, d);
+            let mut qkv = vec![0.0f32; m * 3 * d];
+            blk.qkv.forward_into(&h1, m, exact, &mut qkv, sc);
+
+            // exact causal attention per (batch, head)
+            let mut probs = vec![0.0f32; b * h * t * t];
+            let mut ctx = vec![0.0f32; m * d];
+            let mut row_scores = vec![0.0f32; t];
+            for bi in 0..b {
+                for hi in 0..h {
+                    let poff = (bi * h + hi) * t * t;
+                    for i in 0..t {
+                        let qrow = &qkv[(bi * t + i) * 3 * d + hi * dh..][..dh];
+                        let mut smax = f32::NEG_INFINITY;
+                        for j in 0..=i {
+                            let krow = &qkv[(bi * t + j) * 3 * d + d + hi * dh..][..dh];
+                            let mut s = 0.0f32;
+                            for u in 0..dh {
+                                s += qrow[u] * krow[u];
+                            }
+                            s *= scale;
+                            row_scores[j] = s;
+                            smax = smax.max(s);
+                        }
+                        let mut z = 0.0f32;
+                        for j in 0..=i {
+                            let e = (row_scores[j] - smax).exp();
+                            row_scores[j] = e;
+                            z += e;
+                        }
+                        for j in 0..=i {
+                            probs[poff + i * t + j] = row_scores[j] / z;
+                        }
+                        let crow = &mut ctx[(bi * t + i) * d + hi * dh..][..dh];
+                        for j in 0..=i {
+                            let p = probs[poff + i * t + j];
+                            let vrow = &qkv[(bi * t + j) * 3 * d + 2 * d + hi * dh..][..dh];
+                            for u in 0..dh {
+                                crow[u] += p * vrow[u];
+                            }
+                        }
+                    }
+                }
+            }
+
+            // out-proj + residual
+            let mut attn = vec![0.0f32; m * d];
+            blk.proj.forward_into(&ctx, m, exact, &mut attn, sc);
+            let mut x1 = vec![0.0f32; m * d];
+            for i in 0..m * d {
+                x1[i] = x[i] + attn[i];
+            }
+
+            // ln2 -> GELU MLP + residual
+            let (h2, ln2_xhat, ln2_inv) = layernorm_fwd(&x1, &blk.ln2.g, &blk.ln2.b, m, d);
+            let mut u = vec![0.0f32; m * f];
+            blk.fc1.forward_into(&h2, m, exact, &mut u, sc);
+            let (a, tanh_u) = gelu_fwd(&u);
+            let mut mo = vec![0.0f32; m * d];
+            blk.fc2.forward_into(&a, m, exact, &mut mo, sc);
+            let mut x2 = vec![0.0f32; m * d];
+            for i in 0..m * d {
+                x2[i] = x1[i] + mo[i];
+            }
+
+            x = x2.clone();
+            layers.push(LayerCache {
+                h1,
+                ln1_xhat,
+                ln1_inv,
+                qkv,
+                probs,
+                ctx,
+                x1,
+                ln2_xhat,
+                ln2_inv,
+                h2,
+                u,
+                tanh_u,
+                a,
+                x2,
+            });
+        }
+
+        let (hf, lnf_xhat, lnf_inv) = layernorm_fwd(&x, &self.lnf.g, &self.lnf.b, m, d);
+        // tied LM head (exact f32): logits = hf @ wte^T, the transpose
+        // re-derived into the reusable scratch buffer (wte changes every
+        // optimizer step, but the allocation need not)
+        let v = cfg.vocab;
+        transpose_into(&self.wte.data, v, d, &mut sc.wte_t);
+        let mut logits = vec![0.0f32; m * v];
+        crate::kernels::matmul_into(&hf, &sc.wte_t, m, d, v, &mut logits);
+
+        Cache { b, t, x0, layers, lnf_xhat, lnf_inv, hf, logits }
+    }
+
+    /// Mean next-token cross-entropy + dlogits for a (b × (t+1)) batch.
+    fn ce_loss(&self, cache: &Cache, targets: &[i32]) -> (f32, Vec<f32>) {
+        let v = self.cfg.vocab;
+        let m = cache.b * cache.t;
+        assert_eq!(targets.len(), m);
+        let mut dlogits = vec![0.0f32; m * v];
+        let mut loss = 0.0f32;
+        for r in 0..m {
+            let row = &cache.logits[r * v..(r + 1) * v];
+            let lmax = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut z = 0.0f32;
+            for &l in row {
+                z += (l - lmax).exp();
+            }
+            let tgt = targets[r] as usize;
+            loss += -((row[tgt] - lmax) - z.ln());
+            let drow = &mut dlogits[r * v..(r + 1) * v];
+            for (j, &l) in row.iter().enumerate() {
+                drow[j] = (l - lmax).exp() / z;
+            }
+            drow[tgt] -= 1.0;
+        }
+        let n = m as f32;
+        for dv in dlogits.iter_mut() {
+            *dv /= n;
+        }
+        (loss / n, dlogits)
+    }
+
+    /// Training forward + backward: mean next-token CE loss and gradients
+    /// for every parameter.  `batch` is (b × (t+1)) int32.
+    pub fn loss_and_grads(&self, batch: &TensorI32, sc: &mut Scratch) -> (f32, Grads, Cache) {
+        let (b, t1) = (batch.shape[0], batch.shape[1]);
+        let t = t1 - 1;
+        let cfg = &self.cfg;
+        let (d, h, v) = (cfg.d_model, cfg.n_head, cfg.vocab);
+        let dh = cfg.head_dim();
+        let scale = 1.0 / (dh as f32).sqrt();
+        let m = b * t;
+        let mut tokens = Vec::with_capacity(m);
+        let mut targets = Vec::with_capacity(m);
+        for bi in 0..b {
+            tokens.extend_from_slice(&batch.data[bi * t1..bi * t1 + t]);
+            targets.extend_from_slice(&batch.data[bi * t1 + 1..bi * t1 + t + 1]);
+        }
+
+        let cache = self.forward(&tokens, b, t, false, sc);
+        let (loss, dlogits) = self.ce_loss(&cache, &targets);
+        let mut g = Grads::zeros(cfg);
+
+        // tied head: dwte += dlogits^T @ hf ; dhf = dlogits @ wte
+        let mut dl_t = Vec::new();
+        transpose_into(&dlogits, m, v, &mut dl_t);
+        let mut dwte_head = vec![0.0f32; v * d];
+        crate::kernels::matmul_into(&dl_t, &cache.hf, v, m, d, &mut dwte_head);
+        for (gv, hv) in g.wte.iter_mut().zip(&dwte_head) {
+            *gv += hv;
+        }
+        let mut dhf = vec![0.0f32; m * d];
+        crate::kernels::matmul_into(&dlogits, &self.wte.data, m, v, d, &mut dhf);
+
+        let mut dx = layernorm_bwd(
+            &dhf, &self.lnf.g, &cache.lnf_xhat, &cache.lnf_inv, m, d, &mut g.lnf_g, &mut g.lnf_b,
+        );
+
+        for (li, blk) in self.blocks.iter().enumerate().rev() {
+            let cc = &cache.layers[li];
+            let bg = &mut g.blocks[li];
+            let f = cfg.d_ff;
+
+            // MLP branch: x2 = x1 + fc2(gelu(fc1(ln2(x1))))
+            let mut da = vec![0.0f32; m * f];
+            blk.fc2
+                .backward_into(&cc.a, &dx, m, &mut da, &mut bg.w_fc2, &mut bg.b_fc2, sc);
+            let du = gelu_bwd(&da, &cc.u, &cc.tanh_u);
+            let mut dh2 = vec![0.0f32; m * d];
+            blk.fc1
+                .backward_into(&cc.h2, &du, m, &mut dh2, &mut bg.w_fc1, &mut bg.b_fc1, sc);
+            let mut dx1 = layernorm_bwd(
+                &dh2, &blk.ln2.g, &cc.ln2_xhat, &cc.ln2_inv, m, d, &mut bg.ln2_g, &mut bg.ln2_b,
+            );
+            for i in 0..m * d {
+                dx1[i] += dx[i]; // residual
+            }
+
+            // attention branch: x1 = x + proj(ctx)
+            let mut dctx = vec![0.0f32; m * d];
+            blk.proj
+                .backward_into(&cc.ctx, &dx1, m, &mut dctx, &mut bg.w_o, &mut bg.b_o, sc);
+
+            // exact attention backward per (batch, head)
+            let mut dqkv = vec![0.0f32; m * 3 * d];
+            let mut dp = vec![0.0f32; t];
+            for bi in 0..b {
+                for hi in 0..h {
+                    let poff = (bi * h + hi) * t * t;
+                    for i in 0..t {
+                        let drow = &dctx[(bi * t + i) * d + hi * dh..][..dh];
+                        // dp[j] = dctx_i . v_j ; dv_j += p_ij * dctx_i
+                        let mut dot_pp = 0.0f32;
+                        for j in 0..=i {
+                            let p = cc.probs[poff + i * t + j];
+                            let vrow = &cc.qkv[(bi * t + j) * 3 * d + 2 * d + hi * dh..][..dh];
+                            let mut s = 0.0f32;
+                            for u in 0..dh {
+                                s += drow[u] * vrow[u];
+                            }
+                            dp[j] = s;
+                            dot_pp += s * p;
+                        }
+                        for j in 0..=i {
+                            let p = cc.probs[poff + i * t + j];
+                            let dsc = p * (dp[j] - dot_pp) * scale;
+                            // dv
+                            let dvrow =
+                                &mut dqkv[(bi * t + j) * 3 * d + 2 * d + hi * dh..][..dh];
+                            for u in 0..dh {
+                                dvrow[u] += p * drow[u];
+                            }
+                            // dq_i += dsc * k_j ; dk_j += dsc * q_i
+                            let krow = &cc.qkv[(bi * t + j) * 3 * d + d + hi * dh..][..dh];
+                            let qrow = &cc.qkv[(bi * t + i) * 3 * d + hi * dh..][..dh];
+                            for u in 0..dh {
+                                dqkv[(bi * t + i) * 3 * d + hi * dh + u] += dsc * krow[u];
+                                dqkv[(bi * t + j) * 3 * d + d + hi * dh + u] += dsc * qrow[u];
+                            }
+                        }
+                    }
+                }
+            }
+
+            let mut dh1 = vec![0.0f32; m * d];
+            blk.qkv
+                .backward_into(&cc.h1, &dqkv, m, &mut dh1, &mut bg.w_qkv, &mut bg.b_qkv, sc);
+            let dxr = layernorm_bwd(
+                &dh1, &blk.ln1.g, &cc.ln1_xhat, &cc.ln1_inv, m, d, &mut bg.ln1_g, &mut bg.ln1_b,
+            );
+            dx = dx1;
+            for i in 0..m * d {
+                dx[i] += dxr[i];
+            }
+        }
+
+        // embedding gathers
+        for (row, &tok) in tokens.iter().enumerate() {
+            let tok = tok as usize;
+            let pos = row % t;
+            for j in 0..d {
+                g.wte[tok * d + j] += dx[row * d + j];
+                g.wpe[pos * d + j] += dx[row * d + j];
+            }
+        }
+
+        (loss, g, cache)
+    }
+
+    /// Summed next-token NLL + token count under the **full-precision**
+    /// forward (evaluation measures the learned weights, not the training
+    /// noise — train.py `eval_step`).
+    pub fn eval_nll(&self, batch: &TensorI32, sc: &mut Scratch) -> (f64, usize) {
+        let (b, t1) = (batch.shape[0], batch.shape[1]);
+        let t = t1 - 1;
+        let m = b * t;
+        let v = self.cfg.vocab;
+        let mut tokens = Vec::with_capacity(m);
+        let mut targets = Vec::with_capacity(m);
+        for bi in 0..b {
+            tokens.extend_from_slice(&batch.data[bi * t1..bi * t1 + t]);
+            targets.extend_from_slice(&batch.data[bi * t1 + 1..bi * t1 + t + 1]);
+        }
+        let cache = self.forward(&tokens, b, t, true, sc);
+        let mut sum = 0.0f64;
+        for r in 0..m {
+            let row = &cache.logits[r * v..(r + 1) * v];
+            let lmax = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut z = 0.0f32;
+            for &l in row {
+                z += (l - lmax).exp();
+            }
+            sum += -((row[targets[r] as usize] - lmax) - z.ln()) as f64;
+        }
+        (sum, m)
+    }
+
+    /// Mean-pooled final hidden states (b × d) under the full-precision
+    /// forward — the probe-feature path (train.py `features_step`).
+    pub fn hidden_features(&self, tokens: &[i32], b: usize, t: usize, sc: &mut Scratch) -> Vec<f32> {
+        let d = self.cfg.d_model;
+        let cache = self.forward(tokens, b, t, true, sc);
+        let mut out = vec![0.0f32; b * d];
+        for bi in 0..b {
+            for ti in 0..t {
+                let row = &cache.hf[(bi * t + ti) * d..(bi * t + ti + 1) * d];
+                for j in 0..d {
+                    out[bi * d + j] += row[j];
+                }
+            }
+            for j in 0..d {
+                out[bi * d + j] /= t as f32;
+            }
+        }
+        out
+    }
+}

@@ -1,0 +1,163 @@
+//! Built-in model presets and precision recipes — the rust mirror of
+//! `python/compile/presets.py`, so the `--host` engine can run with no
+//! artifacts directory (and therefore no manifest) present.  Geometry and
+//! recipe tables must stay in sync with the python source of truth; the
+//! values are small enough to eyeball.
+
+use crate::formats::{Granularity, FP4_E2M1, FP8_E4M3};
+
+use super::{QSpec, RecipePrec, RefConfig};
+
+/// Training batch (python `presets.BATCH`).
+pub const BATCH: usize = 8;
+
+/// Synthetic-corpus BPE vocabulary (python `presets.VOCAB`).
+pub const VOCAB: usize = 512;
+
+/// Proxy context length (python `presets.SEQ`).
+pub const SEQ: usize = 128;
+
+/// Table 2 recipe rows, in paper order (python `presets.TABLE2_ROWS`).
+pub const TABLE2_ROWS: [&str; 5] = ["fp4_fp4_fp4", "fp4_fp8_fp8", "fp8_fp4_fp4", "ours", "fp16"];
+
+/// All preset names, sorted (table4 listing).
+pub fn model_names() -> Vec<&'static str> {
+    let mut v = vec![
+        "gpt2-s-proxy",
+        "gpt2-m-proxy",
+        "gpt2-l-proxy",
+        "llama-125m-proxy",
+        "llama-1b-proxy",
+        "paper-gpt2-125m",
+        "paper-llama-125m",
+    ];
+    v.sort();
+    v
+}
+
+/// Geometry of a model preset.
+pub fn model(name: &str) -> Option<RefConfig> {
+    let c = |family: &str, vocab, layers, d_model, n_head, d_ff, seq| RefConfig {
+        name: name.to_string(),
+        family: family.to_string(),
+        vocab,
+        layers,
+        d_model,
+        n_head,
+        d_ff,
+        seq,
+    };
+    match name {
+        "gpt2-s-proxy" => Some(c("gpt2", VOCAB, 2, 128, 4, 512, SEQ)),
+        "gpt2-m-proxy" => Some(c("gpt2", VOCAB, 4, 128, 4, 512, SEQ)),
+        "gpt2-l-proxy" => Some(c("gpt2", VOCAB, 4, 256, 8, 1024, SEQ)),
+        "llama-125m-proxy" => Some(c("llama", VOCAB, 2, 128, 4, 384, SEQ)),
+        "llama-1b-proxy" => Some(c("llama", VOCAB, 4, 256, 8, 640, SEQ)),
+        "paper-gpt2-125m" => Some(c("gpt2", 8192, 12, 768, 12, 3072, 1024)),
+        "paper-llama-125m" => Some(c("llama", 8192, 12, 768, 12, 3072, 2048)),
+        _ => None,
+    }
+}
+
+const FP4B: QSpec = QSpec { fmt: FP4_E2M1, gran: Granularity::PerBlock(128) };
+const FP8B: QSpec = QSpec { fmt: FP8_E4M3, gran: Granularity::PerBlock(128) };
+const FP4T: QSpec = QSpec { fmt: FP4_E2M1, gran: Granularity::PerRow };
+const FP8T: QSpec = QSpec { fmt: FP8_E4M3, gran: Granularity::PerRow };
+
+/// All recipe names, sorted.
+pub fn recipe_names() -> Vec<&'static str> {
+    let mut v = vec![
+        "fp16",
+        "ours",
+        "fp4_fp4_fp4",
+        "fp4_fp8_fp8",
+        "fp8_fp4_fp4",
+        "fp4_token",
+        "ours_token",
+        "fp4_agrad",
+    ];
+    v.sort();
+    v
+}
+
+/// A precision recipe by name (python `presets.RECIPES`).
+pub fn recipe(name: &str) -> Option<RecipePrec> {
+    let r = |attn, ffn, wgrad, agrad| {
+        Some(RecipePrec { name: name.to_string(), attn, ffn, wgrad, agrad })
+    };
+    match name {
+        "fp16" => r(None, None, None, None),
+        // headline recipe (§3, Tables 1 & 3): attention FP8, FFN FP4
+        // per-block, weight-grad FP8, act-grad exact
+        "ours" => r(Some(FP8B), Some(FP4B), Some(FP8B), None),
+        // Table 2 ablation rows (attn / ffn / backward)
+        "fp4_fp4_fp4" => r(Some(FP4B), Some(FP4B), Some(FP4B), None),
+        "fp4_fp8_fp8" => r(Some(FP4B), Some(FP8B), Some(FP8B), None),
+        "fp8_fp4_fp4" => r(Some(FP8B), Some(FP4B), Some(FP4B), None),
+        // Appendix-B per-token strategy + granularity ablation
+        "fp4_token" => r(Some(FP4T), Some(FP4T), Some(FP4T), None),
+        "ours_token" => r(Some(FP8T), Some(FP4T), Some(FP8T), None),
+        // stress: quantizing the act-grad too (paper: breaks convergence)
+        "fp4_agrad" => r(Some(FP8B), Some(FP4B), Some(FP8B), Some(FP4T)),
+        _ => None,
+    }
+}
+
+/// (attn, ffn, wgrad, agrad) format display names for a recipe — the
+/// strings the table2/presets listings print ("FP16" when exact).
+pub fn recipe_fmts(r: &RecipePrec) -> (&'static str, &'static str, &'static str, &'static str) {
+    (
+        RecipePrec::fmt_name(&r.attn),
+        RecipePrec::fmt_name(&r.ffn),
+        RecipePrec::fmt_name(&r.wgrad),
+        RecipePrec::fmt_name(&r.agrad),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve_and_divide_heads() {
+        for name in model_names() {
+            let m = model(name).unwrap();
+            assert_eq!(m.d_model % m.n_head, 0, "{name}");
+            assert!(m.param_count() > 0);
+        }
+        assert!(model("nope").is_none());
+    }
+
+    #[test]
+    fn proxy_widths_are_block_aligned() {
+        // per-block-128 grouping must divide every proxy contraction dim
+        for name in ["gpt2-s-proxy", "gpt2-m-proxy", "gpt2-l-proxy", "llama-125m-proxy", "llama-1b-proxy"] {
+            let m = model(name).unwrap();
+            assert_eq!(m.d_model % 128, 0, "{name} d_model");
+            assert_eq!(m.d_ff % 128, 0, "{name} d_ff");
+            assert_eq!((BATCH * m.seq) % 128, 0, "{name} tokens");
+        }
+    }
+
+    #[test]
+    fn recipes_resolve() {
+        for name in recipe_names() {
+            let r = recipe(name).unwrap();
+            assert_eq!(r.name, name);
+        }
+        for name in TABLE2_ROWS {
+            assert!(recipe(name).is_some(), "{name}");
+        }
+        let ours = recipe("ours").unwrap();
+        assert_eq!(recipe_fmts(&ours), ("FP8", "FP4", "FP8", "FP16"));
+        assert!(recipe("fp16").unwrap().attn.is_none());
+    }
+
+    #[test]
+    fn capacity_ordering_strict() {
+        let pc = |n: &str| model(n).unwrap().param_count();
+        assert!(pc("gpt2-s-proxy") < pc("gpt2-m-proxy"));
+        assert!(pc("gpt2-m-proxy") < pc("gpt2-l-proxy"));
+        assert!(pc("llama-125m-proxy") < pc("llama-1b-proxy"));
+    }
+}

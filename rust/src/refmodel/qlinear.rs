@@ -1,0 +1,380 @@
+//! The quantized linear layer of the reference engine — rust mirror of
+//! `python/compile/qlinear.py` (and of `NpRefModel`'s `np_qlinear_*`
+//! functions, the executable spec).
+//!
+//! A linear `y = x @ w (+ b)` owns three GEMMs per training step:
+//!
+//! * forward     `y  = Qf(x)  @ Qf(w)`   — `Qf(x)` via `kernels::fused`
+//!   fake-quant along the contraction axis, `Qf(w)` consumed **packed**
+//!   by `kernels::qgemm` (the f32 weight copy is never materialized on
+//!   the forward path);
+//! * act-grad    `dx = Qa(g)  @ Qf(w)^T` — against the cached transposed
+//!   decode of the *same* packed values (straight-through-consistent);
+//! * weight-grad `dw = Qb(x)^T @ Qb(g)`  — both operands fake-quantized
+//!   along the token (contraction) axis after the transposes the GEMM
+//!   needs anyway.
+//!
+//! Master weights stay f32; `refresh()` re-packs after every optimizer
+//! update.  The bias is added outside the quantized GEMM (exact), as in
+//! the python layer.
+
+use crate::kernels::{self, Workspace};
+use crate::quant::{self, GranSpec, QuantizedTensor};
+use crate::tensor::{transpose_into, Tensor};
+
+use super::{LinearPrec, QSpec};
+
+/// Reusable buffers for one model's qlinear/model calls plus the shared
+/// qgemm workspace.  The default has **no** panel cache: the training
+/// engine re-packs weights every optimizer step, so cached panels could
+/// never be reused across steps (and eval / feature extraction run the
+/// exact forward, which never touches qgemm).  Use
+/// [`Scratch::with_panel_cache`] when repeatedly GEMM-ing quantized
+/// against *unchanged* packed weights (fixed-weight inference, the
+/// determinism tests' cache-on arm) — same bits either way.
+#[derive(Default)]
+pub struct Scratch {
+    pub ws: Workspace,
+    xt: Vec<f32>,
+    gt: Vec<f32>,
+    gq: Vec<f32>,
+    /// Transposed tied-head weight, reused by `RefModel::forward`.
+    pub(super) wte_t: Vec<f32>,
+}
+
+impl Scratch {
+    pub fn with_panel_cache(cap_bytes: usize) -> Scratch {
+        Scratch { ws: Workspace::with_panel_cache(cap_bytes), ..Scratch::default() }
+    }
+}
+
+fn fq(x: &[f32], rows: usize, cols: usize, spec: &QSpec) -> Vec<f32> {
+    kernels::fake_quant_rows_auto(x, rows, cols, spec.fmt, spec.gran)
+}
+
+pub struct QLinear {
+    /// Master weight, (k, n) row-major f32.
+    pub w: Tensor,
+    /// Bias, length n (exact f32).
+    pub b: Vec<f32>,
+    prec: LinearPrec,
+    /// Forward-format packed weights (`None` when the forward is exact).
+    packed: Option<QuantizedTensor>,
+    /// (n, k): the transposed f32 weight the dx GEMM multiplies against —
+    /// `dequantize(packed)^T` when quantized (same values the forward
+    /// decodes), plain `w^T` when exact.
+    wt: Vec<f32>,
+}
+
+impl QLinear {
+    pub fn new(w: Tensor, b: Vec<f32>, prec: LinearPrec) -> QLinear {
+        assert_eq!(w.rank(), 2);
+        assert_eq!(w.shape[1], b.len());
+        let mut l = QLinear { w, b, prec, packed: None, wt: Vec::new() };
+        l.refresh();
+        l
+    }
+
+    pub fn in_dim(&self) -> usize {
+        self.w.shape[0]
+    }
+
+    pub fn out_dim(&self) -> usize {
+        self.w.shape[1]
+    }
+
+    pub fn prec(&self) -> LinearPrec {
+        self.prec
+    }
+
+    /// Swap the precision recipe (the §3.3 stage boundary) and re-derive
+    /// the packed state.
+    pub fn set_prec(&mut self, prec: LinearPrec) {
+        self.prec = prec;
+        self.refresh();
+    }
+
+    /// Re-derive packed weights + the transposed backward copy from the
+    /// master weight.  Must be called after every master-weight update
+    /// (the engine does, once per optimizer step).
+    pub fn refresh(&mut self) {
+        let (k, n) = (self.w.shape[0], self.w.shape[1]);
+        match self.prec.fwd {
+            Some(QSpec { fmt, gran }) => {
+                let q = quant::quantize(&self.w, fmt, GranSpec::from_granularity(gran));
+                let dq = quant::dequantize(&q);
+                transpose_into(&dq.data, k, n, &mut self.wt);
+                self.packed = Some(q);
+            }
+            None => {
+                transpose_into(&self.w.data, k, n, &mut self.wt);
+                self.packed = None;
+            }
+        }
+    }
+
+    /// `y = Qf(x) @ Qf(w) + b` into `out` (m × n).  With `exact` the
+    /// quantizers are bypassed (full-precision eval forward, §3.3
+    /// discussion: evaluation measures the learned weights, not the
+    /// training noise).
+    pub fn forward_into(&self, x: &[f32], m: usize, exact: bool, out: &mut [f32], sc: &mut Scratch) {
+        let (k, n) = (self.w.shape[0], self.w.shape[1]);
+        assert_eq!(x.len(), m * k);
+        assert_eq!(out.len(), m * n);
+        match (&self.packed, exact) {
+            (Some(q), false) => {
+                let spec = self.prec.fwd.as_ref().unwrap();
+                let xq = fq(x, m, k, spec);
+                kernels::qgemm_into(&xq, q, m, k, n, out, &mut sc.ws);
+                for row in out.chunks_mut(n) {
+                    for (o, &bv) in row.iter_mut().zip(&self.b) {
+                        *o += bv;
+                    }
+                }
+            }
+            _ => kernels::matmul_bias_into(x, &self.w.data, &self.b, m, k, n, out),
+        }
+    }
+
+    /// Backward (straight-through): given the forward input `x` (m × k)
+    /// and the output gradient `g` (m × n), fill `dx` (m × k), `dw`
+    /// (k × n), `db` (n).
+    pub fn backward_into(
+        &self,
+        x: &[f32],
+        g: &[f32],
+        m: usize,
+        dx: &mut [f32],
+        dw: &mut [f32],
+        db: &mut [f32],
+        sc: &mut Scratch,
+    ) {
+        let (k, n) = (self.w.shape[0], self.w.shape[1]);
+        assert_eq!(x.len(), m * k);
+        assert_eq!(g.len(), m * n);
+        assert_eq!(dx.len(), m * k);
+        assert_eq!(dw.len(), k * n);
+        assert_eq!(db.len(), n);
+
+        // db = column sums of g (bias is outside the quantized GEMM)
+        db.fill(0.0);
+        for row in g.chunks(n) {
+            for (d, &gv) in db.iter_mut().zip(row) {
+                *d += gv;
+            }
+        }
+
+        // dx = Qa(g) @ Qf(w)^T — wt holds the transposed forward weights
+        match &self.prec.agrad {
+            Some(spec) => {
+                let gq = fq(g, m, n, spec);
+                kernels::matmul_into(&gq, &self.wt, m, n, k, dx);
+            }
+            None => kernels::matmul_into(g, &self.wt, m, n, k, dx),
+        }
+
+        // dw = Qb(x)^T @ Qb(g): transpose both operands (grouping them
+        // along the token/contraction axis), then one f32 GEMM
+        transpose_into(x, m, k, &mut sc.xt);
+        match &self.prec.wgrad {
+            Some(spec) => {
+                let xtq = fq(&sc.xt, k, m, spec);
+                transpose_into(g, m, n, &mut sc.gt);
+                let gtq = fq(&sc.gt, n, m, spec);
+                transpose_into(&gtq, n, m, &mut sc.gq);
+                kernels::matmul_into(&xtq, &sc.gq, k, m, n, dw);
+            }
+            None => kernels::matmul_into(&sc.xt, g, k, m, n, dw),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::{Granularity, FP4_E2M1, FP8_E4M3};
+    use crate::prop_assert;
+    use crate::util::proptest::prop_check;
+    use crate::util::rng::Rng;
+
+    fn randmat(rows: usize, cols: usize, seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        Tensor::randn(&[rows, cols], 0.5, &mut rng)
+    }
+
+    fn spec(fmt: crate::formats::FpFormat, block: usize) -> QSpec {
+        QSpec { fmt, gran: Granularity::PerBlock(block) }
+    }
+
+    /// Scalar reference of the full quantized fwd/bwd, built from the
+    /// scalar formats-layer primitives only (no kernels) — the rust-side
+    /// mirror of `np_qlinear_fwd`/`np_qlinear_bwd`.
+    fn reference(
+        x: &Tensor,
+        w: &Tensor,
+        b: &[f32],
+        g: &Tensor,
+        prec: &LinearPrec,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+        use crate::formats::fake_quant_rows;
+        let (m, k) = (x.shape[0], x.shape[1]);
+        let n = w.shape[1];
+        let q = |t: &Tensor, s: &Option<QSpec>| match s {
+            Some(QSpec { fmt, gran }) => Tensor::from_vec(
+                &t.shape,
+                fake_quant_rows(&t.data, t.shape[0], t.shape[1], *fmt, *gran),
+            ),
+            None => t.clone(),
+        };
+        let xq = q(x, &prec.fwd);
+        let wq = q(w, &prec.fwd);
+        let mut y = xq.matmul(&wq);
+        for row in y.data.chunks_mut(n) {
+            for (o, &bv) in row.iter_mut().zip(b) {
+                *o += bv;
+            }
+        }
+        let gq = q(g, &prec.agrad);
+        let dx = if prec.fwd.is_some() {
+            gq.matmul(&wq.transpose2())
+        } else {
+            gq.matmul(&w.transpose2())
+        };
+        let (xtq, gq2) = match &prec.wgrad {
+            Some(_) => {
+                let xtq = q(&x.transpose2(), &prec.wgrad);
+                let gtq = q(&g.transpose2(), &prec.wgrad);
+                (xtq, gtq.transpose2())
+            }
+            None => (x.transpose2(), g.clone()),
+        };
+        let dw = xtq.matmul(&gq2);
+        let db: Vec<f32> = (0..n)
+            .map(|j| (0..m).fold(0.0f32, |a, r| a + g.data[r * n + j]))
+            .collect();
+        (y.data, dx.data, dw.data, db)
+    }
+
+    #[test]
+    fn quantized_fwd_bwd_matches_scalar_reference_bitwise() {
+        use crate::formats::fake_quant_rows;
+        use crate::util::proptest::shrink_rows;
+        prop_check("qlinear == scalar reference", 40, |c| {
+            let (k, n) = (16usize, 24usize);
+            let (xd, m, _) = c.f32_mat(2, 24, k, k, -2.0, 2.0);
+            let x = Tensor::from_vec(&[m, k], xd);
+            let w = Tensor::from_vec(&[k, n], c.f32_vec(k * n, k * n, -1.0, 1.0));
+            let g = Tensor::from_vec(&[m, n], c.f32_vec(m * n, m * n, -1.0, 1.0));
+            let b: Vec<f32> = c.f32_vec(n, n, -0.5, 0.5);
+            for prec in [
+                LinearPrec {
+                    fwd: Some(spec(FP8_E4M3, 8)),
+                    wgrad: Some(spec(FP8_E4M3, 8)),
+                    agrad: None,
+                },
+                LinearPrec {
+                    fwd: Some(spec(FP4_E2M1, 8)),
+                    wgrad: Some(spec(FP4_E2M1, 4)),
+                    agrad: Some(spec(FP4_E2M1, 8)),
+                },
+                LinearPrec::EXACT,
+            ] {
+                let l = QLinear::new(w.clone(), b.clone(), prec);
+                let mut sc = Scratch::default();
+                let mut y = vec![0.0f32; m * n];
+                l.forward_into(&x.data, m, false, &mut y, &mut sc);
+                let (mut dx, mut dw, mut db) =
+                    (vec![0.0f32; m * k], vec![0.0f32; k * n], vec![0.0f32; n]);
+                l.backward_into(&x.data, &g.data, m, &mut dx, &mut dw, &mut db, &mut sc);
+                let (ry, rdx, rdw, rdb) = reference(&x, &w, &b, &g, &prec);
+                if y != ry {
+                    // row-bisection shrink to the smallest failing batch
+                    // (per-row quantization makes rows independent)
+                    let wq = match &prec.fwd {
+                        Some(QSpec { fmt, gran }) => fake_quant_rows(&w.data, k, n, *fmt, *gran),
+                        None => w.data.clone(),
+                    };
+                    let (_, rmin) = shrink_rows(&x.data, m, k, |xd, rr| {
+                        let mut got = vec![0.0f32; rr * n];
+                        l.forward_into(xd, rr, false, &mut got, &mut sc);
+                        let xq = match &prec.fwd {
+                            Some(QSpec { fmt, gran }) => fake_quant_rows(xd, rr, k, *fmt, *gran),
+                            None => xd.to_vec(),
+                        };
+                        let mut want =
+                            crate::kernels::matmul_f32(&xq, &wq, rr, k, n);
+                        for row in want.chunks_mut(n) {
+                            for (o, &bv) in row.iter_mut().zip(&b) {
+                                *o += bv;
+                            }
+                        }
+                        got != want
+                    });
+                    return Err(format!("y mismatch {prec:?} (shrunk to {rmin} rows)"));
+                }
+                prop_assert!(dx == rdx, "dx mismatch {prec:?}");
+                prop_assert!(dw == rdw, "dw mismatch {prec:?}");
+                prop_assert!(db == rdb, "db mismatch {prec:?}");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn exact_flag_bypasses_quantizers() {
+        let w = randmat(16, 8, 1);
+        let x = randmat(4, 16, 2);
+        let prec = LinearPrec { fwd: Some(spec(FP4_E2M1, 8)), wgrad: None, agrad: None };
+        let l = QLinear::new(w.clone(), vec![0.0; 8], prec);
+        let mut sc = Scratch::default();
+        let mut yq = vec![0.0f32; 4 * 8];
+        let mut ye = vec![0.0f32; 4 * 8];
+        l.forward_into(&x.data, 4, false, &mut yq, &mut sc);
+        l.forward_into(&x.data, 4, true, &mut ye, &mut sc);
+        assert_eq!(ye, x.matmul(&w).data);
+        assert_ne!(yq, ye, "quantization must engage on the non-exact path");
+    }
+
+    #[test]
+    fn refresh_tracks_master_weight() {
+        let mut l = QLinear::new(
+            randmat(8, 8, 3),
+            vec![0.0; 8],
+            LinearPrec { fwd: Some(spec(FP4_E2M1, 8)), wgrad: None, agrad: None },
+        );
+        let x = randmat(2, 8, 4);
+        let mut sc = Scratch::default();
+        let mut y1 = vec![0.0f32; 16];
+        l.forward_into(&x.data, 2, false, &mut y1, &mut sc);
+        for v in l.w.data.iter_mut() {
+            *v *= 2.0;
+        }
+        l.refresh();
+        let mut y2 = vec![0.0f32; 16];
+        l.forward_into(&x.data, 2, false, &mut y2, &mut sc);
+        // FP4 grids are closed under exact doubling away from saturation:
+        // the outputs must differ (stale packed state would reuse y1)
+        assert_ne!(y1, y2);
+    }
+
+    #[test]
+    fn schedule_swap_to_exact_drops_packed_state() {
+        let mut l = QLinear::new(
+            randmat(8, 8, 5),
+            vec![0.1; 8],
+            LinearPrec { fwd: Some(spec(FP4_E2M1, 8)), wgrad: Some(spec(FP8_E4M3, 8)), agrad: None },
+        );
+        l.set_prec(LinearPrec::EXACT);
+        let x = randmat(3, 8, 6);
+        let mut sc = Scratch::default();
+        let mut y = vec![0.0f32; 24];
+        l.forward_into(&x.data, 3, false, &mut y, &mut sc);
+        let mut want = x.matmul(&l.w).data;
+        for row in want.chunks_mut(8) {
+            for (o, &bv) in row.iter_mut().zip(&l.b) {
+                *o += bv;
+            }
+        }
+        assert_eq!(y, want);
+    }
+}

@@ -4,7 +4,7 @@
 
 use anyhow::Result;
 
-use super::features::doc_features;
+use super::features::{doc_features, doc_features_host};
 use super::report::Report;
 use super::ReproduceOpts;
 use crate::analysis::attention::{attn_stats, render_heatmap};
@@ -15,8 +15,9 @@ use crate::coordinator::trainer::{build_dataset, RunResult, Trainer};
 use crate::costmodel::{relative_cost, BlockGeom, CostRecipe, Prec};
 use crate::data::batcher::{DatasetConfig, TokenDataset};
 use crate::data::corpus::{CorpusConfig, CorpusGen};
-use crate::eval::probes::{run_probe, PROBES};
+use crate::eval::probes::run_probe_suite;
 use crate::formats::Granularity;
+use crate::refmodel::{presets, qlinear::Scratch, train_host, HostRunResult, RecipePrec};
 use crate::runtime::state::{eval_nll, TrainState};
 use crate::runtime::{download_f32, Runtime};
 use crate::tensor::Tensor;
@@ -46,29 +47,43 @@ fn train_run(
     Trainer::new(rt, run_cfg(opts, model, recipe, target_frac)).run(None)
 }
 
+/// The fresh-seed held-out eval batches — ONE definition of the
+/// WikiText-generalization substitute split (DESIGN.md), shared by the
+/// PJRT and `--host` table1 paths so their `heldout_ppl` columns stay
+/// comparable: 400 documents at `corpus_seed ^ 0xFEED_FACE` encoded with
+/// the training tokenizer, half reserved for validation, capped at 3
+/// batches.
+fn heldout_batches(
+    tok: &crate::data::tokenizer::Tokenizer,
+    seq: usize,
+    batch: usize,
+    corpus_seed: u64,
+) -> Vec<crate::tensor::TensorI32> {
+    let (text, _) = CorpusGen::new(CorpusConfig {
+        n_docs: 400,
+        seed: corpus_seed ^ 0xFEED_FACE,
+        ..Default::default()
+    })
+    .generate();
+    let tokens = tok.encode(&text);
+    let ds = TokenDataset::new(tokens, DatasetConfig { seq, batch, val_frac: 0.5, seed: 1 });
+    let mut vb = ds.val_batches();
+    vb.truncate(3);
+    vb
+}
+
 /// Perplexity on a *fresh-seed* corpus encoded with the training
 /// tokenizer — the WikiText-generalization substitute (DESIGN.md).
 fn heldout_ppl(rt: &Runtime, cfg: &RunConfig, state: &TrainState) -> Result<f64> {
     let info = rt.manifest.model(&cfg.model)?;
     let (_, tok) = build_dataset(rt, cfg)?; // deterministic tokenizer rebuild
-    let (text, _) = CorpusGen::new(CorpusConfig {
-        n_docs: 400,
-        seed: cfg.data.corpus_seed ^ 0xFEED_FACE,
-        ..Default::default()
-    })
-    .generate();
-    let tokens = tok.encode(&text);
-    let ds = TokenDataset::new(
-        tokens,
-        DatasetConfig { seq: info.seq, batch: rt.manifest.batch, val_frac: 0.5, seed: 1 },
-    );
+    let vb = heldout_batches(&tok, info.seq, rt.manifest.batch, cfg.data.corpus_seed);
     let eval_recipe = ["ours", "fp16"]
         .iter()
         .find(|r| rt.manifest.find(&cfg.model, r, "eval", false).is_some())
         .ok_or_else(|| anyhow::anyhow!("no eval artifact"))?;
     let exe = rt.load(&cfg.model, eval_recipe, "eval")?;
-    let vb = ds.val_batches();
-    let nll = eval_nll(rt, &exe, state, &vb[..vb.len().min(3)])?;
+    let nll = eval_nll(rt, &exe, state, &vb)?;
     Ok(nll.exp())
 }
 
@@ -326,14 +341,9 @@ pub fn table1(rt: &Runtime, opts: &ReproduceOpts) -> Result<()> {
             let hp = heldout_ppl(rt, &cfg, &r.state)?;
             let (_, tok) = build_dataset(rt, &cfg)?;
             let (feats, metas) = doc_features(rt, model, &r.state, &tok, 320, opts.seed)?;
-            let mut accs = Vec::new();
-            let mut probe_strs = Vec::new();
-            for (name, _) in PROBES.iter().filter(|(n, _)| *n != "parity") {
-                let pr = run_probe(name, &feats, &metas, opts.seed);
-                probe_strs.push(format!("{name} {:.3}", pr.accuracy));
-                accs.push(pr.accuracy);
-            }
-            let mean_acc = accs.iter().sum::<f64>() / accs.len() as f64;
+            let (probes, mean_acc) = run_probe_suite(&feats, &metas, opts.seed);
+            let probe_strs: Vec<String> =
+                probes.iter().map(|p| format!("{} {:.3}", p.name, p.accuracy)).collect();
             rep.line(format!(
                 "{model:<14} {recipe:<5} val loss {:.4}  val ppl {:>7.3}  heldout ppl {:>8.3}  probe mean {:.4}",
                 r.final_val_nll, r.final_val_ppl, hp, mean_acc
@@ -447,6 +457,229 @@ pub fn table4(rt: &Runtime, opts: &ReproduceOpts) -> Result<()> {
             name.clone(), m.layers.to_string(), m.d_model.to_string(),
             m.n_head.to_string(), m.d_ff.to_string(), m.seq.to_string(),
             m.vocab.to_string(), m.param_count.to_string(),
+        ]);
+    }
+    rep.line("");
+    rep.line("paper Table 4: GPT 125M/335M/774M = 12/24/36 layers, 768/1024/1280 hidden,");
+    rep.line("LLaMA 125M/1B = 12/48 layers.  Proxies keep the families, activation/norm");
+    rep.line("choices, and strict capacity ordering at single-CPU-core scale (DESIGN.md).");
+    rep.sibling_csv(&csv)?;
+    rep.finish()?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// --host drivers: the same reports, trained on the pure-Rust refmodel
+// engine (no artifacts / PJRT required).  LLaMA presets run as gpt2-block
+// proxies — see refmodel's module doc.
+
+fn train_run_host(
+    opts: &ReproduceOpts,
+    model: &str,
+    recipe: &str,
+    target_frac: f64,
+) -> Result<HostRunResult> {
+    log::info!("=== host run: {model} / {recipe} (tail {target_frac})");
+    train_host(&run_cfg(opts, model, recipe, target_frac))
+}
+
+fn cost_recipe_host(r: &RecipePrec) -> CostRecipe {
+    CostRecipe {
+        attn_fwd: RecipePrec::prec_of(&r.attn),
+        ffn_fwd: RecipePrec::prec_of(&r.ffn),
+        wgrad: RecipePrec::prec_of(&r.wgrad),
+        agrad: RecipePrec::prec_of(&r.agrad),
+    }
+}
+
+/// Cost of a schedule on the host path: stage-1 at the recipe's cost,
+/// tail at FP16 (same analytic model as the PJRT drivers).
+fn schedule_cost_host(model: &str, r: &RecipePrec, tail_frac: f64) -> f64 {
+    let c = relative_cost(&paper_geom(model), &cost_recipe_host(r));
+    (1.0 - tail_frac) * c + tail_frac
+}
+
+/// Held-out fresh-seed-corpus perplexity of a trained host model — the
+/// host mirror of [`heldout_ppl`]: identical [`heldout_batches`] split,
+/// full-precision forward.
+fn heldout_ppl_host(r: &HostRunResult, corpus_seed: u64) -> f64 {
+    let vb = heldout_batches(&r.tok, r.model.cfg.seq, presets::BATCH, corpus_seed);
+    let mut sc = Scratch::default();
+    let mut sum = 0.0f64;
+    let mut count = 0usize;
+    for b in &vb {
+        let (s, c) = r.model.eval_nll(b, &mut sc);
+        sum += s;
+        count += c;
+    }
+    (sum / count.max(1) as f64).exp()
+}
+
+pub fn fig2_host(opts: &ReproduceOpts) -> Result<()> {
+    let mut rep = Report::new(&opts.out_dir, "fig2_host")?;
+    rep.line("Figure 2 — target-precision training schedule (§3.3) loss curves");
+    rep.line("(host refmodel engine)");
+    rep.line("");
+    let model = "llama-125m-proxy";
+    let scheduled = train_run_host(opts, model, "ours", 0.10)?;
+    let unscheduled = train_run_host(opts, model, "ours", 0.0)?;
+    let fp16 = train_run_host(opts, model, "fp16", 0.0)?;
+    let curve = |label: &str, r: &HostRunResult| Curve {
+        label: label.into(),
+        steps: r.metrics.steps.iter().map(|s| s.step).collect(),
+        values: r.metrics.steps.iter().map(|s| s.loss as f64).collect(),
+    }
+    .smoothed(0.15);
+    let curves = vec![
+        curve("fp4-recipe + fp16 tail", &scheduled),
+        curve("fp4-recipe only", &unscheduled),
+        curve("fp16 baseline", &fp16),
+    ];
+    rep.line(render(&curves, 90, 22));
+    rep.line(format!(
+        "final val loss: scheduled {:.4}  unscheduled {:.4}  fp16 {:.4}",
+        scheduled.final_val_nll, unscheduled.final_val_nll, fp16.final_val_nll
+    ));
+    rep.line("expected shape: scheduled closes most of the unscheduled-vs-fp16 gap.");
+    write_combined_csv(&curves, std::path::Path::new(&opts.out_dir).join("fig2_host.csv").as_path())?;
+    rep.finish()?;
+    Ok(())
+}
+
+pub fn table1_host(opts: &ReproduceOpts) -> Result<()> {
+    let mut rep = Report::new(&opts.out_dir, "table1_host")?;
+    rep.line("Table 1 — FP4 recipe vs FP16 baseline across GPT-2 sizes");
+    rep.line("(host refmodel engine; WikiText -> held-out fresh-seed corpus PPL;");
+    rep.line(" GLUE -> 8-probe suite; see DESIGN.md)");
+    rep.line("");
+    let mut csv = vec![vec![
+        "model".into(), "method".into(), "val_loss".into(), "val_ppl".into(),
+        "heldout_ppl".into(), "probe_mean_acc".into(),
+    ]];
+    for model in ["gpt2-s-proxy", "gpt2-m-proxy", "gpt2-l-proxy"] {
+        for recipe in ["ours", "fp16"] {
+            let tail = if recipe == "ours" { 0.08 } else { 0.0 };
+            let r = train_run_host(opts, model, recipe, tail)?;
+            let cfg = run_cfg(opts, model, recipe, tail);
+            let hp = heldout_ppl_host(&r, cfg.data.corpus_seed);
+            let (feats, metas) = doc_features_host(&r.model, &r.tok, 320, opts.seed);
+            let (probes, mean_acc) = run_probe_suite(&feats, &metas, opts.seed);
+            let probe_strs: Vec<String> =
+                probes.iter().map(|p| format!("{} {:.3}", p.name, p.accuracy)).collect();
+            rep.line(format!(
+                "{model:<14} {recipe:<5} val loss {:.4}  val ppl {:>7.3}  heldout ppl {:>8.3}  probe mean {:.4}",
+                r.final_val_nll, r.final_val_ppl, hp, mean_acc
+            ));
+            rep.line(format!("    {}", probe_strs.join("  ")));
+            csv.push(vec![
+                model.into(), recipe.into(),
+                format!("{}", r.final_val_nll), format!("{}", r.final_val_ppl),
+                format!("{hp}"), format!("{mean_acc}"),
+            ]);
+        }
+    }
+    rep.line("");
+    rep.line("expected shape: per size, ours ≈ fp16 on val loss/ppl and probe mean");
+    rep.line("(paper: deltas of O(0.001-0.03) loss, O(0.01) mean GLUE accuracy).");
+    rep.sibling_csv(&csv)?;
+    rep.finish()?;
+    Ok(())
+}
+
+pub fn table2_host(opts: &ReproduceOpts) -> Result<()> {
+    let mut rep = Report::new(&opts.out_dir, "table2_host")?;
+    rep.line("Table 2 — module-precision ablation (LLaMA-125M proxy, ~5B-token scaled)");
+    rep.line("(host refmodel engine)");
+    rep.line("columns: attention / FFN / backward precision, losses, theoretical cost");
+    rep.line("");
+    let model = "llama-125m-proxy";
+    let mut csv = vec![vec![
+        "attn".into(), "ffn".into(), "backward".into(), "train_loss".into(),
+        "val_loss".into(), "val_ppl".into(), "cost".into(),
+    ]];
+    for recipe in presets::TABLE2_ROWS {
+        let r = train_run_host(opts, model, recipe, 0.0)?;
+        let spec = presets::recipe(recipe).expect("table2 recipe");
+        let (attn, ffn, wgrad, _) = presets::recipe_fmts(&spec);
+        let cost = schedule_cost_host(model, &spec, 0.0);
+        rep.line(format!(
+            "attn {:<5} ffn {:<5} bwd {:<5}  train {:.4}  val {:.4}  ppl {:>7.3}  cost {:>5.1}%",
+            attn, ffn, wgrad,
+            r.final_train_loss, r.final_val_nll, r.final_val_ppl, cost * 100.0
+        ));
+        csv.push(vec![
+            attn.into(), ffn.into(), wgrad.into(),
+            format!("{}", r.final_train_loss), format!("{}", r.final_val_nll),
+            format!("{}", r.final_val_ppl), format!("{cost}"),
+        ]);
+    }
+    rep.line("");
+    rep.line("expected shape (paper Table 2): fp16 best; ours (FP8/FP4/FP8) within");
+    rep.line("~0.03 val loss of fp16 at ~2/3 cost; all-FP4 worst but cheapest.");
+    rep.sibling_csv(&csv)?;
+    rep.finish()?;
+    Ok(())
+}
+
+pub fn table3_host(opts: &ReproduceOpts) -> Result<()> {
+    let mut rep = Report::new(&opts.out_dir, "table3_host")?;
+    rep.line("Table 3 — target-precision schedule ablation (LLaMA proxies)");
+    rep.line("(host refmodel engine)");
+    rep.line("");
+    let mut csv = vec![vec![
+        "model".into(), "target_precision".into(), "val_loss".into(),
+        "val_ppl".into(), "cost".into(),
+    ]];
+    for model in ["llama-1b-proxy", "llama-125m-proxy"] {
+        for (label, recipe, tail) in [
+            ("no", "ours", 0.0),
+            ("yes", "ours", 0.08),
+            ("-", "fp16", 0.0),
+        ] {
+            let r = train_run_host(opts, model, recipe, tail)?;
+            let spec = presets::recipe(recipe).expect("table3 recipe");
+            let cost = schedule_cost_host(model, &spec, tail);
+            rep.line(format!(
+                "{model:<16} recipe {recipe:<5} tail {label:<3}  val {:.4}  ppl {:>7.3}  cost {:>5.1}%",
+                r.final_val_nll, r.final_val_ppl, cost * 100.0
+            ));
+            csv.push(vec![
+                model.into(), label.into(), format!("{}", r.final_val_nll),
+                format!("{}", r.final_val_ppl), format!("{cost}"),
+            ]);
+        }
+    }
+    rep.line("");
+    rep.line("expected shape (paper Table 3): tail=yes < tail=no on val loss, both");
+    rep.line("above fp16; cost(yes) slightly above cost(no), both ≈ 67-72%.");
+    rep.sibling_csv(&csv)?;
+    rep.finish()?;
+    Ok(())
+}
+
+pub fn table4_host(opts: &ReproduceOpts) -> Result<()> {
+    let mut rep = Report::new(&opts.out_dir, "table4_host")?;
+    rep.line("Table 4 — model configurations (paper values + this repo's proxies)");
+    rep.line("(host refmodel presets — rust mirror of python/compile/presets.py)");
+    rep.line("");
+    rep.line(format!(
+        "{:<18} {:>6} {:>7} {:>6} {:>7} {:>5} {:>6} {:>10}",
+        "preset", "layers", "hidden", "heads", "ffn", "seq", "vocab", "params"
+    ));
+    let mut csv = vec![vec![
+        "preset".into(), "layers".into(), "hidden".into(), "heads".into(),
+        "ffn".into(), "seq".into(), "vocab".into(), "params".into(),
+    ]];
+    for name in presets::model_names() {
+        let m = presets::model(name).expect("preset");
+        rep.line(format!(
+            "{:<18} {:>6} {:>7} {:>6} {:>7} {:>5} {:>6} {:>10}",
+            name, m.layers, m.d_model, m.n_head, m.d_ff, m.seq, m.vocab, m.param_count()
+        ));
+        csv.push(vec![
+            name.to_string(), m.layers.to_string(), m.d_model.to_string(),
+            m.n_head.to_string(), m.d_ff.to_string(), m.seq.to_string(),
+            m.vocab.to_string(), m.param_count().to_string(),
         ]);
     }
     rep.line("");

@@ -1,14 +1,73 @@
 //! Document features for the probe suite: tokenize each corpus document,
 //! pad/truncate to the model's context, and push batches through the
-//! `features` artifact (full-precision pooled hidden states).
+//! `features` artifact — or, on the `--host` path, through the refmodel's
+//! full-precision pooled forward ([`doc_features_host`]).
 
 use anyhow::Result;
 
 use crate::data::corpus::{CorpusConfig, CorpusGen, DocMeta};
 use crate::data::tokenizer::{Tokenizer, NEWLINE_TOKEN};
+use crate::refmodel::{self, qlinear::Scratch};
 use crate::runtime::state::TrainState;
 use crate::runtime::{download_f32, Runtime};
 use crate::tensor::{Tensor, TensorI32};
+
+/// Generate the held-out documents (same seed-offset split as the PJRT
+/// path) tokenized and padded to the model context.
+fn heldout_docs(
+    tok: &Tokenizer,
+    t: usize,
+    n_docs: usize,
+    seed: u64,
+) -> (Vec<Vec<i32>>, Vec<DocMeta>) {
+    let mut gen = CorpusGen::new(CorpusConfig {
+        n_docs,
+        seed: seed ^ 0x5EED_D0C5, // held-out split
+        ..Default::default()
+    });
+    let mut metas = Vec::with_capacity(n_docs);
+    let mut rows = Vec::with_capacity(n_docs);
+    for _ in 0..n_docs {
+        let d = gen.next_doc();
+        let mut ids = tok.encode(&d.text);
+        ids.truncate(t);
+        while ids.len() < t {
+            ids.push(NEWLINE_TOKEN);
+        }
+        rows.push(ids);
+        metas.push(d.meta);
+    }
+    (rows, metas)
+}
+
+/// Host-path probe features: pooled full-precision hidden states of the
+/// trained refmodel over `n_docs` held-out documents — the executable
+/// stand-in for the PJRT `features` artifact ([`doc_features`]).
+pub fn doc_features_host(
+    model: &refmodel::RefModel,
+    tok: &Tokenizer,
+    n_docs: usize,
+    seed: u64,
+) -> (Tensor, Vec<DocMeta>) {
+    let t = model.cfg.seq;
+    let d_model = model.cfg.d_model;
+    let b = refmodel::presets::BATCH;
+    let (rows, metas) = heldout_docs(tok, t, n_docs, seed);
+    let mut sc = Scratch::default();
+    let mut feats = vec![0.0f32; n_docs * d_model];
+    let mut i = 0;
+    while i < n_docs {
+        let nb = b.min(n_docs - i); // ragged tail runs at its true size
+        let mut batch = Vec::with_capacity(nb * t);
+        for r in 0..nb {
+            batch.extend_from_slice(&rows[i + r]);
+        }
+        let f = model.hidden_features(&batch, nb, t, &mut sc);
+        feats[i * d_model..(i + nb) * d_model].copy_from_slice(&f);
+        i += nb;
+    }
+    (Tensor::from_vec(&[n_docs, d_model], feats), metas)
+}
 
 /// Extract pooled features for `n_docs` fresh documents (held out from the
 /// training corpus by seed offset).
@@ -28,24 +87,7 @@ pub fn doc_features(
     let feat_exe = rt.load(model, recipe, "features")?;
     let b = rt.manifest.batch;
     let t = info.seq;
-
-    let mut gen = CorpusGen::new(CorpusConfig {
-        n_docs,
-        seed: seed ^ 0x5EED_D0C5, // held-out split
-        ..Default::default()
-    });
-    let mut metas = Vec::with_capacity(n_docs);
-    let mut rows: Vec<Vec<i32>> = Vec::with_capacity(n_docs);
-    for _ in 0..n_docs {
-        let d = gen.next_doc();
-        let mut ids = tok.encode(&d.text);
-        ids.truncate(t);
-        while ids.len() < t {
-            ids.push(NEWLINE_TOKEN);
-        }
-        rows.push(ids);
-        metas.push(d.meta);
-    }
+    let (rows, metas) = heldout_docs(tok, t, n_docs, seed);
     // batch through the executable (pad the ragged tail by repeating row 0)
     let d_model = info.d_model;
     let mut feats = vec![0.0f32; n_docs * d_model];

@@ -2,16 +2,21 @@
 //! trains the scaled workloads it needs, prints the paper-shaped rows, and
 //! writes machine-readable CSV/JSON next to the text report.
 //!
-//! | id      | paper artifact                                | driver     |
-//! |---------|-----------------------------------------------|------------|
-//! | fig1a   | compute-share breakdown (LLaMA-7B, 4K)        | `fig1a`    |
-//! | fig1b   | act/grad distributions + underflow            | `fig1b`    |
-//! | fig1c   | attention heatmaps FP4 vs protected           | `fig1c`    |
-//! | fig2    | target-precision schedule loss curves         | `fig2`     |
-//! | table1  | GPT-2 sizes × {ours, fp16} + GLUE-proxy       | `table1`   |
-//! | table2  | module-precision ablation (LLaMA-125M proxy)  | `table2`   |
-//! | table3  | schedule ablation (LLaMA 1B/125M proxies)     | `table3`   |
-//! | table4  | model configurations                          | `table4`   |
+//! Every driver has a PJRT path (AOT artifacts through the `Runtime`) and
+//! most have a `--host` path running on the pure-Rust `refmodel` engine —
+//! executable with no artifacts or PJRT library present (the in-container
+//! fallback; see `refmodel`'s module doc for the proxy caveats).
+//!
+//! | id      | paper artifact                                | driver     | --host |
+//! |---------|-----------------------------------------------|------------|--------|
+//! | fig1a   | compute-share breakdown (LLaMA-7B, 4K)        | `fig1a`    | yes (analytic) |
+//! | fig1b   | act/grad distributions + underflow            | `fig1b`    | no (needs capture artifacts) |
+//! | fig1c   | attention heatmaps FP4 vs protected           | `fig1c`    | no (needs capture artifacts) |
+//! | fig2    | target-precision schedule loss curves         | `fig2`     | yes |
+//! | table1  | GPT-2 sizes × {ours, fp16} + GLUE-proxy       | `table1`   | yes |
+//! | table2  | module-precision ablation (LLaMA-125M proxy)  | `table2`   | yes |
+//! | table3  | schedule ablation (LLaMA 1B/125M proxies)     | `table3`   | yes |
+//! | table4  | model configurations                          | `table4`   | yes (presets) |
 
 pub mod drivers;
 pub mod features;
@@ -30,15 +35,48 @@ pub struct ReproduceOpts {
     pub seed: u64,
     /// Documents in the synthetic corpus.
     pub n_docs: usize,
+    /// Run on the host `refmodel` engine instead of PJRT artifacts.
+    pub host: bool,
 }
 
 impl Default for ReproduceOpts {
     fn default() -> Self {
-        ReproduceOpts { steps: 200, out_dir: "reproduce_out".into(), seed: 0, n_docs: 3000 }
+        ReproduceOpts { steps: 200, out_dir: "reproduce_out".into(), seed: 0, n_docs: 3000, host: false }
+    }
+}
+
+/// Host-engine dispatch: no `Runtime` (and therefore no artifacts or PJRT
+/// library) required.
+pub fn run_host(what: &str, opts: &ReproduceOpts) -> Result<()> {
+    match what {
+        "1a" | "fig1a" => drivers::fig1a(opts),
+        "2" | "fig2" => drivers::fig2_host(opts),
+        "table1" => drivers::table1_host(opts),
+        "table2" => drivers::table2_host(opts),
+        "table3" => drivers::table3_host(opts),
+        "table4" => drivers::table4_host(opts),
+        "all" => {
+            drivers::fig1a(opts)?;
+            drivers::table4_host(opts)?;
+            drivers::fig2_host(opts)?;
+            drivers::table2_host(opts)?;
+            drivers::table3_host(opts)?;
+            drivers::table1_host(opts)
+        }
+        "1b" | "fig1b" | "1c" | "fig1c" => anyhow::bail!(
+            "`{what}` needs the PJRT capture artifacts (attention maps / weight \
+             gradients of the AOT model) — run without --host once artifacts exist"
+        ),
+        other => anyhow::bail!(
+            "unknown experiment `{other}` (try table1|table2|table3|table4|fig1a|fig2|all)"
+        ),
     }
 }
 
 pub fn run(rt: &Runtime, what: &str, opts: &ReproduceOpts) -> Result<()> {
+    if opts.host {
+        return run_host(what, opts);
+    }
     match what {
         "1a" | "fig1a" => drivers::fig1a(opts),
         "1b" | "fig1b" => drivers::fig1b(rt, opts),

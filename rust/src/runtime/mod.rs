@@ -8,6 +8,11 @@
 //!   `ExecuteOptions::untuple_result`, so a step's tuple output arrives as
 //!   one `PjRtBuffer` per element — outputs chain directly into the next
 //!   `execute_b` call with zero host round-trips (L3 perf §Perf).
+//!
+//! When PJRT is unavailable (the compile-only `vendor/xla-stub` build, or
+//! no artifacts directory), `Runtime::open` fails fast; the `--host` flag
+//! routes training/reproduce through the pure-Rust `crate::refmodel`
+//! engine instead, which needs neither.
 
 pub mod manifest;
 pub mod state;

@@ -132,12 +132,21 @@ impl Tensor {
         assert_eq!(self.rank(), 2);
         let (m, n) = (self.shape[0], self.shape[1]);
         let mut out = vec![0.0f32; m * n];
-        for i in 0..m {
-            for j in 0..n {
-                out[j * m + i] = self.data[i * n + j];
-            }
-        }
+        transpose_into(&self.data, m, n, &mut out);
         Tensor::from_vec(&[n, m], out)
+    }
+}
+
+/// Transpose a row-major (rows × cols) buffer into `out` (cols × rows),
+/// resizing `out` as needed.  The zero-steady-state-allocation form the
+/// refmodel backward uses for its gradient-GEMM operands.
+pub fn transpose_into(src: &[f32], rows: usize, cols: usize, out: &mut Vec<f32>) {
+    assert_eq!(src.len(), rows * cols);
+    out.resize(rows * cols, 0.0);
+    for i in 0..rows {
+        for j in 0..cols {
+            out[j * rows + i] = src[i * cols + j];
+        }
     }
 }
 
@@ -182,6 +191,17 @@ mod tests {
         assert_eq!(t.shape, vec![3, 2]);
         assert_eq!(t.data, vec![0., 3., 1., 4., 2., 5.]);
         assert_eq!(t.transpose2(), a);
+    }
+
+    #[test]
+    fn transpose_into_resizes_and_reuses() {
+        let src = vec![1.0f32, 2., 3., 4., 5., 6.];
+        let mut out = vec![f32::NAN; 2]; // wrong size + dirty: must be fixed up
+        transpose_into(&src, 2, 3, &mut out);
+        assert_eq!(out, vec![1., 4., 2., 5., 3., 6.]);
+        let mut back = Vec::new();
+        transpose_into(&out, 3, 2, &mut back);
+        assert_eq!(back, src);
     }
 
     #[test]

@@ -36,20 +36,89 @@ impl<'a> Case<'a> {
     /// the adversarial distribution for codec tests.
     pub fn f32_vec_wild(&mut self, len_lo: usize, len_hi: usize) -> Vec<f32> {
         let n = self.usize_in(len_lo, len_hi);
-        (0..n)
-            .map(|_| match self.rng.below(6) {
-                0 => 0.0,
-                1 => self.f32_in(-1e-6, 1e-6),
-                2 => self.f32_in(-1.0, 1.0),
-                3 => self.f32_in(-1e3, 1e3),
-                4 => self.f32_in(-1e30, 1e30),
-                _ => {
-                    let m = self.rng.normal_f32(0.0, 1.0);
-                    m * (2.0f32).powi(self.usize_in(0, 40) as i32 - 20)
-                }
-            })
-            .collect()
+        (0..n).map(|_| self.wild_f32()).collect()
     }
+
+    fn wild_f32(&mut self) -> f32 {
+        match self.rng.below(6) {
+            0 => 0.0,
+            1 => self.f32_in(-1e-6, 1e-6),
+            2 => self.f32_in(-1.0, 1.0),
+            3 => self.f32_in(-1e3, 1e3),
+            4 => self.f32_in(-1e30, 1e30),
+            _ => {
+                let m = self.rng.normal_f32(0.0, 1.0);
+                m * (2.0f32).powi(self.usize_in(0, 40) as i32 - 20)
+            }
+        }
+    }
+
+    /// Seeded random row-major matrix with uniform entries in [lo, hi]:
+    /// returns (data, rows, cols).  The 2-D generator for GEMM/model
+    /// property tests (refmodel fwd/bwd, kernels).
+    pub fn f32_mat(
+        &mut self,
+        rows_lo: usize,
+        rows_hi: usize,
+        cols_lo: usize,
+        cols_hi: usize,
+        lo: f32,
+        hi: f32,
+    ) -> (Vec<f32>, usize, usize) {
+        let rows = self.usize_in(rows_lo, rows_hi);
+        let cols = self.usize_in(cols_lo, cols_hi);
+        let data = (0..rows * cols).map(|_| self.f32_in(lo, hi)).collect();
+        (data, rows, cols)
+    }
+
+    /// [`Case::f32_mat`] with the wild-magnitude element distribution
+    /// (zeros, subnormal-ish, huge) — the adversarial variant for
+    /// quantization-facing matrix kernels.
+    pub fn f32_mat_wild(
+        &mut self,
+        rows_lo: usize,
+        rows_hi: usize,
+        cols_lo: usize,
+        cols_hi: usize,
+    ) -> (Vec<f32>, usize, usize) {
+        let rows = self.usize_in(rows_lo, rows_hi);
+        let cols = self.usize_in(cols_lo, cols_hi);
+        let data = (0..rows * cols).map(|_| self.wild_f32()).collect();
+        (data, rows, cols)
+    }
+}
+
+/// Shrink a failing 2-D case by row bisection: while `fails` keeps
+/// returning true on a half, drop the other half; returns the smallest
+/// failing (data, rows) found.  Column geometry is preserved — cols is
+/// usually load-bearing (block sizes, contraction dims) — so only the
+/// row count shrinks.  Callers opt in from a failing property to report
+/// (or re-assert on) a minimal reproducer.
+pub fn shrink_rows<F: FnMut(&[f32], usize) -> bool>(
+    data: &[f32],
+    rows: usize,
+    cols: usize,
+    mut fails: F,
+) -> (Vec<f32>, usize) {
+    let mut cur = data.to_vec();
+    let mut r = rows;
+    while r > 1 {
+        let half = r / 2;
+        let first = cur[..half * cols].to_vec();
+        if fails(&first, half) {
+            cur = first;
+            r = half;
+            continue;
+        }
+        let second = cur[(r - half) * cols..].to_vec();
+        if fails(&second, half) {
+            cur = second;
+            r = half;
+            continue;
+        }
+        break;
+    }
+    (cur, r)
 }
 
 /// Run `prop` for `cases` seeded cases; panic with the failing seed.
@@ -94,6 +163,34 @@ mod tests {
     #[should_panic(expected = "property `always fails`")]
     fn reports_failure_with_seed() {
         prop_check("always fails", 3, |_| Err("nope".to_string()));
+    }
+
+    #[test]
+    fn f32_mat_shapes_and_ranges() {
+        prop_check("f32_mat geometry", 40, |c| {
+            let (d, r, cl) = c.f32_mat(2, 7, 3, 9, -2.0, 2.0);
+            prop_assert!(d.len() == r * cl);
+            prop_assert!((2..=7).contains(&r) && (3..=9).contains(&cl));
+            prop_assert!(d.iter().all(|&v| (-2.0..=2.0).contains(&v)));
+            let (dw, rw, cw) = c.f32_mat_wild(1, 4, 2, 5);
+            prop_assert!(dw.len() == rw * cw);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn shrink_rows_finds_minimal_failing_block() {
+        // property fails whenever the matrix contains the poison value
+        let cols = 4;
+        let mut data = vec![0.0f32; 16 * cols];
+        data[9 * cols + 2] = f32::INFINITY;
+        let fails = |d: &[f32], _r: usize| d.iter().any(|v| v.is_infinite());
+        let (min_d, min_r) = shrink_rows(&data, 16, cols, fails);
+        assert_eq!(min_r, 1, "bisection should isolate the poisoned row");
+        assert!(min_d.iter().any(|v| v.is_infinite()));
+        // a case that never fails on halves stays untouched
+        let (same, r) = shrink_rows(&data, 16, cols, |_, _| false);
+        assert_eq!((same.len(), r), (data.len(), 16));
     }
 
     #[test]

@@ -1,5 +1,11 @@
 //! Integration: the L3 coordinator end-to-end — schedule switch, DP
-//! equivalence, checkpoint resume.  Requires `make artifacts`.
+//! equivalence, checkpoint resume.
+//!
+//! Every test is `#[ignore]`d: they require *executing* PJRT artifacts,
+//! which the compile-only `vendor/xla-stub` crate cannot do.  Run with
+//! `cargo test -- --ignored` once the real xla_extension crate is
+//! vendored; `tests/refmodel_determinism.rs` pins the schedule-switch
+//! and training-loop contracts on the `--host` engine in the meantime.
 
 use std::path::Path;
 
@@ -29,6 +35,7 @@ fn tiny_cfg(steps: u64) -> RunConfig {
 }
 
 #[test]
+#[ignore = "needs xla_extension (PJRT execution; the stub xla crate cannot run artifacts — see ROADMAP)"]
 fn trainer_descends_and_switches_stage() {
     let Some(rt) = runtime() else { return };
     let mut cfg = tiny_cfg(14);
@@ -46,6 +53,7 @@ fn trainer_descends_and_switches_stage() {
 }
 
 #[test]
+#[ignore = "needs xla_extension (PJRT execution; the stub xla crate cannot run artifacts — see ROADMAP)"]
 fn dp_two_workers_matches_sequential_grad_average() {
     let Some(rt) = runtime() else { return };
     let cfg = tiny_cfg(1);
@@ -85,6 +93,7 @@ fn dp_two_workers_matches_sequential_grad_average() {
 }
 
 #[test]
+#[ignore = "needs xla_extension (PJRT execution; the stub xla crate cannot run artifacts — see ROADMAP)"]
 fn checkpoint_resume_reproduces_uninterrupted_run() {
     let Some(rt) = runtime() else { return };
     let dir = std::env::temp_dir().join("fp4ckpt_resume");

@@ -1,6 +1,14 @@
 //! Integration: AOT artifacts × PJRT runtime — init, train, grad/apply
-//! equivalence, eval, and device-resident chaining.  Requires
-//! `make artifacts` (skipped gracefully when artifacts are absent).
+//! equivalence, eval, and device-resident chaining.
+//!
+//! Every test is `#[ignore]`d: they require *executing* PJRT artifacts,
+//! which the compile-only `vendor/xla-stub` crate cannot do (and with no
+//! artifacts directory they would silently skip — visible `ignored`
+//! counts are honest signal, silent passes are not).  Run with
+//! `cargo test -- --ignored` once the real xla_extension crate is
+//! vendored and `make artifacts` has been run; the `--host` refmodel
+//! path (`tests/refmodel_*.rs`) covers the executable training contract
+//! in the meantime.
 
 use std::path::Path;
 
@@ -28,6 +36,7 @@ fn fake_batch(rt: &Runtime, model: &str, seed: u64) -> TensorI32 {
 }
 
 #[test]
+#[ignore = "needs xla_extension (PJRT execution; the stub xla crate cannot run artifacts — see ROADMAP)"]
 fn init_produces_manifest_shapes() {
     let Some(rt) = runtime() else { return };
     let st = TrainState::init(&rt, "gpt2-s-proxy", "ours", 7).unwrap();
@@ -41,6 +50,7 @@ fn init_produces_manifest_shapes() {
 }
 
 #[test]
+#[ignore = "needs xla_extension (PJRT execution; the stub xla crate cannot run artifacts — see ROADMAP)"]
 fn init_is_seed_deterministic() {
     let Some(rt) = runtime() else { return };
     let a = TrainState::init(&rt, "gpt2-s-proxy", "ours", 3).unwrap();
@@ -57,6 +67,7 @@ fn init_is_seed_deterministic() {
 }
 
 #[test]
+#[ignore = "needs xla_extension (PJRT execution; the stub xla crate cannot run artifacts — see ROADMAP)"]
 fn train_step_reduces_loss_on_repeated_batch() {
     let Some(rt) = runtime() else { return };
     let exe = rt.load("gpt2-s-proxy", "ours", "train").unwrap();
@@ -80,6 +91,7 @@ fn train_step_reduces_loss_on_repeated_batch() {
 }
 
 #[test]
+#[ignore = "needs xla_extension (PJRT execution; the stub xla crate cannot run artifacts — see ROADMAP)"]
 fn grad_then_apply_matches_fused_train() {
     let Some(rt) = runtime() else { return };
     let train = rt.load("gpt2-s-proxy", "ours", "train").unwrap();
@@ -111,6 +123,7 @@ fn grad_then_apply_matches_fused_train() {
 }
 
 #[test]
+#[ignore = "needs xla_extension (PJRT execution; the stub xla crate cannot run artifacts — see ROADMAP)"]
 fn eval_full_precision_near_log_vocab_at_init() {
     let Some(rt) = runtime() else { return };
     let eval = rt.load("gpt2-s-proxy", "ours", "eval").unwrap();
@@ -126,6 +139,7 @@ fn eval_full_precision_near_log_vocab_at_init() {
 }
 
 #[test]
+#[ignore = "needs xla_extension (PJRT execution; the stub xla crate cannot run artifacts — see ROADMAP)"]
 fn pallas_artifact_runs_and_matches_jnp_variant() {
     let Some(rt) = runtime() else { return };
     let jnp = rt.load("gpt2-s-proxy", "ours", "train").unwrap();
@@ -143,6 +157,7 @@ fn pallas_artifact_runs_and_matches_jnp_variant() {
 }
 
 #[test]
+#[ignore = "needs xla_extension (PJRT execution; the stub xla crate cannot run artifacts — see ROADMAP)"]
 fn capture_step_shapes() {
     let Some(rt) = runtime() else { return };
     let cap = rt.load("gpt2-s-proxy", "ours", "capture").unwrap();

@@ -1,0 +1,149 @@
+//! Refmodel training determinism: quantized host training must be
+//! bit-identical at `PALLAS_THREADS` ∈ {1, 2, 8} and with the qgemm panel
+//! cache on or off.  The geometry is sized past every kernel parallel
+//! threshold (fake-quant sweeps > `PAR_MIN_ELEMS`, GEMMs >
+//! `PAR_MIN_FLOPS`), so the thread sweep exercises real cross-thread
+//! scheduling, not the serial fallbacks.
+//!
+//! Same env-lock discipline as `tests/pool_determinism.rs`: thread count
+//! is process-global, so the sweep serializes on a mutex and this file
+//! runs in its own test binary.
+
+use fp4train::refmodel::engine::{AdamW, HParams};
+use fp4train::refmodel::qlinear::Scratch;
+use fp4train::refmodel::{presets, RefConfig, RefModel};
+use fp4train::tensor::TensorI32;
+use fp4train::util::rng::Rng;
+
+const THREAD_COUNTS: [usize; 3] = [8, 2, 1]; // 8 first: pool inits at full width
+
+static ENV_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn micro_cfg() -> RefConfig {
+    RefConfig {
+        name: "determinism-proxy".into(),
+        family: "gpt2".into(),
+        vocab: 64,
+        layers: 2,
+        d_model: 128,
+        n_head: 4,
+        d_ff: 512,
+        seq: 64,
+    }
+}
+
+/// Deterministic synthetic batch for a step (no corpus/tokenizer needed).
+fn batch_at(step: u64, b: usize, t: usize, vocab: usize) -> TensorI32 {
+    let mut rng = Rng::new(0xBA7C4 ^ step);
+    let data: Vec<i32> = (0..b * (t + 1)).map(|_| rng.below(vocab as u64) as i32).collect();
+    TensorI32::from_vec(&[b, t + 1], data)
+}
+
+/// Train `steps` quantized steps and return every final master-parameter
+/// bit plus the per-step losses.
+fn train_bits(steps: u64, panel_cache: bool) -> (Vec<u32>, Vec<u32>) {
+    let cfg = micro_cfg();
+    let recipe = presets::recipe("ours").unwrap();
+    let mut model = RefModel::new(cfg.clone(), recipe, 17);
+    let mut opt = AdamW::new(&mut model, HParams::for_family("gpt2", steps));
+    let mut sc = if panel_cache { Scratch::with_panel_cache(64 << 20) } else { Scratch::default() };
+    let b = 8;
+    let mut losses = Vec::new();
+    for step in 0..steps {
+        let batch = batch_at(step, b, cfg.seq, cfg.vocab);
+        let (loss, grads, _) = model.loss_and_grads(&batch, &mut sc);
+        losses.push(loss.to_bits());
+        opt.step(&mut model, &grads);
+        model.refresh_packed();
+    }
+    let mut bits = Vec::new();
+    for (_, p) in model.params_mut() {
+        bits.extend(p.iter().map(|v| v.to_bits()));
+    }
+    (bits, losses)
+}
+
+#[test]
+fn quantized_training_bit_identical_across_threads_and_cache() {
+    let _env = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let mut reference: Option<(Vec<u32>, Vec<u32>)> = None;
+    for nt in THREAD_COUNTS {
+        std::env::set_var("PALLAS_THREADS", nt.to_string());
+        for cache in [false, true] {
+            let got = train_bits(3, cache);
+            match &reference {
+                None => reference = Some(got),
+                Some(r) => {
+                    assert_eq!(got.1, r.1, "loss bits diverged at nt={nt} cache={cache}");
+                    assert_eq!(got.0, r.0, "param bits diverged at nt={nt} cache={cache}");
+                }
+            }
+        }
+    }
+    std::env::remove_var("PALLAS_THREADS");
+}
+
+#[test]
+fn training_descends_and_schedule_swaps_to_exact() {
+    let _env = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    std::env::remove_var("PALLAS_THREADS");
+    let cfg = micro_cfg();
+    let recipe = presets::recipe("ours").unwrap();
+    let target = presets::recipe("fp16").unwrap();
+    let mut model = RefModel::new(cfg.clone(), recipe, 3);
+    let steps = 12u64;
+    let stage1 = 9u64;
+    let mut opt = AdamW::new(&mut model, HParams::for_family("gpt2", steps));
+    let mut sc = Scratch::default();
+    let mut first = f32::NAN;
+    let mut last = f32::NAN;
+    for step in 0..steps {
+        if step == stage1 {
+            model.set_recipe(target.clone());
+            assert_eq!(model.recipe().name, "fp16");
+        }
+        let batch = batch_at(step % 2, 8, cfg.seq, cfg.vocab); // 2 alternating batches
+        let (loss, grads, _) = model.loss_and_grads(&batch, &mut sc);
+        if step == 0 {
+            first = loss;
+        }
+        last = loss;
+        assert!(loss.is_finite(), "step {step}");
+        opt.step(&mut model, &grads);
+        model.refresh_packed();
+    }
+    assert!(last < first, "loss did not descend: {first} -> {last}");
+}
+
+/// The engine's full `train_host` entry point is deterministic end to end
+/// (corpus → tokenizer → batches → kernels → AdamW): two identical runs
+/// produce identical metrics.
+#[test]
+fn train_host_runs_are_reproducible() {
+    let _env = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    std::env::remove_var("PALLAS_THREADS");
+    let dir = std::env::temp_dir().join("refmodel_host_repro");
+    let mut cfg = fp4train::config::RunConfig::default();
+    cfg.model = "gpt2-s-proxy".into();
+    cfg.recipe = "ours".into();
+    cfg.steps = 4;
+    cfg.eval_every = 4;
+    cfg.log_every = 4;
+    cfg.target_precision_frac = 0.25; // last step on the exact target recipe
+    cfg.data.n_docs = 220;
+    cfg.out_dir = dir.to_str().unwrap().to_string();
+    let a = fp4train::refmodel::train_host(&cfg).unwrap();
+    let b = fp4train::refmodel::train_host(&cfg).unwrap();
+    assert_eq!(a.metrics.steps.len(), 4);
+    let stages: Vec<u8> = a.metrics.steps.iter().map(|s| s.stage).collect();
+    assert_eq!(stages, vec![0, 0, 0, 1]);
+    for (ra, rb) in a.metrics.steps.iter().zip(&b.metrics.steps) {
+        assert_eq!(ra.loss.to_bits(), rb.loss.to_bits(), "step {}", ra.step);
+        assert_eq!(ra.grad_norm.to_bits(), rb.grad_norm.to_bits());
+    }
+    assert_eq!(a.final_val_nll.to_bits(), b.final_val_nll.to_bits());
+    assert!(a.final_val_nll.is_finite());
+    // metrics CSVs written with the host tag
+    assert!(dir.join("gpt2-s-proxy__ours__host__steps.csv").exists());
+    assert!(dir.join("gpt2-s-proxy__ours__host__eval.csv").exists());
+}

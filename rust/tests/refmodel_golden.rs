@@ -1,0 +1,233 @@
+//! Golden-vector differential test: replay the checked-in python fixture
+//! (`tests/golden/refmodel_micro.json`, dumped by
+//! `python/compile/kernels/ref.py::write_refmodel_fixture` and validated
+//! there against jax autodiff through the repo's L2 model) through the
+//! rust `refmodel` engine and compare activations, loss, and every
+//! parameter gradient.
+//!
+//! Tolerances (also recorded inside the fixture): comparisons are
+//! per-tensor **relative L2** because numpy (BLAS) and rust (ascending-k)
+//! accumulate f32 matmuls in different orders — on the quantized run an
+//! element whose pre-quantization value lands within float roundoff of a
+//! rounding boundary may legitimately differ by a full grid step, which
+//! per-element equality would misread as a bug.  The fp16 run has no
+//! quantizers, so its bound is pure accumulation noise (2e-5); the
+//! quantized bound is format-derived (5e-3).
+
+use std::path::Path;
+
+use fp4train::formats::{FpFormat, Granularity};
+use fp4train::refmodel::{qlinear::Scratch, QSpec, RecipePrec, RefConfig, RefModel};
+use fp4train::tensor::TensorI32;
+use fp4train::util::json::Json;
+
+fn fixture() -> Json {
+    let p = Path::new("tests/golden/refmodel_micro.json");
+    assert!(p.exists(), "golden fixture missing — regenerate with \
+        `python3 -m compile.kernels.ref rust/tests/golden/refmodel_micro.json`");
+    Json::parse(&std::fs::read_to_string(p).unwrap()).unwrap()
+}
+
+fn floats(j: &Json) -> Vec<f32> {
+    j.as_arr()
+        .expect("array")
+        .iter()
+        .map(|v| v.as_f64().unwrap() as f32)
+        .collect()
+}
+
+fn rel_l2(got: &[f32], want: &[f32]) -> f64 {
+    assert_eq!(got.len(), want.len());
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (&a, &b) in got.iter().zip(want) {
+        num += ((a - b) as f64).powi(2);
+        den += (b as f64).powi(2);
+    }
+    num.sqrt() / den.sqrt().max(1e-12)
+}
+
+fn config_of(j: &Json) -> RefConfig {
+    let g = |k: &str| j.at(&["config", k]).and_then(|v| v.as_usize()).unwrap();
+    RefConfig {
+        name: "refmodel-micro".into(),
+        family: "gpt2".into(),
+        vocab: g("vocab"),
+        layers: g("layers"),
+        d_model: g("d_model"),
+        n_head: g("n_head"),
+        d_ff: g("d_ff"),
+        seq: g("seq"),
+    }
+}
+
+fn spec_of(j: &Json, knob: &str) -> Option<QSpec> {
+    let fmt = j.at(&["recipe", knob, "fmt"]).and_then(|v| v.as_str()).unwrap();
+    if fmt == "none" {
+        return None;
+    }
+    let block = j.at(&["recipe", knob, "block"]).and_then(|v| v.as_usize()).unwrap();
+    let gran = if block == 0 { Granularity::PerRow } else { Granularity::PerBlock(block) };
+    Some(QSpec { fmt: FpFormat::by_name(fmt).expect("fixture format"), gran })
+}
+
+fn build_model(j: &Json, recipe: RecipePrec) -> RefModel {
+    let cfg = config_of(j);
+    let mut model = RefModel::new(cfg, recipe, 0);
+    let owned: Vec<(String, Vec<f32>)> = j
+        .get("params")
+        .and_then(|p| p.members())
+        .unwrap()
+        .iter()
+        .map(|(name, p)| (name.clone(), floats(p.get("data").unwrap())))
+        .collect();
+    let entries: Vec<(&str, &[f32])> =
+        owned.iter().map(|(n, d)| (n.as_str(), d.as_slice())).collect();
+    model.set_params(&entries); // bulk load: one re-pack for all params
+    model
+}
+
+fn batch_of(j: &Json) -> TensorI32 {
+    let rows = j.get("batch").and_then(|b| b.as_arr()).unwrap();
+    let t1 = rows[0].as_arr().unwrap().len();
+    let data: Vec<i32> = rows
+        .iter()
+        .flat_map(|r| r.as_arr().unwrap().iter().map(|v| v.as_i64().unwrap() as i32))
+        .collect();
+    TensorI32::from_vec(&[rows.len(), t1], data)
+}
+
+fn tol(j: &Json, key: &str) -> f64 {
+    j.at(&["tolerances", key]).and_then(|v| v.as_f64()).unwrap()
+}
+
+fn replay(run: &str, recipe: RecipePrec, bound_key: &str) {
+    let j = fixture();
+    let bound = tol(&j, bound_key);
+    let loss_tol = tol(&j, "loss_abs");
+    let model = build_model(&j, recipe);
+    let batch = batch_of(&j);
+    let mut sc = Scratch::default();
+    let (loss, grads, cache) = model.loss_and_grads(&batch, &mut sc);
+
+    let r = j.at(&["runs", run]).unwrap();
+    let want_loss = r.get("loss").and_then(|v| v.as_f64()).unwrap();
+    assert!(
+        (loss as f64 - want_loss).abs() < loss_tol,
+        "{run} loss: rust {loss} vs python {want_loss}"
+    );
+
+    let check = |label: &str, got: &[f32], want: &[f32]| {
+        let e = rel_l2(got, want);
+        assert!(e < bound, "{run}/{label}: rel L2 {e:.3e} > {bound:.1e}");
+    };
+    check("embed", &cache.x0, &floats(r.get("embed").unwrap()));
+    for (i, b) in r.get("block_out").and_then(|b| b.as_arr()).unwrap().iter().enumerate() {
+        check(&format!("block_out.{i}"), cache.block_out(i), &floats(b));
+    }
+    check("final_hidden", &cache.hf, &floats(r.get("final_hidden").unwrap()));
+    check("logits", &cache.logits, &floats(r.get("logits").unwrap()));
+
+    let want_grads = r.get("grads").and_then(|g| g.members()).unwrap();
+    let got_grads = grads.flat();
+    assert_eq!(got_grads.len(), want_grads.len(), "grad count");
+    for (name, got) in &got_grads {
+        let want = want_grads
+            .iter()
+            .find(|(n, _)| n == name)
+            .unwrap_or_else(|| panic!("fixture missing grad {name}"));
+        check(&format!("grad {name}"), got, &floats(&want.1));
+    }
+}
+
+#[test]
+fn fp16_run_matches_python_golden() {
+    replay("fp16", RecipePrec::exact("fp16"), "fp16_rel_l2");
+}
+
+#[test]
+fn quant_run_matches_python_golden() {
+    let j = fixture();
+    let recipe = RecipePrec {
+        name: "fixture-quant".into(),
+        attn: spec_of(&j, "attn"),
+        ffn: spec_of(&j, "ffn"),
+        wgrad: spec_of(&j, "wgrad"),
+        agrad: spec_of(&j, "agrad"),
+    };
+    assert!(recipe.attn.is_some() && recipe.ffn.is_some() && recipe.wgrad.is_some());
+    assert!(recipe.agrad.is_none());
+    replay("quant", recipe, "quant_rel_l2");
+}
+
+/// The quantized and exact runs must actually differ (quantization
+/// engages) while losses stay within a coarse format-derived band — the
+/// differential-oracle sanity the python suite also pins.
+#[test]
+fn quant_and_fp16_differ_within_format_band() {
+    let j = fixture();
+    let quant = RecipePrec {
+        name: "fixture-quant".into(),
+        attn: spec_of(&j, "attn"),
+        ffn: spec_of(&j, "ffn"),
+        wgrad: spec_of(&j, "wgrad"),
+        agrad: spec_of(&j, "agrad"),
+    };
+    let qm = build_model(&j, quant);
+    let fm = build_model(&j, RecipePrec::exact("fp16"));
+    let batch = batch_of(&j);
+    let mut sc = Scratch::default();
+    let (ql, _, _) = qm.loss_and_grads(&batch, &mut sc);
+    let (fl, _, _) = fm.loss_and_grads(&batch, &mut sc);
+    assert_ne!(ql, fl);
+    assert!(((ql - fl) / fl).abs() < 0.25, "quant {ql} vs fp16 {fl}");
+}
+
+/// Per-element format-derived forward bound: the quantized linear output
+/// can differ from the exact product by at most the accumulated
+/// fake-quant perturbation of its operands, `Σ_k |xq·wq − x·w|` (computed
+/// here in f64 from the actual fake-quantized operands) plus f32
+/// accumulation slop.
+#[test]
+fn qlinear_forward_error_within_operand_bound() {
+    use fp4train::formats::{fake_quant_rows, FP4_E2M1};
+    use fp4train::refmodel::{LinearPrec, QLinear};
+    use fp4train::tensor::Tensor;
+    use fp4train::util::proptest::prop_check;
+
+    prop_check("qgemm error ≤ operand-perturbation bound", 25, |c| {
+        let (m, k, n) = (c.usize_in(2, 8), 32, 24);
+        let (x, _, _) = c.f32_mat(m, m, k, k, -3.0, 3.0);
+        let (w, _, _) = c.f32_mat(k, k, n, n, -1.0, 1.0);
+        let spec = QSpec { fmt: FP4_E2M1, gran: Granularity::PerBlock(8) };
+        let prec = LinearPrec { fwd: Some(spec), wgrad: None, agrad: None };
+        let l = QLinear::new(Tensor::from_vec(&[k, n], w.clone()), vec![0.0; n], prec);
+        let mut sc = Scratch::default();
+        let mut y = vec![0.0f32; m * n];
+        l.forward_into(&x, m, false, &mut y, &mut sc);
+
+        let xq = fake_quant_rows(&x, m, k, FP4_E2M1, Granularity::PerBlock(8));
+        let wq = fake_quant_rows(&w, k, n, FP4_E2M1, Granularity::PerBlock(8));
+        for i in 0..m {
+            for jn in 0..n {
+                let mut exact = 0.0f64;
+                let mut bound = 0.0f64;
+                for kk in 0..k {
+                    let (xv, wv) = (x[i * k + kk] as f64, w[kk * n + jn] as f64);
+                    let (xqv, wqv) = (xq[i * k + kk] as f64, wq[kk * n + jn] as f64);
+                    exact += xv * wv;
+                    bound += (xqv * wqv - xv * wv).abs();
+                }
+                let err = (y[i * n + jn] as f64 - exact).abs();
+                // slack: f32 accumulation of the k=32 quantized products
+                // (worst case k·eps·Σ|terms|, here folded into the bound
+                // and exact magnitudes)
+                let slack = 3e-4 * (exact.abs() + bound) + 1e-5;
+                if err > bound + slack {
+                    return Err(format!("({i},{jn}): err {err} > bound {bound}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
