@@ -92,15 +92,18 @@ def ref_quant_matmul(
 # refmodel_golden.rs replays.
 #
 # Quantization axes (shared contract with rust/src/refmodel/qlinear.rs):
-# every fake-quantized operand is grouped along its TRAILING axis.
-# Activations/gradients are transposed first where their contraction axis
-# is not trailing (the backward needs those transposes anyway), so they
-# are grouped along the contraction dimension exactly as the paper's
-# §3.2 per-token/per-block scheme.  The *weight* (K, N) is grouped along
-# its trailing storage axis N — the geometry `quant::quantize` /
-# `kernels::qgemm` pack weights with — instead of the paper's
-# contraction-axis K; the format table itself (FP8 attn / FP4 ffn / FP8
-# wgrad / exact agrad) follows the paper.
+# every fake-quantized operand is grouped along its CONTRACTION axis, as
+# the paper's §3.2 per-token/per-block scheme prescribes.
+# Activations/gradients achieve this with trailing-axis grouping
+# (transposed first where the contraction axis is not trailing — the
+# backward needs those transposes anyway).  The *weight* (K, N) is
+# grouped along K: the rust engine stores it once as w^T packed (N, K)
+# with groups along the trailing contraction axis
+# (`quant::quantize_rows_t`), consumed transposed by `kernels::qgemm_bt`
+# on the forward and as stored by `kernels::qgemm` on the backward dx;
+# here that is simply a fake-quant of w^T along its trailing axis,
+# transposed back.  The format table (FP8 attn / FP4 ffn / FP8 wgrad /
+# exact agrad) follows the paper.
 #
 # Numerics: everything float32.  Matmul accumulation order differs
 # between numpy (BLAS) and rust (ascending-k), so fixture comparisons are
@@ -168,10 +171,12 @@ class NpRecipe:
 
 def np_qlinear_fwd(x, w, spec: NpSpec):
     """y = Qf(x) @ Qf(w); returns (y, xq-free residuals).  x is (M, K)
-    grouped along K (contraction); w is (K, N) grouped along N (packed
-    storage axis — see the module comment)."""
+    grouped along K (contraction); w is (K, N) grouped along K too — the
+    paper's contraction-axis weight geometry, realized as a trailing-axis
+    fake-quant of w^T transposed back (the rust engine's single packed
+    (N, K) tensor decodes to exactly this — see the module comment)."""
     xq = spec.apply(x)
-    wq = spec.apply(w)
+    wq = np.ascontiguousarray(spec.apply(np.ascontiguousarray(w.T)).T)
     return (xq @ wq).astype(np.float32), (x, w, wq)
 
 

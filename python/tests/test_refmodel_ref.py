@@ -120,19 +120,21 @@ def test_fp16_path_matches_jax_autodiff():
 
 def _mirror_apply_qlinear(x, w, recipe, b=None):
     """apply_qlinear with the refmodel quantization axes: every operand
-    fake-quantized along its trailing axis (transposing first where the
-    contraction axis is not trailing), STE backward."""
+    fake-quantized along its CONTRACTION axis — trailing for activations
+    and gradients (transposing first where it is not trailing), axis 0
+    (= K) for the (K, N) weight, matching the rust engine's single
+    K-grouped packed tensor.  STE backward."""
 
-    def q(v, spec: QuantSpec):
+    def q(v, spec: QuantSpec, axis=-1):
         if not spec.enabled:
             return v
         gran = spec.granularity
         blk = spec.block
-        return fake_quant(v, FORMATS[spec.fmt], gran, axis=-1, block=blk)
+        return fake_quant(v, FORMATS[spec.fmt], gran, axis=axis, block=blk)
 
     @jax.custom_vjp
     def f(x2, w2):
-        return jnp.dot(q(x2, recipe.fwd), q(w2, recipe.fwd),
+        return jnp.dot(q(x2, recipe.fwd), q(w2, recipe.fwd, axis=0),
                        preferred_element_type=jnp.float32)
 
     def fwd(x2, w2):
@@ -140,7 +142,7 @@ def _mirror_apply_qlinear(x, w, recipe, b=None):
 
     def bwd(res, g):
         x2, w2 = res
-        wq = q(w2, recipe.fwd)
+        wq = q(w2, recipe.fwd, axis=0)
         dx = jnp.dot(q(g, recipe.agrad), wq.T, preferred_element_type=jnp.float32)
         xqt = q(x2.T, recipe.wgrad)
         gqt = q(g.T, recipe.wgrad)

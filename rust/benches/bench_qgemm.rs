@@ -16,11 +16,18 @@
 //! - `qgemm/64x4096x512/fp4b128/qgemm+panelcache` (same weights every
 //!   call, warm cache) must beat the cold-decode `qgemm` median — the
 //!   cross-call panel-reuse win.
+//! - `qgemm_bt/64x4096x512/fp4b128/qgemm_bt` (B stored 512×4096,
+//!   K-grouped — the QLinear forward orientation) must beat
+//!   `qgemm_bt/64x4096x512/fp4b128/dequantT+matmul` (dequantize, f32
+//!   transpose, matmul — the pre-rewire dataflow) by ≥ 2×; a dx-shaped
+//!   `qgemm_bt/512x64x4096` pair tracks the tall-skinny case.  The run
+//!   also prints the per-layer resident-bytes reduction from deleting
+//!   `QLinear::wt` (the cached (n, k) f32 decode both anchors obsolete).
 
 use fp4train::bench::Bencher;
 use fp4train::formats::{FP4_E2M1, FP8_E4M3};
 use fp4train::kernels::qgemm::{DEFAULT_PANEL_CACHE_BYTES, QJB, QKB};
-use fp4train::kernels::{matmul_f32, qgemm_into, Workspace};
+use fp4train::kernels::{matmul_f32, qgemm_bt_into, qgemm_into, Workspace};
 use fp4train::quant::{self, GranSpec};
 use fp4train::tensor::Tensor;
 use fp4train::util::rng::Rng;
@@ -103,6 +110,57 @@ fn main() {
         std::hint::black_box(&sout);
     });
 
+    // Transposed orientation: B stored (n, k), scale groups along the
+    // trailing contraction axis K — the QLinear forward geometry.  The
+    // baseline is the pre-rewire dataflow: dequantize to (n, k) f32,
+    // transpose, plain matmul.
+    let btq4 = quant::quantize(
+        &Tensor::randn(&[n, k], 0.5, &mut rng),
+        FP4_E2M1,
+        GranSpec::PerBlock(128),
+    );
+    let mut bt_out = vec![0.0f32; m * n];
+    {
+        // correctness guard for the bt pair
+        let want = matmul_f32(&a, &quant::dequantize(&btq4).transpose2().data, m, k, n);
+        qgemm_bt_into(&a, &btq4, m, k, n, &mut bt_out, &mut ws);
+        assert_eq!(bits(&bt_out), bits(&want), "qgemm_bt != dequantT+matmul — bench aborted");
+    }
+    b.section("A(64x4096) @ Bᵀ, B stored (512x4096) K-grouped per-block-128 (qgemm_bt anchor)");
+    b.bench("qgemm_bt/64x4096x512/fp4b128/dequantT+matmul", Some((macs, "mac/s")), || {
+        let wt = quant::dequantize(&btq4).transpose2();
+        std::hint::black_box(matmul_f32(&a, &wt.data, m, k, n));
+    });
+    b.bench("qgemm_bt/64x4096x512/fp4b128/qgemm_bt", Some((macs, "mac/s")), || {
+        qgemm_bt_into(&a, &btq4, m, k, n, &mut bt_out, &mut ws);
+        std::hint::black_box(&bt_out);
+    });
+
+    // dx-shaped: tall-skinny A against a wide transposed operand
+    let (dm, dk, dn) = (512usize, 64usize, 4096usize);
+    let dmacs = (dm * dk * dn) as f64;
+    let da: Vec<f32> = (0..dm * dk).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let dq4 = quant::quantize(
+        &Tensor::randn(&[dn, dk], 0.5, &mut rng),
+        FP4_E2M1,
+        GranSpec::PerBlock(128), // 128 ∤ 64 → whole-row (per-channel) groups
+    );
+    let mut dout = vec![0.0f32; dm * dn];
+    {
+        let want = matmul_f32(&da, &quant::dequantize(&dq4).transpose2().data, dm, dk, dn);
+        qgemm_bt_into(&da, &dq4, dm, dk, dn, &mut dout, &mut ws);
+        assert_eq!(bits(&dout), bits(&want), "dx-shaped qgemm_bt — bench aborted");
+    }
+    b.section("A(512x64) @ Bᵀ, B stored (4096x64) (dx-shaped qgemm_bt)");
+    b.bench("qgemm_bt/512x64x4096/fp4b128/dequantT+matmul", Some((dmacs, "mac/s")), || {
+        let wt = quant::dequantize(&dq4).transpose2();
+        std::hint::black_box(matmul_f32(&da, &wt.data, dm, dk, dn));
+    });
+    b.bench("qgemm_bt/512x64x4096/fp4b128/qgemm_bt", Some((dmacs, "mac/s")), || {
+        qgemm_bt_into(&da, &dq4, dm, dk, dn, &mut dout, &mut ws);
+        std::hint::black_box(&dout);
+    });
+
     b.write_json("BENCH_qgemm.json").expect("write BENCH_qgemm.json");
 
     // Peak B-operand bytes: what the dequantize round trip materializes vs
@@ -141,4 +199,34 @@ fn main() {
         .speedup("qgemm/8x512x128/fp4b128/dequant+matmul", "qgemm/8x512x128/fp4b128/qgemm")
         .unwrap();
     println!("small-shape: qgemm {small:.2}x vs dequant+matmul at 8x512x128");
+
+    let bt_anchor = b
+        .speedup(
+            "qgemm_bt/64x4096x512/fp4b128/dequantT+matmul",
+            "qgemm_bt/64x4096x512/fp4b128/qgemm_bt",
+        )
+        .unwrap();
+    println!("qgemm_bt anchor: {bt_anchor:.2}x vs transposed-dequantize+matmul (target >= 2x)");
+    if bt_anchor < 2.0 {
+        println!("WARNING: qgemm_bt speedup below the 2x acceptance bar");
+    }
+    let bt_dx = b
+        .speedup(
+            "qgemm_bt/512x64x4096/fp4b128/dequantT+matmul",
+            "qgemm_bt/512x64x4096/fp4b128/qgemm_bt",
+        )
+        .unwrap();
+    println!("dx-shaped qgemm_bt: {bt_dx:.2}x vs transposed-dequantize+matmul at 512x64x4096");
+
+    // Per-layer resident bytes: before the K-grouped rewiring every
+    // QLinear cached a (n, k) f32 transposed decode (`wt`) alongside the
+    // packed tensor; now only the packed codes + scales are resident and
+    // both GEMM orientations read them in place.
+    let wt_bytes = k * n * 4;
+    let packed_resident = btq4.packed.len() + btq4.scales.len() * 4;
+    println!(
+        "QLinear resident B-operand bytes at {k}x{n}: was {} (packed {packed_resident} + wt {wt_bytes}), now {packed_resident} ({:.1}x smaller; wt deleted)",
+        packed_resident + wt_bytes,
+        (packed_resident + wt_bytes) as f64 / packed_resident as f64
+    );
 }

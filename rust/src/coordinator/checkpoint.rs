@@ -61,9 +61,11 @@ pub struct Checkpoint {
 }
 
 /// A parameter exactly as stored on disk: raw f32, or packed low-precision
-/// codes + scales.  Packed weights feed `kernels::qgemm` directly via
-/// [`StoredTensor::matmul_a`] — consumers only pay the f32
-/// materialization if they explicitly ask for [`StoredTensor::to_tensor`].
+/// codes + scales.  Packed weights feed `kernels::qgemm` /
+/// `kernels::qgemm_bt` directly via [`StoredTensor::matmul_a`] (as
+/// stored) and [`StoredTensor::matmul_a_bt`] (transposed) — consumers
+/// only pay the f32 materialization if they explicitly ask for
+/// [`StoredTensor::to_tensor`].
 #[derive(Clone, Debug)]
 pub enum StoredTensor {
     F32(Tensor),
@@ -106,6 +108,27 @@ impl StoredTensor {
         match self {
             StoredTensor::F32(t) => a.matmul(t),
             StoredTensor::Quantized(q) => a.matmul_quant(q, ws),
+        }
+    }
+
+    /// `a @ selfᵀ` — the transposed-orientation GEMM on the same stored
+    /// payload: packed weights feed `kernels::qgemm_bt` (transposed
+    /// panels decoded in place, no f32 transpose ever materialized), f32
+    /// weights are transposed per call.  Bit-identical to
+    /// `a.matmul(&self.to_tensor().transpose2())`.
+    ///
+    /// This is how a restored packed checkpoint serves GEMMs against the
+    /// *transpose* of a stored weight — e.g. tied-head logits
+    /// `hf @ wteᵀ` with `wte` stored `(V, d)` — without a dequantize +
+    /// transpose round trip.  Panel-cache keys carry the orientation, so
+    /// one [`StoredTensor::gemm_workspace`] serves both [`matmul_a`]
+    /// (as-stored) and this call against the same tensor.
+    ///
+    /// [`matmul_a`]: StoredTensor::matmul_a
+    pub fn matmul_a_bt(&self, a: &Tensor, ws: &mut crate::kernels::Workspace) -> Tensor {
+        match self {
+            StoredTensor::F32(t) => a.matmul(&t.transpose2()),
+            StoredTensor::Quantized(q) => a.matmul_quant_bt(q, ws),
         }
     }
 
@@ -429,6 +452,48 @@ mod tests {
             }
         }
         assert!(ws.panel_cache_stats().unwrap().hits > 0);
+    }
+
+    #[test]
+    fn matmul_a_bt_serves_both_orientations_from_one_restored_tensor() {
+        // tied-head pattern: wte stored (V=32, d=128) packed; logits need
+        // hf @ wteᵀ (the bt orientation) while embedding-side consumers
+        // multiply as stored — one workspace, one tensor, both ways
+        let c = sample();
+        let p = tmp("bt.ckpt");
+        save(&c, &p, WeightCodec::Fp4Block).unwrap();
+        let pk = load_packed(&p).unwrap();
+        let w = &pk.params[0].1; // (32, 128)
+        let dense = w.to_tensor();
+        let mut ws = StoredTensor::gemm_workspace();
+        let mut rng = Rng::new(14);
+        for round in 0..2 {
+            let hf = Tensor::randn(&[5, 128], 1.0, &mut rng);
+            let got = w.matmul_a_bt(&hf, &mut ws); // (5, 32)
+            let want = hf.matmul(&dense.transpose2());
+            assert_eq!(
+                got.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                want.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "bt round {round}"
+            );
+            let acts = Tensor::randn(&[5, 32], 1.0, &mut rng);
+            let got_fwd = w.matmul_a(&acts, &mut ws);
+            let want_fwd = acts.matmul(&dense);
+            assert_eq!(
+                got_fwd.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                want_fwd.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "as-stored round {round}"
+            );
+        }
+        // the f32-stored branch takes the transpose fallback path
+        let wf = StoredTensor::F32(Tensor::randn(&[6, 16], 1.0, &mut rng));
+        let a = Tensor::randn(&[3, 16], 1.0, &mut rng);
+        let got = wf.matmul_a_bt(&a, &mut ws);
+        let want = a.matmul(&wf.to_tensor().transpose2());
+        assert_eq!(
+            got.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            want.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
     }
 
     #[test]

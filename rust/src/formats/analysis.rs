@@ -99,6 +99,28 @@ pub fn gemm_error(
     diff_stats(&exact, &approx, None)
 }
 
+/// [`gemm_error`] for the paper's §3.2 **contraction-axis** weight
+/// grouping: the (k × n) B operand is packed K-grouped (transposed
+/// storage, groups along K — `quant::quantize_rows_t`) and contracted
+/// through `kernels::qgemm_bt`, so the measured damage is that of the
+/// geometry the refmodel's `QLinear` actually trains with.  Comparing
+/// this against [`gemm_error`] at the same block size quantifies what
+/// the K-axis grouping buys at the GEMM-output level.
+pub fn gemm_error_t(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    fmt: FpFormat,
+    g: Granularity,
+) -> QuantErrorStats {
+    let q = crate::quant::quantize_rows_t(b, k, n, fmt, crate::quant::GranSpec::from_granularity(g));
+    let exact = crate::kernels::matmul_f32(a, b, m, k, n);
+    let approx = crate::kernels::qgemm_bt(a, &q, m, k, n);
+    diff_stats(&exact, &approx, None)
+}
+
 /// Fraction of values whose FP-`a` and FP-`b` quantizations differ by more
 /// than `tol` relative — the paper's "difference between FP4 and FP8/FP16"
 /// measure for Fig. 1(b).
@@ -194,6 +216,27 @@ mod tests {
         let e8 = gemm_error(&a, &b, m, k, n, FP8_E4M3, Granularity::PerBlock(32));
         assert!(e4.mse > e8.mse, "{e4:?} vs {e8:?}");
         assert!(e4.sqnr_db < e8.sqnr_db);
+    }
+
+    #[test]
+    fn gemm_error_t_measures_kgrouped_geometry() {
+        // same (k × n) operand, grouped along K instead of N: the stats
+        // must be finite, format-ordered, and genuinely different from
+        // the N-grouped measurement (the grouping axis matters)
+        let (m, k, n) = (8usize, 128usize, 64usize);
+        let a = gaussian(m * k, 1.0, 9);
+        // rows of very different magnitude: K-grouping puts each row's
+        // scale across rows, so the two geometries must disagree
+        let mut b = gaussian(k * n, 1.0, 10);
+        for v in b[..(k / 2) * n].iter_mut() {
+            *v *= 1e-2;
+        }
+        let kt4 = gemm_error_t(&a, &b, m, k, n, FP4_E2M1, Granularity::PerBlock(32));
+        let kt8 = gemm_error_t(&a, &b, m, k, n, FP8_E4M3, Granularity::PerBlock(32));
+        assert!(kt4.mse.is_finite() && kt4.mse > 0.0);
+        assert!(kt4.mse > kt8.mse, "{kt4:?} vs {kt8:?}");
+        let nt4 = gemm_error(&a, &b, m, k, n, FP4_E2M1, Granularity::PerBlock(32));
+        assert_ne!(kt4.mse, nt4.mse, "grouping axis must change the measurement");
     }
 
     #[test]

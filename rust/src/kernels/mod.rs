@@ -1,5 +1,7 @@
 //! Host-side compute kernels — three families on one shared runtime, one
-//! contract.
+//! contract.  (Repo-wide layering, including how these families feed the
+//! refmodel training engine and the bench workflow, is documented in
+//! `docs/ARCHITECTURE.md`.)
 //!
 //! # The runtime: persistent worker pool ([`pool`])
 //!
@@ -43,16 +45,22 @@
 //! [`qgemm`] consumes a **packed** `QuantizedTensor` B operand directly —
 //! FP4 nibbles or FP8 bytes plus scales — decoding panels through the
 //! family-1 LUTs inside the tile loop, so the full f32 B matrix never
-//! exists.  Its inner loop is a BLIS-style register-blocked 1×4
-//! microkernel (k innermost, four accumulators live in registers), the
-//! loop shape the upcoming SIMD pass will vectorize.  A
-//! [`qgemm::PanelCache`] can be attached to a [`qgemm::Workspace`]
-//! (`Workspace::with_panel_cache`) to memoize decoded B panels across
-//! calls keyed by (tensor id, panel coords) — repeated GEMMs against the
-//! same packed weights (checkpoint-restored inference, probe sweeps over
-//! a fixed feature matrix) decode each panel exactly once.  Use `matmul`
-//! when both operands are f32; use `qgemm` whenever B is already
-//! quantized instead of `dequantize` + `matmul`.
+//! exists; [`qgemm::qgemm_bt`] is the same engine consuming the stored
+//! `(n, k)` tensor **transposed**, which puts the trailing-axis scale
+//! groups on the contraction axis (the paper's §3.2 weight geometry —
+//! the refmodel forward runs on it while dx reuses the identical packed
+//! tensor through plain `qgemm`).  The inner loop of all of them is a
+//! BLIS-style register-blocked 1×4 microkernel (k innermost, four
+//! accumulators live in registers), the loop shape the upcoming SIMD
+//! pass will vectorize.  A [`qgemm::PanelCache`] can be attached to a
+//! [`qgemm::Workspace`] (`Workspace::with_panel_cache`) to memoize
+//! decoded B panels across calls keyed by (tensor id, orientation, panel
+//! coords) — repeated GEMMs against the same packed weights
+//! (checkpoint-restored inference, probe sweeps over a fixed feature
+//! matrix) decode each panel exactly once, in either orientation.  Use
+//! `matmul` when both operands are f32; use `qgemm`/`qgemm_bt` whenever
+//! B is already quantized instead of `dequantize` (+ transpose) +
+//! `matmul`.
 //!
 //! # Bit-exactness contract
 //!
@@ -92,4 +100,4 @@ pub use fused::{fake_quant_rows_fast, quantize_pack_rows};
 pub use lut::{decode_fast, decode_lut, encode_fast};
 pub use matmul::{matmul_bias_into, matmul_f32, matmul_into};
 pub use parallel::{fake_quant_rows_auto, quantize_pack_rows_auto};
-pub use qgemm::{qgemm, qgemm_into, PanelCache, PanelCacheStats, Workspace};
+pub use qgemm::{qgemm, qgemm_bt, qgemm_bt_into, qgemm_into, PanelCache, PanelCacheStats, Workspace};

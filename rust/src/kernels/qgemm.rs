@@ -1,5 +1,5 @@
-//! Packed-operand quantized GEMM: `f32 A @ QuantizedTensor B` without ever
-//! materializing the f32 B matrix.
+//! Packed-operand quantized GEMM: `f32 A @ QuantizedTensor B` (and
+//! `A @ Bᵀ`) without ever materializing the f32 B matrix.
 //!
 //! The B operand stays in its storage form (FP4 nibbles or FP8 bytes plus
 //! per-tensor/row/block scales).  Inside the k/j tile loop each B panel is
@@ -9,10 +9,25 @@
 //! panel instead of the full `k × n × 4` bytes a dequantize-then-matmul
 //! round trip allocates.
 //!
+//! # Two orientations, one engine
+//!
+//! [`qgemm`] contracts A against B *as stored* — B is `(k, n)` row-major
+//! and scale groups run along its trailing storage axis n.  [`qgemm_bt`]
+//! contracts A against the **transpose** of the stored matrix: B is
+//! stored `(n, k)` and the GEMM computes `out[i, j] = Σ_k a[i, k] ·
+//! b[j, k]`, so the trailing storage axis — the one the repo's packing
+//! groups scales along — *is the contraction axis K*.  That is the
+//! paper's §3.2 fine-grained geometry for weights, and it is what lets
+//! `refmodel::QLinear` keep a single K-grouped packed tensor that serves
+//! both the forward (`x @ wᵀ` via `qgemm_bt`) and the backward dx
+//! (`g @ wstore` via plain `qgemm`) with no cached f32 transpose.  Both
+//! orientations share the tile driver, the microkernel, the workspace,
+//! and the panel cache; they differ only in how a panel is decoded.
+//!
 //! # Microkernel
 //!
 //! The multiply itself is a BLIS-style register-blocked 1×4 microkernel
-//! ([`mac_panel`]): four output columns accumulate in registers while the
+//! (`mac_panel`): four output columns accumulate in registers while the
 //! contraction index k runs innermost over the decoded panel, plus a
 //! 1-wide edge loop for the ragged tail.  Per output element the k terms
 //! are still consumed in strictly ascending order with the same
@@ -27,8 +42,9 @@
 //! packed weights call after call; decoding the same panels every time is
 //! pure waste.  A [`PanelCache`] attached to a [`Workspace`]
 //! ([`Workspace::with_panel_cache`]) memoizes decoded panels keyed by
-//! (tensor id, k0, j0, panel width): the first GEMM against a tensor
-//! decodes each panel once, every later GEMM reuses the cached f32 bits.
+//! (tensor id, orientation, k0, j0, panel width): the first GEMM against
+//! a tensor decodes each panel once, every later GEMM — in either
+//! orientation — reuses its own cached f32 bits.
 //! Decoding is deterministic, so cache hits are bit-identical to fresh
 //! decodes; the capacity cap only controls *whether* a panel is retained,
 //! never its contents.  One-shot callers (analysis, tests) simply leave
@@ -81,51 +97,105 @@ const MIN_STRIPE: usize = 64;
 pub const DEFAULT_PANEL_CACHE_BYTES: usize = 64 << 20;
 
 /// Borrowed view of a packed B operand, resolved once per GEMM call:
-/// codes, scales, grouping geometry, identity, and the static decode
-/// table.
+/// codes, scales, grouping geometry, orientation, identity, and the
+/// static decode table.
 struct PackedB<'a> {
     packed: &'a [u8],
     scales: &'a [f32],
     /// Elements per scale group (contiguous in flat row-major order).
     glen: usize,
-    /// Row stride = output columns.
-    n: usize,
+    /// Trailing storage dimension (row stride of the stored matrix):
+    /// output columns `n` for the as-stored orientation, contraction
+    /// depth `k` for the transposed one.
+    stride: usize,
     table: &'static [f32],
     fp4: bool,
+    /// Transposed orientation: the GEMM consumes the stored `(n, k)`
+    /// matrix as `Bᵀ`, contracting along its trailing storage axis.
+    bt: bool,
     /// `QuantizedTensor::id` — the panel-cache key component.
     id: u64,
 }
 
 impl<'a> PackedB<'a> {
-    fn new(q: &'a QuantizedTensor, k: usize, n: usize) -> PackedB<'a> {
+    fn build(q: &'a QuantizedTensor, rows: usize, cols: usize, bt: bool) -> PackedB<'a> {
         let fmt = q.fmt();
-        assert_eq!(q.rows_cols(), (k, n), "B is {k}x{n}");
+        assert_eq!(q.rows_cols(), (rows, cols), "B is {rows}x{cols} (bt={bt})");
         let glen = q.group_len();
         let fp4 = fmt.bits() <= 4;
-        let need = if fp4 { (k * n).div_ceil(2) } else { k * n };
+        let need = if fp4 { (rows * cols).div_ceil(2) } else { rows * cols };
         assert!(q.packed.len() >= need, "packed B too short: {} < {need}", q.packed.len());
         assert!(
-            q.scales.len() >= (k * n).max(1).div_ceil(glen),
+            q.scales.len() >= (rows * cols).max(1).div_ceil(glen),
             "scale count vs geometry"
         );
         PackedB {
             packed: &q.packed,
             scales: &q.scales,
             glen,
-            n,
+            stride: cols,
             table: decode_lut(fmt),
             fp4,
+            bt,
             id: q.id(),
         }
     }
 
-    /// Decode the (k0..k1) × (j0..j1) panel into `panel` (row-major,
-    /// `j1-j0` stride).  One scale load per group segment; each element is
-    /// `table[code] * scale`, bit-identical to `quant::dequantize`.
+    /// As-stored orientation: B is `(k, n)` row-major, contraction along
+    /// storage rows, groups along the trailing output axis n.
+    fn new(q: &'a QuantizedTensor, k: usize, n: usize) -> PackedB<'a> {
+        PackedB::build(q, k, n, false)
+    }
+
+    /// Transposed orientation: B is stored `(n, k)` row-major and the
+    /// GEMM consumes `Bᵀ`, so groups — along the trailing storage axis
+    /// k — run along the contraction dimension (paper §3.2 weights).
+    fn new_bt(q: &'a QuantizedTensor, k: usize, n: usize) -> PackedB<'a> {
+        PackedB::build(q, n, k, true)
+    }
+
+    /// Decode the logical (k0..k1) × (j0..j1) panel into `panel`
+    /// (row-major, `j1-j0` stride, k-major — the layout [`mac_panel`]
+    /// consumes for **both** orientations).  One scale load per group
+    /// segment; each element is `table[code] * scale`, bit-identical to
+    /// `quant::dequantize` of the same stored element.
+    ///
+    /// As-stored, logical (k, j) lives at flat `k * stride + j` and the
+    /// inner loop walks a storage row along j.  Transposed, it lives at
+    /// `j * stride + k`: the inner loop still walks a storage row (now
+    /// along k, where the scale groups lie), writing j-strided into the
+    /// panel — reads stay sequential, group scales still load once per
+    /// segment.
     fn decode_panel(&self, k0: usize, k1: usize, j0: usize, j1: usize, panel: &mut [f32]) {
         let jw = j1 - j0;
+        if self.bt {
+            for jj in j0..j1 {
+                let row_off = jj * self.stride;
+                let col = jj - j0;
+                let mut kk = k0;
+                while kk < k1 {
+                    let g = (row_off + kk) / self.glen;
+                    let gend = k1.min((g + 1) * self.glen - row_off);
+                    let s = self.scales[g];
+                    if self.fp4 {
+                        for kv in kk..gend {
+                            let idx = row_off + kv;
+                            let c = (self.packed[idx >> 1] >> ((idx & 1) * 4)) & 0x0F;
+                            panel[(kv - k0) * jw + col] = self.table[c as usize] * s;
+                        }
+                    } else {
+                        for kv in kk..gend {
+                            panel[(kv - k0) * jw + col] =
+                                self.table[self.packed[row_off + kv] as usize] * s;
+                        }
+                    }
+                    kk = gend;
+                }
+            }
+            return;
+        }
         for kk in k0..k1 {
-            let row_off = kk * self.n;
+            let row_off = kk * self.stride;
             let dst = &mut panel[(kk - k0) * jw..(kk - k0 + 1) * jw];
             let mut j = j0;
             while j < j1 {
@@ -162,15 +232,18 @@ pub struct PanelCacheStats {
     pub bytes: usize,
 }
 
-/// (tensor id, k0, panel height, j0, panel width, row stride n).  Width
-/// is part of the key because the j extent of a panel at a given j0
-/// depends on the stripe layout the call used — two thread counts may
-/// tile the same tensor differently.  Height and n are defense in depth:
-/// `PackedB::new` already pins (k, n) to the tensor's own `rows_cols`,
-/// but keying the full decode geometry means even a contract violation
-/// (mutating a tensor's pub `shape` after construction) can never serve
-/// a panel decoded at the wrong stride.
-type PanelKey = (u64, u32, u32, u32, u32, u32);
+/// (tensor id, orientation, k0, panel height, j0, panel width, storage
+/// row stride).  Width is part of the key because the j extent of a
+/// panel at a given j0 depends on the stripe layout the call used — two
+/// thread counts may tile the same tensor differently.  The orientation
+/// flag keeps as-stored and transposed panels of the *same* tensor apart
+/// (`QLinear` multiplies one packed weight both ways through one
+/// workspace).  Height and stride are defense in depth: `PackedB::build`
+/// already pins the geometry to the tensor's own `rows_cols`, but keying
+/// the full decode geometry means even a contract violation (mutating a
+/// tensor's pub `shape` after construction) can never serve a panel
+/// decoded at the wrong stride.
+type PanelKey = (u64, bool, u32, u32, u32, u32, u32);
 
 struct PanelCacheInner {
     map: HashMap<PanelKey, Arc<[f32]>>,
@@ -188,7 +261,7 @@ struct PanelCacheInner {
 /// further panels are decoded into the lane's reusable scratch exactly
 /// like the uncached path (no per-panel allocation), just not retained.
 /// Contents are bit-exact by construction — panels are the deterministic
-/// output of [`PackedB::decode_panel`], so hit, miss, and cache-full
+/// output of `PackedB::decode_panel`, so hit, miss, and cache-full
 /// paths produce identical GEMM results.
 pub struct PanelCache {
     inner: Mutex<PanelCacheInner>,
@@ -406,11 +479,12 @@ fn sweep_cols(
                 Some(c) => {
                     let key: PanelKey = (
                         b.id,
+                        b.bt,
                         k0 as u32,
                         (k1 - k0) as u32,
                         j0 as u32,
                         jw as u32,
-                        b.n as u32,
+                        b.stride as u32,
                     );
                     if let Some(p) = c.lookup(key) {
                         cached = p;
@@ -438,33 +512,12 @@ fn sweep_cols(
     }
 }
 
-/// (m × k) f32 A @ packed (k × n) B into a caller-owned buffer, decoding B
-/// panel-by-panel through `ws` scratch (and its panel cache, when
-/// attached).  Bit-identical to
-/// `matmul_f32(a, &dequantize(q).data, m, k, n)`; the full f32 B matrix is
-/// never allocated.
-pub fn qgemm_into(
-    a: &[f32],
-    q: &QuantizedTensor,
-    m: usize,
-    k: usize,
-    n: usize,
-    out: &mut [f32],
-    ws: &mut Workspace,
-) {
-    assert_eq!(a.len(), m * k, "A is {m}x{k}");
-    assert_eq!(out.len(), m * n, "out is {m}x{n}");
-    if m == 0 || n == 0 {
-        return;
-    }
-    if k == 0 {
-        // empty contraction: A @ B is all-zero, matching `matmul_f32` (a
-        // zero-row B can't even express its geometry through rows_cols)
-        out.fill(0.0);
-        return;
-    }
-    let b = PackedB::new(q, k, n);
-    let bref = &b;
+/// The shared tile driver behind both orientations: entry points have
+/// already validated shapes, handled empty dims, and resolved the
+/// operand view — from here on the orientation lives entirely inside
+/// [`PackedB::decode_panel`].
+fn gemm_driver(a: &[f32], b: &PackedB, m: usize, k: usize, n: usize, out: &mut [f32], ws: &mut Workspace) {
+    let bref = b;
     let flops = m * k * n;
     let Workspace { panel, lanes, cache } = ws;
     let cache = cache.as_ref();
@@ -514,7 +567,7 @@ pub fn qgemm_into(
     let nt_rows = if flops < PAR_MIN_FLOPS { 1 } else { worker_threads(m) };
     out.fill(0.0);
     if nt_rows < 2 {
-        sweep_cols(a, m, k, &b, 0, n, panel, cache, out, n);
+        sweep_cols(a, m, k, b, 0, n, panel, cache, out, n);
         return;
     }
     let rows_per = m.div_ceil(nt_rows);
@@ -536,6 +589,70 @@ pub fn qgemm_into(
     });
 }
 
+/// (m × k) f32 A @ packed (k × n) B into a caller-owned buffer, decoding B
+/// panel-by-panel through `ws` scratch (and its panel cache, when
+/// attached).  Bit-identical to
+/// `matmul_f32(a, &dequantize(q).data, m, k, n)`; the full f32 B matrix is
+/// never allocated.
+pub fn qgemm_into(
+    a: &[f32],
+    q: &QuantizedTensor,
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+    ws: &mut Workspace,
+) {
+    assert_eq!(a.len(), m * k, "A is {m}x{k}");
+    assert_eq!(out.len(), m * n, "out is {m}x{n}");
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        // empty contraction: A @ B is all-zero, matching `matmul_f32` (a
+        // zero-row B can't even express its geometry through rows_cols)
+        out.fill(0.0);
+        return;
+    }
+    let b = PackedB::new(q, k, n);
+    gemm_driver(a, &b, m, k, n, out, ws);
+}
+
+/// (m × k) f32 A @ packed Bᵀ into a caller-owned buffer, where B is
+/// **stored** `(n, k)` and scale groups run along its trailing storage
+/// axis — the contraction axis K of this GEMM (the paper's §3.2 weight
+/// geometry).  Bit-identical to
+/// `matmul_f32(a, &transpose(dequantize(q)), m, k, n)`; neither the f32
+/// B matrix nor its transpose is ever allocated.
+///
+/// Shares everything with [`qgemm_into`] — microkernel, pool splits,
+/// workspace scratch, and the panel cache (keys carry the orientation,
+/// so one packed tensor can be multiplied both ways through one cached
+/// workspace, as `refmodel::QLinear` does for the forward and dx GEMMs).
+pub fn qgemm_bt_into(
+    a: &[f32],
+    q: &QuantizedTensor,
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+    ws: &mut Workspace,
+) {
+    assert_eq!(a.len(), m * k, "A is {m}x{k}");
+    assert_eq!(out.len(), m * n, "out is {m}x{n}");
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        // empty contraction: A @ Bᵀ is all-zero, matching `matmul_f32`
+        // (a zero-column stored B carries no decodable geometry)
+        out.fill(0.0);
+        return;
+    }
+    let b = PackedB::new_bt(q, k, n);
+    gemm_driver(a, &b, m, k, n, out, ws);
+}
+
 /// Allocating convenience wrapper around [`qgemm_into`] with a throwaway
 /// workspace — for one-shot callers (analysis, tests).  Hot loops should
 /// hold a [`Workspace`] (cache-enabled when the weights repeat) and an
@@ -544,6 +661,15 @@ pub fn qgemm(a: &[f32], q: &QuantizedTensor, m: usize, k: usize, n: usize) -> Ve
     let mut out = vec![0.0f32; m * n];
     let mut ws = Workspace::new();
     qgemm_into(a, q, m, k, n, &mut out, &mut ws);
+    out
+}
+
+/// Allocating convenience wrapper around [`qgemm_bt_into`] with a
+/// throwaway workspace — `q` is stored `(n, k)`, the result is `(m, n)`.
+pub fn qgemm_bt(a: &[f32], q: &QuantizedTensor, m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    let mut ws = Workspace::new();
+    qgemm_bt_into(a, q, m, k, n, &mut out, &mut ws);
     out
 }
 
@@ -563,6 +689,12 @@ mod tests {
 
     fn reference(a: &[f32], q: &QuantizedTensor, m: usize, k: usize, n: usize) -> Vec<f32> {
         matmul_f32(a, &dequantize(q).data, m, k, n)
+    }
+
+    /// The transposed-orientation oracle: materialize the f32 transpose of
+    /// the stored (n, k) matrix, then the plain blocked matmul.
+    fn reference_bt(a: &[f32], q: &QuantizedTensor, m: usize, k: usize, n: usize) -> Vec<f32> {
+        matmul_f32(a, &dequantize(q).transpose2().data, m, k, n)
     }
 
     #[test]
@@ -740,5 +872,103 @@ mod tests {
         let q = quantize_rows(&[], 0, 4, FP4_E2M1, GranSpec::PerTensor);
         assert_eq!(qgemm(&[], &q, 2, 0, 4), vec![0.0; 8]);
         assert_eq!(matmul_f32(&[], &[], 2, 0, 4), vec![0.0; 8]);
+    }
+
+    #[test]
+    fn qgemm_bt_bit_identical_to_transposed_dequant_matmul() {
+        // B stored (n, k) with groups along k — the K-grouped weight
+        // layout; shapes straddle both tile edges and every jw % 4 edge
+        for fmt in [FP4_E2M1, FP8_E4M3, FP8_E5M2] {
+            prop_check("qgemm_bt == matmul(dequantize^T)", 30, |c| {
+                let m = c.usize_in(1, 5);
+                let k = [1usize, 7, 64, 255, 256, 257][c.usize_in(0, 5)];
+                let n = [1usize, 2, 3, 8, 130, 511, 512, 513][c.usize_in(0, 7)];
+                let a = c.f32_vec_wild(m * k, m * k);
+                let bdata = c.f32_vec_wild(n * k, n * k);
+                for g in [GranSpec::PerTensor, GranSpec::PerRow, GranSpec::PerBlock(32)] {
+                    // quantized along the trailing storage axis = K
+                    let q = quantize_rows(&bdata, n, k, fmt, g);
+                    let got = qgemm_bt(&a, &q, m, k, n);
+                    let want = reference_bt(&a, &q, m, k, n);
+                    for (i, (x, y)) in got.iter().zip(&want).enumerate() {
+                        let same = x.to_bits() == y.to_bits() || (x.is_nan() && y.is_nan());
+                        prop_assert!(same, "{} {g:?} {m}x{k}x{n} idx {i}: {x} vs {y}", fmt.name);
+                    }
+                }
+                Ok(())
+            });
+        }
+    }
+
+    #[test]
+    fn qgemm_bt_parallel_paths_bit_identical() {
+        // column-split shape (ragged last stripe) and the narrow-output
+        // A-row-split fallback, both past PAR_MIN_FLOPS
+        let mut rng = Rng::new(48);
+        for (m, k, n) in [(64usize, 512usize, 640usize), (512, 256, 64)] {
+            let a: Vec<f32> = (0..m * k).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let bdata: Vec<f32> = (0..n * k).map(|_| rng.normal_f32(0.0, 0.5)).collect();
+            for (fmt, g) in [(FP4_E2M1, GranSpec::PerBlock(128)), (FP8_E4M3, GranSpec::PerRow)] {
+                let q = quantize_rows(&bdata, n, k, fmt, g);
+                assert_eq!(
+                    bits(&qgemm_bt(&a, &q, m, k, n)),
+                    bits(&reference_bt(&a, &q, m, k, n)),
+                    "{} {g:?} {m}x{k}x{n}",
+                    fmt.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn panel_cache_serves_both_orientations_of_one_tensor() {
+        // the QLinear pattern: one K-grouped packed weight, multiplied as
+        // Bᵀ on the forward and as-stored on dx, through ONE cached
+        // workspace — orientation is part of the panel key, so neither
+        // direction may ever see the other's panels
+        let mut rng = Rng::new(49);
+        let (kin, nout) = (96usize, 80usize);
+        let wdata: Vec<f32> = (0..nout * kin).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let q = quantize_rows(&wdata, nout, kin, FP4_E2M1, GranSpec::PerBlock(32));
+        let mut ws = Workspace::with_panel_cache(DEFAULT_PANEL_CACHE_BYTES);
+        let m = 4usize;
+        let x: Vec<f32> = (0..m * kin).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let g: Vec<f32> = (0..m * nout).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let want_fwd = reference_bt(&x, &q, m, kin, nout);
+        let want_dx = reference(&g, &q, m, nout, kin);
+        let (mut y, mut dx) = (vec![0.0f32; m * nout], vec![0.0f32; m * kin]);
+        for pass in 0..3 {
+            qgemm_bt_into(&x, &q, m, kin, nout, &mut y, &mut ws);
+            qgemm_into(&g, &q, m, nout, kin, &mut dx, &mut ws);
+            assert_eq!(bits(&y), bits(&want_fwd), "fwd pass {pass}");
+            assert_eq!(bits(&dx), bits(&want_dx), "dx pass {pass}");
+        }
+        let s = ws.panel_cache_stats().unwrap();
+        // both orientations retained panels; passes 1-2 replayed them
+        assert!(s.panels >= 2 && s.hits > 0, "{s:?}");
+    }
+
+    #[test]
+    fn qgemm_bt_degenerate_and_empty_geometries() {
+        let mut rng = Rng::new(50);
+        for (k, n, g) in [
+            (5usize, 3usize, GranSpec::PerBlock(2)),
+            (1, 7, GranSpec::PerRow),
+            (16, 16, GranSpec::PerBlock(16)),
+        ] {
+            let a: Vec<f32> = (0..2 * k).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let bdata: Vec<f32> = (0..n * k).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let q = quantize_rows(&bdata, n, k, FP4_E2M1, g);
+            assert_eq!(
+                bits(&qgemm_bt(&a, &q, 2, k, n)),
+                bits(&reference_bt(&a, &q, 2, k, n)),
+                "{g:?}"
+            );
+        }
+        // k == 0 zeros the output; m == 0 / n == 0 touch nothing
+        let q = quantize_rows(&[], 4, 0, FP4_E2M1, GranSpec::PerTensor);
+        assert_eq!(qgemm_bt(&[], &q, 2, 0, 4), vec![0.0; 8]);
+        let q2 = quantize_rows(&[1.0, 2.0], 1, 2, FP4_E2M1, GranSpec::PerRow);
+        assert!(qgemm_bt(&[], &q2, 0, 2, 1).is_empty());
     }
 }

@@ -134,6 +134,115 @@ pub fn quantize_rows(x: &[f32], rows: usize, cols: usize, fmt: FpFormat, g: Gran
     QuantizedTensor::new(fmt.name.to_string(), vec![rows, cols], g, packed, scales)
 }
 
+/// Quantize the **transpose** of a row-major (rows × cols) buffer: the
+/// result stores `(cols, rows)` with scale groups along its trailing
+/// axis — the *leading* axis of the input.  For a weight held `(K, N)`
+/// in memory this is the paper's §3.2 contraction-axis (K-grouped)
+/// packing, ready for both `kernels::qgemm_bt` (forward, `x @ wᵀ`) and
+/// `kernels::qgemm` (backward dx, `g @ wstore`) — see
+/// `docs/ARCHITECTURE.md`.
+///
+/// Bit-identical to `quantize_rows(&transpose(x), cols, rows, fmt, g)`
+/// without ever materializing the f32 transpose: every group is walked
+/// in the transposed flat order (so `scale_of` folds the same element
+/// sequence — for the PerTensor group the fold is a max over absolute
+/// values, order-independent bit-for-bit, so it runs in cache-friendly
+/// input order) and each element is encoded through the same LUT codec
+/// the fused path uses (`encode_fast == codec::encode` for every f32,
+/// exhaustively tested in `kernels::lut`).  Like the fused quantize this
+/// is on the per-optimizer-step repack path, so output rows fan out
+/// across the `kernels::pool` workers above the usual element threshold
+/// (rows are independent — bit-identical at any thread count).
+pub fn quantize_rows_t(x: &[f32], rows: usize, cols: usize, fmt: FpFormat, g: GranSpec) -> QuantizedTensor {
+    assert_eq!(x.len(), rows * cols);
+    let (orows, ocols) = (cols, rows); // output storage geometry
+    let total = orows * ocols;
+    if total == 0 {
+        return QuantizedTensor::new(fmt.name.to_string(), vec![orows, ocols], g, Vec::new(), Vec::new());
+    }
+    // groups never span output rows except PerTensor, whose single scale
+    // is computed up front (gpr == 0 marks that case for the row job)
+    let (eb, gpr) = match g {
+        GranSpec::PerTensor => (ocols, 0usize),
+        GranSpec::PerRow => (ocols, 1),
+        GranSpec::PerBlock(b0) => {
+            let b = effective_block(ocols, b0);
+            (b, ocols / b)
+        }
+    };
+    let tensor_scale = match g {
+        GranSpec::PerTensor => scale_of(x.iter().copied(), fmt),
+        _ => 0.0,
+    };
+    let mut codes = vec![0u8; total];
+    let mut scales = vec![0.0f32; if gpr == 0 { 1 } else { orows * gpr }];
+    if gpr == 0 {
+        scales[0] = tensor_scale;
+    }
+    // one output row j: ocols codes from the strided column j of x, one
+    // scale per eb-long group (or the shared tensor scale)
+    let row_job = |j: usize, codes_row: &mut [u8], scales_row: &mut [f32]| {
+        let mut kk = 0;
+        while kk < ocols {
+            let kend = kk + eb;
+            let s = if gpr == 0 {
+                tensor_scale
+            } else {
+                let s = scale_of((kk..kend).map(|t| x[t * cols + j]), fmt);
+                scales_row[kk / eb] = s;
+                s
+            };
+            let mut idx = kk * cols + j;
+            for c in codes_row[kk..kend].iter_mut() {
+                *c = kernels::encode_fast(fmt, x[idx] / s);
+                idx += cols;
+            }
+            kk = kend;
+        }
+    };
+    let nt = if total < kernels::parallel::PAR_MIN_ELEMS { 1 } else { kernels::worker_threads(orows) };
+    if nt < 2 {
+        for j in 0..orows {
+            let sl = if gpr == 0 { 0..0 } else { j * gpr..(j + 1) * gpr };
+            row_job(j, &mut codes[j * ocols..(j + 1) * ocols], &mut scales[sl]);
+        }
+    } else {
+        let rows_per = orows.div_ceil(nt);
+        let row_job = &row_job;
+        kernels::pool::scope(|sc| {
+            let mut crem: &mut [u8] = &mut codes;
+            let mut srem: &mut [f32] = if gpr == 0 { &mut [] } else { &mut scales };
+            let mut r0 = 0usize;
+            while !crem.is_empty() {
+                let nrows = rows_per.min(crem.len() / ocols);
+                let (cch, cr) = std::mem::take(&mut crem).split_at_mut(nrows * ocols);
+                crem = cr;
+                let sch: &mut [f32] = if gpr == 0 {
+                    &mut []
+                } else {
+                    let (s, sr) = std::mem::take(&mut srem).split_at_mut(nrows * gpr);
+                    srem = sr;
+                    s
+                };
+                let j0 = r0;
+                sc.spawn(move || {
+                    for (local, crow) in cch.chunks_mut(ocols).enumerate() {
+                        let srow: &mut [f32] = if gpr == 0 {
+                            &mut []
+                        } else {
+                            &mut sch[local * gpr..(local + 1) * gpr]
+                        };
+                        row_job(j0 + local, crow, srow);
+                    }
+                });
+                r0 += nrows;
+            }
+        });
+    }
+    let packed = if fmt.bits() <= 4 { codec::pack_fp4(&codes) } else { codes };
+    QuantizedTensor::new(fmt.name.to_string(), vec![orows, ocols], g, packed, scales)
+}
+
 /// The original scalar quantize path — one `codec::encode` per element,
 /// one global `pack_fp4`.  Kept as the reference the fused kernels are
 /// property-tested against (and as the bench baseline).  Must not be
@@ -273,6 +382,54 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn transposed_quantize_equals_quantize_of_transpose() {
+        use crate::tensor::transpose_into;
+        prop_check("quantize_rows_t == quantize_rows(x^T)", 80, |c| {
+            let rows = [1usize, 3, 8, 16][c.usize_in(0, 3)];
+            let cols = [1usize, 5, 24, 33][c.usize_in(0, 3)];
+            let data = c.f32_vec_wild(rows * cols, rows * cols);
+            let mut xt = Vec::new();
+            transpose_into(&data, rows, cols, &mut xt);
+            for (fmt, g) in [
+                (FP4_E2M1, GranSpec::PerTensor),
+                (FP4_E2M1, GranSpec::PerRow),
+                (FP4_E2M1, GranSpec::PerBlock(4)),
+                (FP8_E4M3, GranSpec::PerRow),
+                (FP8_E4M3, GranSpec::PerBlock(3)),
+            ] {
+                let t = quantize_rows_t(&data, rows, cols, fmt, g);
+                let want = quantize_rows(&xt, cols, rows, fmt, g);
+                prop_assert!(t.shape == vec![cols, rows], "{} {g:?} shape", fmt.name);
+                prop_assert!(t.packed == want.packed, "{} {g:?} codes", fmt.name);
+                prop_assert!(
+                    t.scales.iter().map(|s| s.to_bits()).eq(
+                        want.scales.iter().map(|s| s.to_bits())
+                    ),
+                    "{} {g:?} scales",
+                    fmt.name
+                );
+                // and the generic dequantize reads it back as the
+                // fake-quantized transpose, bit for bit
+                prop_assert!(
+                    dequantize(&t).data.iter().map(|v| v.to_bits()).eq(
+                        dequantize(&want).data.iter().map(|v| v.to_bits())
+                    ),
+                    "{} {g:?} dequant",
+                    fmt.name
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn transposed_quantize_empty() {
+        let t = quantize_rows_t(&[], 0, 4, FP4_E2M1, GranSpec::PerRow);
+        assert_eq!(t.shape, vec![4, 0]);
+        assert!(t.packed.is_empty() && t.scales.is_empty());
     }
 
     #[test]

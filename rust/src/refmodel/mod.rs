@@ -27,19 +27,24 @@
 //!
 //! # Quantization axes
 //!
-//! Every fake-quantized operand is grouped along its **trailing axis**;
-//! operands whose contraction axis is not trailing are transposed first
-//! (the backward needs those transposes anyway).  Activations and
-//! gradients are therefore grouped along the contraction dimension
-//! exactly as the paper's per-token / per-block-128 scheme.  The weight
-//! `(K, N)` is grouped along its trailing storage axis N — the geometry
-//! `quant::quantize` packs and `kernels::qgemm` consumes — instead of the
-//! paper's contraction axis K; the *format table* above is followed
-//! exactly.  The python mirror of this engine
-//! (`python/compile/kernels/ref.py`, `NpRefModel`) shares the contract
-//! and is validated against jax autodiff through the repo's L2 model;
-//! the checked-in golden fixtures (`rust/tests/golden/`) are dumped from
-//! it and replayed by `rust/tests/refmodel_golden.rs`.
+//! Every fake-quantized operand is grouped along its **contraction
+//! axis**, as the paper's §3.2 per-token / per-block-128 scheme
+//! prescribes.  Activations and gradients achieve this by trailing-axis
+//! grouping (transposing first where the contraction axis is not
+//! trailing — the backward needs those transposes anyway).  Weights are
+//! stored once as a K-grouped packed tensor — `wᵀ` stored `(N, K)` with
+//! scale groups along the trailing contraction axis K, built by
+//! `quant::quantize_rows_t` — which `kernels::qgemm_bt` consumes
+//! transposed on the forward and `kernels::qgemm` consumes as-is on the
+//! backward dx, so no f32 decode of the weight is ever resident.  (The
+//! pre-`qgemm_bt` engine grouped weights along the storage axis N and
+//! cached an f32 transposed decode per linear; that fidelity gap is
+//! closed — see `docs/ARCHITECTURE.md` for the layout walkthrough.)  The
+//! python mirror of this engine (`python/compile/kernels/ref.py`,
+//! `NpRefModel`) shares the contract and is validated against jax
+//! autodiff through the repo's L2 model; the checked-in golden fixtures
+//! (`rust/tests/golden/`) are dumped from it and replayed by
+//! `rust/tests/refmodel_golden.rs`.
 //!
 //! # Architecture
 //!

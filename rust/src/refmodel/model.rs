@@ -5,8 +5,9 @@
 //! the repo's L2 model; see the module doc in `refmodel`).
 //!
 //! All heavy math routes through `kernels`: quantized forward GEMMs on
-//! `qgemm` (packed weights), f32 GEMMs on `matmul_into`, fake-quant on
-//! the fused LUT sweeps.  Attention, norms, GELU, softmax/CE are
+//! `qgemm_bt` and backward dx GEMMs on `qgemm` (both orientations of the
+//! same K-grouped packed weights), f32 GEMMs on `matmul_into`, fake-quant
+//! on the fused LUT sweeps.  Attention, norms, GELU, softmax/CE are
 //! sequential scalar code — deterministic at any thread count by
 //! construction.
 

@@ -2,21 +2,31 @@
 //! `python/compile/qlinear.py` (and of `NpRefModel`'s `np_qlinear_*`
 //! functions, the executable spec).
 //!
-//! A linear `y = x @ w (+ b)` owns three GEMMs per training step:
+//! A linear `y = x @ w (+ b)` owns three GEMMs per training step, all
+//! fed by **one** canonical packed tensor: the transpose of the master
+//! weight, stored `(n, k)` with scale groups along its trailing axis —
+//! the contraction axis K, exactly the paper's §3.2 fine-grained weight
+//! geometry (see `docs/ARCHITECTURE.md` for the layout rationale):
 //!
 //! * forward     `y  = Qf(x)  @ Qf(w)`   — `Qf(x)` via `kernels::fused`
 //!   fake-quant along the contraction axis, `Qf(w)` consumed **packed**
-//!   by `kernels::qgemm` (the f32 weight copy is never materialized on
-//!   the forward path);
-//! * act-grad    `dx = Qa(g)  @ Qf(w)^T` — against the cached transposed
-//!   decode of the *same* packed values (straight-through-consistent);
+//!   by `kernels::qgemm_bt` (the stored `(n, k)` tensor multiplied as
+//!   `Bᵀ`; no f32 weight copy is ever materialized);
+//! * act-grad    `dx = Qa(g)  @ Qf(w)^T` — `Qf(w)ᵀ` *is* the stored
+//!   `(n, k)` tensor, so plain `kernels::qgemm` consumes it as-is
+//!   (straight-through-consistent: both GEMMs decode the same codes and
+//!   scales) — the cached f32 transposed decode this layer used to hold
+//!   per linear is gone;
 //! * weight-grad `dw = Qb(x)^T @ Qb(g)`  — both operands fake-quantized
 //!   along the token (contraction) axis after the transposes the GEMM
 //!   needs anyway.
 //!
-//! Master weights stay f32; `refresh()` re-packs after every optimizer
-//! update.  The bias is added outside the quantized GEMM (exact), as in
-//! the python layer.
+//! Master weights stay f32 in the logical `(k, n)` orientation (the
+//! optimizer and checkpoints are untouched); `refresh()` re-packs the
+//! single K-grouped tensor after every optimizer update via
+//! `quant::quantize_rows_t`, which never materializes an f32 transpose.
+//! The bias is added outside the quantized GEMM (exact), as in the
+//! python layer.
 
 use crate::kernels::{self, Workspace};
 use crate::quant::{self, GranSpec, QuantizedTensor};
@@ -38,6 +48,11 @@ pub struct Scratch {
     xt: Vec<f32>,
     gt: Vec<f32>,
     gq: Vec<f32>,
+    /// Transposed master weight for the *exact*-forward dx GEMM — one
+    /// shared buffer per model (re-derived per backward call), replacing
+    /// the per-linear cached `(n, k)` f32 copy the quantized path no
+    /// longer needs at all.
+    wt: Vec<f32>,
     /// Transposed tied-head weight, reused by `RefModel::forward`.
     pub(super) wte_t: Vec<f32>,
 }
@@ -58,19 +73,19 @@ pub struct QLinear {
     /// Bias, length n (exact f32).
     pub b: Vec<f32>,
     prec: LinearPrec,
-    /// Forward-format packed weights (`None` when the forward is exact).
+    /// The single canonical packed tensor (`None` when the forward is
+    /// exact): `wᵀ` stored `(n, k)`, scale groups along the trailing
+    /// contraction axis K.  The forward multiplies it transposed
+    /// (`qgemm_bt`), dx multiplies it as stored (`qgemm`) — no f32
+    /// decode of either orientation is ever resident.
     packed: Option<QuantizedTensor>,
-    /// (n, k): the transposed f32 weight the dx GEMM multiplies against —
-    /// `dequantize(packed)^T` when quantized (same values the forward
-    /// decodes), plain `w^T` when exact.
-    wt: Vec<f32>,
 }
 
 impl QLinear {
     pub fn new(w: Tensor, b: Vec<f32>, prec: LinearPrec) -> QLinear {
         assert_eq!(w.rank(), 2);
         assert_eq!(w.shape[1], b.len());
-        let mut l = QLinear { w, b, prec, packed: None, wt: Vec::new() };
+        let mut l = QLinear { w, b, prec, packed: None };
         l.refresh();
         l
     }
@@ -94,23 +109,16 @@ impl QLinear {
         self.refresh();
     }
 
-    /// Re-derive packed weights + the transposed backward copy from the
-    /// master weight.  Must be called after every master-weight update
-    /// (the engine does, once per optimizer step).
+    /// Re-derive the canonical K-grouped packed tensor from the master
+    /// weight.  Must be called after every master-weight update (the
+    /// engine does, once per optimizer step); recipe swaps
+    /// ([`QLinear::set_prec`], the §3.3 stage boundary) repack this one
+    /// tensor and nothing else.
     pub fn refresh(&mut self) {
         let (k, n) = (self.w.shape[0], self.w.shape[1]);
-        match self.prec.fwd {
-            Some(QSpec { fmt, gran }) => {
-                let q = quant::quantize(&self.w, fmt, GranSpec::from_granularity(gran));
-                let dq = quant::dequantize(&q);
-                transpose_into(&dq.data, k, n, &mut self.wt);
-                self.packed = Some(q);
-            }
-            None => {
-                transpose_into(&self.w.data, k, n, &mut self.wt);
-                self.packed = None;
-            }
-        }
+        self.packed = self.prec.fwd.map(|QSpec { fmt, gran }| {
+            quant::quantize_rows_t(&self.w.data, k, n, fmt, GranSpec::from_granularity(gran))
+        });
     }
 
     /// `y = Qf(x) @ Qf(w) + b` into `out` (m × n).  With `exact` the
@@ -125,7 +133,9 @@ impl QLinear {
             (Some(q), false) => {
                 let spec = self.prec.fwd.as_ref().unwrap();
                 let xq = fq(x, m, k, spec);
-                kernels::qgemm_into(&xq, q, m, k, n, out, &mut sc.ws);
+                // y = Qf(x) @ Qf(w): the stored (n, k) tensor consumed
+                // transposed, groups along the contraction axis K
+                kernels::qgemm_bt_into(&xq, q, m, k, n, out, &mut sc.ws);
                 for row in out.chunks_mut(n) {
                     for (o, &bv) in row.iter_mut().zip(&self.b) {
                         *o += bv;
@@ -164,13 +174,27 @@ impl QLinear {
             }
         }
 
-        // dx = Qa(g) @ Qf(w)^T — wt holds the transposed forward weights
-        match &self.prec.agrad {
-            Some(spec) => {
+        // dx = Qa(g) @ Qf(w)^T — when quantized, Qf(w)ᵀ *is* the stored
+        // (n, k) packed tensor: plain qgemm consumes it directly, sharing
+        // codes, scales, and (when enabled) cached panels with the
+        // forward.  On the exact path the master weight is transposed
+        // into the model-shared scratch instead (no per-linear copy).
+        match (&self.packed, &self.prec.agrad) {
+            (Some(q), Some(spec)) => {
                 let gq = fq(g, m, n, spec);
-                kernels::matmul_into(&gq, &self.wt, m, n, k, dx);
+                kernels::qgemm_into(&gq, q, m, n, k, dx, &mut sc.ws);
             }
-            None => kernels::matmul_into(g, &self.wt, m, n, k, dx),
+            (Some(q), None) => kernels::qgemm_into(g, q, m, n, k, dx, &mut sc.ws),
+            (None, spec) => {
+                transpose_into(&self.w.data, k, n, &mut sc.wt);
+                match spec {
+                    Some(s) => {
+                        let gq = fq(g, m, n, s);
+                        kernels::matmul_into(&gq, &sc.wt, m, n, k, dx);
+                    }
+                    None => kernels::matmul_into(g, &sc.wt, m, n, k, dx),
+                }
+            }
         }
 
         // dw = Qb(x)^T @ Qb(g): transpose both operands (grouping them
@@ -208,7 +232,10 @@ mod tests {
 
     /// Scalar reference of the full quantized fwd/bwd, built from the
     /// scalar formats-layer primitives only (no kernels) — the rust-side
-    /// mirror of `np_qlinear_fwd`/`np_qlinear_bwd`.
+    /// mirror of `np_qlinear_fwd`/`np_qlinear_bwd`.  The weight is
+    /// fake-quantized along its contraction axis K (transpose → trailing
+    /// grouping → transpose back), the paper's §3.2 geometry and exactly
+    /// what the layer's K-grouped packed tensor decodes to.
     fn reference(
         x: &Tensor,
         w: &Tensor,
@@ -226,8 +253,14 @@ mod tests {
             ),
             None => t.clone(),
         };
+        // weight: grouped along K = along the rows of the logical (k, n)
+        // matrix, i.e. the trailing axis of its transpose
+        let q_w_kgrouped = |t: &Tensor, s: &Option<QSpec>| match s {
+            Some(_) => q(&t.transpose2(), s).transpose2(),
+            None => t.clone(),
+        };
         let xq = q(x, &prec.fwd);
-        let wq = q(w, &prec.fwd);
+        let wq = q_w_kgrouped(w, &prec.fwd);
         let mut y = xq.matmul(&wq);
         for row in y.data.chunks_mut(n) {
             for (o, &bv) in row.iter_mut().zip(b) {
@@ -291,7 +324,15 @@ mod tests {
                     // row-bisection shrink to the smallest failing batch
                     // (per-row quantization makes rows independent)
                     let wq = match &prec.fwd {
-                        Some(QSpec { fmt, gran }) => fake_quant_rows(&w.data, k, n, *fmt, *gran),
+                        Some(QSpec { fmt, gran }) => {
+                            let wt = w.transpose2();
+                            Tensor::from_vec(
+                                &wt.shape,
+                                fake_quant_rows(&wt.data, n, k, *fmt, *gran),
+                            )
+                            .transpose2()
+                            .data
+                        }
                         None => w.data.clone(),
                     };
                     let (_, rmin) = shrink_rows(&x.data, m, k, |xd, rr| {
@@ -318,6 +359,62 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    /// The dx-rewiring guard: with the K-grouped geometry held fixed, the
+    /// packed-direct forward (`qgemm_bt`) and dx (`qgemm`) must be
+    /// bit-identical to the pre-rewire dataflow — decode the packed
+    /// tensor to f32 once (the old per-linear cached copy) and run plain
+    /// matmuls against it.  Training losses are a deterministic function
+    /// of these per-layer outputs, so bitwise equality here is exactly
+    /// "byte-identical losses before/after the rewiring".
+    #[test]
+    fn packed_direct_fwd_dx_match_old_decode_dataflow_bitwise() {
+        use crate::quant::{dequantize, quantize_rows_t, GranSpec};
+        let (m, k, n) = (6usize, 32usize, 24usize);
+        let x = randmat(m, k, 11);
+        let w = randmat(k, n, 12);
+        let g = randmat(m, n, 13);
+        let b: Vec<f32> = (0..n).map(|i| i as f32 * 0.01).collect();
+        for prec in [
+            LinearPrec { fwd: Some(spec(FP4_E2M1, 8)), wgrad: None, agrad: None },
+            LinearPrec {
+                fwd: Some(spec(FP8_E4M3, 8)),
+                wgrad: Some(spec(FP8_E4M3, 8)),
+                agrad: Some(spec(FP8_E4M3, 8)),
+            },
+        ] {
+            let l = QLinear::new(w.clone(), b.clone(), prec);
+            let mut sc = Scratch::default();
+            let mut y = vec![0.0f32; m * n];
+            l.forward_into(&x.data, m, false, &mut y, &mut sc);
+            let (mut dx, mut dw, mut db) =
+                (vec![0.0f32; m * k], vec![0.0f32; k * n], vec![0.0f32; n]);
+            l.backward_into(&x.data, &g.data, m, &mut dx, &mut dw, &mut db, &mut sc);
+
+            // the old dataflow, same canonical K-grouped packed values:
+            // decode once to the (n, k) f32 copy the old layer cached
+            let fwd = prec.fwd.as_ref().unwrap();
+            let q = quantize_rows_t(
+                &w.data, k, n, fwd.fmt, GranSpec::from_granularity(fwd.gran),
+            );
+            let wt_decoded = dequantize(&q); // (n, k)
+            let wq = wt_decoded.transpose2(); // (k, n) forward operand
+            let xq = fq(&x.data, m, k, fwd);
+            let mut y_old = crate::kernels::matmul_f32(&xq, &wq.data, m, k, n);
+            for row in y_old.chunks_mut(n) {
+                for (o, &bv) in row.iter_mut().zip(&b) {
+                    *o += bv;
+                }
+            }
+            let gq = match &prec.agrad {
+                Some(s) => fq(&g.data, m, n, s),
+                None => g.data.clone(),
+            };
+            let dx_old = crate::kernels::matmul_f32(&gq, &wt_decoded.data, m, n, k);
+            assert_eq!(y, y_old, "forward diverged from the decode dataflow");
+            assert_eq!(dx, dx_old, "dx diverged from the decode dataflow");
+        }
     }
 
     #[test]

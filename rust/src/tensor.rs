@@ -127,6 +127,28 @@ impl Tensor {
         Tensor::from_vec(&[m, n], out)
     }
 
+    /// `self @ qᵀ` where the right operand is **stored** `(n, k)` packed
+    /// — `kernels::qgemm_bt` decodes transposed panels in place, so
+    /// neither the f32 matrix nor its transpose is materialized.
+    /// Bit-identical to
+    /// `self.matmul(&quant::dequantize(q).transpose2())`.  Same workspace
+    /// / panel-cache guidance as [`Tensor::matmul_quant`]; cached panels
+    /// are keyed by orientation, so one tensor may be multiplied both
+    /// ways through one workspace.
+    pub fn matmul_quant_bt(
+        &self,
+        q: &crate::quant::QuantizedTensor,
+        ws: &mut crate::kernels::Workspace,
+    ) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let (n, k2) = q.rows_cols();
+        assert_eq!(k, k2, "A cols {k} vs stored B cols {k2}");
+        let mut out = vec![0.0f32; m * n];
+        crate::kernels::qgemm_bt_into(&self.data, q, m, k, n, &mut out, ws);
+        Tensor::from_vec(&[m, n], out)
+    }
+
     /// Row-major transpose (used to feed gradient matmuls).
     pub fn transpose2(&self) -> Tensor {
         assert_eq!(self.rank(), 2);
@@ -233,6 +255,32 @@ mod tests {
         let want = a.matmul(&dequantize(&q));
         assert_eq!(a.matmul_quant(&q, &mut cws), want);
         assert_eq!(a.matmul_quant(&q, &mut cws), want);
+        let stats = cws.panel_cache_stats().unwrap();
+        assert!(stats.hits > 0 && stats.misses > 0, "{stats:?}");
+    }
+
+    #[test]
+    fn matmul_quant_bt_matches_transposed_dequantized_matmul() {
+        use crate::formats::FP4_E2M1;
+        use crate::quant::{dequantize, quantize, GranSpec};
+        fn bits(t: &Tensor) -> Vec<u32> {
+            t.data.iter().map(|v| v.to_bits()).collect()
+        }
+        let mut rng = Rng::new(4);
+        let a = Tensor::randn(&[4, 32], 1.0, &mut rng);
+        let b = Tensor::randn(&[8, 32], 1.0, &mut rng); // stored (n, k), K-grouped
+        let q = quantize(&b, FP4_E2M1, GranSpec::PerBlock(8));
+        let want = a.matmul(&dequantize(&q).transpose2());
+        let mut ws = crate::kernels::Workspace::new();
+        assert_eq!(bits(&a.matmul_quant_bt(&q, &mut ws)), bits(&want));
+        // one cached workspace serving both orientations of the same q
+        let mut cws = crate::kernels::Workspace::with_panel_cache(1 << 20);
+        assert_eq!(bits(&a.matmul_quant_bt(&q, &mut cws)), bits(&want));
+        let g = Tensor::randn(&[4, 8], 1.0, &mut rng);
+        let want_dx = g.matmul(&dequantize(&q));
+        assert_eq!(bits(&g.matmul_quant(&q, &mut cws)), bits(&want_dx));
+        assert_eq!(bits(&a.matmul_quant_bt(&q, &mut cws)), bits(&want));
+        assert_eq!(bits(&g.matmul_quant(&q, &mut cws)), bits(&want_dx));
         let stats = cws.panel_cache_stats().unwrap();
         assert!(stats.hits > 0 && stats.misses > 0, "{stats:?}");
     }

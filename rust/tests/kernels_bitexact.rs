@@ -8,8 +8,8 @@ use fp4train::formats::codec;
 use fp4train::formats::{fake_quant_rows, Granularity, FP4_E2M1, FP8_E4M3, FP8_E5M2};
 use fp4train::kernels::{
     decode_fast, encode_fast, fake_quant_rows_auto, fake_quant_rows_fast, matmul_bias_into,
-    matmul_f32, matmul_into, qgemm, qgemm_into, quantize_pack_rows, quantize_pack_rows_auto,
-    Workspace,
+    matmul_f32, matmul_into, qgemm, qgemm_bt, qgemm_bt_into, qgemm_into, quantize_pack_rows,
+    quantize_pack_rows_auto, Workspace,
 };
 use fp4train::quant::{self, GranSpec};
 use fp4train::tensor::Tensor;
@@ -127,6 +127,79 @@ fn qgemm_equals_dequant_matmul_across_formats_grans_and_shapes() {
                 assert_eq!(bits(&got), bits(&want), "{} {m}x{k}x{n} {g:?}", fmt.name);
             }
         }
+    }
+}
+
+#[test]
+fn qgemm_bt_equals_transposed_dequant_matmul_across_formats_grans_and_shapes() {
+    // the transposed orientation: B stored (n, k), scale groups along the
+    // trailing storage axis = the contraction axis K (the paper's §3.2
+    // weight geometry).  Oracle: materialize dequantize(q)ᵀ, plain matmul.
+    // Same tile-edge shapes as the as-stored suite plus one past the
+    // parallel threshold (column-striped pooled path).
+    let shapes = [(2usize, 33usize, 7usize), (3, 257, 513), (5, 256, 512), (64, 512, 640)];
+    for fmt in [FP4_E2M1, FP8_E4M3, FP8_E5M2] {
+        for &(m, k, n) in &shapes {
+            let a = wild(m * k, 13 * m as u64 + k as u64);
+            let bdata = wild(n * k, 17 * k as u64 + n as u64);
+            for g in [GranSpec::PerTensor, GranSpec::PerRow, GranSpec::PerBlock(32)] {
+                let q = quant::quantize_rows(&bdata, n, k, fmt, g);
+                let got = qgemm_bt(&a, &q, m, k, n);
+                let want = matmul_f32(&a, &quant::dequantize(&q).transpose2().data, m, k, n);
+                assert_eq!(bits(&got), bits(&want), "{} {m}x{k}x{n} {g:?} bt", fmt.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn transposed_quantize_equals_quantize_of_transpose_at_parallel_scale() {
+    // past PAR_MIN_ELEMS so the row-fanned pool path runs (the serial
+    // path is property-tested in quant's module tests); oracle is the
+    // fused quantize of an explicitly materialized transpose
+    let (rows, cols) = (520usize, 257usize);
+    let x = wild(rows * cols, 81);
+    let mut xt = Vec::new();
+    fp4train::tensor::transpose_into(&x, rows, cols, &mut xt);
+    for fmt in [FP4_E2M1, FP8_E4M3] {
+        for g in [GranSpec::PerTensor, GranSpec::PerRow, GranSpec::PerBlock(8)] {
+            let t = quant::quantize_rows_t(&x, rows, cols, fmt, g);
+            let want = quant::quantize_rows(&xt, cols, rows, fmt, g);
+            assert_eq!(t.packed, want.packed, "{} {g:?} codes", fmt.name);
+            assert_eq!(bits(&t.scales), bits(&want.scales), "{} {g:?} scales", fmt.name);
+        }
+    }
+}
+
+#[test]
+fn qgemm_bt_quantize_rows_t_roundtrip_is_the_qlinear_contract() {
+    // end to end across the public API: pack a logical (k, n) weight
+    // K-grouped with quantize_rows_t, run the forward orientation through
+    // qgemm_bt and the dx orientation through qgemm on the SAME tensor,
+    // and pin both against the fake-quant + f32-matmul oracle bit for bit
+    let (m, k, n) = (5usize, 64usize, 48usize);
+    let x = wild(m * k, 71);
+    let g = wild(m * n, 72);
+    let w = wild(k * n, 73);
+    for fmt in [FP4_E2M1, FP8_E4M3] {
+        let q = quant::quantize_rows_t(&w, k, n, fmt, GranSpec::PerBlock(16));
+        assert_eq!(q.rows_cols(), (n, k));
+        // dequantize(q) is fake_quant(wᵀ): fake-quant wᵀ via the scalar
+        // reference, transpose back to (k, n) for the forward oracle
+        let wt: Vec<f32> = {
+            let mut t = Vec::new();
+            fp4train::tensor::transpose_into(&w, k, n, &mut t);
+            fake_quant_rows(&t, n, k, fmt, Granularity::PerBlock(16))
+        };
+        let mut wq = Vec::new();
+        fp4train::tensor::transpose_into(&wt, n, k, &mut wq); // (k, n)
+        let mut ws = Workspace::new();
+        let mut y = vec![0.0f32; m * n];
+        qgemm_bt_into(&x, &q, m, k, n, &mut y, &mut ws);
+        assert_eq!(bits(&y), bits(&matmul_f32(&x, &wq, m, k, n)), "{} fwd", fmt.name);
+        let mut dx = vec![0.0f32; m * k];
+        qgemm_into(&g, &q, m, n, k, &mut dx, &mut ws);
+        assert_eq!(bits(&dx), bits(&matmul_f32(&g, &wt, m, n, k)), "{} dx", fmt.name);
     }
 }
 

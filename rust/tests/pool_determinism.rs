@@ -16,7 +16,7 @@
 //! their own process, so the env mutation cannot leak into other suites.
 
 use fp4train::formats::{Granularity, FP4_E2M1, FP8_E4M3};
-use fp4train::kernels::{fake_quant_rows_auto, matmul_f32, qgemm_into, Workspace};
+use fp4train::kernels::{fake_quant_rows_auto, matmul_f32, qgemm_bt_into, qgemm_into, Workspace};
 use fp4train::quant::{self, GranSpec};
 use fp4train::util::rng::Rng;
 
@@ -108,6 +108,59 @@ fn kernels_bit_identical_across_thread_counts() {
 }
 
 #[test]
+fn qgemm_bt_bit_identical_across_thread_counts_and_cache_states() {
+    let _env = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    // transposed orientation: B stored (n, k), K-grouped.  Column-split
+    // shape (ragged last stripe) plus the narrow-output A-row fallback,
+    // both past PAR_MIN_FLOPS; each swept at PALLAS_THREADS {1, 2, 8} ×
+    // {uncached, cache-miss, cache-hit} — the transposed-path mirror of
+    // `kernels_bit_identical_across_thread_counts`.
+    let (cm, ck, cn) = (64usize, 512usize, 640usize);
+    let ca = randvec(cm * ck, 61);
+    let cq = quant::quantize_rows(&randvec(cn * ck, 62), cn, ck, FP4_E2M1, GranSpec::PerBlock(128));
+    let (rm, rk, rn) = (512usize, 256usize, 64usize);
+    let ra = randvec(rm * rk, 63);
+    let rq = quant::quantize_rows(&randvec(rn * rk, 64), rn, rk, FP8_E4M3, GranSpec::PerRow);
+
+    let mut reference: Option<(Vec<u32>, Vec<u32>, Vec<u32>, Vec<u32>)> = None;
+    for nt in [8usize, 2, 1] {
+        set_threads(nt);
+        let mut plain = vec![0.0f32; cm * cn];
+        qgemm_bt_into(&ca, &cq, cm, ck, cn, &mut plain, &mut Workspace::new());
+        let mut cws = Workspace::with_panel_cache(64 << 20);
+        let mut miss = vec![f32::NAN; cm * cn];
+        qgemm_bt_into(&ca, &cq, cm, ck, cn, &mut miss, &mut cws);
+        let s = cws.panel_cache_stats().unwrap();
+        assert!(s.misses > 0 && s.hits == 0, "nt={nt} first bt pass must all-miss: {s:?}");
+        let mut hit = vec![f32::NAN; cm * cn];
+        qgemm_bt_into(&ca, &cq, cm, ck, cn, &mut hit, &mut cws);
+        let s2 = cws.panel_cache_stats().unwrap();
+        assert!(s2.hits > 0 && s2.misses == s.misses, "nt={nt} second bt pass must replay: {s2:?}");
+        // narrow output → the A-row split fallback, through the same cache
+        let mut narrow = vec![0.0f32; rm * rn];
+        qgemm_bt_into(&ra, &rq, rm, rk, rn, &mut narrow, &mut cws);
+
+        let got = (bits(&plain), bits(&miss), bits(&hit), bits(&narrow));
+        match &reference {
+            None => {
+                // sanity anchor before pinning: transposed-dequant oracle
+                let want =
+                    matmul_f32(&ca, &quant::dequantize(&cq).transpose2().data, cm, ck, cn);
+                assert_eq!(got.0, bits(&want), "qgemm_bt != dequantᵀ+matmul at nt={nt}");
+                reference = Some(got);
+            }
+            Some(r) => {
+                assert_eq!(&got.0, &r.0, "qgemm_bt (uncached) diverged at nt={nt}");
+                assert_eq!(&got.1, &r.1, "qgemm_bt (cache miss) diverged at nt={nt}");
+                assert_eq!(&got.2, &r.2, "qgemm_bt (cache hit) diverged at nt={nt}");
+                assert_eq!(&got.3, &r.3, "qgemm_bt (row split) diverged at nt={nt}");
+            }
+        }
+    }
+    std::env::remove_var("PALLAS_THREADS");
+}
+
+#[test]
 fn configured_threads_env_override_and_clamping() {
     let _env = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
     use fp4train::kernels::pool::{configured_threads, MAX_THREADS};
@@ -137,6 +190,35 @@ fn pack_sweep_bit_identical_across_thread_counts() {
         match &reference {
             None => reference = Some(got),
             Some(r) => assert_eq!(&got, r, "quantize_pack diverged at nt={nt}"),
+        }
+    }
+    std::env::remove_var("PALLAS_THREADS");
+}
+
+#[test]
+fn transposed_pack_bit_identical_across_thread_counts() {
+    let _env = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    // quantize_rows_t row-fans across the pool above PAR_MIN_ELEMS (the
+    // per-optimizer-step weight repack); sweep it like the flat pack,
+    // including the single-scale PerTensor row split and a ragged last
+    // row chunk (129 output rows)
+    let (rows, cols) = (1024usize, 129usize); // output geometry: 129 x 1024
+    let x = randvec(rows * cols, 59);
+    let mut reference: Option<Vec<(Vec<u8>, Vec<u32>)>> = None;
+    for nt in THREAD_COUNTS {
+        set_threads(nt);
+        let got: Vec<(Vec<u8>, Vec<u32>)> =
+            [GranSpec::PerBlock(128), GranSpec::PerRow, GranSpec::PerTensor]
+                .into_iter()
+                .map(|g| {
+                    let q = quant::quantize_rows_t(&x, rows, cols, FP4_E2M1, g);
+                    assert_eq!(q.rows_cols(), (cols, rows));
+                    (q.packed.clone(), q.scales.iter().map(|s| s.to_bits()).collect())
+                })
+                .collect();
+        match &reference {
+            None => reference = Some(got),
+            Some(r) => assert_eq!(&got, r, "quantize_rows_t diverged at nt={nt}"),
         }
     }
     std::env::remove_var("PALLAS_THREADS");

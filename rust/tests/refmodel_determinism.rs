@@ -115,6 +115,45 @@ fn training_descends_and_schedule_swaps_to_exact() {
     assert!(last < first, "loss did not descend: {first} -> {last}");
 }
 
+/// Train-level guard for the K-grouped dx rewiring: the packed state is a
+/// pure function of (master weight, recipe), so gratuitous repacks —
+/// extra `refresh_packed` calls, or a `set_recipe` swap to the *same*
+/// recipe (the §3.3 stage-boundary machinery, now repacking one canonical
+/// K-grouped tensor per linear) — must not move a byte of any loss.
+/// Together with qlinear's `packed_direct_fwd_dx_match_old_decode_dataflow
+/// _bitwise` (per-GEMM: new packed-direct dataflow == old decode-to-f32
+/// dataflow on the same geometry) this pins "byte-identical losses before
+/// and after the rewiring with the geometry held fixed": losses are a
+/// deterministic function of those per-layer outputs.
+#[test]
+fn repacks_and_same_recipe_swaps_keep_losses_byte_identical() {
+    let _env = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    std::env::remove_var("PALLAS_THREADS");
+    let cfg = micro_cfg();
+    let recipe = presets::recipe("ours").unwrap();
+    let steps = 4u64;
+    let run = |perturb: bool| -> Vec<u32> {
+        let mut model = RefModel::new(cfg.clone(), recipe.clone(), 23);
+        let mut opt = AdamW::new(&mut model, HParams::for_family("gpt2", steps));
+        let mut sc = Scratch::default();
+        let mut losses = Vec::new();
+        for step in 0..steps {
+            if perturb {
+                // no-op churn of the packed state between steps
+                model.refresh_packed();
+                model.set_recipe(recipe.clone());
+            }
+            let batch = batch_at(step, 8, cfg.seq, cfg.vocab);
+            let (loss, grads, _) = model.loss_and_grads(&batch, &mut sc);
+            losses.push(loss.to_bits());
+            opt.step(&mut model, &grads);
+            model.refresh_packed();
+        }
+        losses
+    };
+    assert_eq!(run(false), run(true), "repack churn moved a loss bit");
+}
+
 /// The engine's full `train_host` entry point is deterministic end to end
 /// (corpus → tokenizer → batches → kernels → AdamW): two identical runs
 /// produce identical metrics.

@@ -207,7 +207,16 @@ fn qlinear_forward_error_within_operand_bound() {
         l.forward_into(&x, m, false, &mut y, &mut sc);
 
         let xq = fake_quant_rows(&x, m, k, FP4_E2M1, Granularity::PerBlock(8));
-        let wq = fake_quant_rows(&w, k, n, FP4_E2M1, Granularity::PerBlock(8));
+        // the layer quantizes w along its contraction axis K (groups on
+        // the trailing axis of wᵀ) — the bound must use the same geometry
+        let wq = {
+            let mut wt = Vec::new();
+            fp4train::tensor::transpose_into(&w, k, n, &mut wt);
+            let wtq = fake_quant_rows(&wt, n, k, FP4_E2M1, Granularity::PerBlock(8));
+            let mut back = Vec::new();
+            fp4train::tensor::transpose_into(&wtq, n, k, &mut back);
+            back
+        };
         for i in 0..m {
             for jn in 0..n {
                 let mut exact = 0.0f64;

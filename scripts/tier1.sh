@@ -1,7 +1,9 @@
 #!/usr/bin/env bash
 # Tiered verification (tiers documented in ROADMAP.md §Verification tiers):
 #
-#   tier 1 (rust):   release build, full test suite, bench compile check
+#   tier 0 (docs):   README.md + docs/ARCHITECTURE.md must exist (always)
+#   tier 1 (rust):   release build, full test suite, bench compile check,
+#                    cargo doc --no-deps with warnings denied
 #   tier 2 (python): pytest over python/tests — runs INSTEAD when no rust
 #                    toolchain can be found or bootstrapped, so the
 #                    container always executes some tier of the suite
@@ -32,6 +34,17 @@ for arg in "$@"; do
         *) echo "tier1: unknown flag $arg" >&2; exit 64 ;;
     esac
 done
+
+# Docs check (every tier): the documentation layer is part of the
+# contract — fail fast if it goes missing.
+echo "== docs check (README.md, docs/ARCHITECTURE.md) =="
+for doc in README.md docs/ARCHITECTURE.md; do
+    if [[ ! -f "$SCRIPT_DIR/../$doc" ]]; then
+        echo "tier1: missing $doc — the documentation layer is required" >&2
+        exit 1
+    fi
+done
+echo "docs present"
 
 cd "$SCRIPT_DIR/../rust"
 
@@ -69,6 +82,9 @@ cargo test -q
 
 echo "== cargo bench --no-run (bench targets must compile) =="
 cargo bench --no-run
+
+echo "== cargo doc --no-deps (rustdoc links must not rot; warnings denied) =="
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 
 if [[ $BENCH_DIFF -eq 1 ]]; then
     echo "== bench_diff (fresh BENCH_*.json vs bench/baselines) =="
