@@ -65,7 +65,7 @@ impl RunConfig {
         if let Some(path) = file {
             let src = std::fs::read_to_string(path)
                 .map_err(|e| format!("cannot read config {path}: {e}"))?;
-            doc = TomlDoc::parse(&src).map_err(|e| e.to_string())?;
+            doc = TomlDoc::parse(&src).map_err(|e| format!("config {path}: {e}"))?;
         }
         // CLI overrides (flat names mirror the dotted config keys)
         for (cli, key) in [

@@ -8,6 +8,13 @@
 //! optionally be stored FP4/FP8-quantized (per-block 128 codes + scales,
 //! via `quant`) — the low-precision formats doing double duty as a
 //! storage codec; Adam moments and the step are always f32/i32.
+//!
+//! Durability: `save` writes to a `.tmp` sibling and renames into place,
+//! so a crash mid-write never leaves a half-checkpoint at the final path.
+//! Version-2 headers carry an FNV-1a payload checksum; `load`/`load_packed`
+//! verify it and reject truncated or bit-flipped files with an error
+//! naming the path and the failure mode (version-1 files still load, with
+//! no checksum to check).  Every I/O error carries the offending path.
 //! Compression runs on the fused LUT kernels and goes row-parallel for
 //! large weight matrices (see `kernels::parallel`), so checkpoint cadence
 //! doesn't stall the train loop.
@@ -23,9 +30,13 @@ use flate2::Compression;
 use crate::formats::{FP4_E2M1, FP8_E4M3};
 use crate::quant::{dequantize, quantize_block128, GranSpec, QuantizedTensor};
 use crate::tensor::Tensor;
+use crate::util::fnv1a64;
 use crate::util::json::{obj, Json};
 
 const MAGIC: &[u8; 8] = b"FP4CKPT1";
+/// On-disk header version written by `save`.  Version 2 added the
+/// `payload_fnv` checksum; version-1 files are still readable.
+const VERSION: usize = 2;
 
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum WeightCodec {
@@ -237,9 +248,15 @@ fn blob_stored(h: &Json, bytes: &[u8]) -> Result<StoredTensor> {
 
 /// Write a checkpoint.  `weight_codec` applies to 2-D+ parameter tensors;
 /// 1-D/scalars (norms, biases) and optimizer moments stay f32.
+///
+/// The write is atomic: bytes go to a `.tmp` sibling, are fsynced, and the
+/// file is renamed into place — a crash mid-save leaves the previous
+/// checkpoint (or nothing) at `path`, never a truncated one.  The header
+/// records an FNV-1a checksum of the payload so loads detect corruption.
 pub fn save(ckpt: &Checkpoint, path: &Path, weight_codec: WeightCodec) -> Result<()> {
     if let Some(dir) = path.parent() {
-        std::fs::create_dir_all(dir)?;
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating checkpoint directory {}", dir.display()))?;
     }
     let mut headers = Vec::new();
     let mut payload = Vec::new();
@@ -262,48 +279,115 @@ pub fn save(ckpt: &Checkpoint, path: &Path, weight_codec: WeightCodec) -> Result
         push(format!("v/{i}"), t, WeightCodec::F32);
     }
     let header = obj(vec![
-        ("version", 1usize.into()),
+        ("version", VERSION.into()),
         ("step", (ckpt.step as i64).into()),
         ("n_params", ckpt.params.len().into()),
+        ("payload_fnv", format!("{:016x}", fnv1a64(&payload)).into()),
         ("tensors", Json::Arr(headers)),
     ])
     .to_string_compact();
 
-    let file = std::fs::File::create(path).with_context(|| format!("{path:?}"))?;
-    let mut enc = GzEncoder::new(file, Compression::fast());
-    enc.write_all(MAGIC)?;
-    enc.write_all(&(header.len() as u32).to_le_bytes())?;
-    enc.write_all(header.as_bytes())?;
-    enc.write_all(&payload)?;
-    enc.finish()?;
+    let tmp = tmp_sibling(path);
+    let write = |tmp: &Path| -> Result<()> {
+        let file = std::fs::File::create(tmp)
+            .with_context(|| format!("creating checkpoint temp file {}", tmp.display()))?;
+        let mut enc = GzEncoder::new(file, Compression::fast());
+        enc.write_all(MAGIC)?;
+        enc.write_all(&(header.len() as u32).to_le_bytes())?;
+        enc.write_all(header.as_bytes())?;
+        enc.write_all(&payload)?;
+        let file = enc.finish()?;
+        file.sync_all()?;
+        Ok(())
+    };
+    if let Err(e) = write(&tmp).with_context(|| format!("writing checkpoint {}", tmp.display())) {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e);
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} -> {}", tmp.display(), path.display()))?;
     Ok(())
+}
+
+/// `foo.ckpt` → `foo.ckpt.tmp` (extension appended, not replaced, so two
+/// different final names never share a temp name).
+fn tmp_sibling(path: &Path) -> std::path::PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".tmp");
+    std::path::PathBuf::from(os)
 }
 
 /// Load a checkpoint keeping weight payloads in their on-disk encoding —
 /// quantized weights come back as packed `QuantizedTensor`s ready for
 /// `kernels::qgemm`, never dequantized here.
 pub fn load_packed(path: &Path) -> Result<PackedCheckpoint> {
-    let file = std::fs::File::open(path).with_context(|| format!("{path:?}"))?;
+    let file = std::fs::File::open(path)
+        .with_context(|| format!("opening checkpoint {}", path.display()))?;
     let mut dec = GzDecoder::new(file);
     let mut buf = Vec::new();
-    dec.read_to_end(&mut buf)?;
+    dec.read_to_end(&mut buf).with_context(|| {
+        format!("decompressing checkpoint {} (truncated or not gzip?)", path.display())
+    })?;
     if buf.len() < 12 || &buf[..8] != MAGIC {
         bail!("not an FP4CKPT1 checkpoint: {}", path.display());
     }
     let hlen = u32::from_le_bytes([buf[8], buf[9], buf[10], buf[11]]) as usize;
-    let header = std::str::from_utf8(&buf[12..12 + hlen])?;
-    let j = Json::parse(header).map_err(|e| anyhow!("ckpt header: {e}"))?;
+    if 12 + hlen > buf.len() {
+        bail!(
+            "truncated checkpoint {}: header wants {} bytes, file holds {}",
+            path.display(), hlen, buf.len() - 12
+        );
+    }
+    let header = std::str::from_utf8(&buf[12..12 + hlen])
+        .with_context(|| format!("checkpoint header in {} is not utf-8", path.display()))?;
+    let j = Json::parse(header)
+        .map_err(|e| anyhow!("corrupt checkpoint header in {}: {e}", path.display()))?;
+    let version = j.get("version").and_then(|x| x.as_usize()).unwrap_or(0);
+    let payload = &buf[12 + hlen..];
+    match version {
+        1 => {} // pre-checksum format: nothing to verify
+        2 => {
+            let want = j
+                .get("payload_fnv")
+                .and_then(|x| x.as_str())
+                .ok_or_else(|| {
+                    anyhow!("checkpoint {}: version-2 header missing payload_fnv", path.display())
+                })?;
+            let got = format!("{:016x}", fnv1a64(payload));
+            if got != want {
+                bail!(
+                    "checkpoint {} payload checksum mismatch (header {want}, computed {got}) \
+                     — the file is truncated or bit-flipped",
+                    path.display()
+                );
+            }
+        }
+        v => bail!(
+            "unsupported checkpoint version {v} in {} (this build reads versions 1 and 2)",
+            path.display()
+        ),
+    }
     let step = j.get("step").and_then(|s| s.as_i64()).unwrap_or(0);
     let n_params = j.get("n_params").and_then(|s| s.as_usize()).unwrap_or(0);
-    let mut off = 12 + hlen;
+    let mut off = 0usize;
     let mut params = Vec::new();
     let mut m = Vec::new();
     let mut v = Vec::new();
     for h in j.get("tensors").and_then(|t| t.as_arr()).unwrap_or(&[]) {
-        let nbytes = h.get("bytes").and_then(|b| b.as_usize()).ok_or_else(|| anyhow!("bytes"))?;
-        let t = blob_stored(h, &buf[off..off + nbytes])?;
-        off += nbytes;
         let name = h.get("name").and_then(|n| n.as_str()).unwrap_or("");
+        let nbytes = h
+            .get("bytes")
+            .and_then(|b| b.as_usize())
+            .ok_or_else(|| anyhow!("checkpoint {}: tensor `{name}` missing byte count", path.display()))?;
+        if off + nbytes > payload.len() {
+            bail!(
+                "truncated checkpoint {}: tensor `{name}` wants bytes {off}..{} but payload ends at {}",
+                path.display(), off + nbytes, payload.len()
+            );
+        }
+        let t = blob_stored(h, &payload[off..off + nbytes])
+            .with_context(|| format!("decoding tensor `{name}` from {}", path.display()))?;
+        off += nbytes;
         if let Some(p) = name.strip_prefix("p/") {
             params.push((p.to_string(), t));
         } else if name.starts_with("m/") {
@@ -313,7 +397,7 @@ pub fn load_packed(path: &Path) -> Result<PackedCheckpoint> {
         }
     }
     if params.len() != n_params {
-        bail!("expected {n_params} params, found {}", params.len());
+        bail!("checkpoint {}: expected {n_params} params, found {}", path.display(), params.len());
     }
     Ok(PackedCheckpoint { params, m, v, step })
 }
@@ -501,6 +585,105 @@ mod tests {
         let p = tmp("garbage.ckpt");
         std::fs::create_dir_all(p.parent().unwrap()).unwrap();
         std::fs::write(&p, b"not a checkpoint").unwrap();
-        assert!(load(&p).is_err());
+        let err = format!("{:#}", load(&p).unwrap_err());
+        assert!(err.contains("garbage.ckpt"), "error must name the path: {err}");
+    }
+
+    /// Decompress a saved checkpoint, let `f` mutate the raw
+    /// (magic|hlen|header|payload) bytes, recompress to `out`.
+    fn rewrite(src: &std::path::Path, out: &std::path::Path, f: impl FnOnce(&mut Vec<u8>)) {
+        let file = std::fs::File::open(src).unwrap();
+        let mut dec = GzDecoder::new(file);
+        let mut raw = Vec::new();
+        dec.read_to_end(&mut raw).unwrap();
+        f(&mut raw);
+        let mut enc = GzEncoder::new(std::fs::File::create(out).unwrap(), Compression::fast());
+        enc.write_all(&raw).unwrap();
+        enc.finish().unwrap();
+    }
+
+    /// Assemble a checkpoint file from a hand-built header + payload.
+    fn craft(header: &str, payload: &[u8], out: &std::path::Path) {
+        std::fs::create_dir_all(out.parent().unwrap()).unwrap();
+        let mut raw = Vec::new();
+        raw.extend_from_slice(MAGIC);
+        raw.extend_from_slice(&(header.len() as u32).to_le_bytes());
+        raw.extend_from_slice(header.as_bytes());
+        raw.extend_from_slice(payload);
+        let mut enc = GzEncoder::new(std::fs::File::create(out).unwrap(), Compression::fast());
+        enc.write_all(&raw).unwrap();
+        enc.finish().unwrap();
+    }
+
+    #[test]
+    fn save_is_atomic_no_tmp_left_behind() {
+        let c = sample();
+        let p = tmp("atomic.ckpt");
+        save(&c, &p, WeightCodec::F32).unwrap();
+        assert!(p.exists());
+        assert!(!tmp_sibling(&p).exists(), "temp file must be renamed away");
+        // overwriting an existing checkpoint is also atomic
+        save(&c, &p, WeightCodec::F32).unwrap();
+        assert!(!tmp_sibling(&p).exists());
+        load(&p).unwrap();
+    }
+
+    #[test]
+    fn truncated_payload_rejected_with_path_and_mode() {
+        let c = sample();
+        let p = tmp("trunc_src.ckpt");
+        save(&c, &p, WeightCodec::F32).unwrap();
+        let bad = tmp("trunc.ckpt");
+        rewrite(&p, &bad, |raw| {
+            let keep = raw.len() - 64; // chop the payload tail
+            raw.truncate(keep);
+        });
+        let err = format!("{:#}", load(&bad).unwrap_err());
+        assert!(err.contains("trunc.ckpt"), "error must name the path: {err}");
+        assert!(
+            err.contains("checksum") || err.contains("truncated"),
+            "error must name the failure mode: {err}"
+        );
+    }
+
+    #[test]
+    fn bit_flip_rejected_by_checksum() {
+        let c = sample();
+        let p = tmp("flip_src.ckpt");
+        save(&c, &p, WeightCodec::F32).unwrap();
+        let bad = tmp("flip.ckpt");
+        rewrite(&p, &bad, |raw| {
+            let last = raw.len() - 1; // payload byte, far past the header
+            raw[last] ^= 0x40;
+        });
+        let err = format!("{:#}", load(&bad).unwrap_err());
+        assert!(err.contains("checksum mismatch"), "{err}");
+        assert!(err.contains("flip.ckpt"), "{err}");
+    }
+
+    #[test]
+    fn future_version_rejected_with_clear_error() {
+        let bad = tmp("future.ckpt");
+        craft(r#"{"version":99,"step":0,"n_params":0,"tensors":[]}"#, &[], &bad);
+        let err = format!("{:#}", load(&bad).unwrap_err());
+        assert!(err.contains("version 99"), "{err}");
+        assert!(err.contains("future.ckpt"), "{err}");
+    }
+
+    #[test]
+    fn version1_files_without_checksum_still_load() {
+        // a pre-checksum file: one f32 tensor, no payload_fnv anywhere
+        let payload: Vec<u8> =
+            [1.5f32, -2.0, 0.25].iter().flat_map(|x| x.to_le_bytes()).collect();
+        let header = concat!(
+            r#"{"version":1,"step":7,"n_params":1,"tensors":["#,
+            r#"{"name":"p/w","codec":"f32","shape":[3],"bytes":12}]}"#
+        );
+        let p = tmp("v1.ckpt");
+        craft(header, &payload, &p);
+        let c = load(&p).unwrap();
+        assert_eq!(c.step, 7);
+        assert_eq!(c.params[0].0, "w");
+        assert_eq!(c.params[0].1.data, vec![1.5, -2.0, 0.25]);
     }
 }

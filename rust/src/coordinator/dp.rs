@@ -9,7 +9,7 @@
 //! device is the host); what is exercised is the coordination fabric:
 //! sharded deterministic data, gradient reduction, single apply.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 use xla::PjRtBuffer;
 
 use crate::data::batcher::TokenDataset;
@@ -36,6 +36,63 @@ pub fn allreduce_mean(grads: &mut Vec<Vec<Tensor>>) -> Vec<Tensor> {
         }
     }
     acc
+}
+
+/// Deterministic shard→worker assignment for lease (re-)acquisition.
+///
+/// `held` are leases to keep (shard, worker); `live` is the current
+/// worker set.  Held shards whose worker is still live stay put; every
+/// other shard (never-assigned, expired, or held by a dead worker) goes to
+/// the live worker with the fewest shards, ties broken by
+/// lexicographically smallest worker id, shards filled in ascending
+/// order.  The result is a pure function of the inputs — two orchestrators
+/// (or a resume after a crash) compute the identical plan, so worker death
+/// never perturbs which data shard feeds which gradient slot.
+///
+/// Note the unit of assignment is the *shard index*: the batcher keys data
+/// on (step, shard, n_shards), so re-homing a shard to a survivor changes
+/// who computes it, not what is computed — the reduce order stays
+/// ascending-shard and the math stays byte-stable.
+pub fn rebalance(
+    n_shards: usize,
+    held: &[(usize, String)],
+    live: &[String],
+) -> Result<Vec<(usize, String)>> {
+    if live.is_empty() && n_shards > 0 {
+        bail!("no live workers to cover {n_shards} shards");
+    }
+    // BTreeMap: deterministic (lexicographic) iteration for tie-breaks
+    let mut counts: std::collections::BTreeMap<&str, usize> =
+        live.iter().map(|w| (w.as_str(), 0)).collect();
+    let mut plan: Vec<Option<String>> = vec![None; n_shards];
+    for (shard, worker) in held {
+        if *shard >= n_shards {
+            bail!("held lease for shard {shard} out of range ({n_shards} shards)");
+        }
+        if plan[*shard].is_some() {
+            bail!("shard {shard} appears twice in held leases");
+        }
+        if let Some(c) = counts.get_mut(worker.as_str()) {
+            *c += 1;
+            plan[*shard] = Some(worker.clone());
+        } // dead holder: leave the slot open for re-assignment
+    }
+    for slot in plan.iter_mut() {
+        if slot.is_none() {
+            let pick: &str = counts
+                .iter()
+                .min_by(|a, b| a.1.cmp(b.1).then(a.0.cmp(b.0)))
+                .map(|(w, _)| *w)
+                .expect("live is non-empty");
+            *counts.get_mut(pick).expect("picked from counts") += 1;
+            *slot = Some(pick.to_string());
+        }
+    }
+    Ok(plan
+        .into_iter()
+        .enumerate()
+        .map(|(shard, w)| (shard, w.expect("every slot filled")))
+        .collect())
 }
 
 pub struct DataParallel<'rt> {
@@ -108,5 +165,53 @@ mod tests {
     #[should_panic]
     fn allreduce_empty_panics() {
         allreduce_mean(&mut Vec::new());
+    }
+
+    fn w(names: &[&str]) -> Vec<String> {
+        names.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn rebalance_covers_each_shard_once_deterministically() {
+        for n_workers in [1usize, 2, 3, 8] {
+            let live: Vec<String> = (0..n_workers).map(|i| format!("w{i}")).collect();
+            let a = rebalance(8, &[], &live).unwrap();
+            let b = rebalance(8, &[], &live).unwrap();
+            assert_eq!(a, b, "plan must be a pure function of inputs");
+            let shards: Vec<usize> = a.iter().map(|(s, _)| *s).collect();
+            assert_eq!(shards, (0..8).collect::<Vec<_>>(), "each shard exactly once, ascending");
+            // balanced: max load - min load <= 1
+            let mut loads = std::collections::BTreeMap::new();
+            for (_, worker) in &a {
+                *loads.entry(worker.clone()).or_insert(0usize) += 1;
+            }
+            let (mn, mx) = (loads.values().min().unwrap(), loads.values().max().unwrap());
+            assert!(mx - mn <= 1, "unbalanced plan at W={n_workers}: {a:?}");
+        }
+    }
+
+    #[test]
+    fn rebalance_reassigns_dead_workers_shards_only() {
+        let held = vec![(0usize, "w0".to_string()), (1, "w1".to_string()), (2, "w2".to_string())];
+        // w1 died
+        let plan = rebalance(3, &held, &w(&["w0", "w2"])).unwrap();
+        assert_eq!(plan[0], (0, "w0".to_string()), "held live lease stays put");
+        assert_eq!(plan[2], (2, "w2".to_string()), "held live lease stays put");
+        // shard 1 re-homed to a survivor (lexicographic tie-break at equal load)
+        assert_eq!(plan[1], (1, "w0".to_string()));
+    }
+
+    #[test]
+    fn rebalance_more_workers_than_shards_leaves_some_idle() {
+        let plan = rebalance(2, &[], &w(&["a", "b", "c", "d"])).unwrap();
+        assert_eq!(plan, vec![(0, "a".to_string()), (1, "b".to_string())]);
+    }
+
+    #[test]
+    fn rebalance_rejects_bad_inputs() {
+        assert!(rebalance(2, &[], &[]).is_err(), "no live workers");
+        assert!(rebalance(2, &[(5, "a".to_string())], &w(&["a"])).is_err(), "shard out of range");
+        let dup = vec![(0usize, "a".to_string()), (0, "b".to_string())];
+        assert!(rebalance(2, &dup, &w(&["a", "b"])).is_err(), "duplicate held shard");
     }
 }

@@ -8,8 +8,13 @@
 //!                  optional FP4/FP8-quantized weight payloads).
 //! * `dp`         — data-parallel worker pool: per-worker grad steps and a
 //!                  host-side gradient all-reduce feeding one apply step.
+//! * `runstore`   — durable run store: file-backed shard leases with fence
+//!                  tokens, heartbeats, checkpoint pointers, and an
+//!                  append-only journal, behind the fault-tolerant
+//!                  `train --host` resume path.
 
 pub mod checkpoint;
 pub mod dp;
 pub mod metrics;
+pub mod runstore;
 pub mod trainer;

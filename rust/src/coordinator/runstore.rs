@@ -1,0 +1,806 @@
+//! Durable run store: file-backed orchestration state for fault-tolerant
+//! `train --host` runs.
+//!
+//! A run directory owns three files plus a checkpoint subdirectory:
+//!
+//! * `run.json`      — immutable run metadata written once at creation:
+//!                     the config hash (see [`config_hash`]) plus the
+//!                     determinism-relevant fields spelled out for humans.
+//! * `state.json`    — the mutable snapshot (status, shard leases,
+//!                     latest-checkpoint pointer, resume count), rewritten
+//!                     atomically (tmp + rename) on every transition so a
+//!                     crash at any instant leaves a consistent file.
+//! * `journal.jsonl` — append-only audit log of every event (create,
+//!                     lease, heartbeat, expire, checkpoint, fault,
+//!                     resume, complete): the rsBot-style "re-run keeps
+//!                     state for audit" trail.
+//! * `ckpt/`         — packed checkpoints (`coordinator::checkpoint`,
+//!                     always `WeightCodec::F32`: exact-f32 payloads are
+//!                     what makes crash-resume bit-identical).
+//!
+//! # Lease state machine
+//!
+//! Each data shard (not worker!) has one lease row: `Free → Leased{worker,
+//! fence} → Free` (on expiry) or `→ Done` (on completion).  Every
+//! acquisition bumps the shard's **fence token**; heartbeats and
+//! completions must present the fence they were granted, so a zombie
+//! worker whose lease expired and was re-granted is rejected the moment it
+//! wakes up ("stale lease").  Shards — not worker identities — key the
+//! data assignment, so re-leasing a dead worker's shard to a survivor
+//! never perturbs which windows feed which gradient accumulator, and the
+//! math stays byte-stable (see `dp::rebalance` for the deterministic
+//! assignment policy).
+//!
+//! Time is a caller-supplied logical clock (`now_ms`): the engine passes
+//! wall-clock milliseconds, tests pass hand-rolled values, and the store
+//! itself never reads `SystemTime` — lease-expiry logic is deterministic
+//! under test.
+//!
+//! # Resume invariants
+//!
+//! Bit-identical resume needs exactly: master params + Adam moments (f32
+//! bits) + the completed-step count.  Batches are a pure function of
+//! (seed, step); no RNG is drawn during training (init only); the §3.3
+//! recipe stage is a pure function of step.  The journal additionally
+//! records epoch/window positions for audit, but nothing replays from it —
+//! the latest checkpoint pointer is the only replay source, and a crash
+//! between checkpoint rename and pointer update just means a longer
+//! (still bit-identical) replay from the previous pointer.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::RunConfig;
+use crate::util::fnv1a64;
+use crate::util::json::{obj, Json};
+
+pub const RUN_FILE: &str = "run.json";
+pub const STATE_FILE: &str = "state.json";
+pub const JOURNAL_FILE: &str = "journal.jsonl";
+pub const CKPT_SUBDIR: &str = "ckpt";
+
+/// FNV-1a digest (hex) over the determinism-relevant config fields — the
+/// gate a resume must pass: any drift in model, recipe, schedule, seed,
+/// worker count, or corpus geometry changes the batch/grad sequence and
+/// would silently break bit-identity.
+pub fn config_hash(cfg: &RunConfig) -> String {
+    let canon = format!(
+        "{}|{}|{}|{}|{}|{}|{}|{}|{}|{}",
+        cfg.model,
+        cfg.recipe,
+        cfg.target_recipe,
+        cfg.steps,
+        cfg.seed,
+        cfg.target_precision_frac,
+        cfg.workers,
+        cfg.data.n_docs,
+        cfg.data.corpus_seed,
+        cfg.data.val_frac,
+    );
+    format!("{:016x}", fnv1a64(canon.as_bytes()))
+}
+
+/// Immutable run metadata (`run.json`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunMeta {
+    pub config_hash: String,
+    pub model: String,
+    pub recipe: String,
+    pub target_recipe: String,
+    pub steps: u64,
+    pub seed: u64,
+    pub n_shards: usize,
+}
+
+impl RunMeta {
+    pub fn from_config(cfg: &RunConfig) -> RunMeta {
+        RunMeta {
+            config_hash: config_hash(cfg),
+            model: cfg.model.clone(),
+            recipe: cfg.recipe.clone(),
+            target_recipe: cfg.target_recipe.clone(),
+            steps: cfg.steps,
+            seed: cfg.seed,
+            n_shards: cfg.workers.max(1),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("config_hash", self.config_hash.as_str().into()),
+            ("model", self.model.as_str().into()),
+            ("recipe", self.recipe.as_str().into()),
+            ("target_recipe", self.target_recipe.as_str().into()),
+            ("steps", (self.steps as i64).into()),
+            // decimal string: util::json numbers are f64, u64 seeds aren't
+            ("seed", self.seed.to_string().into()),
+            ("n_shards", self.n_shards.into()),
+        ])
+    }
+
+    fn from_json(j: &Json, path: &Path) -> Result<RunMeta> {
+        let s = |k: &str| -> Result<String> {
+            j.get(k)
+                .and_then(|x| x.as_str())
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("{}: missing field `{k}`", path.display()))
+        };
+        Ok(RunMeta {
+            config_hash: s("config_hash")?,
+            model: s("model")?,
+            recipe: s("recipe")?,
+            target_recipe: s("target_recipe")?,
+            steps: j.get("steps").and_then(|x| x.as_i64()).unwrap_or(0) as u64,
+            seed: s("seed")?
+                .parse()
+                .map_err(|_| anyhow!("{}: seed is not a u64", path.display()))?,
+            n_shards: j.get("n_shards").and_then(|x| x.as_usize()).unwrap_or(1).max(1),
+        })
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LeaseState {
+    Free,
+    Leased,
+    Done,
+}
+
+impl LeaseState {
+    fn name(self) -> &'static str {
+        match self {
+            LeaseState::Free => "free",
+            LeaseState::Leased => "leased",
+            LeaseState::Done => "done",
+        }
+    }
+
+    fn parse(s: &str) -> Result<LeaseState> {
+        match s {
+            "free" => Ok(LeaseState::Free),
+            "leased" => Ok(LeaseState::Leased),
+            "done" => Ok(LeaseState::Done),
+            _ => bail!("unknown lease state `{s}`"),
+        }
+    }
+}
+
+/// One shard's lease row.  `worker` is the current (or, when Free, the
+/// last) holder; `fence` counts acquisitions over the run's lifetime.
+#[derive(Clone, Debug)]
+pub struct Lease {
+    pub shard: usize,
+    pub state: LeaseState,
+    pub worker: String,
+    pub fence: u64,
+    pub last_step: u64,
+    pub last_beat_ms: u64,
+}
+
+/// Proof of holding a shard at a specific fence.  Heartbeats and
+/// completions present it; a grant whose fence was superseded (the lease
+/// expired and was re-granted) is rejected — zombie fencing.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LeaseGrant {
+    pub shard: usize,
+    pub worker: String,
+    pub fence: u64,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RunStatus {
+    Created,
+    Running,
+    Faulted,
+    Complete,
+}
+
+impl RunStatus {
+    fn name(self) -> &'static str {
+        match self {
+            RunStatus::Created => "created",
+            RunStatus::Running => "running",
+            RunStatus::Faulted => "faulted",
+            RunStatus::Complete => "complete",
+        }
+    }
+
+    fn parse(s: &str) -> Result<RunStatus> {
+        match s {
+            "created" => Ok(RunStatus::Created),
+            "running" => Ok(RunStatus::Running),
+            "faulted" => Ok(RunStatus::Faulted),
+            "complete" => Ok(RunStatus::Complete),
+            _ => bail!("unknown run status `{s}`"),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+struct CkptPointer {
+    step: u64,
+    file: String, // run-dir-relative, e.g. "ckpt/step_000040.ckpt"
+}
+
+/// The durable run store.  One instance per orchestrator process; all
+/// mutating methods persist `state.json` atomically and append a journal
+/// line before returning.
+pub struct RunStore {
+    dir: PathBuf,
+    meta: RunMeta,
+    status: RunStatus,
+    leases: Vec<Lease>,
+    latest: Option<CkptPointer>,
+    resumes: u64,
+}
+
+impl RunStore {
+    /// Initialize a fresh run directory.  Fails if one already holds a
+    /// run store (resume instead of clobbering).
+    pub fn create(dir: &Path, meta: RunMeta) -> Result<RunStore> {
+        let run_file = dir.join(RUN_FILE);
+        if run_file.exists() {
+            bail!(
+                "run dir {} already holds a run store — resume it with --resume, \
+                 or pick a fresh directory",
+                dir.display()
+            );
+        }
+        std::fs::create_dir_all(dir.join(CKPT_SUBDIR))
+            .with_context(|| format!("creating run dir {}", dir.display()))?;
+        write_atomic(&run_file, &meta.to_json().to_string_pretty())?;
+        let leases = (0..meta.n_shards)
+            .map(|shard| Lease {
+                shard,
+                state: LeaseState::Free,
+                worker: String::new(),
+                fence: 0,
+                last_step: 0,
+                last_beat_ms: 0,
+            })
+            .collect();
+        let mut store = RunStore {
+            dir: dir.to_path_buf(),
+            meta,
+            status: RunStatus::Created,
+            leases,
+            latest: None,
+            resumes: 0,
+        };
+        store.persist()?;
+        store.journal("create", vec![("n_shards", store.meta.n_shards.into())])?;
+        Ok(store)
+    }
+
+    /// Reopen an existing run directory (the resume path).
+    pub fn open(dir: &Path) -> Result<RunStore> {
+        let run_file = dir.join(RUN_FILE);
+        let meta_src = std::fs::read_to_string(&run_file)
+            .with_context(|| format!("reading run metadata {}", run_file.display()))?;
+        let meta_json = Json::parse(&meta_src)
+            .map_err(|e| anyhow!("corrupt run metadata {}: {e}", run_file.display()))?;
+        let meta = RunMeta::from_json(&meta_json, &run_file)?;
+
+        let state_file = dir.join(STATE_FILE);
+        let state_src = std::fs::read_to_string(&state_file)
+            .with_context(|| format!("reading run state {}", state_file.display()))?;
+        let j = Json::parse(&state_src)
+            .map_err(|e| anyhow!("corrupt run state {}: {e}", state_file.display()))?;
+
+        let status = RunStatus::parse(
+            j.get("status").and_then(|x| x.as_str()).unwrap_or(""),
+        )
+        .with_context(|| format!("in {}", state_file.display()))?;
+        let mut leases = Vec::new();
+        for (i, lj) in j.get("leases").and_then(|x| x.as_arr()).unwrap_or(&[]).iter().enumerate() {
+            leases.push(Lease {
+                shard: lj.get("shard").and_then(|x| x.as_usize()).unwrap_or(i),
+                state: LeaseState::parse(lj.get("state").and_then(|x| x.as_str()).unwrap_or(""))
+                    .with_context(|| format!("lease {i} in {}", state_file.display()))?,
+                worker: lj.get("worker").and_then(|x| x.as_str()).unwrap_or("").to_string(),
+                fence: lj.get("fence").and_then(|x| x.as_i64()).unwrap_or(0) as u64,
+                last_step: lj.get("last_step").and_then(|x| x.as_i64()).unwrap_or(0) as u64,
+                last_beat_ms: lj.get("last_beat_ms").and_then(|x| x.as_f64()).unwrap_or(0.0)
+                    as u64,
+            });
+        }
+        if leases.len() != meta.n_shards {
+            bail!(
+                "run state {} holds {} lease rows but run.json declares {} shards",
+                state_file.display(), leases.len(), meta.n_shards
+            );
+        }
+        let latest = match j.get("latest") {
+            Some(Json::Obj(_)) => {
+                let p = j.get("latest").unwrap();
+                Some(CkptPointer {
+                    step: p.get("step").and_then(|x| x.as_i64()).unwrap_or(0) as u64,
+                    file: p.get("file").and_then(|x| x.as_str()).unwrap_or("").to_string(),
+                })
+            }
+            _ => None,
+        };
+        let resumes = j.get("resumes").and_then(|x| x.as_i64()).unwrap_or(0) as u64;
+        Ok(RunStore { dir: dir.to_path_buf(), meta, status, leases, latest, resumes })
+    }
+
+    /// Reject a resume whose config drifted from the recorded run: any
+    /// mismatch in the determinism-relevant fields would break
+    /// bit-identity silently, so this fails loudly with both sides.
+    pub fn check_config(&self, cfg: &RunConfig) -> Result<()> {
+        let got = config_hash(cfg);
+        if got != self.meta.config_hash {
+            bail!(
+                "resume config mismatch for {}: the run store was created for \
+                 model={} recipe={} target_recipe={} steps={} seed={} workers={} \
+                 (config hash {}), but this invocation hashes to {got} — a resumed \
+                 run must use the identical configuration",
+                self.dir.display(),
+                self.meta.model, self.meta.recipe, self.meta.target_recipe,
+                self.meta.steps, self.meta.seed, self.meta.n_shards,
+                self.meta.config_hash,
+            );
+        }
+        Ok(())
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn meta(&self) -> &RunMeta {
+        &self.meta
+    }
+
+    pub fn status(&self) -> RunStatus {
+        self.status
+    }
+
+    pub fn leases(&self) -> &[Lease] {
+        &self.leases
+    }
+
+    pub fn resumes(&self) -> u64 {
+        self.resumes
+    }
+
+    pub fn ckpt_dir(&self) -> PathBuf {
+        self.dir.join(CKPT_SUBDIR)
+    }
+
+    /// Grant `shard` to `worker`, bumping the fence.  The shard must be
+    /// Free (expire or reclaim a held lease first).
+    pub fn lease_to(&mut self, shard: usize, worker: &str, now_ms: u64) -> Result<LeaseGrant> {
+        let n = self.leases.len();
+        let l = self
+            .leases
+            .get_mut(shard)
+            .ok_or_else(|| anyhow!("shard {shard} out of range ({n} shards)"))?;
+        match l.state {
+            LeaseState::Leased => bail!(
+                "shard {shard} is already leased to {} (fence {}) — expire it first",
+                l.worker, l.fence
+            ),
+            LeaseState::Done => bail!("shard {shard} is already complete"),
+            LeaseState::Free => {}
+        }
+        l.state = LeaseState::Leased;
+        l.worker = worker.to_string();
+        l.fence += 1;
+        l.last_beat_ms = now_ms;
+        let grant = LeaseGrant { shard, worker: worker.to_string(), fence: l.fence };
+        self.persist()?;
+        self.journal(
+            "lease",
+            vec![
+                ("shard", shard.into()),
+                ("worker", worker.into()),
+                ("fence", (grant.fence as i64).into()),
+            ],
+        )?;
+        Ok(grant)
+    }
+
+    /// Grant the lowest-indexed Free shard to `worker` (None when every
+    /// shard is held or done).
+    pub fn acquire(&mut self, worker: &str, now_ms: u64) -> Result<Option<LeaseGrant>> {
+        match self.leases.iter().position(|l| l.state == LeaseState::Free) {
+            Some(shard) => self.lease_to(shard, worker, now_ms).map(Some),
+            None => Ok(None),
+        }
+    }
+
+    /// Refresh a lease: records liveness + progress.  Rejects grants whose
+    /// fence was superseded — the zombie-fencing check.
+    pub fn heartbeat(&mut self, grant: &LeaseGrant, step: u64, now_ms: u64) -> Result<()> {
+        let l = self
+            .leases
+            .get_mut(grant.shard)
+            .ok_or_else(|| anyhow!("shard {} out of range", grant.shard))?;
+        if l.state != LeaseState::Leased || l.fence != grant.fence {
+            bail!(
+                "stale lease: worker {} presented shard {} fence {}, but the lease is \
+                 now {} at fence {} — the worker must stop",
+                grant.worker, grant.shard, grant.fence, l.state.name(), l.fence
+            );
+        }
+        l.last_step = step;
+        l.last_beat_ms = now_ms;
+        if matches!(self.status, RunStatus::Created | RunStatus::Faulted) {
+            self.status = RunStatus::Running;
+        }
+        self.persist()?;
+        self.journal(
+            "heartbeat",
+            vec![
+                ("shard", grant.shard.into()),
+                ("worker", grant.worker.as_str().into()),
+                ("step", (step as i64).into()),
+            ],
+        )
+    }
+
+    /// Free every Leased shard whose last heartbeat is older than
+    /// `timeout_ms`; returns the freed shard indices (dead-worker
+    /// detection).
+    pub fn expire_stale(&mut self, now_ms: u64, timeout_ms: u64) -> Result<Vec<usize>> {
+        let mut freed = Vec::new();
+        for l in &mut self.leases {
+            if l.state == LeaseState::Leased && now_ms.saturating_sub(l.last_beat_ms) > timeout_ms
+            {
+                l.state = LeaseState::Free;
+                freed.push(l.shard);
+            }
+        }
+        if !freed.is_empty() {
+            self.persist()?;
+            for &shard in &freed {
+                self.journal("expire", vec![("shard", shard.into())])?;
+            }
+        }
+        Ok(freed)
+    }
+
+    /// Free every live lease unconditionally — the resume path, where the
+    /// previous orchestrator process (and all its workers) is known dead
+    /// regardless of heartbeat age.
+    pub fn reclaim_all(&mut self) -> Result<Vec<usize>> {
+        let mut freed = Vec::new();
+        for l in &mut self.leases {
+            if l.state == LeaseState::Leased {
+                l.state = LeaseState::Free;
+                freed.push(l.shard);
+            }
+        }
+        if !freed.is_empty() {
+            self.persist()?;
+            for &shard in &freed {
+                self.journal("reclaim", vec![("shard", shard.into())])?;
+            }
+        }
+        Ok(freed)
+    }
+
+    /// Mark a shard's work complete (fence-checked like heartbeats).
+    pub fn complete_shard(&mut self, grant: &LeaseGrant) -> Result<()> {
+        let l = self
+            .leases
+            .get_mut(grant.shard)
+            .ok_or_else(|| anyhow!("shard {} out of range", grant.shard))?;
+        if l.state != LeaseState::Leased || l.fence != grant.fence {
+            bail!(
+                "stale lease: cannot complete shard {} at fence {} (lease is {} at fence {})",
+                grant.shard, grant.fence, l.state.name(), l.fence
+            );
+        }
+        l.state = LeaseState::Done;
+        self.persist()?;
+        self.journal("shard_done", vec![("shard", grant.shard.into())])
+    }
+
+    /// Flip the latest-checkpoint pointer.  Call *after*
+    /// `checkpoint::save` has renamed the file into place: a crash between
+    /// the two leaves the old pointer targeting an intact file (longer
+    /// replay, still bit-identical).
+    pub fn record_checkpoint(&mut self, step: u64, rel_file: &str) -> Result<()> {
+        self.latest = Some(CkptPointer { step, file: rel_file.to_string() });
+        self.persist()?;
+        self.journal(
+            "checkpoint",
+            vec![("step", (step as i64).into()), ("file", rel_file.into())],
+        )
+    }
+
+    /// Latest checkpoint as (step, absolute path), if any was recorded.
+    pub fn latest_checkpoint(&self) -> Option<(u64, PathBuf)> {
+        self.latest.as_ref().map(|p| (p.step, self.dir.join(&p.file)))
+    }
+
+    /// Best-effort crash marker (audit only — resume never depends on it,
+    /// because kill -9 writes nothing).
+    pub fn record_fault(&mut self, step: u64, why: &str) -> Result<()> {
+        self.status = RunStatus::Faulted;
+        self.persist()?;
+        self.journal("fault", vec![("step", (step as i64).into()), ("why", why.into())])
+    }
+
+    /// Record a resume: bumps the resume counter and, for audit, the step
+    /// and epoch/window position training restarts from.
+    pub fn record_resume(&mut self, from_step: u64, epoch: u64, window: usize) -> Result<()> {
+        self.resumes += 1;
+        self.status = RunStatus::Running;
+        self.persist()?;
+        self.journal(
+            "resume",
+            vec![
+                ("from_step", (from_step as i64).into()),
+                ("epoch", (epoch as i64).into()),
+                ("window", window.into()),
+                ("resumes", (self.resumes as i64).into()),
+            ],
+        )
+    }
+
+    pub fn complete(&mut self, final_step: u64) -> Result<()> {
+        self.status = RunStatus::Complete;
+        self.persist()?;
+        self.journal("complete", vec![("step", (final_step as i64).into())])
+    }
+
+    /// Parse every journal line (audit/tests).
+    pub fn read_journal(&self) -> Result<Vec<Json>> {
+        let path = self.dir.join(JOURNAL_FILE);
+        let src = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading journal {}", path.display()))?;
+        let mut out = Vec::new();
+        for (i, line) in src.lines().enumerate() {
+            if line.is_empty() {
+                continue;
+            }
+            out.push(
+                Json::parse(line)
+                    .map_err(|e| anyhow!("journal {} line {}: {e}", path.display(), i + 1))?,
+            );
+        }
+        Ok(out)
+    }
+
+    fn persist(&self) -> Result<()> {
+        let leases = self
+            .leases
+            .iter()
+            .map(|l| {
+                obj(vec![
+                    ("shard", l.shard.into()),
+                    ("state", l.state.name().into()),
+                    ("worker", l.worker.as_str().into()),
+                    ("fence", (l.fence as i64).into()),
+                    ("last_step", (l.last_step as i64).into()),
+                    ("last_beat_ms", (l.last_beat_ms as f64).into()),
+                ])
+            })
+            .collect();
+        let latest = match &self.latest {
+            Some(p) => obj(vec![
+                ("step", (p.step as i64).into()),
+                ("file", p.file.as_str().into()),
+            ]),
+            None => Json::Null,
+        };
+        let state = obj(vec![
+            ("status", self.status.name().into()),
+            ("resumes", (self.resumes as i64).into()),
+            ("latest", latest),
+            ("leases", Json::Arr(leases)),
+        ]);
+        write_atomic(&self.dir.join(STATE_FILE), &state.to_string_pretty())
+    }
+
+    fn journal(&self, event: &str, mut kvs: Vec<(&str, Json)>) -> Result<()> {
+        kvs.insert(0, ("event", event.into()));
+        let path = self.dir.join(JOURNAL_FILE);
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .with_context(|| format!("opening journal {}", path.display()))?;
+        writeln!(f, "{}", obj(kvs).to_string_compact())
+            .with_context(|| format!("appending to journal {}", path.display()))
+    }
+}
+
+/// Write `contents` to `path` via a `.tmp` sibling + rename, so readers
+/// (and crash recovery) only ever see a complete file.
+fn write_atomic(path: &Path, contents: &str) -> Result<()> {
+    let mut tmp_os = path.as_os_str().to_os_string();
+    tmp_os.push(".tmp");
+    let tmp = PathBuf::from(tmp_os);
+    std::fs::write(&tmp, contents)
+        .with_context(|| format!("writing {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} -> {}", tmp.display(), path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join("fp4runstore").join(name);
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn meta(n_shards: usize) -> RunMeta {
+        let mut cfg = RunConfig::default();
+        cfg.workers = n_shards;
+        cfg.steps = 8;
+        RunMeta::from_config(&cfg)
+    }
+
+    #[test]
+    fn create_open_roundtrip() {
+        let d = tdir("roundtrip");
+        let m = meta(2);
+        let mut s = RunStore::create(&d, m.clone()).unwrap();
+        s.record_checkpoint(4, "ckpt/step_000004.ckpt").unwrap();
+        drop(s);
+        let s2 = RunStore::open(&d).unwrap();
+        assert_eq!(*s2.meta(), m);
+        assert_eq!(s2.status(), RunStatus::Created);
+        assert_eq!(s2.leases().len(), 2);
+        let (step, path) = s2.latest_checkpoint().unwrap();
+        assert_eq!(step, 4);
+        assert_eq!(path, d.join("ckpt/step_000004.ckpt"));
+    }
+
+    #[test]
+    fn create_refuses_existing_run_dir() {
+        let d = tdir("refuse");
+        RunStore::create(&d, meta(1)).unwrap();
+        let err = format!("{:#}", RunStore::create(&d, meta(1)).unwrap_err());
+        assert!(err.contains("--resume"), "{err}");
+    }
+
+    #[test]
+    fn open_missing_dir_names_path() {
+        let d = tdir("missing"); // never created
+        let err = format!("{:#}", RunStore::open(&d).unwrap_err());
+        assert!(err.contains("run.json"), "{err}");
+    }
+
+    #[test]
+    fn acquire_lowest_free_and_heartbeat() {
+        let d = tdir("acquire");
+        let mut s = RunStore::create(&d, meta(3)).unwrap();
+        let g0 = s.acquire("w0", 100).unwrap().unwrap();
+        let g1 = s.acquire("w1", 100).unwrap().unwrap();
+        assert_eq!((g0.shard, g1.shard), (0, 1));
+        assert_eq!((g0.fence, g1.fence), (1, 1));
+        s.heartbeat(&g0, 5, 200).unwrap();
+        assert_eq!(s.status(), RunStatus::Running);
+        assert_eq!(s.leases()[0].last_step, 5);
+        let g2 = s.acquire("w0", 300).unwrap().unwrap();
+        assert_eq!(g2.shard, 2);
+        assert!(s.acquire("w9", 300).unwrap().is_none(), "no free shard left");
+    }
+
+    #[test]
+    fn expiry_releases_and_fencing_rejects_zombies() {
+        let d = tdir("fencing");
+        let mut s = RunStore::create(&d, meta(2)).unwrap();
+        let g0 = s.acquire("w0", 1_000).unwrap().unwrap();
+        let g1 = s.acquire("w1", 1_000).unwrap().unwrap();
+        s.heartbeat(&g0, 0, 2_000).unwrap();
+        s.heartbeat(&g1, 0, 2_000).unwrap();
+        // w1 dies; w0 keeps beating
+        s.heartbeat(&g0, 3, 9_000).unwrap();
+        let freed = s.expire_stale(9_000, 5_000).unwrap();
+        assert_eq!(freed, vec![1]);
+        // survivor picks up the freed shard at a bumped fence
+        let g1b = s.lease_to(1, "w0", 9_100).unwrap();
+        assert_eq!(g1b.fence, g1.fence + 1);
+        s.heartbeat(&g1b, 4, 9_200).unwrap();
+        // the zombie wakes up: stale fence, rejected
+        let err = format!("{:#}", s.heartbeat(&g1, 4, 9_300).unwrap_err());
+        assert!(err.contains("stale lease"), "{err}");
+        // state survives reopen
+        drop(s);
+        let s2 = RunStore::open(&d).unwrap();
+        assert_eq!(s2.leases()[1].fence, g1b.fence);
+        assert_eq!(s2.leases()[1].worker, "w0");
+    }
+
+    #[test]
+    fn double_lease_rejected_reclaim_frees() {
+        let d = tdir("reclaim");
+        let mut s = RunStore::create(&d, meta(2)).unwrap();
+        let _g0 = s.acquire("w0", 10).unwrap().unwrap();
+        assert!(s.lease_to(0, "w1", 20).is_err(), "held shard must not re-lease");
+        let freed = s.reclaim_all().unwrap();
+        assert_eq!(freed, vec![0]);
+        s.lease_to(0, "w1", 30).unwrap();
+    }
+
+    #[test]
+    fn complete_shard_is_terminal() {
+        let d = tdir("done");
+        let mut s = RunStore::create(&d, meta(1)).unwrap();
+        let g = s.acquire("w0", 10).unwrap().unwrap();
+        s.complete_shard(&g).unwrap();
+        assert_eq!(s.leases()[0].state, LeaseState::Done);
+        assert!(s.lease_to(0, "w1", 20).is_err(), "done shard must not re-lease");
+        s.complete(8).unwrap();
+        assert_eq!(s.status(), RunStatus::Complete);
+    }
+
+    #[test]
+    fn config_hash_gates_resume() {
+        let d = tdir("cfg_gate");
+        let mut cfg = RunConfig::default();
+        cfg.workers = 1;
+        let s = RunStore::create(&d, RunMeta::from_config(&cfg)).unwrap();
+        s.check_config(&cfg).unwrap();
+        let mut drifted = cfg.clone();
+        drifted.seed = cfg.seed + 1;
+        let err = format!("{:#}", s.check_config(&drifted).unwrap_err());
+        assert!(err.contains("config mismatch"), "{err}");
+        assert!(err.contains(&cfg.model), "error should spell out the stored config: {err}");
+    }
+
+    #[test]
+    fn config_hash_sensitive_to_each_determinism_field() {
+        let base = RunConfig::default();
+        let h0 = config_hash(&base);
+        let mutations: Vec<Box<dyn Fn(&mut RunConfig)>> = vec![
+            Box::new(|c| c.model = "llama-125m-proxy".into()),
+            Box::new(|c| c.recipe = "fp16".into()),
+            Box::new(|c| c.target_recipe = "ours".into()),
+            Box::new(|c| c.steps += 1),
+            Box::new(|c| c.seed += 1),
+            Box::new(|c| c.target_precision_frac += 0.01),
+            Box::new(|c| c.workers += 1),
+            Box::new(|c| c.data.n_docs += 1),
+            Box::new(|c| c.data.corpus_seed += 1),
+            Box::new(|c| c.data.val_frac += 0.01),
+        ];
+        for (i, f) in mutations.iter().enumerate() {
+            let mut c = base.clone();
+            f(&mut c);
+            assert_ne!(config_hash(&c), h0, "mutation {i} must change the hash");
+        }
+        // non-determinism knobs must NOT change it (resumes may move out_dir)
+        let mut c = base.clone();
+        c.out_dir = "elsewhere".into();
+        c.log_every = 999;
+        c.checkpoint_every = 3;
+        assert_eq!(config_hash(&c), h0);
+    }
+
+    #[test]
+    fn journal_records_lifecycle() {
+        let d = tdir("journal");
+        let mut s = RunStore::create(&d, meta(1)).unwrap();
+        let g = s.acquire("w0", 10).unwrap().unwrap();
+        s.heartbeat(&g, 0, 20).unwrap();
+        s.record_checkpoint(2, "ckpt/step_000002.ckpt").unwrap();
+        s.record_fault(3, "PALLAS_FAULT").unwrap();
+        let events: Vec<String> = s
+            .read_journal()
+            .unwrap()
+            .iter()
+            .map(|j| j.get("event").and_then(|e| e.as_str()).unwrap_or("?").to_string())
+            .collect();
+        assert_eq!(events, vec!["create", "lease", "heartbeat", "checkpoint", "fault"]);
+        // a later process records the resume with its data position
+        let mut s2 = RunStore::open(&d).unwrap();
+        assert_eq!(s2.status(), RunStatus::Faulted);
+        s2.record_resume(2, 0, 16).unwrap();
+        assert_eq!(s2.resumes(), 1);
+        let last = s2.read_journal().unwrap().pop().unwrap();
+        assert_eq!(last.get("event").unwrap().as_str(), Some("resume"));
+        assert_eq!(last.get("from_step").unwrap().as_i64(), Some(2));
+    }
+}

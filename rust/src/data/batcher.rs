@@ -67,6 +67,28 @@ impl TokenDataset {
         &tokens[start..start + seq + 1]
     }
 
+    /// Epoch geometry for a worker count: (windows per epoch, global
+    /// batch).  Windows-per-epoch is the window count rounded down to a
+    /// multiple of the global batch so every epoch is full batches.
+    fn epoch_geometry(&self, n_workers: usize) -> (usize, u64) {
+        let n_windows = Self::window_starts(&self.train, self.cfg.seq);
+        let global = self.cfg.batch * n_workers;
+        assert!(n_windows >= global, "dataset too small for batch geometry");
+        (n_windows / global * global, global as u64)
+    }
+
+    /// (epoch, window-position-in-epoch) of a global step — what the run
+    /// store journals on resume so an operator can see where in the data
+    /// order training restarts.  Resume itself needs only the step:
+    /// batches are a pure function of (seed, step), so a batcher started
+    /// at any step reproduces the uninterrupted sequence exactly (pinned
+    /// by `resume_mid_epoch_matches_uninterrupted`).
+    pub fn epoch_position(&self, step: u64, n_workers: usize) -> (u64, usize) {
+        let (windows_per_epoch, global) = self.epoch_geometry(n_workers);
+        let wpe = windows_per_epoch as u64;
+        (step * global / wpe, (step * global % wpe) as usize)
+    }
+
     /// The batch for a global step (deterministic; worker-sharded).
     /// One-shot form of [`TokenDataset::train_batch_with`] — allocates a
     /// fresh window buffer and epoch permutation per call.
@@ -94,12 +116,8 @@ impl TokenDataset {
     ) -> TensorI32 {
         let seq = self.cfg.seq;
         let b = self.cfg.batch;
-        let n_windows = Self::window_starts(&self.train, seq);
-        assert!(n_windows >= b * n_workers, "dataset too small for batch geometry");
-        let windows_per_epoch = n_windows / (b * n_workers) * (b * n_workers);
-        let global_batch = (b * n_workers) as u64;
-        let epoch = step * global_batch / windows_per_epoch as u64;
-        let pos_in_epoch = (step * global_batch % windows_per_epoch as u64) as usize;
+        let (windows_per_epoch, _) = self.epoch_geometry(n_workers);
+        let (epoch, pos_in_epoch) = self.epoch_position(step, n_workers);
         if scratch.epoch != Some(epoch) || scratch.perm.len() != windows_per_epoch {
             // epoch-seeded permutation (full Fisher-Yates is fine at this
             // scale), rebuilt only on epoch boundaries when reused
@@ -289,6 +307,52 @@ mod tests {
             assert_eq!(b.data, ds.train_batch(step, 0, 1).data, "step {step}");
             pf.recycle(b);
         }
+    }
+
+    #[test]
+    fn resume_mid_epoch_matches_uninterrupted() {
+        // the crash-resume data contract: a fresh batcher started at any
+        // step — epoch start, mid-epoch, or deep into a later epoch —
+        // yields byte-identical batches to one that ran continuously
+        let ds = TokenDataset::new(toks(2000), cfg());
+        let mut scratch = BatchScratch::default();
+        let total = 240u64;
+        let want: Vec<Vec<i32>> = (0..total)
+            .map(|s| ds.train_batch_with(s, 0, 1, &mut scratch, Vec::new()).data)
+            .collect();
+        for start in [1u64, 37, 120, 200] {
+            let mut sc2 = BatchScratch::default();
+            for s in start..total {
+                let got = ds.train_batch_with(s, 0, 1, &mut sc2, Vec::new());
+                assert_eq!(got.data, want[s as usize], "start {start} step {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn epoch_position_advances_and_wraps() {
+        let ds = TokenDataset::new(toks(2000), cfg());
+        assert_eq!(ds.epoch_position(0, 1), (0, 0));
+        let (e1, p1) = ds.epoch_position(1, 1);
+        assert_eq!((e1, p1), (0, ds.cfg.batch));
+        // position always a multiple of the global batch, strictly inside
+        // the epoch, and the epoch index is non-decreasing in step
+        let mut last = (0u64, 0usize);
+        let mut wrapped = false;
+        for s in 0..500u64 {
+            let (e, p) = ds.epoch_position(s, 1);
+            assert_eq!(p % ds.cfg.batch, 0);
+            assert!(e >= last.0);
+            if e > last.0 {
+                assert_eq!(p, 0, "epoch must start at window 0");
+                wrapped = true;
+            }
+            last = (e, p);
+        }
+        assert!(wrapped, "test must cross an epoch boundary");
+        // worker-sharded geometry: 2 workers consume twice the windows/step
+        let (e_w2, p_w2) = ds.epoch_position(1, 2);
+        assert_eq!((e_w2, p_w2), (0, 2 * ds.cfg.batch));
     }
 
     #[test]

@@ -42,9 +42,10 @@ fn cli() -> Cli {
         .opt("target-recipe", None, "tail-stage recipe")
         .opt("eval-every", None, "eval cadence")
         .opt("log-every", None, "log cadence")
-        .opt("checkpoint-every", None, "checkpoint cadence (0=off)")
+        .opt("checkpoint-every", None, "checkpoint cadence (0=off; --host run dirs default to ~10)")
         .opt("checkpoint-dir", None, "checkpoint directory")
-        .opt("resume", None, "checkpoint file to resume from")
+        .opt("resume", None, "resume source: checkpoint file (PJRT) or run directory (--host)")
+        .opt("run-dir", None, "host engine: durable run directory (run store + checkpoints; resume it with --resume <dir>)")
         .opt("docs", None, "synthetic corpus size (documents)")
         .opt("artifacts", Some("artifacts"), "AOT artifacts directory")
         .opt("out", None, "output directory")
@@ -100,12 +101,36 @@ fn open_runtime(args: &fp4train::util::args::Args) -> Result<Runtime> {
 fn cmd_train(args: &fp4train::util::args::Args) -> Result<()> {
     let cfg = RunConfig::resolve(args.get("config"), args).map_err(|e| anyhow!(e))?;
     if args.has_flag("host") {
-        let res = fp4train::refmodel::train_host(&cfg)?;
+        use fp4train::refmodel::engine::fault_from_env;
+        use fp4train::refmodel::TrainOptions;
+        let mut opts = TrainOptions::default();
+        if let Some(dir) = args.get("run-dir") {
+            opts.run_dir = Some(dir.into());
+        }
+        if let Some(dir) = args.get("resume") {
+            // --host resumes from a run *directory* (PJRT resumes from a
+            // checkpoint file); --resume implies --run-dir <dir>
+            if let Some(rd) = &opts.run_dir {
+                if rd != std::path::Path::new(dir) {
+                    return Err(anyhow!(
+                        "--run-dir {} conflicts with --resume {dir}; pass one (or the same dir)",
+                        rd.display()
+                    ));
+                }
+            }
+            opts.run_dir = Some(dir.into());
+            opts.resume = true;
+        }
+        opts.fault_at = fault_from_env();
+        let res = fp4train::refmodel::train_host_with(&cfg, &opts)?;
         println!(
             "host done: {} / {} — final train loss {:.4}, val loss {:.4}, val ppl {:.3}",
             cfg.model, cfg.recipe, res.final_train_loss, res.final_val_nll, res.final_val_ppl
         );
         println!("metrics: {}/{}__{}__host__steps.csv", cfg.out_dir, cfg.model, cfg.recipe);
+        if let Some(dir) = &opts.run_dir {
+            println!("run store: {} (resume with: train --host --resume {})", dir.display(), dir.display());
+        }
         return Ok(());
     }
     let rt = open_runtime(args)?;

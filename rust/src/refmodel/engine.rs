@@ -14,17 +14,35 @@
 //! re-packs weights after every optimizer update, so cached panels could
 //! never be reused across steps (cache-enabled workspaces produce the
 //! same bits — `tests/refmodel_determinism.rs` pins that).
+//!
+//! # Durable runs and crash-resume
+//!
+//! [`train_host_with`] layers a durable orchestration mode on the same
+//! loop: given a run directory ([`TrainOptions::run_dir`]), it opens a
+//! `coordinator::runstore::RunStore`, leases one shard per (virtual)
+//! worker under the deterministic `dp::rebalance` plan, heartbeats every
+//! step, checkpoints on a cadence (exact-f32 payloads), and — with
+//! [`TrainOptions::resume`] — restores params + Adam moments + step from
+//! the latest checkpoint and continues **bit-identically** to an
+//! uninterrupted run.  `PALLAS_FAULT=<step>` (or
+//! [`TrainOptions::fault_at`]) aborts deterministically before executing
+//! step k, emulating a crash for chaos tests; see
+//! `tests/orchestration.rs` and `docs/ARCHITECTURE.md`.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::config::RunConfig;
+use crate::coordinator::checkpoint::{self, Checkpoint, WeightCodec};
+use crate::coordinator::dp;
 use crate::coordinator::metrics::{Metrics, StepRecord};
+use crate::coordinator::runstore::{LeaseGrant, RunMeta, RunStatus, RunStore, CKPT_SUBDIR};
 use crate::coordinator::trainer::dataset_from_geometry;
 use crate::data::batcher::BatchScratch;
 use crate::data::tokenizer::Tokenizer;
+use crate::tensor::Tensor;
 
 use super::model::{Grads, RefModel};
 use super::presets;
@@ -112,6 +130,38 @@ impl AdamW {
         self.step
     }
 
+    /// First/second-moment buffers in the canonical parameter order —
+    /// what a durable checkpoint captures (exact f32 bits).
+    pub fn moments(&self) -> (&[Vec<f32>], &[Vec<f32>]) {
+        (&self.m, &self.v)
+    }
+
+    /// Restore optimizer state from a checkpoint: moments plus the
+    /// completed-step count.  Shapes must match the model this AdamW was
+    /// built for — mismatches error (they would silently corrupt the
+    /// resumed trajectory otherwise).
+    pub fn restore(&mut self, m: Vec<Vec<f32>>, v: Vec<Vec<f32>>, step: u64) -> Result<()> {
+        if m.len() != self.m.len() || v.len() != self.v.len() {
+            bail!(
+                "optimizer state mismatch: checkpoint has {}/{} moment tensors, model needs {}",
+                m.len(), v.len(), self.m.len()
+            );
+        }
+        for (i, (mi, vi)) in m.iter().zip(&v).enumerate() {
+            if mi.len() != self.m[i].len() || vi.len() != self.v[i].len() {
+                bail!(
+                    "optimizer state mismatch for `{}`: checkpoint moment holds {} elements, \
+                     model parameter holds {}",
+                    self.names[i], mi.len(), self.m[i].len()
+                );
+            }
+        }
+        self.m = m;
+        self.v = v;
+        self.step = step;
+        Ok(())
+    }
+
     /// One AdamW update with global-norm clipping; returns the raw
     /// gradient norm.  Caller must `model.refresh_packed()` afterwards.
     pub fn step(&mut self, model: &mut RefModel, grads: &Grads) -> f32 {
@@ -162,10 +212,106 @@ pub struct HostRunResult {
     pub tok: Tokenizer,
 }
 
+/// Orchestration options for [`train_host_with`].  The default runs the
+/// classic ephemeral loop (no run store, no checkpoints, no faults) —
+/// byte-identical to what [`train_host`] always did.
+#[derive(Clone, Debug, Default)]
+pub struct TrainOptions {
+    /// Durable run directory (run store + periodic exact-f32 checkpoints).
+    /// None = ephemeral run.
+    pub run_dir: Option<PathBuf>,
+    /// Resume from `run_dir`'s latest checkpoint instead of creating a
+    /// fresh store.
+    pub resume: bool,
+    /// Abort (deterministically, before executing this step) — the
+    /// in-process form of `PALLAS_FAULT=<step>`.
+    pub fault_at: Option<u64>,
+}
+
+/// Deterministic fault injection from the environment, matching the
+/// `PALLAS_THREADS` idiom (re-read per call, unset/unparsable = off):
+/// `PALLAS_FAULT=<step>` makes the durable loop crash before executing
+/// that step, so chaos tests can kill a run at a chosen point without
+/// process gymnastics.
+pub fn fault_from_env() -> Option<u64> {
+    std::env::var("PALLAS_FAULT").ok().and_then(|v| v.trim().parse::<u64>().ok())
+}
+
+fn wall_ms() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
+
+/// Capture the full resume state as a checkpoint: master params (exact
+/// f32; stored 1-D — the F32 codec is shape-agnostic and `restore_into`
+/// matches by name/length), Adam moments, completed-step count.
+fn snapshot(model: &mut RefModel, opt: &AdamW) -> Checkpoint {
+    let params: Vec<(String, Tensor)> = model
+        .params_mut()
+        .into_iter()
+        .map(|(name, p)| (name, Tensor::from_vec(&[p.len()], p.clone())))
+        .collect();
+    let (m, v) = opt.moments();
+    Checkpoint {
+        params,
+        m: m.iter().map(|x| Tensor::from_vec(&[x.len()], x.clone())).collect(),
+        v: v.iter().map(|x| Tensor::from_vec(&[x.len()], x.clone())).collect(),
+        step: opt.step_count() as i64,
+    }
+}
+
+/// Restore model + optimizer from a loaded checkpoint; returns the step
+/// to continue from.  Validates names/lengths before touching anything so
+/// a wrong-model checkpoint errors instead of panicking mid-copy.
+fn restore_into(
+    model: &mut RefModel,
+    opt: &mut AdamW,
+    ck: &Checkpoint,
+    path: &Path,
+) -> Result<u64> {
+    {
+        let params = model.params_mut();
+        if params.len() != ck.params.len() {
+            bail!(
+                "checkpoint {} does not match the model: {} stored params vs {} model params",
+                path.display(), ck.params.len(), params.len()
+            );
+        }
+        for ((name, p), (ck_name, ck_t)) in params.iter().zip(&ck.params) {
+            if name != ck_name || p.len() != ck_t.data.len() {
+                bail!(
+                    "checkpoint {} does not match the model: stored `{ck_name}` ({} elems) vs \
+                     model `{name}` ({} elems)",
+                    path.display(), ck_t.data.len(), p.len()
+                );
+            }
+        }
+    }
+    let entries: Vec<(&str, &[f32])> =
+        ck.params.iter().map(|(n, t)| (n.as_str(), &t.data[..])).collect();
+    model.set_params(&entries);
+    opt.restore(
+        ck.m.iter().map(|t| t.data.clone()).collect(),
+        ck.v.iter().map(|t| t.data.clone()).collect(),
+        ck.step as u64,
+    )
+    .with_context(|| format!("restoring optimizer state from {}", path.display()))?;
+    Ok(ck.step as u64)
+}
+
 /// Run one host training job under the §3.3 schedule (stage 1 in
 /// `cfg.recipe`, the final `target_precision_frac` of steps in
-/// `cfg.target_recipe`).
+/// `cfg.target_recipe`).  Ephemeral form of [`train_host_with`].
 pub fn train_host(cfg: &RunConfig) -> Result<HostRunResult> {
+    train_host_with(cfg, &TrainOptions::default())
+}
+
+/// [`train_host`] with durable orchestration: run store, shard leases,
+/// heartbeats, checkpoint cadence, deterministic fault injection, and
+/// bit-identical crash-resume.  See the module doc for the contract.
+pub fn train_host_with(cfg: &RunConfig, opts: &TrainOptions) -> Result<HostRunResult> {
     let info = presets::model(&cfg.model)
         .ok_or_else(|| anyhow!("unknown host model preset {}", cfg.model))?;
     let recipe = presets::recipe(&cfg.recipe)
@@ -173,6 +319,7 @@ pub fn train_host(cfg: &RunConfig) -> Result<HostRunResult> {
     let target = presets::recipe(&cfg.target_recipe)
         .ok_or_else(|| anyhow!("unknown host target recipe {}", cfg.target_recipe))?;
     let stage1 = cfg.stage1_steps();
+    let n_shards = cfg.workers.max(1);
 
     let (ds, tok) = dataset_from_geometry(info.seq, presets::BATCH, info.vocab, cfg);
     let val_batches = ds.val_batches();
@@ -185,21 +332,109 @@ pub fn train_host(cfg: &RunConfig) -> Result<HostRunResult> {
     let mut bscratch = BatchScratch::default();
     let mut buf: Vec<i32> = Vec::new();
 
+    // --- durable run store (optional) ------------------------------------
+    let mut start_step = 0u64;
+    let mut store: Option<RunStore> = None;
+    let mut grants: Vec<LeaseGrant> = Vec::new();
+    if let Some(dir) = &opts.run_dir {
+        let mut s = if opts.resume {
+            let mut s = RunStore::open(dir)?;
+            s.check_config(cfg)?;
+            if s.status() == RunStatus::Complete {
+                bail!(
+                    "run {} is already complete at step {} — nothing to resume",
+                    dir.display(), cfg.steps
+                );
+            }
+            // the previous orchestrator is dead; free whatever it held
+            s.reclaim_all()?;
+            if let Some((ck_step, ck_path)) = s.latest_checkpoint() {
+                let ck = checkpoint::load(&ck_path)
+                    .with_context(|| format!("resuming run {}", dir.display()))?;
+                start_step = restore_into(&mut model, &mut opt, &ck, &ck_path)?;
+                debug_assert_eq!(start_step, ck_step);
+            }
+            let (epoch, window) = ds.epoch_position(start_step, n_shards);
+            s.record_resume(start_step, epoch, window)?;
+            log::info!(
+                "resuming {} from step {start_step} (epoch {epoch}, window {window}, resume #{})",
+                dir.display(), s.resumes()
+            );
+            s
+        } else {
+            RunStore::create(dir, RunMeta::from_config(cfg))?
+        };
+        // deterministic shard plan over virtual workers, leased with fencing
+        let workers: Vec<String> = (0..n_shards).map(|i| format!("w{i}")).collect();
+        for (shard, worker) in dp::rebalance(n_shards, &[], &workers)? {
+            grants.push(s.lease_to(shard, &worker, wall_ms())?);
+        }
+        store = Some(s);
+    }
+    // checkpoint cadence: explicit config wins; durable runs default to
+    // ~10 checkpoints; ephemeral runs never checkpoint here
+    let ckpt_every = if store.is_some() {
+        if cfg.checkpoint_every > 0 { cfg.checkpoint_every } else { (cfg.steps / 10).max(1) }
+    } else {
+        0
+    };
+    // a resume landing inside stage 2 re-applies the target recipe before
+    // the loop: the packed state is a pure function of (weights, recipe),
+    // so this reproduces the uninterrupted run's packed bits exactly
+    if start_step >= stage1 && stage1 < cfg.steps {
+        model.set_recipe(target.clone());
+    }
+
     log::info!(
         "host training {} / {} for {} steps (stage 2 at {stage1}, recipe {} -> {})",
         cfg.model, cfg.recipe, cfg.steps, cfg.recipe, cfg.target_recipe
     );
-    for step in 0..cfg.steps {
+    for step in start_step..cfg.steps {
+        if opts.fault_at == Some(step) {
+            if let Some(s) = &mut store {
+                // best-effort audit marker — resume never depends on it
+                // (a real kill -9 writes nothing)
+                let _ = s.record_fault(step, "PALLAS_FAULT");
+            }
+            bail!("injected fault (PALLAS_FAULT) before step {step} — resume with --resume");
+        }
         let stage2 = step >= stage1;
         if stage2 && step == stage1 {
             model.set_recipe(target.clone());
         }
-        let batch = ds.train_batch_with(step, 0, 1, &mut bscratch, std::mem::take(&mut buf));
         let t0 = Instant::now();
-        let (loss, grads, _cache) = model.loss_and_grads(&batch, &mut sc);
-        let gnorm = opt.step(&mut model, &grads);
+        let (loss, gnorm) = if n_shards == 1 {
+            // the classic single-shard path, byte-for-byte unchanged
+            let batch = ds.train_batch_with(step, 0, 1, &mut bscratch, std::mem::take(&mut buf));
+            let (loss, grads, _cache) = model.loss_and_grads(&batch, &mut sc);
+            let gnorm = opt.step(&mut model, &grads);
+            buf = batch.data; // recycle the window buffer
+            (loss, gnorm)
+        } else {
+            // per-shard grads merged in ascending-shard order: the reduce
+            // order is keyed by shard index, never by lease holder, so a
+            // re-leased shard reproduces the identical f32 accumulation
+            let mut shard_grads = Vec::with_capacity(n_shards);
+            let mut loss_sum = 0.0f32;
+            for shard in 0..n_shards {
+                let batch =
+                    ds.train_batch_with(step, shard, n_shards, &mut bscratch, std::mem::take(&mut buf));
+                let (l, g, _cache) = model.loss_and_grads(&batch, &mut sc);
+                loss_sum += l;
+                shard_grads.push(g);
+                buf = batch.data;
+            }
+            let mean = Grads::merge_mean(shard_grads);
+            let gnorm = opt.step(&mut model, &mean);
+            (loss_sum / n_shards as f32, gnorm)
+        };
         model.refresh_packed();
-        buf = batch.data; // recycle the window buffer
+        if let Some(s) = &mut store {
+            let now = wall_ms();
+            for g in &grants {
+                s.heartbeat(g, step, now)?;
+            }
+        }
         let ms = t0.elapsed().as_secs_f64() * 1000.0;
         metrics.push_step(StepRecord { step, loss, grad_norm: gnorm, stage: stage2 as u8, step_ms: ms });
         if (step + 1) % cfg.log_every == 0 || step + 1 == cfg.steps {
@@ -220,10 +455,28 @@ pub fn train_host(cfg: &RunConfig) -> Result<HostRunResult> {
             metrics.push_eval(step + 1, nll);
             log::info!("host eval @ {:>5}: val nll {nll:.4} ppl {:.3}", step + 1, nll.exp());
         }
+        if ckpt_every > 0 && ((step + 1) % ckpt_every == 0 || step + 1 == cfg.steps) {
+            let s = store.as_mut().expect("ckpt_every > 0 only with a store");
+            let rel = format!("{CKPT_SUBDIR}/step_{:06}.ckpt", step + 1);
+            // always F32: exact master bits are the resume contract
+            // (quantized codecs remain available for storage-only exports)
+            checkpoint::save(&snapshot(&mut model, &opt), &s.dir().join(&rel), WeightCodec::F32)?;
+            // pointer flips only after the save's rename landed: a crash
+            // between the two replays from the previous checkpoint
+            s.record_checkpoint(step + 1, &rel)?;
+        }
+    }
+
+    if let Some(s) = &mut store {
+        for g in &grants {
+            s.complete_shard(g)?;
+        }
+        s.complete(cfg.steps)?;
     }
 
     let out_dir = PathBuf::from(&cfg.out_dir);
-    std::fs::create_dir_all(&out_dir)?;
+    std::fs::create_dir_all(&out_dir)
+        .with_context(|| format!("creating output directory {}", out_dir.display()))?;
     let tag = format!("{}__{}__host", cfg.model, cfg.recipe);
     metrics.write_csv(&out_dir.join(format!("{tag}__steps.csv")))?;
     metrics.write_eval_csv(&out_dir.join(format!("{tag}__eval.csv")))?;

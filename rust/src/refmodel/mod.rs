@@ -174,6 +174,6 @@ impl RecipePrec {
     }
 }
 
-pub use engine::{train_host, HostRunResult};
+pub use engine::{train_host, train_host_with, HostRunResult, TrainOptions};
 pub use model::RefModel;
 pub use qlinear::QLinear;

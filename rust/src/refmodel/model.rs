@@ -125,6 +125,53 @@ impl Grads {
         }
         out
     }
+
+    /// Gradient buffers in canonical order, mutable (accumulation).
+    fn bufs_mut(&mut self) -> Vec<&mut Vec<f32>> {
+        let mut out: Vec<&mut Vec<f32>> =
+            vec![&mut self.wte, &mut self.wpe, &mut self.lnf_g, &mut self.lnf_b];
+        for b in self.blocks.iter_mut() {
+            out.push(&mut b.ln1_g);
+            out.push(&mut b.ln1_b);
+            out.push(&mut b.w_qkv);
+            out.push(&mut b.b_qkv);
+            out.push(&mut b.w_o);
+            out.push(&mut b.b_o);
+            out.push(&mut b.ln2_g);
+            out.push(&mut b.ln2_b);
+            out.push(&mut b.w_fc1);
+            out.push(&mut b.b_fc1);
+            out.push(&mut b.w_fc2);
+            out.push(&mut b.b_fc2);
+        }
+        out
+    }
+
+    /// Element-wise mean over per-shard gradients, accumulated in
+    /// ascending-shard order — the host-side all-reduce of the durable DP
+    /// loop.  The reduce order is a property of the shard *indices*, never
+    /// of which worker computed a shard, so re-leasing a dead worker's
+    /// shard to a survivor reproduces the identical f32 accumulation
+    /// sequence (the crash-resume bit-identity contract relies on this).
+    pub fn merge_mean(mut shards: Vec<Grads>) -> Grads {
+        assert!(!shards.is_empty(), "merge_mean needs at least one shard");
+        let w = shards.len() as f32;
+        let mut acc = shards.remove(0);
+        for shard in &mut shards {
+            for (a, g) in acc.bufs_mut().into_iter().zip(shard.bufs_mut()) {
+                assert_eq!(a.len(), g.len(), "shard gradient shapes must match");
+                for (x, y) in a.iter_mut().zip(g.iter()) {
+                    *x += *y;
+                }
+            }
+        }
+        for buf in acc.bufs_mut() {
+            for x in buf.iter_mut() {
+                *x /= w;
+            }
+        }
+        acc
+    }
 }
 
 /// Per-layer forward cache (everything the backward reads).

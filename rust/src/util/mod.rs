@@ -14,3 +14,37 @@ pub mod stats;
 pub mod tomlmini;
 
 pub use rng::Rng;
+
+/// FNV-1a 64-bit hash — the repo's one content digest, used for the
+/// checkpoint payload checksum and the run store's config hash.  Not
+/// cryptographic; it only needs to catch truncation, bit rot, and
+/// accidental config drift.  Serialize the result as `{:016x}` hex:
+/// `util::json` numbers are f64 and cannot hold a u64 exactly.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod fnv_tests {
+    use super::fnv1a64;
+
+    #[test]
+    fn known_vectors() {
+        // standard FNV-1a test vectors
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn sensitive_to_single_bit() {
+        let a = fnv1a64(b"checkpoint payload");
+        let b = fnv1a64(b"checkpoint pazload");
+        assert_ne!(a, b);
+    }
+}

@@ -1,0 +1,209 @@
+//! Durable orchestration end-to-end: crash → resume is bit-identical to an
+//! uninterrupted run (the ROADMAP's headline verify), the run store's
+//! lease machinery survives process death, and corrupted checkpoints fail
+//! loudly with the offending path.
+//!
+//! The fault sweep drives `TrainOptions::fault_at` (the in-process form of
+//! `PALLAS_FAULT`) at three structurally different steps: before the first
+//! checkpoint (full replay from init), mid-run between checkpoints, and
+//! exactly at the §3.3 stage boundary where the recipe swaps to the
+//! target.  Every surviving loss bit and every final master-parameter bit
+//! must match the uninterrupted reference.
+
+use std::path::{Path, PathBuf};
+
+use fp4train::config::RunConfig;
+use fp4train::coordinator::runstore::{LeaseState, RunStatus, RunStore};
+use fp4train::refmodel::{train_host_with, HostRunResult, TrainOptions};
+
+fn tdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join("fp4orch").join(name);
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Tiny-but-real geometry: 8 steps, checkpoints every 2, stage boundary
+/// at step 6 (tail frac 0.25), same corpus scale as the engine's
+/// reproducibility test.
+fn micro_cfg(root: &Path, tag: &str, workers: usize) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.model = "gpt2-s-proxy".into();
+    cfg.recipe = "ours".into();
+    cfg.steps = 8;
+    cfg.workers = workers;
+    cfg.eval_every = 8;
+    cfg.log_every = 8;
+    cfg.checkpoint_every = 2;
+    cfg.target_precision_frac = 0.25;
+    cfg.data.n_docs = 220;
+    cfg.out_dir = root.join(tag).to_str().unwrap().to_string();
+    cfg
+}
+
+/// Every master-parameter bit of a finished run.
+fn param_bits(res: HostRunResult) -> Vec<u32> {
+    let mut model = res.model;
+    let mut bits = Vec::new();
+    for (_, p) in model.params_mut() {
+        bits.extend(p.iter().map(|v| v.to_bits()));
+    }
+    bits
+}
+
+fn durable(run_dir: PathBuf) -> TrainOptions {
+    TrainOptions { run_dir: Some(run_dir), ..Default::default() }
+}
+
+#[test]
+fn crash_resume_bit_identical_sweep() {
+    let root = tdir("sweep");
+    // uninterrupted durable reference
+    let ref_res =
+        train_host_with(&micro_cfg(&root, "ref", 1), &durable(root.join("ref_run"))).unwrap();
+    let ref_losses: Vec<u32> = ref_res.metrics.steps.iter().map(|s| s.loss.to_bits()).collect();
+    assert_eq!(ref_losses.len(), 8);
+    let ref_bits = param_bits(ref_res);
+
+    // k=1: before the first checkpoint (resume = full replay from init);
+    // k=3: between checkpoints, mid-run; k=6: the §3.3 stage boundary
+    for k in [1u64, 3, 6] {
+        let run_dir = root.join(format!("run_k{k}"));
+        let cfg = micro_cfg(&root, &format!("k{k}"), 1);
+        let mut opts = durable(run_dir.clone());
+        opts.fault_at = Some(k);
+        let err = format!("{:#}", train_host_with(&cfg, &opts).unwrap_err());
+        assert!(err.contains("injected fault"), "k={k}: {err}");
+
+        // the store recorded the fault (best-effort audit)
+        let store = RunStore::open(&run_dir).unwrap();
+        assert_eq!(store.status(), RunStatus::Faulted, "k={k}");
+        drop(store);
+
+        // resume to completion in a fresh "process"
+        let opts = TrainOptions { run_dir: Some(run_dir.clone()), resume: true, ..Default::default() };
+        let res = train_host_with(&cfg, &opts).unwrap();
+
+        // every replayed step's loss is byte-identical to the reference
+        assert!(!res.metrics.steps.is_empty(), "k={k}");
+        for r in &res.metrics.steps {
+            assert_eq!(
+                r.loss.to_bits(),
+                ref_losses[r.step as usize],
+                "k={k}: loss diverged at step {}",
+                r.step
+            );
+        }
+        // final loss byte-identical (the headline acceptance check)
+        assert_eq!(
+            res.metrics.steps.last().unwrap().loss.to_bits(),
+            *ref_losses.last().unwrap(),
+            "k={k}: final loss"
+        );
+        // and every final master-parameter bit matches
+        assert_eq!(param_bits(res), ref_bits, "k={k}: param bits diverged");
+
+        // the run store converged to Complete with all shards done
+        let store = RunStore::open(&run_dir).unwrap();
+        assert_eq!(store.status(), RunStatus::Complete, "k={k}");
+        assert!(store.leases().iter().all(|l| l.state == LeaseState::Done), "k={k}");
+        assert_eq!(store.resumes(), 1, "k={k}");
+    }
+}
+
+#[test]
+fn crash_resume_bit_identical_with_sharded_workers() {
+    // W=2: per-shard grads merged in ascending-shard order; a crash and
+    // resume re-leases both shards and must reproduce the same bits
+    let root = tdir("sharded");
+    let ref_res =
+        train_host_with(&micro_cfg(&root, "ref", 2), &durable(root.join("ref_run"))).unwrap();
+    let ref_losses: Vec<u32> = ref_res.metrics.steps.iter().map(|s| s.loss.to_bits()).collect();
+    let ref_bits = param_bits(ref_res);
+
+    let run_dir = root.join("chaos_run");
+    let cfg = micro_cfg(&root, "chaos", 2);
+    let mut opts = durable(run_dir.clone());
+    opts.fault_at = Some(3);
+    assert!(train_host_with(&cfg, &opts).is_err());
+    let opts = TrainOptions { run_dir: Some(run_dir), resume: true, ..Default::default() };
+    let res = train_host_with(&cfg, &opts).unwrap();
+    for r in &res.metrics.steps {
+        assert_eq!(r.loss.to_bits(), ref_losses[r.step as usize], "step {}", r.step);
+    }
+    assert_eq!(param_bits(res), ref_bits, "sharded param bits diverged");
+}
+
+#[test]
+fn resume_rejects_drifted_config() {
+    let root = tdir("drift");
+    let cfg = micro_cfg(&root, "a", 1);
+    let run_dir = root.join("run");
+    let mut opts = durable(run_dir.clone());
+    opts.fault_at = Some(2);
+    assert!(train_host_with(&cfg, &opts).is_err());
+    // resume with a different seed must fail loudly, not drift silently
+    let mut drifted = cfg.clone();
+    drifted.seed += 1;
+    let opts = TrainOptions { run_dir: Some(run_dir), resume: true, ..Default::default() };
+    let err = format!("{:#}", train_host_with(&drifted, &opts).unwrap_err());
+    assert!(err.contains("config mismatch"), "{err}");
+}
+
+#[test]
+fn fresh_run_refuses_existing_run_dir_and_complete_runs_refuse_resume() {
+    let root = tdir("refuse");
+    let cfg = micro_cfg(&root, "a", 1);
+    let run_dir = root.join("run");
+    train_host_with(&cfg, &durable(run_dir.clone())).unwrap();
+    // same dir without --resume: refuse to clobber
+    let err = format!("{:#}", train_host_with(&cfg, &durable(run_dir.clone())).unwrap_err());
+    assert!(err.contains("--resume"), "{err}");
+    // resume of a complete run: nothing to do, says so
+    let opts = TrainOptions { run_dir: Some(run_dir), resume: true, ..Default::default() };
+    let err = format!("{:#}", train_host_with(&cfg, &opts).unwrap_err());
+    assert!(err.contains("already complete"), "{err}");
+}
+
+#[test]
+fn truncated_checkpoint_fails_resume_with_path() {
+    let root = tdir("truncated");
+    let cfg = micro_cfg(&root, "a", 1);
+    let run_dir = root.join("run");
+    let mut opts = durable(run_dir.clone());
+    opts.fault_at = Some(5); // checkpoints exist at steps 2 and 4
+    assert!(train_host_with(&cfg, &opts).is_err());
+    // corrupt the latest checkpoint the way a torn disk would: cut bytes
+    let store = RunStore::open(&run_dir).unwrap();
+    let (step, ckpt) = store.latest_checkpoint().unwrap();
+    assert_eq!(step, 4);
+    drop(store);
+    let bytes = std::fs::read(&ckpt).unwrap();
+    std::fs::write(&ckpt, &bytes[..bytes.len() / 2]).unwrap();
+    let opts = TrainOptions { run_dir: Some(run_dir), resume: true, ..Default::default() };
+    let err = format!("{:#}", train_host_with(&cfg, &opts).unwrap_err());
+    assert!(
+        err.contains(ckpt.file_name().unwrap().to_str().unwrap()),
+        "error must name the corrupt file: {err}"
+    );
+    assert!(
+        err.contains("truncated") || err.contains("checksum") || err.contains("decompressing"),
+        "error must name the failure mode: {err}"
+    );
+}
+
+#[test]
+fn fault_env_parses_like_pallas_threads() {
+    // no other test in this binary reads PALLAS_FAULT from the env (the
+    // sweep drives TrainOptions::fault_at directly), so this is race-free
+    use fp4train::refmodel::engine::fault_from_env;
+    std::env::remove_var("PALLAS_FAULT");
+    assert_eq!(fault_from_env(), None);
+    std::env::set_var("PALLAS_FAULT", "23");
+    assert_eq!(fault_from_env(), Some(23));
+    std::env::set_var("PALLAS_FAULT", " 7 ");
+    assert_eq!(fault_from_env(), Some(7));
+    std::env::set_var("PALLAS_FAULT", "not-a-step");
+    assert_eq!(fault_from_env(), None);
+    std::env::remove_var("PALLAS_FAULT");
+}

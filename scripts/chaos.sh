@@ -1,0 +1,68 @@
+#!/usr/bin/env bash
+# Crash/resume smoke loop for the durable `train --host` orchestration.
+#
+# Runs the same micro training job three ways and demands bit-identical
+# final metrics:
+#
+#   1. an uninterrupted durable run (the reference),
+#   2. a run killed by PALLAS_FAULT=<step> mid-flight (must exit nonzero
+#      and leave a resumable run store behind),
+#   3. `train --host --resume <run-dir>` continuing run 2 to completion.
+#
+# The last steps.csv row of runs 1 and 3 must agree byte-for-byte on the
+# deterministic columns (step,loss,grad_norm,stage — wall-clock step_ms is
+# excluded).  This is the shell-level twin of rust/tests/orchestration.rs,
+# exercising the real binary + CLI + env-var path instead of the library.
+#
+# Usage: scripts/chaos.sh            (also: scripts/tier1.sh --chaos)
+# No-ops with exit 0 when cargo is absent, like bench_diff.sh.
+
+set -euo pipefail
+SCRIPT_DIR="$(cd "$(dirname "$0")" && pwd)"
+cd "$SCRIPT_DIR/../rust"
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "chaos: cargo not found — skipping crash/resume smoke (no-op)"
+    exit 0
+fi
+
+STEPS=40
+FAULT=23
+CKPT_EVERY=8
+DOCS=220
+WORK="$(mktemp -d "${TMPDIR:-/tmp}/fp4chaos.XXXXXX")"
+trap 'rm -rf "$WORK"' EXIT
+
+echo "== chaos: build =="
+cargo build --release --quiet
+BIN=target/release/fp4train
+
+common_args=(train --host --model gpt2-s-proxy --recipe ours
+             --steps "$STEPS" --docs "$DOCS" --checkpoint-every "$CKPT_EVERY"
+             --eval-every "$STEPS" --log-every "$STEPS")
+
+echo "== chaos: uninterrupted reference run =="
+"$BIN" "${common_args[@]}" --out "$WORK/ref_out" --run-dir "$WORK/ref_run"
+
+echo "== chaos: faulted run (PALLAS_FAULT=$FAULT must kill it) =="
+if PALLAS_FAULT=$FAULT "$BIN" "${common_args[@]}" \
+        --out "$WORK/chaos_out" --run-dir "$WORK/chaos_run"; then
+    echo "chaos: FAIL — injected fault did not make the run exit nonzero" >&2
+    exit 1
+fi
+echo "chaos: faulted as expected"
+
+echo "== chaos: resume to completion =="
+"$BIN" "${common_args[@]}" --out "$WORK/resume_out" --resume "$WORK/chaos_run"
+
+# compare the deterministic columns of the final step row
+ref_row="$(tail -n1 "$WORK/ref_out"/*__steps.csv | cut -d, -f1-4)"
+res_row="$(tail -n1 "$WORK/resume_out"/*__steps.csv | cut -d, -f1-4)"
+echo "chaos: ref    final row: $ref_row"
+echo "chaos: resume final row: $res_row"
+if [[ "$ref_row" != "$res_row" ]]; then
+    echo "chaos: FAIL — resumed run diverged from the uninterrupted reference" >&2
+    exit 1
+fi
+
+echo "chaos: OK — crash at step $FAULT resumed bit-identically"

@@ -15,6 +15,9 @@
 #   scripts/tier1.sh --bench-diff  # additionally diff any fresh
 #                                  # BENCH_*.json against bench/baselines/
 #                                  # (no-op when benches haven't been run)
+#   scripts/tier1.sh --chaos       # additionally run the crash/resume
+#                                  # smoke loop (scripts/chaos.sh; no-op
+#                                  # when cargo is absent)
 #
 # When `cargo` is missing, scripts/toolchain.sh is invoked to bootstrap a
 # pinned toolchain (rustup; needs network on first run).
@@ -26,11 +29,13 @@ set -euo pipefail
 SCRIPT_DIR="$(cd "$(dirname "$0")" && pwd)"
 
 BENCH_DIFF=0
+CHAOS=0
 FAST=0
 for arg in "$@"; do
     case "$arg" in
         --fast) FAST=1 ;;
         --bench-diff) BENCH_DIFF=1 ;;
+        --chaos) CHAOS=1 ;;
         *) echo "tier1: unknown flag $arg" >&2; exit 64 ;;
     esac
 done
@@ -89,6 +94,11 @@ RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 if [[ $BENCH_DIFF -eq 1 ]]; then
     echo "== bench_diff (fresh BENCH_*.json vs bench/baselines) =="
     "$SCRIPT_DIR/bench_diff.sh"
+fi
+
+if [[ $CHAOS -eq 1 ]]; then
+    echo "== chaos (crash/resume smoke: PALLAS_FAULT kill + --resume) =="
+    "$SCRIPT_DIR/chaos.sh"
 fi
 
 echo "tier1: OK"
