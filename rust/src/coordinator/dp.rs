@@ -53,6 +53,35 @@ pub fn allreduce_mean(grads: &mut Vec<Vec<Tensor>>) -> Vec<Tensor> {
 /// on (step, shard, n_shards), so re-homing a shard to a survivor changes
 /// who computes it, not what is computed — the reduce order stays
 /// ascending-shard and the math stays byte-stable.
+/// The worker set a multi-process participant derives from the lease
+/// table: every holder whose heartbeat is fresher than `timeout_ms`, plus
+/// the caller (always live from its own perspective — it may not hold a
+/// lease yet).  Sorted + deduped so the result is a pure function of the
+/// snapshot: two participants reading the same `state.json` under the
+/// store lock feed [`rebalance`] the identical live set and therefore
+/// claim disjoint shards.
+pub fn live_workers(
+    leases: &[super::runstore::Lease],
+    me: &str,
+    now_ms: u64,
+    timeout_ms: u64,
+) -> Vec<String> {
+    use super::runstore::LeaseState;
+    let mut live: Vec<String> = leases
+        .iter()
+        .filter(|l| {
+            l.state == LeaseState::Leased
+                && !l.worker.is_empty()
+                && now_ms.saturating_sub(l.last_beat_ms) <= timeout_ms
+        })
+        .map(|l| l.worker.clone())
+        .collect();
+    live.push(me.to_string());
+    live.sort();
+    live.dedup();
+    live
+}
+
 pub fn rebalance(
     n_shards: usize,
     held: &[(usize, String)],
@@ -213,5 +242,29 @@ mod tests {
         assert!(rebalance(2, &[(5, "a".to_string())], &w(&["a"])).is_err(), "shard out of range");
         let dup = vec![(0usize, "a".to_string()), (0, "b".to_string())];
         assert!(rebalance(2, &dup, &w(&["a", "b"])).is_err(), "duplicate held shard");
+    }
+
+    #[test]
+    fn live_workers_filters_by_heartbeat_age_and_includes_self() {
+        use crate::coordinator::runstore::{Lease, LeaseState};
+        let lease = |shard: usize, state: LeaseState, worker: &str, beat: u64| Lease {
+            shard,
+            state,
+            worker: worker.to_string(),
+            fence: 1,
+            last_step: 0,
+            last_beat_ms: beat,
+        };
+        let leases = vec![
+            lease(0, LeaseState::Leased, "w0", 10_000), // fresh
+            lease(1, LeaseState::Leased, "w1", 1_000),  // stale
+            lease(2, LeaseState::Free, "w2", 10_000),   // freed: holder not live via this row
+            lease(3, LeaseState::Leased, "w0", 9_000),  // dup holder
+        ];
+        let live = live_workers(&leases, "w9", 10_000, 5_000);
+        assert_eq!(live, vec!["w0".to_string(), "w9".to_string()]);
+        // self dedups when it already holds a fresh lease
+        let live = live_workers(&leases, "w0", 10_000, 5_000);
+        assert_eq!(live, vec!["w0".to_string()]);
     }
 }

@@ -12,9 +12,17 @@
 //!                  tokens, heartbeats, checkpoint pointers, and an
 //!                  append-only journal, behind the fault-tolerant
 //!                  `train --host` resume path.
+//! * `transport`  — durable file-based gradient transport (checksummed,
+//!                  fence-stamped shard/merged gradient files) between
+//!                  multi-process training participants.
+//! * `multiproc`  — multi-process data-parallel participants (the `worker`
+//!                  subcommand and `train --host --workers-external N`):
+//!                  lease claiming, barrier + merge, failover, catch-up.
 
 pub mod checkpoint;
 pub mod dp;
 pub mod metrics;
+pub mod multiproc;
 pub mod runstore;
+pub mod transport;
 pub mod trainer;

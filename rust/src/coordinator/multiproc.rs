@@ -1,0 +1,886 @@
+//! Multi-process data-parallel training over the durable run store: the
+//! engine behind the `worker` subcommand and `train --host
+//! --workers-external N`.
+//!
+//! # Replicated-optimizer architecture
+//!
+//! Every participant — each worker process and the coordinator — holds a
+//! full model + AdamW replica built identically from (config, seed) via
+//! `TrainSetup`.  Per step:
+//!
+//! 1. Workers (re-)claim shard leases under one store-lock transaction:
+//!    `expire_stale`, derive the live set (`dp::live_workers`), compute
+//!    the deterministic plan (`dp::rebalance`), and lease the Free shards
+//!    the plan assigns to them.  Shard indices — never worker ids — key
+//!    the data, so failover re-homes *who computes*, not *what*.
+//! 2. Each worker computes its shards' grads (`compute_shard_grads`, a
+//!    pure function of params-at-step + shard) and publishes them via
+//!    `transport::publish_shard` (tmp+fsync+rename, FNV-1a checksum,
+//!    fence in header *and* filename).
+//! 3. The coordinator — the `--workers-external` process, or in elected
+//!    mode the current holder of shard 0 — barriers until every shard has
+//!    a file at its *current* lease fence, merges ascending-shard with
+//!    `Grads::merge_mean`, and publishes `merged.grad` (+ an `exchange`
+//!    journal event).  Stale-fence zombie files are journaled
+//!    (`stale_grad_ignored`) and skipped; checksum failures are journaled
+//!    (`corrupt_grad`) and the shard recomputed locally — determinism
+//!    makes the recomputed bytes identical to the lost payload.
+//! 4. Everyone applies the merged update through its local AdamW — a
+//!    deterministic function, so all replicas stay bit-identical; no
+//!    parameter broadcast is ever needed.
+//!
+//! A participant that starts (or restarts) behind the frontier catches up
+//! by restoring the latest checkpoint and replaying `merged.grad` files;
+//! exchanges older than the newest checkpoint are GC'd, and a missing
+//! exchange always implies a newer checkpoint to jump to.  When a worker
+//! dies mid-step, `expire_stale` frees its shards and survivors claim +
+//! recompute them for the *current* step under the same plan — the final
+//! params and per-step loss bits are byte-identical to an uninterrupted
+//! in-process run at the same shard count (`tests/orchestration.rs`).
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::RunConfig;
+use crate::coordinator::checkpoint::{self, WeightCodec};
+use crate::coordinator::dp;
+use crate::coordinator::metrics::{Metrics, StepRecord};
+use crate::coordinator::runstore::{
+    wall_ms, with_store, LeaseGrant, LeaseState, RunMeta, RunStatus, RunStore, StoreLock,
+    CKPT_SUBDIR, RUN_FILE,
+};
+use crate::coordinator::transport;
+use crate::data::batcher::BatchScratch;
+use crate::refmodel::engine::{
+    compute_shard_grads, restore_into, snapshot, HostRunResult, TrainOptions, TrainSetup,
+};
+use crate::refmodel::model::Grads;
+use crate::refmodel::qlinear::Scratch;
+
+/// One multi-process participant's identity and knobs.  [`TrainOptions`]
+/// carries the shared durable-run settings (timeouts, journal cap, fault
+/// injection); this adds the per-process ones.
+#[derive(Clone, Debug)]
+pub struct MpOptions {
+    /// The shared run directory all participants rendezvous on.
+    pub run_dir: PathBuf,
+    /// Stable identity for leases + journal lines (`--worker-id`).
+    pub worker_id: String,
+    /// Dedicated-coordinator mode (`train --host --workers-external N`):
+    /// this process computes no shards — it barriers, merges, checkpoints.
+    /// When false this is a `worker` process; in a store created without
+    /// a dedicated coordinator, the current holder of shard 0 is the
+    /// elected coordinator.
+    pub coordinator_only: bool,
+    pub train: TrainOptions,
+}
+
+/// Run one participant (worker or dedicated coordinator) to completion.
+pub fn run_participant(cfg: &RunConfig, o: &MpOptions) -> Result<HostRunResult> {
+    o.train.validate()?;
+    Participant::new(cfg, o)?.run()
+}
+
+struct Participant {
+    cfg: RunConfig,
+    dir: PathBuf,
+    me: String,
+    coordinator_only: bool,
+    /// The *store's* mode (run.json), not this process's role.
+    external: bool,
+    n_shards: usize,
+    hb_ms: u64,
+    lt_ms: u64,
+    jcap: u64,
+    poll_ms: u64,
+    fault_at: Option<u64>,
+    setup: TrainSetup,
+    sc: Scratch,
+    bscratch: BatchScratch,
+    buf: Vec<i32>,
+    metrics: Metrics,
+    grants: Vec<LeaseGrant>,
+    /// Shards this process already published for the current step.
+    published: Vec<usize>,
+    /// Coordinator-local recomputes for the current step (corrupt-file
+    /// recovery), one slot per shard: (fence, loss, grads).
+    recomputed: Vec<Option<(u64, f32, Grads)>>,
+    /// (step, shard, fence) stale files already journaled, to log once.
+    stale_logged: std::collections::BTreeSet<(u64, usize, u64)>,
+    last_beat_ms: u64,
+    ckpt_every: u64,
+}
+
+impl Participant {
+    fn new(cfg: &RunConfig, o: &MpOptions) -> Result<Participant> {
+        let dir = o.run_dir.clone();
+        let me = o.worker_id.clone();
+        let jcap = o.train.journal_max_bytes;
+
+        // Create-or-attach under the store lock so N processes racing at
+        // startup serialize: exactly one creates, the rest attach.
+        let (n_shards, external) = {
+            let _lock = StoreLock::acquire(&dir, &me)?;
+            if !dir.join(RUN_FILE).exists() {
+                let mut meta = RunMeta::from_config(cfg);
+                meta.external_coordinator = o.coordinator_only;
+                let mut s = RunStore::create(&dir, meta)?;
+                s.set_journal_cap(jcap);
+            }
+            let mut s = RunStore::open(&dir)?;
+            s.set_journal_cap(jcap);
+            s.check_config(cfg)?;
+            if s.status() == RunStatus::Complete {
+                if o.coordinator_only {
+                    bail!("run {} is already complete — pick a fresh --run-dir", dir.display());
+                }
+                // a worker joining a finished run attaches to the final
+                // checkpoint and returns: harmless (and expected when the
+                // rest of the fleet outran a slow-starting worker)
+                log::info!("worker {me} joined run {} after completion", dir.display());
+            }
+            s.journal_event("worker_join", vec![("worker", me.as_str().into())])?;
+            (s.meta().n_shards, s.meta().external_coordinator)
+        };
+        if o.coordinator_only && !external {
+            bail!(
+                "run {} was created in elected-coordinator mode — attach with `worker`, \
+                 not --workers-external",
+                dir.display()
+            );
+        }
+
+        let setup = TrainSetup::new(cfg)?;
+        if setup.n_shards != n_shards {
+            bail!(
+                "run {} declares {n_shards} shards but --workers resolves to {}",
+                dir.display(), setup.n_shards
+            );
+        }
+        let ckpt_every =
+            if cfg.checkpoint_every > 0 { cfg.checkpoint_every } else { (cfg.steps / 10).max(1) };
+        let hb_ms = o.train.heartbeat_ms();
+        Ok(Participant {
+            cfg: cfg.clone(),
+            dir,
+            me,
+            coordinator_only: o.coordinator_only,
+            external,
+            n_shards,
+            hb_ms,
+            lt_ms: o.train.lease_timeout_ms(),
+            jcap,
+            poll_ms: (hb_ms / 4).max(5),
+            fault_at: o.train.fault_at,
+            setup,
+            sc: Scratch::default(),
+            bscratch: BatchScratch::default(),
+            buf: Vec::new(),
+            metrics: Metrics::default(),
+            grants: Vec::new(),
+            published: Vec::new(),
+            recomputed: (0..n_shards).map(|_| None).collect(),
+            stale_logged: std::collections::BTreeSet::new(),
+            last_beat_ms: 0,
+            ckpt_every,
+        })
+    }
+
+    fn tx<R>(&self, f: impl FnOnce(&mut RunStore) -> Result<R>) -> Result<R> {
+        with_store(&self.dir, &self.me, self.jcap, f)
+    }
+
+    fn is_coordinator(&self) -> bool {
+        self.coordinator_only || (!self.external && self.grants.iter().any(|g| g.shard == 0))
+    }
+
+    /// Read + verify `merged.grad` for `step` if it exists.  Ok(None)
+    /// covers both "not published yet" and "GC'd between our existence
+    /// check and the read" (a newer checkpoint then supersedes it).
+    fn read_merged_opt(&self, step: u64) -> Result<Option<(u32, Grads)>> {
+        let mpath = transport::merged_file(&self.dir, step);
+        if !mpath.exists() {
+            return Ok(None);
+        }
+        match transport::read_merged(&mpath, &self.setup.info) {
+            Ok((h, g)) => {
+                if h.step != step {
+                    bail!("{}: merged header step {} != {step}", mpath.display(), h.step);
+                }
+                Ok(Some((h.loss_bits, g)))
+            }
+            Err(e) if !mpath.exists() => {
+                let _ = e; // the GC won the race; catch up via checkpoint
+                Ok(None)
+            }
+            Err(e) => Err(e),
+        }
+    }
+
+    /// One locked claim round: expire the dead, derive the deterministic
+    /// plan, lease every Free shard it assigns to this worker.  Returns
+    /// the newly claimed shard indices.
+    fn claim_shards(&mut self) -> Result<Vec<usize>> {
+        if self.coordinator_only {
+            return Ok(Vec::new());
+        }
+        let (me, lt, n) = (self.me.clone(), self.lt_ms, self.n_shards);
+        let new_grants = self.tx(|s| {
+            let now = wall_ms();
+            s.expire_stale(now, lt)?;
+            let held: Vec<(usize, String)> = s
+                .leases()
+                .iter()
+                .filter(|l| l.state == LeaseState::Leased)
+                .map(|l| (l.shard, l.worker.clone()))
+                .collect();
+            let live = dp::live_workers(s.leases(), &me, now, lt);
+            let plan = dp::rebalance(n, &held, &live)?;
+            let mut out = Vec::new();
+            for (shard, w) in plan {
+                if w == me && s.leases()[shard].state == LeaseState::Free {
+                    out.push(s.lease_to(shard, &me, now)?);
+                    // one claim per round: a worker that boots first must
+                    // not hoover up every shard before its (not yet
+                    // lease-visible) peers run their first claim round
+                    break;
+                }
+            }
+            Ok(out)
+        })?;
+        let claimed: Vec<usize> = new_grants.iter().map(|g| g.shard).collect();
+        if !claimed.is_empty() {
+            log::info!("worker {} claimed shards {claimed:?}", self.me);
+        }
+        self.grants.extend(new_grants);
+        Ok(claimed)
+    }
+
+    /// Compute + publish every held shard not yet published this step.
+    fn compute_and_publish(&mut self, step: u64) -> Result<()> {
+        let todo: Vec<LeaseGrant> = self
+            .grants
+            .iter()
+            .filter(|g| !self.published.contains(&g.shard))
+            .cloned()
+            .collect();
+        for g in todo {
+            let (loss, grads, b) = compute_shard_grads(
+                &self.setup.model,
+                &self.setup.ds,
+                step,
+                g.shard,
+                self.n_shards,
+                &mut self.sc,
+                &mut self.bscratch,
+                std::mem::take(&mut self.buf),
+            );
+            self.buf = b;
+            transport::publish_shard(&self.dir, step, &g, loss, &grads)?;
+            self.published.push(g.shard);
+            self.heartbeat(step)?;
+        }
+        Ok(())
+    }
+
+    /// Heartbeat every held grant, dropping the ones whose fence was
+    /// superseded while we were slow (this process is a zombie for that
+    /// shard — someone else recomputes it).
+    fn heartbeat(&mut self, step: u64) -> Result<()> {
+        if !self.grants.is_empty() {
+            let grants = self.grants.clone();
+            let keep = self.tx(|s| {
+                let now = wall_ms();
+                let mut keep = Vec::new();
+                for g in &grants {
+                    let l = &s.leases()[g.shard];
+                    if l.state == LeaseState::Leased && l.fence == g.fence {
+                        s.heartbeat(g, step, now)?;
+                        keep.push(g.clone());
+                    }
+                }
+                Ok(keep)
+            })?;
+            if keep.len() != self.grants.len() {
+                let lost: Vec<usize> = self
+                    .grants
+                    .iter()
+                    .filter(|g| !keep.contains(*g))
+                    .map(|g| g.shard)
+                    .collect();
+                log::warn!(
+                    "worker {} lost leases on shards {lost:?} (expired while slow)",
+                    self.me
+                );
+            }
+            self.grants = keep;
+        }
+        self.last_beat_ms = wall_ms();
+        Ok(())
+    }
+
+    fn heartbeat_if_due(&mut self, step: u64) -> Result<()> {
+        if wall_ms().saturating_sub(self.last_beat_ms) >= self.hb_ms {
+            self.heartbeat(step)?;
+        }
+        Ok(())
+    }
+
+    /// Coordinator barrier for `step`: wait until every shard has either a
+    /// transport file at its current lease fence or a local recompute,
+    /// then merge ascending-shard and publish `merged.grad`.
+    fn coordinate(&mut self, step: u64) -> Result<(u32, Grads)> {
+        loop {
+            // a previous coordinator may have published before dying
+            if let Some(out) = self.read_merged_opt(step)? {
+                return Ok(out);
+            }
+            // expire the dead; in elected mode also claim + cover freed
+            // shards ourselves (the dedicated coordinator computes nothing
+            // and leaves them to worker processes)
+            let lt = self.lt_ms;
+            self.tx(|s| {
+                s.expire_stale(wall_ms(), lt)?;
+                Ok(())
+            })?;
+            if !self.coordinator_only {
+                self.claim_shards()?;
+                self.compute_and_publish(step)?;
+            }
+            let fences: Vec<(LeaseState, u64)> =
+                self.tx(|s| Ok(s.leases().iter().map(|l| (l.state, l.fence)).collect()))?;
+            let present = transport::scan_shards(&self.dir, step)?;
+            // journal zombie files once per (step, shard, fence)
+            for (shard, fence, path) in &present {
+                if *shard < self.n_shards
+                    && *fence != fences[*shard].1
+                    && self.stale_logged.insert((step, *shard, *fence))
+                {
+                    log::warn!(
+                        "ignoring stale-fence grad file {} (fence {} superseded by {})",
+                        path.display(), fence, fences[*shard].1
+                    );
+                    let path_s = path.display().to_string();
+                    self.tx(|s| {
+                        s.journal_event(
+                            "stale_grad_ignored",
+                            vec![
+                                ("step", (step as i64).into()),
+                                ("shard", (*shard).into()),
+                                ("fence", (*fence as i64).into()),
+                                ("file", path_s.as_str().into()),
+                            ],
+                        )
+                    })?;
+                }
+            }
+            // readiness: every shard needs a current-fence file or recompute
+            let mut picks: Vec<(usize, u64, Option<PathBuf>)> = Vec::with_capacity(self.n_shards);
+            let mut ready = true;
+            for shard in 0..self.n_shards {
+                if let Some((fence, _, _)) = &self.recomputed[shard] {
+                    picks.push((shard, *fence, None));
+                    continue;
+                }
+                let (state, fence) = fences[shard];
+                let file = present
+                    .iter()
+                    .find(|(sh, f, _)| *sh == shard && *f == fence)
+                    .map(|(_, _, p)| p.clone());
+                match (state, file) {
+                    (LeaseState::Leased, Some(p)) => picks.push((shard, fence, Some(p))),
+                    _ => {
+                        ready = false;
+                        break;
+                    }
+                }
+            }
+            if ready {
+                if let Some(out) = self.try_merge(step, &picks)? {
+                    return Ok(out);
+                }
+                continue; // a corrupt file was recomputed; re-check
+            }
+            self.heartbeat_if_due(step)?;
+            std::thread::sleep(std::time::Duration::from_millis(self.poll_ms));
+        }
+    }
+
+    /// Read every picked shard file, falling back to a deterministic local
+    /// recompute on checksum failure (journaled).  Returns None when a
+    /// corrupt file was replaced (the caller re-runs the readiness check),
+    /// Some((mean_loss_bits, merged)) once everything verified.
+    fn try_merge(
+        &mut self,
+        step: u64,
+        picks: &[(usize, u64, Option<PathBuf>)],
+    ) -> Result<Option<(u32, Grads)>> {
+        let mut from_files: Vec<(usize, f32, Grads)> = Vec::new();
+        for (shard, fence, file) in picks {
+            let Some(path) = file else { continue };
+            match transport::read_shard(path, &self.setup.info) {
+                Ok((h, g)) => {
+                    if h.step != step || h.shard != *shard || h.fence != *fence {
+                        bail!(
+                            "{}: header (step {}, shard {}, fence {}) does not match its \
+                             location (step {step}, shard {shard}, fence {fence})",
+                            path.display(), h.step, h.shard, h.fence
+                        );
+                    }
+                    from_files.push((*shard, f32::from_bits(h.loss_bits), g));
+                }
+                Err(e) => {
+                    // checksum/geometry failure: journal, recompute the
+                    // shard locally (same params + same (step, shard) →
+                    // identical bytes), and retry the barrier
+                    log::warn!("corrupt grad file, recomputing shard {shard}: {e:#}");
+                    let path_s = path.display().to_string();
+                    let err_s = format!("{e:#}");
+                    self.tx(|s| {
+                        s.journal_event(
+                            "corrupt_grad",
+                            vec![
+                                ("step", (step as i64).into()),
+                                ("shard", (*shard).into()),
+                                ("file", path_s.as_str().into()),
+                                ("error", err_s.as_str().into()),
+                            ],
+                        )
+                    })?;
+                    let (loss, grads, b) = compute_shard_grads(
+                        &self.setup.model,
+                        &self.setup.ds,
+                        step,
+                        *shard,
+                        self.n_shards,
+                        &mut self.sc,
+                        &mut self.bscratch,
+                        std::mem::take(&mut self.buf),
+                    );
+                    self.buf = b;
+                    self.recomputed[*shard] = Some((*fence, loss, grads));
+                    return Ok(None);
+                }
+            }
+        }
+        // every source verified — assemble ascending-shard, mirroring the
+        // in-process engine's f32 loss accumulation exactly
+        let mut shard_grads: Vec<Grads> = Vec::with_capacity(self.n_shards);
+        let mut loss_sum = 0.0f32;
+        let mut contributors: Vec<(usize, u64)> = Vec::with_capacity(self.n_shards);
+        let mut files = from_files.into_iter();
+        for (shard, fence, file) in picks {
+            let (loss, grads) = if file.is_some() {
+                let (fsh, loss, grads) = files.next().expect("one entry per file pick");
+                debug_assert_eq!(fsh, *shard);
+                (loss, grads)
+            } else {
+                let (_, loss, grads) =
+                    self.recomputed[*shard].take().expect("recomputed slot checked in picks");
+                (loss, grads)
+            };
+            loss_sum += loss;
+            shard_grads.push(grads);
+            contributors.push((*shard, *fence));
+        }
+        let mean_loss = loss_sum / self.n_shards as f32;
+        let merged = Grads::merge_mean(shard_grads);
+        transport::publish_merged(&self.dir, step, &contributors, mean_loss.to_bits(), &merged)?;
+        let me = self.me.clone();
+        self.tx(|s| {
+            s.journal_event(
+                "exchange",
+                vec![
+                    ("step", (step as i64).into()),
+                    ("shards", contributors.len().into()),
+                    ("coordinator", me.as_str().into()),
+                ],
+            )
+        })?;
+        Ok(Some((mean_loss.to_bits(), merged)))
+    }
+
+    /// Non-coordinator wait: poll for `merged.grad`, meanwhile claiming +
+    /// recomputing any shards freed by a dead worker.  Returns None when
+    /// the outer loop must re-evaluate: this worker got promoted to
+    /// coordinator (elected mode — it claimed shard 0), or a newer
+    /// checkpoint superseded the exchange it was waiting on.
+    fn wait_for_merged(&mut self, step: u64) -> Result<Option<(u32, Grads)>> {
+        loop {
+            if let Some(out) = self.read_merged_opt(step)? {
+                return Ok(Some(out));
+            }
+            if self.tx(|s| Ok(s.latest_checkpoint()))?.map_or(false, |(cs, _)| cs > step) {
+                return Ok(None); // the run moved past us while the file was GC'd
+            }
+            let claimed = self.claim_shards()?;
+            if !claimed.is_empty() {
+                log::info!(
+                    "worker {} took over shards {claimed:?} at step {step} (failover)",
+                    self.me
+                );
+            }
+            self.compute_and_publish(step)?;
+            if self.is_coordinator() {
+                return Ok(None); // promoted: shard 0 is ours now
+            }
+            self.heartbeat_if_due(step)?;
+            std::thread::sleep(std::time::Duration::from_millis(self.poll_ms));
+        }
+    }
+
+    fn run(mut self) -> Result<HostRunResult> {
+        // attach: restore the latest checkpoint if one exists (a fresh
+        // store has none and this is a no-op start at step 0)
+        let mut step = 0u64;
+        if let Some((ck_step, ck_path)) = self.tx(|s| Ok(s.latest_checkpoint()))? {
+            let ck = checkpoint::load(&ck_path)
+                .with_context(|| format!("attaching to run {}", self.dir.display()))?;
+            let su = &mut self.setup;
+            step = restore_into(&mut su.model, &mut su.opt, &ck, &ck_path)?;
+            debug_assert_eq!(step, ck_step);
+            log::info!("worker {} attached at step {step} (checkpoint restore)", self.me);
+        }
+        let (stage1, steps) = (self.setup.stage1, self.cfg.steps);
+        if step >= stage1 && stage1 < steps {
+            let su = &mut self.setup;
+            su.model.set_recipe(su.target.clone());
+        }
+
+        while step < steps {
+            if stage1 < steps && step == stage1 {
+                let su = &mut self.setup;
+                su.model.set_recipe(su.target.clone());
+            }
+            if self.fault_at == Some(step) {
+                // kill -9 analog: record nothing but a best-effort audit
+                // marker; leases stay held until expire_stale frees them
+                let _ = self.tx(|s| s.record_fault(step, "PALLAS_FAULT"));
+                bail!(
+                    "injected fault (PALLAS_FAULT) before step {step} — worker {} dying",
+                    self.me
+                );
+            }
+            let t0 = Instant::now();
+            self.published.clear();
+            for slot in self.recomputed.iter_mut() {
+                *slot = None;
+            }
+
+            let (loss_bits, merged) = if let Some(out) = self.read_merged_opt(step)? {
+                out // behind the frontier: replay the published exchange
+            } else if let Some((ck_step, ck_path)) =
+                self.tx(|s| Ok(s.latest_checkpoint()))?.filter(|(cs, _)| *cs > step)
+            {
+                // the exchange we need was GC'd — a newer checkpoint
+                // supersedes it; jump there and keep catching up
+                let ck = checkpoint::load(&ck_path)
+                    .with_context(|| format!("catching up run {}", self.dir.display()))?;
+                let su = &mut self.setup;
+                step = restore_into(&mut su.model, &mut su.opt, &ck, &ck_path)?;
+                debug_assert_eq!(step, ck_step);
+                if step >= stage1 && stage1 < steps {
+                    let su = &mut self.setup;
+                    su.model.set_recipe(su.target.clone());
+                }
+                log::info!("worker {} jumped to checkpoint step {step} (exchange GC'd)", self.me);
+                continue;
+            } else {
+                // live frontier: claim, compute, exchange
+                self.claim_shards()?;
+                self.compute_and_publish(step)?;
+                if self.is_coordinator() {
+                    self.coordinate(step)?
+                } else {
+                    match self.wait_for_merged(step)? {
+                        Some(out) => out,
+                        None => continue, // promoted or overtaken — re-enter
+                    }
+                }
+            };
+
+            // apply the merged update through the local replica — the same
+            // deterministic AdamW sequence every participant executes
+            let loss = f32::from_bits(loss_bits);
+            let gnorm = {
+                let su = &mut self.setup;
+                let gn = su.opt.step(&mut su.model, &merged);
+                su.model.refresh_packed();
+                gn
+            };
+            self.heartbeat(step)?;
+            let stage2 = step >= stage1;
+            let ms = t0.elapsed().as_secs_f64() * 1000.0;
+            self.metrics.push_step(StepRecord {
+                step,
+                loss,
+                grad_norm: gnorm,
+                stage: stage2 as u8,
+                step_ms: ms,
+            });
+            if (step + 1) % self.cfg.log_every == 0 || step + 1 == steps {
+                log::info!(
+                    "worker {} step {:>5}/{} [{}] loss {:.4} |g| {:.3} {:.0} ms",
+                    self.me, step + 1, steps, if stage2 { "tgt" } else { "low" }, loss, gnorm, ms
+                );
+            }
+            if (step + 1) % self.cfg.eval_every == 0 || step + 1 == steps {
+                let nll = self.setup.eval_nll(&mut self.sc);
+                self.metrics.push_eval(step + 1, nll);
+                log::info!(
+                    "worker {} eval @ {:>5}: val nll {nll:.4} ppl {:.3}",
+                    self.me, step + 1, nll.exp()
+                );
+            }
+            if self.is_coordinator() && ((step + 1) % self.ckpt_every == 0 || step + 1 == steps) {
+                let rel = format!("{CKPT_SUBDIR}/step_{:06}.ckpt", step + 1);
+                let ck = {
+                    let su = &mut self.setup;
+                    snapshot(&mut su.model, &su.opt)
+                };
+                checkpoint::save(&ck, &self.dir.join(&rel), WeightCodec::F32)?;
+                self.tx(|s| s.record_checkpoint(step + 1, &rel))?;
+                // exchanges below the checkpoint step are now redundant for
+                // catch-up (laggards jump to the checkpoint) — reclaim disk
+                transport::gc_steps_below(&self.dir, step + 1)?;
+            }
+            step += 1;
+        }
+        self.finalize()
+    }
+
+    fn finalize(mut self) -> Result<HostRunResult> {
+        let was_coordinator = self.is_coordinator();
+        // mark this process's shards Done (fence-checked; skip any the
+        // store re-fenced while we were finishing)
+        let grants = std::mem::take(&mut self.grants);
+        self.tx(|s| {
+            for g in &grants {
+                let l = &s.leases()[g.shard];
+                if l.state == LeaseState::Leased && l.fence == g.fence {
+                    s.complete_shard(g)?;
+                }
+            }
+            Ok(())
+        })?;
+        if was_coordinator {
+            // wait for every shard to reach Done, adopting any freed by a
+            // worker that died after its last exchange, then seal the run
+            loop {
+                let (lt, me) = (self.lt_ms, self.me.clone());
+                let all_done = self.tx(|s| {
+                    s.expire_stale(wall_ms(), lt)?;
+                    let free: Vec<usize> = s
+                        .leases()
+                        .iter()
+                        .filter(|l| l.state == LeaseState::Free)
+                        .map(|l| l.shard)
+                        .collect();
+                    for shard in free {
+                        let g = s.lease_to(shard, &me, wall_ms())?;
+                        s.complete_shard(&g)?;
+                    }
+                    Ok(s.leases().iter().all(|l| l.state == LeaseState::Done))
+                })?;
+                if all_done {
+                    break;
+                }
+                std::thread::sleep(std::time::Duration::from_millis(self.poll_ms));
+            }
+            let steps = self.cfg.steps;
+            self.tx(|s| s.complete(steps))?;
+            log::info!(
+                "coordinator {} sealed run {} at step {steps}",
+                self.me, self.dir.display()
+            );
+        }
+
+        // only the sealing coordinator writes the shared CSVs: it is at the
+        // frontier for the whole run, so its history is complete, whereas a
+        // relaunched worker that checkpoint-jumped would clobber the full
+        // curves with a partial one (every participant still returns its
+        // in-memory metrics in the HostRunResult)
+        if was_coordinator {
+            let out_dir = PathBuf::from(&self.cfg.out_dir);
+            std::fs::create_dir_all(&out_dir)
+                .with_context(|| format!("creating output directory {}", out_dir.display()))?;
+            let tag = format!("{}__{}__host", self.cfg.model, self.cfg.recipe);
+            self.metrics.write_csv(&out_dir.join(format!("{tag}__steps.csv")))?;
+            self.metrics.write_eval_csv(&out_dir.join(format!("{tag}__eval.csv")))?;
+        }
+
+        let final_val = self.metrics.last_eval().map(|e| e.val_nll).unwrap_or(f64::NAN);
+        Ok(HostRunResult {
+            final_train_loss: self.metrics.smoothed_loss(20).unwrap_or(f64::NAN),
+            final_val_nll: final_val,
+            final_val_ppl: final_val.exp(),
+            metrics: self.metrics,
+            model: self.setup.model,
+            tok: self.setup.tok,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::runstore::RunStore;
+    use crate::refmodel::engine::train_host_with;
+    use std::path::Path;
+
+    fn tdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join("fp4multiproc").join(name);
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn micro(root: &Path, steps: u64, workers: usize) -> RunConfig {
+        let mut cfg = RunConfig::default();
+        cfg.model = "gpt2-s-proxy".into();
+        cfg.recipe = "ours".into();
+        cfg.steps = steps;
+        cfg.workers = workers;
+        cfg.eval_every = steps;
+        cfg.log_every = steps;
+        cfg.checkpoint_every = 2;
+        cfg.target_precision_frac = 0.25;
+        cfg.data.n_docs = 220;
+        cfg.out_dir = root.join("out").to_str().unwrap().to_string();
+        cfg
+    }
+
+    fn mp(dir: &Path, id: &str) -> MpOptions {
+        MpOptions {
+            run_dir: dir.to_path_buf(),
+            worker_id: id.to_string(),
+            coordinator_only: false,
+            train: TrainOptions {
+                heartbeat_ms: 100,
+                lease_timeout_ms: 400,
+                ..Default::default()
+            },
+        }
+    }
+
+    fn journal_events(dir: &Path) -> Vec<String> {
+        RunStore::open(dir)
+            .unwrap()
+            .read_journal()
+            .unwrap()
+            .iter()
+            .map(|j| j.get("event").and_then(|e| e.as_str()).unwrap_or("?").to_string())
+            .collect()
+    }
+
+    #[test]
+    fn corrupt_shard_file_triggers_journaled_recompute_and_stale_fence_is_ignored() {
+        let root = tdir("corrupt");
+        let cfg = micro(&root, 2, 2);
+        // in-process reference for step 0's merged loss bits
+        let ref_res = train_host_with(&cfg, &TrainOptions::default()).unwrap();
+        let ref_step0_bits = ref_res.metrics.steps[0].loss.to_bits();
+
+        let dir = root.join("run");
+        let mut p = Participant::new(&cfg, &mp(&dir, "w0")).unwrap();
+        // claim both shards (one per claim round) and publish step 0
+        p.claim_shards().unwrap();
+        p.claim_shards().unwrap();
+        assert_eq!(p.grants.len(), 2, "both shards claimed across two rounds");
+        p.compute_and_publish(0).unwrap();
+
+        // a zombie's stale-fence file for shard 0 (fence 9 never granted):
+        // scan must skip it by fence and journal it exactly once
+        let zombie = LeaseGrant { shard: 0, worker: "ghost".into(), fence: 9 };
+        transport::publish_shard(&dir, 0, &zombie, 0.0, &Grads::zeros(&p.setup.info)).unwrap();
+
+        // bit-rot shard 1's real file: checksum must fail and the
+        // coordinator must recompute that shard locally
+        let f1 = transport::shard_file(&dir, 0, p.grants[1].shard, p.grants[1].fence);
+        assert_eq!(p.grants[1].shard, 1);
+        let bytes = std::fs::read(&f1).unwrap();
+        std::fs::write(&f1, &bytes[..bytes.len() - 7]).unwrap();
+
+        let (loss_bits, _merged) = p.coordinate(0).unwrap();
+        assert_eq!(
+            loss_bits, ref_step0_bits,
+            "merged loss must be bit-identical to the in-process engine despite \
+             corruption + zombie file"
+        );
+        assert!(transport::merged_file(&dir, 0).exists());
+
+        let events = journal_events(&dir);
+        assert!(events.iter().any(|e| e == "corrupt_grad"), "{events:?}");
+        assert!(events.iter().any(|e| e == "stale_grad_ignored"), "{events:?}");
+        assert_eq!(
+            events.iter().filter(|e| *e == "stale_grad_ignored").count(),
+            1,
+            "the zombie file must be journaled once, not once per poll"
+        );
+        // the corrupt_grad record names the offending path
+        let j = RunStore::open(&dir).unwrap().read_journal().unwrap();
+        let rec = j
+            .iter()
+            .find(|e| e.get("event").and_then(|x| x.as_str()) == Some("corrupt_grad"))
+            .unwrap();
+        let file = rec.get("file").and_then(|x| x.as_str()).unwrap();
+        assert!(file.contains("shard_001"), "{file}");
+        let err = rec.get("error").and_then(|x| x.as_str()).unwrap();
+        assert!(err.contains("checksum mismatch"), "{err}");
+    }
+
+    #[test]
+    fn single_worker_mp_run_covers_all_shards_and_matches_in_process_bits() {
+        let root = tdir("solo");
+        let cfg = micro(&root, 4, 2);
+        let ref_res = train_host_with(&cfg, &TrainOptions::default()).unwrap();
+        let ref_losses: Vec<u32> =
+            ref_res.metrics.steps.iter().map(|s| s.loss.to_bits()).collect();
+
+        let dir = root.join("run");
+        let res = run_participant(&cfg, &mp(&dir, "w0")).unwrap();
+        let losses: Vec<u32> = res.metrics.steps.iter().map(|s| s.loss.to_bits()).collect();
+        assert_eq!(losses, ref_losses, "per-step loss bits must match the in-process engine");
+
+        let mut ref_model = ref_res.model;
+        let mut mp_model = res.model;
+        let ref_bits: Vec<u32> = ref_model
+            .params_mut()
+            .into_iter()
+            .flat_map(|(_, p)| p.iter().map(|v| v.to_bits()).collect::<Vec<_>>())
+            .collect();
+        let mp_bits: Vec<u32> = mp_model
+            .params_mut()
+            .into_iter()
+            .flat_map(|(_, p)| p.iter().map(|v| v.to_bits()).collect::<Vec<_>>())
+            .collect();
+        assert_eq!(mp_bits, ref_bits, "final param bits must match the in-process engine");
+
+        let s = RunStore::open(&dir).unwrap();
+        assert_eq!(s.status(), RunStatus::Complete);
+        assert!(s.leases().iter().all(|l| l.state == LeaseState::Done));
+        let events = journal_events(&dir);
+        assert!(events.iter().any(|e| e == "exchange"), "{events:?}");
+    }
+
+    #[test]
+    fn coordinator_only_refuses_elected_store_and_zero_validation() {
+        let root = tdir("modes");
+        let cfg = micro(&root, 2, 1);
+        let dir = root.join("run");
+        // elected-mode store created by a worker
+        let _ = Participant::new(&cfg, &mp(&dir, "w0")).unwrap();
+        let mut co = mp(&dir, "coord");
+        co.coordinator_only = true;
+        let err = format!("{:#}", Participant::new(&cfg, &co).unwrap_err());
+        assert!(err.contains("elected-coordinator mode"), "{err}");
+        // timeout validation is enforced at the entrypoint
+        let mut bad = mp(&root.join("other"), "w0");
+        bad.train.heartbeat_ms = 500;
+        bad.train.lease_timeout_ms = 1000;
+        let err = format!("{:#}", run_participant(&cfg, &bad).unwrap_err());
+        assert!(err.contains("--lease-timeout-ms"), "{err}");
+    }
+}

@@ -60,6 +60,24 @@ pub const RUN_FILE: &str = "run.json";
 pub const STATE_FILE: &str = "state.json";
 pub const JOURNAL_FILE: &str = "journal.jsonl";
 pub const CKPT_SUBDIR: &str = "ckpt";
+pub const LOCK_FILE: &str = "store.lock";
+
+/// Journal size ceiling (bytes) before compaction kicks in; override per
+/// store with [`RunStore::set_journal_cap`] / `--journal-max-bytes`.
+pub const DEFAULT_JOURNAL_CAP: u64 = 256 * 1024;
+
+/// A store lock untouched for this long is presumed abandoned (holder
+/// killed mid-transaction) and broken by the next acquirer.
+const LOCK_STALE_MS: u64 = 10_000;
+
+/// Wall-clock milliseconds since the unix epoch — the `now_ms` source for
+/// every real (non-test) caller of the lease clock.
+pub fn wall_ms() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
 
 /// FNV-1a digest (hex) over the determinism-relevant config fields — the
 /// gate a resume must pass: any drift in model, recipe, schedule, seed,
@@ -92,6 +110,12 @@ pub struct RunMeta {
     pub steps: u64,
     pub seed: u64,
     pub n_shards: usize,
+    /// Multi-process coordinator mode, fixed at creation: `true` when a
+    /// dedicated `train --host --workers-external N` process merges (it
+    /// computes no shards), `false` when the holder of shard 0 is the
+    /// elected coordinator.  Attaching workers read this to know whether
+    /// they may ever assume coordinator duty.
+    pub external_coordinator: bool,
 }
 
 impl RunMeta {
@@ -104,6 +128,7 @@ impl RunMeta {
             steps: cfg.steps,
             seed: cfg.seed,
             n_shards: cfg.workers.max(1),
+            external_coordinator: false,
         }
     }
 
@@ -117,6 +142,7 @@ impl RunMeta {
             // decimal string: util::json numbers are f64, u64 seeds aren't
             ("seed", self.seed.to_string().into()),
             ("n_shards", self.n_shards.into()),
+            ("external_coordinator", self.external_coordinator.into()),
         ])
     }
 
@@ -137,6 +163,10 @@ impl RunMeta {
                 .parse()
                 .map_err(|_| anyhow!("{}: seed is not a u64", path.display()))?,
             n_shards: j.get("n_shards").and_then(|x| x.as_usize()).unwrap_or(1).max(1),
+            external_coordinator: j
+                .get("external_coordinator")
+                .and_then(|x| x.as_bool())
+                .unwrap_or(false),
         })
     }
 }
@@ -234,6 +264,7 @@ pub struct RunStore {
     leases: Vec<Lease>,
     latest: Option<CkptPointer>,
     resumes: u64,
+    journal_cap: u64,
 }
 
 impl RunStore {
@@ -268,6 +299,7 @@ impl RunStore {
             leases,
             latest: None,
             resumes: 0,
+            journal_cap: DEFAULT_JOURNAL_CAP,
         };
         store.persist()?;
         store.journal("create", vec![("n_shards", store.meta.n_shards.into())])?;
@@ -323,7 +355,15 @@ impl RunStore {
             _ => None,
         };
         let resumes = j.get("resumes").and_then(|x| x.as_i64()).unwrap_or(0) as u64;
-        Ok(RunStore { dir: dir.to_path_buf(), meta, status, leases, latest, resumes })
+        Ok(RunStore {
+            dir: dir.to_path_buf(),
+            meta,
+            status,
+            leases,
+            latest,
+            resumes,
+            journal_cap: DEFAULT_JOURNAL_CAP,
+        })
     }
 
     /// Reject a resume whose config drifted from the recorded run: any
@@ -598,6 +638,19 @@ impl RunStore {
         write_atomic(&self.dir.join(STATE_FILE), &state.to_string_pretty())
     }
 
+    /// Override the journal-compaction threshold (bytes); 0 restores the
+    /// default.  Threaded from `--journal-max-bytes`.
+    pub fn set_journal_cap(&mut self, bytes: u64) {
+        self.journal_cap = if bytes == 0 { DEFAULT_JOURNAL_CAP } else { bytes };
+    }
+
+    /// Append a caller-defined audit event (multi-process transport uses
+    /// this for exchange/failover records: `exchange`, `stale_grad_ignored`,
+    /// `corrupt_grad`, `worker_join`).
+    pub fn journal_event(&self, event: &str, kvs: Vec<(&str, Json)>) -> Result<()> {
+        self.journal(event, kvs)
+    }
+
     fn journal(&self, event: &str, mut kvs: Vec<(&str, Json)>) -> Result<()> {
         kvs.insert(0, ("event", event.into()));
         let path = self.dir.join(JOURNAL_FILE);
@@ -607,8 +660,128 @@ impl RunStore {
             .open(&path)
             .with_context(|| format!("opening journal {}", path.display()))?;
         writeln!(f, "{}", obj(kvs).to_string_compact())
-            .with_context(|| format!("appending to journal {}", path.display()))
+            .with_context(|| format!("appending to journal {}", path.display()))?;
+        drop(f);
+        self.compact_journal_if_needed(&path)
     }
+
+    /// Bound journal growth: above `journal_cap` bytes the file is
+    /// rewritten (atomically) as one compaction-marker line plus the
+    /// newest events that fit half the cap.  Multi-process heartbeats
+    /// multiply the journal's write rate, and it is an audit trail only —
+    /// nothing replays from it — so dropping the oldest events is safe.
+    fn compact_journal_if_needed(&self, path: &Path) -> Result<()> {
+        let len = std::fs::metadata(path).map(|m| m.len()).unwrap_or(0);
+        if len <= self.journal_cap {
+            return Ok(());
+        }
+        let src = std::fs::read_to_string(path)
+            .with_context(|| format!("reading journal {} for compaction", path.display()))?;
+        let lines: Vec<&str> = src.lines().filter(|l| !l.is_empty()).collect();
+        // keep the longest suffix that fits half the cap (≥ 1 event)
+        let budget = (self.journal_cap / 2).max(1) as usize;
+        let mut start = lines.len();
+        let mut bytes = 0usize;
+        while start > 0 {
+            let l = lines[start - 1].len() + 1;
+            if bytes + l > budget && start < lines.len() {
+                break;
+            }
+            bytes += l;
+            start -= 1;
+        }
+        let dropped = start;
+        let marker = obj(vec![
+            ("event", "compacted".into()),
+            ("dropped", dropped.into()),
+            ("kept", (lines.len() - dropped).into()),
+        ])
+        .to_string_compact();
+        let mut out = String::with_capacity(bytes + marker.len() + 1);
+        out.push_str(&marker);
+        out.push('\n');
+        for l in &lines[dropped..] {
+            out.push_str(l);
+            out.push('\n');
+        }
+        write_atomic(path, &out)
+    }
+}
+
+/// Advisory cross-process mutex over a run directory's mutable files
+/// (`state.json`, `journal.jsonl`).  Acquisition atomically creates
+/// `store.lock` (create_new = O_EXCL); the file records holder + wall-ms
+/// so a lock abandoned by a kill -9'd holder can be broken once it is
+/// older than `LOCK_STALE_MS`.  `state.json` itself is always replaced
+/// atomically, so breaking a stale lock never exposes a torn file — at
+/// worst the dead holder's last journal line is lost.
+pub struct StoreLock {
+    path: PathBuf,
+}
+
+impl StoreLock {
+    pub fn acquire(dir: &Path, owner: &str) -> Result<StoreLock> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating run dir {}", dir.display()))?;
+        let path = dir.join(LOCK_FILE);
+        let deadline = std::time::Instant::now() + std::time::Duration::from_millis(3 * LOCK_STALE_MS);
+        loop {
+            match std::fs::OpenOptions::new().write(true).create_new(true).open(&path) {
+                Ok(mut f) => {
+                    let _ = write!(f, "{owner} {}", wall_ms());
+                    return Ok(StoreLock { path });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                    let held_ms = std::fs::read_to_string(&path)
+                        .ok()
+                        .and_then(|s| {
+                            s.split_whitespace().nth(1).and_then(|x| x.parse::<u64>().ok())
+                        })
+                        .unwrap_or(0);
+                    if wall_ms().saturating_sub(held_ms) > LOCK_STALE_MS {
+                        // abandoned by a dead holder — break it and retry
+                        let _ = std::fs::remove_file(&path);
+                        continue;
+                    }
+                    if std::time::Instant::now() > deadline {
+                        bail!(
+                            "timed out acquiring store lock {} (held since {held_ms} ms)",
+                            path.display()
+                        );
+                    }
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                }
+                Err(e) => {
+                    return Err(e)
+                        .with_context(|| format!("creating store lock {}", path.display()))
+                }
+            }
+        }
+    }
+}
+
+impl Drop for StoreLock {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+/// One locked read-modify-write transaction against a run directory:
+/// take the store lock, open the current on-disk state, apply `f`,
+/// release.  Multi-process participants never hold a `RunStore` across
+/// transactions — every mutation re-reads the latest state under the
+/// lock, so concurrent workers serialize instead of clobbering each
+/// other's lease updates.
+pub fn with_store<R>(
+    dir: &Path,
+    owner: &str,
+    journal_cap: u64,
+    f: impl FnOnce(&mut RunStore) -> Result<R>,
+) -> Result<R> {
+    let _lock = StoreLock::acquire(dir, owner)?;
+    let mut s = RunStore::open(dir)?;
+    s.set_journal_cap(journal_cap);
+    f(&mut s)
 }
 
 /// Write `contents` to `path` via a `.tmp` sibling + rename, so readers
@@ -802,5 +975,73 @@ mod tests {
         let last = s2.read_journal().unwrap().pop().unwrap();
         assert_eq!(last.get("event").unwrap().as_str(), Some("resume"));
         assert_eq!(last.get("from_step").unwrap().as_i64(), Some(2));
+    }
+
+    #[test]
+    fn journal_compacts_at_cap_boundary() {
+        let d = tdir("jcap");
+        let mut s = RunStore::create(&d, meta(1)).unwrap();
+        let cap = 600u64;
+        s.set_journal_cap(cap);
+        let g = s.acquire("w0", 10).unwrap().unwrap();
+        // below the cap nothing compacts
+        s.heartbeat(&g, 0, 20).unwrap();
+        let events = s.read_journal().unwrap();
+        assert!(events.iter().all(|j| j.get("event").unwrap().as_str() != Some("compacted")));
+        // push the journal well past the cap; each append may trigger a
+        // compaction, so the file must stay bounded near the cap
+        for step in 1..200u64 {
+            s.heartbeat(&g, step, 20 + step).unwrap();
+        }
+        let len = std::fs::metadata(d.join(JOURNAL_FILE)).unwrap().len();
+        assert!(
+            len <= cap + 200,
+            "journal grew to {len} bytes despite cap {cap}"
+        );
+        let events = s.read_journal().unwrap();
+        // first line is the compaction marker with a positive drop count
+        let first = &events[0];
+        assert_eq!(first.get("event").unwrap().as_str(), Some("compacted"));
+        assert!(first.get("dropped").unwrap().as_i64().unwrap() > 0);
+        // the newest event survived the rewrite
+        let last = events.last().unwrap();
+        assert_eq!(last.get("event").unwrap().as_str(), Some("heartbeat"));
+        assert_eq!(last.get("step").unwrap().as_i64(), Some(199));
+    }
+
+    #[test]
+    fn store_lock_excludes_and_breaks_stale() {
+        let d = tdir("lock");
+        std::fs::create_dir_all(&d).unwrap();
+        let l1 = StoreLock::acquire(&d, "w0").unwrap();
+        assert!(d.join(LOCK_FILE).exists());
+        drop(l1);
+        assert!(!d.join(LOCK_FILE).exists(), "drop must release the lock");
+        // a lock whose recorded timestamp is ancient is broken, not waited on
+        std::fs::write(d.join(LOCK_FILE), "dead-worker 12345").unwrap();
+        let t0 = std::time::Instant::now();
+        let _l2 = StoreLock::acquire(&d, "w1").unwrap();
+        assert!(t0.elapsed().as_millis() < 2_000, "stale lock should break fast");
+    }
+
+    #[test]
+    fn with_store_serializes_and_external_flag_roundtrips() {
+        let d = tdir("withstore");
+        let mut m = meta(2);
+        m.external_coordinator = true;
+        RunStore::create(&d, m).unwrap();
+        let g = with_store(&d, "w0", 0, |s| {
+            assert!(s.meta().external_coordinator, "flag must survive the roundtrip");
+            Ok(s.acquire("w0", 10).unwrap().unwrap())
+        })
+        .unwrap();
+        with_store(&d, "w0", 0, |s| s.heartbeat(&g, 1, 20)).unwrap();
+        assert!(!d.join(LOCK_FILE).exists(), "transactions must release the lock");
+        let s = RunStore::open(&d).unwrap();
+        assert_eq!(s.leases()[0].last_step, 1);
+        // custom journal events land in the audit trail
+        s.journal_event("stale_grad_ignored", vec![("shard", 0usize.into())]).unwrap();
+        let last = s.read_journal().unwrap().pop().unwrap();
+        assert_eq!(last.get("event").unwrap().as_str(), Some("stale_grad_ignored"));
     }
 }

@@ -1,0 +1,472 @@
+//! Durable file-based gradient transport for multi-process data-parallel
+//! `train --host` (the `worker` subcommand).
+//!
+//! Layout under a run directory:
+//!
+//! ```text
+//! <run-dir>/grads/step_000017/shard_002_f0003.grad   per-shard gradients
+//! <run-dir>/grads/step_000017/merged.grad            the reduced update
+//! ```
+//!
+//! Every file is `FP4GRAD1 | u32 header-len | JSON header | f32-LE payload`,
+//! written to a `.tmp` sibling, fsync'd, then renamed — readers only ever
+//! observe complete files.  The header carries an FNV-1a checksum of the
+//! payload (truncation and bit-flips fail loudly, naming the path) plus the
+//! shard's lease **fence token in both the header and the filename**: a
+//! zombie worker whose lease expired publishes under its old fence, so its
+//! late rename can never clobber the re-leased holder's file, and the
+//! coordinator can detect + journal the stale file instead of merging it.
+//!
+//! Losses travel as raw f32 bit patterns (`loss_bits`, exact in JSON's f64)
+//! so the coordinator's ascending-shard mean reproduces the in-process
+//! engine's f32 accumulation bit-for-bit.
+//!
+//! Note the fencing is protocol hygiene, not a numerics guard: shard grads
+//! are a pure function of (params-at-step, step, shard), so even a zombie's
+//! payload would be byte-identical to the recompute.  What fencing buys is
+//! an unambiguous audit trail of who produced which bytes.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::refmodel::model::Grads;
+use crate::refmodel::RefConfig;
+use crate::util::fnv1a64;
+use crate::util::json::{obj, Json};
+
+use super::runstore::LeaseGrant;
+
+pub const GRADS_SUBDIR: &str = "grads";
+const MAGIC: &[u8; 8] = b"FP4GRAD1";
+const VERSION: i64 = 1;
+
+pub fn step_dir(run_dir: &Path, step: u64) -> PathBuf {
+    run_dir.join(GRADS_SUBDIR).join(format!("step_{step:06}"))
+}
+
+pub fn shard_file(run_dir: &Path, step: u64, shard: usize, fence: u64) -> PathBuf {
+    step_dir(run_dir, step).join(format!("shard_{shard:03}_f{fence:04}.grad"))
+}
+
+pub fn merged_file(run_dir: &Path, step: u64) -> PathBuf {
+    step_dir(run_dir, step).join("merged.grad")
+}
+
+/// Header of one worker-published shard-gradient file.
+#[derive(Clone, Debug)]
+pub struct ShardHeader {
+    pub step: u64,
+    pub shard: usize,
+    pub fence: u64,
+    pub worker: String,
+    /// Shard loss as raw f32 bits (exact through the JSON f64 header).
+    pub loss_bits: u32,
+}
+
+/// Header of the coordinator-published merged-update file.
+#[derive(Clone, Debug)]
+pub struct MergedHeader {
+    pub step: u64,
+    /// (shard, fence) of every contribution, ascending by shard.
+    pub contributors: Vec<(usize, u64)>,
+    /// Mean loss (ascending-shard f32 sum / n) as raw bits.
+    pub loss_bits: u32,
+}
+
+/// Publish one shard's gradients for `step` under the grant's fence.
+pub fn publish_shard(
+    run_dir: &Path,
+    step: u64,
+    grant: &LeaseGrant,
+    loss: f32,
+    grads: &Grads,
+) -> Result<PathBuf> {
+    let path = shard_file(run_dir, step, grant.shard, grant.fence);
+    let kvs = vec![
+        ("kind", "shard".into()),
+        ("step", (step as i64).into()),
+        ("shard", grant.shard.into()),
+        ("fence", (grant.fence as i64).into()),
+        ("worker", grant.worker.as_str().into()),
+        ("loss_bits", (loss.to_bits() as i64).into()),
+    ];
+    write_grad_file(&path, kvs, grads)?;
+    Ok(path)
+}
+
+/// Publish the merged (mean) update for `step`.  Idempotent in content:
+/// any process that could publish it would write identical bytes, so a
+/// rename race between two coordinators is harmless.
+pub fn publish_merged(
+    run_dir: &Path,
+    step: u64,
+    contributors: &[(usize, u64)],
+    mean_loss_bits: u32,
+    grads: &Grads,
+) -> Result<PathBuf> {
+    let path = merged_file(run_dir, step);
+    let contribs: Vec<Json> = contributors
+        .iter()
+        .map(|(shard, fence)| {
+            obj(vec![("shard", (*shard).into()), ("fence", (*fence as i64).into())])
+        })
+        .collect();
+    let kvs = vec![
+        ("kind", "merged".into()),
+        ("step", (step as i64).into()),
+        ("contributors", Json::Arr(contribs)),
+        ("loss_bits", (mean_loss_bits as i64).into()),
+    ];
+    write_grad_file(&path, kvs, grads)?;
+    Ok(path)
+}
+
+/// Read + verify a shard-gradient file (checksum, geometry, kind).
+pub fn read_shard(path: &Path, cfg: &RefConfig) -> Result<(ShardHeader, Grads)> {
+    let (h, grads) = read_grad_file(path, cfg)?;
+    if h.get("kind").and_then(|x| x.as_str()) != Some("shard") {
+        bail!("{}: not a shard gradient file", path.display());
+    }
+    let header = ShardHeader {
+        step: header_u64(&h, "step", path)?,
+        shard: header_u64(&h, "shard", path)? as usize,
+        fence: header_u64(&h, "fence", path)?,
+        worker: h.get("worker").and_then(|x| x.as_str()).unwrap_or("").to_string(),
+        loss_bits: header_u64(&h, "loss_bits", path)? as u32,
+    };
+    Ok((header, grads))
+}
+
+/// Read + verify a merged-update file.
+pub fn read_merged(path: &Path, cfg: &RefConfig) -> Result<(MergedHeader, Grads)> {
+    let (h, grads) = read_grad_file(path, cfg)?;
+    if h.get("kind").and_then(|x| x.as_str()) != Some("merged") {
+        bail!("{}: not a merged gradient file", path.display());
+    }
+    let mut contributors = Vec::new();
+    for c in h.get("contributors").and_then(|x| x.as_arr()).unwrap_or(&[]) {
+        contributors.push((
+            c.get("shard").and_then(|x| x.as_usize()).unwrap_or(0),
+            c.get("fence").and_then(|x| x.as_i64()).unwrap_or(0) as u64,
+        ));
+    }
+    let header = MergedHeader {
+        step: header_u64(&h, "step", path)?,
+        contributors,
+        loss_bits: header_u64(&h, "loss_bits", path)? as u32,
+    };
+    Ok((header, grads))
+}
+
+/// List the published shard files for `step` as (shard, fence, path),
+/// parsed from filenames — cheap enough to poll in the barrier loop.
+/// Foreign / half-named files are ignored; an empty or missing step dir
+/// yields an empty list.
+pub fn scan_shards(run_dir: &Path, step: u64) -> Result<Vec<(usize, u64, PathBuf)>> {
+    let dir = step_dir(run_dir, step);
+    let mut out = Vec::new();
+    let entries = match std::fs::read_dir(&dir) {
+        Ok(e) => e,
+        Err(_) => return Ok(out), // not created yet
+    };
+    for e in entries.flatten() {
+        let name = e.file_name();
+        let name = name.to_string_lossy();
+        if let Some((shard, fence)) = parse_shard_name(&name) {
+            out.push((shard, fence, e.path()));
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+fn parse_shard_name(name: &str) -> Option<(usize, u64)> {
+    let rest = name.strip_prefix("shard_")?.strip_suffix(".grad")?;
+    let (shard, fence) = rest.split_once("_f")?;
+    Some((shard.parse().ok()?, fence.parse().ok()?))
+}
+
+/// Remove every step directory strictly below `step` (called after a
+/// checkpoint at `step` lands: catch-up never needs an exchange already
+/// covered by a newer checkpoint).  Returns how many dirs were removed.
+pub fn gc_steps_below(run_dir: &Path, step: u64) -> Result<usize> {
+    let root = run_dir.join(GRADS_SUBDIR);
+    let entries = match std::fs::read_dir(&root) {
+        Ok(e) => e,
+        Err(_) => return Ok(0),
+    };
+    let mut removed = 0;
+    for e in entries.flatten() {
+        let name = e.file_name();
+        let name = name.to_string_lossy();
+        if let Some(s) = name.strip_prefix("step_").and_then(|s| s.parse::<u64>().ok()) {
+            if s < step {
+                std::fs::remove_dir_all(e.path())
+                    .with_context(|| format!("removing {}", e.path().display()))?;
+                removed += 1;
+            }
+        }
+    }
+    Ok(removed)
+}
+
+fn header_u64(h: &Json, key: &str, path: &Path) -> Result<u64> {
+    h.get(key)
+        .and_then(|x| x.as_i64())
+        .map(|v| v as u64)
+        .ok_or_else(|| anyhow!("{}: header missing `{key}`", path.display()))
+}
+
+/// Serialize + atomically publish one gradient file.
+fn write_grad_file(path: &Path, mut kvs: Vec<(&str, Json)>, grads: &Grads) -> Result<()> {
+    let flat = grads.flat();
+    let mut payload = Vec::new();
+    let mut tensors = Vec::with_capacity(flat.len());
+    for (name, buf) in &flat {
+        tensors.push(obj(vec![("name", name.as_str().into()), ("len", buf.len().into())]));
+        for v in *buf {
+            payload.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+    }
+    kvs.insert(0, ("version", VERSION.into()));
+    kvs.push(("payload_fnv", format!("{:016x}", fnv1a64(&payload)).into()));
+    kvs.push(("tensors", Json::Arr(tensors)));
+    let header = obj(kvs).to_string_compact();
+
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)
+            .with_context(|| format!("creating {}", parent.display()))?;
+    }
+    let mut tmp_os = path.as_os_str().to_os_string();
+    tmp_os.push(".tmp");
+    let tmp = PathBuf::from(tmp_os);
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(MAGIC)?;
+        f.write_all(&(header.len() as u32).to_le_bytes())?;
+        f.write_all(header.as_bytes())?;
+        f.write_all(&payload)?;
+        f.sync_all()
+            .with_context(|| format!("fsyncing {}", tmp.display()))?;
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} -> {}", tmp.display(), path.display()))
+}
+
+/// Deserialize + verify one gradient file into a fresh `Grads`.
+fn read_grad_file(path: &Path, cfg: &RefConfig) -> Result<(Json, Grads)> {
+    let buf = std::fs::read(path)
+        .with_context(|| format!("reading gradient file {}", path.display()))?;
+    if buf.len() < MAGIC.len() + 4 || &buf[..MAGIC.len()] != MAGIC {
+        bail!("{}: not an FP4GRAD1 gradient file (truncated or foreign)", path.display());
+    }
+    let hlen = u32::from_le_bytes(buf[8..12].try_into().unwrap()) as usize;
+    if 12 + hlen > buf.len() {
+        bail!("{}: truncated gradient file (header cut short)", path.display());
+    }
+    let header = std::str::from_utf8(&buf[12..12 + hlen])
+        .map_err(|_| anyhow!("{}: gradient header is not utf-8", path.display()))?;
+    let h = Json::parse(header)
+        .map_err(|e| anyhow!("{}: corrupt gradient header: {e}", path.display()))?;
+    let version = h.get("version").and_then(|x| x.as_i64()).unwrap_or(0);
+    if version != VERSION {
+        bail!("{}: unsupported gradient file version {version}", path.display());
+    }
+    let payload = &buf[12 + hlen..];
+    let want = h
+        .get("payload_fnv")
+        .and_then(|x| x.as_str())
+        .ok_or_else(|| anyhow!("{}: header missing `payload_fnv`", path.display()))?;
+    let got = format!("{:016x}", fnv1a64(payload));
+    if got != want {
+        bail!(
+            "{}: payload checksum mismatch (header {want}, computed {got}) — \
+             the file is truncated or bit-flipped; the shard must be recomputed",
+            path.display()
+        );
+    }
+    // checksum ok — unpack against the model geometry
+    let mut grads = Grads::zeros(cfg);
+    let mut slots = grads.flat_mut();
+    let meta = h
+        .get("tensors")
+        .and_then(|x| x.as_arr())
+        .ok_or_else(|| anyhow!("{}: header missing `tensors`", path.display()))?;
+    if meta.len() != slots.len() {
+        bail!(
+            "{}: holds {} tensors but the model has {} — geometry mismatch",
+            path.display(), meta.len(), slots.len()
+        );
+    }
+    let mut off = 0usize;
+    for (m, (name, buf_out)) in meta.iter().zip(slots.iter_mut()) {
+        let fname = m.get("name").and_then(|x| x.as_str()).unwrap_or("");
+        let flen = m.get("len").and_then(|x| x.as_usize()).unwrap_or(0);
+        if fname != name.as_str() || flen != buf_out.len() {
+            bail!(
+                "{}: tensor `{fname}` (len {flen}) does not match expected \
+                 `{name}` (len {}) — geometry mismatch",
+                path.display(), buf_out.len()
+            );
+        }
+        let bytes = flen * 4;
+        if off + bytes > payload.len() {
+            bail!("{}: truncated gradient payload at `{name}`", path.display());
+        }
+        for (i, v) in buf_out.iter_mut().enumerate() {
+            let o = off + i * 4;
+            *v = f32::from_bits(u32::from_le_bytes(payload[o..o + 4].try_into().unwrap()));
+        }
+        off += bytes;
+    }
+    if off != payload.len() {
+        bail!("{}: {} trailing payload bytes", path.display(), payload.len() - off);
+    }
+    Ok((h, grads))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> RefConfig {
+        RefConfig {
+            name: "tiny".into(),
+            family: "gpt2".into(),
+            vocab: 16,
+            layers: 1,
+            d_model: 8,
+            n_head: 2,
+            d_ff: 16,
+            seq: 4,
+        }
+    }
+
+    fn filled(cfg: &RefConfig, salt: f32) -> Grads {
+        let mut g = Grads::zeros(cfg);
+        for (ti, (_, buf)) in g.flat_mut().into_iter().enumerate() {
+            for (i, v) in buf.iter_mut().enumerate() {
+                *v = salt + ti as f32 * 0.25 + i as f32 * 0.125;
+            }
+        }
+        g
+    }
+
+    fn bits(g: &Grads) -> Vec<u32> {
+        g.flat().iter().flat_map(|(_, b)| b.iter().map(|v| v.to_bits())).collect()
+    }
+
+    fn tdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join("fp4transport").join(name);
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn grant(shard: usize, fence: u64) -> LeaseGrant {
+        LeaseGrant { shard, worker: "w0".into(), fence }
+    }
+
+    #[test]
+    fn shard_roundtrip_is_bit_exact() {
+        let d = tdir("roundtrip");
+        let cfg = tiny_cfg();
+        let g = filled(&cfg, 1.5);
+        let path = publish_shard(&d, 7, &grant(2, 3), 0.625f32, &g).unwrap();
+        assert_eq!(path, shard_file(&d, 7, 2, 3));
+        let (h, g2) = read_shard(&path, &cfg).unwrap();
+        assert_eq!((h.step, h.shard, h.fence), (7, 2, 3));
+        assert_eq!(h.worker, "w0");
+        assert_eq!(f32::from_bits(h.loss_bits), 0.625);
+        assert_eq!(bits(&g), bits(&g2));
+        assert!(path.with_extension("grad.tmp").metadata().is_err(), "tmp must be renamed away");
+    }
+
+    #[test]
+    fn merged_roundtrip_keeps_contributors() {
+        let d = tdir("merged");
+        let cfg = tiny_cfg();
+        let g = filled(&cfg, -2.0);
+        publish_merged(&d, 4, &[(0, 1), (1, 2)], 0.75f32.to_bits(), &g).unwrap();
+        let (h, g2) = read_merged(&merged_file(&d, 4), &cfg).unwrap();
+        assert_eq!(h.step, 4);
+        assert_eq!(h.contributors, vec![(0, 1), (1, 2)]);
+        assert_eq!(f32::from_bits(h.loss_bits), 0.75);
+        assert_eq!(bits(&g), bits(&g2));
+    }
+
+    #[test]
+    fn truncated_file_fails_checksum_and_names_path() {
+        let d = tdir("trunc");
+        let cfg = tiny_cfg();
+        let path = publish_shard(&d, 0, &grant(0, 1), 1.0, &filled(&cfg, 0.5)).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() - 13]).unwrap();
+        let err = format!("{:#}", read_shard(&path, &cfg).unwrap_err());
+        assert!(err.contains("checksum mismatch"), "{err}");
+        assert!(err.contains(&path.display().to_string()), "error must name the path: {err}");
+        assert!(err.contains("recomputed"), "{err}");
+    }
+
+    #[test]
+    fn bit_flip_fails_checksum_and_names_path() {
+        let d = tdir("flip");
+        let cfg = tiny_cfg();
+        let path = publish_shard(&d, 0, &grant(0, 1), 1.0, &filled(&cfg, 0.5)).unwrap();
+        let mut full = std::fs::read(&path).unwrap();
+        let n = full.len();
+        full[n - 6] ^= 0x40; // flip one payload bit
+        std::fs::write(&path, &full).unwrap();
+        let err = format!("{:#}", read_shard(&path, &cfg).unwrap_err());
+        assert!(err.contains("checksum mismatch"), "{err}");
+        assert!(err.contains(&path.display().to_string()), "error must name the path: {err}");
+    }
+
+    #[test]
+    fn geometry_mismatch_rejected() {
+        let d = tdir("geom");
+        let cfg = tiny_cfg();
+        let path = publish_shard(&d, 0, &grant(0, 1), 1.0, &filled(&cfg, 0.5)).unwrap();
+        let mut big = tiny_cfg();
+        big.d_model = 16;
+        big.d_ff = 32;
+        let err = format!("{:#}", read_shard(&path, &big).unwrap_err());
+        assert!(err.contains("geometry mismatch") || err.contains("does not match"), "{err}");
+    }
+
+    #[test]
+    fn scan_lists_fences_and_ignores_foreign_files() {
+        let d = tdir("scan");
+        let cfg = tiny_cfg();
+        let g = filled(&cfg, 0.0);
+        publish_shard(&d, 3, &grant(1, 2), 0.0, &g).unwrap();
+        // a zombie's file for the same shard at the superseded fence
+        publish_shard(&d, 3, &grant(1, 1), 0.0, &g).unwrap();
+        publish_shard(&d, 3, &grant(0, 1), 0.0, &g).unwrap();
+        std::fs::write(step_dir(&d, 3).join("junk.txt"), "x").unwrap();
+        std::fs::write(step_dir(&d, 3).join("shard_000_f0009.grad.tmp"), "x").unwrap();
+        let got: Vec<(usize, u64)> =
+            scan_shards(&d, 3).unwrap().into_iter().map(|(s, f, _)| (s, f)).collect();
+        assert_eq!(got, vec![(0, 1), (1, 1), (1, 2)]);
+        assert!(scan_shards(&d, 99).unwrap().is_empty(), "missing step dir is empty");
+    }
+
+    #[test]
+    fn gc_removes_only_older_steps() {
+        let d = tdir("gc");
+        let cfg = tiny_cfg();
+        let g = filled(&cfg, 0.0);
+        for step in [0u64, 1, 2, 3] {
+            publish_merged(&d, step, &[(0, 1)], 0, &g).unwrap();
+        }
+        let removed = gc_steps_below(&d, 2).unwrap();
+        assert_eq!(removed, 2);
+        assert!(!merged_file(&d, 0).exists());
+        assert!(!merged_file(&d, 1).exists());
+        assert!(merged_file(&d, 2).exists());
+        assert!(merged_file(&d, 3).exists());
+    }
+}

@@ -2,7 +2,11 @@
 //!
 //! Subcommands:
 //!   train       run one pretraining job (schedule-aware; --host for the
-//!               pure-Rust refmodel engine, no artifacts/PJRT needed)
+//!               pure-Rust refmodel engine, no artifacts/PJRT needed;
+//!               --workers-external N runs as the dedicated coordinator of
+//!               a multi-process run)
+//!   worker      join a multi-process --host run as one worker process
+//!               (shard leases + durable gradient transport in --run-dir)
 //!   reproduce   regenerate a paper table/figure (table1..4, fig1a..2, all;
 //!               --host runs fig2/table1..4 on the refmodel engine)
 //!   presets     list model presets and precision recipes
@@ -27,6 +31,7 @@ use fp4train::util::logger;
 fn cli() -> Cli {
     Cli::new("fp4train", "FP4 mixed-precision LLM pretraining (Zhou et al., 2025 reproduction)")
         .sub("train", "run one pretraining job")
+        .sub("worker", "join a multi-process --host run as one worker")
         .sub("reproduce", "regenerate paper tables/figures")
         .sub("presets", "list model presets and recipes")
         .sub("data", "corpus + tokenizer statistics")
@@ -46,6 +51,11 @@ fn cli() -> Cli {
         .opt("checkpoint-dir", None, "checkpoint directory")
         .opt("resume", None, "resume source: checkpoint file (PJRT) or run directory (--host)")
         .opt("run-dir", None, "host engine: durable run directory (run store + checkpoints; resume it with --resume <dir>)")
+        .opt("workers-external", None, "train --host: coordinate N external `worker` processes over --run-dir (this process merges, computes no shards)")
+        .opt("worker-id", None, "worker: stable identity for leases/journal [default: w<pid>]")
+        .opt("heartbeat-ms", None, "durable runs: lease heartbeat interval [default: 1000]")
+        .opt("lease-timeout-ms", None, "durable runs: lease expiry threshold; must exceed 2x the heartbeat [default: 10000]")
+        .opt("journal-max-bytes", None, "durable runs: journal compaction threshold [default: 262144]")
         .opt("docs", None, "synthetic corpus size (documents)")
         .opt("artifacts", Some("artifacts"), "AOT artifacts directory")
         .opt("out", None, "output directory")
@@ -80,6 +90,7 @@ fn main() {
 fn run(args: &fp4train::util::args::Args) -> Result<()> {
     match args.subcommand.as_deref() {
         Some("train") => cmd_train(args),
+        Some("worker") => cmd_worker(args),
         Some("reproduce") => cmd_reproduce(args),
         Some("presets") => cmd_presets(args),
         Some("data") => cmd_data(args),
@@ -98,12 +109,57 @@ fn open_runtime(args: &fp4train::util::args::Args) -> Result<Runtime> {
         .map_err(|e| anyhow!("{e}\nhint: run `make artifacts` first, or pass --host to run on the refmodel engine"))
 }
 
+/// Shared durable-run knobs (`--heartbeat-ms`, `--lease-timeout-ms`,
+/// `--journal-max-bytes`) parsed into a [`TrainOptions`] base; the
+/// timeout > 2× heartbeat invariant is validated by the engine.
+fn host_train_options(
+    args: &fp4train::util::args::Args,
+) -> Result<fp4train::refmodel::TrainOptions> {
+    use fp4train::refmodel::engine::fault_from_env;
+    let mut opts = fp4train::refmodel::TrainOptions::default();
+    opts.heartbeat_ms = args.get_parsed::<u64>("heartbeat-ms").map_err(|e| anyhow!(e))?.unwrap_or(0);
+    opts.lease_timeout_ms =
+        args.get_parsed::<u64>("lease-timeout-ms").map_err(|e| anyhow!(e))?.unwrap_or(0);
+    opts.journal_max_bytes =
+        args.get_parsed::<u64>("journal-max-bytes").map_err(|e| anyhow!(e))?.unwrap_or(0);
+    opts.fault_at = fault_from_env();
+    opts.validate()?;
+    Ok(opts)
+}
+
 fn cmd_train(args: &fp4train::util::args::Args) -> Result<()> {
-    let cfg = RunConfig::resolve(args.get("config"), args).map_err(|e| anyhow!(e))?;
+    let mut cfg = RunConfig::resolve(args.get("config"), args).map_err(|e| anyhow!(e))?;
     if args.has_flag("host") {
-        use fp4train::refmodel::engine::fault_from_env;
-        use fp4train::refmodel::TrainOptions;
-        let mut opts = TrainOptions::default();
+        use fp4train::coordinator::multiproc::{run_participant, MpOptions};
+        let mut opts = host_train_options(args)?;
+        if let Some(n) = args.get_parsed::<usize>("workers-external").map_err(|e| anyhow!(e))? {
+            // dedicated-coordinator mode: this process barriers + merges
+            // the shard gradients N `worker` processes publish; it never
+            // computes a shard itself
+            let dir = args
+                .req("run-dir")
+                .map_err(|_| anyhow!("--workers-external needs --run-dir (the rendezvous directory)"))?;
+            if n == 0 {
+                return Err(anyhow!("--workers-external must be at least 1"));
+            }
+            cfg.workers = n;
+            let mp = MpOptions {
+                run_dir: dir.into(),
+                worker_id: args
+                    .get("worker-id")
+                    .map(str::to_string)
+                    .unwrap_or_else(|| format!("coord{}", std::process::id())),
+                coordinator_only: true,
+                train: opts,
+            };
+            let res = run_participant(&cfg, &mp)?;
+            println!(
+                "mp run done: {} / {} over {n} workers — final train loss {:.4}, val loss {:.4}, val ppl {:.3}",
+                cfg.model, cfg.recipe, res.final_train_loss, res.final_val_nll, res.final_val_ppl
+            );
+            println!("run store: {dir}");
+            return Ok(());
+        }
         if let Some(dir) = args.get("run-dir") {
             opts.run_dir = Some(dir.into());
         }
@@ -121,7 +177,6 @@ fn cmd_train(args: &fp4train::util::args::Args) -> Result<()> {
             opts.run_dir = Some(dir.into());
             opts.resume = true;
         }
-        opts.fault_at = fault_from_env();
         let res = fp4train::refmodel::train_host_with(&cfg, &opts)?;
         println!(
             "host done: {} / {} — final train loss {:.4}, val loss {:.4}, val ppl {:.3}",
@@ -143,6 +198,35 @@ fn cmd_train(args: &fp4train::util::args::Args) -> Result<()> {
         cfg.model, cfg.recipe, res.final_train_loss, res.final_val_nll, res.final_val_ppl
     );
     println!("metrics: {}/{}__{}__steps.csv", cfg.out_dir, cfg.model, cfg.recipe);
+    Ok(())
+}
+
+/// One multi-process training worker: rendezvous on `--run-dir`, claim
+/// shard leases, compute + publish shard gradients, apply every merged
+/// update to the local replica.  The run config must match the store's
+/// (same `--workers`, model, seed, ... — checked against the config hash).
+/// In a run created without `--workers-external`, the current holder of
+/// shard 0 doubles as the elected coordinator.
+fn cmd_worker(args: &fp4train::util::args::Args) -> Result<()> {
+    use fp4train::coordinator::multiproc::{run_participant, MpOptions};
+    let cfg = RunConfig::resolve(args.get("config"), args).map_err(|e| anyhow!(e))?;
+    let dir = args
+        .req("run-dir")
+        .map_err(|_| anyhow!("worker needs --run-dir (the rendezvous directory)"))?;
+    let mp = MpOptions {
+        run_dir: dir.into(),
+        worker_id: args
+            .get("worker-id")
+            .map(str::to_string)
+            .unwrap_or_else(|| format!("w{}", std::process::id())),
+        coordinator_only: false,
+        train: host_train_options(args)?,
+    };
+    let res = run_participant(&cfg, &mp)?;
+    println!(
+        "worker {} done: {} / {} — final train loss {:.4}, val loss {:.4}, val ppl {:.3}",
+        mp.worker_id, cfg.model, cfg.recipe, res.final_train_loss, res.final_val_nll, res.final_val_ppl
+    );
     Ok(())
 }
 

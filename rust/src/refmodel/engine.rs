@@ -38,15 +38,18 @@ use crate::config::RunConfig;
 use crate::coordinator::checkpoint::{self, Checkpoint, WeightCodec};
 use crate::coordinator::dp;
 use crate::coordinator::metrics::{Metrics, StepRecord};
-use crate::coordinator::runstore::{LeaseGrant, RunMeta, RunStatus, RunStore, CKPT_SUBDIR};
+use crate::coordinator::runstore::{
+    wall_ms, LeaseGrant, RunMeta, RunStatus, RunStore, CKPT_SUBDIR,
+};
 use crate::coordinator::trainer::dataset_from_geometry;
-use crate::data::batcher::BatchScratch;
+use crate::data::batcher::{BatchScratch, TokenDataset};
 use crate::data::tokenizer::Tokenizer;
-use crate::tensor::Tensor;
+use crate::tensor::{Tensor, TensorI32};
 
 use super::model::{Grads, RefModel};
 use super::presets;
 use super::qlinear::Scratch;
+use super::{RecipePrec, RefConfig};
 
 /// Training hyperparameters (mirror of python `TrainHParams`).
 #[derive(Clone, Copy, Debug)]
@@ -226,6 +229,43 @@ pub struct TrainOptions {
     /// Abort (deterministically, before executing this step) — the
     /// in-process form of `PALLAS_FAULT=<step>`.
     pub fault_at: Option<u64>,
+    /// Lease heartbeat interval (`--heartbeat-ms`); 0 = default.
+    pub heartbeat_ms: u64,
+    /// Lease expiry threshold (`--lease-timeout-ms`); 0 = default.  Must
+    /// exceed 2× the heartbeat interval ([`TrainOptions::validate`]).
+    pub lease_timeout_ms: u64,
+    /// Journal compaction threshold in bytes (`--journal-max-bytes`);
+    /// 0 = `runstore::DEFAULT_JOURNAL_CAP`.
+    pub journal_max_bytes: u64,
+}
+
+/// Default lease heartbeat interval (overridden by `--heartbeat-ms`).
+pub const DEFAULT_HEARTBEAT_MS: u64 = 1_000;
+/// Default lease expiry threshold (overridden by `--lease-timeout-ms`).
+pub const DEFAULT_LEASE_TIMEOUT_MS: u64 = 10_000;
+
+impl TrainOptions {
+    pub fn heartbeat_ms(&self) -> u64 {
+        if self.heartbeat_ms == 0 { DEFAULT_HEARTBEAT_MS } else { self.heartbeat_ms }
+    }
+
+    pub fn lease_timeout_ms(&self) -> u64 {
+        if self.lease_timeout_ms == 0 { DEFAULT_LEASE_TIMEOUT_MS } else { self.lease_timeout_ms }
+    }
+
+    /// The timeout must exceed 2× the heartbeat, or a healthy worker that
+    /// misses a single beat (GC pause, slow fsync) gets its lease expired
+    /// and every shard it holds pointlessly recomputed.
+    pub fn validate(&self) -> Result<()> {
+        let (hb, lt) = (self.heartbeat_ms(), self.lease_timeout_ms());
+        if lt <= 2 * hb {
+            bail!(
+                "--lease-timeout-ms ({lt}) must exceed 2x --heartbeat-ms ({hb}): \
+                 a worker that misses one beat would be expired while alive"
+            );
+        }
+        Ok(())
+    }
 }
 
 /// Deterministic fault injection from the environment, matching the
@@ -237,17 +277,10 @@ pub fn fault_from_env() -> Option<u64> {
     std::env::var("PALLAS_FAULT").ok().and_then(|v| v.trim().parse::<u64>().ok())
 }
 
-fn wall_ms() -> u64 {
-    std::time::SystemTime::now()
-        .duration_since(std::time::UNIX_EPOCH)
-        .map(|d| d.as_millis() as u64)
-        .unwrap_or(0)
-}
-
 /// Capture the full resume state as a checkpoint: master params (exact
 /// f32; stored 1-D — the F32 codec is shape-agnostic and `restore_into`
 /// matches by name/length), Adam moments, completed-step count.
-fn snapshot(model: &mut RefModel, opt: &AdamW) -> Checkpoint {
+pub(crate) fn snapshot(model: &mut RefModel, opt: &AdamW) -> Checkpoint {
     let params: Vec<(String, Tensor)> = model
         .params_mut()
         .into_iter()
@@ -265,7 +298,7 @@ fn snapshot(model: &mut RefModel, opt: &AdamW) -> Checkpoint {
 /// Restore model + optimizer from a loaded checkpoint; returns the step
 /// to continue from.  Validates names/lengths before touching anything so
 /// a wrong-model checkpoint errors instead of panicking mid-copy.
-fn restore_into(
+pub(crate) fn restore_into(
     model: &mut RefModel,
     opt: &mut AdamW,
     ck: &Checkpoint,
@@ -301,6 +334,76 @@ fn restore_into(
     Ok(ck.step as u64)
 }
 
+/// Everything one training participant builds from a `RunConfig` before
+/// entering the step loop: presets, dataset, model, optimizer.  Shared by
+/// the in-process engine and each multi-process worker
+/// (`coordinator::multiproc`) — both construct the identical initial
+/// state from (config, seed), which is what lets a freshly launched
+/// worker process join a run and reproduce the same trajectory bits.
+pub(crate) struct TrainSetup {
+    pub(crate) info: RefConfig,
+    pub(crate) target: RecipePrec,
+    pub(crate) stage1: u64,
+    pub(crate) n_shards: usize,
+    pub(crate) ds: TokenDataset,
+    pub(crate) tok: Tokenizer,
+    pub(crate) val: Vec<TensorI32>,
+    pub(crate) model: RefModel,
+    pub(crate) opt: AdamW,
+}
+
+impl TrainSetup {
+    pub(crate) fn new(cfg: &RunConfig) -> Result<TrainSetup> {
+        let info = presets::model(&cfg.model)
+            .ok_or_else(|| anyhow!("unknown host model preset {}", cfg.model))?;
+        let recipe = presets::recipe(&cfg.recipe)
+            .ok_or_else(|| anyhow!("unknown host recipe {}", cfg.recipe))?;
+        let target = presets::recipe(&cfg.target_recipe)
+            .ok_or_else(|| anyhow!("unknown host target recipe {}", cfg.target_recipe))?;
+        let stage1 = cfg.stage1_steps();
+        let n_shards = cfg.workers.max(1);
+        let (ds, tok) = dataset_from_geometry(info.seq, presets::BATCH, info.vocab, cfg);
+        let mut val = ds.val_batches();
+        val.truncate(4); // eval slice: first ≤4 val batches, like reproduce
+        let mut model = RefModel::new(info.clone(), recipe.clone(), cfg.seed);
+        let opt = AdamW::new(&mut model, HParams::for_family(&info.family, cfg.steps));
+        Ok(TrainSetup { info, target, stage1, n_shards, ds, tok, val, model, opt })
+    }
+
+    /// Mean validation NLL over the eval slice (the engine's eval step).
+    pub(crate) fn eval_nll(&self, sc: &mut Scratch) -> f64 {
+        let mut sum = 0.0f64;
+        let mut count = 0usize;
+        for vb in &self.val {
+            let (s, c) = self.model.eval_nll(vb, sc);
+            sum += s;
+            count += c;
+        }
+        if count == 0 { f64::NAN } else { sum / count as f64 }
+    }
+}
+
+/// One shard's gradient computation — the unit of work the multi-process
+/// transport ships between workers.  A pure function of (model state,
+/// step, shard, n_shards): batches are keyed on exactly those values and
+/// the kernels are bit-identical at any thread count, so any process
+/// recomputing a shard reproduces the same f32 bits the original holder
+/// would have published.  Returns (loss, grads, recycled window buffer).
+pub(crate) fn compute_shard_grads(
+    model: &RefModel,
+    ds: &TokenDataset,
+    step: u64,
+    shard: usize,
+    n_shards: usize,
+    sc: &mut Scratch,
+    bscratch: &mut BatchScratch,
+    buf: Vec<i32>,
+) -> (f32, Grads, Vec<i32>) {
+    let batch = ds.train_batch_with(step, shard, n_shards, bscratch, buf);
+    let (loss, grads, _cache) = model.loss_and_grads(&batch, sc);
+    (loss, grads, batch.data)
+}
+
 /// Run one host training job under the §3.3 schedule (stage 1 in
 /// `cfg.recipe`, the final `target_precision_frac` of steps in
 /// `cfg.target_recipe`).  Ephemeral form of [`train_host_with`].
@@ -312,21 +415,12 @@ pub fn train_host(cfg: &RunConfig) -> Result<HostRunResult> {
 /// heartbeats, checkpoint cadence, deterministic fault injection, and
 /// bit-identical crash-resume.  See the module doc for the contract.
 pub fn train_host_with(cfg: &RunConfig, opts: &TrainOptions) -> Result<HostRunResult> {
-    let info = presets::model(&cfg.model)
-        .ok_or_else(|| anyhow!("unknown host model preset {}", cfg.model))?;
-    let recipe = presets::recipe(&cfg.recipe)
-        .ok_or_else(|| anyhow!("unknown host recipe {}", cfg.recipe))?;
-    let target = presets::recipe(&cfg.target_recipe)
-        .ok_or_else(|| anyhow!("unknown host target recipe {}", cfg.target_recipe))?;
-    let stage1 = cfg.stage1_steps();
-    let n_shards = cfg.workers.max(1);
-
-    let (ds, tok) = dataset_from_geometry(info.seq, presets::BATCH, info.vocab, cfg);
-    let val_batches = ds.val_batches();
-    let val_slice = &val_batches[..val_batches.len().min(4)];
-
-    let mut model = RefModel::new(info.clone(), recipe.clone(), cfg.seed);
-    let mut opt = AdamW::new(&mut model, HParams::for_family(&info.family, cfg.steps));
+    opts.validate()?;
+    let setup = TrainSetup::new(cfg)?;
+    let TrainSetup {
+        info: _, target, stage1, n_shards, ds, tok, val, mut model, mut opt,
+    } = setup;
+    let val_slice = &val[..];
     let mut sc = Scratch::default();
     let mut metrics = Metrics::default();
     let mut bscratch = BatchScratch::default();
@@ -364,6 +458,7 @@ pub fn train_host_with(cfg: &RunConfig, opts: &TrainOptions) -> Result<HostRunRe
         } else {
             RunStore::create(dir, RunMeta::from_config(cfg))?
         };
+        s.set_journal_cap(opts.journal_max_bytes);
         // deterministic shard plan over virtual workers, leased with fencing
         let workers: Vec<String> = (0..n_shards).map(|i| format!("w{i}")).collect();
         for (shard, worker) in dp::rebalance(n_shards, &[], &workers)? {
@@ -405,24 +500,27 @@ pub fn train_host_with(cfg: &RunConfig, opts: &TrainOptions) -> Result<HostRunRe
         let t0 = Instant::now();
         let (loss, gnorm) = if n_shards == 1 {
             // the classic single-shard path, byte-for-byte unchanged
-            let batch = ds.train_batch_with(step, 0, 1, &mut bscratch, std::mem::take(&mut buf));
-            let (loss, grads, _cache) = model.loss_and_grads(&batch, &mut sc);
+            let (loss, grads, b) =
+                compute_shard_grads(&model, &ds, step, 0, 1, &mut sc, &mut bscratch, std::mem::take(&mut buf));
             let gnorm = opt.step(&mut model, &grads);
-            buf = batch.data; // recycle the window buffer
+            buf = b; // recycle the window buffer
             (loss, gnorm)
         } else {
             // per-shard grads merged in ascending-shard order: the reduce
             // order is keyed by shard index, never by lease holder, so a
-            // re-leased shard reproduces the identical f32 accumulation
+            // re-leased shard reproduces the identical f32 accumulation.
+            // The multi-process path (coordinator::multiproc) replays this
+            // exact sequence — same shard order, same f32 loss sum — from
+            // transport files instead of a local Vec.
             let mut shard_grads = Vec::with_capacity(n_shards);
             let mut loss_sum = 0.0f32;
             for shard in 0..n_shards {
-                let batch =
-                    ds.train_batch_with(step, shard, n_shards, &mut bscratch, std::mem::take(&mut buf));
-                let (l, g, _cache) = model.loss_and_grads(&batch, &mut sc);
+                let (l, g, b) = compute_shard_grads(
+                    &model, &ds, step, shard, n_shards, &mut sc, &mut bscratch, std::mem::take(&mut buf),
+                );
                 loss_sum += l;
                 shard_grads.push(g);
-                buf = batch.data;
+                buf = b;
             }
             let mean = Grads::merge_mean(shard_grads);
             let gnorm = opt.step(&mut model, &mean);
@@ -507,6 +605,21 @@ mod tests {
         let end = lr_at(999, &hp);
         assert!((end - hp.final_lr_frac * hp.peak_lr).abs() < 1e-5 * hp.peak_lr, "{end}");
         assert!(lr_at(500, &hp) < peak && lr_at(500, &hp) > end);
+    }
+
+    #[test]
+    fn timeout_must_exceed_twice_heartbeat() {
+        let mut o = TrainOptions::default();
+        assert!(o.validate().is_ok(), "defaults must validate");
+        assert_eq!(o.heartbeat_ms(), DEFAULT_HEARTBEAT_MS);
+        assert_eq!(o.lease_timeout_ms(), DEFAULT_LEASE_TIMEOUT_MS);
+        o.heartbeat_ms = 500;
+        o.lease_timeout_ms = 1_000; // exactly 2x: rejected (must *exceed*)
+        let err = format!("{:#}", o.validate().unwrap_err());
+        assert!(err.contains("--lease-timeout-ms"), "{err}");
+        assert!(err.contains("--heartbeat-ms"), "{err}");
+        o.lease_timeout_ms = 1_001;
+        assert!(o.validate().is_ok());
     }
 
     #[test]

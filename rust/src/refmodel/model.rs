@@ -126,6 +126,42 @@ impl Grads {
         out
     }
 
+    /// Mutable (name, buffer) pairs in the same canonical order as
+    /// [`Grads::flat`] — the deserialization target for the multi-process
+    /// gradient transport, which validates each file entry's name and
+    /// length against this list before filling it.
+    pub fn flat_mut(&mut self) -> Vec<(String, &mut Vec<f32>)> {
+        let mut out: Vec<(String, &mut Vec<f32>)> = vec![
+            ("wte".into(), &mut self.wte),
+            ("wpe".into(), &mut self.wpe),
+            ("ln_f_g".into(), &mut self.lnf_g),
+            ("ln_f_b".into(), &mut self.lnf_b),
+        ];
+        for (i, b) in self.blocks.iter_mut().enumerate() {
+            let BlockGrads {
+                ln1_g, ln1_b, w_qkv, b_qkv, w_o, b_o,
+                ln2_g, ln2_b, w_fc1, b_fc1, w_fc2, b_fc2,
+            } = b;
+            for (n, v) in [
+                ("ln1_g", ln1_g),
+                ("ln1_b", ln1_b),
+                ("w_qkv", w_qkv),
+                ("b_qkv", b_qkv),
+                ("w_o", w_o),
+                ("b_o", b_o),
+                ("ln2_g", ln2_g),
+                ("ln2_b", ln2_b),
+                ("w_fc1", w_fc1),
+                ("b_fc1", b_fc1),
+                ("w_fc2", w_fc2),
+                ("b_fc2", b_fc2),
+            ] {
+                out.push((format!("{n}.{i}"), v));
+            }
+        }
+        out
+    }
+
     /// Gradient buffers in canonical order, mutable (accumulation).
     fn bufs_mut(&mut self) -> Vec<&mut Vec<f32>> {
         let mut out: Vec<&mut Vec<f32>> =

@@ -13,6 +13,7 @@
 use std::path::{Path, PathBuf};
 
 use fp4train::config::RunConfig;
+use fp4train::coordinator::multiproc::{run_participant, MpOptions};
 use fp4train::coordinator::runstore::{LeaseState, RunStatus, RunStore};
 use fp4train::refmodel::{train_host_with, HostRunResult, TrainOptions};
 
@@ -190,6 +191,191 @@ fn truncated_checkpoint_fails_resume_with_path() {
         err.contains("truncated") || err.contains("checksum") || err.contains("decompressing"),
         "error must name the failure mode: {err}"
     );
+}
+
+// ---------------------------------------------------------------------------
+// Multi-process data parallelism (threads emulating worker processes: each
+// participant owns a full model+optimizer replica and rendezvouses purely
+// through the run-dir files, exactly like separate `worker` processes)
+// ---------------------------------------------------------------------------
+
+fn mp_opts(dir: &Path, id: &str, coordinator_only: bool, fault_at: Option<u64>) -> MpOptions {
+    MpOptions {
+        run_dir: dir.to_path_buf(),
+        worker_id: id.to_string(),
+        coordinator_only,
+        train: TrainOptions {
+            heartbeat_ms: 100,
+            lease_timeout_ms: 400,
+            fault_at,
+            ..Default::default()
+        },
+    }
+}
+
+/// Spawn a participant thread; returns its join handle.
+fn spawn_participant(
+    cfg: &RunConfig,
+    dir: &Path,
+    id: &str,
+    coordinator_only: bool,
+    fault_at: Option<u64>,
+) -> std::thread::JoinHandle<anyhow::Result<HostRunResult>> {
+    let cfg = cfg.clone();
+    let o = mp_opts(dir, id, coordinator_only, fault_at);
+    std::thread::spawn(move || run_participant(&cfg, &o))
+}
+
+/// Block until the store exists, so the dedicated coordinator — not a
+/// racing worker — fixes the run's coordinator mode at creation.
+fn wait_for_store(dir: &Path) {
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+    while !dir.join("run.json").exists() {
+        assert!(std::time::Instant::now() < deadline, "store never appeared in {dir:?}");
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+}
+
+#[test]
+fn multiprocess_external_run_matches_in_process_bits() {
+    let root = tdir("mp_clean");
+    // uninterrupted in-process reference at the same shard count
+    let ref_res = train_host_with(&micro_cfg(&root, "ref", 3), &TrainOptions::default()).unwrap();
+    let ref_losses: Vec<u32> = ref_res.metrics.steps.iter().map(|s| s.loss.to_bits()).collect();
+    let ref_bits = param_bits(ref_res);
+
+    let cfg = micro_cfg(&root, "mp", 3);
+    let dir = root.join("mp_run");
+    let coord = spawn_participant(&cfg, &dir, "coord", true, None);
+    wait_for_store(&dir);
+    let workers: Vec<_> = (0..3)
+        .map(|i| spawn_participant(&cfg, &dir, &format!("w{i}"), false, None))
+        .collect();
+
+    let cres = coord.join().unwrap().unwrap();
+    // the coordinator is at the frontier for the whole run: full history,
+    // every per-step loss bit identical to the in-process engine
+    assert_eq!(cres.metrics.steps.len(), 8);
+    for r in &cres.metrics.steps {
+        assert_eq!(r.loss.to_bits(), ref_losses[r.step as usize], "loss bits at step {}", r.step);
+    }
+    assert_eq!(param_bits(cres), ref_bits, "coordinator param bits diverged");
+    // every worker replica converged to the identical bytes (a slow
+    // starter may have caught up via checkpoint restore — same bits)
+    for (i, w) in workers.into_iter().enumerate() {
+        let res = w.join().unwrap().unwrap();
+        for r in &res.metrics.steps {
+            assert_eq!(r.loss.to_bits(), ref_losses[r.step as usize], "w{i} loss at {}", r.step);
+        }
+        assert_eq!(param_bits(res), ref_bits, "w{i} param bits diverged");
+    }
+
+    let store = RunStore::open(&dir).unwrap();
+    assert_eq!(store.status(), RunStatus::Complete);
+    assert!(store.leases().iter().all(|l| l.state == LeaseState::Done));
+    assert!(store.meta().external_coordinator);
+}
+
+#[test]
+fn multiprocess_kill9_failover_and_relaunch_bit_identical() {
+    let root = tdir("mp_chaos");
+    let ref_res = train_host_with(&micro_cfg(&root, "ref", 3), &TrainOptions::default()).unwrap();
+    let ref_losses: Vec<u32> = ref_res.metrics.steps.iter().map(|s| s.loss.to_bits()).collect();
+    let ref_bits = param_bits(ref_res);
+
+    let cfg = micro_cfg(&root, "mp", 3);
+    let dir = root.join("mp_run");
+    let coord = spawn_participant(&cfg, &dir, "coord", true, None);
+    wait_for_store(&dir);
+    // the victim starts first and we wait until it holds a lease, so it
+    // deterministically dies owning at least one shard before step 3 —
+    // the kill -9 analog (nothing is released; only lease expiry frees
+    // its shards)
+    let victim = spawn_participant(&cfg, &dir, "victim", false, Some(3));
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+    loop {
+        assert!(std::time::Instant::now() < deadline, "victim never claimed a shard");
+        let held = RunStore::open(&dir)
+            .map(|s| {
+                s.leases()
+                    .iter()
+                    .any(|l| l.state == LeaseState::Leased && l.worker == "victim")
+            })
+            .unwrap_or(false);
+        if held {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    let survivors: Vec<_> = (0..2)
+        .map(|i| spawn_participant(&cfg, &dir, &format!("w{i}"), false, None))
+        .collect();
+
+    let err = format!("{:#}", victim.join().unwrap().unwrap_err());
+    assert!(err.contains("injected fault"), "{err}");
+    // relaunch: a fresh worker attaches mid-run, catches up from the
+    // latest checkpoint + published exchanges, and helps finish
+    let relaunched = spawn_participant(&cfg, &dir, "relaunch", false, None);
+
+    let cres = coord.join().unwrap().unwrap();
+    assert_eq!(cres.metrics.steps.len(), 8);
+    for r in &cres.metrics.steps {
+        assert_eq!(r.loss.to_bits(), ref_losses[r.step as usize], "loss bits at step {}", r.step);
+    }
+    assert_eq!(param_bits(cres), ref_bits, "coordinator param bits diverged after failover");
+    for (i, w) in survivors.into_iter().enumerate() {
+        let res = w.join().unwrap().unwrap();
+        assert_eq!(param_bits(res), ref_bits, "survivor w{i} param bits diverged");
+    }
+    let res = relaunched.join().unwrap().unwrap();
+    assert_eq!(param_bits(res), ref_bits, "relaunched worker param bits diverged");
+
+    // the store recorded the death and the takeover: the victim's shard
+    // was expired and re-leased at a bumped fence, and the run sealed
+    let store = RunStore::open(&dir).unwrap();
+    assert_eq!(store.status(), RunStatus::Complete);
+    assert!(store.leases().iter().all(|l| l.state == LeaseState::Done));
+    assert!(
+        store.leases().iter().any(|l| l.fence > 1),
+        "some shard must have been re-leased after the kill: {:?}",
+        store.leases()
+    );
+    let events: Vec<String> = store
+        .read_journal()
+        .unwrap()
+        .iter()
+        .map(|j| j.get("event").and_then(|e| e.as_str()).unwrap_or("?").to_string())
+        .collect();
+    assert!(events.iter().any(|e| e == "expire"), "journal must record the expiry: {events:?}");
+    assert!(events.iter().any(|e| e == "exchange"), "{events:?}");
+}
+
+#[test]
+fn multiprocess_elected_coordinator_matches_in_process_bits() {
+    let root = tdir("mp_elected");
+    let ref_res = train_host_with(&micro_cfg(&root, "ref", 2), &TrainOptions::default()).unwrap();
+    let ref_losses: Vec<u32> = ref_res.metrics.steps.iter().map(|s| s.loss.to_bits()).collect();
+    let ref_bits = param_bits(ref_res);
+
+    // no dedicated coordinator: the first worker creates the store in
+    // elected mode and the current holder of shard 0 merges
+    let cfg = micro_cfg(&root, "mp", 2);
+    let dir = root.join("mp_run");
+    let w0 = spawn_participant(&cfg, &dir, "w0", false, None);
+    wait_for_store(&dir);
+    let w1 = spawn_participant(&cfg, &dir, "w1", false, None);
+
+    for (name, h) in [("w0", w0), ("w1", w1)] {
+        let res = h.join().unwrap().unwrap();
+        for r in &res.metrics.steps {
+            assert_eq!(r.loss.to_bits(), ref_losses[r.step as usize], "{name} loss at {}", r.step);
+        }
+        assert_eq!(param_bits(res), ref_bits, "{name} param bits diverged");
+    }
+    let store = RunStore::open(&dir).unwrap();
+    assert_eq!(store.status(), RunStatus::Complete);
+    assert!(!store.meta().external_coordinator);
+    assert!(store.leases().iter().all(|l| l.state == LeaseState::Done));
 }
 
 #[test]

@@ -1,8 +1,8 @@
 #!/usr/bin/env bash
 # Crash/resume smoke loop for the durable `train --host` orchestration.
 #
-# Runs the same micro training job three ways and demands bit-identical
-# final metrics:
+# Default (single-process) mode runs the same micro training job three
+# ways and demands bit-identical final metrics:
 #
 #   1. an uninterrupted durable run (the reference),
 #   2. a run killed by PALLAS_FAULT=<step> mid-flight (must exit nonzero
@@ -14,12 +14,29 @@
 # excluded).  This is the shell-level twin of rust/tests/orchestration.rs,
 # exercising the real binary + CLI + env-var path instead of the library.
 #
-# Usage: scripts/chaos.sh            (also: scripts/tier1.sh --chaos)
+# --mp mode runs the multi-process topology instead: a dedicated
+# coordinator (`train --host --workers-external 3`) plus three `worker`
+# processes rendezvousing on one --run-dir.  One worker is kill -9'd
+# mid-run and relaunched; lease expiry re-homes its shards and the
+# relaunched process catches up from the latest checkpoint.  Every
+# deterministic steps.csv column of the coordinator's output must match
+# an uninterrupted in-process `--workers 3` reference byte-for-byte.
+#
+# Usage: scripts/chaos.sh         (also: scripts/tier1.sh --chaos)
+#        scripts/chaos.sh --mp    (also: scripts/tier1.sh --chaos-mp)
 # No-ops with exit 0 when cargo is absent, like bench_diff.sh.
 
 set -euo pipefail
 SCRIPT_DIR="$(cd "$(dirname "$0")" && pwd)"
 cd "$SCRIPT_DIR/../rust"
+
+MODE=single
+for arg in "$@"; do
+    case "$arg" in
+        --mp) MODE=mp ;;
+        *) echo "chaos: unknown flag $arg" >&2; exit 64 ;;
+    esac
+done
 
 if ! command -v cargo >/dev/null 2>&1; then
     echo "chaos: cargo not found — skipping crash/resume smoke (no-op)"
@@ -37,32 +54,135 @@ echo "== chaos: build =="
 cargo build --release --quiet
 BIN=target/release/fp4train
 
-common_args=(train --host --model gpt2-s-proxy --recipe ours
-             --steps "$STEPS" --docs "$DOCS" --checkpoint-every "$CKPT_EVERY"
-             --eval-every "$STEPS" --log-every "$STEPS")
+# One training job, shared by every run in both modes (determinism gate:
+# the run store hashes model/recipe/steps/seed/workers/corpus geometry,
+# so coordinator and workers must agree on all of these).
+job_args=(--model gpt2-s-proxy --recipe ours
+          --steps "$STEPS" --docs "$DOCS" --checkpoint-every "$CKPT_EVERY"
+          --eval-every "$STEPS" --log-every "$STEPS")
+common_args=(train --host "${job_args[@]}")
 
-echo "== chaos: uninterrupted reference run =="
-"$BIN" "${common_args[@]}" --out "$WORK/ref_out" --run-dir "$WORK/ref_run"
+if [[ "$MODE" == single ]]; then
+    echo "== chaos: uninterrupted reference run =="
+    "$BIN" "${common_args[@]}" --out "$WORK/ref_out" --run-dir "$WORK/ref_run"
 
-echo "== chaos: faulted run (PALLAS_FAULT=$FAULT must kill it) =="
-if PALLAS_FAULT=$FAULT "$BIN" "${common_args[@]}" \
-        --out "$WORK/chaos_out" --run-dir "$WORK/chaos_run"; then
-    echo "chaos: FAIL — injected fault did not make the run exit nonzero" >&2
+    echo "== chaos: faulted run (PALLAS_FAULT=$FAULT must kill it) =="
+    if PALLAS_FAULT=$FAULT "$BIN" "${common_args[@]}" \
+            --out "$WORK/chaos_out" --run-dir "$WORK/chaos_run"; then
+        echo "chaos: FAIL — injected fault did not make the run exit nonzero" >&2
+        exit 1
+    fi
+    echo "chaos: faulted as expected"
+
+    echo "== chaos: resume to completion =="
+    "$BIN" "${common_args[@]}" --out "$WORK/resume_out" --resume "$WORK/chaos_run"
+
+    # compare the deterministic columns of the final step row
+    ref_row="$(tail -n1 "$WORK/ref_out"/*__steps.csv | cut -d, -f1-4)"
+    res_row="$(tail -n1 "$WORK/resume_out"/*__steps.csv | cut -d, -f1-4)"
+    echo "chaos: ref    final row: $ref_row"
+    echo "chaos: resume final row: $res_row"
+    if [[ "$ref_row" != "$res_row" ]]; then
+        echo "chaos: FAIL — resumed run diverged from the uninterrupted reference" >&2
+        exit 1
+    fi
+
+    echo "chaos: OK — crash at step $FAULT resumed bit-identically"
+    exit 0
+fi
+
+# ---------------------------------------------------------------- mp mode
+NWORK=3
+KILL_AT=10              # kill the victim once step dirs reach this index
+HB=200                  # fast lease cadence so failover fits a smoke test
+LT=1000
+RUN="$WORK/mp_run"
+mp_args=(--workers "$NWORK" --heartbeat-ms "$HB" --lease-timeout-ms "$LT")
+
+echo "== chaos[mp]: uninterrupted in-process --workers $NWORK reference =="
+"$BIN" "${common_args[@]}" --workers "$NWORK" --out "$WORK/ref_out"
+
+echo "== chaos[mp]: dedicated coordinator + $NWORK workers on $RUN =="
+# The coordinator must start FIRST: whoever creates the run store fixes
+# the coordination mode (external vs elected), so workers wait for
+# run.json before joining.
+"$BIN" "${common_args[@]}" "${mp_args[@]}" --workers-external "$NWORK" \
+    --run-dir "$RUN" --out "$WORK/mp_out" --worker-id coord &
+COORD=$!
+
+deadline=$((SECONDS + 60))
+while [[ ! -f "$RUN/run.json" ]]; do
+    if (( SECONDS >= deadline )); then
+        echo "chaos[mp]: FAIL — coordinator never created $RUN/run.json" >&2
+        exit 1
+    fi
+    sleep 0.05
+done
+
+declare -a WPID
+for i in 0 1 2; do
+    "$BIN" worker "${job_args[@]}" "${mp_args[@]}" \
+        --run-dir "$RUN" --worker-id "w$i" &
+    WPID[$i]=$!
+done
+VICTIM=${WPID[0]}
+
+# wait until the exchange directory shows progress past KILL_AT, then
+# kill -9 the victim (no cleanup — only lease expiry frees its shards)
+deadline=$((SECONDS + 120))
+while :; do
+    max=-1
+    for d in "$RUN"/grads/step_*; do
+        [[ -d "$d" ]] || continue
+        n=${d##*step_}
+        n=$((10#$n))
+        (( n > max )) && max=$n
+    done
+    (( max >= KILL_AT )) && break
+    if ! kill -0 "$COORD" 2>/dev/null; then
+        echo "chaos[mp]: FAIL — coordinator exited before step $KILL_AT" >&2
+        exit 1
+    fi
+    if (( SECONDS >= deadline )); then
+        echo "chaos[mp]: FAIL — no progress past step $KILL_AT within 120s" >&2
+        exit 1
+    fi
+    sleep 0.05
+done
+
+if kill -9 "$VICTIM" 2>/dev/null; then
+    echo "chaos[mp]: killed worker w0 (pid $VICTIM) at step dir $max"
+else
+    echo "chaos[mp]: WARN — w0 already exited before the kill window" >&2
+fi
+wait "$VICTIM" 2>/dev/null || true
+
+echo "== chaos[mp]: relaunch w0 =="
+"$BIN" worker "${job_args[@]}" "${mp_args[@]}" \
+    --run-dir "$RUN" --worker-id w0 &
+WPID[0]=$!
+
+if ! wait "$COORD"; then
+    echo "chaos[mp]: FAIL — coordinator exited nonzero" >&2
     exit 1
 fi
-echo "chaos: faulted as expected"
+echo "chaos[mp]: coordinator sealed the run"
+for i in 0 1 2; do
+    if ! wait "${WPID[$i]}"; then
+        echo "chaos[mp]: FAIL — worker w$i exited nonzero" >&2
+        exit 1
+    fi
+done
 
-echo "== chaos: resume to completion =="
-"$BIN" "${common_args[@]}" --out "$WORK/resume_out" --resume "$WORK/chaos_run"
-
-# compare the deterministic columns of the final step row
-ref_row="$(tail -n1 "$WORK/ref_out"/*__steps.csv | cut -d, -f1-4)"
-res_row="$(tail -n1 "$WORK/resume_out"/*__steps.csv | cut -d, -f1-4)"
-echo "chaos: ref    final row: $ref_row"
-echo "chaos: resume final row: $res_row"
-if [[ "$ref_row" != "$res_row" ]]; then
-    echo "chaos: FAIL — resumed run diverged from the uninterrupted reference" >&2
+# every deterministic column of every step row must match the reference
+cut -d, -f1-4 "$WORK/ref_out"/*__steps.csv > "$WORK/ref.cols"
+cut -d, -f1-4 "$WORK/mp_out"/*__steps.csv  > "$WORK/mp.cols"
+echo "chaos[mp]: ref final row: $(tail -n1 "$WORK/ref.cols")"
+echo "chaos[mp]: mp  final row: $(tail -n1 "$WORK/mp.cols")"
+if ! cmp -s "$WORK/ref.cols" "$WORK/mp.cols"; then
+    echo "chaos[mp]: FAIL — multi-process run diverged from the in-process reference" >&2
+    diff "$WORK/ref.cols" "$WORK/mp.cols" | head -20 >&2 || true
     exit 1
 fi
 
-echo "chaos: OK — crash at step $FAULT resumed bit-identically"
+echo "chaos[mp]: OK — kill -9 + relaunch converged bit-identically over $STEPS steps"

@@ -18,6 +18,10 @@
 #   scripts/tier1.sh --chaos       # additionally run the crash/resume
 #                                  # smoke loop (scripts/chaos.sh; no-op
 #                                  # when cargo is absent)
+#   scripts/tier1.sh --chaos-mp    # additionally run the multi-process
+#                                  # kill -9/relaunch smoke loop
+#                                  # (scripts/chaos.sh --mp; no-op when
+#                                  # cargo is absent)
 #
 # When `cargo` is missing, scripts/toolchain.sh is invoked to bootstrap a
 # pinned toolchain (rustup; needs network on first run).
@@ -30,12 +34,14 @@ SCRIPT_DIR="$(cd "$(dirname "$0")" && pwd)"
 
 BENCH_DIFF=0
 CHAOS=0
+CHAOS_MP=0
 FAST=0
 for arg in "$@"; do
     case "$arg" in
         --fast) FAST=1 ;;
         --bench-diff) BENCH_DIFF=1 ;;
         --chaos) CHAOS=1 ;;
+        --chaos-mp) CHAOS_MP=1 ;;
         *) echo "tier1: unknown flag $arg" >&2; exit 64 ;;
     esac
 done
@@ -99,6 +105,11 @@ fi
 if [[ $CHAOS -eq 1 ]]; then
     echo "== chaos (crash/resume smoke: PALLAS_FAULT kill + --resume) =="
     "$SCRIPT_DIR/chaos.sh"
+fi
+
+if [[ $CHAOS_MP -eq 1 ]]; then
+    echo "== chaos-mp (multi-process smoke: kill -9 a worker + relaunch) =="
+    "$SCRIPT_DIR/chaos.sh" --mp
 fi
 
 echo "tier1: OK"
