@@ -9,6 +9,49 @@ use anyhow::{Context, Result};
 
 use crate::util::json::{obj, Json};
 
+/// Training-health state of a step as it lands in `steps.csv`: `ok`, or
+/// `fallback` while a sentinel escalation has linears demoted.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Health {
+    #[default]
+    Ok,
+    Fallback,
+}
+
+impl Health {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Health::Ok => "ok",
+            Health::Fallback => "fallback",
+        }
+    }
+}
+
+/// Byte-stable float formatting for CSV cells: non-finite values are
+/// pinned to the exact tokens `NaN` / `inf` / `-inf` (never locale- or
+/// version-dependent), finite values use Rust's shortest round-trip
+/// form.  [`parse_f32`] inverts it bit-exactly (one NaN payload).
+pub fn fmt_f32(x: f32) -> String {
+    if x.is_nan() {
+        "NaN".to_string()
+    } else if x == f32::INFINITY {
+        "inf".to_string()
+    } else if x == f32::NEG_INFINITY {
+        "-inf".to_string()
+    } else {
+        format!("{x}")
+    }
+}
+
+pub fn parse_f32(s: &str) -> Option<f32> {
+    match s {
+        "NaN" => Some(f32::NAN),
+        "inf" => Some(f32::INFINITY),
+        "-inf" => Some(f32::NEG_INFINITY),
+        _ => s.parse::<f32>().ok().filter(|v| v.is_finite()),
+    }
+}
+
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct StepRecord {
     pub step: u64,
@@ -17,6 +60,7 @@ pub struct StepRecord {
     /// 0 = low-precision stage, 1 = target-precision tail (§3.3).
     pub stage: u8,
     pub step_ms: f64,
+    pub health: Health,
 }
 
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -45,6 +89,15 @@ impl Metrics {
         self.evals.last()
     }
 
+    /// Drop records invalidated by a sentinel rollback to checkpoint
+    /// `step` (step records count *completed* steps `< step`; eval/ckpt
+    /// records are stamped with the completed-step count, so `<= step`
+    /// survives).  The replay then re-pushes identical rows.
+    pub fn truncate_from(&mut self, step: u64) {
+        self.steps.retain(|r| r.step < step);
+        self.evals.retain(|e| e.step <= step);
+    }
+
     /// Smoothed training loss over the trailing window.
     pub fn smoothed_loss(&self, window: usize) -> Option<f64> {
         if self.steps.is_empty() {
@@ -70,9 +123,18 @@ impl Metrics {
             std::fs::create_dir_all(dir)?;
         }
         let mut f = std::fs::File::create(path).with_context(|| format!("{path:?}"))?;
-        writeln!(f, "step,loss,grad_norm,stage,step_ms")?;
+        writeln!(f, "step,loss,grad_norm,stage,step_ms,health")?;
         for r in &self.steps {
-            writeln!(f, "{},{},{},{},{:.3}", r.step, r.loss, r.grad_norm, r.stage, r.step_ms)?;
+            writeln!(
+                f,
+                "{},{},{},{},{:.3},{}",
+                r.step,
+                fmt_f32(r.loss),
+                fmt_f32(r.grad_norm),
+                r.stage,
+                r.step_ms,
+                r.health.as_str()
+            )?;
         }
         Ok(())
     }
@@ -120,6 +182,7 @@ mod tests {
                 grad_norm: 1.0,
                 stage: (s >= 25) as u8,
                 step_ms: 10.0,
+                health: Health::Ok,
             });
         }
         m.push_eval(29, 3.0);
@@ -153,7 +216,52 @@ mod tests {
         m.write_csv(&p).unwrap();
         let content = std::fs::read_to_string(&p).unwrap();
         assert_eq!(content.lines().count(), 31); // header + 30
-        assert!(content.lines().nth(26).unwrap().ends_with(",1,10.000")); // stage flip
+        assert!(content.lines().nth(26).unwrap().ends_with(",1,10.000,ok")); // stage flip
+    }
+
+    #[test]
+    fn nonfinite_cells_are_byte_stable_and_roundtrip() {
+        // the exact bytes chaos-script comparisons will see
+        assert_eq!(fmt_f32(f32::NAN), "NaN");
+        assert_eq!(fmt_f32(f32::INFINITY), "inf");
+        assert_eq!(fmt_f32(f32::NEG_INFINITY), "-inf");
+        assert_eq!(fmt_f32(1.5), "1.5");
+        for x in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY, 0.0, -0.0, 1.5e-9, 3.25, f32::MAX] {
+            let back = parse_f32(&fmt_f32(x)).unwrap();
+            assert!(
+                back.to_bits() == x.to_bits() || (back.is_nan() && x.is_nan()),
+                "{x} -> {} -> {back}",
+                fmt_f32(x)
+            );
+        }
+        assert_eq!(parse_f32("nan"), None); // only the canonical casing
+        assert_eq!(parse_f32(""), None);
+
+        // a diverged run's rows land in the CSV with those exact tokens
+        let mut m = Metrics::default();
+        m.push_step(StepRecord {
+            step: 0,
+            loss: f32::NAN,
+            grad_norm: f32::INFINITY,
+            stage: 0,
+            step_ms: 1.0,
+            health: Health::Fallback,
+        });
+        let p = std::env::temp_dir().join("fp4metrics_nf").join("steps.csv");
+        m.write_csv(&p).unwrap();
+        let content = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(content.lines().nth(1).unwrap(), "0,NaN,inf,0,1.000,fallback");
+    }
+
+    #[test]
+    fn truncate_from_drops_rolled_back_records() {
+        let mut m = sample(); // steps 0..30, one eval at 29
+        m.truncate_from(29);
+        assert_eq!(m.steps.len(), 29);
+        assert_eq!(m.steps.last().unwrap().step, 28);
+        assert_eq!(m.evals.len(), 1); // eval stamped 29 = after step 28: survives
+        m.truncate_from(28);
+        assert!(m.evals.is_empty());
     }
 
     #[test]

@@ -18,11 +18,15 @@
 //! * `multiproc`  — multi-process data-parallel participants (the `worker`
 //!                  subcommand and `train --host --workers-external N`):
 //!                  lease claiming, barrier + merge, failover, catch-up.
+//! * `sentinel`   — training-health sentinel: per-step Healthy/Spike/
+//!                  NonFinite verdicts, deterministic rollback + batch
+//!                  skip-list, and FP4→FP8 precision fallback.
 
 pub mod checkpoint;
 pub mod dp;
 pub mod metrics;
 pub mod multiproc;
 pub mod runstore;
+pub mod sentinel;
 pub mod transport;
 pub mod trainer;

@@ -37,6 +37,26 @@
 //! recompute them for the *current* step under the same plan — the final
 //! params and per-step loss bits are byte-identical to an uninterrupted
 //! in-process run at the same shard count (`tests/orchestration.rs`).
+//!
+//! # Training health (sentinel)
+//!
+//! Only the coordinator classifies: after assembling the merged grads —
+//! and before publishing them — it runs `sentinel::Sentinel::classify`
+//! on (mean loss, merged grad norm).  An unhealthy verdict records an
+//! intervention in `state.json` *instead of* publishing, so a poisoned
+//! exchange never exists on disk; the coordinator then restores the
+//! latest checkpoint and replays.  Workers follow the verdict through
+//! the store: they refresh the skip list each poll, discard work
+//! published under a stale skip count (every shard/merged header carries
+//! an `nskips` stamp), and recompute the intervened step at its new data
+//! index — their params need no restore because the poisoned update was
+//! never applied anywhere.  Every participant feeds the same (loss,
+//! grad-norm) observations into its replica of the sentinel statistics,
+//! so a promoted coordinator classifies from identical state.  Shard
+//! files are also vetted for non-finite payloads pre-merge: a poisoned
+//! file is quarantined (journaled) and recomputed locally, and the
+//! recomputed slot bypasses the vet so a deterministic fault escalates
+//! to the merged-level sentinel instead of looping.
 
 use std::path::PathBuf;
 use std::time::Instant;
@@ -46,17 +66,19 @@ use anyhow::{bail, Context, Result};
 use crate::config::RunConfig;
 use crate::coordinator::checkpoint::{self, WeightCodec};
 use crate::coordinator::dp;
-use crate::coordinator::metrics::{Metrics, StepRecord};
+use crate::coordinator::metrics::{Health, Metrics, StepRecord};
 use crate::coordinator::runstore::{
     wall_ms, with_store, LeaseGrant, LeaseState, RunMeta, RunStatus, RunStore, StoreLock,
     CKPT_SUBDIR, RUN_FILE,
 };
+use crate::coordinator::sentinel::{self, Intervention, NumFault, Sentinel, Verdict};
 use crate::coordinator::transport;
 use crate::data::batcher::BatchScratch;
 use crate::refmodel::engine::{
-    compute_shard_grads, restore_into, snapshot, HostRunResult, TrainOptions, TrainSetup,
+    compute_shard_grads, restore_into, snapshot, AdamW, HParams, HostRunResult, TrainOptions,
+    TrainSetup,
 };
-use crate::refmodel::model::Grads;
+use crate::refmodel::model::{Grads, RefModel};
 use crate::refmodel::qlinear::Scratch;
 
 /// One multi-process participant's identity and knobs.  [`TrainOptions`]
@@ -111,6 +133,24 @@ struct Participant {
     stale_logged: std::collections::BTreeSet<(u64, usize, u64)>,
     last_beat_ms: u64,
     ckpt_every: u64,
+    /// Deterministic numeric fault injection (`PALLAS_NUMFAULT` /
+    /// `TrainOptions::numfaults`), keyed on data indices.
+    numfaults: Vec<NumFault>,
+    sentinel_on: bool,
+    /// This replica of the health classifier — every participant feeds
+    /// it identically, only the coordinator acts on its verdicts.
+    sentinel: Sentinel,
+    /// Local view of the store's intervention records + skip list,
+    /// refreshed by [`Participant::sync_store_view`].
+    interventions: Vec<Intervention>,
+    skips: Vec<u64>,
+    /// Last (stage 2?, demoted linears) applied to the model — precision
+    /// is recomputed per step from (step, interventions), not tracked as
+    /// an edge-triggered swap.
+    prec_state: Option<(bool, Vec<String>)>,
+    /// Set by a coordinator intervention: roll back to this checkpoint
+    /// step at the top of the next loop iteration.
+    pending_rollback: Option<u64>,
 }
 
 impl Participant {
@@ -128,6 +168,7 @@ impl Participant {
                 meta.external_coordinator = o.coordinator_only;
                 let mut s = RunStore::create(&dir, meta)?;
                 s.set_journal_cap(jcap);
+                s.record_preset_skips(&o.train.skips)?;
             }
             let mut s = RunStore::open(&dir)?;
             s.set_journal_cap(jcap);
@@ -185,7 +226,72 @@ impl Participant {
             stale_logged: std::collections::BTreeSet::new(),
             last_beat_ms: 0,
             ckpt_every,
+            numfaults: o.train.numfaults.clone(),
+            sentinel_on: !o.train.sentinel_off,
+            sentinel: Sentinel::new(o.train.sentinel_config()),
+            interventions: Vec::new(),
+            skips: Vec::new(),
+            prec_state: None,
+            pending_rollback: None,
         })
+    }
+
+    /// Refresh the local view of the store's skip list + intervention
+    /// records.  When another participant recorded an intervention, work
+    /// published this step carries a stale `nskips` stamp — discard it so
+    /// the next publish round recomputes at the shifted data indices.
+    fn sync_store_view(&mut self) -> Result<()> {
+        let (skips, ivs) =
+            self.tx(|s| Ok((s.skips().to_vec(), s.interventions().to_vec())))?;
+        if ivs.len() > self.interventions.len() {
+            log::info!(
+                "worker {} sees {} new intervention record(s) — discarding this step's \
+                 published shards",
+                self.me,
+                ivs.len() - self.interventions.len()
+            );
+            self.published.clear();
+            for slot in self.recomputed.iter_mut() {
+                *slot = None;
+            }
+        }
+        self.skips = skips;
+        self.interventions = ivs;
+        Ok(())
+    }
+
+    /// Recompute-or-apply the precision recipe for `step`: (stage 2?,
+    /// active demotions) derives purely from (step, intervention records),
+    /// so fresh attaches, checkpoint jumps, and rollbacks all converge to
+    /// identical packed bits.
+    fn apply_precision_for(&mut self, step: u64) {
+        let stage2 = step >= self.setup.stage1;
+        let want = (stage2, sentinel::active_demotions(&self.interventions, step));
+        if self.prec_state.as_ref() != Some(&want) {
+            let su = &mut self.setup;
+            let recipe = if stage2 { su.target.clone() } else { su.base.clone() };
+            su.model.apply_precision(recipe, &want.1);
+            self.prec_state = Some(want);
+        }
+    }
+
+    /// One shard's grads at data index `d`, with any registered numeric
+    /// fault applied — deterministic, so a recompute (corruption or
+    /// staleness recovery) reproduces the injected bytes exactly.
+    fn compute_faulted(&mut self, d: u64, shard: usize) -> (f32, Grads) {
+        let (mut loss, mut grads, b) = compute_shard_grads(
+            &self.setup.model,
+            &self.setup.ds,
+            d,
+            shard,
+            self.n_shards,
+            &mut self.sc,
+            &mut self.bscratch,
+            std::mem::take(&mut self.buf),
+        );
+        self.buf = b;
+        sentinel::apply_numfaults(&self.numfaults, d, &mut loss, &mut grads);
+        (loss, grads)
     }
 
     fn tx<R>(&self, f: impl FnOnce(&mut RunStore) -> Result<R>) -> Result<R> {
@@ -208,6 +314,17 @@ impl Participant {
             Ok((h, g)) => {
                 if h.step != step {
                     bail!("{}: merged header step {} != {step}", mpath.display(), h.step);
+                }
+                let expect = sentinel::nskips_at(&self.interventions, step);
+                if h.nskips != expect {
+                    // published under a different skip count: either our
+                    // intervention view is stale (sync will catch up) or
+                    // the file predates one — wait for the replacement
+                    log::debug!(
+                        "{}: skip-count stamp {} != expected {expect}; waiting",
+                        mpath.display(), h.nskips
+                    );
+                    return Ok(None);
                 }
                 Ok(Some((h.loss_bits, g)))
             }
@@ -259,6 +376,8 @@ impl Participant {
     }
 
     /// Compute + publish every held shard not yet published this step.
+    /// Batches are keyed on the *data index* (step shifted around skip
+    /// holes) and files are stamped with the current skip count.
     fn compute_and_publish(&mut self, step: u64) -> Result<()> {
         let todo: Vec<LeaseGrant> = self
             .grants
@@ -266,19 +385,11 @@ impl Participant {
             .filter(|g| !self.published.contains(&g.shard))
             .cloned()
             .collect();
+        let d = sentinel::data_index(step, &self.skips);
+        let nskips = sentinel::nskips_at(&self.interventions, step);
         for g in todo {
-            let (loss, grads, b) = compute_shard_grads(
-                &self.setup.model,
-                &self.setup.ds,
-                step,
-                g.shard,
-                self.n_shards,
-                &mut self.sc,
-                &mut self.bscratch,
-                std::mem::take(&mut self.buf),
-            );
-            self.buf = b;
-            transport::publish_shard(&self.dir, step, &g, loss, &grads)?;
+            let (loss, grads) = self.compute_faulted(d, g.shard);
+            transport::publish_shard(&self.dir, step, &g, loss, nskips, &grads)?;
             self.published.push(g.shard);
             self.heartbeat(step)?;
         }
@@ -330,12 +441,14 @@ impl Participant {
 
     /// Coordinator barrier for `step`: wait until every shard has either a
     /// transport file at its current lease fence or a local recompute,
-    /// then merge ascending-shard and publish `merged.grad`.
-    fn coordinate(&mut self, step: u64) -> Result<(u32, Grads)> {
+    /// then merge ascending-shard and publish `merged.grad`.  Returns
+    /// None when the sentinel intervened instead of publishing — the
+    /// caller re-enters its loop and handles the pending rollback.
+    fn coordinate(&mut self, step: u64) -> Result<Option<(u32, Grads)>> {
         loop {
             // a previous coordinator may have published before dying
             if let Some(out) = self.read_merged_opt(step)? {
-                return Ok(out);
+                return Ok(Some(out));
             }
             // expire the dead; in elected mode also claim + cover freed
             // shards ourselves (the dedicated coordinator computes nothing
@@ -399,9 +512,12 @@ impl Participant {
             }
             if ready {
                 if let Some(out) = self.try_merge(step, &picks)? {
-                    return Ok(out);
+                    return Ok(Some(out));
                 }
-                continue; // a corrupt file was recomputed; re-check
+                if self.pending_rollback.is_some() {
+                    return Ok(None); // sentinel intervened — no exchange
+                }
+                continue; // a corrupt/stale file was recomputed; re-check
             }
             self.heartbeat_if_due(step)?;
             std::thread::sleep(std::time::Duration::from_millis(self.poll_ms));
@@ -409,17 +525,26 @@ impl Participant {
     }
 
     /// Read every picked shard file, falling back to a deterministic local
-    /// recompute on checksum failure (journaled).  Returns None when a
-    /// corrupt file was replaced (the caller re-runs the readiness check),
-    /// Some((mean_loss_bits, merged)) once everything verified.
+    /// recompute (journaled) on checksum failure, a stale skip-count
+    /// stamp, or a non-finite payload.  Recomputed slots bypass those
+    /// vets: a deterministically poisoned shard escalates to the
+    /// merged-level sentinel instead of looping.  Returns None when a
+    /// file was replaced (the caller re-runs the readiness check) or the
+    /// sentinel intervened (`pending_rollback` set, no exchange
+    /// published); Some((mean_loss_bits, merged)) once everything
+    /// verified and classified healthy.
     fn try_merge(
         &mut self,
         step: u64,
         picks: &[(usize, u64, Option<PathBuf>)],
     ) -> Result<Option<(u32, Grads)>> {
+        let d = sentinel::data_index(step, &self.skips);
+        let nskips = sentinel::nskips_at(&self.interventions, step);
         let mut from_files: Vec<(usize, f32, Grads)> = Vec::new();
         for (shard, fence, file) in picks {
             let Some(path) = file else { continue };
+            // (journal event, detail) when the file cannot be used as-is
+            let mut problem: Option<(&'static str, String)> = None;
             match transport::read_shard(path, &self.setup.info) {
                 Ok((h, g)) => {
                     if h.step != step || h.shard != *shard || h.fence != *fence {
@@ -429,40 +554,53 @@ impl Participant {
                             path.display(), h.step, h.shard, h.fence
                         );
                     }
-                    from_files.push((*shard, f32::from_bits(h.loss_bits), g));
+                    let loss = f32::from_bits(h.loss_bits);
+                    if h.nskips != nskips {
+                        // published before an intervention shifted this
+                        // step's data index — recompute at the new one
+                        problem = Some((
+                            "stale_grad_skips",
+                            format!("skip-count stamp {} != current {nskips}", h.nskips),
+                        ));
+                    } else if !loss.is_finite()
+                        || g.flat().iter().any(|(_, v)| v.iter().any(|x| !x.is_finite()))
+                    {
+                        // non-finite payload: quarantine the file and
+                        // recompute — if the recompute is *also* poisoned
+                        // (deterministic divergence, not corruption), the
+                        // merged-level sentinel catches it below
+                        problem = Some((
+                            "numeric_quarantine",
+                            format!("non-finite shard payload (loss {})", loss),
+                        ));
+                    } else {
+                        from_files.push((*shard, loss, g));
+                    }
                 }
                 Err(e) => {
                     // checksum/geometry failure: journal, recompute the
-                    // shard locally (same params + same (step, shard) →
+                    // shard locally (same params + same (d, shard) →
                     // identical bytes), and retry the barrier
-                    log::warn!("corrupt grad file, recomputing shard {shard}: {e:#}");
-                    let path_s = path.display().to_string();
-                    let err_s = format!("{e:#}");
-                    self.tx(|s| {
-                        s.journal_event(
-                            "corrupt_grad",
-                            vec![
-                                ("step", (step as i64).into()),
-                                ("shard", (*shard).into()),
-                                ("file", path_s.as_str().into()),
-                                ("error", err_s.as_str().into()),
-                            ],
-                        )
-                    })?;
-                    let (loss, grads, b) = compute_shard_grads(
-                        &self.setup.model,
-                        &self.setup.ds,
-                        step,
-                        *shard,
-                        self.n_shards,
-                        &mut self.sc,
-                        &mut self.bscratch,
-                        std::mem::take(&mut self.buf),
-                    );
-                    self.buf = b;
-                    self.recomputed[*shard] = Some((*fence, loss, grads));
-                    return Ok(None);
+                    problem = Some(("corrupt_grad", format!("{e:#}")));
                 }
+            }
+            if let Some((event, detail)) = problem {
+                log::warn!("{event} on shard {shard} ({detail}); recomputing locally");
+                let path_s = path.display().to_string();
+                self.tx(|s| {
+                    s.journal_event(
+                        event,
+                        vec![
+                            ("step", (step as i64).into()),
+                            ("shard", (*shard).into()),
+                            ("file", path_s.as_str().into()),
+                            ("error", detail.as_str().into()),
+                        ],
+                    )
+                })?;
+                let (loss, grads) = self.compute_faulted(d, *shard);
+                self.recomputed[*shard] = Some((*fence, loss, grads));
+                return Ok(None);
             }
         }
         // every source verified — assemble ascending-shard, mirroring the
@@ -487,7 +625,20 @@ impl Participant {
         }
         let mean_loss = loss_sum / self.n_shards as f32;
         let merged = Grads::merge_mean(shard_grads);
-        transport::publish_merged(&self.dir, step, &contributors, mean_loss.to_bits(), &merged)?;
+        // classify BEFORE publishing: a poisoned exchange must never
+        // exist on disk, or a fast worker could apply it before the
+        // verdict lands
+        if self.sentinel_on {
+            let gnorm = AdamW::grad_norm(&merged);
+            let verdict = self.sentinel.classify(mean_loss, gnorm);
+            if !verdict.is_healthy() {
+                self.intervene(step, d, &verdict)?;
+                return Ok(None);
+            }
+        }
+        transport::publish_merged(
+            &self.dir, step, &contributors, mean_loss.to_bits(), nskips, &merged,
+        )?;
         let me = self.me.clone();
         self.tx(|s| {
             s.journal_event(
@@ -502,6 +653,86 @@ impl Participant {
         Ok(Some((mean_loss.to_bits(), merged)))
     }
 
+    /// Record an intervention for an unhealthy verdict at `step` (data
+    /// index `d`) and schedule the rollback.  Coordinator-only: workers
+    /// learn of the record through [`Participant::sync_store_view`].
+    fn intervene(&mut self, step: u64, d: u64, verdict: &Verdict) -> Result<()> {
+        let scfg = self.sentinel.cfg;
+        let rollback_to =
+            self.tx(|s| Ok(s.latest_checkpoint()))?.map(|(k, _)| k).unwrap_or(0);
+        let retry =
+            self.interventions.iter().filter(|iv| iv.rollback_to == rollback_to).count() as u32;
+        if retry > scfg.retries + 8 {
+            bail!(
+                "training cannot get past step {step} ({}): {retry} interventions at the \
+                 same rollback region (checkpoint {rollback_to}) — even the precision \
+                 fallback did not stabilize this run",
+                verdict.label()
+            );
+        }
+        let escalation = (retry >= scfg.retries).then(|| sentinel::Escalation {
+            linears: sentinel::implicated(&self.setup.model.saturation_rates()),
+            until_step: step + scfg.cooldown,
+        });
+        let iv = Intervention {
+            at_step: step,
+            data_step: d,
+            kind: verdict.label(),
+            rollback_to,
+            retry,
+            escalation,
+        };
+        log::warn!(
+            "sentinel: {} at step {step} -> rollback to {rollback_to}, skip data index {d} \
+             (retry {retry}{})",
+            iv.kind,
+            if iv.escalation.is_some() { ", escalating precision" } else { "" }
+        );
+        self.skips = self.tx(|s| {
+            s.record_intervention(&iv)?;
+            Ok(s.skips().to_vec())
+        })?;
+        self.interventions.push(iv);
+        // this step's published shards carry the old skip-count stamp
+        self.published.clear();
+        for slot in self.recomputed.iter_mut() {
+            *slot = None;
+        }
+        self.pending_rollback = Some(rollback_to);
+        Ok(())
+    }
+
+    /// Execute a scheduled rollback: restore the checkpoint at `c` (or
+    /// rebuild the initial state when `c` is 0 with no checkpoint yet),
+    /// reload the sentinel statistics snapshot, and truncate the local
+    /// metrics so the replay re-pushes identical rows.  Returns the step
+    /// to continue from.
+    fn do_rollback(&mut self, c: u64) -> Result<u64> {
+        let step = if let Some((ck_step, ck_path)) = self.tx(|s| Ok(s.latest_checkpoint()))? {
+            let ck = checkpoint::load(&ck_path)
+                .with_context(|| format!("sentinel rollback in run {}", self.dir.display()))?;
+            let su = &mut self.setup;
+            let got = restore_into(&mut su.model, &mut su.opt, &ck, &ck_path)?;
+            debug_assert_eq!(got, ck_step);
+            got
+        } else {
+            let su = &mut self.setup;
+            su.model = RefModel::new(su.info.clone(), su.base.clone(), self.cfg.seed);
+            su.opt = AdamW::new(&mut su.model, HParams::for_family(&su.info.family, self.cfg.steps));
+            self.prec_state = Some((false, Vec::new()));
+            0
+        };
+        debug_assert_eq!(step, c);
+        if let Some(st) = self.tx(|s| Ok(s.sentinel_stats().copied()))? {
+            self.sentinel.stats = st;
+        } else {
+            self.sentinel.stats = Default::default();
+        }
+        self.metrics.truncate_from(c);
+        log::warn!("participant {} rolled back to step {c} (sentinel intervention)", self.me);
+        Ok(step)
+    }
+
     /// Non-coordinator wait: poll for `merged.grad`, meanwhile claiming +
     /// recomputing any shards freed by a dead worker.  Returns None when
     /// the outer loop must re-evaluate: this worker got promoted to
@@ -509,6 +740,10 @@ impl Participant {
     /// checkpoint superseded the exchange it was waiting on.
     fn wait_for_merged(&mut self, step: u64) -> Result<Option<(u32, Grads)>> {
         loop {
+            // pick up intervention records before validating the exchange
+            // (a merged file stamped under the new skip count would
+            // otherwise look perpetually stale to this worker)
+            self.sync_store_view()?;
             if let Some(out) = self.read_merged_opt(step)? {
                 return Ok(Some(out));
             }
@@ -533,27 +768,32 @@ impl Participant {
 
     fn run(mut self) -> Result<HostRunResult> {
         // attach: restore the latest checkpoint if one exists (a fresh
-        // store has none and this is a no-op start at step 0)
+        // store has none and this is a no-op start at step 0), along
+        // with the sentinel statistics snapshot taken with it
         let mut step = 0u64;
+        self.sync_store_view()?;
         if let Some((ck_step, ck_path)) = self.tx(|s| Ok(s.latest_checkpoint()))? {
             let ck = checkpoint::load(&ck_path)
                 .with_context(|| format!("attaching to run {}", self.dir.display()))?;
             let su = &mut self.setup;
             step = restore_into(&mut su.model, &mut su.opt, &ck, &ck_path)?;
             debug_assert_eq!(step, ck_step);
+            if let Some(st) = self.tx(|s| Ok(s.sentinel_stats().copied()))? {
+                self.sentinel.stats = st;
+            }
             log::info!("worker {} attached at step {step} (checkpoint restore)", self.me);
         }
         let (stage1, steps) = (self.setup.stage1, self.cfg.steps);
-        if step >= stage1 && stage1 < steps {
-            let su = &mut self.setup;
-            su.model.set_recipe(su.target.clone());
-        }
 
         while step < steps {
-            if stage1 < steps && step == stage1 {
-                let su = &mut self.setup;
-                su.model.set_recipe(su.target.clone());
+            self.sync_store_view()?;
+            if let Some(c) = self.pending_rollback.take() {
+                step = self.do_rollback(c)?;
+                continue;
             }
+            // precision (stage + demotions) recomputed per step — this
+            // replaces the old edge-triggered stage-boundary recipe swap
+            self.apply_precision_for(step);
             if self.fault_at == Some(step) {
                 // kill -9 analog: record nothing but a best-effort audit
                 // marker; leases stay held until expire_stale frees them
@@ -581,9 +821,8 @@ impl Participant {
                 let su = &mut self.setup;
                 step = restore_into(&mut su.model, &mut su.opt, &ck, &ck_path)?;
                 debug_assert_eq!(step, ck_step);
-                if step >= stage1 && stage1 < steps {
-                    let su = &mut self.setup;
-                    su.model.set_recipe(su.target.clone());
+                if let Some(st) = self.tx(|s| Ok(s.sentinel_stats().copied()))? {
+                    self.sentinel.stats = st;
                 }
                 log::info!("worker {} jumped to checkpoint step {step} (exchange GC'd)", self.me);
                 continue;
@@ -592,7 +831,10 @@ impl Participant {
                 self.claim_shards()?;
                 self.compute_and_publish(step)?;
                 if self.is_coordinator() {
-                    self.coordinate(step)?
+                    match self.coordinate(step)? {
+                        Some(out) => out,
+                        None => continue, // sentinel intervened — re-enter
+                    }
                 } else {
                     match self.wait_for_merged(step)? {
                         Some(out) => out,
@@ -606,12 +848,21 @@ impl Participant {
             let loss = f32::from_bits(loss_bits);
             let gnorm = {
                 let su = &mut self.setup;
-                let gn = su.opt.step(&mut su.model, &merged);
+                let gn = su.opt.step(&mut su.model, &merged)?;
                 su.model.refresh_packed();
                 gn
             };
+            if self.sentinel_on {
+                // every replica absorbs the applied observation, so a
+                // promoted coordinator classifies from identical state
+                self.sentinel.observe(loss, gnorm);
+            }
             self.heartbeat(step)?;
             let stage2 = step >= stage1;
+            let health = match &self.prec_state {
+                Some((_, demoted)) if !demoted.is_empty() => Health::Fallback,
+                _ => Health::Ok,
+            };
             let ms = t0.elapsed().as_secs_f64() * 1000.0;
             self.metrics.push_step(StepRecord {
                 step,
@@ -619,6 +870,7 @@ impl Participant {
                 grad_norm: gnorm,
                 stage: stage2 as u8,
                 step_ms: ms,
+                health,
             });
             if (step + 1) % self.cfg.log_every == 0 || step + 1 == steps {
                 log::info!(
@@ -641,7 +893,8 @@ impl Participant {
                     snapshot(&mut su.model, &su.opt)
                 };
                 checkpoint::save(&ck, &self.dir.join(&rel), WeightCodec::F32)?;
-                self.tx(|s| s.record_checkpoint(step + 1, &rel))?;
+                let stats = self.sentinel_on.then(|| self.sentinel.stats);
+                self.tx(|s| s.record_checkpoint(step + 1, &rel, stats.as_ref()))?;
                 // exchanges below the checkpoint step are now redundant for
                 // catch-up (laggards jump to the checkpoint) — reclaim disk
                 transport::gc_steps_below(&self.dir, step + 1)?;
@@ -794,7 +1047,7 @@ mod tests {
         // a zombie's stale-fence file for shard 0 (fence 9 never granted):
         // scan must skip it by fence and journal it exactly once
         let zombie = LeaseGrant { shard: 0, worker: "ghost".into(), fence: 9 };
-        transport::publish_shard(&dir, 0, &zombie, 0.0, &Grads::zeros(&p.setup.info)).unwrap();
+        transport::publish_shard(&dir, 0, &zombie, 0.0, 0, &Grads::zeros(&p.setup.info)).unwrap();
 
         // bit-rot shard 1's real file: checksum must fail and the
         // coordinator must recompute that shard locally
@@ -803,7 +1056,7 @@ mod tests {
         let bytes = std::fs::read(&f1).unwrap();
         std::fs::write(&f1, &bytes[..bytes.len() - 7]).unwrap();
 
-        let (loss_bits, _merged) = p.coordinate(0).unwrap();
+        let (loss_bits, _merged) = p.coordinate(0).unwrap().expect("healthy step must merge");
         assert_eq!(
             loss_bits, ref_step0_bits,
             "merged loss must be bit-identical to the in-process engine despite \
@@ -829,6 +1082,39 @@ mod tests {
         assert!(file.contains("shard_001"), "{file}");
         let err = rec.get("error").and_then(|x| x.as_str()).unwrap();
         assert!(err.contains("checksum mismatch"), "{err}");
+    }
+
+    #[test]
+    fn nonfinite_shard_file_is_quarantined_and_recomputed() {
+        let root = tdir("quarantine");
+        let cfg = micro(&root, 2, 2);
+        let ref_res = train_host_with(&cfg, &TrainOptions::default()).unwrap();
+        let ref_step0_bits = ref_res.metrics.steps[0].loss.to_bits();
+
+        let dir = root.join("run");
+        let mut p = Participant::new(&cfg, &mp(&dir, "w0")).unwrap();
+        p.claim_shards().unwrap();
+        p.claim_shards().unwrap();
+        p.compute_and_publish(0).unwrap();
+
+        // overwrite shard 1's file with a NaN-poisoned payload at the
+        // CURRENT fence: checksum and fence both pass, only the vet can
+        // catch it
+        let g1 = p.grants.iter().find(|g| g.shard == 1).unwrap().clone();
+        let mut poison = Grads::zeros(&p.setup.info);
+        poison.wte[0] = f32::NAN;
+        transport::publish_shard(&dir, 0, &g1, f32::NAN, 0, &poison).unwrap();
+
+        let (loss_bits, _merged) = p.coordinate(0).unwrap().expect("recompute must heal");
+        assert_eq!(
+            loss_bits, ref_step0_bits,
+            "quarantined shard must be recomputed to the reference bits"
+        );
+        let events = journal_events(&dir);
+        assert!(events.iter().any(|e| e == "numeric_quarantine"), "{events:?}");
+        // the recompute healed the merge: no intervention was recorded
+        assert!(!events.iter().any(|e| e == "intervention"), "{events:?}");
+        assert!(RunStore::open(&dir).unwrap().interventions().is_empty());
     }
 
     #[test]

@@ -52,6 +52,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use super::sentinel::{Intervention, SentinelStats};
 use crate::config::RunConfig;
 use crate::util::fnv1a64;
 use crate::util::json::{obj, Json};
@@ -265,6 +266,18 @@ pub struct RunStore {
     latest: Option<CkptPointer>,
     resumes: u64,
     journal_cap: u64,
+    /// Sorted skipped data indices (sentinel interventions + presets).
+    /// Lives in `state.json`, never only the journal: compaction may drop
+    /// any journal line, and a late-joining worker replaying with a
+    /// missing skip would silently fork the data order.
+    skips: Vec<u64>,
+    /// Sentinel intervention records, in the order they fired (same
+    /// durability rule as `skips`).
+    interventions: Vec<Intervention>,
+    /// Sentinel statistics as of the latest checkpoint — restored on
+    /// rollback/resume so post-restore verdicts match an uninterrupted
+    /// run's bit-for-bit.
+    sentinel: Option<SentinelStats>,
 }
 
 impl RunStore {
@@ -300,6 +313,9 @@ impl RunStore {
             latest: None,
             resumes: 0,
             journal_cap: DEFAULT_JOURNAL_CAP,
+            skips: Vec::new(),
+            interventions: Vec::new(),
+            sentinel: None,
         };
         store.persist()?;
         store.journal("create", vec![("n_shards", store.meta.n_shards.into())])?;
@@ -355,6 +371,27 @@ impl RunStore {
             _ => None,
         };
         let resumes = j.get("resumes").and_then(|x| x.as_i64()).unwrap_or(0) as u64;
+        let skips: Vec<u64> = j
+            .get("skips")
+            .and_then(|x| x.as_arr())
+            .map(|a| a.iter().filter_map(|v| v.as_i64()).map(|v| v as u64).collect())
+            .unwrap_or_default();
+        let mut interventions = Vec::new();
+        for (i, ij) in
+            j.get("interventions").and_then(|x| x.as_arr()).unwrap_or(&[]).iter().enumerate()
+        {
+            interventions.push(
+                Intervention::from_json(ij)
+                    .with_context(|| format!("intervention {i} in {}", state_file.display()))?,
+            );
+        }
+        let sentinel = match j.get("sentinel") {
+            Some(s @ Json::Obj(_)) => Some(
+                SentinelStats::from_json(s)
+                    .with_context(|| format!("sentinel stats in {}", state_file.display()))?,
+            ),
+            _ => None,
+        };
         Ok(RunStore {
             dir: dir.to_path_buf(),
             meta,
@@ -363,6 +400,9 @@ impl RunStore {
             latest,
             resumes,
             journal_cap: DEFAULT_JOURNAL_CAP,
+            skips,
+            interventions,
+            sentinel,
         })
     }
 
@@ -540,12 +580,22 @@ impl RunStore {
         self.journal("shard_done", vec![("shard", grant.shard.into())])
     }
 
-    /// Flip the latest-checkpoint pointer.  Call *after*
-    /// `checkpoint::save` has renamed the file into place: a crash between
-    /// the two leaves the old pointer targeting an intact file (longer
-    /// replay, still bit-identical).
-    pub fn record_checkpoint(&mut self, step: u64, rel_file: &str) -> Result<()> {
+    /// Flip the latest-checkpoint pointer, snapshotting the sentinel
+    /// statistics that belong to it (None leaves the previous snapshot —
+    /// sentinel-off runs must not erase state a sentinel-on resume would
+    /// need).  Call *after* `checkpoint::save` has renamed the file into
+    /// place: a crash between the two leaves the old pointer targeting an
+    /// intact file (longer replay, still bit-identical).
+    pub fn record_checkpoint(
+        &mut self,
+        step: u64,
+        rel_file: &str,
+        stats: Option<&SentinelStats>,
+    ) -> Result<()> {
         self.latest = Some(CkptPointer { step, file: rel_file.to_string() });
+        if let Some(s) = stats {
+            self.sentinel = Some(*s);
+        }
         self.persist()?;
         self.journal(
             "checkpoint",
@@ -556,6 +606,71 @@ impl RunStore {
     /// Latest checkpoint as (step, absolute path), if any was recorded.
     pub fn latest_checkpoint(&self) -> Option<(u64, PathBuf)> {
         self.latest.as_ref().map(|p| (p.step, self.dir.join(&p.file)))
+    }
+
+    /// Sorted skipped data indices (presets + interventions).
+    pub fn skips(&self) -> &[u64] {
+        &self.skips
+    }
+
+    /// Sentinel intervention records in firing order.
+    pub fn interventions(&self) -> &[Intervention] {
+        &self.interventions
+    }
+
+    /// Sentinel statistics as of the latest checkpoint.
+    pub fn sentinel_stats(&self) -> Option<&SentinelStats> {
+        self.sentinel.as_ref()
+    }
+
+    /// Durably record one sentinel intervention: the record and its skip
+    /// land in `state.json` (journal compaction can never drop them) and
+    /// the journal gets an audit line.
+    pub fn record_intervention(&mut self, iv: &Intervention) -> Result<()> {
+        self.interventions.push(iv.clone());
+        if let Err(pos) = self.skips.binary_search(&iv.data_step) {
+            self.skips.insert(pos, iv.data_step);
+        }
+        self.persist()?;
+        self.journal(
+            "intervention",
+            vec![
+                ("at_step", (iv.at_step as i64).into()),
+                ("data_step", (iv.data_step as i64).into()),
+                ("kind", iv.kind.as_str().into()),
+                ("rollback_to", (iv.rollback_to as i64).into()),
+                ("retry", (iv.retry as i64).into()),
+                (
+                    "demoted",
+                    match &iv.escalation {
+                        None => Json::Null,
+                        Some(e) => Json::Arr(
+                            e.linears.iter().map(|n| Json::Str(n.clone())).collect(),
+                        ),
+                    },
+                ),
+            ],
+        )
+    }
+
+    /// Seed the skip list at run creation (`TrainOptions::skips` — the
+    /// clean-reference arm of the bit-identity tests trains directly on a
+    /// post-skip data order).
+    pub fn record_preset_skips(&mut self, skips: &[u64]) -> Result<()> {
+        if skips.is_empty() {
+            return Ok(());
+        }
+        self.skips.extend_from_slice(skips);
+        self.skips.sort_unstable();
+        self.skips.dedup();
+        self.persist()?;
+        self.journal(
+            "preset_skips",
+            vec![(
+                "skips",
+                Json::Arr(self.skips.iter().map(|&s| Json::from(s as i64)).collect()),
+            )],
+        )
     }
 
     /// Best-effort crash marker (audit only — resume never depends on it,
@@ -633,6 +748,18 @@ impl RunStore {
             ("status", self.status.name().into()),
             ("resumes", (self.resumes as i64).into()),
             ("latest", latest),
+            (
+                "skips",
+                Json::Arr(self.skips.iter().map(|&s| Json::from(s as i64)).collect()),
+            ),
+            (
+                "interventions",
+                Json::Arr(self.interventions.iter().map(|iv| iv.to_json()).collect()),
+            ),
+            (
+                "sentinel",
+                self.sentinel.as_ref().map(|s| s.to_json()).unwrap_or(Json::Null),
+            ),
             ("leases", Json::Arr(leases)),
         ]);
         write_atomic(&self.dir.join(STATE_FILE), &state.to_string_pretty())
@@ -818,7 +945,7 @@ mod tests {
         let d = tdir("roundtrip");
         let m = meta(2);
         let mut s = RunStore::create(&d, m.clone()).unwrap();
-        s.record_checkpoint(4, "ckpt/step_000004.ckpt").unwrap();
+        s.record_checkpoint(4, "ckpt/step_000004.ckpt", None).unwrap();
         drop(s);
         let s2 = RunStore::open(&d).unwrap();
         assert_eq!(*s2.meta(), m);
@@ -958,7 +1085,7 @@ mod tests {
         let mut s = RunStore::create(&d, meta(1)).unwrap();
         let g = s.acquire("w0", 10).unwrap().unwrap();
         s.heartbeat(&g, 0, 20).unwrap();
-        s.record_checkpoint(2, "ckpt/step_000002.ckpt").unwrap();
+        s.record_checkpoint(2, "ckpt/step_000002.ckpt", None).unwrap();
         s.record_fault(3, "PALLAS_FAULT").unwrap();
         let events: Vec<String> = s
             .read_journal()
@@ -1007,6 +1134,50 @@ mod tests {
         let last = events.last().unwrap();
         assert_eq!(last.get("event").unwrap().as_str(), Some("heartbeat"));
         assert_eq!(last.get("step").unwrap().as_i64(), Some(199));
+    }
+
+    #[test]
+    fn compaction_never_drops_intervention_or_skip_records() {
+        use super::super::sentinel::{Escalation, Intervention};
+        let d = tdir("jcap_interventions");
+        let mut s = RunStore::create(&d, meta(1)).unwrap();
+        let cap = 600u64;
+        s.set_journal_cap(cap);
+        s.record_preset_skips(&[2]).unwrap();
+        let iv = Intervention {
+            at_step: 5,
+            data_step: 6,
+            kind: "nonfinite:loss".into(),
+            rollback_to: 4,
+            retry: 0,
+            escalation: Some(Escalation { linears: vec!["fc1.0".into()], until_step: 69 }),
+        };
+        s.record_intervention(&iv).unwrap();
+        // hammer the journal far past the cap so the intervention and
+        // preset_skips audit lines are compacted away...
+        let g = s.acquire("w0", 10).unwrap().unwrap();
+        for step in 1..200u64 {
+            s.heartbeat(&g, step, 20 + step).unwrap();
+        }
+        let events = s.read_journal().unwrap();
+        assert_eq!(events[0].get("event").unwrap().as_str(), Some("compacted"));
+        assert!(
+            events.iter().all(|j| j.get("event").unwrap().as_str() != Some("intervention")),
+            "test needs the journal line actually compacted away"
+        );
+        // ...yet a late-joining worker reopening the store still sees the
+        // full record and skip list: they live in state.json.
+        let s2 = RunStore::open(&d).unwrap();
+        assert_eq!(s2.skips(), &[2, 6]);
+        assert_eq!(s2.interventions(), &[iv]);
+        // and sentinel stats snapshot round-trips with the checkpoint
+        let mut stats = crate::coordinator::sentinel::SentinelStats::default();
+        stats.loss.observe(3.5, 4);
+        stats.gnorm.observe(0.75, 4);
+        let mut s2 = s2;
+        s2.record_checkpoint(6, "ckpt/step_000006.ckpt", Some(&stats)).unwrap();
+        let s3 = RunStore::open(&d).unwrap();
+        assert_eq!(s3.sentinel_stats(), Some(&stats));
     }
 
     #[test]

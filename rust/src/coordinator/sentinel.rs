@@ -1,0 +1,619 @@
+//! Training-health sentinel: numerical-divergence detection and the
+//! deterministic intervention policy behind it (rollback, batch skip,
+//! precision fallback) — the numerics twin of the process-fault tolerance
+//! in `runstore`/`multiproc`.
+//!
+//! The paper's premise (§3.1–3.3) is that FP4's dynamic range makes
+//! pre-training fragile and that stability comes from *reacting* with
+//! mixed precision.  This module supplies the reaction layer:
+//!
+//! * **Verdicts** — every step's `(loss, global grad norm)` pair is
+//!   classified [`Verdict::NonFinite`] (any NaN/inf), [`Verdict::Spike`]
+//!   (robust z-score above the threshold after warmup), or
+//!   [`Verdict::Healthy`].  The z-score uses an EMA median + MAD pair
+//!   ([`RobustStat`]) so a genuine divergence cannot drag its own
+//!   baseline along (deviations are huberized after warmup).
+//! * **Skip-list determinism** — an intervention skips the offending
+//!   batch window by appending its *data index* to a skip list persisted
+//!   in the run store's `state.json`.  [`data_index`] maps loop steps to
+//!   data indices around the holes, so a resumed run and every
+//!   multi-process replica replay the identical post-skip data order.
+//! * **Escalation** — after a bounded number of retries at the same
+//!   rollback region, the implicated linears (highest quantizer
+//!   saturation, surfaced from `kernels::fused::count_saturated`) are
+//!   demoted FP4 → FP8 for a cooldown window ([`Escalation`]), mirroring
+//!   the paper's mixed-precision fallback.  The decision is *recorded*,
+//!   never recomputed: replays and late-joining workers apply the record.
+//! * **Fault injection** — `PALLAS_NUMFAULT=<step>:<nan|spike>` poisons
+//!   the gradients of a chosen *data index* deterministically, so the
+//!   whole detect → rollback → escalate pipeline is testable end-to-end
+//!   (the injection is keyed on the data index: once the window is
+//!   skipped, the fault can never re-fire).
+//!
+//! Who classifies: the in-process engine classifies its own merged
+//! grads; in multi-process runs only the coordinator classifies (workers
+//! follow the recorded verdict), but *every* participant feeds the same
+//! observations into its replica of the statistics, so a promoted
+//! coordinator carries identical state.  See `docs/ARCHITECTURE.md`
+//! "Training health".
+
+use anyhow::{anyhow, Result};
+
+use crate::refmodel::model::Grads;
+use crate::util::json::{obj, Json};
+
+/// Sentinel knobs (`--spike-window`, `--spike-zscore`,
+/// `--rollback-retries`, `--fallback-cooldown`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SentinelConfig {
+    /// Observations before spike detection arms (EMA window; the robust
+    /// stats warm up with plain EMA updates until then).
+    pub window: u64,
+    /// One-sided robust z-score threshold for a spike verdict.
+    pub zscore: f32,
+    /// Interventions tolerated at one rollback region before the recipe
+    /// escalates (demotion of the implicated linears).
+    pub retries: u32,
+    /// Steps a demotion stays active after its intervention.
+    pub cooldown: u64,
+}
+
+impl Default for SentinelConfig {
+    fn default() -> SentinelConfig {
+        SentinelConfig { window: 32, zscore: 8.0, retries: 2, cooldown: 64 }
+    }
+}
+
+/// Streaming robust location/spread estimate: EMA median + EMA MAD.
+/// Deviations are clamped to ±3 scaled MADs once warmed up, so a
+/// divergence spike barely moves the baseline it is measured against.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RobustStat {
+    pub med: f32,
+    pub mad: f32,
+    /// Observations absorbed (drives warmup).
+    pub n: u64,
+}
+
+/// 1.4826 · MAD ≈ σ for a normal distribution; the epsilon keeps the
+/// z-score finite for constant signals.
+fn mad_scale(mad: f32) -> f32 {
+    1.4826 * mad + 1e-6
+}
+
+impl RobustStat {
+    pub fn observe(&mut self, x: f32, window: u64) {
+        if self.n == 0 {
+            self.med = x;
+            self.mad = 0.0;
+            self.n = 1;
+            return;
+        }
+        let alpha = 2.0 / (window as f32 + 1.0);
+        let mut dev = x - self.med;
+        if self.n >= window {
+            let cap = 3.0 * mad_scale(self.mad);
+            dev = dev.clamp(-cap, cap);
+        }
+        self.med += alpha * dev;
+        self.mad += alpha * (dev.abs() - self.mad);
+        self.n += 1;
+    }
+
+    /// One-sided (upward) robust z-score; None until warmed up.
+    pub fn zscore(&self, x: f32, window: u64) -> Option<f32> {
+        if self.n < window {
+            None
+        } else {
+            Some((x - self.med) / mad_scale(self.mad))
+        }
+    }
+}
+
+/// The sentinel's full rolling state — persisted alongside each
+/// checkpoint pointer so a rollback (or a promoted coordinator) resumes
+/// the statistics exactly where the checkpointed trajectory left them.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SentinelStats {
+    pub loss: RobustStat,
+    pub gnorm: RobustStat,
+}
+
+impl SentinelStats {
+    /// f32s travel as raw bit patterns (exact in JSON's f64 integers) —
+    /// a decimal round-trip could perturb the warmed statistics and
+    /// desynchronize post-rollback verdicts from a clean run's.
+    pub fn to_json(&self) -> Json {
+        let stat = |s: &RobustStat, p: &str| {
+            vec![
+                (format!("{p}_med_bits"), Json::Num(s.med.to_bits() as f64)),
+                (format!("{p}_mad_bits"), Json::Num(s.mad.to_bits() as f64)),
+                (format!("{p}_n"), Json::Num(s.n as f64)),
+            ]
+        };
+        let mut kvs = stat(&self.loss, "loss");
+        kvs.extend(stat(&self.gnorm, "gnorm"));
+        Json::Obj(kvs)
+    }
+
+    pub fn from_json(j: &Json) -> Result<SentinelStats> {
+        let stat = |p: &str| -> Result<RobustStat> {
+            let bits = |k: &str| -> Result<u32> {
+                j.get(&format!("{p}_{k}"))
+                    .and_then(|x| x.as_i64())
+                    .map(|v| v as u32)
+                    .ok_or_else(|| anyhow!("sentinel stats missing `{p}_{k}`"))
+            };
+            Ok(RobustStat {
+                med: f32::from_bits(bits("med_bits")?),
+                mad: f32::from_bits(bits("mad_bits")?),
+                n: j.get(&format!("{p}_n")).and_then(|x| x.as_i64()).unwrap_or(0) as u64,
+            })
+        };
+        Ok(SentinelStats { loss: stat("loss")?, gnorm: stat("gnorm")? })
+    }
+}
+
+/// Per-step health classification.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Verdict {
+    Healthy,
+    /// Finite but anomalous: robust z-score above the threshold.
+    Spike { signal: &'static str, z: f32 },
+    /// NaN or ±inf in the loss or the global grad norm.
+    NonFinite { signal: &'static str },
+}
+
+impl Verdict {
+    pub fn is_healthy(&self) -> bool {
+        matches!(self, Verdict::Healthy)
+    }
+
+    /// Journal/record label, e.g. `nonfinite:loss`, `spike:grad_norm`.
+    pub fn label(&self) -> String {
+        match self {
+            Verdict::Healthy => "healthy".into(),
+            Verdict::Spike { signal, .. } => format!("spike:{signal}"),
+            Verdict::NonFinite { signal } => format!("nonfinite:{signal}"),
+        }
+    }
+}
+
+/// The classifier: non-finite checks plus rolling robust z-scores over
+/// the loss and the global grad norm.
+pub struct Sentinel {
+    pub cfg: SentinelConfig,
+    pub stats: SentinelStats,
+}
+
+impl Sentinel {
+    pub fn new(cfg: SentinelConfig) -> Sentinel {
+        Sentinel { cfg, stats: SentinelStats::default() }
+    }
+
+    /// Classify one step's observations WITHOUT updating the statistics
+    /// (call [`Sentinel::observe`] only after a Healthy verdict is
+    /// applied, so an anomaly never contaminates its own baseline).
+    pub fn classify(&self, loss: f32, gnorm: f32) -> Verdict {
+        if !loss.is_finite() {
+            return Verdict::NonFinite { signal: "loss" };
+        }
+        if !gnorm.is_finite() {
+            return Verdict::NonFinite { signal: "grad_norm" };
+        }
+        let w = self.cfg.window;
+        for (signal, stat, x) in
+            [("loss", &self.stats.loss, loss), ("grad_norm", &self.stats.gnorm, gnorm)]
+        {
+            if let Some(z) = stat.zscore(x, w) {
+                if z > self.cfg.zscore {
+                    return Verdict::Spike { signal, z };
+                }
+            }
+        }
+        Verdict::Healthy
+    }
+
+    pub fn observe(&mut self, loss: f32, gnorm: f32) {
+        self.stats.loss.observe(loss, self.cfg.window);
+        self.stats.gnorm.observe(gnorm, self.cfg.window);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Skip-list determinism
+
+/// Map a loop step to the data index it trains on, given the sorted skip
+/// list: each skipped data index `<=` the running position shifts it up
+/// by one.  Pure and order-stable: a skip recorded at step `k` never
+/// changes the mapping of any step `< k` (the skipped index is itself
+/// `>= k`), which is what keeps already-published exchanges and
+/// checkpoints valid across an intervention.
+pub fn data_index(step: u64, skips: &[u64]) -> u64 {
+    debug_assert!(skips.windows(2).all(|w| w[0] <= w[1]), "skip list must be sorted");
+    let mut d = step;
+    for &skip in skips {
+        if skip <= d {
+            d += 1;
+        }
+    }
+    d
+}
+
+/// How many interventions affect steps `<= step` — the staleness stamp
+/// (`nskips`) carried by every transport file: a shard/merged file is
+/// valid for `step` iff it was computed under the same count.
+pub fn nskips_at(interventions: &[Intervention], step: u64) -> u64 {
+    interventions.iter().filter(|iv| iv.at_step <= step).count() as u64
+}
+
+// ---------------------------------------------------------------------------
+// Intervention records
+
+/// A recipe escalation riding on an intervention: the named linears run
+/// demoted (`LinearPrec::demoted`, FP4 → FP8) until `until_step`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Escalation {
+    /// Linear names in model order (`qkv.0`, `fc2.3`, …).
+    pub linears: Vec<String>,
+    pub until_step: u64,
+}
+
+/// One recorded intervention — the durable unit of the policy.  Lives in
+/// `state.json` (never only the journal: compaction must not be able to
+/// drop it) and is applied, never re-derived, on replay.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Intervention {
+    /// Loop step the verdict fired at (and the first step it affects).
+    pub at_step: u64,
+    /// The skipped data index ([`data_index`] of `at_step` at the time).
+    pub data_step: u64,
+    /// Verdict label (`nonfinite:loss`, `spike:grad_norm`, …).
+    pub kind: String,
+    /// Checkpoint step the run rolled back to (0 = from scratch).
+    pub rollback_to: u64,
+    /// How many prior interventions shared this rollback region.
+    pub retry: u32,
+    pub escalation: Option<Escalation>,
+}
+
+impl Intervention {
+    pub fn to_json(&self) -> Json {
+        let esc = match &self.escalation {
+            None => Json::Null,
+            Some(e) => obj(vec![
+                (
+                    "linears",
+                    Json::Arr(e.linears.iter().map(|n| Json::Str(n.clone())).collect()),
+                ),
+                ("until_step", (e.until_step as i64).into()),
+            ]),
+        };
+        obj(vec![
+            ("at_step", (self.at_step as i64).into()),
+            ("data_step", (self.data_step as i64).into()),
+            ("kind", self.kind.as_str().into()),
+            ("rollback_to", (self.rollback_to as i64).into()),
+            ("retry", (self.retry as i64).into()),
+            ("escalation", esc),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Intervention> {
+        let u = |k: &str| -> Result<u64> {
+            j.get(k)
+                .and_then(|x| x.as_i64())
+                .map(|v| v as u64)
+                .ok_or_else(|| anyhow!("intervention record missing `{k}`"))
+        };
+        let escalation = match j.get("escalation") {
+            None | Some(Json::Null) => None,
+            Some(e) => Some(Escalation {
+                linears: e
+                    .get("linears")
+                    .and_then(|x| x.as_arr())
+                    .map(|a| {
+                        a.iter().filter_map(|n| n.as_str().map(str::to_string)).collect()
+                    })
+                    .unwrap_or_default(),
+                until_step: e.get("until_step").and_then(|x| x.as_i64()).unwrap_or(0) as u64,
+            }),
+        };
+        Ok(Intervention {
+            at_step: u("at_step")?,
+            data_step: u("data_step")?,
+            kind: j.get("kind").and_then(|x| x.as_str()).unwrap_or("?").to_string(),
+            rollback_to: u("rollback_to")?,
+            retry: u("retry")? as u32,
+            escalation,
+        })
+    }
+}
+
+/// The union of demoted linear names active at `step`, sorted + deduped
+/// (every participant computes the identical set from the records).
+pub fn active_demotions(interventions: &[Intervention], step: u64) -> Vec<String> {
+    let mut out: Vec<String> = Vec::new();
+    for iv in interventions {
+        if let Some(esc) = &iv.escalation {
+            if iv.at_step <= step && step < esc.until_step {
+                out.extend(esc.linears.iter().cloned());
+            }
+        }
+    }
+    out.sort();
+    out.dedup();
+    out
+}
+
+/// Implication rule for escalation: the linears whose quantizer
+/// saturation rate is at least half the maximum observed rate — or all
+/// of them when every rate is zero (no signal to discriminate on).
+pub fn implicated(rates: &[(String, f32)]) -> Vec<String> {
+    let max = rates.iter().map(|(_, r)| *r).fold(0.0f32, f32::max);
+    rates
+        .iter()
+        .filter(|(_, r)| max <= 0.0 || *r >= 0.5 * max)
+        .map(|(n, _)| n.clone())
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Deterministic numeric fault injection
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum NumFaultKind {
+    /// NaN loss + one NaN gradient element.
+    Nan,
+    /// Finite blow-up: loss ×4, every gradient element ×1e4.
+    Spike,
+}
+
+/// One injected numeric fault, keyed on the **data index** (not the loop
+/// step): once the sentinel skips the window, the fault cannot re-fire —
+/// which is exactly what makes the recovered run equivalent to a clean
+/// run on the post-skip data order.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NumFault {
+    pub at: u64,
+    pub kind: NumFaultKind,
+}
+
+/// Parse `<step>:<nan|spike>[,<step>:<kind>...]`; None when any token is
+/// malformed (the whole spec is then ignored, like `PALLAS_FAULT`).
+pub fn parse_numfaults(spec: &str) -> Option<Vec<NumFault>> {
+    let mut out = Vec::new();
+    for token in spec.split(',') {
+        let token = token.trim();
+        if token.is_empty() {
+            continue;
+        }
+        let (step, kind) = token.split_once(':')?;
+        let at = step.trim().parse::<u64>().ok()?;
+        let kind = match kind.trim() {
+            "nan" => NumFaultKind::Nan,
+            "spike" => NumFaultKind::Spike,
+            _ => return None,
+        };
+        out.push(NumFault { at, kind });
+    }
+    Some(out)
+}
+
+/// Deterministic numeric fault injection from the environment, matching
+/// the `PALLAS_FAULT` idiom (re-read per call, unset/unparsable = none).
+pub fn numfaults_from_env() -> Vec<NumFault> {
+    std::env::var("PALLAS_NUMFAULT")
+        .ok()
+        .and_then(|v| parse_numfaults(&v))
+        .unwrap_or_default()
+}
+
+/// Apply the first fault registered for `data_step` to this step's loss
+/// and gradients (a shard's or the merged set — deterministic either
+/// way, so a recompute reproduces the injected bytes exactly).
+pub fn apply_numfaults(
+    faults: &[NumFault],
+    data_step: u64,
+    loss: &mut f32,
+    grads: &mut Grads,
+) -> Option<NumFaultKind> {
+    let f = faults.iter().find(|f| f.at == data_step)?;
+    match f.kind {
+        NumFaultKind::Nan => {
+            *loss = f32::NAN;
+            if let Some((_, buf)) = grads.flat_mut().into_iter().next() {
+                if let Some(v) = buf.first_mut() {
+                    *v = f32::NAN;
+                }
+            }
+        }
+        NumFaultKind::Spike => {
+            *loss *= 4.0;
+            for (_, buf) in grads.flat_mut() {
+                for v in buf.iter_mut() {
+                    *v *= 1e4;
+                }
+            }
+        }
+    }
+    Some(f.kind)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn data_index_shifts_only_at_and_after_skips() {
+        assert_eq!(data_index(4, &[5]), 4);
+        assert_eq!(data_index(5, &[5]), 6);
+        assert_eq!(data_index(6, &[5]), 7);
+        // adjacent holes compound
+        assert_eq!(data_index(5, &[5, 6]), 7);
+        assert_eq!(data_index(7, &[5, 6]), 9);
+        // no skips = identity
+        assert_eq!(data_index(123, &[]), 123);
+        // a skip recorded at step k maps k to a fresh index >= k + 1
+        for k in [0u64, 3, 17] {
+            let d = data_index(k, &[]);
+            assert_eq!(data_index(k, &[d]), d + 1);
+        }
+    }
+
+    #[test]
+    fn classifier_flags_nonfinite_immediately() {
+        let s = Sentinel::new(SentinelConfig::default());
+        assert_eq!(s.classify(f32::NAN, 1.0), Verdict::NonFinite { signal: "loss" });
+        assert_eq!(
+            s.classify(1.0, f32::INFINITY),
+            Verdict::NonFinite { signal: "grad_norm" }
+        );
+        assert!(s.classify(1.0, 1.0).is_healthy());
+    }
+
+    #[test]
+    fn no_spike_verdicts_during_warmup() {
+        let mut s = Sentinel::new(SentinelConfig { window: 8, zscore: 4.0, ..Default::default() });
+        for i in 0..7 {
+            // wild swings during warmup must classify Healthy
+            let x = if i % 2 == 0 { 1.0 } else { 100.0 };
+            assert!(s.classify(x, x).is_healthy(), "warmup obs {i}");
+            s.observe(x, x);
+        }
+    }
+
+    #[test]
+    fn spike_detected_after_warmup_and_baseline_resists_outliers() {
+        let cfg = SentinelConfig { window: 8, zscore: 6.0, ..Default::default() };
+        let mut s = Sentinel::new(cfg);
+        for i in 0..32 {
+            let x = 5.0 + 0.01 * (i % 3) as f32; // quiet signal with tiny jitter
+            assert!(s.classify(x, 1.0).is_healthy(), "obs {i}");
+            s.observe(x, 1.0);
+        }
+        match s.classify(500.0, 1.0) {
+            Verdict::Spike { signal: "loss", z } => assert!(z > 6.0, "z={z}"),
+            v => panic!("expected loss spike, got {v:?}"),
+        }
+        match s.classify(5.0, 1e6) {
+            Verdict::Spike { signal: "grad_norm", .. } => {}
+            v => panic!("expected grad_norm spike, got {v:?}"),
+        }
+        // downward moves are not divergence
+        assert!(s.classify(0.01, 1.0).is_healthy());
+    }
+
+    #[test]
+    fn stats_json_roundtrip_is_bit_exact() {
+        let mut s = Sentinel::new(SentinelConfig { window: 4, ..Default::default() });
+        for i in 0..9 {
+            s.observe(5.0 + 0.3 * i as f32, 1.0 + 0.07 * i as f32);
+        }
+        let j = s.stats.to_json();
+        let back = SentinelStats::from_json(&Json::parse(&j.to_string_compact()).unwrap()).unwrap();
+        assert_eq!(back.loss.med.to_bits(), s.stats.loss.med.to_bits());
+        assert_eq!(back.loss.mad.to_bits(), s.stats.loss.mad.to_bits());
+        assert_eq!(back.gnorm.med.to_bits(), s.stats.gnorm.med.to_bits());
+        assert_eq!(back.gnorm.mad.to_bits(), s.stats.gnorm.mad.to_bits());
+        assert_eq!((back.loss.n, back.gnorm.n), (9, 9));
+    }
+
+    #[test]
+    fn intervention_json_roundtrip_keeps_escalation() {
+        let iv = Intervention {
+            at_step: 17,
+            data_step: 19,
+            kind: "spike:grad_norm".into(),
+            rollback_to: 16,
+            retry: 2,
+            escalation: Some(Escalation {
+                linears: vec!["fc1.0".into(), "fc2.3".into()],
+                until_step: 81,
+            }),
+        };
+        let j = Json::parse(&iv.to_json().to_string_compact()).unwrap();
+        assert_eq!(Intervention::from_json(&j).unwrap(), iv);
+        let plain = Intervention { escalation: None, ..iv };
+        let j = Json::parse(&plain.to_json().to_string_compact()).unwrap();
+        assert_eq!(Intervention::from_json(&j).unwrap(), plain);
+    }
+
+    #[test]
+    fn demotions_active_only_inside_their_window() {
+        let iv = |at: u64, until: u64, name: &str| Intervention {
+            at_step: at,
+            data_step: at,
+            kind: "spike:loss".into(),
+            rollback_to: 0,
+            retry: 0,
+            escalation: Some(Escalation { linears: vec![name.into()], until_step: until }),
+        };
+        let ivs = vec![iv(4, 10, "fc1.0"), iv(8, 12, "fc1.0"), iv(8, 12, "qkv.1")];
+        assert!(active_demotions(&ivs, 3).is_empty());
+        assert_eq!(active_demotions(&ivs, 4), vec!["fc1.0".to_string()]);
+        assert_eq!(active_demotions(&ivs, 9), vec!["fc1.0".to_string(), "qkv.1".to_string()]);
+        assert_eq!(active_demotions(&ivs, 11), vec!["fc1.0".to_string(), "qkv.1".to_string()]);
+        assert!(active_demotions(&ivs, 12).is_empty());
+        assert_eq!(nskips_at(&ivs, 3), 0);
+        assert_eq!(nskips_at(&ivs, 4), 1);
+        assert_eq!(nskips_at(&ivs, 8), 3);
+    }
+
+    #[test]
+    fn implication_takes_top_half_or_everyone() {
+        let rates = vec![
+            ("qkv.0".to_string(), 0.01f32),
+            ("fc1.0".to_string(), 0.20),
+            ("fc2.0".to_string(), 0.12),
+        ];
+        assert_eq!(implicated(&rates), vec!["fc1.0".to_string(), "fc2.0".to_string()]);
+        let flat = vec![("a".to_string(), 0.0f32), ("b".to_string(), 0.0)];
+        assert_eq!(implicated(&flat), vec!["a".to_string(), "b".to_string()]);
+        assert!(implicated(&[]).is_empty());
+    }
+
+    #[test]
+    fn numfault_parse_and_injection() {
+        assert_eq!(
+            parse_numfaults("5:nan"),
+            Some(vec![NumFault { at: 5, kind: NumFaultKind::Nan }])
+        );
+        assert_eq!(
+            parse_numfaults(" 5:nan , 9:spike "),
+            Some(vec![
+                NumFault { at: 5, kind: NumFaultKind::Nan },
+                NumFault { at: 9, kind: NumFaultKind::Spike },
+            ])
+        );
+        assert_eq!(parse_numfaults("5"), None);
+        assert_eq!(parse_numfaults("5:explode"), None);
+        assert_eq!(parse_numfaults("x:nan"), None);
+        assert_eq!(parse_numfaults(""), Some(vec![]));
+
+        let cfg = crate::refmodel::RefConfig {
+            name: "t".into(),
+            family: "gpt2".into(),
+            vocab: 16,
+            layers: 1,
+            d_model: 8,
+            n_head: 2,
+            d_ff: 16,
+            seq: 4,
+        };
+        let faults = parse_numfaults("3:nan,7:spike").unwrap();
+        let mut loss = 2.0f32;
+        let mut g = Grads::zeros(&cfg);
+        assert_eq!(apply_numfaults(&faults, 4, &mut loss, &mut g), None);
+        assert_eq!(loss, 2.0);
+        assert_eq!(apply_numfaults(&faults, 3, &mut loss, &mut g), Some(NumFaultKind::Nan));
+        assert!(loss.is_nan());
+        assert!(g.wte[0].is_nan());
+        let mut loss = 2.0f32;
+        let mut g = Grads::zeros(&cfg);
+        g.wte[1] = 0.5;
+        assert_eq!(apply_numfaults(&faults, 7, &mut loss, &mut g), Some(NumFaultKind::Spike));
+        assert_eq!(loss, 8.0);
+        assert_eq!(g.wte[1], 5e3);
+    }
+}

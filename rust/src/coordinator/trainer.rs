@@ -14,7 +14,7 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use super::checkpoint::{self, Checkpoint, WeightCodec};
-use super::metrics::{Metrics, StepRecord};
+use super::metrics::{Health, Metrics, StepRecord};
 use crate::config::RunConfig;
 use crate::data::batcher::{DatasetConfig, Prefetcher, TokenDataset};
 use crate::data::corpus::{CorpusConfig, CorpusGen};
@@ -155,6 +155,7 @@ impl<'rt> Trainer<'rt> {
                 grad_norm: gnorm,
                 stage: stage2 as u8,
                 step_ms: ms,
+                health: Health::Ok,
             });
             if (step + 1) % cfg.log_every == 0 || step + 1 == cfg.steps {
                 log::info!(

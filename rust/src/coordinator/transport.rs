@@ -63,6 +63,12 @@ pub struct ShardHeader {
     pub worker: String,
     /// Shard loss as raw f32 bits (exact through the JSON f64 header).
     pub loss_bits: u32,
+    /// Sentinel skip-list staleness stamp: the number of intervention
+    /// records affecting steps `<= step` when this file was computed.  A
+    /// reader expecting a different count must not merge the file — its
+    /// data order predates (or postdates) an intervention.  Absent in
+    /// pre-sentinel files, which parse as 0.
+    pub nskips: u64,
 }
 
 /// Header of the coordinator-published merged-update file.
@@ -73,6 +79,8 @@ pub struct MergedHeader {
     pub contributors: Vec<(usize, u64)>,
     /// Mean loss (ascending-shard f32 sum / n) as raw bits.
     pub loss_bits: u32,
+    /// Same staleness stamp as [`ShardHeader::nskips`].
+    pub nskips: u64,
 }
 
 /// Publish one shard's gradients for `step` under the grant's fence.
@@ -81,6 +89,7 @@ pub fn publish_shard(
     step: u64,
     grant: &LeaseGrant,
     loss: f32,
+    nskips: u64,
     grads: &Grads,
 ) -> Result<PathBuf> {
     let path = shard_file(run_dir, step, grant.shard, grant.fence);
@@ -91,6 +100,7 @@ pub fn publish_shard(
         ("fence", (grant.fence as i64).into()),
         ("worker", grant.worker.as_str().into()),
         ("loss_bits", (loss.to_bits() as i64).into()),
+        ("nskips", (nskips as i64).into()),
     ];
     write_grad_file(&path, kvs, grads)?;
     Ok(path)
@@ -104,6 +114,7 @@ pub fn publish_merged(
     step: u64,
     contributors: &[(usize, u64)],
     mean_loss_bits: u32,
+    nskips: u64,
     grads: &Grads,
 ) -> Result<PathBuf> {
     let path = merged_file(run_dir, step);
@@ -118,6 +129,7 @@ pub fn publish_merged(
         ("step", (step as i64).into()),
         ("contributors", Json::Arr(contribs)),
         ("loss_bits", (mean_loss_bits as i64).into()),
+        ("nskips", (nskips as i64).into()),
     ];
     write_grad_file(&path, kvs, grads)?;
     Ok(path)
@@ -135,6 +147,7 @@ pub fn read_shard(path: &Path, cfg: &RefConfig) -> Result<(ShardHeader, Grads)> 
         fence: header_u64(&h, "fence", path)?,
         worker: h.get("worker").and_then(|x| x.as_str()).unwrap_or("").to_string(),
         loss_bits: header_u64(&h, "loss_bits", path)? as u32,
+        nskips: h.get("nskips").and_then(|x| x.as_i64()).unwrap_or(0) as u64,
     };
     Ok((header, grads))
 }
@@ -156,6 +169,7 @@ pub fn read_merged(path: &Path, cfg: &RefConfig) -> Result<(MergedHeader, Grads)
         step: header_u64(&h, "step", path)?,
         contributors,
         loss_bits: header_u64(&h, "loss_bits", path)? as u32,
+        nskips: h.get("nskips").and_then(|x| x.as_i64()).unwrap_or(0) as u64,
     };
     Ok((header, grads))
 }
@@ -375,12 +389,13 @@ mod tests {
         let d = tdir("roundtrip");
         let cfg = tiny_cfg();
         let g = filled(&cfg, 1.5);
-        let path = publish_shard(&d, 7, &grant(2, 3), 0.625f32, &g).unwrap();
+        let path = publish_shard(&d, 7, &grant(2, 3), 0.625f32, 5, &g).unwrap();
         assert_eq!(path, shard_file(&d, 7, 2, 3));
         let (h, g2) = read_shard(&path, &cfg).unwrap();
         assert_eq!((h.step, h.shard, h.fence), (7, 2, 3));
         assert_eq!(h.worker, "w0");
         assert_eq!(f32::from_bits(h.loss_bits), 0.625);
+        assert_eq!(h.nskips, 5);
         assert_eq!(bits(&g), bits(&g2));
         assert!(path.with_extension("grad.tmp").metadata().is_err(), "tmp must be renamed away");
     }
@@ -390,11 +405,12 @@ mod tests {
         let d = tdir("merged");
         let cfg = tiny_cfg();
         let g = filled(&cfg, -2.0);
-        publish_merged(&d, 4, &[(0, 1), (1, 2)], 0.75f32.to_bits(), &g).unwrap();
+        publish_merged(&d, 4, &[(0, 1), (1, 2)], 0.75f32.to_bits(), 1, &g).unwrap();
         let (h, g2) = read_merged(&merged_file(&d, 4), &cfg).unwrap();
         assert_eq!(h.step, 4);
         assert_eq!(h.contributors, vec![(0, 1), (1, 2)]);
         assert_eq!(f32::from_bits(h.loss_bits), 0.75);
+        assert_eq!(h.nskips, 1);
         assert_eq!(bits(&g), bits(&g2));
     }
 
@@ -402,7 +418,7 @@ mod tests {
     fn truncated_file_fails_checksum_and_names_path() {
         let d = tdir("trunc");
         let cfg = tiny_cfg();
-        let path = publish_shard(&d, 0, &grant(0, 1), 1.0, &filled(&cfg, 0.5)).unwrap();
+        let path = publish_shard(&d, 0, &grant(0, 1), 1.0, 0, &filled(&cfg, 0.5)).unwrap();
         let full = std::fs::read(&path).unwrap();
         std::fs::write(&path, &full[..full.len() - 13]).unwrap();
         let err = format!("{:#}", read_shard(&path, &cfg).unwrap_err());
@@ -415,7 +431,7 @@ mod tests {
     fn bit_flip_fails_checksum_and_names_path() {
         let d = tdir("flip");
         let cfg = tiny_cfg();
-        let path = publish_shard(&d, 0, &grant(0, 1), 1.0, &filled(&cfg, 0.5)).unwrap();
+        let path = publish_shard(&d, 0, &grant(0, 1), 1.0, 0, &filled(&cfg, 0.5)).unwrap();
         let mut full = std::fs::read(&path).unwrap();
         let n = full.len();
         full[n - 6] ^= 0x40; // flip one payload bit
@@ -429,7 +445,7 @@ mod tests {
     fn geometry_mismatch_rejected() {
         let d = tdir("geom");
         let cfg = tiny_cfg();
-        let path = publish_shard(&d, 0, &grant(0, 1), 1.0, &filled(&cfg, 0.5)).unwrap();
+        let path = publish_shard(&d, 0, &grant(0, 1), 1.0, 0, &filled(&cfg, 0.5)).unwrap();
         let mut big = tiny_cfg();
         big.d_model = 16;
         big.d_ff = 32;
@@ -442,10 +458,10 @@ mod tests {
         let d = tdir("scan");
         let cfg = tiny_cfg();
         let g = filled(&cfg, 0.0);
-        publish_shard(&d, 3, &grant(1, 2), 0.0, &g).unwrap();
+        publish_shard(&d, 3, &grant(1, 2), 0.0, 0, &g).unwrap();
         // a zombie's file for the same shard at the superseded fence
-        publish_shard(&d, 3, &grant(1, 1), 0.0, &g).unwrap();
-        publish_shard(&d, 3, &grant(0, 1), 0.0, &g).unwrap();
+        publish_shard(&d, 3, &grant(1, 1), 0.0, 0, &g).unwrap();
+        publish_shard(&d, 3, &grant(0, 1), 0.0, 0, &g).unwrap();
         std::fs::write(step_dir(&d, 3).join("junk.txt"), "x").unwrap();
         std::fs::write(step_dir(&d, 3).join("shard_000_f0009.grad.tmp"), "x").unwrap();
         let got: Vec<(usize, u64)> =
@@ -460,7 +476,7 @@ mod tests {
         let cfg = tiny_cfg();
         let g = filled(&cfg, 0.0);
         for step in [0u64, 1, 2, 3] {
-            publish_merged(&d, step, &[(0, 1)], 0, &g).unwrap();
+            publish_merged(&d, step, &[(0, 1)], 0, 0, &g).unwrap();
         }
         let removed = gc_steps_below(&d, 2).unwrap();
         assert_eq!(removed, 2);

@@ -12,7 +12,7 @@
 
 use crate::formats::{effective_block, scale_of, FpFormat, Granularity};
 
-use super::lut::{encode_fast, lut_of};
+use super::lut::{decode_fast, encode_fast, lut_of};
 
 /// Contiguous group length for a flat (rows × cols) sweep: the whole
 /// tensor, one row, or one block (with the shared degenerate fallback).
@@ -139,6 +139,33 @@ pub(crate) fn quantize_pack_groups(
     (out, scales)
 }
 
+/// Count elements of a packed code stream that sit in the format's top
+/// magnitude bin (|decoded| ≥ `max_value`) — i.e. values the absmax
+/// scaling pushed onto the saturation boundary.  This is the per-linear
+/// quantizer-saturation counter the training-health sentinel reads to
+/// decide which linears to demote on escalation; it runs on demand over
+/// the already-packed bytes, so the hot encode path is untouched.
+///
+/// `n_values` is the logical element count (for ≤4-bit formats the final
+/// byte may carry a padding nibble that must not be counted).  Nibble
+/// order matches [`quantize_pack_groups`]: even flat index = low nibble.
+pub fn count_saturated(packed: &[u8], n_values: usize, fmt: FpFormat) -> u64 {
+    let top = |c: u8| (decode_fast(fmt, c).abs() >= fmt.max_value) as u64;
+    let mut count = 0u64;
+    if fmt.bits() <= 4 {
+        debug_assert!(packed.len() >= n_values.div_ceil(2));
+        for i in 0..n_values {
+            let b = packed[i / 2];
+            count += top(if i % 2 == 0 { b & 0x0F } else { b >> 4 });
+        }
+    } else {
+        for &c in &packed[..n_values] {
+            count += top(c);
+        }
+    }
+    count
+}
+
 /// Fused quantize+pack for a row-major (rows × cols) matrix along its
 /// columns axis — the single-pass core of `quant::quantize`.
 pub fn quantize_pack_rows(
@@ -249,6 +276,47 @@ mod tests {
             fast.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
             slow.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
         );
+    }
+
+    #[test]
+    fn count_saturated_matches_scalar_recount() {
+        for fmt in [FP4_E2M1, FP8_E4M3] {
+            prop_check("count_saturated == decode-and-count", 80, |c| {
+                let cols = [31usize, 32, 64][c.usize_in(0, 2)];
+                let rows = c.usize_in(1, 4);
+                let x = c.f32_vec_wild(rows * cols, rows * cols);
+                for g in grans(cols) {
+                    let glen = group_len(x.len(), cols, g);
+                    let (packed, _) = quantize_pack_rows(&x, rows, cols, fmt, g);
+                    // reference: re-encode each group and count top-bin codes
+                    let mut want = 0u64;
+                    for seg in x.chunks(glen) {
+                        let s = scale_of(seg.iter().copied(), fmt);
+                        for code in encode_slice(
+                            fmt,
+                            &seg.iter().map(|&v| v / s).collect::<Vec<f32>>(),
+                        ) {
+                            if decode_fast(fmt, code).abs() >= fmt.max_value {
+                                want += 1;
+                            }
+                        }
+                    }
+                    let got = count_saturated(&packed, x.len(), fmt);
+                    prop_assert!(got == want, "{} {g:?}: {got} vs {want}", fmt.name);
+                }
+                Ok(())
+            });
+        }
+        // a group pinned at the format max saturates exactly its extremes
+        let mut x = vec![0.1f32; 32];
+        x[3] = 6.0;
+        x[17] = -6.0;
+        let (packed, _) = quantize_pack_rows(&x, 1, 32, FP4_E2M1, Granularity::PerRow);
+        assert_eq!(count_saturated(&packed, 32, FP4_E2M1), 2);
+        // odd length: the padding nibble in the last byte is not counted
+        let y = vec![6.0f32; 7];
+        let (packed, _) = quantize_pack_rows(&y, 1, 7, FP4_E2M1, Granularity::PerRow);
+        assert_eq!(count_saturated(&packed, 7, FP4_E2M1), 7);
     }
 
     #[test]

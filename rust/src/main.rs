@@ -56,6 +56,11 @@ fn cli() -> Cli {
         .opt("heartbeat-ms", None, "durable runs: lease heartbeat interval [default: 1000]")
         .opt("lease-timeout-ms", None, "durable runs: lease expiry threshold; must exceed 2x the heartbeat [default: 10000]")
         .opt("journal-max-bytes", None, "durable runs: journal compaction threshold [default: 262144]")
+        .opt("spike-window", None, "sentinel: observations before spike detection arms [default: 32]")
+        .opt("spike-zscore", None, "sentinel: robust z-score threshold for a spike verdict [default: 8]")
+        .opt("rollback-retries", None, "sentinel: interventions tolerated per rollback region before precision escalates [default: 2]")
+        .opt("fallback-cooldown", None, "sentinel: steps a precision demotion stays active [default: 64]")
+        .opt("skip-data", None, "durable runs: comma-separated data indices to skip from the start (reproduces a recovered run's post-skip order)")
         .opt("docs", None, "synthetic corpus size (documents)")
         .opt("artifacts", Some("artifacts"), "AOT artifacts directory")
         .opt("out", None, "output directory")
@@ -64,6 +69,7 @@ fn cli() -> Cli {
         .opt("format", Some("fp4"), "inspect: fp4 | fp8 | fp8_e5m2")
         .flag("pallas", "use the pallas-kernel train artifact")
         .flag("host", "run on the pure-Rust refmodel engine (no artifacts/PJRT needed)")
+        .flag("no-sentinel", "durable runs: disable the training-health sentinel (divergence then errors out)")
 }
 
 fn main() {
@@ -110,11 +116,13 @@ fn open_runtime(args: &fp4train::util::args::Args) -> Result<Runtime> {
 }
 
 /// Shared durable-run knobs (`--heartbeat-ms`, `--lease-timeout-ms`,
-/// `--journal-max-bytes`) parsed into a [`TrainOptions`] base; the
-/// timeout > 2× heartbeat invariant is validated by the engine.
+/// `--journal-max-bytes`, the sentinel flags) parsed into a
+/// [`TrainOptions`] base; the timeout > 2× heartbeat invariant is
+/// validated by the engine.
 fn host_train_options(
     args: &fp4train::util::args::Args,
 ) -> Result<fp4train::refmodel::TrainOptions> {
+    use fp4train::coordinator::sentinel::numfaults_from_env;
     use fp4train::refmodel::engine::fault_from_env;
     let mut opts = fp4train::refmodel::TrainOptions::default();
     opts.heartbeat_ms = args.get_parsed::<u64>("heartbeat-ms").map_err(|e| anyhow!(e))?.unwrap_or(0);
@@ -122,7 +130,25 @@ fn host_train_options(
         args.get_parsed::<u64>("lease-timeout-ms").map_err(|e| anyhow!(e))?.unwrap_or(0);
     opts.journal_max_bytes =
         args.get_parsed::<u64>("journal-max-bytes").map_err(|e| anyhow!(e))?.unwrap_or(0);
+    opts.spike_window =
+        args.get_parsed::<u64>("spike-window").map_err(|e| anyhow!(e))?.unwrap_or(0);
+    opts.spike_zscore =
+        args.get_parsed::<f32>("spike-zscore").map_err(|e| anyhow!(e))?.unwrap_or(0.0);
+    opts.rollback_retries =
+        args.get_parsed::<u32>("rollback-retries").map_err(|e| anyhow!(e))?;
+    opts.fallback_cooldown =
+        args.get_parsed::<u64>("fallback-cooldown").map_err(|e| anyhow!(e))?.unwrap_or(0);
+    opts.sentinel_off = args.has_flag("no-sentinel");
+    if let Some(spec) = args.get("skip-data") {
+        opts.skips = spec
+            .split(',')
+            .map(str::trim)
+            .filter(|t| !t.is_empty())
+            .map(|t| t.parse::<u64>().map_err(|_| anyhow!("--skip-data: `{t}` is not a step index")))
+            .collect::<Result<Vec<u64>>>()?;
+    }
     opts.fault_at = fault_from_env();
+    opts.numfaults = numfaults_from_env();
     opts.validate()?;
     Ok(opts)
 }

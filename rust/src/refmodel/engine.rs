@@ -28,6 +28,21 @@
 //! [`TrainOptions::fault_at`]) aborts deterministically before executing
 //! step k, emulating a crash for chaos tests; see
 //! `tests/orchestration.rs` and `docs/ARCHITECTURE.md`.
+//!
+//! # Training health
+//!
+//! Durable runs additionally route every step's (loss, grad norm) through
+//! the `coordinator::sentinel` classifier before the optimizer applies
+//! the update.  An unhealthy verdict (NaN/inf, or a robust z-score spike)
+//! rolls the run back to the latest checkpoint, skips the offending
+//! *data index* (recorded in `state.json`, so resumes and multi-process
+//! replicas replay the identical post-skip order), and — after a bounded
+//! number of retries at the same region — demotes the most-saturated
+//! linears FP4 → FP8 for a cooldown window.  `PALLAS_NUMFAULT=<step>:nan`
+//! (or `:spike`) injects a deterministic numeric fault for chaos tests.
+//! Ephemeral runs have no checkpoint to roll back to: there a non-finite
+//! grad norm is a hard error from [`AdamW::step`] instead of being
+//! silently masked by the clip computation.
 
 use std::path::{Path, PathBuf};
 use std::time::Instant;
@@ -37,10 +52,11 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::config::RunConfig;
 use crate::coordinator::checkpoint::{self, Checkpoint, WeightCodec};
 use crate::coordinator::dp;
-use crate::coordinator::metrics::{Metrics, StepRecord};
+use crate::coordinator::metrics::{Health, Metrics, StepRecord};
 use crate::coordinator::runstore::{
     wall_ms, LeaseGrant, RunMeta, RunStatus, RunStore, CKPT_SUBDIR,
 };
+use crate::coordinator::sentinel::{self, Intervention, NumFault, Sentinel, SentinelConfig};
 use crate::coordinator::trainer::dataset_from_geometry;
 use crate::data::batcher::{BatchScratch, TokenDataset};
 use crate::data::tokenizer::Tokenizer;
@@ -165,19 +181,50 @@ impl AdamW {
         Ok(())
     }
 
-    /// One AdamW update with global-norm clipping; returns the raw
-    /// gradient norm.  Caller must `model.refresh_packed()` afterwards.
-    pub fn step(&mut self, model: &mut RefModel, grads: &Grads) -> f32 {
-        let gflat = grads.flat();
-        let mut params = model.params_mut();
-        assert_eq!(gflat.len(), params.len());
+    /// Global gradient L2 norm, f64-accumulated — the exact value the
+    /// update uses for clipping, exposed separately so the sentinel can
+    /// classify a step *before* anything is applied.
+    pub fn grad_norm(grads: &Grads) -> f32 {
         let mut sq = 0.0f64;
-        for (_, g) in &gflat {
-            for &x in *g {
+        for (_, g) in grads.flat() {
+            for &x in g {
                 sq += (x as f64) * (x as f64);
             }
         }
-        let gnorm = sq.sqrt() as f32;
+        sq.sqrt() as f32
+    }
+
+    /// One AdamW update with global-norm clipping; returns the raw
+    /// gradient norm.  Caller must `model.refresh_packed()` afterwards.
+    /// Errors on a non-finite gradient norm instead of applying the
+    /// update (which would corrupt every parameter and moment buffer).
+    pub fn step(&mut self, model: &mut RefModel, grads: &Grads) -> Result<f32> {
+        let gnorm = Self::grad_norm(grads);
+        self.step_with_norm(model, grads, gnorm)
+    }
+
+    /// [`AdamW::step`] with the norm precomputed (the durable loop
+    /// classifies on it first, so it is never computed twice).
+    pub(crate) fn step_with_norm(
+        &mut self,
+        model: &mut RefModel,
+        grads: &Grads,
+        gnorm: f32,
+    ) -> Result<f32> {
+        if !gnorm.is_finite() {
+            // NaN would otherwise vanish here: `f32::max` ignores NaN, so
+            // `NaN.max(1e-12)` is 1e-12 and the poisoned clip factor
+            // silently spreads NaN through every parameter.
+            bail!(
+                "non-finite gradient norm ({gnorm}) at optimizer step {} — refusing the \
+                 update; run with a durable store for sentinel rollback",
+                self.step
+            );
+        }
+        let gflat = grads.flat();
+        let mut params = model.params_mut();
+        assert_eq!(gflat.len(), params.len());
+        // zero-norm guard only: non-finite norms were rejected above
         let clip = (self.hp.grad_clip / gnorm.max(1e-12)).min(1.0);
         let lr = lr_at(self.step, &self.hp);
         let t = (self.step + 1) as f64;
@@ -198,7 +245,7 @@ impl AdamW {
             }
         }
         self.step += 1;
-        gnorm
+        Ok(gnorm)
     }
 }
 
@@ -237,6 +284,27 @@ pub struct TrainOptions {
     /// Journal compaction threshold in bytes (`--journal-max-bytes`);
     /// 0 = `runstore::DEFAULT_JOURNAL_CAP`.
     pub journal_max_bytes: u64,
+    /// Deterministic numeric fault injection — the in-process form of
+    /// `PALLAS_NUMFAULT=<step>:<nan|spike>`.  Keyed on data indices.
+    pub numfaults: Vec<NumFault>,
+    /// Data indices to skip from the start (what a sentinel intervention
+    /// records): lets a clean run reproduce a recovered run's post-skip
+    /// data order.  Durable runs persist these at creation.
+    pub skips: Vec<u64>,
+    /// Disable the sentinel even on durable runs (`--no-sentinel`); a
+    /// non-finite grad norm then errors instead of intervening.
+    pub sentinel_off: bool,
+    /// Spike-detection EMA window (`--spike-window`); 0 = default.
+    pub spike_window: u64,
+    /// Robust z-score threshold for a spike verdict (`--spike-zscore`);
+    /// 0.0 = default.
+    pub spike_zscore: f32,
+    /// Interventions tolerated at one rollback region before precision
+    /// escalates (`--rollback-retries`); None = default.
+    pub rollback_retries: Option<u32>,
+    /// Steps a precision demotion stays active (`--fallback-cooldown`);
+    /// 0 = default.
+    pub fallback_cooldown: u64,
 }
 
 /// Default lease heartbeat interval (overridden by `--heartbeat-ms`).
@@ -265,6 +333,19 @@ impl TrainOptions {
             );
         }
         Ok(())
+    }
+
+    /// Resolve the sentinel knobs: 0 / None means "use the
+    /// [`SentinelConfig`] default", so `TrainOptions::default()` runs the
+    /// sentinel at its documented defaults.
+    pub fn sentinel_config(&self) -> SentinelConfig {
+        let d = SentinelConfig::default();
+        SentinelConfig {
+            window: if self.spike_window == 0 { d.window } else { self.spike_window },
+            zscore: if self.spike_zscore == 0.0 { d.zscore } else { self.spike_zscore },
+            retries: self.rollback_retries.unwrap_or(d.retries),
+            cooldown: if self.fallback_cooldown == 0 { d.cooldown } else { self.fallback_cooldown },
+        }
     }
 }
 
@@ -342,6 +423,9 @@ pub(crate) fn restore_into(
 /// worker process join a run and reproduce the same trajectory bits.
 pub(crate) struct TrainSetup {
     pub(crate) info: RefConfig,
+    /// Stage-1 recipe — kept so rollbacks-to-scratch and per-step
+    /// precision recomputation can re-derive any step's recipe.
+    pub(crate) base: RecipePrec,
     pub(crate) target: RecipePrec,
     pub(crate) stage1: u64,
     pub(crate) n_shards: usize,
@@ -367,7 +451,7 @@ impl TrainSetup {
         val.truncate(4); // eval slice: first ≤4 val batches, like reproduce
         let mut model = RefModel::new(info.clone(), recipe.clone(), cfg.seed);
         let opt = AdamW::new(&mut model, HParams::for_family(&info.family, cfg.steps));
-        Ok(TrainSetup { info, target, stage1, n_shards, ds, tok, val, model, opt })
+        Ok(TrainSetup { info, base: recipe, target, stage1, n_shards, ds, tok, val, model, opt })
     }
 
     /// Mean validation NLL over the eval slice (the engine's eval step).
@@ -418,7 +502,7 @@ pub fn train_host_with(cfg: &RunConfig, opts: &TrainOptions) -> Result<HostRunRe
     opts.validate()?;
     let setup = TrainSetup::new(cfg)?;
     let TrainSetup {
-        info: _, target, stage1, n_shards, ds, tok, val, mut model, mut opt,
+        info, base, target, stage1, n_shards, ds, tok, val, mut model, mut opt,
     } = setup;
     let val_slice = &val[..];
     let mut sc = Scratch::default();
@@ -456,7 +540,9 @@ pub fn train_host_with(cfg: &RunConfig, opts: &TrainOptions) -> Result<HostRunRe
             );
             s
         } else {
-            RunStore::create(dir, RunMeta::from_config(cfg))?
+            let mut s = RunStore::create(dir, RunMeta::from_config(cfg))?;
+            s.record_preset_skips(&opts.skips)?;
+            s
         };
         s.set_journal_cap(opts.journal_max_bytes);
         // deterministic shard plan over virtual workers, leased with fencing
@@ -473,18 +559,37 @@ pub fn train_host_with(cfg: &RunConfig, opts: &TrainOptions) -> Result<HostRunRe
     } else {
         0
     };
-    // a resume landing inside stage 2 re-applies the target recipe before
-    // the loop: the packed state is a pure function of (weights, recipe),
-    // so this reproduces the uninterrupted run's packed bits exactly
-    if start_step >= stage1 && stage1 < cfg.steps {
-        model.set_recipe(target.clone());
-    }
+
+    // --- training-health sentinel (durable runs only) --------------------
+    // Ephemeral runs have no checkpoint to roll back to, so the sentinel
+    // stays off there and non-finite grads error out of the optimizer.
+    let sentinel_on = store.is_some() && !opts.sentinel_off;
+    let mut sentinel = Sentinel::new(opts.sentinel_config());
+    let (mut skips, mut interventions) = match &store {
+        Some(s) => {
+            if let Some(st) = s.sentinel_stats() {
+                sentinel.stats = *st;
+            }
+            (s.skips().to_vec(), s.interventions().to_vec())
+        }
+        // ephemeral runs still honor preset skips: the clean half of an
+        // injected-fault equivalence test runs without a store
+        None => (opts.skips.clone(), Vec::new()),
+    };
+
+    // Precision is a per-step recomputation, not an edge-triggered swap:
+    // (stage 2?, active demotions) derives from (step, intervention
+    // records) at the top of every iteration and is applied on change.
+    // Fresh runs, resumes, and rollbacks all converge to identical packed
+    // bits without tracking *how* they reached `step`.
+    let mut prec_state: Option<(bool, Vec<String>)> = None;
 
     log::info!(
         "host training {} / {} for {} steps (stage 2 at {stage1}, recipe {} -> {})",
         cfg.model, cfg.recipe, cfg.steps, cfg.recipe, cfg.target_recipe
     );
-    for step in start_step..cfg.steps {
+    let mut step = start_step;
+    while step < cfg.steps {
         if opts.fault_at == Some(step) {
             if let Some(s) = &mut store {
                 // best-effort audit marker — resume never depends on it
@@ -494,17 +599,25 @@ pub fn train_host_with(cfg: &RunConfig, opts: &TrainOptions) -> Result<HostRunRe
             bail!("injected fault (PALLAS_FAULT) before step {step} — resume with --resume");
         }
         let stage2 = step >= stage1;
-        if stage2 && step == stage1 {
-            model.set_recipe(target.clone());
+        let want = (stage2, sentinel::active_demotions(&interventions, step));
+        if prec_state.as_ref() != Some(&want) {
+            let recipe = if stage2 { target.clone() } else { base.clone() };
+            model.apply_precision(recipe, &want.1);
+            prec_state = Some(want);
         }
+        let health = match &prec_state {
+            Some((_, demoted)) if !demoted.is_empty() => Health::Fallback,
+            _ => Health::Ok,
+        };
         let t0 = Instant::now();
-        let (loss, gnorm) = if n_shards == 1 {
+        // the data index this step trains on — shifted around skip holes
+        let d = sentinel::data_index(step, &skips);
+        let (mut loss, mut grads) = if n_shards == 1 {
             // the classic single-shard path, byte-for-byte unchanged
             let (loss, grads, b) =
-                compute_shard_grads(&model, &ds, step, 0, 1, &mut sc, &mut bscratch, std::mem::take(&mut buf));
-            let gnorm = opt.step(&mut model, &grads);
+                compute_shard_grads(&model, &ds, d, 0, 1, &mut sc, &mut bscratch, std::mem::take(&mut buf));
             buf = b; // recycle the window buffer
-            (loss, gnorm)
+            (loss, grads)
         } else {
             // per-shard grads merged in ascending-shard order: the reduce
             // order is keyed by shard index, never by lease holder, so a
@@ -516,17 +629,81 @@ pub fn train_host_with(cfg: &RunConfig, opts: &TrainOptions) -> Result<HostRunRe
             let mut loss_sum = 0.0f32;
             for shard in 0..n_shards {
                 let (l, g, b) = compute_shard_grads(
-                    &model, &ds, step, shard, n_shards, &mut sc, &mut bscratch, std::mem::take(&mut buf),
+                    &model, &ds, d, shard, n_shards, &mut sc, &mut bscratch, std::mem::take(&mut buf),
                 );
                 loss_sum += l;
                 shard_grads.push(g);
                 buf = b;
             }
-            let mean = Grads::merge_mean(shard_grads);
-            let gnorm = opt.step(&mut model, &mean);
-            (loss_sum / n_shards as f32, gnorm)
+            (loss_sum / n_shards as f32, Grads::merge_mean(shard_grads))
         };
+        sentinel::apply_numfaults(&opts.numfaults, d, &mut loss, &mut grads);
+        let gnorm = AdamW::grad_norm(&grads);
+        if sentinel_on {
+            let verdict = sentinel.classify(loss, gnorm);
+            if !verdict.is_healthy() {
+                let scfg = sentinel.cfg;
+                let s = store.as_mut().expect("sentinel_on implies a store");
+                let rollback_to = s.latest_checkpoint().map(|(k, _)| k).unwrap_or(0);
+                let retry =
+                    interventions.iter().filter(|iv| iv.rollback_to == rollback_to).count() as u32;
+                if retry > scfg.retries + 8 {
+                    bail!(
+                        "training cannot get past step {step} ({}): {retry} interventions at \
+                         the same rollback region (checkpoint {rollback_to}) — even the \
+                         precision fallback did not stabilize this run",
+                        verdict.label()
+                    );
+                }
+                // after the retry budget, escalate: demote the implicated
+                // linears (highest quantizer saturation) for the cooldown
+                let escalation = (retry >= scfg.retries).then(|| sentinel::Escalation {
+                    linears: sentinel::implicated(&model.saturation_rates()),
+                    until_step: step + scfg.cooldown,
+                });
+                let iv = Intervention {
+                    at_step: step,
+                    data_step: d,
+                    kind: verdict.label(),
+                    rollback_to,
+                    retry,
+                    escalation,
+                };
+                log::warn!(
+                    "sentinel: {} at step {step} -> rollback to {rollback_to}, skip data \
+                     index {d} (retry {retry}{})",
+                    iv.kind,
+                    if iv.escalation.is_some() { ", escalating precision" } else { "" }
+                );
+                s.record_intervention(&iv)?;
+                interventions.push(iv);
+                skips = s.skips().to_vec();
+                // roll back and replay: data indices < step are untouched
+                // by the new skip (its value is >= step), so the replayed
+                // prefix reproduces the pre-intervention bits exactly
+                if let Some((ck_step, ck_path)) = s.latest_checkpoint() {
+                    let ck = checkpoint::load(&ck_path)
+                        .with_context(|| format!("sentinel rollback at step {step}"))?;
+                    let got = restore_into(&mut model, &mut opt, &ck, &ck_path)?;
+                    debug_assert_eq!(got, ck_step);
+                } else {
+                    // no checkpoint yet: rebuild the initial state
+                    model = RefModel::new(info.clone(), base.clone(), cfg.seed);
+                    opt = AdamW::new(&mut model, HParams::for_family(&info.family, cfg.steps));
+                }
+                sentinel.stats = s.sentinel_stats().copied().unwrap_or_default();
+                metrics.truncate_from(rollback_to);
+                prec_state = None; // force recipe/demotion reapplication
+                step = rollback_to;
+                continue;
+            }
+        }
+        let gnorm = opt.step_with_norm(&mut model, &grads, gnorm)?;
         model.refresh_packed();
+        if sentinel_on {
+            // baselines absorb applied (Healthy) observations only
+            sentinel.observe(loss, gnorm);
+        }
         if let Some(s) = &mut store {
             let now = wall_ms();
             for g in &grants {
@@ -534,7 +711,9 @@ pub fn train_host_with(cfg: &RunConfig, opts: &TrainOptions) -> Result<HostRunRe
             }
         }
         let ms = t0.elapsed().as_secs_f64() * 1000.0;
-        metrics.push_step(StepRecord { step, loss, grad_norm: gnorm, stage: stage2 as u8, step_ms: ms });
+        metrics.push_step(StepRecord {
+            step, loss, grad_norm: gnorm, stage: stage2 as u8, step_ms: ms, health,
+        });
         if (step + 1) % cfg.log_every == 0 || step + 1 == cfg.steps {
             log::info!(
                 "host step {:>5}/{} [{}] loss {:.4} |g| {:.3} {:.0} ms",
@@ -560,9 +739,12 @@ pub fn train_host_with(cfg: &RunConfig, opts: &TrainOptions) -> Result<HostRunRe
             // (quantized codecs remain available for storage-only exports)
             checkpoint::save(&snapshot(&mut model, &opt), &s.dir().join(&rel), WeightCodec::F32)?;
             // pointer flips only after the save's rename landed: a crash
-            // between the two replays from the previous checkpoint
-            s.record_checkpoint(step + 1, &rel)?;
+            // between the two replays from the previous checkpoint.  The
+            // sentinel statistics snapshot rides along so a rollback (or
+            // a resume) restarts the baselines exactly here.
+            s.record_checkpoint(step + 1, &rel, sentinel_on.then_some(&sentinel.stats))?;
         }
+        step += 1;
     }
 
     if let Some(s) = &mut store {
@@ -620,6 +802,74 @@ mod tests {
         assert!(err.contains("--heartbeat-ms"), "{err}");
         o.lease_timeout_ms = 1_001;
         assert!(o.validate().is_ok());
+    }
+
+    #[test]
+    fn nonfinite_grad_norm_is_rejected_not_masked() {
+        // regression: `f32::max` ignores NaN, so the old clip expression
+        // `grad_clip / gnorm.max(1e-12)` silently turned a NaN norm into
+        // a NaN *update* instead of an error
+        let info = RefConfig {
+            name: "t".into(),
+            family: "gpt2".into(),
+            vocab: 16,
+            layers: 1,
+            d_model: 8,
+            n_head: 2,
+            d_ff: 16,
+            seq: 4,
+        };
+        let recipe = presets::recipe("ours").unwrap();
+        let mut model = RefModel::new(info.clone(), recipe, 7);
+        let mut opt = AdamW::new(&mut model, HParams::for_family("gpt2", 10));
+        let before: Vec<u32> = model
+            .params_mut()
+            .iter()
+            .flat_map(|(_, p)| p.iter().map(|x| x.to_bits()))
+            .collect();
+
+        let mut g = Grads::zeros(&info);
+        g.wte[0] = f32::NAN;
+        assert!(!AdamW::grad_norm(&g).is_finite());
+        let err = format!("{:#}", opt.step(&mut model, &g).unwrap_err());
+        assert!(err.contains("non-finite gradient norm"), "{err}");
+        assert_eq!(opt.step_count(), 0, "rejected update must not advance the step count");
+
+        // inf via f32 overflow of the accumulated norm is rejected too
+        let mut g = Grads::zeros(&info);
+        for v in g.wte.iter_mut() {
+            *v = f32::MAX;
+        }
+        assert!(opt.step(&mut model, &g).is_err());
+
+        let after: Vec<u32> = model
+            .params_mut()
+            .iter()
+            .flat_map(|(_, p)| p.iter().map(|x| x.to_bits()))
+            .collect();
+        assert_eq!(before, after, "rejected updates must leave every parameter untouched");
+
+        // a finite gradient still applies normally
+        let mut g = Grads::zeros(&info);
+        g.wte[0] = 1.0;
+        let gnorm = opt.step(&mut model, &g).unwrap();
+        assert!((gnorm - 1.0).abs() < 1e-6, "{gnorm}");
+        assert_eq!(opt.step_count(), 1);
+    }
+
+    #[test]
+    fn sentinel_config_resolves_defaults_and_overrides() {
+        let d = SentinelConfig::default();
+        assert_eq!(TrainOptions::default().sentinel_config(), d);
+        let o = TrainOptions {
+            spike_window: 3,
+            spike_zscore: 4.5,
+            rollback_retries: Some(0),
+            fallback_cooldown: 16,
+            ..Default::default()
+        };
+        let c = o.sentinel_config();
+        assert_eq!((c.window, c.zscore, c.retries, c.cooldown), (3, 4.5, 0, 16));
     }
 
     #[test]

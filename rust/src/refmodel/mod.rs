@@ -125,6 +125,24 @@ pub struct LinearPrec {
 
 impl LinearPrec {
     pub const EXACT: LinearPrec = LinearPrec { fwd: None, wgrad: None, agrad: None };
+
+    /// The precision this linear falls back to when the training-health
+    /// sentinel escalates (paper §3.1 mixed-precision fallback): every
+    /// sub-8-bit spec is widened to FP8 E4M3 at the same granularity;
+    /// FP8 and exact GEMMs are already past the fragile regime and stay
+    /// as they are.
+    pub fn demoted(&self) -> LinearPrec {
+        let widen = |spec: Option<QSpec>| {
+            spec.map(|q| {
+                if q.fmt.bits() <= 4 {
+                    QSpec { fmt: crate::formats::FP8_E4M3, gran: q.gran }
+                } else {
+                    q
+                }
+            })
+        };
+        LinearPrec { fwd: widen(self.fwd), wgrad: widen(self.wgrad), agrad: widen(self.agrad) }
+    }
 }
 
 /// A full module-precision recipe (one row of the paper's Table 2).

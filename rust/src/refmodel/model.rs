@@ -381,6 +381,52 @@ impl RefModel {
         self.recipe = recipe;
     }
 
+    /// Visit every quantized linear with its sentinel-facing name
+    /// (`qkv.{layer}`, `proj.{layer}`, `fc1.{layer}`, `fc2.{layer}`).
+    fn linears_mut(&mut self) -> Vec<(String, &mut QLinear)> {
+        let mut out: Vec<(String, &mut QLinear)> = Vec::with_capacity(4 * self.blocks.len());
+        for (i, b) in self.blocks.iter_mut().enumerate() {
+            out.push((format!("qkv.{i}"), &mut b.qkv));
+            out.push((format!("proj.{i}"), &mut b.proj));
+            out.push((format!("fc1.{i}"), &mut b.fc1));
+            out.push((format!("fc2.{i}"), &mut b.fc2));
+        }
+        out
+    }
+
+    /// [`RefModel::set_recipe`] with a precision-fallback overlay: the
+    /// named linears run [`LinearPrec::demoted`] (FP4 → FP8) on top of
+    /// the stage recipe.  The full precision state of the model is a pure
+    /// function of `(recipe, demoted)`, which is what lets rollback,
+    /// resume, and every multi-process replica recompute it from the
+    /// intervention records instead of replaying set_recipe calls.
+    pub fn apply_precision(&mut self, recipe: RecipePrec, demoted: &[String]) {
+        let attn = recipe.attn_linear();
+        let ffn = recipe.ffn_linear();
+        for (name, lin) in self.linears_mut() {
+            let base = if name.starts_with("qkv") || name.starts_with("proj") { attn } else { ffn };
+            let prec = if demoted.iter().any(|d| *d == name) { base.demoted() } else { base };
+            lin.set_prec(prec);
+        }
+        self.recipe = recipe;
+    }
+
+    /// Per-linear quantizer saturation rate — the fraction of packed
+    /// weight codes sitting in the format's top magnitude bin
+    /// (`kernels::fused::count_saturated`), in model order.  Exact
+    /// (unpacked) linears are absent: they have no quantizer to saturate.
+    pub fn saturation_rates(&mut self) -> Vec<(String, f32)> {
+        let mut out = Vec::new();
+        for (name, lin) in self.linears_mut() {
+            if let Some(q) = lin.packed() {
+                let n: usize = q.shape.iter().product();
+                let sat = crate::kernels::fused::count_saturated(&q.packed, n, q.fmt());
+                out.push((name, sat as f32 / n.max(1) as f32));
+            }
+        }
+        out
+    }
+
     /// Re-pack every linear's quantized state from the master weights —
     /// call after each optimizer update.
     pub fn refresh_packed(&mut self) {

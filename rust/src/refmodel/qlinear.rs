@@ -102,6 +102,12 @@ impl QLinear {
         self.prec
     }
 
+    /// The canonical packed weight tensor (`None` when the forward is
+    /// exact) — read-only view for saturation accounting.
+    pub fn packed(&self) -> Option<&QuantizedTensor> {
+        self.packed.as_ref()
+    }
+
     /// Swap the precision recipe (the §3.3 stage boundary) and re-derive
     /// the packed state.
     pub fn set_prec(&mut self, prec: LinearPrec) {

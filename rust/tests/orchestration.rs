@@ -9,6 +9,12 @@
 //! exactly at the §3.3 stage boundary where the recipe swaps to the
 //! target.  Every surviving loss bit and every final master-parameter bit
 //! must match the uninterrupted reference.
+//!
+//! The sentinel suite at the bottom drives `TrainOptions::numfaults` (the
+//! in-process form of `PALLAS_NUMFAULT`) and pins the training-health
+//! contract: a run that hits an injected NaN or spike, rolls back, and
+//! skips the poisoned window ends bit-identical to a clean run on the
+//! post-skip data order — single-process and multi-process.
 
 use std::path::{Path, PathBuf};
 
@@ -376,6 +382,265 @@ fn multiprocess_elected_coordinator_matches_in_process_bits() {
     assert_eq!(store.status(), RunStatus::Complete);
     assert!(!store.meta().external_coordinator);
     assert!(store.leases().iter().all(|l| l.state == LeaseState::Done));
+}
+
+// ---------------------------------------------------------------------------
+// Training-health sentinel: deterministic numeric-fault injection, rollback
+// to the latest durable checkpoint, batch-window skip, and precision
+// fallback.  The headline invariant: a run that hits an injected fault and
+// recovers ends **bit-identical** to an uninterrupted run on the post-skip
+// data order — single-process and multi-process.
+// ---------------------------------------------------------------------------
+
+use fp4train::coordinator::metrics::Health;
+use fp4train::coordinator::sentinel::{NumFault, NumFaultKind};
+
+fn journal_events(run_dir: &Path) -> Vec<String> {
+    RunStore::open(run_dir)
+        .unwrap()
+        .read_journal()
+        .unwrap()
+        .iter()
+        .map(|j| j.get("event").and_then(|e| e.as_str()).unwrap_or("?").to_string())
+        .collect()
+}
+
+/// Clean durable reference run with the sentinel disabled and the given
+/// data indices pre-skipped: the ground truth a recovered run must match.
+fn clean_reference(cfg: &RunConfig, run_dir: PathBuf, skips: Vec<u64>) -> (Vec<u32>, Vec<u32>) {
+    let mut opts = durable(run_dir);
+    opts.skips = skips;
+    opts.sentinel_off = true;
+    let res = train_host_with(cfg, &opts).unwrap();
+    let losses = res.metrics.steps.iter().map(|s| s.loss.to_bits()).collect();
+    (losses, param_bits(res))
+}
+
+#[test]
+fn injected_nan_recovers_bit_identical_to_clean_post_skip_run() {
+    let root = tdir("sentinel_nan");
+    // fault at data index 5 → rollback to the step-4 checkpoint, skip 5;
+    // the clean reference runs on data order 0,1,2,3,4,6,7,8
+    let (ref_losses, ref_bits) =
+        clean_reference(&micro_cfg(&root, "ref", 1), root.join("ref_run"), vec![5]);
+
+    let run_dir = root.join("run");
+    let mut opts = durable(run_dir.clone());
+    opts.numfaults = vec![NumFault { at: 5, kind: NumFaultKind::Nan }];
+    let res = train_host_with(&micro_cfg(&root, "nan", 1), &opts).unwrap();
+
+    assert_eq!(res.metrics.steps.len(), 8);
+    for r in &res.metrics.steps {
+        assert_eq!(r.loss.to_bits(), ref_losses[r.step as usize], "loss diverged at {}", r.step);
+        assert_eq!(r.health, Health::Ok, "no escalation → every row stays ok (step {})", r.step);
+    }
+    assert_eq!(param_bits(res), ref_bits, "recovered params diverged from clean post-skip run");
+
+    let store = RunStore::open(&run_dir).unwrap();
+    assert_eq!(store.status(), RunStatus::Complete);
+    assert_eq!(store.skips().to_vec(), vec![5u64]);
+    let ivs = store.interventions();
+    assert_eq!(ivs.len(), 1, "exactly one intervention: {ivs:?}");
+    assert_eq!(ivs[0].at_step, 5);
+    assert_eq!(ivs[0].data_step, 5);
+    assert_eq!(ivs[0].kind, "nonfinite:loss");
+    assert_eq!(ivs[0].rollback_to, 4, "latest checkpoint before the fault is step 4");
+    assert_eq!(ivs[0].retry, 0);
+    assert!(ivs[0].escalation.is_none(), "first strike must not escalate");
+    drop(store);
+    assert!(
+        journal_events(&run_dir).iter().any(|e| e == "intervention"),
+        "journal must carry the intervention audit line"
+    );
+}
+
+#[test]
+fn injected_spike_recovers_bit_identical_to_clean_post_skip_run() {
+    let root = tdir("sentinel_spike");
+    let (ref_losses, ref_bits) =
+        clean_reference(&micro_cfg(&root, "ref", 1), root.join("ref_run"), vec![5]);
+
+    let run_dir = root.join("run");
+    let mut opts = durable(run_dir.clone());
+    opts.numfaults = vec![NumFault { at: 5, kind: NumFaultKind::Spike }];
+    // short warmup so the z-score is armed by step 5; the threshold sits
+    // far above healthy jitter and far below a ×1e4 gradient blow-up
+    opts.spike_window = 4;
+    opts.spike_zscore = 50.0;
+    let res = train_host_with(&micro_cfg(&root, "spike", 1), &opts).unwrap();
+
+    assert_eq!(res.metrics.steps.len(), 8);
+    for r in &res.metrics.steps {
+        assert_eq!(r.loss.to_bits(), ref_losses[r.step as usize], "loss diverged at {}", r.step);
+    }
+    assert_eq!(param_bits(res), ref_bits, "recovered params diverged from clean post-skip run");
+
+    let store = RunStore::open(&run_dir).unwrap();
+    let ivs = store.interventions();
+    assert_eq!(ivs.len(), 1, "exactly one intervention: {ivs:?}");
+    assert!(ivs[0].kind.starts_with("spike:"), "verdict must be a spike: {}", ivs[0].kind);
+    assert_eq!(ivs[0].data_step, 5);
+}
+
+#[test]
+fn rollback_across_stage_boundary_reapplies_recipe() {
+    // checkpoint cadence 4 puts the latest checkpoint (step 4) inside
+    // stage 1 while the fault fires at step 6 — the first stage-2 step
+    // (§3.3 boundary at 8 × (1 - 0.25) = 6).  The replay must re-apply
+    // the base recipe for steps 4-5 and swap back to the target at 6.
+    let root = tdir("sentinel_stage");
+    let mut ref_cfg = micro_cfg(&root, "ref", 1);
+    ref_cfg.checkpoint_every = 4;
+    let (ref_losses, ref_bits) = clean_reference(&ref_cfg, root.join("ref_run"), vec![6]);
+
+    let mut cfg = micro_cfg(&root, "nan", 1);
+    cfg.checkpoint_every = 4;
+    let run_dir = root.join("run");
+    let mut opts = durable(run_dir.clone());
+    opts.numfaults = vec![NumFault { at: 6, kind: NumFaultKind::Nan }];
+    let res = train_host_with(&cfg, &opts).unwrap();
+
+    assert_eq!(res.metrics.steps.len(), 8);
+    for r in &res.metrics.steps {
+        assert_eq!(r.loss.to_bits(), ref_losses[r.step as usize], "loss diverged at {}", r.step);
+    }
+    assert_eq!(param_bits(res), ref_bits, "stage-boundary rollback diverged");
+
+    let store = RunStore::open(&run_dir).unwrap();
+    let ivs = store.interventions();
+    assert_eq!(ivs.len(), 1);
+    assert_eq!(ivs[0].at_step, 6);
+    assert_eq!(ivs[0].rollback_to, 4, "must roll back into stage 1");
+}
+
+#[test]
+fn repeated_faults_escalate_to_precision_fallback_and_complete() {
+    // retries=0: the very first verdict escalates — implicated linears run
+    // demoted (FP4 → FP8) for `fallback_cooldown` steps, flagged in the
+    // health column, and the run still completes.
+    let root = tdir("sentinel_esc");
+    let run_dir = root.join("run");
+    let mut opts = durable(run_dir.clone());
+    opts.numfaults = vec![NumFault { at: 5, kind: NumFaultKind::Nan }];
+    opts.rollback_retries = Some(0);
+    opts.fallback_cooldown = 2;
+    let res = train_host_with(&micro_cfg(&root, "esc", 1), &opts).unwrap();
+
+    assert_eq!(res.metrics.steps.len(), 8);
+    for r in &res.metrics.steps {
+        let want = if (5..7).contains(&r.step) { Health::Fallback } else { Health::Ok };
+        assert_eq!(r.health, want, "health column wrong at step {}", r.step);
+    }
+
+    let store = RunStore::open(&run_dir).unwrap();
+    assert_eq!(store.status(), RunStatus::Complete);
+    let ivs = store.interventions();
+    assert_eq!(ivs.len(), 1);
+    let esc = ivs[0].escalation.as_ref().expect("retries=0 must escalate immediately");
+    assert!(!esc.linears.is_empty(), "escalation must implicate at least one linear");
+    assert_eq!(esc.until_step, 7, "at_step 5 + cooldown 2");
+}
+
+#[test]
+fn sentinel_on_healthy_run_matches_sentinel_off_byte_for_byte() {
+    // a healthy run must be untouched by the watching sentinel: every
+    // steps.csv column except wall-clock, and every final parameter bit
+    let root = tdir("sentinel_ab");
+    let on_dir = root.join("on_run");
+    let on = train_host_with(&micro_cfg(&root, "on", 1), &durable(on_dir.clone())).unwrap();
+    let mut off_opts = durable(root.join("off_run"));
+    off_opts.sentinel_off = true;
+    let off = train_host_with(&micro_cfg(&root, "off", 1), &off_opts).unwrap();
+
+    assert_eq!(on.metrics.steps.len(), off.metrics.steps.len());
+    for (a, b) in on.metrics.steps.iter().zip(off.metrics.steps.iter()) {
+        assert_eq!(a.step, b.step);
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "loss at {}", a.step);
+        assert_eq!(a.grad_norm.to_bits(), b.grad_norm.to_bits(), "grad_norm at {}", a.step);
+        assert_eq!(a.stage, b.stage, "stage at {}", a.step);
+        assert_eq!(a.health, b.health, "health at {}", a.step);
+    }
+    assert_eq!(param_bits(on), param_bits(off), "sentinel-on params diverged from sentinel-off");
+
+    let store = RunStore::open(&on_dir).unwrap();
+    assert!(store.interventions().is_empty(), "healthy run must record no interventions");
+}
+
+#[test]
+fn multiprocess_injected_nan_recovers_bit_identical() {
+    let root = tdir("mp_sentinel");
+    // in-process ephemeral reference at the same shard count on the
+    // post-skip data order (no store → sentinel off by construction)
+    let mut ref_opts = TrainOptions::default();
+    ref_opts.skips = vec![5];
+    let ref_res = train_host_with(&micro_cfg(&root, "ref", 3), &ref_opts).unwrap();
+    let ref_losses: Vec<u32> = ref_res.metrics.steps.iter().map(|s| s.loss.to_bits()).collect();
+    let ref_bits = param_bits(ref_res);
+
+    let cfg = micro_cfg(&root, "mp", 3);
+    let dir = root.join("mp_run");
+    let train = TrainOptions {
+        heartbeat_ms: 100,
+        lease_timeout_ms: 400,
+        numfaults: vec![NumFault { at: 5, kind: NumFaultKind::Nan }],
+        ..Default::default()
+    };
+    let spawn = |id: &str, coordinator_only: bool| {
+        let cfg = cfg.clone();
+        let o = MpOptions {
+            run_dir: dir.clone(),
+            worker_id: id.to_string(),
+            coordinator_only,
+            train: train.clone(),
+        };
+        std::thread::spawn(move || run_participant(&cfg, &o))
+    };
+    let coord = spawn("coord", true);
+    wait_for_store(&dir);
+    let workers: Vec<_> = (0..3).map(|i| spawn(&format!("w{i}"), false)).collect();
+
+    let cres = coord.join().unwrap().unwrap();
+    assert_eq!(cres.metrics.steps.len(), 8);
+    for r in &cres.metrics.steps {
+        assert_eq!(r.loss.to_bits(), ref_losses[r.step as usize], "loss bits at step {}", r.step);
+    }
+    assert_eq!(param_bits(cres), ref_bits, "coordinator param bits diverged after recovery");
+    for (i, w) in workers.into_iter().enumerate() {
+        let res = w.join().unwrap().unwrap();
+        assert_eq!(param_bits(res), ref_bits, "w{i} param bits diverged after recovery");
+    }
+
+    let store = RunStore::open(&dir).unwrap();
+    assert_eq!(store.status(), RunStatus::Complete);
+    assert_eq!(store.skips().to_vec(), vec![5u64]);
+    let ivs = store.interventions();
+    assert_eq!(ivs.len(), 1, "exactly one intervention: {ivs:?}");
+    assert_eq!(ivs[0].at_step, 5);
+    assert_eq!(ivs[0].kind, "nonfinite:loss");
+    drop(store);
+    assert!(journal_events(&dir).iter().any(|e| e == "intervention"));
+}
+
+#[test]
+fn numfault_env_parses_like_pallas_fault() {
+    // sole reader of PALLAS_NUMFAULT in this binary (the recovery tests
+    // drive TrainOptions::numfaults directly), so this is race-free
+    use fp4train::coordinator::sentinel::numfaults_from_env;
+    std::env::remove_var("PALLAS_NUMFAULT");
+    assert!(numfaults_from_env().is_empty());
+    std::env::set_var("PALLAS_NUMFAULT", "5:nan");
+    assert_eq!(numfaults_from_env(), vec![NumFault { at: 5, kind: NumFaultKind::Nan }]);
+    std::env::set_var("PALLAS_NUMFAULT", " 3:spike , 9:nan ");
+    assert_eq!(
+        numfaults_from_env(),
+        vec![
+            NumFault { at: 3, kind: NumFaultKind::Spike },
+            NumFault { at: 9, kind: NumFaultKind::Nan }
+        ]
+    );
+    std::env::set_var("PALLAS_NUMFAULT", "7:meteor");
+    assert!(numfaults_from_env().is_empty(), "a malformed spec disables the whole list");
+    std::env::remove_var("PALLAS_NUMFAULT");
 }
 
 #[test]

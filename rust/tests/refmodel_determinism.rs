@@ -53,7 +53,7 @@ fn train_bits(steps: u64, panel_cache: bool) -> (Vec<u32>, Vec<u32>) {
         let batch = batch_at(step, b, cfg.seq, cfg.vocab);
         let (loss, grads, _) = model.loss_and_grads(&batch, &mut sc);
         losses.push(loss.to_bits());
-        opt.step(&mut model, &grads);
+        opt.step(&mut model, &grads).unwrap();
         model.refresh_packed();
     }
     let mut bits = Vec::new();
@@ -109,7 +109,7 @@ fn training_descends_and_schedule_swaps_to_exact() {
         }
         last = loss;
         assert!(loss.is_finite(), "step {step}");
-        opt.step(&mut model, &grads);
+        opt.step(&mut model, &grads).unwrap();
         model.refresh_packed();
     }
     assert!(last < first, "loss did not descend: {first} -> {last}");
@@ -146,7 +146,7 @@ fn repacks_and_same_recipe_swaps_keep_losses_byte_identical() {
             let batch = batch_at(step, 8, cfg.seq, cfg.vocab);
             let (loss, grads, _) = model.loss_and_grads(&batch, &mut sc);
             losses.push(loss.to_bits());
-            opt.step(&mut model, &grads);
+            opt.step(&mut model, &grads).unwrap();
             model.refresh_packed();
         }
         losses

@@ -22,8 +22,16 @@
 # deterministic steps.csv column of the coordinator's output must match
 # an uninterrupted in-process `--workers 3` reference byte-for-byte.
 #
-# Usage: scripts/chaos.sh         (also: scripts/tier1.sh --chaos)
-#        scripts/chaos.sh --mp    (also: scripts/tier1.sh --chaos-mp)
+# --numeric mode injects numeric faults instead of process deaths: a run
+# with PALLAS_NUMFAULT=<step>:<nan|spike> must NOT crash — the training-
+# health sentinel rolls back to the latest checkpoint, skips the poisoned
+# batch window, journals the intervention, and the final deterministic
+# steps.csv columns must match a clean run started with the same window
+# pre-skipped (--skip-data).
+#
+# Usage: scripts/chaos.sh           (also: scripts/tier1.sh --chaos)
+#        scripts/chaos.sh --mp      (also: scripts/tier1.sh --chaos-mp)
+#        scripts/chaos.sh --numeric (also: scripts/tier1.sh --chaos-numeric)
 # No-ops with exit 0 when cargo is absent, like bench_diff.sh.
 
 set -euo pipefail
@@ -34,6 +42,7 @@ MODE=single
 for arg in "$@"; do
     case "$arg" in
         --mp) MODE=mp ;;
+        --numeric) MODE=numeric ;;
         *) echo "chaos: unknown flag $arg" >&2; exit 64 ;;
     esac
 done
@@ -88,6 +97,52 @@ if [[ "$MODE" == single ]]; then
     fi
 
     echo "chaos: OK — crash at step $FAULT resumed bit-identically"
+    exit 0
+fi
+
+if [[ "$MODE" == numeric ]]; then
+    # Numeric-fault smoke: PALLAS_NUMFAULT poisons one step's loss/grads;
+    # the sentinel must catch it, roll back to the latest checkpoint, skip
+    # the poisoned window, and finish with exit 0.  The recovered run's
+    # deterministic columns must match a clean run with the same window
+    # pre-skipped (--skip-data) — the shell twin of the orchestration.rs
+    # sentinel suite.
+    NUMSTEP=23   # between checkpoints 16 and 24 → a real rollback + replay
+
+    echo "== chaos[numeric]: clean reference with --skip-data $NUMSTEP =="
+    "$BIN" "${common_args[@]}" --out "$WORK/ref_out" \
+        --run-dir "$WORK/ref_run" --skip-data "$NUMSTEP" --no-sentinel
+
+    for kind in nan spike; do
+        # a spike is finite, so detection needs the z-score armed: short
+        # warmup window, threshold far above healthy jitter yet far below
+        # the injected x1e4 gradient blow-up
+        extra=()
+        [[ "$kind" == spike ]] && extra=(--spike-window 4 --spike-zscore 50)
+
+        echo "== chaos[numeric]: PALLAS_NUMFAULT=$NUMSTEP:$kind must recover =="
+        if ! PALLAS_NUMFAULT="$NUMSTEP:$kind" "$BIN" "${common_args[@]}" \
+                --out "$WORK/${kind}_out" --run-dir "$WORK/${kind}_run" \
+                "${extra[@]}"; then
+            echo "chaos[numeric]: FAIL — $kind injection made the run exit nonzero" >&2
+            exit 1
+        fi
+        if ! grep -q '"intervention"' "$WORK/${kind}_run/journal.jsonl"; then
+            echo "chaos[numeric]: FAIL — no intervention in the $kind run's journal" >&2
+            exit 1
+        fi
+
+        ref_row="$(tail -n1 "$WORK/ref_out"/*__steps.csv | cut -d, -f1-4)"
+        res_row="$(tail -n1 "$WORK/${kind}_out"/*__steps.csv | cut -d, -f1-4)"
+        echo "chaos[numeric]: ref  final row: $ref_row"
+        echo "chaos[numeric]: $kind final row: $res_row"
+        if [[ "$ref_row" != "$res_row" ]]; then
+            echo "chaos[numeric]: FAIL — $kind recovery diverged from the pre-skip reference" >&2
+            exit 1
+        fi
+    done
+
+    echo "chaos[numeric]: OK — nan and spike injections at step $NUMSTEP recovered bit-identically"
     exit 0
 fi
 

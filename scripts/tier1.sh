@@ -22,6 +22,11 @@
 #                                  # kill -9/relaunch smoke loop
 #                                  # (scripts/chaos.sh --mp; no-op when
 #                                  # cargo is absent)
+#   scripts/tier1.sh --chaos-numeric  # additionally run the numeric-fault
+#                                  # smoke loop: PALLAS_NUMFAULT injection
+#                                  # must recover via sentinel rollback
+#                                  # (scripts/chaos.sh --numeric; no-op
+#                                  # when cargo is absent)
 #
 # When `cargo` is missing, scripts/toolchain.sh is invoked to bootstrap a
 # pinned toolchain (rustup; needs network on first run).
@@ -35,6 +40,7 @@ SCRIPT_DIR="$(cd "$(dirname "$0")" && pwd)"
 BENCH_DIFF=0
 CHAOS=0
 CHAOS_MP=0
+CHAOS_NUMERIC=0
 FAST=0
 for arg in "$@"; do
     case "$arg" in
@@ -42,6 +48,7 @@ for arg in "$@"; do
         --bench-diff) BENCH_DIFF=1 ;;
         --chaos) CHAOS=1 ;;
         --chaos-mp) CHAOS_MP=1 ;;
+        --chaos-numeric) CHAOS_NUMERIC=1 ;;
         *) echo "tier1: unknown flag $arg" >&2; exit 64 ;;
     esac
 done
@@ -110,6 +117,11 @@ fi
 if [[ $CHAOS_MP -eq 1 ]]; then
     echo "== chaos-mp (multi-process smoke: kill -9 a worker + relaunch) =="
     "$SCRIPT_DIR/chaos.sh" --mp
+fi
+
+if [[ $CHAOS_NUMERIC -eq 1 ]]; then
+    echo "== chaos-numeric (sentinel smoke: PALLAS_NUMFAULT + rollback) =="
+    "$SCRIPT_DIR/chaos.sh" --numeric
 fi
 
 echo "tier1: OK"
