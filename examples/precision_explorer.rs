@@ -5,8 +5,8 @@
 //!     cargo run --release --example precision_explorer
 
 use fp4train::formats::analysis::measure;
-use fp4train::formats::{Granularity, FP4_E2M1, FP8_E4M3, FP8_E5M2};
-use fp4train::quant::{compression_ratio, default_fp4, dequantize};
+use fp4train::formats::{fake_quant_rows, fake_quant_rows_sr, Granularity, FP4_E2M1, FP8_E4M3, FP8_E5M2};
+use fp4train::quant::{self, compression_ratio, default_fp4, dequantize, GranSpec};
 use fp4train::tensor::Tensor;
 use fp4train::util::rng::Rng;
 
@@ -69,10 +69,43 @@ fn main() {
         ("per-tensor", Granularity::PerTensor),
         ("per-row (token/channel)", Granularity::PerRow),
         ("per-block 128 (paper)", Granularity::PerBlock(128)),
+        ("two-level 16 (NVFP4)", Granularity::TwoLevelBlock(16)),
     ] {
         let s = measure(&data, 64, 256, FP4_E2M1, g);
         println!("  {label:<26} sqnr {:>7.1} dB   underflow {:>6.2}%", s.sqnr_db, s.underflow * 100.0);
     }
+
+    println!("\n== two-level scale plane: storage vs flat f32 scales ==");
+    let mut rng = Rng::new(10);
+    let w = Tensor::randn(&[64, 256], 0.02, &mut rng);
+    for (label, gran) in [
+        ("fp4 per-block-16, f32 scales", GranSpec::PerBlock(16)),
+        ("fp4 two-level-16, fp8 scale codes", GranSpec::TwoLevelBlock(16)),
+    ] {
+        let q = quant::quantize(&w, FP4_E2M1, gran);
+        println!(
+            "  {label:<34} {:>5} B packed + {:>5} B scales = {:.2}x compression",
+            q.packed.len(),
+            quant::storage_bytes(&q) - q.packed.len(),
+            compression_ratio(&q)
+        );
+    }
+
+    println!("\n== stochastic vs nearest-even rounding (gradient-shaped data) ==");
+    let g: Vec<f32> = (0..64 * 256).map(|_| rng.normal_f32(0.0, 0.02)).collect();
+    let rne = fake_quant_rows(&g, 64, 256, FP4_E2M1, Granularity::TwoLevelBlock(16));
+    let sr = fake_quant_rows_sr(&g, 64, 256, FP4_E2M1, Granularity::TwoLevelBlock(16), 0xC0FFEE);
+    let bias = |q: &[f32]| {
+        q.iter().zip(&g).map(|(a, b)| (a - b) as f64).sum::<f64>() / g.len() as f64
+    };
+    let flipped = rne.iter().zip(&sr).filter(|(a, b)| a != b).count();
+    println!(
+        "  RNE mean error {:+.3e}   SR mean error {:+.3e}   ({:.1}% of elements rounded differently)",
+        bias(&rne),
+        bias(&sr),
+        100.0 * flipped as f64 / g.len() as f64
+    );
+    println!("  (SR is the unbiased estimator: its mean error shrinks with 1/sqrt(n))");
 
     println!("\n== fp4 checkpoint codec ==");
     let mut rng = Rng::new(9);

@@ -98,8 +98,12 @@ def quantize_to_grid(x: jnp.ndarray, fmt: FpFormat) -> jnp.ndarray:
 
 # --- scaling granularities -------------------------------------------------
 
-GRANULARITIES = ("tensor", "token", "channel", "block")
+GRANULARITIES = ("tensor", "token", "channel", "block", "two_level_block")
 DEFAULT_BLOCK = 128  # paper §3.2: "block size is set to 128"
+
+# The two-level scheme stores per-block scales as FP8-E4M3 codes over one
+# f32 per-tensor scale (NVFP4 construction; rust formats::TWO_LEVEL_SCALE_FMT).
+TWO_LEVEL_SCALE_FMT = FP8_E4M3
 
 
 def _absmax(x: jnp.ndarray, axis, keepdims=True) -> jnp.ndarray:
@@ -146,6 +150,10 @@ def fake_quant(
                     output channel of a matmul RHS when axis=0.
       * "block"   — 1-D blocks of length `block` along `axis` (the
                     contraction dimension); one scale per block (§3.2).
+      * "two_level_block" — like "block", but the per-block scale is
+                    itself rounded onto the FP8-E4M3 grid over one f32
+                    per-tensor scale (the NVFP4 construction); blocks
+                    whose scale rounds to zero are forced to zero.
 
     The scale is alpha = absmax/Q_max (Eq. 3), applied as
     dequant(quantize_to_grid(x/alpha)) * alpha.
@@ -166,6 +174,28 @@ def fake_quant(
         reduce_axes = tuple(a for a in range(x.ndim) if a != axis)
         scale = _absmax(x, axis=reduce_axes) / fmt.max_value
         return quantize_to_grid(x / scale, fmt) * scale
+
+    if granularity == "two_level_block":
+        k = x.shape[axis]
+        if k % block != 0:
+            block = k  # degenerate geometry: whole axis as one block
+        nb = k // block
+        new_shape = x.shape[:axis] + (nb, block) + x.shape[axis + 1 :]
+        xb = x.reshape(new_shape)
+        # tensor scale: top block lands on the top FP8 scale code (guarded
+        # like rust two_level_tensor_scale for all-zero/non-finite input)
+        absmax = jnp.max(jnp.abs(x))
+        ts = absmax / jnp.float32(TWO_LEVEL_SCALE_FMT.max_value * fmt.max_value)
+        ts = jnp.where((ts == 0.0) | ~jnp.isfinite(ts), jnp.float32(1.0), ts)
+        # per-block scale: flat absmax scale in units of ts, rounded onto
+        # the FP8 grid (== the scale-code encode/decode round-trip)
+        bm = jnp.max(jnp.abs(xb), axis=axis + 1, keepdims=True)
+        target = (bm / jnp.float32(fmt.max_value)) / ts
+        s_eff = quantize_to_grid(target, TWO_LEVEL_SCALE_FMT) * ts
+        zeroed = (s_eff == 0.0) | ~jnp.isfinite(s_eff)
+        scale = jnp.where(zeroed, jnp.float32(1.0), s_eff)
+        q = jnp.where(zeroed, jnp.float32(0.0), quantize_to_grid(xb / scale, fmt) * scale)
+        return q.reshape(x.shape)
 
     if granularity == "block":
         k = x.shape[axis]

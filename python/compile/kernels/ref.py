@@ -127,46 +127,182 @@ def np_quantize_to_grid(x: np.ndarray, fmt: FpFormat) -> np.ndarray:
     return np.clip(q, -fmt.max_value, fmt.max_value).astype(np.float32)
 
 
-def np_fake_quant_rows(x: np.ndarray, fmt: FpFormat, block: int = 0) -> np.ndarray:
+_SPLITMIX_GAMMA = np.uint64(0x9E3779B97F4A7C15)
+
+
+def np_counter_hash(key: int, idx) -> np.ndarray:
+    """Numpy mirror of rust `util::rng::counter_hash`: the splitmix64
+    finalizer of `key + (idx+1)*gamma`, wrapping uint64 arithmetic.  A pure
+    function of (key, element index), so the stochastic-rounding draw of an
+    element never depends on thread layout or evaluation order."""
+    idx = np.asarray(idx, dtype=np.uint64)
+    with np.errstate(over="ignore"):
+        z = np.uint64(key) + (idx + np.uint64(1)) * _SPLITMIX_GAMMA
+        z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+        z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+        return z ^ (z >> np.uint64(31))
+
+
+def np_unit_f32(h: np.ndarray) -> np.ndarray:
+    """Mirror of rust `util::rng::unit_f32`: top 24 bits -> [0, 1)."""
+    h = np.asarray(h, dtype=np.uint64)
+    return (h >> np.uint64(40)).astype(np.uint32).astype(np.float32) * np.float32(
+        1.0 / (1 << 24)
+    )
+
+
+def fnv1a64(name: str) -> int:
+    """FNV-1a 64-bit of the utf-8 bytes (rust `util::fnv1a64`) — the SR key
+    of a linear layer is the hash of its stable sentinel name."""
+    h = 0xCBF29CE484222325
+    for byte in name.encode("utf-8"):
+        h ^= byte
+        h = (h * 0x100000001B3) & 0xFFFFFFFFFFFFFFFF
+    return h
+
+
+# SR key tags (rust `refmodel::qlinear`): the per-linear key is XOR'd with
+# a per-operand tag so the act-grad and weight-grad draws decorrelate.
+SR_TAG_AGRAD = 0xA11C_E00D_0000_0001
+SR_TAG_WGRAD = 0xA11C_E00D_0000_0002
+
+
+def np_quantize_sr(x: np.ndarray, u: np.ndarray, fmt: FpFormat) -> np.ndarray:
+    """Numpy mirror of rust `FpFormat::quantize_sr`: round down to the grid
+    point below, up with probability equal to the fractional grid position
+    (round up iff `u < frac`), saturating at +-max_value.  `u` is the
+    per-element uniform in [0, 1)."""
+    x = np.asarray(x, dtype=np.float32)
+    u = np.asarray(u, dtype=np.float32)
+    ax = np.abs(x)
+    with np.errstate(invalid="ignore", over="ignore", divide="ignore"):
+        # grid step of |x|'s binade: v = 2^(e - man), e = max(frexp-1, 1-bias)
+        _, e_raw = np.frexp(np.where(ax > 0, ax, np.float32(1.0)))
+        e = np.maximum(e_raw - 1, 1 - fmt.bias)
+        v = np.exp2((e - fmt.man).astype(np.float32)).astype(np.float32)
+        t = (x / v).astype(np.float32)
+        lo = np.floor(t).astype(np.float32)
+        frac = (t - lo).astype(np.float32)
+        up = (frac > 0.0) & (u < frac)
+        q = np.where(up, (lo + np.float32(1.0)) * v, lo * v).astype(np.float32)
+        q = np.clip(q, -fmt.max_value, fmt.max_value)
+        # saturation is deterministic (never rounds past the format max);
+        # zero and NaN pass through
+        sat = np.where(x > 0, np.float32(fmt.max_value), np.float32(-fmt.max_value))
+        q = np.where(ax >= np.float32(fmt.max_value), sat, q)
+        q = np.where(x == 0.0, np.float32(0.0), q)
+        q = np.where(np.isnan(x), np.float32(np.nan), q)
+    return q.astype(np.float32)
+
+
+def _np_two_level_scales(x2d: np.ndarray, fmt: FpFormat, b: int):
+    """Per-block effective scales of the NVFP4-style two-level scheme
+    (mirror of rust `two_level_tensor_scale` + `two_level_block_scale`):
+    one f32 tensor scale `ts = absmax / (448 * fmt.max)`, and per block the
+    flat scale re-expressed in units of `ts` and rounded onto the FP8-E4M3
+    grid.  Blocks whose effective scale rounds to zero (or is non-finite)
+    are **forced zero**: scale 1.0 + a `zeroed` mask the caller applies.
+    Returns `(scale (rows, nb, 1), zeroed mask, ts)`."""
+    rows, cols = x2d.shape
+    xb = x2d.reshape(rows, cols // b, b)
+    absmax = np.float32(np.max(np.abs(x2d))) if x2d.size else np.float32(0.0)
+    ts = np.float32(absmax / np.float32(FP8_E4M3.max_value * fmt.max_value))
+    if float(ts) == 0.0 or not np.isfinite(ts):
+        ts = np.float32(1.0)
+    bm = np.max(np.abs(xb), axis=-1, keepdims=True).astype(np.float32)
+    target = ((bm / np.float32(fmt.max_value)) / ts).astype(np.float32)
+    # decode(encode(target)) == grid-quantize(target): the scale-code
+    # round-trip is exactly an FP8-E4M3 grid projection
+    s_eff = (np_quantize_to_grid(target, FP8_E4M3) * ts).astype(np.float32)
+    zeroed = (s_eff == 0.0) | ~np.isfinite(s_eff)
+    scale = np.where(zeroed, np.float32(1.0), s_eff).astype(np.float32)
+    return scale, zeroed, ts
+
+
+def np_fake_quant_rows(
+    x: np.ndarray, fmt: FpFormat, block: int = 0, two_level: bool = False
+) -> np.ndarray:
     """Fake-quantize a 2-D float32 array along its trailing axis with
     absmax scaling: one scale per row (block == 0, "token") or per
     `block`-long segment, falling back to the whole row when the block
     does not divide it (rust `formats::effective_block`).  All-zero
-    groups take scale 1.0 so zeros stay exact."""
+    groups take scale 1.0 so zeros stay exact.  With `two_level`, the
+    per-block scale is itself FP8-E4M3-quantized over one f32 tensor
+    scale (NVFP4 construction, rust `Granularity::TwoLevelBlock`)."""
     x = np.asarray(x, dtype=np.float32)
     rows, cols = x.shape
     b = cols if block == 0 or cols % block != 0 else block
     xb = x.reshape(rows, cols // b, b)
-    absmax = np.max(np.abs(xb), axis=-1, keepdims=True).astype(np.float32)
-    scale = np.where(absmax == 0.0, np.float32(1.0), absmax / np.float32(fmt.max_value))
-    out = np_quantize_to_grid(xb / scale, fmt) * scale
+    if two_level:
+        scale, zeroed, _ = _np_two_level_scales(x, fmt, b)
+        out = np.where(
+            zeroed, np.float32(0.0), np_quantize_to_grid(xb / scale, fmt) * scale
+        )
+    else:
+        absmax = np.max(np.abs(xb), axis=-1, keepdims=True).astype(np.float32)
+        scale = np.where(absmax == 0.0, np.float32(1.0), absmax / np.float32(fmt.max_value))
+        out = np_quantize_to_grid(xb / scale, fmt) * scale
+    return out.reshape(rows, cols).astype(np.float32)
+
+
+def np_fake_quant_rows_sr(
+    x: np.ndarray, fmt: FpFormat, block: int, key: int, two_level: bool = False
+) -> np.ndarray:
+    """Stochastic-rounding variant of `np_fake_quant_rows` (mirror of rust
+    `formats::fake_quant_rows_sr`): identical scale computation, but each
+    element is projected with `np_quantize_sr` on a counter-based uniform
+    keyed on `(key, absolute flat index)` — bit-identical to the rust
+    engine at any thread count because the draw of element `i` depends
+    only on `(key, i)`."""
+    x = np.asarray(x, dtype=np.float32)
+    rows, cols = x.shape
+    b = cols if block == 0 or cols % block != 0 else block
+    xb = x.reshape(rows, cols // b, b)
+    if two_level:
+        scale, zeroed, _ = _np_two_level_scales(x, fmt, b)
+    else:
+        absmax = np.max(np.abs(xb), axis=-1, keepdims=True).astype(np.float32)
+        scale = np.where(absmax == 0.0, np.float32(1.0), absmax / np.float32(fmt.max_value))
+        zeroed = np.zeros_like(scale, dtype=bool)
+    idx = np.arange(rows * cols, dtype=np.uint64).reshape(rows, cols // b, b)
+    u = np_unit_f32(np_counter_hash(key, idx))
+    out = np.where(zeroed, np.float32(0.0), np_quantize_sr(xb / scale, u, fmt) * scale)
     return out.reshape(rows, cols).astype(np.float32)
 
 
 class NpSpec:
     """One operand-quantization spec: format (None = exact) + block size
-    (0 = per-token/row)."""
+    (0 = per-token/row) + optional NVFP4-style two-level block scaling."""
 
-    def __init__(self, fmt=None, block=0):
+    def __init__(self, fmt=None, block=0, two_level=False):
         self.fmt = fmt
         self.block = block
+        self.two_level = two_level
 
     def apply(self, x2d):
         if self.fmt is None:
             return np.asarray(x2d, dtype=np.float32)
-        return np_fake_quant_rows(x2d, self.fmt, self.block)
+        return np_fake_quant_rows(x2d, self.fmt, self.block, self.two_level)
+
+    def apply_sr(self, x2d, key):
+        if self.fmt is None:
+            return np.asarray(x2d, dtype=np.float32)
+        return np_fake_quant_rows_sr(x2d, self.fmt, self.block, key, self.two_level)
 
 
 class NpRecipe:
     """Per-module precision recipe (paper Table 2 row): attention linears,
-    FFN linears, weight-grad GEMMs, act-grad GEMMs."""
+    FFN linears, weight-grad GEMMs, act-grad GEMMs.  `sr_grad` switches
+    the gradient fake-quants (agrad's Qa(g), wgrad's Qb(g)) to
+    counter-based stochastic rounding; everything else stays RNE."""
 
-    def __init__(self, attn=None, ffn=None, wgrad=None, agrad=None):
+    def __init__(self, attn=None, ffn=None, wgrad=None, agrad=None, sr_grad=False):
         none = NpSpec()
         self.attn = attn or none
         self.ffn = ffn or none
         self.wgrad = wgrad or none
         self.agrad = agrad or none
+        self.sr_grad = sr_grad
 
 
 def np_qlinear_fwd(x, w, spec: NpSpec):
@@ -180,17 +316,22 @@ def np_qlinear_fwd(x, w, spec: NpSpec):
     return (xq @ wq).astype(np.float32), (x, w, wq)
 
 
-def np_qlinear_bwd(res, g, fwd: NpSpec, wgrad: NpSpec, agrad: NpSpec):
+def np_qlinear_bwd(res, g, fwd: NpSpec, wgrad: NpSpec, agrad: NpSpec, sr=False, key=0):
     """Backward of the quantized linear (straight-through estimator):
       dx = Qa(g) @ Qf(w)^T      (agrad usually exact — paper §3.2)
       dw = Qb(x)^T @ Qb(g)      (both operands grouped along tokens M)
     `g` is (M, N); Qa groups g along N (the dx contraction); Qb groups
-    the transposed operands along M (the dw contraction)."""
+    the transposed operands along M (the dw contraction).  With `sr`, the
+    two *gradient* operands round stochastically under `key` (the
+    linear's fnv1a64 name hash) XOR'd with the per-operand tag; the
+    activation operand `Qb(x)` always stays RNE — rust
+    `qlinear::backward_into`."""
     x, _w, wq = res
-    gq = agrad.apply(g)
+    gq = agrad.apply_sr(g, key ^ SR_TAG_AGRAD) if sr else agrad.apply(g)
     dx = (gq @ wq.T).astype(np.float32)
     xqt = wgrad.apply(np.ascontiguousarray(x.T))       # (K, M) grouped along M
-    gqt = wgrad.apply(np.ascontiguousarray(g.T))       # (N, M) grouped along M
+    gt = np.ascontiguousarray(g.T)                     # (N, M) grouped along M
+    gqt = wgrad.apply_sr(gt, key ^ SR_TAG_WGRAD) if sr else wgrad.apply(gt)
     dw = (xqt @ np.ascontiguousarray(gqt.T)).astype(np.float32)
     return dx, dw
 
@@ -337,17 +478,22 @@ class NpRefModel:
         g["ln_f_g"] += dgf
         g["ln_f_b"] += dbf
 
+        sr = self.recipe.sr_grad
         for i in reversed(range(c["layers"])):
             al, fl, wg, ag = (self.recipe.attn, self.recipe.ffn,
                               self.recipe.wgrad, self.recipe.agrad)
             cc = caches[i]
+            # SR keys: fnv1a64 of the rust engine's stable linear names
+            # (RefModel::linears_mut) — the spec the rust sr_key mirrors
+            k_qkv, k_proj = fnv1a64(f"qkv.{i}"), fnv1a64(f"proj.{i}")
+            k_fc1, k_fc2 = fnv1a64(f"fc1.{i}"), fnv1a64(f"fc2.{i}")
             # MLP branch: x2 = x1 + fc2(gelu(fc1(ln2(x1)))) + b_fc2
             g[f"b_fc2.{i}"] += dx.sum(0).astype(np.float32)
-            da, dwfc2 = np_qlinear_bwd(cc["fc2res"], dx, fl, wg, ag)
+            da, dwfc2 = np_qlinear_bwd(cc["fc2res"], dx, fl, wg, ag, sr, k_fc2)
             g[f"w_fc2.{i}"] += dwfc2
             du = _np_gelu_bwd(da, cc["u"], cc["t_gelu"])
             g[f"b_fc1.{i}"] += du.sum(0).astype(np.float32)
-            dh2, dwfc1 = np_qlinear_bwd(cc["fc1res"], du, fl, wg, ag)
+            dh2, dwfc1 = np_qlinear_bwd(cc["fc1res"], du, fl, wg, ag, sr, k_fc1)
             g[f"w_fc1.{i}"] += dwfc1
             dx1, dg2, db2 = _np_layernorm_bwd(dh2, p[f"ln2_g.{i}"], cc["ln2res"])
             g[f"ln2_g.{i}"] += dg2
@@ -355,7 +501,7 @@ class NpRefModel:
             dx1 = (dx1 + dx).astype(np.float32)  # residual
             # attention branch: x1 = x + o(ctx) + b_o
             g[f"b_o.{i}"] += dx1.sum(0).astype(np.float32)
-            dctx, dwo = np_qlinear_bwd(cc["ores"], dx1, al, wg, ag)
+            dctx, dwo = np_qlinear_bwd(cc["ores"], dx1, al, wg, ag, sr, k_proj)
             g[f"w_o.{i}"] += dwo
             dctx4 = dctx.reshape(b, t, h, dh).transpose(0, 2, 1, 3)
             probs, q, k, v = cc["probs"], cc["q"], cc["k"], cc["v"]
@@ -369,7 +515,7 @@ class NpRefModel:
                 [a.transpose(0, 2, 1, 3).reshape(b * t, d) for a in (dq, dk, dv)], axis=-1
             ).astype(np.float32)
             g[f"b_qkv.{i}"] += dqkv.sum(0).astype(np.float32)
-            dh1, dwqkv = np_qlinear_bwd(cc["qkvres"], dqkv, al, wg, ag)
+            dh1, dwqkv = np_qlinear_bwd(cc["qkvres"], dqkv, al, wg, ag, sr, k_qkv)
             g[f"w_qkv.{i}"] += dwqkv
             dxr, dg1, db1 = _np_layernorm_bwd(dh1, p[f"ln1_g.{i}"], cc["ln1res"])
             g[f"ln1_g.{i}"] += dg1
@@ -390,6 +536,17 @@ MICRO_CONFIG = dict(vocab=32, layers=2, d_model=16, n_head=2, d_ff=32, seq=8, ba
 # real multi-block grouping is exercised at micro width.
 MICRO_QUANT = NpRecipe(
     attn=NpSpec(FP8_E4M3, 8), ffn=NpSpec(FP4_E2M1, 8), wgrad=NpSpec(FP8_E4M3, 8)
+)
+
+# NVFP4-style variant: FFN linears under two-level block scaling and
+# stochastic rounding on the gradient fake-quants — exercises the
+# scale-plane arithmetic AND the counter-based SR draw sequence through a
+# full forward/backward (rust/tests/refmodel_golden.rs replays it).
+MICRO_NVFP4_SR = NpRecipe(
+    attn=NpSpec(FP8_E4M3, 8),
+    ffn=NpSpec(FP4_E2M1, 8, two_level=True),
+    wgrad=NpSpec(FP8_E4M3, 8),
+    sr_grad=True,
 )
 
 
@@ -421,6 +578,7 @@ def refmodel_fixture(seed: int = 7) -> dict:
         return outs
 
     quant = run(NpRefModel(cfg, MICRO_QUANT))
+    nvfp4_sr = run(NpRefModel(cfg, MICRO_NVFP4_SR))
     fp16 = run(model16)
 
     def arr(a):
@@ -444,6 +602,13 @@ def refmodel_fixture(seed: int = 7) -> dict:
             "wgrad": {"fmt": "fp8_e4m3", "block": 8},
             "agrad": {"fmt": "none", "block": 0},
         },
+        "recipe_nvfp4_sr": {
+            "attn": {"fmt": "fp8_e4m3", "block": 8},
+            "ffn": {"fmt": "fp4_e2m1", "block": 8, "two_level": True},
+            "wgrad": {"fmt": "fp8_e4m3", "block": 8},
+            "agrad": {"fmt": "none", "block": 0},
+            "sr_grad": True,
+        },
         "seed": seed,
         "batch": [[int(v) for v in row] for row in batch],
         "params": {k: {"shape": list(np.shape(v)), "data": arr(v)}
@@ -454,9 +619,17 @@ def refmodel_fixture(seed: int = 7) -> dict:
                        "quantized run, so its bound is format-derived",
             "fp16_rel_l2": 2e-5,
             "quant_rel_l2": 5e-3,
+            # SR moves each rounding boundary to the draw point u, so
+            # accumulation-order noise can flip a few extra elements by a
+            # grid step — slightly wider than the RNE quantized bound
+            "nvfp4_sr_rel_l2": 7e-3,
             "loss_abs": 2e-4,
         },
-        "runs": {"fp16": pack_run(fp16), "quant": pack_run(quant)},
+        "runs": {
+            "fp16": pack_run(fp16),
+            "quant": pack_run(quant),
+            "nvfp4_sr": pack_run(nvfp4_sr),
+        },
     }
 
 
@@ -483,6 +656,13 @@ __all__ = [
     "quantize_to_grid",
     "np_quantize_to_grid",
     "np_fake_quant_rows",
+    "np_fake_quant_rows_sr",
+    "np_quantize_sr",
+    "np_counter_hash",
+    "np_unit_f32",
+    "fnv1a64",
+    "SR_TAG_AGRAD",
+    "SR_TAG_WGRAD",
     "NpSpec",
     "NpRecipe",
     "NpRefModel",

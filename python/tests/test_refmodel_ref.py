@@ -28,10 +28,16 @@ from compile import train as L2train
 from compile.formats import FORMATS, FP4_E2M1, FP8_E4M3, QuantSpec, fake_quant
 from compile.kernels.ref import (
     MICRO_CONFIG,
+    MICRO_NVFP4_SR,
     MICRO_QUANT,
     NpRecipe,
     NpRefModel,
+    fnv1a64,
+    np_counter_hash,
     np_fake_quant_rows,
+    np_fake_quant_rows_sr,
+    np_quantize_sr,
+    np_unit_f32,
     refmodel_fixture,
 )
 
@@ -98,6 +104,80 @@ def test_np_fake_quant_matches_jax():
             else:
                 want = fake_quant(jnp.asarray(x), fmt, "block", axis=-1, block=block)
             np.testing.assert_array_equal(got, np.asarray(want), err_msg=f"{fmt.name} {rows}x{cols} b{block}")
+
+
+def test_np_two_level_matches_jax():
+    """numpy two-level fake-quant == the jax `two_level_block` granularity
+    elementwise — including all-zero blocks (forced zero, scale 1.0) and
+    blocks whose scale rounds to zero under a huge tensor absmax."""
+    rng = np.random.default_rng(5)
+    for fmt in (FP4_E2M1, FP8_E4M3):
+        for rows, cols, block in [(4, 16, 8), (3, 24, 8), (5, 10, 4), (2, 7, 3)]:
+            x = (rng.standard_normal((rows, cols)) * 10.0 ** float(rng.integers(-3, 3))).astype(np.float32)
+            x[0, :] = 0.0            # an all-zero block row
+            x[1, 0] = 1e30           # huge absmax -> tiny blocks round to zero scale
+            x[1, -1] = 1e-30         # denormal-underflow territory
+            got = np_fake_quant_rows(x, fmt, block, two_level=True)
+            want = fake_quant(jnp.asarray(x), fmt, "two_level_block", axis=-1, block=block)
+            np.testing.assert_array_equal(
+                got, np.asarray(want), err_msg=f"{fmt.name} {rows}x{cols} b{block}"
+            )
+            assert np.all(got[0, :] == 0.0)  # forced-zero block stays exact zero
+
+
+def test_sr_counter_draws_are_deterministic_and_uniform():
+    h = np_counter_hash(0xFEED, np.arange(4096, dtype=np.uint64))
+    h2 = np_counter_hash(0xFEED, np.arange(4096, dtype=np.uint64))
+    np.testing.assert_array_equal(h, h2)
+    u = np_unit_f32(h)
+    assert np.all((u >= 0.0) & (u < 1.0))
+    assert abs(float(u.mean()) - 0.5) < 0.02  # coarse uniformity
+    # different keys decorrelate
+    assert np.mean(h == np_counter_hash(0xBEEF, np.arange(4096, dtype=np.uint64))) < 0.01
+
+
+def test_np_quantize_sr_brackets_and_is_unbiased():
+    rng = np.random.default_rng(9)
+    x = (rng.standard_normal(512) * 2.0).astype(np.float32)
+    for fmt in (FP4_E2M1, FP8_E4M3):
+        # grid points are fixed regardless of the draw
+        from compile.kernels.ref import np_quantize_to_grid
+        g = np_quantize_to_grid(x, fmt)
+        np.testing.assert_array_equal(np_quantize_sr(g, np.full_like(g, 0.3), fmt), g)
+        # off-grid values land on one of the two bracketing grid points,
+        # and averaging over many draws recovers the value (unbiasedness)
+        acc = np.zeros_like(x, dtype=np.float64)
+        draws = 512
+        for d in range(draws):
+            u = np_unit_f32(np_counter_hash(d, np.arange(len(x), dtype=np.uint64)))
+            q = np_quantize_sr(x, u, fmt)
+            assert np.all(np.abs(q) <= fmt.max_value)
+            acc += q
+        mean = (acc / draws).astype(np.float32)
+        clipped = np.clip(x, -fmt.max_value, fmt.max_value)
+        # SE of the mean of a Bernoulli mix over one grid step
+        step = np.maximum(np.abs(clipped) * 2.0 ** (-fmt.man), 2.0 ** (1 - fmt.bias - fmt.man))
+        assert np.all(np.abs(mean - clipped) < 4.0 * step / np.sqrt(draws) + 1e-6), fmt.name
+
+
+def test_sr_fake_quant_keyed_and_scale_preserving():
+    rng = np.random.default_rng(11)
+    x = rng.standard_normal((8, 32)).astype(np.float32)
+    for two_level in (False, True):
+        a = np_fake_quant_rows_sr(x, FP4_E2M1, 8, fnv1a64("fc1.0"), two_level)
+        b = np_fake_quant_rows_sr(x, FP4_E2M1, 8, fnv1a64("fc1.0"), two_level)
+        c = np_fake_quant_rows_sr(x, FP4_E2M1, 8, fnv1a64("fc2.0"), two_level)
+        np.testing.assert_array_equal(a, b)  # same key -> same draws
+        assert np.any(a != c)                # different key -> different draws
+        rne = np_fake_quant_rows(x, FP4_E2M1, 8, two_level)
+        assert np.any(a != rne)              # SR actually engages
+        # SR shares the RNE scale computation: outputs stay within one
+        # format grid step of the RNE projection, and the magnitude never
+        # exceeds the (FP8-rounded, for two-level) block scale ceiling
+        assert np.all(np.isfinite(a))
+        assert np.max(np.abs(a)) <= np.max(np.abs(x)) * (1.0 + 2.0**-3) + 1e-6
+        step = np.maximum(np.abs(rne), np.abs(a)) * 2.0 ** (-FP4_E2M1.man) * 1.001 + 1e-6
+        assert np.all(np.abs(a - rne) <= 2.0 * step)
 
 
 def test_fp16_path_matches_jax_autodiff():
@@ -202,7 +282,12 @@ def test_fixture_is_reproducible_and_self_consistent(tmp_path):
     fx = refmodel_fixture(SEED)
     assert fx["config"] == MICRO_CONFIG
     runs = fx["runs"]
-    assert set(runs) == {"fp16", "quant"}
+    assert set(runs) == {"fp16", "quant", "nvfp4_sr"}
+    assert fx["recipe_nvfp4_sr"]["sr_grad"] is True
+    assert fx["recipe_nvfp4_sr"]["ffn"]["two_level"] is True
+    # SR + two-level must produce a run distinct from both baselines
+    assert runs["nvfp4_sr"]["loss"] != runs["quant"]["loss"]
+    assert runs["nvfp4_sr"]["loss"] != runs["fp16"]["loss"]
     n_tok = MICRO_CONFIG["batch"] * MICRO_CONFIG["seq"]
     d = MICRO_CONFIG["d_model"]
     for r in runs.values():

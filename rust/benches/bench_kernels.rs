@@ -15,11 +15,12 @@
 
 use fp4train::bench::Bencher;
 use fp4train::formats::codec::encode_slice;
-use fp4train::formats::{fake_quant_rows, Granularity, FP4_E2M1, FP8_E4M3};
+use fp4train::formats::{fake_quant_rows, fake_quant_rows_sr, Granularity, FP4_E2M1, FP8_E4M3};
 use fp4train::kernels::lut::encode_slice_fast;
 use fp4train::kernels::{
-    fake_quant_rows_auto, fake_quant_rows_fast, matmul_f32, quantize_pack_rows,
-    quantize_pack_rows_auto,
+    fake_quant_rows_auto, fake_quant_rows_fast, fake_quant_rows_sr_auto, fake_quant_rows_sr_fast,
+    matmul_f32, quantize_pack_rows, quantize_pack_rows_auto, quantize_pack_rows_two_level,
+    quantize_pack_rows_two_level_auto,
 };
 use fp4train::quant::{self, GranSpec};
 use fp4train::tensor::Tensor;
@@ -58,6 +59,28 @@ fn main() {
         std::hint::black_box(quantize_pack_rows_auto(&data, rows, cols, FP4_E2M1, g));
     });
 
+    // Two-level (NVFP4-style) quantize+pack: FP8 scale codes over one f32
+    // tensor scale.  Anchor: the fused path stays within 15% of the flat
+    // per-block-128 fused median (checked and printed at the end).
+    let gtl = Granularity::TwoLevelBlock(128);
+    let tl_fast = quantize_pack_rows_two_level(&data, rows, cols, FP4_E2M1, 128);
+    let tl_slow = quant::quantize_scalar(&t, FP4_E2M1, GranSpec::TwoLevelBlock(128));
+    assert_eq!(tl_fast.0, tl_slow.packed, "two-level fused != scalar — bench aborted");
+    let tl_plane = tl_slow.scale_plane.as_ref().expect("two-level scale plane");
+    assert_eq!(tl_fast.2, tl_plane.codes, "two-level plane codes — bench aborted");
+    assert_eq!(tl_fast.3.to_bits(), tl_plane.tensor_scale.to_bits());
+
+    b.section("quantize+pack, 64x4096 fp4 two-level-128 (FP8 scale codes)");
+    b.bench("quantize_pack/64x4096/twolevel128/scalar", Some((n as f64, "elem/s")), || {
+        std::hint::black_box(quant::quantize_scalar(&t, FP4_E2M1, GranSpec::TwoLevelBlock(128)));
+    });
+    b.bench("quantize_pack/64x4096/twolevel128/fused", Some((n as f64, "elem/s")), || {
+        std::hint::black_box(quantize_pack_rows_two_level(&data, rows, cols, FP4_E2M1, 128));
+    });
+    b.bench("quantize_pack/64x4096/twolevel128/parallel", Some((n as f64, "elem/s")), || {
+        std::hint::black_box(quantize_pack_rows_two_level_auto(&data, rows, cols, FP4_E2M1, 128));
+    });
+
     b.section("fake-quant, 64x4096 fp4 per-block-128");
     b.bench("fake_quant/64x4096/scalar", Some((n as f64, "elem/s")), || {
         std::hint::black_box(fake_quant_rows(&data, rows, cols, FP4_E2M1, g));
@@ -67,6 +90,28 @@ fn main() {
     });
     b.bench("fake_quant/64x4096/parallel", Some((n as f64, "elem/s")), || {
         std::hint::black_box(fake_quant_rows_auto(&data, rows, cols, FP4_E2M1, g));
+    });
+
+    // Stochastic-rounding fake-quant (counter-based draws): the gradient
+    // path of the SR recipes.
+    const SR_KEY: u64 = 0x5EED_BEEF;
+    assert_eq!(
+        fake_quant_rows_sr_fast(&data, rows, cols, FP4_E2M1, g, SR_KEY),
+        fake_quant_rows_sr(&data, rows, cols, FP4_E2M1, g, SR_KEY),
+        "SR fused != scalar — bench aborted"
+    );
+    b.section("SR fake-quant, 64x4096 fp4 per-block-128 (gradient path)");
+    b.bench("fake_quant_sr/64x4096/scalar", Some((n as f64, "elem/s")), || {
+        std::hint::black_box(fake_quant_rows_sr(&data, rows, cols, FP4_E2M1, g, SR_KEY));
+    });
+    b.bench("fake_quant_sr/64x4096/fused", Some((n as f64, "elem/s")), || {
+        std::hint::black_box(fake_quant_rows_sr_fast(&data, rows, cols, FP4_E2M1, g, SR_KEY));
+    });
+    b.bench("fake_quant_sr/64x4096/parallel", Some((n as f64, "elem/s")), || {
+        std::hint::black_box(fake_quant_rows_sr_auto(&data, rows, cols, FP4_E2M1, g, SR_KEY));
+    });
+    b.bench("fake_quant_sr/64x4096/twolevel/parallel", Some((n as f64, "elem/s")), || {
+        std::hint::black_box(fake_quant_rows_sr_auto(&data, rows, cols, FP4_E2M1, gtl, SR_KEY));
     });
 
     b.section("raw encode, 256k f32");
@@ -123,5 +168,12 @@ fn main() {
     println!("\nacceptance anchor: fused {anchor:.2}x vs scalar (target >= 3x), parallel {par:.2}x");
     if anchor < 3.0 {
         println!("WARNING: fused speedup below the 3x acceptance bar");
+    }
+    let tl = b
+        .speedup("quantize_pack/64x4096/block128/fused", "quantize_pack/64x4096/twolevel128/fused")
+        .unwrap();
+    println!("two-level anchor: fused two-level runs at {tl:.2}x the flat per-block-128 median (target >= 0.87x, i.e. <= 15% overhead)");
+    if tl < 1.0 / 1.15 {
+        println!("WARNING: two-level fused pack more than 15% slower than flat per-block-128");
     }
 }

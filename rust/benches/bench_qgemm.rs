@@ -47,6 +47,10 @@ fn main() {
     let bt = Tensor::randn(&[k, n], 0.5, &mut rng);
     let q4 = quant::quantize(&bt, FP4_E2M1, GranSpec::PerBlock(128));
     let q8 = quant::quantize(&bt, FP8_E4M3, GranSpec::PerBlock(128));
+    // Two-level (NVFP4-style) operand: same packed codes, FP8 scale codes
+    // over one f32 tensor scale; qgemm reads the derived f32 scales, so
+    // the anchor is "within 15% of the flat per-block-128 qgemm median".
+    let q4tl = quant::quantize(&bt, FP4_E2M1, GranSpec::TwoLevelBlock(128));
 
     // Small shape: low enough MACs that per-call fixed costs (formerly a
     // thread spawn/join round trip, now pool dispatch) are a visible
@@ -61,7 +65,7 @@ fn main() {
     let mut ws = Workspace::new();
     let mut ws_cached = Workspace::with_panel_cache(DEFAULT_PANEL_CACHE_BYTES);
     let mut out = vec![0.0f32; m * n];
-    for q in [&q4, &q8] {
+    for q in [&q4, &q8, &q4tl] {
         let want = matmul_f32(&a, &quant::dequantize(q).data, m, k, n);
         qgemm_into(&a, q, m, k, n, &mut out, &mut ws);
         assert_eq!(bits(&out), bits(&want), "{} qgemm != dequant+matmul — bench aborted", q.fmt_name);
@@ -92,6 +96,10 @@ fn main() {
     });
     b.bench("qgemm/64x4096x512/fp8b128/qgemm", Some((macs, "mac/s")), || {
         qgemm_into(&a, &q8, m, k, n, &mut out, &mut ws);
+        std::hint::black_box(&out);
+    });
+    b.bench("qgemm/64x4096x512/fp4tl128/qgemm", Some((macs, "mac/s")), || {
+        qgemm_into(&a, &q4tl, m, k, n, &mut out, &mut ws);
         std::hint::black_box(&out);
     });
 
@@ -187,6 +195,13 @@ fn main() {
     println!("acceptance anchor: qgemm {anchor:.2}x vs dequant+matmul (target >= 2.5x)");
     if anchor < 2.5 {
         println!("WARNING: qgemm speedup below the 2.5x acceptance bar");
+    }
+    let tl = b
+        .speedup("qgemm/64x4096x512/fp4b128/qgemm", "qgemm/64x4096x512/fp4tl128/qgemm")
+        .unwrap();
+    println!("two-level anchor: qgemm on a two-level operand runs at {tl:.2}x the flat per-block-128 median (target >= 0.87x, i.e. <= 15% overhead)");
+    if tl < 1.0 / 1.15 {
+        println!("WARNING: two-level qgemm more than 15% slower than flat per-block-128");
     }
     let cached = b
         .speedup("qgemm/64x4096x512/fp4b128/qgemm", "qgemm/64x4096x512/fp4b128/qgemm+panelcache")

@@ -30,6 +30,11 @@ pub const FP8_E4M3: FpFormat =
 pub const FP8_E5M2: FpFormat =
     FpFormat { name: "fp8_e5m2", exp: 5, man: 2, bias: 15, max_value: 57344.0 };
 
+/// Format of the per-block scale plane in two-level (NVFP4-style)
+/// scaling: each block scale is an FP8-E4M3 code applied on top of one
+/// f32 per-tensor scale.
+pub const TWO_LEVEL_SCALE_FMT: FpFormat = FP8_E4M3;
+
 impl FpFormat {
     pub fn by_name(name: &str) -> Option<FpFormat> {
         match name {
@@ -88,6 +93,33 @@ impl FpFormat {
         let q = round_half_even(x / v) * v;
         q.clamp(-self.max_value, self.max_value)
     }
+
+    /// Stochastic-rounding projection onto the grid: round down or up to
+    /// the two bracketing representable values with probability equal to
+    /// the distance fractions, so `E[quantize_sr(x, U)] == x` for in-range
+    /// `x` (the unbiased-gradient property of FP4 backprop).  `u` is the
+    /// uniform draw in [0, 1) — the caller supplies it (counter-based, see
+    /// `util::rng::counter_hash`) so results are a pure function of
+    /// `(x, u)` and therefore bit-identical at any thread count.  Exact
+    /// grid points, zeros, and saturated magnitudes stay deterministic.
+    pub fn quantize_sr(&self, x: f32, u: f32) -> f32 {
+        if x == 0.0 || x.is_nan() {
+            return if x.is_nan() { f32::NAN } else { 0.0 };
+        }
+        let ax = x.abs();
+        if ax >= self.max_value {
+            // saturation is deterministic: never round past the format max
+            return if x > 0.0 { self.max_value } else { -self.max_value };
+        }
+        let e_raw = frexp_exp(ax);
+        let e = (e_raw - 1).max(1 - self.bias);
+        let v = exp2i(e - self.man as i32); // grid step of |x|'s binade
+        let t = x / v;
+        let lo = t.floor();
+        let frac = t - lo; // in [0, 1): distance to the lower grid point
+        let q = if frac > 0.0 && u < frac { (lo + 1.0) * v } else { lo * v };
+        q.clamp(-self.max_value, self.max_value)
+    }
 }
 
 /// 2^k as f32 (exact for the exponent ranges these formats use).
@@ -131,6 +163,10 @@ pub enum Granularity {
     PerRow,
     /// One scale per `block`-long segment of the contraction axis.
     PerBlock(usize),
+    /// NVFP4-style two-level scaling: one FP8-E4M3 scale code per
+    /// `block`-long segment, applied on top of a single f32 per-tensor
+    /// scale ([`two_level_tensor_scale`] / [`two_level_block_scale`]).
+    TwoLevelBlock(usize),
 }
 
 /// Effective block length for `PerBlock(b)` over `cols`-long rows: the
@@ -185,19 +221,149 @@ pub fn fake_quant_rows(x: &[f32], rows: usize, cols: usize, fmt: FpFormat, g: Gr
                 }
             }
         }
+        Granularity::TwoLevelBlock(b) => {
+            let b = effective_block(cols, b);
+            let ts = two_level_tensor_scale(absmax_of(x.iter().copied()), fmt);
+            for r in 0..rows {
+                for blk in 0..cols / b {
+                    let seg = &x[r * cols + blk * b..r * cols + blk * b + b];
+                    let bm = absmax_of(seg.iter().copied());
+                    let (_, s, zeroed) = two_level_block_scale(bm, ts, fmt);
+                    let dst = &mut out[r * cols + blk * b..r * cols + blk * b + b];
+                    for (o, &v) in dst.iter_mut().zip(seg) {
+                        *o = if zeroed { 0.0 } else { fmt.quantize(v / s) * s };
+                    }
+                }
+            }
+        }
     }
     out
 }
 
-/// Absmax group scale: `absmax / max_value`, or 1.0 for all-zero groups.
-/// Shared by the scalar reference, `quant`, and the fused kernels so every
-/// path folds the maximum in the same order (bit-identical scales).
+/// Stochastic-rounding variant of [`fake_quant_rows`]: identical scale
+/// computation, but each element is projected with
+/// [`FpFormat::quantize_sr`] on a counter-based uniform keyed on
+/// `(key, flat index)` (`util::rng::counter_hash`).  The scalar reference
+/// for the fused SR sweeps — bit-identical at any thread count because
+/// the uniform of element `i` depends only on `(key, i)`.
+pub fn fake_quant_rows_sr(
+    x: &[f32],
+    rows: usize,
+    cols: usize,
+    fmt: FpFormat,
+    g: Granularity,
+    key: u64,
+) -> Vec<f32> {
+    use crate::util::rng::{counter_hash, unit_f32};
+    assert_eq!(x.len(), rows * cols);
+    let mut out = vec![0.0f32; x.len()];
+    let mut sr_seg = |dst: &mut [f32], seg: &[f32], s: f32, zeroed: bool, base: usize| {
+        for (j, (o, &v)) in dst.iter_mut().zip(seg).enumerate() {
+            *o = if zeroed {
+                0.0
+            } else {
+                let u = unit_f32(counter_hash(key, (base + j) as u64));
+                fmt.quantize_sr(v / s, u) * s
+            };
+        }
+    };
+    match g {
+        Granularity::PerTensor => {
+            let s = scale_of(x.iter().copied(), fmt);
+            sr_seg(&mut out, x, s, false, 0);
+        }
+        Granularity::PerRow => {
+            for r in 0..rows {
+                let row = &x[r * cols..(r + 1) * cols];
+                let s = scale_of(row.iter().copied(), fmt);
+                sr_seg(&mut out[r * cols..(r + 1) * cols], row, s, false, r * cols);
+            }
+        }
+        Granularity::PerBlock(b) => {
+            let b = effective_block(cols, b);
+            for r in 0..rows {
+                for blk in 0..cols / b {
+                    let off = r * cols + blk * b;
+                    let seg = &x[off..off + b];
+                    let s = scale_of(seg.iter().copied(), fmt);
+                    sr_seg(&mut out[off..off + b], seg, s, false, off);
+                }
+            }
+        }
+        Granularity::TwoLevelBlock(b) => {
+            let b = effective_block(cols, b);
+            let ts = two_level_tensor_scale(absmax_of(x.iter().copied()), fmt);
+            for r in 0..rows {
+                for blk in 0..cols / b {
+                    let off = r * cols + blk * b;
+                    let seg = &x[off..off + b];
+                    let (_, s, zeroed) = two_level_block_scale(absmax_of(seg.iter().copied()), ts, fmt);
+                    sr_seg(&mut out[off..off + b], seg, s, zeroed, off);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Absolute maximum of a group (0.0 for an empty group) — the shared fold
+/// so every scale computation sees the identical f32 reduction order.
+#[inline]
+pub fn absmax_of(xs: impl Iterator<Item = f32>) -> f32 {
+    xs.fold(0.0f32, |a, x| a.max(x.abs()))
+}
+
+/// Absmax group scale: `absmax / max_value`, or 1.0 for groups where that
+/// quotient is 0 — all-zero groups AND groups whose absmax is so deep in
+/// the f32 denormal range that the division underflows to 0.  Returning
+/// the raw 0 scale there made `v / s` blow up to inf/NaN downstream; a
+/// unit scale instead quantizes every such element to 0 (they are far
+/// below any supported format's min subnormal), i.e. zero codes with a
+/// finite scale.  Shared by the scalar reference, `quant`, and the fused
+/// kernels so every path folds the maximum in the same order
+/// (bit-identical scales).
 pub fn scale_of(xs: impl Iterator<Item = f32>, fmt: FpFormat) -> f32 {
-    let absmax = xs.fold(0.0f32, |a, x| a.max(x.abs()));
-    if absmax == 0.0 {
+    let s = absmax_of(xs) / fmt.max_value;
+    if s == 0.0 {
         1.0
     } else {
-        absmax / fmt.max_value
+        s
+    }
+}
+
+/// Per-tensor (outer) scale of the two-level scheme: chosen so a block
+/// whose absmax equals the tensor absmax lands exactly on the top of the
+/// FP8-E4M3 scale-code range (`absmax / (448 * fmt.max_value)`, the NVFP4
+/// construction).  Degenerate tensors (all-zero, denormal-underflow, or
+/// non-finite absmax) get a unit scale; the per-block pass then zeroes or
+/// saturates blocks individually.
+pub fn two_level_tensor_scale(absmax: f32, fmt: FpFormat) -> f32 {
+    let ts = absmax / (TWO_LEVEL_SCALE_FMT.max_value * fmt.max_value);
+    if ts == 0.0 || !ts.is_finite() {
+        1.0
+    } else {
+        ts
+    }
+}
+
+/// Per-block (inner) scale of the two-level scheme: the block's flat scale
+/// `block_absmax / fmt.max_value`, re-expressed in units of the tensor
+/// scale `ts` and rounded to the nearest FP8-E4M3 value via the codec
+/// round-trip.  Returns `(code, effective_scale, zeroed)` where
+/// `effective_scale = decode(code) * ts` is the exact f32 the decode side
+/// multiplies by.  When the code rounds to zero (all-zero block, or a
+/// block absmax below half the smallest representable scale) the block is
+/// **forced zero**: `(0, 1.0, true)` — callers store zero element codes
+/// and a unit scale, exactly like flat scaling's all-zero groups, instead
+/// of dividing by a zero scale.
+pub fn two_level_block_scale(block_absmax: f32, ts: f32, fmt: FpFormat) -> (u8, f32, bool) {
+    let target = (block_absmax / fmt.max_value) / ts;
+    let code = codec::encode(TWO_LEVEL_SCALE_FMT, target);
+    let s_eff = codec::decode(TWO_LEVEL_SCALE_FMT, code) * ts;
+    if s_eff == 0.0 || !s_eff.is_finite() {
+        (0, 1.0, true)
+    } else {
+        (code, s_eff, false)
     }
 }
 
@@ -330,9 +496,204 @@ mod tests {
     #[test]
     fn fake_quant_zero_rows_stay_zero() {
         let x = vec![0.0f32; 64];
-        for g in [Granularity::PerTensor, Granularity::PerRow, Granularity::PerBlock(32)] {
+        for g in [
+            Granularity::PerTensor,
+            Granularity::PerRow,
+            Granularity::PerBlock(32),
+            Granularity::TwoLevelBlock(16),
+        ] {
             assert!(fake_quant_rows(&x, 2, 32, FP4_E2M1, g).iter().all(|&v| v == 0.0));
         }
+    }
+
+    /// Regression (zero/denormal satellite): groups whose absmax is 0 or a
+    /// deep f32 denormal must come out of every granularity × format as
+    /// exact zeros with finite scales — no NaN/inf from a 0-divide, no
+    /// scale that underflows to 0.
+    #[test]
+    fn zero_and_denormal_blocks_quantize_to_finite_zero() {
+        let grans = [
+            Granularity::PerTensor,
+            Granularity::PerRow,
+            Granularity::PerBlock(8),
+            Granularity::TwoLevelBlock(8),
+        ];
+        let denormal = f32::from_bits(1); // 2^-149, smallest positive f32
+        let patterns: [Vec<f32>; 3] = [
+            vec![0.0; 32],                                   // all-zero tensor
+            (0..32).map(|i| if i < 8 { denormal } else { 0.0 }).collect(),
+            (0..32)
+                .map(|i| if i % 2 == 0 { denormal * (i + 1) as f32 } else { -denormal })
+                .collect(),                                  // mixed-sign denormals
+        ];
+        for fmt in [FP4_E2M1, FP8_E4M3, FP8_E5M2] {
+            for g in grans {
+                for x in &patterns {
+                    let q = fake_quant_rows(x, 2, 16, fmt, g);
+                    assert!(
+                        q.iter().all(|&v| v == 0.0),
+                        "{} {g:?}: denormal block must quantize to exact zeros, got {q:?}",
+                        fmt.name
+                    );
+                }
+            }
+        }
+        // the scale itself stays finite and nonzero even when absmax/max
+        // underflows (the old code returned the raw 0 quotient here)
+        let s = scale_of([denormal, 0.0].into_iter(), FP8_E5M2);
+        assert!(s.is_finite() && s > 0.0, "underflowed scale must clamp to 1.0, got {s}");
+        assert_eq!(s, 1.0);
+    }
+
+    /// Regression: a denormal-absmax block mixed with normal blocks in the
+    /// same tensor must not poison the normal blocks (per-block scales are
+    /// independent; two-level zeroes only the degenerate block).
+    #[test]
+    fn denormal_block_next_to_normal_block_stays_isolated() {
+        let denormal = f32::from_bits(3);
+        let mut x = vec![0.0f32; 32];
+        for v in x[..16].iter_mut() {
+            *v = denormal;
+        }
+        for (i, v) in x[16..].iter_mut().enumerate() {
+            *v = 1.0 + i as f32 * 0.25;
+        }
+        for g in [Granularity::PerBlock(16), Granularity::TwoLevelBlock(16)] {
+            for fmt in [FP4_E2M1, FP8_E4M3] {
+                let q = fake_quant_rows(&x, 1, 32, fmt, g);
+                assert!(q[..16].iter().all(|&v| v == 0.0), "{} {g:?}", fmt.name);
+                assert!(q[16..].iter().all(|&v| v.is_finite() && v > 0.0), "{} {g:?}", fmt.name);
+                // absmax of the normal block survives exactly
+                assert_eq!(absmax_of(q[16..].iter().copied()), absmax_of(x[16..].iter().copied()));
+            }
+        }
+    }
+
+    #[test]
+    fn two_level_scales_reconstruct_flat_scale_within_fp8_step() {
+        // for a healthy tensor the effective two-level scale of each block
+        // must sit within one FP8-E4M3 RNE step (≤ 2^-4 relative) of the
+        // flat per-block scale it approximates
+        let mut x = vec![0.0f32; 64];
+        for (i, v) in x.iter_mut().enumerate() {
+            *v = (i as f32 * 0.37).sin() * (1.0 + i as f32);
+        }
+        let fmt = FP4_E2M1;
+        let ts = two_level_tensor_scale(absmax_of(x.iter().copied()), fmt);
+        for blk in x.chunks(16) {
+            let bm = absmax_of(blk.iter().copied());
+            let (code, s_eff, zeroed) = two_level_block_scale(bm, ts, fmt);
+            assert!(!zeroed);
+            assert!(code & 0x7F > 0);
+            let flat = bm / fmt.max_value;
+            assert!((s_eff - flat).abs() <= flat * 0.0625 + f32::EPSILON, "{s_eff} vs {flat}");
+        }
+        // the top block's scale code hits the top of the E4M3 range by
+        // construction of the tensor scale
+        let bm = absmax_of(x.iter().copied());
+        let (code, _, _) = two_level_block_scale(bm, ts, fmt);
+        assert_eq!(codec::decode(TWO_LEVEL_SCALE_FMT, code), 448.0);
+    }
+
+    #[test]
+    fn two_level_degenerate_tensor_scales_are_finite() {
+        let fmt = FP4_E2M1;
+        assert_eq!(two_level_tensor_scale(0.0, fmt), 1.0);
+        assert_eq!(two_level_tensor_scale(f32::from_bits(1), fmt), 1.0); // underflow
+        assert_eq!(two_level_tensor_scale(f32::INFINITY, fmt), 1.0);
+        // all-zero block under a healthy tensor scale → forced zero, unit scale
+        let (code, s, zeroed) = two_level_block_scale(0.0, 0.25, fmt);
+        assert_eq!((code, s, zeroed), (0, 1.0, true));
+        // tiny block absmax whose scale code rounds to zero → forced zero
+        let (_, s, zeroed) = two_level_block_scale(1e-30, 1.0, fmt);
+        assert!(zeroed && s == 1.0);
+    }
+
+    #[test]
+    fn quantize_sr_brackets_and_is_deterministic_on_grid() {
+        for fmt in [FP4_E2M1, FP8_E4M3, FP8_E5M2] {
+            // exact grid points never move, whatever the uniform says
+            for v in fmt.grid() {
+                for u in [0.0, 0.25, 0.999_999] {
+                    assert_eq!(fmt.quantize_sr(v, u), v, "{} {v}", fmt.name);
+                    assert_eq!(fmt.quantize_sr(-v, u), -v, "{} -{v}", fmt.name);
+                }
+            }
+            // off-grid values land on one of the two bracketing grid points
+            prop_check(fmt.name, 1000, |c| {
+                let x = c.f32_in(-fmt.max_value * 1.5, fmt.max_value * 1.5);
+                let u = c.f32_in(0.0, 1.0);
+                let q = fmt.quantize_sr(x, u);
+                let rne = fmt.quantize(x);
+                // SR and RNE share the bracket: they differ by at most one
+                // grid step of x's binade, and SR never widens the range
+                prop_assert!(q.abs() <= fmt.max_value);
+                if x.abs() >= fmt.max_value {
+                    prop_assert!(q == rne, "saturated values are deterministic");
+                } else {
+                    let step = {
+                        let e = (frexp_exp(x.abs().max(fmt.min_subnormal())) - 1).max(1 - fmt.bias);
+                        exp2i(e - fmt.man as i32)
+                    };
+                    prop_assert!((q - x).abs() < step + step * 1e-5, "x={x} q={q} step={step}");
+                }
+                Ok(())
+            });
+        }
+    }
+
+    #[test]
+    fn quantize_sr_probability_matches_distance() {
+        // x = -1.3 on the FP4 grid sits 0.6 of the way from -1.0 to -1.5:
+        // it must round to -1.0 exactly when u < frac = 0.4
+        let fmt = FP4_E2M1;
+        assert_eq!(fmt.quantize_sr(-1.3, 0.399), -1.0);
+        assert_eq!(fmt.quantize_sr(-1.3, 0.401), -1.5);
+        assert_eq!(fmt.quantize_sr(1.3, 0.599), 1.5);
+        assert_eq!(fmt.quantize_sr(1.3, 0.601), 1.0);
+        // empirical unbiasedness over counter-hash uniforms
+        use crate::util::rng::{counter_hash, unit_f32};
+        let x = 2.3f32;
+        let mean: f64 = (0..40_000u64)
+            .map(|i| fmt.quantize_sr(x, unit_f32(counter_hash(0xABCD, i))) as f64)
+            .sum::<f64>()
+            / 40_000.0;
+        assert!((mean - x as f64).abs() < 0.01, "E[sr({x})] = {mean}");
+    }
+
+    #[test]
+    fn fake_quant_rows_sr_matches_rne_scales_and_brackets() {
+        // SR shares scale computation with the RNE path: outputs differ
+        // from RNE by at most one grid step × scale, and zero/denormal
+        // groups still come out exactly zero
+        let mut x = vec![0.0f32; 64];
+        for (i, v) in x.iter_mut().enumerate() {
+            *v = ((i * 37 % 64) as f32 - 31.5) * 0.11;
+        }
+        for g in [
+            Granularity::PerTensor,
+            Granularity::PerRow,
+            Granularity::PerBlock(16),
+            Granularity::TwoLevelBlock(16),
+        ] {
+            let rne = fake_quant_rows(&x, 4, 16, FP4_E2M1, g);
+            let sr = fake_quant_rows_sr(&x, 4, 16, FP4_E2M1, g, 0x5EED);
+            // widest grid step in scaled units: 2 * (global absmax / 6)
+            let bound = 2.0 * absmax_of(x.iter().copied()) / 6.0 + 1e-5;
+            for (i, (&a, &b)) in rne.iter().zip(&sr).enumerate() {
+                assert!((a - b).abs() <= bound, "{g:?} i={i}: rne={a} sr={b}");
+                assert!(b.is_finite());
+            }
+            // same key → bit-identical; different key → different draws
+            let sr2 = fake_quant_rows_sr(&x, 4, 16, FP4_E2M1, g, 0x5EED);
+            assert_eq!(
+                sr.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                sr2.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+            );
+        }
+        let zeros = vec![0.0f32; 64];
+        let q = fake_quant_rows_sr(&zeros, 4, 16, FP4_E2M1, Granularity::TwoLevelBlock(16), 7);
+        assert!(q.iter().all(|&v| v == 0.0));
     }
 
     #[test]

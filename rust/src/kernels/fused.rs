@@ -10,9 +10,13 @@
 //! For every other scale the division stays — the speedup comes from the
 //! LUT/bit-twiddle encode, not from approximating the divide.
 
-use crate::formats::{effective_block, scale_of, FpFormat, Granularity};
+use crate::formats::{
+    absmax_of, effective_block, scale_of, two_level_block_scale, two_level_tensor_scale, FpFormat,
+    Granularity, TWO_LEVEL_SCALE_FMT,
+};
+use crate::util::rng::{counter_hash, unit_f32};
 
-use super::lut::{decode_fast, encode_fast, lut_of};
+use super::lut::{decode_fast, encode_fast, lut_of, max_code8};
 
 /// Contiguous group length for a flat (rows × cols) sweep: the whole
 /// tensor, one row, or one block (with the shared degenerate fallback).
@@ -20,7 +24,9 @@ pub(crate) fn group_len(n: usize, cols: usize, g: Granularity) -> usize {
     match g {
         Granularity::PerTensor => n.max(1),
         Granularity::PerRow => cols.max(1),
-        Granularity::PerBlock(b) => effective_block(cols.max(1), b),
+        Granularity::PerBlock(b) | Granularity::TwoLevelBlock(b) => {
+            effective_block(cols.max(1), b)
+        }
     }
 }
 
@@ -80,8 +86,95 @@ pub(crate) fn fake_quant_groups(x: &[f32], glen: usize, fmt: FpFormat, out: &mut
     }
 }
 
+/// Two-level variant of [`fake_quant_groups`]: every `glen`-long group
+/// scales by its FP8-rounded block scale × the caller-supplied tensor
+/// scale `ts` (computed once over the *whole* tensor, so parallel chunk
+/// sweeps stay bit-identical to the serial one).  Forced-zero blocks
+/// (scale code rounds to 0) come out as exact zeros.
+pub(crate) fn fake_quant_groups_two_level(
+    x: &[f32],
+    glen: usize,
+    fmt: FpFormat,
+    ts: f32,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(x.len(), out.len());
+    if x.is_empty() {
+        return;
+    }
+    let table = lut_of(fmt);
+    for (seg, dst) in x.chunks(glen).zip(out.chunks_mut(glen)) {
+        let (_, s, zeroed) = two_level_block_scale(absmax_of(seg.iter().copied()), ts, fmt);
+        if zeroed {
+            dst.fill(0.0);
+            continue;
+        }
+        let recip = exact_recip(s);
+        match (table, recip) {
+            (Some(t), Some(r)) => {
+                for (o, &v) in dst.iter_mut().zip(seg) {
+                    *o = fq_one(fmt, t, v * r, s);
+                }
+            }
+            (Some(t), None) => {
+                for (o, &v) in dst.iter_mut().zip(seg) {
+                    *o = fq_one(fmt, t, v / s, s);
+                }
+            }
+            (None, _) => {
+                for (o, &v) in dst.iter_mut().zip(seg) {
+                    *o = fmt.quantize(v / s) * s;
+                }
+            }
+        }
+    }
+}
+
+/// Stochastic-rounding variant of [`fake_quant_groups`], bit-identical to
+/// `formats::fake_quant_rows_sr`: element `base + j` draws its uniform
+/// from `counter_hash(key, base + j)`, so any chunking whose boundaries
+/// fall on group boundaries (the [`super::parallel`] contract) reproduces
+/// the serial sweep exactly.  `two_level_ts` selects two-level block
+/// scales (Some) or flat group scales (None).  The projection keeps the
+/// scalar `v / s` divide — SR has no LUT form, and sharing the exact op
+/// sequence with the scalar reference is what makes fused == scalar
+/// trivial rather than property-dependent.
+pub(crate) fn fake_quant_groups_sr(
+    x: &[f32],
+    base: u64,
+    glen: usize,
+    fmt: FpFormat,
+    key: u64,
+    two_level_ts: Option<f32>,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(x.len(), out.len());
+    if x.is_empty() {
+        return;
+    }
+    for (gi, (seg, dst)) in x.chunks(glen).zip(out.chunks_mut(glen)).enumerate() {
+        let (s, zeroed) = match two_level_ts {
+            Some(ts) => {
+                let (_, s, z) = two_level_block_scale(absmax_of(seg.iter().copied()), ts, fmt);
+                (s, z)
+            }
+            None => (scale_of(seg.iter().copied(), fmt), false),
+        };
+        if zeroed {
+            dst.fill(0.0);
+            continue;
+        }
+        let goff = base + (gi * glen) as u64;
+        for (j, (o, &v)) in dst.iter_mut().zip(seg).enumerate() {
+            let u = unit_f32(counter_hash(key, goff + j as u64));
+            *o = fmt.quantize_sr(v / s, u) * s;
+        }
+    }
+}
+
 /// Fused, LUT-based fake quantization — drop-in, bit-identical replacement
-/// for `formats::fake_quant_rows`.
+/// for `formats::fake_quant_rows` (all granularities, including the
+/// two-level scheme).
 pub fn fake_quant_rows_fast(
     x: &[f32],
     rows: usize,
@@ -91,7 +184,37 @@ pub fn fake_quant_rows_fast(
 ) -> Vec<f32> {
     assert_eq!(x.len(), rows * cols);
     let mut out = vec![0.0f32; x.len()];
-    fake_quant_groups(x, group_len(x.len(), cols, g), fmt, &mut out);
+    match g {
+        Granularity::TwoLevelBlock(_) => {
+            let ts = two_level_tensor_scale(absmax_of(x.iter().copied()), fmt);
+            fake_quant_groups_two_level(x, group_len(x.len(), cols, g), fmt, ts, &mut out);
+        }
+        _ => fake_quant_groups(x, group_len(x.len(), cols, g), fmt, &mut out),
+    }
+    out
+}
+
+/// Stochastic-rounding fake quantization over a (rows × cols) matrix —
+/// the serial entry point mirroring `formats::fake_quant_rows_sr`
+/// bit-for-bit (any granularity; the parallel fan-out is
+/// `kernels::fake_quant_rows_sr_auto`).
+pub fn fake_quant_rows_sr_fast(
+    x: &[f32],
+    rows: usize,
+    cols: usize,
+    fmt: FpFormat,
+    g: Granularity,
+    key: u64,
+) -> Vec<f32> {
+    assert_eq!(x.len(), rows * cols);
+    let mut out = vec![0.0f32; x.len()];
+    let ts = match g {
+        Granularity::TwoLevelBlock(_) => {
+            Some(two_level_tensor_scale(absmax_of(x.iter().copied()), fmt))
+        }
+        _ => None,
+    };
+    fake_quant_groups_sr(x, 0, group_len(x.len(), cols, g), fmt, key, ts, &mut out);
     out
 }
 
@@ -139,6 +262,63 @@ pub(crate) fn quantize_pack_groups(
     (out, scales)
 }
 
+/// Two-level variant of [`quantize_pack_groups`]: each `glen`-long group
+/// gets an FP8-E4M3 scale code on top of the caller-supplied per-tensor
+/// scale `ts`.  Returns `(packed element codes, effective f32 scale per
+/// group, scale-plane code per group)` — the f32 scales are the *derived*
+/// `decode(code) * ts` products, so every downstream decode path (panel
+/// decode, dequantize) works unchanged and bit-identically; the plane
+/// codes plus `ts` are the authoritative storage representation.
+/// Forced-zero blocks store zero element codes, plane code 0, and a unit
+/// effective scale.
+pub(crate) fn quantize_pack_groups_two_level(
+    x: &[f32],
+    glen: usize,
+    fmt: FpFormat,
+    ts: f32,
+) -> (Vec<u8>, Vec<f32>, Vec<u8>) {
+    let n = x.len();
+    let pack = fmt.bits() <= 4;
+    let n_groups = if n == 0 { 0 } else { n.div_ceil(glen) };
+    let mut scales = Vec::with_capacity(n_groups);
+    let mut plane = Vec::with_capacity(n_groups);
+    let mut out = Vec::with_capacity(if pack { n.div_ceil(2) } else { n });
+    let mut carry = 0u8;
+    let mut have_carry = false;
+    for seg in x.chunks(glen) {
+        let (code, s, zeroed) = two_level_block_scale(absmax_of(seg.iter().copied()), ts, fmt);
+        scales.push(s);
+        plane.push(code);
+        let recip = exact_recip(s);
+        for &v in seg {
+            let c = if zeroed {
+                0u8
+            } else {
+                let y = match recip {
+                    Some(r) => v * r,
+                    None => v / s,
+                };
+                encode_fast(fmt, y)
+            };
+            if pack {
+                if have_carry {
+                    out.push(carry | (c << 4));
+                    have_carry = false;
+                } else {
+                    carry = c & 0x0F;
+                    have_carry = true;
+                }
+            } else {
+                out.push(c);
+            }
+        }
+    }
+    if have_carry {
+        out.push(carry);
+    }
+    (out, scales, plane)
+}
+
 /// Count elements of a packed code stream that sit in the format's top
 /// magnitude bin (|decoded| ≥ `max_value`) — i.e. values the absmax
 /// scaling pushed onto the saturation boundary.  This is the per-linear
@@ -166,8 +346,55 @@ pub fn count_saturated(packed: &[u8], n_values: usize, fmt: FpFormat) -> u64 {
     count
 }
 
+/// [`count_saturated`] with correct per-level attribution for two-level
+/// tensors.  Under two-level scaling a block's FP8 scale code is itself
+/// RNE-rounded (up to ~3% relative error), so element codes in the top
+/// magnitude bin are routine quantization noise whenever the block can
+/// still rescale — counting them as "saturated" made the naive counter
+/// flag entire healthy blocks and spuriously trip the sentinel's
+/// FP4 → FP8 demotion.  Real two-level saturation is pinned to the scale
+/// *plane*: only blocks whose scale code magnitude sits at the top of the
+/// FP8-E4M3 range (no headroom left at the block level) contribute their
+/// top-bin element codes.  Forced-zero blocks (plane code 0) contribute
+/// nothing by construction.
+pub fn count_saturated_two_level(
+    packed: &[u8],
+    n_values: usize,
+    fmt: FpFormat,
+    glen: usize,
+    scale_codes: &[u8],
+) -> u64 {
+    let scale_top = max_code8(TWO_LEVEL_SCALE_FMT);
+    let top = |c: u8| (decode_fast(fmt, c).abs() >= fmt.max_value) as u64;
+    let mut count = 0u64;
+    let nibble = fmt.bits() <= 4;
+    if nibble {
+        debug_assert!(packed.len() >= n_values.div_ceil(2));
+    }
+    for i in 0..n_values {
+        let g = i / glen.max(1);
+        if scale_codes.get(g).map_or(true, |&sc| sc & 0x7F != scale_top) {
+            continue;
+        }
+        let c = if nibble {
+            let b = packed[i / 2];
+            if i % 2 == 0 {
+                b & 0x0F
+            } else {
+                b >> 4
+            }
+        } else {
+            packed[i]
+        };
+        count += top(c);
+    }
+    count
+}
+
 /// Fused quantize+pack for a row-major (rows × cols) matrix along its
-/// columns axis — the single-pass core of `quant::quantize`.
+/// columns axis — the single-pass core of `quant::quantize` (flat
+/// granularities; two-level callers use
+/// [`quantize_pack_rows_two_level`], which also yields the scale plane).
 pub fn quantize_pack_rows(
     x: &[f32],
     rows: usize,
@@ -176,7 +403,28 @@ pub fn quantize_pack_rows(
     g: Granularity,
 ) -> (Vec<u8>, Vec<f32>) {
     assert_eq!(x.len(), rows * cols);
+    assert!(
+        !matches!(g, Granularity::TwoLevelBlock(_)),
+        "two-level packing needs the scale plane: use quantize_pack_rows_two_level"
+    );
     quantize_pack_groups(x, group_len(x.len(), cols, g), fmt)
+}
+
+/// Fused quantize+pack under two-level scaling.  Returns `(packed codes,
+/// effective f32 scale per group, scale-plane code per group, per-tensor
+/// scale)`.
+pub fn quantize_pack_rows_two_level(
+    x: &[f32],
+    rows: usize,
+    cols: usize,
+    fmt: FpFormat,
+    block: usize,
+) -> (Vec<u8>, Vec<f32>, Vec<u8>, f32) {
+    assert_eq!(x.len(), rows * cols);
+    let ts = two_level_tensor_scale(absmax_of(x.iter().copied()), fmt);
+    let glen = group_len(x.len(), cols, Granularity::TwoLevelBlock(block));
+    let (packed, scales, plane) = quantize_pack_groups_two_level(x, glen, fmt, ts);
+    (packed, scales, plane, ts)
 }
 
 #[cfg(test)]
@@ -326,5 +574,154 @@ mod tests {
         let z = vec![0.0f32; 64];
         let fq = fake_quant_rows_fast(&z, 2, 32, FP4_E2M1, Granularity::PerBlock(16));
         assert!(fq.iter().all(|&v| v == 0.0));
+        let (p, s, pl, ts) = quantize_pack_rows_two_level(&[], 0, 0, FP4_E2M1, 16);
+        assert!(p.is_empty() && s.is_empty() && pl.is_empty());
+        assert_eq!(ts, 1.0);
+        let fq = fake_quant_rows_fast(&z, 2, 32, FP4_E2M1, Granularity::TwoLevelBlock(16));
+        assert!(fq.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn two_level_fused_fake_quant_bit_identical_to_scalar() {
+        for fmt in [FP4_E2M1, FP8_E4M3] {
+            prop_check("two-level fast == scalar", 120, |c| {
+                let rows = c.usize_in(1, 5);
+                let cols = [31usize, 32, 64, 96, 128][c.usize_in(0, 4)];
+                let x = c.f32_vec_wild(rows * cols, rows * cols);
+                for b in [16usize, 32, cols, 7] {
+                    let g = Granularity::TwoLevelBlock(b);
+                    let fast = fake_quant_rows_fast(&x, rows, cols, fmt, g);
+                    let slow = fake_quant_rows(&x, rows, cols, fmt, g);
+                    for (i, (a, b)) in fast.iter().zip(&slow).enumerate() {
+                        let same = a.to_bits() == b.to_bits() || (a.is_nan() && b.is_nan());
+                        prop_assert!(same, "{} {g:?} idx {i}: {a} vs {b}", fmt.name);
+                    }
+                }
+                Ok(())
+            });
+        }
+    }
+
+    #[test]
+    fn two_level_pack_matches_scalar_reference_and_scale_plane_is_authoritative() {
+        use crate::formats::codec;
+        prop_check("two-level pack == scalar pipeline", 120, |c| {
+            let fmt = FP4_E2M1;
+            let rows = c.usize_in(1, 5);
+            let cols = [32usize, 33, 64, 128][c.usize_in(0, 3)];
+            let x = c.f32_vec_wild(rows * cols, rows * cols);
+            let block = [16usize, 32][c.usize_in(0, 1)];
+            let (packed, scales, plane, ts) =
+                quantize_pack_rows_two_level(&x, rows, cols, fmt, block);
+            // scalar reference: tensor scale, per-block codec round-trip,
+            // forced-zero rule, one global pack at the end
+            let ref_ts = two_level_tensor_scale(absmax_of(x.iter().copied()), fmt);
+            prop_assert!(ts.to_bits() == ref_ts.to_bits());
+            let glen = group_len(x.len(), cols, Granularity::TwoLevelBlock(block));
+            let mut ref_codes = Vec::new();
+            let mut ref_scales = Vec::new();
+            let mut ref_plane = Vec::new();
+            for seg in x.chunks(glen) {
+                let (code, s, zeroed) =
+                    two_level_block_scale(absmax_of(seg.iter().copied()), ref_ts, fmt);
+                ref_scales.push(s);
+                ref_plane.push(code);
+                for &v in seg {
+                    ref_codes.push(if zeroed { 0 } else { codec::encode(fmt, v / s) });
+                }
+            }
+            prop_assert!(packed == codec::pack_fp4(&ref_codes), "codes differ");
+            prop_assert!(plane == ref_plane, "scale plane differs");
+            prop_assert!(
+                scales.iter().map(|s| s.to_bits()).eq(ref_scales.iter().map(|s| s.to_bits())),
+                "derived scales differ"
+            );
+            // the stored f32 scales are exactly decode(plane) * ts — the
+            // plane + ts pair fully reconstructs them
+            for (i, (&code, &s)) in plane.iter().zip(&scales).enumerate() {
+                let rebuilt = codec::decode(crate::formats::TWO_LEVEL_SCALE_FMT, code) * ts;
+                let want = if code == 0 { 1.0 } else { rebuilt };
+                prop_assert!(s.to_bits() == want.to_bits(), "group {i}: {s} vs {want}");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sr_fused_matches_scalar_reference_bitwise() {
+        use crate::formats::fake_quant_rows_sr;
+        prop_check("sr fast == scalar", 120, |c| {
+            let fmt = FP4_E2M1;
+            let rows = c.usize_in(1, 5);
+            let cols = [32usize, 48, 64][c.usize_in(0, 2)];
+            let x = c.f32_vec_wild(rows * cols, rows * cols);
+            let key = 0xD00D ^ (rows as u64) << 8;
+            for g in [
+                Granularity::PerTensor,
+                Granularity::PerRow,
+                Granularity::PerBlock(16),
+                Granularity::TwoLevelBlock(16),
+            ] {
+                let fast = fake_quant_rows_sr_fast(&x, rows, cols, fmt, g, key);
+                let slow = fake_quant_rows_sr(&x, rows, cols, fmt, g, key);
+                for (i, (a, b)) in fast.iter().zip(&slow).enumerate() {
+                    let same = a.to_bits() == b.to_bits() || (a.is_nan() && b.is_nan());
+                    prop_assert!(same, "{g:?} idx {i}: {a} vs {b}");
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sr_chunked_sweep_with_base_offsets_reproduces_serial() {
+        // the parallel contract: chunk boundaries on group boundaries +
+        // absolute base indices ⇒ identical draws, identical bits
+        let n = 256;
+        let x: Vec<f32> = (0..n).map(|i| ((i * 73 % 97) as f32 - 48.0) * 0.07).collect();
+        let (glen, key) = (16usize, 0xFEEDu64);
+        let mut serial = vec![0.0f32; n];
+        fake_quant_groups_sr(&x, 0, glen, FP4_E2M1, key, None, &mut serial);
+        for chunk_groups in [1usize, 2, 5] {
+            let step = chunk_groups * glen;
+            let mut chunked = vec![0.0f32; n];
+            for (ci, (xc, oc)) in x.chunks(step).zip(chunked.chunks_mut(step)).enumerate() {
+                fake_quant_groups_sr(xc, (ci * step) as u64, glen, FP4_E2M1, key, None, oc);
+            }
+            assert_eq!(
+                serial.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                chunked.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "chunk_groups={chunk_groups}"
+            );
+        }
+    }
+
+    #[test]
+    fn count_saturated_two_level_attributes_per_level() {
+        let fmt = FP4_E2M1;
+        let block = 16usize;
+        // block 0: pinned at the tensor absmax — its scale code sits at the
+        // top of the E4M3 range, so its top-bin elements are true saturation.
+        // block 1: absmax at half the tensor absmax — plenty of scale
+        // headroom, but its own extremes still encode to the FP4 top bin.
+        // block 2: all zero — forced-zero, contributes nothing.
+        let mut x = vec![0.0f32; 48];
+        x[0] = 8.0;
+        x[1] = 8.0;
+        x[2] = -8.0;
+        for v in x[16..32].iter_mut() {
+            *v = 4.0;
+        }
+        let (packed, _, plane, _) = quantize_pack_rows_two_level(&x, 1, 48, fmt, block);
+        assert_eq!(plane[2], 0, "all-zero block must have plane code 0");
+        // naive counter: flags block 1's 16 elements too (they decode to ±6)
+        let naive = count_saturated(&packed, 48, fmt);
+        let attributed = count_saturated_two_level(&packed, 48, fmt, block, &plane);
+        assert_eq!(attributed, 3, "only the pinned block's top-bin codes count");
+        assert!(naive >= attributed + 16, "naive={naive} attributed={attributed}");
+        // a fully saturated tensor still reports: every block pinned
+        let y = vec![100.0f32; 32];
+        let (p2, _, pl2, _) = quantize_pack_rows_two_level(&y, 1, 32, fmt, block);
+        assert_eq!(count_saturated_two_level(&p2, 32, fmt, block, &pl2), 32);
     }
 }

@@ -80,9 +80,11 @@ pub fn encode4_fast(x: f32) -> u8 {
 
 /// Magnitude code of `max_value` — the saturation result.  Constant for
 /// the known formats (E4M3: `s|1111|110` = 0x7E, the slot below NaN;
-/// E5M2: `s|11110|11` = 0x7B); scalar-derived otherwise.
+/// E5M2: `s|11110|11` = 0x7B); scalar-derived otherwise.  Crate-visible:
+/// `fused::count_saturated_two_level` keys its per-level attribution on
+/// whether a block's scale code sits at this magnitude.
 #[inline(always)]
-fn max_code8(fmt: FpFormat) -> u8 {
+pub(crate) fn max_code8(fmt: FpFormat) -> u8 {
     if fmt == FP8_E4M3 {
         0x7E
     } else if fmt == FP8_E5M2 {

@@ -35,7 +35,14 @@
 //! [`parallel`] fans the sweep out over pool workers above
 //! [`parallel::PAR_MIN_ELEMS`] elements, splitting on group boundaries.
 //! Use these whenever a whole tensor is quantized or fake-quantized:
-//! checkpoint compression, analysis, probe features.
+//! checkpoint compression, analysis, probe features.  Two extensions
+//! share the family: **two-level scaling** (`*_two_level` — FP8-E4M3
+//! per-block scale codes over one f32 per-tensor scale, the NVFP4
+//! construction; the derived f32 scales feed the unchanged decode paths
+//! while the scale plane is the storage truth) and **stochastic
+//! rounding** (`*_sr` — gradient fake-quant with counter-based uniforms
+//! from `util::rng::counter_hash(key, flat_index)`, so the draw for an
+//! element never depends on threads, chunking, or call history).
 //!
 //! **3. GEMM engines** ([`matmul`], [`qgemm`]) — the contraction hot
 //! paths.  [`matmul`] is the cache-blocked, row-parallel f32 GEMM with
@@ -96,8 +103,14 @@ pub(crate) fn worker_threads(units: usize) -> usize {
     pool::configured_threads().min(units)
 }
 
-pub use fused::{fake_quant_rows_fast, quantize_pack_rows};
+pub use fused::{
+    count_saturated_two_level, fake_quant_rows_fast, fake_quant_rows_sr_fast, quantize_pack_rows,
+    quantize_pack_rows_two_level,
+};
 pub use lut::{decode_fast, decode_lut, encode_fast};
 pub use matmul::{matmul_bias_into, matmul_f32, matmul_into};
-pub use parallel::{fake_quant_rows_auto, quantize_pack_rows_auto};
+pub use parallel::{
+    fake_quant_rows_auto, fake_quant_rows_sr_auto, quantize_pack_rows_auto,
+    quantize_pack_rows_two_level_auto,
+};
 pub use qgemm::{qgemm, qgemm_bt, qgemm_bt_into, qgemm_into, PanelCache, PanelCacheStats, Workspace};

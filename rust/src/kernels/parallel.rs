@@ -8,13 +8,29 @@
 //! the serial path — even pool dispatch costs more than the work below
 //! that size.
 
-use crate::formats::{FpFormat, Granularity};
+use crate::formats::{absmax_of, two_level_tensor_scale, FpFormat, Granularity};
 
-use super::fused::{fake_quant_groups, group_len, quantize_pack_groups};
+use super::fused::{
+    fake_quant_groups, fake_quant_groups_sr, fake_quant_groups_two_level, group_len,
+    quantize_pack_groups, quantize_pack_groups_two_level,
+};
 use super::{pool, worker_threads};
 
 /// Minimum element count before the parallel sweep engages.
 pub const PAR_MIN_ELEMS: usize = 1 << 16;
+
+/// The per-tensor (outer) scale when `g` is two-level, else None.  A
+/// serial prepass: f32 `max` is associative and commutative over finite
+/// and infinite values alike, so one ordered fold here costs one sweep
+/// and keeps the value independent of how the main sweep is chunked.
+fn two_level_ts_of(x: &[f32], fmt: FpFormat, g: Granularity) -> Option<f32> {
+    match g {
+        Granularity::TwoLevelBlock(_) => {
+            Some(two_level_tensor_scale(absmax_of(x.iter().copied()), fmt))
+        }
+        _ => None,
+    }
+}
 
 /// `fake_quant_rows_fast` with automatic row-parallelism for large inputs.
 pub fn fake_quant_rows_auto(
@@ -29,16 +45,58 @@ pub fn fake_quant_rows_auto(
     let glen = group_len(n, cols, g);
     let n_groups = if n == 0 { 0 } else { n / glen };
     let mut out = vec![0.0f32; n];
+    let ts = two_level_ts_of(x, fmt, g);
     // size checks first: small sweeps never pay the thread-count lookup
     let nt = if n < PAR_MIN_ELEMS || n_groups < 2 { 1 } else { worker_threads(n_groups) };
     if nt < 2 {
-        fake_quant_groups(x, glen, fmt, &mut out);
+        match ts {
+            Some(ts) => fake_quant_groups_two_level(x, glen, fmt, ts, &mut out),
+            None => fake_quant_groups(x, glen, fmt, &mut out),
+        }
         return out;
     }
     let chunk = n_groups.div_ceil(nt) * glen;
     pool::scope(|sc| {
         for (xs, os) in x.chunks(chunk).zip(out.chunks_mut(chunk)) {
-            sc.spawn(move || fake_quant_groups(xs, glen, fmt, os));
+            sc.spawn(move || match ts {
+                Some(ts) => fake_quant_groups_two_level(xs, glen, fmt, ts, os),
+                None => fake_quant_groups(xs, glen, fmt, os),
+            });
+        }
+    });
+    out
+}
+
+/// `fused::fake_quant_rows_sr_fast` with automatic row-parallelism.
+/// Chunk boundaries land on group boundaries and every chunk passes its
+/// absolute base element index into the counter-based draws, so the
+/// output is bit-identical to the serial sweep at any thread count —
+/// the determinism contract stochastic rounding must keep.
+pub fn fake_quant_rows_sr_auto(
+    x: &[f32],
+    rows: usize,
+    cols: usize,
+    fmt: FpFormat,
+    g: Granularity,
+    key: u64,
+) -> Vec<f32> {
+    assert_eq!(x.len(), rows * cols);
+    let n = x.len();
+    let glen = group_len(n, cols, g);
+    let n_groups = if n == 0 { 0 } else { n / glen };
+    let mut out = vec![0.0f32; n];
+    let ts = two_level_ts_of(x, fmt, g);
+    let nt = if n < PAR_MIN_ELEMS || n_groups < 2 { 1 } else { worker_threads(n_groups) };
+    if nt < 2 {
+        fake_quant_groups_sr(x, 0, glen, fmt, key, ts, &mut out);
+        return out;
+    }
+    let chunk = n_groups.div_ceil(nt) * glen;
+    pool::scope(|sc| {
+        for (ci, (xs, os)) in x.chunks(chunk).zip(out.chunks_mut(chunk)).enumerate() {
+            sc.spawn(move || {
+                fake_quant_groups_sr(xs, (ci * chunk) as u64, glen, fmt, key, ts, os)
+            });
         }
     });
     out
@@ -53,6 +111,10 @@ pub fn quantize_pack_rows_auto(
     g: Granularity,
 ) -> (Vec<u8>, Vec<f32>) {
     assert_eq!(x.len(), rows * cols);
+    assert!(
+        !matches!(g, Granularity::TwoLevelBlock(_)),
+        "two-level packing needs the scale plane: use quantize_pack_rows_two_level_auto"
+    );
     let n = x.len();
     let glen = group_len(n, cols, g);
     let n_groups = if n == 0 { 0 } else { n / glen };
@@ -83,6 +145,52 @@ pub fn quantize_pack_rows_auto(
         scales.extend_from_slice(&s);
     }
     (packed, scales)
+}
+
+/// `fused::quantize_pack_rows_two_level` with automatic row-parallelism:
+/// serial tensor-scale prepass, then the per-block encode fans out on
+/// group-aligned chunks exactly like [`quantize_pack_rows_auto`].
+/// Returns `(packed codes, effective f32 scales, scale-plane codes,
+/// per-tensor scale)`.
+pub fn quantize_pack_rows_two_level_auto(
+    x: &[f32],
+    rows: usize,
+    cols: usize,
+    fmt: FpFormat,
+    block: usize,
+) -> (Vec<u8>, Vec<f32>, Vec<u8>, f32) {
+    assert_eq!(x.len(), rows * cols);
+    let n = x.len();
+    let g = Granularity::TwoLevelBlock(block);
+    let glen = group_len(n, cols, g);
+    let n_groups = if n == 0 { 0 } else { n / glen };
+    let ts = two_level_tensor_scale(absmax_of(x.iter().copied()), fmt);
+    let nt = if n < PAR_MIN_ELEMS || n_groups < 2 { 1 } else { worker_threads(n_groups) };
+    if nt < 2 {
+        let (p, s, pl) = quantize_pack_groups_two_level(x, glen, fmt, ts);
+        return (p, s, pl, ts);
+    }
+    let mut chunk_groups = n_groups.div_ceil(nt);
+    if fmt.bits() <= 4 && (chunk_groups * glen) % 2 == 1 {
+        chunk_groups += 1;
+    }
+    let chunk = chunk_groups * glen;
+    let mut parts: Vec<(Vec<u8>, Vec<f32>, Vec<u8>)> =
+        vec![Default::default(); x.len().div_ceil(chunk)];
+    pool::scope(|sc| {
+        for (part, xs) in parts.iter_mut().zip(x.chunks(chunk)) {
+            sc.spawn(move || *part = quantize_pack_groups_two_level(xs, glen, fmt, ts));
+        }
+    });
+    let mut packed = Vec::with_capacity(if fmt.bits() <= 4 { n.div_ceil(2) } else { n });
+    let mut scales = Vec::with_capacity(n_groups);
+    let mut plane = Vec::with_capacity(n_groups);
+    for (p, s, pl) in parts {
+        packed.extend_from_slice(&p);
+        scales.extend_from_slice(&s);
+        plane.extend_from_slice(&pl);
+    }
+    (packed, scales, plane, ts)
 }
 
 #[cfg(test)]
@@ -146,5 +254,49 @@ mod tests {
         let (p, s) = quantize_pack_rows_auto(&x, 2, 128, FP4_E2M1, Granularity::PerRow);
         let (p2, s2) = quantize_pack_rows(&x, 2, 128, FP4_E2M1, Granularity::PerRow);
         assert_eq!((p, s), (p2, s2));
+    }
+
+    #[test]
+    fn parallel_two_level_matches_serial_above_threshold() {
+        use crate::kernels::fused::quantize_pack_rows_two_level;
+        let (rows, cols) = (1024, 128); // 128k elems > PAR_MIN_ELEMS
+        let x = randvec(rows * cols, 7);
+        let g = Granularity::TwoLevelBlock(16);
+        let par = fake_quant_rows_auto(&x, rows, cols, FP4_E2M1, g);
+        let ser = fake_quant_rows(&x, rows, cols, FP4_E2M1, g);
+        assert_eq!(
+            par.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            ser.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        let (pp, ps, ppl, pts) = quantize_pack_rows_two_level_auto(&x, rows, cols, FP4_E2M1, 16);
+        let (sp, ss, spl, sts) = quantize_pack_rows_two_level(&x, rows, cols, FP4_E2M1, 16);
+        assert_eq!(pp, sp);
+        assert_eq!(ppl, spl);
+        assert_eq!(pts.to_bits(), sts.to_bits());
+        assert_eq!(
+            ps.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            ss.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn parallel_sr_matches_serial_above_threshold() {
+        use crate::kernels::fused::fake_quant_rows_sr_fast;
+        let (rows, cols) = (1024, 128);
+        let x = randvec(rows * cols, 8);
+        let key = 0xC0FFEE;
+        for g in [
+            Granularity::PerRow,
+            Granularity::PerBlock(32),
+            Granularity::TwoLevelBlock(16),
+        ] {
+            let par = fake_quant_rows_sr_auto(&x, rows, cols, FP4_E2M1, g, key);
+            let ser = fake_quant_rows_sr_fast(&x, rows, cols, FP4_E2M1, g, key);
+            assert_eq!(
+                par.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                ser.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "{g:?}"
+            );
+        }
     }
 }

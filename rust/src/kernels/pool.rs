@@ -13,10 +13,14 @@
 //! # Sizing and `PALLAS_THREADS`
 //!
 //! The worker count comes from [`configured_threads`]: the
-//! `PALLAS_THREADS` environment variable when set (clamped to
-//! [1, [`MAX_THREADS`]], and allowed to exceed the memory-bandwidth cap
-//! [`super::PAR_MAX_THREADS`] — an explicit override wins), otherwise
-//! `std::thread::available_parallelism()` capped at `PAR_MAX_THREADS`.
+//! `PALLAS_THREADS` environment variable when set to a positive integer
+//! (clamped to at most [`MAX_THREADS`], and allowed to exceed the
+//! memory-bandwidth cap [`super::PAR_MAX_THREADS`] — an explicit
+//! override wins), otherwise `std::thread::available_parallelism()`
+//! capped at `PAR_MAX_THREADS`.  A `PALLAS_THREADS` that doesn't parse
+//! as a positive integer (including `0`) is reported to stderr once and
+//! falls back to the automatic policy — it is never silently treated as
+//! a valid setting.
 //! The pool spawns `configured_threads() - 1` workers on first use (the
 //! submitting thread is the remaining lane — it *helps* run queued tasks
 //! instead of blocking, which also makes nested scopes deadlock-free).
@@ -67,16 +71,37 @@ struct Shared {
     work: Condvar,
 }
 
-/// The thread-count *policy*: `PALLAS_THREADS` when set (explicit
-/// override, clamped to [1, [`MAX_THREADS`]]), else hardware parallelism
-/// capped at [`super::PAR_MAX_THREADS`].  Re-read per call so the env var
-/// can steer task splitting at runtime (the determinism tests rely on
-/// this); the pool's worker count is sampled from it once, at first use.
+/// The thread-count *policy*: `PALLAS_THREADS` when set to a positive
+/// integer (explicit override, clamped to [1, [`MAX_THREADS`]]), else
+/// hardware parallelism capped at [`super::PAR_MAX_THREADS`].  Re-read
+/// per call so the env var can steer task splitting at runtime (the
+/// determinism tests rely on this); the pool's worker count is sampled
+/// from it once, at first use.
+///
+/// A `PALLAS_THREADS` value that is unparseable, non-unicode, or `0`
+/// (there is no zero-thread policy — the submitting thread always runs)
+/// is an error, not a silent default: it is reported to stderr **once**
+/// per process and the automatic policy is used, so a typo'd override in
+/// a launch script can't masquerade as an intentional setting.
 pub fn configured_threads() -> usize {
-    if let Ok(v) = std::env::var("PALLAS_THREADS") {
-        if let Ok(n) = v.trim().parse::<usize>() {
-            return n.clamp(1, MAX_THREADS);
-        }
+    use std::sync::Once;
+    static WARN: Once = Once::new();
+    match std::env::var("PALLAS_THREADS") {
+        Ok(v) => match v.trim().parse::<usize>() {
+            Ok(n) if n > 0 => return n.min(MAX_THREADS),
+            _ => WARN.call_once(|| {
+                eprintln!(
+                    "pallas: ignoring invalid PALLAS_THREADS={v:?} \
+                     (expected an integer in 1..={MAX_THREADS}); using automatic thread count"
+                );
+            }),
+        },
+        Err(std::env::VarError::NotPresent) => {}
+        Err(std::env::VarError::NotUnicode(_)) => WARN.call_once(|| {
+            eprintln!(
+                "pallas: ignoring non-unicode PALLAS_THREADS; using automatic thread count"
+            );
+        }),
     }
     static HW: OnceLock<usize> = OnceLock::new();
     let hw =

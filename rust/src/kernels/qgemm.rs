@@ -708,7 +708,12 @@ mod tests {
                 let n = [1usize, 2, 3, 8, 130, 511, 512, 513][c.usize_in(0, 7)];
                 let a = c.f32_vec_wild(m * k, m * k);
                 let bdata = c.f32_vec_wild(k * n, k * n);
-                for g in [GranSpec::PerTensor, GranSpec::PerRow, GranSpec::PerBlock(32)] {
+                for g in [
+                    GranSpec::PerTensor,
+                    GranSpec::PerRow,
+                    GranSpec::PerBlock(32),
+                    GranSpec::TwoLevelBlock(32),
+                ] {
                     let q = quantize_rows(&bdata, k, n, fmt, g);
                     let got = qgemm(&a, &q, m, k, n);
                     let want = reference(&a, &q, m, k, n);
@@ -731,7 +736,7 @@ mod tests {
         let a: Vec<f32> = (0..m * k).map(|_| rng.normal_f32(0.0, 1.0)).collect();
         let bdata: Vec<f32> = (0..k * n).map(|_| rng.normal_f32(0.0, 0.5)).collect();
         for fmt in [FP4_E2M1, FP8_E4M3] {
-            for g in [GranSpec::PerRow, GranSpec::PerBlock(128)] {
+            for g in [GranSpec::PerRow, GranSpec::PerBlock(128), GranSpec::TwoLevelBlock(128)] {
                 let q = quantize_rows(&bdata, k, n, fmt, g);
                 assert_eq!(
                     bits(&qgemm(&a, &q, m, k, n)),
@@ -851,6 +856,8 @@ mod tests {
             (5usize, 3usize, GranSpec::PerBlock(2)),
             (7, 1, GranSpec::PerRow),
             (16, 16, GranSpec::PerBlock(16)),
+            (5, 3, GranSpec::TwoLevelBlock(2)),
+            (16, 16, GranSpec::TwoLevelBlock(16)),
         ] {
             let a: Vec<f32> = (0..2 * k).map(|_| rng.normal_f32(0.0, 1.0)).collect();
             let bdata: Vec<f32> = (0..k * n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
@@ -885,7 +892,12 @@ mod tests {
                 let n = [1usize, 2, 3, 8, 130, 511, 512, 513][c.usize_in(0, 7)];
                 let a = c.f32_vec_wild(m * k, m * k);
                 let bdata = c.f32_vec_wild(n * k, n * k);
-                for g in [GranSpec::PerTensor, GranSpec::PerRow, GranSpec::PerBlock(32)] {
+                for g in [
+                    GranSpec::PerTensor,
+                    GranSpec::PerRow,
+                    GranSpec::PerBlock(32),
+                    GranSpec::TwoLevelBlock(32),
+                ] {
                     // quantized along the trailing storage axis = K
                     let q = quantize_rows(&bdata, n, k, fmt, g);
                     let got = qgemm_bt(&a, &q, m, k, n);
@@ -908,7 +920,11 @@ mod tests {
         for (m, k, n) in [(64usize, 512usize, 640usize), (512, 256, 64)] {
             let a: Vec<f32> = (0..m * k).map(|_| rng.normal_f32(0.0, 1.0)).collect();
             let bdata: Vec<f32> = (0..n * k).map(|_| rng.normal_f32(0.0, 0.5)).collect();
-            for (fmt, g) in [(FP4_E2M1, GranSpec::PerBlock(128)), (FP8_E4M3, GranSpec::PerRow)] {
+            for (fmt, g) in [
+                (FP4_E2M1, GranSpec::PerBlock(128)),
+                (FP8_E4M3, GranSpec::PerRow),
+                (FP4_E2M1, GranSpec::TwoLevelBlock(128)),
+            ] {
                 let q = quantize_rows(&bdata, n, k, fmt, g);
                 assert_eq!(
                     bits(&qgemm_bt(&a, &q, m, k, n)),
@@ -955,6 +971,8 @@ mod tests {
             (5usize, 3usize, GranSpec::PerBlock(2)),
             (1, 7, GranSpec::PerRow),
             (16, 16, GranSpec::PerBlock(16)),
+            (5, 3, GranSpec::TwoLevelBlock(2)),
+            (16, 16, GranSpec::TwoLevelBlock(16)),
         ] {
             let a: Vec<f32> = (0..2 * k).map(|_| rng.normal_f32(0.0, 1.0)).collect();
             let bdata: Vec<f32> = (0..n * k).map(|_| rng.normal_f32(0.0, 1.0)).collect();

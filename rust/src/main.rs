@@ -312,8 +312,39 @@ fn cmd_reproduce(args: &fp4train::util::args::Args) -> Result<()> {
 }
 
 fn cmd_presets(args: &fp4train::util::args::Args) -> Result<()> {
-    let rt = open_runtime(args)?;
-    println!("model presets (artifacts/manifest.json):");
+    use fp4train::formats::Granularity;
+    use fp4train::refmodel::presets;
+
+    println!("host engine recipes (train --host --recipe <name>):");
+    for name in presets::recipe_names() {
+        let spec = presets::recipe(name).expect("listed recipe resolves");
+        let (attn, ffn, wgrad, agrad) = presets::recipe_fmts(&spec);
+        let mut notes: Vec<&str> = Vec::new();
+        if matches!(spec.ffn.map(|s| s.gran), Some(Granularity::TwoLevelBlock(_))) {
+            notes.push("two-level ffn scales");
+        }
+        if spec.sr_grad {
+            notes.push("stochastic-rounded grads");
+        }
+        println!(
+            "  {:<14} attn={:<5} ffn={:<5} wgrad={:<5} agrad={:<5}{}",
+            name,
+            attn,
+            ffn,
+            wgrad,
+            agrad,
+            if notes.is_empty() { String::new() } else { format!("  ({})", notes.join(", ")) }
+        );
+    }
+
+    let rt = match open_runtime(args) {
+        Ok(rt) => rt,
+        Err(_) => {
+            println!("\n(no artifact manifest — artifact presets need `make artifacts`)");
+            return Ok(());
+        }
+    };
+    println!("\nmodel presets (artifacts/manifest.json):");
     let mut names: Vec<_> = rt.manifest.models.keys().collect();
     names.sort();
     for n in names {
@@ -324,7 +355,7 @@ fn cmd_presets(args: &fp4train::util::args::Args) -> Result<()> {
             m.param_count as f64 / 1e6
         );
     }
-    println!("\nprecision recipes:");
+    println!("\nartifact precision recipes:");
     let mut rs: Vec<_> = rt.manifest.recipes.keys().collect();
     rs.sort();
     for r in rs {

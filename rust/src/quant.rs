@@ -7,8 +7,19 @@
 //! _auto`), thread-parallel above the size threshold; `quantize_scalar`
 //! keeps the original per-element codec path as the bit-exact reference
 //! for property tests and the scalar-vs-fused benches.
+//!
+//! Two-level tensors ([`GranSpec::TwoLevelBlock`]) additionally carry a
+//! [`ScalePlane`] — FP8-E4M3 per-block scale codes over one f32 tensor
+//! scale (the NVFP4 construction).  The `scales` field then holds the
+//! *derived* effective f32 scales, so every flat-scale consumer
+//! (`dequantize`, `kernels::qgemm`/`qgemm_bt`, the panel cache) works on
+//! two-level tensors unchanged, bit for bit, while [`storage_bytes`]
+//! accounts the compact plane.
 
-use crate::formats::{codec, effective_block, scale_of, FpFormat, Granularity, FP4_E2M1};
+use crate::formats::{
+    absmax_of, codec, effective_block, scale_of, two_level_block_scale, two_level_tensor_scale,
+    FpFormat, Granularity, FP4_E2M1,
+};
 use crate::kernels;
 use crate::tensor::Tensor;
 
@@ -29,7 +40,27 @@ pub struct QuantizedTensor {
     pub granularity: GranSpec,
     pub packed: Vec<u8>,
     pub scales: Vec<f32>,
+    /// Present exactly when `granularity` is [`GranSpec::TwoLevelBlock`]:
+    /// the authoritative two-level scale storage.  `scales` then holds the
+    /// *derived* effective f32 scales (`decode(code) * tensor_scale`), so
+    /// `dequantize`, `kernels::qgemm`/`qgemm_bt`, and the panel cache
+    /// consume a two-level tensor through the exact same flat-scale code
+    /// path, bit for bit.
+    pub scale_plane: Option<ScalePlane>,
     id: u64,
+}
+
+/// NVFP4-style two-level scale storage: one FP8-E4M3 code per block over a
+/// single f32 per-tensor scale.  A block whose effective scale would be
+/// zero or non-finite stores code 0 with every element code forced to 0
+/// (its derived entry in `scales` is 1.0) — see
+/// `formats::two_level_block_scale`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScalePlane {
+    /// One `formats::TWO_LEVEL_SCALE_FMT` (FP8-E4M3) code per scale group.
+    pub codes: Vec<u8>,
+    /// The per-tensor second-level scale.
+    pub tensor_scale: f32,
 }
 
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -37,6 +68,10 @@ pub enum GranSpec {
     PerTensor,
     PerRow,
     PerBlock(usize),
+    /// Two-level scaling over contiguous trailing-axis blocks of the given
+    /// width (NVFP4 construction); quantized payloads carry a
+    /// [`ScalePlane`].
+    TwoLevelBlock(usize),
 }
 
 impl GranSpec {
@@ -46,6 +81,7 @@ impl GranSpec {
             GranSpec::PerTensor => Granularity::PerTensor,
             GranSpec::PerRow => Granularity::PerRow,
             GranSpec::PerBlock(b) => Granularity::PerBlock(b),
+            GranSpec::TwoLevelBlock(b) => Granularity::TwoLevelBlock(b),
         }
     }
 
@@ -55,6 +91,7 @@ impl GranSpec {
             Granularity::PerTensor => GranSpec::PerTensor,
             Granularity::PerRow => GranSpec::PerRow,
             Granularity::PerBlock(b) => GranSpec::PerBlock(b),
+            Granularity::TwoLevelBlock(b) => GranSpec::TwoLevelBlock(b),
         }
     }
 }
@@ -69,10 +106,42 @@ impl QuantizedTensor {
         packed: Vec<u8>,
         scales: Vec<f32>,
     ) -> QuantizedTensor {
+        debug_assert!(
+            !matches!(granularity, GranSpec::TwoLevelBlock(_)),
+            "two-level tensors carry a scale plane: construct via new_two_level"
+        );
+        Self::with_plane(fmt_name, shape, granularity, packed, scales, None)
+    }
+
+    /// Two-level constructor: like [`QuantizedTensor::new`] but carrying
+    /// the authoritative [`ScalePlane`]; `scales` must already be the
+    /// derived effective scales (`decode(code) * tensor_scale`, 1.0 for
+    /// forced-zero blocks) the flat decode paths consume.
+    pub fn new_two_level(
+        fmt_name: String,
+        shape: Vec<usize>,
+        granularity: GranSpec,
+        packed: Vec<u8>,
+        scales: Vec<f32>,
+        plane: ScalePlane,
+    ) -> QuantizedTensor {
+        debug_assert!(matches!(granularity, GranSpec::TwoLevelBlock(_)));
+        debug_assert_eq!(plane.codes.len(), scales.len());
+        Self::with_plane(fmt_name, shape, granularity, packed, scales, Some(plane))
+    }
+
+    fn with_plane(
+        fmt_name: String,
+        shape: Vec<usize>,
+        granularity: GranSpec,
+        packed: Vec<u8>,
+        scales: Vec<f32>,
+        scale_plane: Option<ScalePlane>,
+    ) -> QuantizedTensor {
         use std::sync::atomic::{AtomicU64, Ordering};
         static NEXT_ID: AtomicU64 = AtomicU64::new(1);
         let id = NEXT_ID.fetch_add(1, Ordering::Relaxed);
-        QuantizedTensor { fmt_name, shape, granularity, packed, scales, id }
+        QuantizedTensor { fmt_name, shape, granularity, packed, scales, scale_plane, id }
     }
 
     /// Process-unique identity of this tensor's payload (shared by
@@ -101,7 +170,7 @@ impl QuantizedTensor {
         match self.granularity {
             GranSpec::PerTensor => rows * cols,
             GranSpec::PerRow => cols,
-            GranSpec::PerBlock(b0) => effective_block(cols, b0),
+            GranSpec::PerBlock(b0) | GranSpec::TwoLevelBlock(b0) => effective_block(cols, b0),
         }
     }
 }
@@ -119,9 +188,7 @@ fn rows_cols(shape: &[usize]) -> (usize, usize) {
 /// Fused single-pass kernel; row-parallel for large tensors.
 pub fn quantize(t: &Tensor, fmt: FpFormat, g: GranSpec) -> QuantizedTensor {
     let (rows, cols) = rows_cols(&t.shape);
-    let (packed, scales) =
-        kernels::quantize_pack_rows_auto(&t.data, rows, cols, fmt, g.to_granularity());
-    QuantizedTensor::new(fmt.name.to_string(), t.shape.clone(), g, packed, scales)
+    quantize_impl(&t.data, t.shape.clone(), rows, cols, fmt, g)
 }
 
 /// Quantize a raw row-major (rows × cols) buffer — same kernels as
@@ -130,8 +197,36 @@ pub fn quantize(t: &Tensor, fmt: FpFormat, g: GranSpec) -> QuantizedTensor {
 /// into a tensor first).
 pub fn quantize_rows(x: &[f32], rows: usize, cols: usize, fmt: FpFormat, g: GranSpec) -> QuantizedTensor {
     assert_eq!(x.len(), rows * cols);
-    let (packed, scales) = kernels::quantize_pack_rows_auto(x, rows, cols, fmt, g.to_granularity());
-    QuantizedTensor::new(fmt.name.to_string(), vec![rows, cols], g, packed, scales)
+    quantize_impl(x, vec![rows, cols], rows, cols, fmt, g)
+}
+
+fn quantize_impl(
+    x: &[f32],
+    shape: Vec<usize>,
+    rows: usize,
+    cols: usize,
+    fmt: FpFormat,
+    g: GranSpec,
+) -> QuantizedTensor {
+    match g {
+        GranSpec::TwoLevelBlock(b) => {
+            let (packed, scales, codes, tensor_scale) =
+                kernels::quantize_pack_rows_two_level_auto(x, rows, cols, fmt, b);
+            QuantizedTensor::new_two_level(
+                fmt.name.to_string(),
+                shape,
+                g,
+                packed,
+                scales,
+                ScalePlane { codes, tensor_scale },
+            )
+        }
+        _ => {
+            let (packed, scales) =
+                kernels::quantize_pack_rows_auto(x, rows, cols, fmt, g.to_granularity());
+            QuantizedTensor::new(fmt.name.to_string(), shape, g, packed, scales)
+        }
+    }
 }
 
 /// Quantize the **transpose** of a row-major (rows × cols) buffer: the
@@ -157,15 +252,40 @@ pub fn quantize_rows_t(x: &[f32], rows: usize, cols: usize, fmt: FpFormat, g: Gr
     assert_eq!(x.len(), rows * cols);
     let (orows, ocols) = (cols, rows); // output storage geometry
     let total = orows * ocols;
+    // two-level: the per-tensor second-level scale is a prepass fold over
+    // the whole input (f32 max of absolute values — order-independent, so
+    // input order equals transposed order bit-for-bit)
+    let ts = match g {
+        GranSpec::TwoLevelBlock(_) => {
+            Some(two_level_tensor_scale(absmax_of(x.iter().copied()), fmt))
+        }
+        _ => None,
+    };
     if total == 0 {
-        return QuantizedTensor::new(fmt.name.to_string(), vec![orows, ocols], g, Vec::new(), Vec::new());
+        return match ts {
+            Some(tensor_scale) => QuantizedTensor::new_two_level(
+                fmt.name.to_string(),
+                vec![orows, ocols],
+                g,
+                Vec::new(),
+                Vec::new(),
+                ScalePlane { codes: Vec::new(), tensor_scale },
+            ),
+            None => QuantizedTensor::new(
+                fmt.name.to_string(),
+                vec![orows, ocols],
+                g,
+                Vec::new(),
+                Vec::new(),
+            ),
+        };
     }
     // groups never span output rows except PerTensor, whose single scale
     // is computed up front (gpr == 0 marks that case for the row job)
     let (eb, gpr) = match g {
         GranSpec::PerTensor => (ocols, 0usize),
         GranSpec::PerRow => (ocols, 1),
-        GranSpec::PerBlock(b0) => {
+        GranSpec::PerBlock(b0) | GranSpec::TwoLevelBlock(b0) => {
             let b = effective_block(ocols, b0);
             (b, ocols / b)
         }
@@ -176,25 +296,35 @@ pub fn quantize_rows_t(x: &[f32], rows: usize, cols: usize, fmt: FpFormat, g: Gr
     };
     let mut codes = vec![0u8; total];
     let mut scales = vec![0.0f32; if gpr == 0 { 1 } else { orows * gpr }];
+    let mut pcodes = vec![0u8; if ts.is_some() { orows * gpr } else { 0 }];
     if gpr == 0 {
         scales[0] = tensor_scale;
     }
     // one output row j: ocols codes from the strided column j of x, one
-    // scale per eb-long group (or the shared tensor scale)
-    let row_job = |j: usize, codes_row: &mut [u8], scales_row: &mut [f32]| {
+    // scale per eb-long group (or the shared tensor scale); for two-level
+    // the group scale is the decoded FP8 block code times `ts`, and a
+    // forced-zero block writes element code 0 directly (matching the
+    // fused `quantize_pack_rows_two_level` exactly)
+    let row_job = |j: usize, codes_row: &mut [u8], scales_row: &mut [f32], pcodes_row: &mut [u8]| {
         let mut kk = 0;
         while kk < ocols {
             let kend = kk + eb;
-            let s = if gpr == 0 {
-                tensor_scale
+            let (s, forced_zero) = if let Some(ts) = ts {
+                let bm = absmax_of((kk..kend).map(|t| x[t * cols + j]));
+                let (code, s_eff, zeroed) = two_level_block_scale(bm, ts, fmt);
+                pcodes_row[kk / eb] = code;
+                scales_row[kk / eb] = s_eff;
+                (s_eff, zeroed)
+            } else if gpr == 0 {
+                (tensor_scale, false)
             } else {
                 let s = scale_of((kk..kend).map(|t| x[t * cols + j]), fmt);
                 scales_row[kk / eb] = s;
-                s
+                (s, false)
             };
             let mut idx = kk * cols + j;
             for c in codes_row[kk..kend].iter_mut() {
-                *c = kernels::encode_fast(fmt, x[idx] / s);
+                *c = if forced_zero { 0 } else { kernels::encode_fast(fmt, x[idx] / s) };
                 idx += cols;
             }
             kk = kend;
@@ -204,14 +334,17 @@ pub fn quantize_rows_t(x: &[f32], rows: usize, cols: usize, fmt: FpFormat, g: Gr
     if nt < 2 {
         for j in 0..orows {
             let sl = if gpr == 0 { 0..0 } else { j * gpr..(j + 1) * gpr };
-            row_job(j, &mut codes[j * ocols..(j + 1) * ocols], &mut scales[sl]);
+            let pl = if pcodes.is_empty() { 0..0 } else { j * gpr..(j + 1) * gpr };
+            row_job(j, &mut codes[j * ocols..(j + 1) * ocols], &mut scales[sl], &mut pcodes[pl]);
         }
     } else {
         let rows_per = orows.div_ceil(nt);
         let row_job = &row_job;
+        let two_level = ts.is_some();
         kernels::pool::scope(|sc| {
             let mut crem: &mut [u8] = &mut codes;
             let mut srem: &mut [f32] = if gpr == 0 { &mut [] } else { &mut scales };
+            let mut prem: &mut [u8] = if two_level { &mut pcodes } else { &mut [] };
             let mut r0 = 0usize;
             while !crem.is_empty() {
                 let nrows = rows_per.min(crem.len() / ocols);
@@ -224,6 +357,13 @@ pub fn quantize_rows_t(x: &[f32], rows: usize, cols: usize, fmt: FpFormat, g: Gr
                     srem = sr;
                     s
                 };
+                let pch: &mut [u8] = if two_level {
+                    let (p, pr) = std::mem::take(&mut prem).split_at_mut(nrows * gpr);
+                    prem = pr;
+                    p
+                } else {
+                    &mut []
+                };
                 let j0 = r0;
                 sc.spawn(move || {
                     for (local, crow) in cch.chunks_mut(ocols).enumerate() {
@@ -232,7 +372,12 @@ pub fn quantize_rows_t(x: &[f32], rows: usize, cols: usize, fmt: FpFormat, g: Gr
                         } else {
                             &mut sch[local * gpr..(local + 1) * gpr]
                         };
-                        row_job(j0 + local, crow, srow);
+                        let prow: &mut [u8] = if two_level {
+                            &mut pch[local * gpr..(local + 1) * gpr]
+                        } else {
+                            &mut []
+                        };
+                        row_job(j0 + local, crow, srow, prow);
                     }
                 });
                 r0 += nrows;
@@ -240,7 +385,17 @@ pub fn quantize_rows_t(x: &[f32], rows: usize, cols: usize, fmt: FpFormat, g: Gr
         });
     }
     let packed = if fmt.bits() <= 4 { codec::pack_fp4(&codes) } else { codes };
-    QuantizedTensor::new(fmt.name.to_string(), vec![orows, ocols], g, packed, scales)
+    match ts {
+        Some(tensor_scale) => QuantizedTensor::new_two_level(
+            fmt.name.to_string(),
+            vec![orows, ocols],
+            g,
+            packed,
+            scales,
+            ScalePlane { codes: pcodes, tensor_scale },
+        ),
+        None => QuantizedTensor::new(fmt.name.to_string(), vec![orows, ocols], g, packed, scales),
+    }
 }
 
 /// The original scalar quantize path — one `codec::encode` per element,
@@ -252,25 +407,52 @@ pub fn quantize_scalar(t: &Tensor, fmt: FpFormat, g: GranSpec) -> QuantizedTenso
     let groups: Vec<(usize, usize)> = match g {
         GranSpec::PerTensor => vec![(0, rows * cols)],
         GranSpec::PerRow => (0..rows).map(|r| (r * cols, cols)).collect(),
-        GranSpec::PerBlock(b0) => {
+        GranSpec::PerBlock(b0) | GranSpec::TwoLevelBlock(b0) => {
             let b = effective_block(cols, b0);
             (0..rows)
                 .flat_map(|r| (0..cols / b).map(move |k| (r * cols + k * b, b)))
                 .collect()
         }
     };
+    // two-level second-level scale: scalar fold over the whole tensor
+    let ts = match g {
+        GranSpec::TwoLevelBlock(_) => {
+            Some(two_level_tensor_scale(absmax_of(t.data.iter().copied()), fmt))
+        }
+        _ => None,
+    };
     let mut scales = Vec::with_capacity(groups.len());
+    let mut pcodes = Vec::with_capacity(if ts.is_some() { groups.len() } else { 0 });
     let mut codes = Vec::with_capacity(t.data.len());
     for &(off, len) in &groups {
         let seg = &t.data[off..off + len];
-        let s = scale_of(seg.iter().copied(), fmt);
-        scales.push(s);
-        for &x in seg {
-            codes.push(codec::encode(fmt, x / s));
+        if let Some(ts) = ts {
+            let (code, s, zeroed) = two_level_block_scale(absmax_of(seg.iter().copied()), ts, fmt);
+            pcodes.push(code);
+            scales.push(s);
+            for &x in seg {
+                codes.push(if zeroed { 0 } else { codec::encode(fmt, x / s) });
+            }
+        } else {
+            let s = scale_of(seg.iter().copied(), fmt);
+            scales.push(s);
+            for &x in seg {
+                codes.push(codec::encode(fmt, x / s));
+            }
         }
     }
     let packed = if fmt.bits() <= 4 { codec::pack_fp4(&codes) } else { codes };
-    QuantizedTensor::new(fmt.name.to_string(), t.shape.clone(), g, packed, scales)
+    match ts {
+        Some(tensor_scale) => QuantizedTensor::new_two_level(
+            fmt.name.to_string(),
+            t.shape.clone(),
+            g,
+            packed,
+            scales,
+            ScalePlane { codes: pcodes, tensor_scale },
+        ),
+        None => QuantizedTensor::new(fmt.name.to_string(), t.shape.clone(), g, packed, scales),
+    }
 }
 
 /// Reconstruct the fake-quantized tensor (LUT decode — one table load and
@@ -300,9 +482,15 @@ pub fn dequantize(q: &QuantizedTensor) -> Tensor {
     Tensor { shape: q.shape.clone(), data }
 }
 
-/// Bytes used by the quantized representation (codes + scales).
+/// Bytes used by the quantized representation: codes + scales, where the
+/// scale storage for a two-level tensor is its [`ScalePlane`] (one u8 code
+/// per block plus one f32 tensor scale) — the derived f32 `scales` are a
+/// decode acceleration, not storage.
 pub fn storage_bytes(q: &QuantizedTensor) -> usize {
-    q.packed.len() + q.scales.len() * 4
+    match &q.scale_plane {
+        Some(p) => q.packed.len() + p.codes.len() + 4,
+        None => q.packed.len() + q.scales.len() * 4,
+    }
 }
 
 /// Compression ratio vs f32 storage.
@@ -341,6 +529,8 @@ mod tests {
                 (FP4_E2M1, GranSpec::PerRow, Granularity::PerRow),
                 (FP4_E2M1, GranSpec::PerBlock(32), Granularity::PerBlock(32)),
                 (FP8_E4M3, GranSpec::PerTensor, Granularity::PerTensor),
+                (FP4_E2M1, GranSpec::TwoLevelBlock(16), Granularity::TwoLevelBlock(16)),
+                (FP8_E4M3, GranSpec::TwoLevelBlock(32), Granularity::TwoLevelBlock(32)),
             ] {
                 let q = quantize(&t, fmt, g);
                 let d = dequantize(&q);
@@ -368,6 +558,8 @@ mod tests {
                 (FP4_E2M1, GranSpec::PerBlock(32)),
                 (FP8_E4M3, GranSpec::PerRow),
                 (FP8_E4M3, GranSpec::PerBlock(43)),
+                (FP4_E2M1, GranSpec::TwoLevelBlock(16)),
+                (FP8_E4M3, GranSpec::TwoLevelBlock(32)),
             ] {
                 let fast = quantize(&t, fmt, g);
                 let slow = quantize_scalar(&t, fmt, g);
@@ -379,6 +571,24 @@ mod tests {
                     "{} {g:?} scales",
                     fmt.name
                 );
+                match (&fast.scale_plane, &slow.scale_plane) {
+                    (None, None) => {
+                        prop_assert!(
+                            !matches!(g, GranSpec::TwoLevelBlock(_)),
+                            "{} {g:?} missing plane",
+                            fmt.name
+                        );
+                    }
+                    (Some(fp), Some(sp)) => {
+                        prop_assert!(fp.codes == sp.codes, "{} {g:?} plane codes", fmt.name);
+                        prop_assert!(
+                            fp.tensor_scale.to_bits() == sp.tensor_scale.to_bits(),
+                            "{} {g:?} tensor scale",
+                            fmt.name
+                        );
+                    }
+                    _ => prop_assert!(false, "{} {g:?} plane presence mismatch", fmt.name),
+                }
             }
             Ok(())
         });
@@ -399,6 +609,8 @@ mod tests {
                 (FP4_E2M1, GranSpec::PerBlock(4)),
                 (FP8_E4M3, GranSpec::PerRow),
                 (FP8_E4M3, GranSpec::PerBlock(3)),
+                (FP4_E2M1, GranSpec::TwoLevelBlock(4)),
+                (FP8_E4M3, GranSpec::TwoLevelBlock(3)),
             ] {
                 let t = quantize_rows_t(&data, rows, cols, fmt, g);
                 let want = quantize_rows(&xt, cols, rows, fmt, g);
@@ -411,6 +623,7 @@ mod tests {
                     "{} {g:?} scales",
                     fmt.name
                 );
+                prop_assert!(t.scale_plane == want.scale_plane, "{} {g:?} plane", fmt.name);
                 // and the generic dequantize reads it back as the
                 // fake-quantized transpose, bit for bit
                 prop_assert!(
@@ -446,6 +659,39 @@ mod tests {
     fn zero_tensor_roundtrip() {
         let t = Tensor::zeros(&[3, 64]);
         let q = quantize(&t, FP4_E2M1, GranSpec::PerRow);
+        assert_eq!(dequantize(&q).data, t.data);
+    }
+
+    #[test]
+    fn two_level_storage_beats_flat_block_scales() {
+        let mut rng = Rng::new(11);
+        let t = Tensor::randn(&[64, 256], 1.0, &mut rng);
+        let two = quantize(&t, FP4_E2M1, GranSpec::TwoLevelBlock(16));
+        let flat = quantize(&t, FP4_E2M1, GranSpec::PerBlock(16));
+        // same element payload, same group count; the plane stores one
+        // byte per group instead of four
+        assert_eq!(two.packed.len(), flat.packed.len());
+        let plane = two.scale_plane.as_ref().expect("plane");
+        assert_eq!(plane.codes.len(), flat.scales.len());
+        assert_eq!(storage_bytes(&two), two.packed.len() + plane.codes.len() + 4);
+        assert!(storage_bytes(&two) < storage_bytes(&flat));
+        assert!(compression_ratio(&two) > compression_ratio(&flat));
+        // derived scales are exactly decode(code) * tensor_scale
+        let lut = kernels::decode_lut(crate::formats::TWO_LEVEL_SCALE_FMT);
+        for (i, (&c, &s)) in plane.codes.iter().zip(&two.scales).enumerate() {
+            let want = if s == 1.0 && c == 0 { 1.0 } else { lut[c as usize] * plane.tensor_scale };
+            assert_eq!(s.to_bits(), want.to_bits(), "group {i}");
+        }
+    }
+
+    #[test]
+    fn two_level_zero_tensor_roundtrip() {
+        let t = Tensor::zeros(&[3, 64]);
+        let q = quantize(&t, FP4_E2M1, GranSpec::TwoLevelBlock(16));
+        let plane = q.scale_plane.as_ref().expect("plane");
+        assert_eq!(plane.tensor_scale, 1.0);
+        assert!(plane.codes.iter().all(|&c| c == 0));
+        assert!(q.scales.iter().all(|&s| s == 1.0));
         assert_eq!(dequantize(&q).data, t.data);
     }
 

@@ -121,16 +121,26 @@ pub struct LinearPrec {
     pub fwd: Option<QSpec>,
     pub wgrad: Option<QSpec>,
     pub agrad: Option<QSpec>,
+    /// Round the *gradient* fake-quants (`agrad`'s `Qa(g)` and `wgrad`'s
+    /// `Qb(g)`) stochastically instead of round-to-nearest-even — the
+    /// unbiased gradient estimator of the FP4 training literature.
+    /// Draws are counter-based (`util::rng::counter_hash` keyed on the
+    /// linear's stable name + flat element index), so training stays
+    /// bit-identical at every thread count and panel-cache state.
+    /// Forward and `wgrad`'s activation operand always stay RNE.
+    pub sr_grad: bool,
 }
 
 impl LinearPrec {
-    pub const EXACT: LinearPrec = LinearPrec { fwd: None, wgrad: None, agrad: None };
+    pub const EXACT: LinearPrec =
+        LinearPrec { fwd: None, wgrad: None, agrad: None, sr_grad: false };
 
     /// The precision this linear falls back to when the training-health
     /// sentinel escalates (paper §3.1 mixed-precision fallback): every
     /// sub-8-bit spec is widened to FP8 E4M3 at the same granularity;
     /// FP8 and exact GEMMs are already past the fragile regime and stay
-    /// as they are.
+    /// as they are.  The rounding mode is orthogonal to the width and is
+    /// preserved.
     pub fn demoted(&self) -> LinearPrec {
         let widen = |spec: Option<QSpec>| {
             spec.map(|q| {
@@ -141,7 +151,12 @@ impl LinearPrec {
                 }
             })
         };
-        LinearPrec { fwd: widen(self.fwd), wgrad: widen(self.wgrad), agrad: widen(self.agrad) }
+        LinearPrec {
+            fwd: widen(self.fwd),
+            wgrad: widen(self.wgrad),
+            agrad: widen(self.agrad),
+            sr_grad: self.sr_grad,
+        }
     }
 }
 
@@ -153,20 +168,30 @@ pub struct RecipePrec {
     pub ffn: Option<QSpec>,
     pub wgrad: Option<QSpec>,
     pub agrad: Option<QSpec>,
+    /// Stochastic rounding on the gradient fake-quants of every linear
+    /// (see [`LinearPrec::sr_grad`]).
+    pub sr_grad: bool,
 }
 
 impl RecipePrec {
     /// The all-exact recipe (FP16 baseline / schedule target).
     pub fn exact(name: &str) -> RecipePrec {
-        RecipePrec { name: name.into(), attn: None, ffn: None, wgrad: None, agrad: None }
+        RecipePrec {
+            name: name.into(),
+            attn: None,
+            ffn: None,
+            wgrad: None,
+            agrad: None,
+            sr_grad: false,
+        }
     }
 
     pub fn attn_linear(&self) -> LinearPrec {
-        LinearPrec { fwd: self.attn, wgrad: self.wgrad, agrad: self.agrad }
+        LinearPrec { fwd: self.attn, wgrad: self.wgrad, agrad: self.agrad, sr_grad: self.sr_grad }
     }
 
     pub fn ffn_linear(&self) -> LinearPrec {
-        LinearPrec { fwd: self.ffn, wgrad: self.wgrad, agrad: self.agrad }
+        LinearPrec { fwd: self.ffn, wgrad: self.wgrad, agrad: self.agrad, sr_grad: self.sr_grad }
     }
 
     /// Cost-model precision class of one knob — the single place the

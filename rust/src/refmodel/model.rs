@@ -361,7 +361,14 @@ impl RefModel {
                 fc2: QLinear::new(Tensor::randn(&[f, d], resid, &mut rng), vec![0.0; d], fl),
             });
         }
-        RefModel { cfg, recipe, wte, wpe, lnf: norm(d), blocks }
+        let mut model = RefModel { cfg, recipe, wte, wpe, lnf: norm(d), blocks };
+        // stable stochastic-rounding identities: a pure function of the
+        // sentinel name, so SR draws survive recipe swaps, rollback, and
+        // resume (mirrored in python `NpRefModel` by the same FNV-1a hash)
+        for (name, lin) in model.linears_mut() {
+            lin.set_sr_key(crate::util::fnv1a64(name.as_bytes()));
+        }
+        model
     }
 
     pub fn recipe(&self) -> &RecipePrec {
@@ -415,12 +422,29 @@ impl RefModel {
     /// weight codes sitting in the format's top magnitude bin
     /// (`kernels::fused::count_saturated`), in model order.  Exact
     /// (unpacked) linears are absent: they have no quantizer to saturate.
+    ///
+    /// Two-level tensors use the per-level attribution
+    /// (`count_saturated_two_level`): an element code in the top bin of a
+    /// block whose FP8 scale is *not* saturated is exact block-max
+    /// encoding, not element saturation — counting it naively would trip
+    /// the sentinel's FP4→FP8 demotion on perfectly healthy NVFP4
+    /// weights.  Only blocks whose scale code sits at the FP8 magnitude
+    /// ceiling contribute.
     pub fn saturation_rates(&mut self) -> Vec<(String, f32)> {
         let mut out = Vec::new();
         for (name, lin) in self.linears_mut() {
             if let Some(q) = lin.packed() {
                 let n: usize = q.shape.iter().product();
-                let sat = crate::kernels::fused::count_saturated(&q.packed, n, q.fmt());
+                let sat = match &q.scale_plane {
+                    Some(plane) => crate::kernels::fused::count_saturated_two_level(
+                        &q.packed,
+                        n,
+                        q.fmt(),
+                        q.group_len(),
+                        &plane.codes,
+                    ),
+                    None => crate::kernels::fused::count_saturated(&q.packed, n, q.fmt()),
+                };
                 out.push((name, sat as f32 / n.max(1) as f32));
             }
         }

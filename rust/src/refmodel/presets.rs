@@ -63,6 +63,10 @@ const FP4B: QSpec = QSpec { fmt: FP4_E2M1, gran: Granularity::PerBlock(128) };
 const FP8B: QSpec = QSpec { fmt: FP8_E4M3, gran: Granularity::PerBlock(128) };
 const FP4T: QSpec = QSpec { fmt: FP4_E2M1, gran: Granularity::PerRow };
 const FP8T: QSpec = QSpec { fmt: FP8_E4M3, gran: Granularity::PerRow };
+/// NVFP4 geometry: FP4 elements under two-level block-16 scaling (FP8
+/// per-block scale codes over one f32 tensor scale).  16 divides every
+/// proxy contraction dim (d_model, d_ff, token counts).
+const FP4TL: QSpec = QSpec { fmt: FP4_E2M1, gran: Granularity::TwoLevelBlock(16) };
 
 /// All recipe names, sorted.
 pub fn recipe_names() -> Vec<&'static str> {
@@ -75,6 +79,8 @@ pub fn recipe_names() -> Vec<&'static str> {
         "fp4_token",
         "ours_token",
         "fp4_agrad",
+        "nvfp4",
+        "nvfp4_sr",
     ];
     v.sort();
     v
@@ -83,7 +89,7 @@ pub fn recipe_names() -> Vec<&'static str> {
 /// A precision recipe by name (python `presets.RECIPES`).
 pub fn recipe(name: &str) -> Option<RecipePrec> {
     let r = |attn, ffn, wgrad, agrad| {
-        Some(RecipePrec { name: name.to_string(), attn, ffn, wgrad, agrad })
+        Some(RecipePrec { name: name.to_string(), attn, ffn, wgrad, agrad, sr_grad: false })
     };
     match name {
         "fp16" => r(None, None, None, None),
@@ -99,6 +105,13 @@ pub fn recipe(name: &str) -> Option<RecipePrec> {
         "ours_token" => r(Some(FP8T), Some(FP4T), Some(FP8T), None),
         // stress: quantizing the act-grad too (paper: breaks convergence)
         "fp4_agrad" => r(Some(FP8B), Some(FP4B), Some(FP8B), Some(FP4T)),
+        // NVFP4-style two-level FFN scaling, RNE gradients
+        "nvfp4" => r(Some(FP8B), Some(FP4TL), Some(FP8B), None),
+        // ... and with stochastic rounding on the gradient fake-quants
+        "nvfp4_sr" => r(Some(FP8B), Some(FP4TL), Some(FP8B), None).map(|mut p| {
+            p.sr_grad = true;
+            p
+        }),
         _ => None,
     }
 }
@@ -151,6 +164,15 @@ mod tests {
         let ours = recipe("ours").unwrap();
         assert_eq!(recipe_fmts(&ours), ("FP8", "FP4", "FP8", "FP16"));
         assert!(recipe("fp16").unwrap().attn.is_none());
+
+        // the NVFP4 pair differs only in gradient rounding mode
+        let nv = recipe("nvfp4").unwrap();
+        let nv_sr = recipe("nvfp4_sr").unwrap();
+        assert_eq!(recipe_fmts(&nv), ("FP8", "FP4", "FP8", "FP16"));
+        assert_eq!(nv.ffn.unwrap().gran, Granularity::TwoLevelBlock(16));
+        assert!(!nv.sr_grad);
+        assert!(nv_sr.sr_grad);
+        assert_eq!((nv.attn, nv.ffn, nv.wgrad, nv.agrad), (nv_sr.attn, nv_sr.ffn, nv_sr.wgrad, nv_sr.agrad));
     }
 
     #[test]

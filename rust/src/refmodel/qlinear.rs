@@ -67,6 +67,27 @@ fn fq(x: &[f32], rows: usize, cols: usize, spec: &QSpec) -> Vec<f32> {
     kernels::fake_quant_rows_auto(x, rows, cols, spec.fmt, spec.gran)
 }
 
+/// Gradient fake-quant: round-to-nearest-even normally, counter-based
+/// stochastic rounding when the recipe asks for it.  The key is the
+/// linear's stable identity XOR a per-operand-role tag, so the two
+/// gradient operands of one linear draw from disjoint streams and the
+/// draw for an element is a pure function of (linear, role, flat index) —
+/// independent of threads, chunking, and call history.
+fn fq_grad(x: &[f32], rows: usize, cols: usize, spec: &QSpec, sr: bool, key: u64) -> Vec<f32> {
+    if sr {
+        kernels::fake_quant_rows_sr_auto(x, rows, cols, spec.fmt, spec.gran, key)
+    } else {
+        fq(x, rows, cols, spec)
+    }
+}
+
+/// Key tag for the act-grad operand `Qa(g)` (mirrored in
+/// `python/compile/kernels/ref.py`).
+pub const SR_TAG_AGRAD: u64 = 0xA11C_E00D_0000_0001;
+/// Key tag for the weight-grad operand `Qb(gᵀ)` (mirrored in
+/// `python/compile/kernels/ref.py`).
+pub const SR_TAG_WGRAD: u64 = 0xA11C_E00D_0000_0002;
+
 pub struct QLinear {
     /// Master weight, (k, n) row-major f32.
     pub w: Tensor,
@@ -79,15 +100,30 @@ pub struct QLinear {
     /// (`qgemm_bt`), dx multiplies it as stored (`qgemm`) — no f32
     /// decode of either orientation is ever resident.
     packed: Option<QuantizedTensor>,
+    /// Stable stochastic-rounding identity of this linear (0 until
+    /// assigned): `RefModel` sets it to the FNV-1a hash of the linear's
+    /// sentinel name (`"qkv.0"`, …), so SR draws are a function of the
+    /// model position, not of construction order or memory layout.
+    sr_key: u64,
 }
 
 impl QLinear {
     pub fn new(w: Tensor, b: Vec<f32>, prec: LinearPrec) -> QLinear {
         assert_eq!(w.rank(), 2);
         assert_eq!(w.shape[1], b.len());
-        let mut l = QLinear { w, b, prec, packed: None };
+        let mut l = QLinear { w, b, prec, packed: None, sr_key: 0 };
         l.refresh();
         l
+    }
+
+    /// Set the stable stochastic-rounding key (see the field doc); a
+    /// plain field write — no packed state depends on it.
+    pub fn set_sr_key(&mut self, key: u64) {
+        self.sr_key = key;
+    }
+
+    pub fn sr_key(&self) -> u64 {
+        self.sr_key
     }
 
     pub fn in_dim(&self) -> usize {
@@ -185,9 +221,10 @@ impl QLinear {
         // codes, scales, and (when enabled) cached panels with the
         // forward.  On the exact path the master weight is transposed
         // into the model-shared scratch instead (no per-linear copy).
+        let sr = self.prec.sr_grad;
         match (&self.packed, &self.prec.agrad) {
             (Some(q), Some(spec)) => {
-                let gq = fq(g, m, n, spec);
+                let gq = fq_grad(g, m, n, spec, sr, self.sr_key ^ SR_TAG_AGRAD);
                 kernels::qgemm_into(&gq, q, m, n, k, dx, &mut sc.ws);
             }
             (Some(q), None) => kernels::qgemm_into(g, q, m, n, k, dx, &mut sc.ws),
@@ -195,7 +232,7 @@ impl QLinear {
                 transpose_into(&self.w.data, k, n, &mut sc.wt);
                 match spec {
                     Some(s) => {
-                        let gq = fq(g, m, n, s);
+                        let gq = fq_grad(g, m, n, s, sr, self.sr_key ^ SR_TAG_AGRAD);
                         kernels::matmul_into(&gq, &sc.wt, m, n, k, dx);
                     }
                     None => kernels::matmul_into(g, &sc.wt, m, n, k, dx),
@@ -204,13 +241,15 @@ impl QLinear {
         }
 
         // dw = Qb(x)^T @ Qb(g): transpose both operands (grouping them
-        // along the token/contraction axis), then one f32 GEMM
+        // along the token/contraction axis), then one f32 GEMM.  Only
+        // the *gradient* operand rounds stochastically under sr_grad —
+        // the activation operand is not a gradient and stays RNE.
         transpose_into(x, m, k, &mut sc.xt);
         match &self.prec.wgrad {
             Some(spec) => {
                 let xtq = fq(&sc.xt, k, m, spec);
                 transpose_into(g, m, n, &mut sc.gt);
-                let gtq = fq(&sc.gt, n, m, spec);
+                let gtq = fq_grad(&sc.gt, n, m, spec, sr, self.sr_key ^ SR_TAG_WGRAD);
                 transpose_into(&gtq, n, m, &mut sc.gq);
                 kernels::matmul_into(&xtq, &sc.gq, k, m, n, dw);
             }
@@ -310,11 +349,13 @@ mod tests {
                     fwd: Some(spec(FP8_E4M3, 8)),
                     wgrad: Some(spec(FP8_E4M3, 8)),
                     agrad: None,
+                    ..LinearPrec::EXACT
                 },
                 LinearPrec {
                     fwd: Some(spec(FP4_E2M1, 8)),
                     wgrad: Some(spec(FP4_E2M1, 4)),
                     agrad: Some(spec(FP4_E2M1, 8)),
+                    ..LinearPrec::EXACT
                 },
                 LinearPrec::EXACT,
             ] {
@@ -383,11 +424,12 @@ mod tests {
         let g = randmat(m, n, 13);
         let b: Vec<f32> = (0..n).map(|i| i as f32 * 0.01).collect();
         for prec in [
-            LinearPrec { fwd: Some(spec(FP4_E2M1, 8)), wgrad: None, agrad: None },
+            LinearPrec { fwd: Some(spec(FP4_E2M1, 8)), ..LinearPrec::EXACT },
             LinearPrec {
                 fwd: Some(spec(FP8_E4M3, 8)),
                 wgrad: Some(spec(FP8_E4M3, 8)),
                 agrad: Some(spec(FP8_E4M3, 8)),
+                ..LinearPrec::EXACT
             },
         ] {
             let l = QLinear::new(w.clone(), b.clone(), prec);
@@ -424,10 +466,69 @@ mod tests {
     }
 
     #[test]
+    fn sr_grad_rounds_gradients_stochastically_and_forward_stays_rne() {
+        use crate::formats::{fake_quant_rows, fake_quant_rows_sr};
+        let (m, k, n) = (6usize, 16usize, 24usize);
+        let x = randmat(m, k, 21);
+        let w = randmat(k, n, 22);
+        let g = randmat(m, n, 23);
+        let b = vec![0.0f32; n];
+        let base = LinearPrec {
+            fwd: Some(spec(FP8_E4M3, 8)),
+            wgrad: Some(spec(FP4_E2M1, 8)),
+            agrad: Some(spec(FP4_E2M1, 8)),
+            ..LinearPrec::EXACT
+        };
+        const KEY: u64 = 0xFEED_F00D;
+        let rne = QLinear::new(w.clone(), b.clone(), base);
+        let mut srl = QLinear::new(w.clone(), b.clone(), LinearPrec { sr_grad: true, ..base });
+        srl.set_sr_key(KEY);
+        let mut sc = Scratch::default();
+        let run = |l: &QLinear, sc: &mut Scratch| {
+            let mut y = vec![0.0f32; m * n];
+            l.forward_into(&x.data, m, false, &mut y, sc);
+            let (mut dx, mut dw, mut db) =
+                (vec![0.0f32; m * k], vec![0.0f32; k * n], vec![0.0f32; n]);
+            l.backward_into(&x.data, &g.data, m, &mut dx, &mut dw, &mut db, sc);
+            (y, dx, dw, db)
+        };
+        let (y_r, dx_r, dw_r, db_r) = run(&rne, &mut sc);
+        let (y_s, dx_s, dw_s, db_s) = run(&srl, &mut sc);
+        // forward and bias grad are untouched by the rounding mode
+        assert_eq!(y_r, y_s);
+        assert_eq!(db_r, db_s);
+        // the gradient paths actually switched mode
+        assert_ne!(dx_r, dx_s, "agrad must round stochastically");
+        assert_ne!(dw_r, dw_s, "wgrad's gradient operand must round stochastically");
+
+        // scalar SR reference with the same (key, role-tag) streams
+        let fa = base.agrad.unwrap();
+        let fw = base.wgrad.unwrap();
+        let ff = base.fwd.unwrap();
+        let gq = fake_quant_rows_sr(&g.data, m, n, fa.fmt, fa.gran, KEY ^ SR_TAG_AGRAD);
+        let wt = w.transpose2();
+        let wqt = Tensor::from_vec(&wt.shape, fake_quant_rows(&wt.data, n, k, ff.fmt, ff.gran));
+        let dx_want = Tensor::from_vec(&[m, n], gq).matmul(&wqt).data;
+        assert_eq!(dx_s, dx_want, "SR dx != scalar SR reference");
+        let xt = x.transpose2();
+        let xtq = Tensor::from_vec(
+            &xt.shape,
+            fake_quant_rows(&xt.data, k, m, fw.fmt, fw.gran), // activations stay RNE
+        );
+        let gt = g.transpose2();
+        let gtq = Tensor::from_vec(
+            &gt.shape,
+            fake_quant_rows_sr(&gt.data, n, m, fw.fmt, fw.gran, KEY ^ SR_TAG_WGRAD),
+        );
+        let dw_want = xtq.matmul(&gtq.transpose2()).data;
+        assert_eq!(dw_s, dw_want, "SR dw != scalar SR reference");
+    }
+
+    #[test]
     fn exact_flag_bypasses_quantizers() {
         let w = randmat(16, 8, 1);
         let x = randmat(4, 16, 2);
-        let prec = LinearPrec { fwd: Some(spec(FP4_E2M1, 8)), wgrad: None, agrad: None };
+        let prec = LinearPrec { fwd: Some(spec(FP4_E2M1, 8)), ..LinearPrec::EXACT };
         let l = QLinear::new(w.clone(), vec![0.0; 8], prec);
         let mut sc = Scratch::default();
         let mut yq = vec![0.0f32; 4 * 8];
@@ -443,7 +544,7 @@ mod tests {
         let mut l = QLinear::new(
             randmat(8, 8, 3),
             vec![0.0; 8],
-            LinearPrec { fwd: Some(spec(FP4_E2M1, 8)), wgrad: None, agrad: None },
+            LinearPrec { fwd: Some(spec(FP4_E2M1, 8)), ..LinearPrec::EXACT },
         );
         let x = randmat(2, 8, 4);
         let mut sc = Scratch::default();
@@ -465,7 +566,11 @@ mod tests {
         let mut l = QLinear::new(
             randmat(8, 8, 5),
             vec![0.1; 8],
-            LinearPrec { fwd: Some(spec(FP4_E2M1, 8)), wgrad: Some(spec(FP8_E4M3, 8)), agrad: None },
+            LinearPrec {
+                fwd: Some(spec(FP4_E2M1, 8)),
+                wgrad: Some(spec(FP8_E4M3, 8)),
+                ..LinearPrec::EXACT
+            },
         );
         l.set_prec(LinearPrec::EXACT);
         let x = randmat(3, 8, 6);

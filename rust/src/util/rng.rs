@@ -20,6 +20,28 @@ fn splitmix64(state: &mut u64) -> u64 {
     z ^ (z >> 31)
 }
 
+/// Counter-based hash (splitmix64 finalizer over `key + (i+1)·φ64`): a
+/// stateless uniform u64 that depends only on `(key, i)`.  This is the
+/// determinism backbone of stochastic rounding — the draw for element `i`
+/// of tensor `key` is the same no matter which thread processes it, how
+/// the sweep is chunked, or what ran before (mirrored bit-for-bit in
+/// `python/compile/kernels/ref.py::np_counter_hash`).
+#[inline]
+pub fn counter_hash(key: u64, i: u64) -> u64 {
+    let mut z = key.wrapping_add(i.wrapping_add(1).wrapping_mul(0x9E3779B97F4A7C15));
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Map a hash to a uniform f32 in [0, 1) using its top 24 bits (shifted
+/// past the low bits so `unit_f32(counter_hash(..))` uses the
+/// best-avalanched part of the word).
+#[inline]
+pub fn unit_f32(h: u64) -> f32 {
+    ((h >> 40) as u32) as f32 * (1.0 / (1u32 << 24) as f32)
+}
+
 impl Rng {
     pub fn new(seed: u64) -> Self {
         let mut sm = seed;
@@ -224,5 +246,29 @@ mod tests {
         let mut a = root.fork(1);
         let mut b = root.fork(2);
         assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn counter_hash_is_pure_and_decorrelated() {
+        // pure function of (key, i)
+        assert_eq!(counter_hash(7, 42), counter_hash(7, 42));
+        // neighbouring counters and keys give unrelated words
+        assert_ne!(counter_hash(7, 42), counter_hash(7, 43));
+        assert_ne!(counter_hash(7, 42), counter_hash(8, 42));
+        // i=0 is a real draw, not a fixed point of the key
+        assert_ne!(counter_hash(7, 0), 7);
+    }
+
+    #[test]
+    fn unit_f32_range_and_mean() {
+        let mut sum = 0.0f64;
+        const N: u64 = 20_000;
+        for i in 0..N {
+            let u = unit_f32(counter_hash(0xFEED, i));
+            assert!((0.0..1.0).contains(&u), "{u}");
+            sum += u as f64;
+        }
+        let mean = sum / N as f64;
+        assert!((mean - 0.5).abs() < 0.01, "{mean}");
     }
 }

@@ -166,13 +166,18 @@ fn configured_threads_env_override_and_clamping() {
     use fp4train::kernels::pool::{configured_threads, MAX_THREADS};
     set_threads(3);
     assert_eq!(configured_threads(), 3);
-    std::env::set_var("PALLAS_THREADS", "0"); // clamped up
-    assert_eq!(configured_threads(), 1);
     std::env::set_var("PALLAS_THREADS", "10000"); // clamped down
     assert_eq!(configured_threads(), MAX_THREADS);
-    std::env::set_var("PALLAS_THREADS", "not a number"); // ignored
+    // invalid settings are rejected (reported once to stderr) and fall
+    // back to the automatic policy — never silently coerced to a thread
+    // count.  In particular "0" is an error, not "clamp up to 1".
+    std::env::remove_var("PALLAS_THREADS");
     let auto = configured_threads();
     assert!((1..=MAX_THREADS).contains(&auto));
+    for bad in ["0", "not a number", "", "-3", "2.5"] {
+        std::env::set_var("PALLAS_THREADS", bad);
+        assert_eq!(configured_threads(), auto, "invalid PALLAS_THREADS={bad:?}");
+    }
     std::env::remove_var("PALLAS_THREADS");
 }
 
@@ -204,21 +209,74 @@ fn transposed_pack_bit_identical_across_thread_counts() {
     // row chunk (129 output rows)
     let (rows, cols) = (1024usize, 129usize); // output geometry: 129 x 1024
     let x = randvec(rows * cols, 59);
-    let mut reference: Option<Vec<(Vec<u8>, Vec<u32>)>> = None;
+    let mut reference: Option<Vec<(Vec<u8>, Vec<u32>, Vec<u8>)>> = None;
     for nt in THREAD_COUNTS {
         set_threads(nt);
-        let got: Vec<(Vec<u8>, Vec<u32>)> =
-            [GranSpec::PerBlock(128), GranSpec::PerRow, GranSpec::PerTensor]
-                .into_iter()
-                .map(|g| {
-                    let q = quant::quantize_rows_t(&x, rows, cols, FP4_E2M1, g);
-                    assert_eq!(q.rows_cols(), (cols, rows));
-                    (q.packed.clone(), q.scales.iter().map(|s| s.to_bits()).collect())
-                })
-                .collect();
+        let got: Vec<(Vec<u8>, Vec<u32>, Vec<u8>)> = [
+            GranSpec::PerBlock(128),
+            GranSpec::PerRow,
+            GranSpec::PerTensor,
+            GranSpec::TwoLevelBlock(128),
+        ]
+        .into_iter()
+        .map(|g| {
+            let q = quant::quantize_rows_t(&x, rows, cols, FP4_E2M1, g);
+            assert_eq!(q.rows_cols(), (cols, rows));
+            let plane = q.scale_plane.as_ref().map(|p| p.codes.clone()).unwrap_or_default();
+            (q.packed.clone(), q.scales.iter().map(|s| s.to_bits()).collect(), plane)
+        })
+        .collect();
         match &reference {
             None => reference = Some(got),
             Some(r) => assert_eq!(&got, r, "quantize_rows_t diverged at nt={nt}"),
+        }
+    }
+    std::env::remove_var("PALLAS_THREADS");
+}
+
+#[test]
+fn sr_and_two_level_sweeps_bit_identical_across_thread_counts() {
+    let _env = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    use fp4train::kernels::fake_quant_rows_sr_auto;
+    // 1024*129 elems > PAR_MIN_ELEMS with odd cols and a 43-wide block
+    // (129 = 3*43 → ragged chunk evening on the FP4 pack path).  The SR
+    // draws are counter-based on (key, flat index), so every thread count
+    // must reproduce the serial stream exactly — for the plain-block and
+    // the two-level gradient-quant paths alike.
+    let (rows, cols) = (1024usize, 129usize);
+    let x = randvec(rows * cols, 65);
+    const KEY: u64 = 0x5EED_C0FFEE;
+    let mut reference: Option<(Vec<u32>, Vec<u32>, Vec<u32>, (Vec<u8>, Vec<u32>, Vec<u8>, u32))> =
+        None;
+    for nt in THREAD_COUNTS {
+        set_threads(nt);
+        let sr_block =
+            fake_quant_rows_sr_auto(&x, rows, cols, FP4_E2M1, Granularity::PerBlock(43), KEY);
+        let sr_two =
+            fake_quant_rows_sr_auto(&x, rows, cols, FP4_E2M1, Granularity::TwoLevelBlock(43), KEY);
+        let fq_two =
+            fake_quant_rows_auto(&x, rows, cols, FP4_E2M1, Granularity::TwoLevelBlock(43));
+        let q = quant::quantize_rows(&x, rows, cols, FP4_E2M1, GranSpec::TwoLevelBlock(43));
+        let plane = q.scale_plane.as_ref().expect("two-level pack carries a plane");
+        let got = (
+            bits(&sr_block),
+            bits(&sr_two),
+            bits(&fq_two),
+            (
+                q.packed.clone(),
+                q.scales.iter().map(|s| s.to_bits()).collect::<Vec<_>>(),
+                plane.codes.clone(),
+                plane.tensor_scale.to_bits(),
+            ),
+        );
+        match &reference {
+            None => reference = Some(got),
+            Some(r) => {
+                assert_eq!(&got.0, &r.0, "SR per-block sweep diverged at nt={nt}");
+                assert_eq!(&got.1, &r.1, "SR two-level sweep diverged at nt={nt}");
+                assert_eq!(&got.2, &r.2, "two-level fake-quant diverged at nt={nt}");
+                assert_eq!(&got.3, &r.3, "two-level pack diverged at nt={nt}");
+            }
         }
     }
     std::env::remove_var("PALLAS_THREADS");

@@ -42,8 +42,12 @@ fn batch_at(step: u64, b: usize, t: usize, vocab: usize) -> TensorI32 {
 /// Train `steps` quantized steps and return every final master-parameter
 /// bit plus the per-step losses.
 fn train_bits(steps: u64, panel_cache: bool) -> (Vec<u32>, Vec<u32>) {
+    train_bits_recipe("ours", steps, panel_cache)
+}
+
+fn train_bits_recipe(recipe: &str, steps: u64, panel_cache: bool) -> (Vec<u32>, Vec<u32>) {
     let cfg = micro_cfg();
-    let recipe = presets::recipe("ours").unwrap();
+    let recipe = presets::recipe(recipe).unwrap();
     let mut model = RefModel::new(cfg.clone(), recipe, 17);
     let mut opt = AdamW::new(&mut model, HParams::for_family("gpt2", steps));
     let mut sc = if panel_cache { Scratch::with_panel_cache(64 << 20) } else { Scratch::default() };
@@ -81,6 +85,37 @@ fn quantized_training_bit_identical_across_threads_and_cache() {
         }
     }
     std::env::remove_var("PALLAS_THREADS");
+}
+
+/// Same sweep on the `nvfp4_sr` recipe: two-level block-scaled FFN
+/// operands AND stochastically-rounded gradient fake-quants.  The SR
+/// draws are counter-based (keyed on linear name + absolute element
+/// index), so the training trajectory must stay bit-identical at every
+/// thread count and panel-cache state — the determinism claim the
+/// counter-based design exists to make.  The SR trajectory must also
+/// actually differ from the RNE trajectory of the same geometry
+/// (`nvfp4`), or the knob is dead.
+#[test]
+fn sr_two_level_training_bit_identical_across_threads_and_cache() {
+    let _env = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let mut reference: Option<(Vec<u32>, Vec<u32>)> = None;
+    for nt in THREAD_COUNTS {
+        std::env::set_var("PALLAS_THREADS", nt.to_string());
+        for cache in [false, true] {
+            let got = train_bits_recipe("nvfp4_sr", 3, cache);
+            match &reference {
+                None => reference = Some(got),
+                Some(r) => {
+                    assert_eq!(got.1, r.1, "SR loss bits diverged at nt={nt} cache={cache}");
+                    assert_eq!(got.0, r.0, "SR param bits diverged at nt={nt} cache={cache}");
+                }
+            }
+        }
+    }
+    std::env::remove_var("PALLAS_THREADS");
+    let rne = train_bits_recipe("nvfp4", 3, false);
+    let sr = reference.unwrap();
+    assert_ne!(rne.1, sr.1, "SR gradient rounding changed no loss bit vs RNE");
 }
 
 #[test]

@@ -61,14 +61,27 @@ fn config_of(j: &Json) -> RefConfig {
     }
 }
 
-fn spec_of(j: &Json, knob: &str) -> Option<QSpec> {
-    let fmt = j.at(&["recipe", knob, "fmt"]).and_then(|v| v.as_str()).unwrap();
+fn spec_of_at(j: &Json, root: &str, knob: &str) -> Option<QSpec> {
+    let fmt = j.at(&[root, knob, "fmt"]).and_then(|v| v.as_str()).unwrap();
     if fmt == "none" {
         return None;
     }
-    let block = j.at(&["recipe", knob, "block"]).and_then(|v| v.as_usize()).unwrap();
-    let gran = if block == 0 { Granularity::PerRow } else { Granularity::PerBlock(block) };
+    let block = j.at(&[root, knob, "block"]).and_then(|v| v.as_usize()).unwrap();
+    // optional flag: block-grouped FP4 under a two-level scale plane
+    let two_level =
+        j.at(&[root, knob, "two_level"]).and_then(|v| v.as_bool()).unwrap_or(false);
+    let gran = if two_level {
+        Granularity::TwoLevelBlock(block)
+    } else if block == 0 {
+        Granularity::PerRow
+    } else {
+        Granularity::PerBlock(block)
+    };
     Some(QSpec { fmt: FpFormat::by_name(fmt).expect("fixture format"), gran })
+}
+
+fn spec_of(j: &Json, knob: &str) -> Option<QSpec> {
+    spec_of_at(j, "recipe", knob)
 }
 
 fn build_model(j: &Json, recipe: RecipePrec) -> RefModel {
@@ -154,10 +167,33 @@ fn quant_run_matches_python_golden() {
         ffn: spec_of(&j, "ffn"),
         wgrad: spec_of(&j, "wgrad"),
         agrad: spec_of(&j, "agrad"),
+        sr_grad: false,
     };
     assert!(recipe.attn.is_some() && recipe.ffn.is_some() && recipe.wgrad.is_some());
     assert!(recipe.agrad.is_none());
     replay("quant", recipe, "quant_rel_l2");
+}
+
+/// Replay the NVFP4-style run: two-level block-scaled FFN operands plus
+/// counter-based stochastic rounding on the gradient fake-quants.  The
+/// python oracle mirrors both (same scale-plane arithmetic, same
+/// splitmix64 counter draws keyed by linear name), so the comparison
+/// pins the SR draw sequence itself, not just its statistics.
+#[test]
+fn nvfp4_sr_run_matches_python_golden() {
+    let j = fixture();
+    let root = "recipe_nvfp4_sr";
+    let recipe = RecipePrec {
+        name: "fixture-nvfp4-sr".into(),
+        attn: spec_of_at(&j, root, "attn"),
+        ffn: spec_of_at(&j, root, "ffn"),
+        wgrad: spec_of_at(&j, root, "wgrad"),
+        agrad: spec_of_at(&j, root, "agrad"),
+        sr_grad: j.at(&[root, "sr_grad"]).and_then(|v| v.as_bool()).unwrap(),
+    };
+    assert!(matches!(recipe.ffn.unwrap().gran, Granularity::TwoLevelBlock(_)));
+    assert!(recipe.sr_grad);
+    replay("nvfp4_sr", recipe, "nvfp4_sr_rel_l2");
 }
 
 /// The quantized and exact runs must actually differ (quantization
@@ -172,6 +208,7 @@ fn quant_and_fp16_differ_within_format_band() {
         ffn: spec_of(&j, "ffn"),
         wgrad: spec_of(&j, "wgrad"),
         agrad: spec_of(&j, "agrad"),
+        sr_grad: false,
     };
     let qm = build_model(&j, quant);
     let fm = build_model(&j, RecipePrec::exact("fp16"));
@@ -200,7 +237,7 @@ fn qlinear_forward_error_within_operand_bound() {
         let (x, _, _) = c.f32_mat(m, m, k, k, -3.0, 3.0);
         let (w, _, _) = c.f32_mat(k, k, n, n, -1.0, 1.0);
         let spec = QSpec { fmt: FP4_E2M1, gran: Granularity::PerBlock(8) };
-        let prec = LinearPrec { fwd: Some(spec), wgrad: None, agrad: None };
+        let prec = LinearPrec { fwd: Some(spec), ..LinearPrec::EXACT };
         let l = QLinear::new(Tensor::from_vec(&[k, n], w.clone()), vec![0.0; n], prec);
         let mut sc = Scratch::default();
         let mut y = vec![0.0f32; m * n];
