@@ -86,10 +86,12 @@ def ref_quant_matmul(
 #
 # The rust host-side training engine (`rust/src/refmodel/`) is a manual
 # line-by-line port of the numpy functions below.  This section is the
-# executable spec: a tiny GPT-2-family transformer (the same block as
-# compile.model._gpt2_block) with fake-quantized linears, forward AND
-# manual backward, used to dump JSON fixtures that rust/tests/
-# refmodel_golden.rs replays.
+# executable spec: tiny transformers in both block variants (the same
+# blocks as compile.model._gpt2_block and ._llama_block — layernorm/GELU
+# vs rmsnorm/RoPE/SwiGLU) with fake-quantized linears and an optionally
+# fake-quantized attention interior (FP8 KV-cache rows, FP8 probs rows),
+# forward AND manual backward, used to dump JSON fixtures that
+# rust/tests/refmodel_golden.rs replays.
 #
 # Quantization axes (shared contract with rust/src/refmodel/qlinear.rs):
 # every fake-quantized operand is grouped along its CONTRACTION axis, as
@@ -294,15 +296,35 @@ class NpRecipe:
     """Per-module precision recipe (paper Table 2 row): attention linears,
     FFN linears, weight-grad GEMMs, act-grad GEMMs.  `sr_grad` switches
     the gradient fake-quants (agrad's Qa(g), wgrad's Qb(g)) to
-    counter-based stochastic rounding; everything else stays RNE."""
+    counter-based stochastic rounding; everything else stays RNE.
 
-    def __init__(self, attn=None, ffn=None, wgrad=None, agrad=None, sr_grad=False):
+    Beyond the paper's table, `kv` fake-quantizes k (post-RoPE) and v at
+    write into the attention cache — one scale per (token, head) row along
+    head_dim — and `attn_probs` fake-quantizes the softmax probabilities
+    along the key axis before the probs @ v contraction.  Both are
+    straight-through in the manual backward: the backward contractions use
+    the quantized tensors (they are what the forward multiplied), the
+    gradients pass through the quantizers unchanged."""
+
+    def __init__(self, attn=None, ffn=None, wgrad=None, agrad=None, sr_grad=False,
+                 kv=None, attn_probs=None):
         none = NpSpec()
         self.attn = attn or none
         self.ffn = ffn or none
         self.wgrad = wgrad or none
         self.agrad = agrad or none
         self.sr_grad = sr_grad
+        self.kv = kv or none
+        self.attn_probs = attn_probs or none
+
+
+def _np_quant_rows_nd(x, spec: NpSpec):
+    """Apply an NpSpec along the trailing axis of an N-D tensor (one scale
+    group per trailing row) — the attention-path quantizer."""
+    if spec.fmt is None:
+        return np.asarray(x, dtype=np.float32)
+    sh = x.shape
+    return spec.apply(np.ascontiguousarray(x).reshape(-1, sh[-1])).reshape(sh)
 
 
 def np_qlinear_fwd(x, w, spec: NpSpec):
@@ -371,15 +393,103 @@ def _np_gelu_bwd(dy, x, t):
     return (dy * dgelu).astype(np.float32)
 
 
+# --- LLaMA-block primitives (mirrors of compile.model._rmsnorm/_rope and
+# --- jax.nn.silu-gated SwiGLU; rust twins live in rust/src/refmodel/model.rs)
+
+
+def np_rmsnorm(x, g, eps=1e-5):
+    """RMSNorm forward: ``y = x * rsqrt(mean(x^2) + eps) * g``.  Returns
+    (y, inv) where `inv` is the per-row reciprocal RMS the backward needs."""
+    x = np.asarray(x, dtype=np.float32)
+    ms = np.mean(x * x, -1, keepdims=True, dtype=np.float32)
+    inv = (1.0 / np.sqrt(ms + np.float32(eps))).astype(np.float32)
+    return (x * inv * g).astype(np.float32), inv
+
+
+def np_rmsnorm_bwd(dy, x, g, inv):
+    """Backward of `np_rmsnorm`: with n = row width,
+    ``dx = inv * (dy*g - x * inv^2 * mean(dy*g*x))``, ``dg = sum(dy * x * inv)``."""
+    dxhat = (dy * g).astype(np.float32)
+    m = np.mean(dxhat * x, -1, keepdims=True, dtype=np.float32)
+    dx = (inv * (dxhat - x * (inv * inv) * m)).astype(np.float32)
+    dg = (dy * x * inv).sum(0).astype(np.float32)
+    return dx, dg
+
+
+def np_rope(x, base=10000.0):
+    """Rotary position embeddings over (B, H, T, Dh), half-split layout —
+    the exact mirror of compile.model._rope: pair i rotates (x[i],
+    x[i+half]) by angle pos / base**(i/half)."""
+    x = np.asarray(x, dtype=np.float32)
+    b, h, t, dh = x.shape
+    half = dh // 2
+    freqs = (
+        1.0 / (np.float32(base) ** (np.arange(half, dtype=np.float32) / np.float32(half)))
+    ).astype(np.float32)
+    pos = np.arange(t, dtype=np.float32)
+    ang = (pos[:, None] * freqs[None, :]).astype(np.float32)
+    cos, sin = np.cos(ang).astype(np.float32), np.sin(ang).astype(np.float32)
+    x1, x2 = x[..., :half], x[..., half:]
+    return np.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1).astype(
+        np.float32
+    )
+
+
+def np_rope_bwd(dy, base=10000.0):
+    """Backward of `np_rope`.  The rotation is orthogonal per (position,
+    pair), so the vjp is the inverse rotation (transpose)."""
+    dy = np.asarray(dy, dtype=np.float32)
+    b, h, t, dh = dy.shape
+    half = dh // 2
+    freqs = (
+        1.0 / (np.float32(base) ** (np.arange(half, dtype=np.float32) / np.float32(half)))
+    ).astype(np.float32)
+    pos = np.arange(t, dtype=np.float32)
+    ang = (pos[:, None] * freqs[None, :]).astype(np.float32)
+    cos, sin = np.cos(ang).astype(np.float32), np.sin(ang).astype(np.float32)
+    d1, d2 = dy[..., :half], dy[..., half:]
+    return np.concatenate([d1 * cos + d2 * sin, -d1 * sin + d2 * cos], -1).astype(
+        np.float32
+    )
+
+
+def np_swiglu(gate, up):
+    """SwiGLU activation ``silu(gate) * up`` (compile.model._llama_block).
+    Returns (a, sig) with `sig = sigmoid(gate)` cached for the backward."""
+    gate = np.asarray(gate, dtype=np.float32)
+    up = np.asarray(up, dtype=np.float32)
+    sig = (1.0 / (1.0 + np.exp(-gate))).astype(np.float32)
+    return (gate * sig * up).astype(np.float32), sig
+
+
+def np_swiglu_bwd(da, gate, up, sig):
+    """Backward of `np_swiglu`: dgate = da * up * sig * (1 + gate*(1-sig)),
+    dup = da * gate * sig."""
+    dgate = (da * up * sig * (1.0 + gate * (1.0 - sig))).astype(np.float32)
+    dup = (da * gate * sig).astype(np.float32)
+    return dgate, dup
+
+
 class NpRefModel:
-    """The refmodel spec: GPT-2-family block (layernorm → fused-QKV
-    attention → out-proj, layernorm → GELU MLP), learned positions, tied
-    LM head, mean next-token cross-entropy.  Identical function to
-    compile.model.forward for the gpt2 family (pytest cross-checks the
-    fp16 path against jax autodiff)."""
+    """The refmodel spec, dispatched on ``cfg["family"]``:
+
+    * ``gpt2`` — layernorm → fused-QKV attention → out-proj, layernorm →
+      GELU MLP, learned positions, biases everywhere.
+    * ``llama`` — rmsnorm → separate q/k/v projections with RoPE on q/k →
+      out-proj, rmsnorm → SwiGLU (gate/up/down) MLP, no positions, no
+      biases.
+
+    Both share the tied LM head and mean next-token cross-entropy, and are
+    identical functions to compile.model.forward for their family (pytest
+    cross-checks the fp16 paths against jax autodiff).  The recipe's
+    kv/attn_probs knobs quantize the attention interior identically in
+    either family."""
 
     def __init__(self, cfg: dict, recipe: NpRecipe):
         self.cfg = cfg
+        self.family = cfg.get("family", "gpt2")
+        if self.family not in ("gpt2", "llama"):
+            raise ValueError(f"unknown family {self.family!r}")
         self.recipe = recipe
 
     # --- parameter helpers -------------------------------------------------
@@ -391,6 +501,20 @@ class NpRefModel:
 
         def n(*shape, s=0.3):
             return (rng.standard_normal(shape) * s).astype(np.float32)
+
+        if self.family == "llama":
+            p = {"wte": n(v, d), "rms_f_g": 1.0 + n(d, s=0.05)}
+            for i in range(l):
+                p[f"rms1_g.{i}"] = 1.0 + n(d, s=0.05)
+                p[f"w_q.{i}"] = n(d, d)
+                p[f"w_k.{i}"] = n(d, d)
+                p[f"w_v.{i}"] = n(d, d)
+                p[f"w_o.{i}"] = n(d, d)
+                p[f"rms2_g.{i}"] = 1.0 + n(d, s=0.05)
+                p[f"w_gate.{i}"] = n(d, f)
+                p[f"w_up.{i}"] = n(d, f)
+                p[f"w_down.{i}"] = n(f, d)
+            return p
 
         p = {"wte": n(v, d), "wpe": n(t, d, s=0.1),
              "ln_f_g": 1.0 + n(d, s=0.05), "ln_f_b": n(d, s=0.05)}
@@ -411,13 +535,23 @@ class NpRefModel:
 
     # --- forward -----------------------------------------------------------
 
+    def _softmax_causal(self, scores, t):
+        mask = np.tril(np.ones((t, t), bool))
+        scores = np.where(mask, scores, np.float32(-1e30))
+        smax = scores.max(-1, keepdims=True)
+        e = np.exp((scores - smax).astype(np.float32)).astype(np.float32)
+        return (e / e.sum(-1, keepdims=True, dtype=np.float32)).astype(np.float32)
+
     def forward(self, p: dict, tokens: np.ndarray):
         """tokens (B, T) int -> (loss-ready hidden, per-layer caches).
         Returns (final_hidden (BT, d), logits (BT, V), caches)."""
+        if self.family == "llama":
+            return self._forward_llama(p, tokens)
         c = self.cfg
         b, t = tokens.shape
         d, h = c["d_model"], c["n_head"]
         dh = d // h
+        kvq, ppq = self.recipe.kv, self.recipe.attn_probs
         x = (p["wte"][tokens.reshape(-1)] + np.tile(p["wpe"][:t], (b, 1))).astype(np.float32)
         caches = []
         for i in range(c["layers"]):
@@ -426,13 +560,19 @@ class NpRefModel:
             qkv, qkvres = np_qlinear_fwd(h1, p[f"w_qkv.{i}"], al)
             qkv = qkv + p[f"b_qkv.{i}"]
             q, k, v = [a.reshape(b, t, h, dh).transpose(0, 2, 1, 3) for a in np.split(qkv, 3, axis=-1)]
+            # KV-cache write: k/v fake-quantized per (token, head) row along
+            # head_dim.  Only the quantized tensors enter any contraction
+            # (forward AND backward), so the STE backward is exactly the
+            # fp16 backward with k/v replaced by their cached values.
+            k = _np_quant_rows_nd(k, kvq)
+            v = _np_quant_rows_nd(v, kvq)
             scores = (q @ k.transpose(0, 1, 3, 2) / np.float32(np.sqrt(dh))).astype(np.float32)
-            mask = np.tril(np.ones((t, t), bool))
-            scores = np.where(mask, scores, np.float32(-1e30))
-            smax = scores.max(-1, keepdims=True)
-            e = np.exp((scores - smax).astype(np.float32)).astype(np.float32)
-            probs = (e / e.sum(-1, keepdims=True, dtype=np.float32)).astype(np.float32)
-            ctx = (probs @ v).transpose(0, 2, 1, 3).reshape(b * t, d).astype(np.float32)
+            probs = self._softmax_causal(scores, t)
+            # attention-score quantization: probs along the key axis (the
+            # probs @ v contraction); softmax backward still needs the raw
+            # probs, so both are cached.
+            pq = _np_quant_rows_nd(probs, ppq)
+            ctx = (pq @ v).transpose(0, 2, 1, 3).reshape(b * t, d).astype(np.float32)
             attn, ores = np_qlinear_fwd(ctx, p[f"w_o.{i}"], al)
             x1 = (x + attn + p[f"b_o.{i}"]).astype(np.float32)
             h2, ln2res = _np_layernorm_fwd(x1, p[f"ln2_g.{i}"], p[f"ln2_b.{i}"])
@@ -442,13 +582,59 @@ class NpRefModel:
             mo, fc2res = np_qlinear_fwd(a, p[f"w_fc2.{i}"], fl)
             x2 = (x1 + mo + p[f"b_fc2.{i}"]).astype(np.float32)
             caches.append(dict(ln1res=ln1res, qkvres=qkvres, q=q, k=k, v=v,
-                               probs=probs, ctx=ctx, ores=ores, ln2res=ln2res,
+                               probs=probs, pq=pq, ctx=ctx, ores=ores, ln2res=ln2res,
                                fc1res=fc1res, u=u, t_gelu=gres, a=a, fc2res=fc2res,
                                block_out=x2))
             x = x2
         hf, lnfres = _np_layernorm_fwd(x, p["ln_f_g"], p["ln_f_b"])
         logits = (hf @ p["wte"].T).astype(np.float32)
         caches.append(dict(lnfres=lnfres, hf=hf))
+        return hf, logits, caches
+
+    def _forward_llama(self, p: dict, tokens: np.ndarray):
+        c = self.cfg
+        b, t = tokens.shape
+        d, h = c["d_model"], c["n_head"]
+        dh = d // h
+        kvq, ppq = self.recipe.kv, self.recipe.attn_probs
+        x = p["wte"][tokens.reshape(-1)].astype(np.float32)
+        caches = []
+        for i in range(c["layers"]):
+            al, fl = self.recipe.attn, self.recipe.ffn
+            x_in = x
+            h1, inv1 = np_rmsnorm(x, p[f"rms1_g.{i}"])
+            qlin, qres = np_qlinear_fwd(h1, p[f"w_q.{i}"], al)
+            klin, kres = np_qlinear_fwd(h1, p[f"w_k.{i}"], al)
+            vlin, vres = np_qlinear_fwd(h1, p[f"w_v.{i}"], al)
+            q4, k4, v4 = [a.reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+                          for a in (qlin, klin, vlin)]
+            qr, kr = np_rope(q4), np_rope(k4)
+            # KV-cache write: k after RoPE, v as projected, both quantized
+            # per (token, head) row along head_dim.
+            kq = _np_quant_rows_nd(kr, kvq)
+            vq = _np_quant_rows_nd(v4, kvq)
+            scores = (qr @ kq.transpose(0, 1, 3, 2) / np.float32(np.sqrt(dh))).astype(np.float32)
+            probs = self._softmax_causal(scores, t)
+            pq = _np_quant_rows_nd(probs, ppq)
+            ctx = (pq @ vq).transpose(0, 2, 1, 3).reshape(b * t, d).astype(np.float32)
+            attn, ores = np_qlinear_fwd(ctx, p[f"w_o.{i}"], al)
+            x1 = (x + attn).astype(np.float32)
+            h2, inv2 = np_rmsnorm(x1, p[f"rms2_g.{i}"])
+            ug, gateres = np_qlinear_fwd(h2, p[f"w_gate.{i}"], fl)
+            uu, upres = np_qlinear_fwd(h2, p[f"w_up.{i}"], fl)
+            a, sig = np_swiglu(ug, uu)
+            mo, downres = np_qlinear_fwd(a, p[f"w_down.{i}"], fl)
+            x2 = (x1 + mo).astype(np.float32)
+            caches.append(dict(x_in=x_in, inv1=inv1, qres=qres, kres=kres,
+                               vres=vres, qr=qr, kq=kq, vq=vq, probs=probs,
+                               pq=pq, ores=ores, x1=x1, inv2=inv2, ug=ug,
+                               uu=uu, sig=sig, gateres=gateres, upres=upres,
+                               downres=downres, block_out=x2))
+            x = x2
+        invf_x = x
+        hf, invf = np_rmsnorm(x, p["rms_f_g"])
+        logits = (hf @ p["wte"].T).astype(np.float32)
+        caches.append(dict(x_f=invf_x, invf=invf, hf=hf))
         return hf, logits, caches
 
     def loss_and_grads(self, p: dict, batch: np.ndarray):
@@ -469,6 +655,10 @@ class NpRefModel:
         dlogits = (e / z).astype(np.float32)
         dlogits[np.arange(n), tgt] -= np.float32(1.0)
         dlogits = (dlogits / np.float32(n)).astype(np.float32)
+
+        if self.family == "llama":
+            g = self._backward_llama(p, tokens, dlogits, caches)
+            return float(loss), g, (hf, logits, caches)
 
         g = {k: np.zeros_like(v) for k, v in p.items()}
         top = caches[-1]
@@ -499,13 +689,15 @@ class NpRefModel:
             g[f"ln2_g.{i}"] += dg2
             g[f"ln2_b.{i}"] += db2
             dx1 = (dx1 + dx).astype(np.float32)  # residual
-            # attention branch: x1 = x + o(ctx) + b_o
+            # attention branch: x1 = x + o(ctx) + b_o.  STE: the cached
+            # k/v/pq are the (possibly) fake-quantized tensors the forward
+            # contracted with, and gradients pass through the quantizers.
             g[f"b_o.{i}"] += dx1.sum(0).astype(np.float32)
             dctx, dwo = np_qlinear_bwd(cc["ores"], dx1, al, wg, ag, sr, k_proj)
             g[f"w_o.{i}"] += dwo
             dctx4 = dctx.reshape(b, t, h, dh).transpose(0, 2, 1, 3)
-            probs, q, k, v = cc["probs"], cc["q"], cc["k"], cc["v"]
-            dv = (probs.transpose(0, 1, 3, 2) @ dctx4).astype(np.float32)
+            probs, pq, q, k, v = cc["probs"], cc["pq"], cc["q"], cc["k"], cc["v"]
+            dv = (pq.transpose(0, 1, 3, 2) @ dctx4).astype(np.float32)
             dp = (dctx4 @ v.transpose(0, 1, 3, 2)).astype(np.float32)
             dsc = (probs * (dp - (dp * probs).sum(-1, keepdims=True, dtype=np.float32))).astype(np.float32)
             dsc = (dsc / np.float32(np.sqrt(dh))).astype(np.float32)
@@ -528,8 +720,84 @@ class NpRefModel:
         g["wpe"][:t] += dx.reshape(b, t, d).sum(0).astype(np.float32)
         return float(loss), g, (hf, logits, caches)
 
+    def _backward_llama(self, p: dict, tokens: np.ndarray, dlogits, caches):
+        c = self.cfg
+        b, t = tokens.shape
+        d, h = c["d_model"], c["n_head"]
+        dh = d // h
+        g = {k: np.zeros_like(v) for k, v in p.items()}
+        top = caches[-1]
+        g["wte"] += (dlogits.T @ top["hf"]).astype(np.float32)
+        dhf = (dlogits @ p["wte"]).astype(np.float32)
+        dx, dgf = np_rmsnorm_bwd(dhf, top["x_f"], p["rms_f_g"], top["invf"])
+        g["rms_f_g"] += dgf
 
-MICRO_CONFIG = dict(vocab=32, layers=2, d_model=16, n_head=2, d_ff=32, seq=8, batch=2)
+        sr = self.recipe.sr_grad
+        for i in reversed(range(c["layers"])):
+            al, fl, wg, ag = (self.recipe.attn, self.recipe.ffn,
+                              self.recipe.wgrad, self.recipe.agrad)
+            cc = caches[i]
+            # SR keys: fnv1a64 of the rust engine's stable llama linear
+            # names (RefModel::linears_mut)
+            k_wq, k_wk, k_wv = fnv1a64(f"wq.{i}"), fnv1a64(f"wk.{i}"), fnv1a64(f"wv.{i}")
+            k_wo = fnv1a64(f"wo.{i}")
+            k_gate, k_up, k_down = (fnv1a64(f"gate.{i}"), fnv1a64(f"up.{i}"),
+                                    fnv1a64(f"down.{i}"))
+            # SwiGLU MLP branch: x2 = x1 + down(silu(gate(h2)) * up(h2))
+            da, dwdown = np_qlinear_bwd(cc["downres"], dx, fl, wg, ag, sr, k_down)
+            g[f"w_down.{i}"] += dwdown
+            dug, duu = np_swiglu_bwd(da, cc["ug"], cc["uu"], cc["sig"])
+            dh2a, dwgate = np_qlinear_bwd(cc["gateres"], dug, fl, wg, ag, sr, k_gate)
+            g[f"w_gate.{i}"] += dwgate
+            dh2b, dwup = np_qlinear_bwd(cc["upres"], duu, fl, wg, ag, sr, k_up)
+            g[f"w_up.{i}"] += dwup
+            dh2 = (dh2a + dh2b).astype(np.float32)
+            dx1, dg2 = np_rmsnorm_bwd(dh2, cc["x1"], p[f"rms2_g.{i}"], cc["inv2"])
+            g[f"rms2_g.{i}"] += dg2
+            dx1 = (dx1 + dx).astype(np.float32)  # residual
+            # attention branch: x1 = x + o(ctx).  STE through the KV-cache
+            # and probs quantizers: the backward contracts with the cached
+            # quantized kq/vq/pq, gradients pass through to k/v/probs; the
+            # RoPE vjp is the inverse rotation.
+            dctx, dwo = np_qlinear_bwd(cc["ores"], dx1, al, wg, ag, sr, k_wo)
+            g[f"w_o.{i}"] += dwo
+            dctx4 = dctx.reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+            probs, pq = cc["probs"], cc["pq"]
+            qr, kq, vq = cc["qr"], cc["kq"], cc["vq"]
+            dv4 = (pq.transpose(0, 1, 3, 2) @ dctx4).astype(np.float32)
+            dp = (dctx4 @ vq.transpose(0, 1, 3, 2)).astype(np.float32)
+            dsc = (probs * (dp - (dp * probs).sum(-1, keepdims=True, dtype=np.float32))).astype(np.float32)
+            dsc = (dsc / np.float32(np.sqrt(dh))).astype(np.float32)
+            dqr = (dsc @ kq).astype(np.float32)
+            dkr = (dsc.transpose(0, 1, 3, 2) @ qr).astype(np.float32)
+            dq4 = np_rope_bwd(dqr)
+            dk4 = np_rope_bwd(dkr)
+            dqlin, dklin, dvlin = [
+                a.transpose(0, 2, 1, 3).reshape(b * t, d).astype(np.float32)
+                for a in (dq4, dk4, dv4)
+            ]
+            dh1a, dwq = np_qlinear_bwd(cc["qres"], dqlin, al, wg, ag, sr, k_wq)
+            g[f"w_q.{i}"] += dwq
+            dh1b, dwk = np_qlinear_bwd(cc["kres"], dklin, al, wg, ag, sr, k_wk)
+            g[f"w_k.{i}"] += dwk
+            dh1c, dwv = np_qlinear_bwd(cc["vres"], dvlin, al, wg, ag, sr, k_wv)
+            g[f"w_v.{i}"] += dwv
+            dh1 = (dh1a + dh1b + dh1c).astype(np.float32)
+            dxr, dg1 = np_rmsnorm_bwd(dh1, cc["x_in"], p[f"rms1_g.{i}"], cc["inv1"])
+            g[f"rms1_g.{i}"] += dg1
+            dx = (dxr + dx1).astype(np.float32)  # residual into the block input
+
+        np.add.at(g["wte"], tokens.reshape(-1), dx)
+        return g
+
+
+MICRO_CONFIG = dict(family="gpt2", vocab=32, layers=2, d_model=16, n_head=2,
+                    d_ff=32, seq=8, batch=2)
+
+# LLaMA-family micro geometry: same token/width scale so the batch is
+# shared; head_dim 8 keeps RoPE's half-split non-degenerate.
+MICRO_LLAMA_CONFIG = dict(family="llama", vocab=32, layers=2, d_model=16,
+                          n_head=2, d_ff=32, seq=8, batch=2)
 
 # Micro-fixture recipe: the paper's "ours" format table (FP8 attention
 # linears, FP4 FFN linears, FP8 weight-grad, exact act-grad) at block 8 so
@@ -549,26 +817,41 @@ MICRO_NVFP4_SR = NpRecipe(
     sr_grad=True,
 )
 
+# Quantized-attention variant (run on the llama block): the "ours" linear
+# table plus an FP8 KV-cache (per (token, head) row along head_dim) and
+# FP8 attention scores (per query row along the key axis).
+MICRO_LLAMA_QATTN = NpRecipe(
+    attn=NpSpec(FP8_E4M3, 8),
+    ffn=NpSpec(FP4_E2M1, 8),
+    wgrad=NpSpec(FP8_E4M3, 8),
+    kv=NpSpec(FP8_E4M3, 0),
+    attn_probs=NpSpec(FP8_E4M3, 0),
+)
+
 
 def refmodel_fixture(seed: int = 7) -> dict:
-    """Build the golden fixture: shared params/tokens, then an fp16 run
-    and a quantized run (per-layer block outputs, final hidden, loss,
-    grads).  Tolerances documented here are asserted by
+    """Build the golden fixture: shared tokens, gpt2 params + llama params,
+    then an fp16 run, a quantized run, an NVFP4+SR run (gpt2 block) and a
+    llama + quantized-attention run (per-layer block outputs, final
+    hidden, loss, grads).  Tolerances documented here are asserted by
     rust/tests/refmodel_golden.rs."""
     cfg = dict(MICRO_CONFIG)
+    lcfg = dict(MICRO_LLAMA_CONFIG)
     rng = np.random.default_rng(seed ^ 0xF1C)
     batch = rng.integers(0, cfg["vocab"], size=(cfg["batch"], cfg["seq"] + 1)).astype(np.int64)
     model16 = NpRefModel(cfg, NpRecipe())
     params = model16.init_params(seed)
+    lparams = NpRefModel(lcfg, NpRecipe()).init_params(seed)
 
-    def run(model):
+    def run(model, p):
         tokens = batch[:, :-1]
-        loss, grads, (hf, logits, caches) = model.loss_and_grads(params, batch)
+        loss, grads, (hf, logits, caches) = model.loss_and_grads(p, batch)
         outs = {}
         # per-layer block outputs: reconstructible from the caches of the
-        # NEXT layer's layernorm input — recompute directly instead
-        x = (params["wte"][tokens.reshape(-1)]
-             + np.tile(params["wpe"][: cfg["seq"]], (cfg["batch"], 1))).astype(np.float32)
+        # NEXT layer's norm input — recompute the embedding directly instead
+        x = p["wte"][tokens.reshape(-1)].astype(np.float32)
+        if model.family == "gpt2":
+            x = (x + np.tile(p["wpe"][: cfg["seq"]], (cfg["batch"], 1))).astype(np.float32)
         outs["embed"] = x.copy()
         outs["block_out"] = [c["block_out"] for c in caches[:-1]]
         outs["final_hidden"] = hf
@@ -577,9 +860,10 @@ def refmodel_fixture(seed: int = 7) -> dict:
         outs["logits"] = logits
         return outs
 
-    quant = run(NpRefModel(cfg, MICRO_QUANT))
-    nvfp4_sr = run(NpRefModel(cfg, MICRO_NVFP4_SR))
-    fp16 = run(model16)
+    quant = run(NpRefModel(cfg, MICRO_QUANT), params)
+    nvfp4_sr = run(NpRefModel(cfg, MICRO_NVFP4_SR), params)
+    fp16 = run(model16, params)
+    llama_qattn = run(NpRefModel(lcfg, MICRO_LLAMA_QATTN), lparams)
 
     def arr(a):
         return [float(np.float32(v)) for v in np.asarray(a, dtype=np.float32).reshape(-1)]
@@ -596,6 +880,7 @@ def refmodel_fixture(seed: int = 7) -> dict:
 
     return {
         "config": cfg,
+        "config_llama": lcfg,
         "recipe": {
             "attn": {"fmt": "fp8_e4m3", "block": 8},
             "ffn": {"fmt": "fp4_e2m1", "block": 8},
@@ -609,10 +894,22 @@ def refmodel_fixture(seed: int = 7) -> dict:
             "agrad": {"fmt": "none", "block": 0},
             "sr_grad": True,
         },
+        "recipe_llama_qattn": {
+            "attn": {"fmt": "fp8_e4m3", "block": 8},
+            "ffn": {"fmt": "fp4_e2m1", "block": 8},
+            "wgrad": {"fmt": "fp8_e4m3", "block": 8},
+            "agrad": {"fmt": "none", "block": 0},
+            # block 0 == one scale per row: per (token, head) row along
+            # head_dim for kv, per query row along the key axis for probs
+            "kv": {"fmt": "fp8_e4m3", "block": 0},
+            "attn_probs": {"fmt": "fp8_e4m3", "block": 0},
+        },
         "seed": seed,
         "batch": [[int(v) for v in row] for row in batch],
         "params": {k: {"shape": list(np.shape(v)), "data": arr(v)}
                    for k, v in sorted(params.items())},
+        "params_llama": {k: {"shape": list(np.shape(v)), "data": arr(v)}
+                         for k, v in sorted(lparams.items())},
         "tolerances": {
             "comment": "per-tensor relative L2 vs numpy; elements near a "
                        "rounding boundary may differ by a grid step on the "
@@ -623,12 +920,18 @@ def refmodel_fixture(seed: int = 7) -> dict:
             # accumulation-order noise can flip a few extra elements by a
             # grid step — slightly wider than the RNE quantized bound
             "nvfp4_sr_rel_l2": 7e-3,
+            # the quantized-attention run adds two more fake-quantized
+            # contractions (KV rows, probs rows) whose near-boundary
+            # elements can flip with accumulation order, on top of the
+            # FP4 FFN noise of the quant bound
+            "llama_qattn_rel_l2": 1e-2,
             "loss_abs": 2e-4,
         },
         "runs": {
             "fp16": pack_run(fp16),
             "quant": pack_run(quant),
             "nvfp4_sr": pack_run(nvfp4_sr),
+            "llama_qattn": pack_run(llama_qattn),
         },
     }
 
@@ -663,6 +966,12 @@ __all__ = [
     "fnv1a64",
     "SR_TAG_AGRAD",
     "SR_TAG_WGRAD",
+    "np_rmsnorm",
+    "np_rmsnorm_bwd",
+    "np_rope",
+    "np_rope_bwd",
+    "np_swiglu",
+    "np_swiglu_bwd",
     "NpSpec",
     "NpRecipe",
     "NpRefModel",

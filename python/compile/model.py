@@ -7,9 +7,14 @@ Module-precision mapping (paper Fig. 1(d)-(e)):
   the recipe's ``attn`` spec — FP8 in the paper's headline recipe, to
   "protect" the attention mechanism (§3.1).
 * **FFN linears** use the ``ffn`` spec — FP4 per-block (§3.2).
-* **Multi-head attention itself** (QK^T, softmax, PV) is never quantized
-  (the paper keeps it in FP16 FlashAttention; we keep exact f32 attention —
-  FlashAttention is an IO optimization, not part of the contribution).
+* **Multi-head attention itself** (QK^T, softmax, PV) is exact f32 in the
+  paper's recipes (§3.1 keeps it FP16 FlashAttention; FlashAttention is an
+  IO optimization, not part of the contribution).  Beyond the paper, the
+  recipe can opt into an **FP8 KV-cache** (``kv``: k and v fake-quantized
+  per (token, head) row along head_dim at write into the attention cache,
+  k after RoPE) and **attention-score quantization** (``attn_probs``: the
+  softmax probabilities fake-quantized along the key axis before the
+  ``probs @ v`` contraction) — both straight-through in the backward pass.
 * **Backward**: weight-gradient GEMMs use the ``wgrad`` spec (FP8);
   activation-gradient GEMMs use ``agrad`` (identity in the paper).
 * Embeddings, layernorms, biases stay f32 ("relatively small", Appendix B).
@@ -85,6 +90,8 @@ class PrecisionRecipe:
     ffn: QuantSpec = NONE_SPEC    # FFN linears forward
     wgrad: QuantSpec = NONE_SPEC  # weight-grad GEMMs (all quantized linears)
     agrad: QuantSpec = NONE_SPEC  # act-grad GEMMs (paper: identity)
+    kv: QuantSpec = NONE_SPEC     # KV-cache: k (post-RoPE) and v, per row along head_dim
+    attn_probs: QuantSpec = NONE_SPEC  # softmax probs, along the key axis before PV
 
     def attn_linear(self) -> LinearRecipe:
         return LinearRecipe(fwd=self.attn, wgrad=self.wgrad, agrad=self.agrad)
@@ -162,9 +169,22 @@ def _rope(x, base=10000.0):
     return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
 
 
-def _attention(q, k, v, cfg: ModelConfig):
-    """Exact causal attention in f32 (never quantized — §3.1).  Returns the
-    context and the attention probabilities (for the Fig. 1(c) capture)."""
+def _ste(x, spec: QuantSpec, axis: int = -1):
+    """Straight-through fake-quant: forward uses the quantized value, the
+    gradient passes through unchanged (paper Appendix STE)."""
+    if not spec.enabled:
+        return x
+    return x + jax.lax.stop_gradient(spec.apply(x, axis=axis) - x)
+
+
+def _attention(q, k, v, cfg: ModelConfig, recipe: PrecisionRecipe):
+    """Causal attention in f32; exact under the paper's recipes (§3.1).
+    With the extended recipe knobs, k/v are fake-quantized at cache write
+    (k after RoPE, per (token, head) row along head_dim — ``kv``) and the
+    softmax probabilities are fake-quantized along the key axis before the
+    PV contraction (``attn_probs``), both straight-through in backward.
+    Returns the context and the *unquantized* attention probabilities (for
+    the Fig. 1(c) capture)."""
     b, t, d = q.shape
     h, dh = cfg.n_head, cfg.head_dim
     q = q.reshape(b, t, h, dh).transpose(0, 2, 1, 3)
@@ -172,11 +192,14 @@ def _attention(q, k, v, cfg: ModelConfig):
     v = v.reshape(b, t, h, dh).transpose(0, 2, 1, 3)
     if cfg.family == "llama":
         q, k = _rope(q), _rope(k)
+    k = _ste(k, recipe.kv, axis=-1)
+    v = _ste(v, recipe.kv, axis=-1)
     scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(dh))
     mask = jnp.tril(jnp.ones((t, t), bool))
     scores = jnp.where(mask, scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1)
-    ctx = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+    pq = _ste(probs, recipe.attn_probs, axis=-1)
+    ctx = jnp.einsum("bhqk,bhkd->bhqd", pq, v)
     ctx = ctx.transpose(0, 2, 1, 3).reshape(b, t, d)
     return ctx, probs
 
@@ -186,7 +209,7 @@ def _gpt2_block(x, lp, cfg: ModelConfig, recipe: PrecisionRecipe):
     h = _layernorm(x, lp["ln1_g"], lp["ln1_b"])
     qkv = apply_qlinear(h, lp["w_qkv"], al, lp["b_qkv"])
     q, k, v = jnp.split(qkv, 3, axis=-1)
-    ctx, probs = _attention(q, k, v, cfg)
+    ctx, probs = _attention(q, k, v, cfg, recipe)
     x = x + apply_qlinear(ctx, lp["w_o"], al, lp["b_o"])
     h = _layernorm(x, lp["ln2_g"], lp["ln2_b"])
     h = apply_qlinear(h, lp["w_fc1"], fl, lp["b_fc1"])
@@ -201,7 +224,7 @@ def _llama_block(x, lp, cfg: ModelConfig, recipe: PrecisionRecipe):
     q = apply_qlinear(h, lp["w_q"], al)
     k = apply_qlinear(h, lp["w_k"], al)
     v = apply_qlinear(h, lp["w_v"], al)
-    ctx, probs = _attention(q, k, v, cfg)
+    ctx, probs = _attention(q, k, v, cfg, recipe)
     x = x + apply_qlinear(ctx, lp["w_o"], al)
     h = _rmsnorm(x, lp["rms2_g"])
     gate = apply_qlinear(h, lp["w_gate"], fl)

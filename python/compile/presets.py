@@ -76,6 +76,11 @@ RECIPES: Dict[str, PrecisionRecipe] = {
         # bench to demonstrate it.
         PrecisionRecipe("fp4_agrad", attn=_FP8B, ffn=_FP4B, wgrad=_FP8B,
                         agrad=QuantSpec("fp4", "token", 128)),
+        # NOTE: the attention-interior recipe (`ours_qattn`: FP8 KV-cache
+        # writes + FP8 softmax probs on top of "ours") is host-engine-only
+        # — defined in rust/src/refmodel/presets.rs and specced by
+        # NpRefModel in kernels/ref.py.  The L2 jax model this module
+        # feeds keeps attention exact, so it is deliberately absent here.
     ]
 }
 

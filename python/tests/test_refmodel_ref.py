@@ -28,15 +28,24 @@ from compile import train as L2train
 from compile.formats import FORMATS, FP4_E2M1, FP8_E4M3, QuantSpec, fake_quant
 from compile.kernels.ref import (
     MICRO_CONFIG,
+    MICRO_LLAMA_CONFIG,
+    MICRO_LLAMA_QATTN,
     MICRO_NVFP4_SR,
     MICRO_QUANT,
     NpRecipe,
     NpRefModel,
+    NpSpec,
     fnv1a64,
     np_counter_hash,
     np_fake_quant_rows,
     np_fake_quant_rows_sr,
     np_quantize_sr,
+    np_rmsnorm,
+    np_rmsnorm_bwd,
+    np_rope,
+    np_rope_bwd,
+    np_swiglu,
+    np_swiglu_bwd,
     np_unit_f32,
     refmodel_fixture,
 )
@@ -51,8 +60,7 @@ def rel_l2(a, b):
     return np.linalg.norm(a - b) / denom
 
 
-def micro_setup(recipe):
-    cfg = dict(MICRO_CONFIG)
+def setup_with(cfg, recipe):
     rng = np.random.default_rng(SEED ^ 0xF1C)
     batch = rng.integers(0, cfg["vocab"], size=(cfg["batch"], cfg["seq"] + 1))
     model = NpRefModel(cfg, recipe)
@@ -60,33 +68,39 @@ def micro_setup(recipe):
     return cfg, model, params, batch
 
 
+def micro_setup(recipe):
+    return setup_with(dict(MICRO_CONFIG), recipe)
+
+
+_TOP_KEYS = {
+    "gpt2": ("wte", "wpe", "ln_f_g", "ln_f_b"),
+    "llama": ("wte", "rms_f_g"),
+}
+
+
 def stack_for_jax(cfg, params):
     """Refmodel per-layer params -> the stacked (L, ...) pytree of
-    compile.model (gpt2 family)."""
+    compile.model, for either family."""
     l = cfg["layers"]
-    layer_keys = L2._LAYER_KEYS["gpt2"]
-    p = {
-        "wte": jnp.asarray(params["wte"]),
-        "wpe": jnp.asarray(params["wpe"]),
-        "ln_f_g": jnp.asarray(params["ln_f_g"]),
-        "ln_f_b": jnp.asarray(params["ln_f_b"]),
-    }
-    for k in layer_keys:
+    family = cfg.get("family", "gpt2")
+    p = {k: jnp.asarray(params[k]) for k in _TOP_KEYS[family]}
+    for k in L2._LAYER_KEYS[family]:
         p[k] = jnp.stack([jnp.asarray(params[f"{k}.{i}"]) for i in range(l)])
     return p
 
 
 def model_config(cfg):
     return L2.ModelConfig(
-        name="refmodel-micro", family="gpt2", vocab=cfg["vocab"],
-        layers=cfg["layers"], d_model=cfg["d_model"], n_head=cfg["n_head"],
-        d_ff=cfg["d_ff"], seq=cfg["seq"],
+        name="refmodel-micro", family=cfg.get("family", "gpt2"),
+        vocab=cfg["vocab"], layers=cfg["layers"], d_model=cfg["d_model"],
+        n_head=cfg["n_head"], d_ff=cfg["d_ff"], seq=cfg["seq"],
     )
 
 
 def unstack_grads(cfg, jg):
-    out = {"wte": jg["wte"], "wpe": jg["wpe"], "ln_f_g": jg["ln_f_g"], "ln_f_b": jg["ln_f_b"]}
-    for k in L2._LAYER_KEYS["gpt2"]:
+    family = cfg.get("family", "gpt2")
+    out = {k: jg[k] for k in _TOP_KEYS[family]}
+    for k in L2._LAYER_KEYS[family]:
         for i in range(cfg["layers"]):
             out[f"{k}.{i}"] = jg[k][i]
     return {k: np.asarray(v) for k, v in out.items()}
@@ -198,6 +212,163 @@ def test_fp16_path_matches_jax_autodiff():
         assert r < 2e-4, f"{k}: rel l2 {r}"
 
 
+def test_np_rmsnorm_matches_jax_autodiff():
+    rng = np.random.default_rng(21)
+    for rows, d in [(16, 32), (1, 8), (4, 1)]:
+        x = (rng.standard_normal((rows, d)) * 2.0).astype(np.float32)
+        g = (1.0 + rng.standard_normal(d) * 0.1).astype(np.float32)
+        dy = rng.standard_normal((rows, d)).astype(np.float32)
+        y, inv = np_rmsnorm(x, g)
+        np.testing.assert_allclose(
+            y, np.asarray(L2._rmsnorm(jnp.asarray(x), jnp.asarray(g))),
+            rtol=1e-6, atol=1e-6,
+        )
+        dx, dg = np_rmsnorm_bwd(dy, x, g, inv)
+        f = lambda jx, jg: jnp.vdot(L2._rmsnorm(jx, jg), jnp.asarray(dy))
+        jdx, jdg = jax.grad(f, argnums=(0, 1))(jnp.asarray(x), jnp.asarray(g))
+        # d=1 rows make dx a near-total cancellation (y ~= sign(x)*g), so
+        # f32 roundoff dominates the tiny residual — hence 1e-4, not 1e-5
+        assert rel_l2(dx, jdx) < 1e-4, (rows, d)
+        assert rel_l2(dg, jdg) < 1e-5, (rows, d)
+
+
+def test_np_rope_matches_jax_autodiff():
+    rng = np.random.default_rng(22)
+    for b, h, t, dh in [(2, 2, 8, 8), (1, 1, 1, 4), (2, 1, 5, 2), (1, 4, 3, 6)]:
+        x = rng.standard_normal((b, h, t, dh)).astype(np.float32)
+        dy = rng.standard_normal((b, h, t, dh)).astype(np.float32)
+        y = np_rope(x)
+        np.testing.assert_allclose(
+            y, np.asarray(L2._rope(jnp.asarray(x))), rtol=1e-5, atol=1e-6
+        )
+        # the rotation is orthogonal: norms are preserved exactly
+        np.testing.assert_allclose(
+            np.linalg.norm(y, axis=-1), np.linalg.norm(x, axis=-1), rtol=1e-5
+        )
+        dx = np_rope_bwd(dy)
+        jdx = jax.grad(lambda jx: jnp.vdot(L2._rope(jx), jnp.asarray(dy)))(jnp.asarray(x))
+        assert rel_l2(dx, jdx) < 1e-5, (b, h, t, dh)
+
+
+def test_np_swiglu_matches_jax_autodiff():
+    rng = np.random.default_rng(23)
+    for rows, f in [(16, 32), (1, 4)]:
+        gate = (rng.standard_normal((rows, f)) * 2.0).astype(np.float32)
+        up = rng.standard_normal((rows, f)).astype(np.float32)
+        da = rng.standard_normal((rows, f)).astype(np.float32)
+        a, sig = np_swiglu(gate, up)
+        np.testing.assert_allclose(
+            a, np.asarray(jax.nn.silu(jnp.asarray(gate)) * jnp.asarray(up)),
+            rtol=1e-5, atol=1e-6,
+        )
+        dgate, dup = np_swiglu_bwd(da, gate, up, sig)
+        jf = lambda jg, ju: jnp.vdot(jax.nn.silu(jg) * ju, jnp.asarray(da))
+        jdg, jdu = jax.grad(jf, argnums=(0, 1))(jnp.asarray(gate), jnp.asarray(up))
+        assert rel_l2(dgate, jdg) < 1e-5, (rows, f)
+        assert rel_l2(dup, jdu) < 1e-5, (rows, f)
+
+
+def test_llama_fp16_path_matches_jax_autodiff():
+    """The llama-block numpy spec (rmsnorm/RoPE/SwiGLU, manual backward)
+    against jax autodiff through the actual L2 llama model."""
+    cfg, model, params, batch = setup_with(dict(MICRO_LLAMA_CONFIG), NpRecipe())
+    loss, grads, _ = model.loss_and_grads(params, batch)
+
+    jp = stack_for_jax(cfg, params)
+    jbatch = jnp.asarray(batch, jnp.int32)
+    jloss, jgrads = jax.value_and_grad(L2train.next_token_loss)(
+        jp, jbatch, model_config(cfg), L2.PrecisionRecipe(name="fp16")
+    )
+    assert abs(loss - float(jloss)) < 5e-5, (loss, float(jloss))
+    jg = unstack_grads(cfg, jgrads)
+    assert set(jg) == set(grads)
+    for k in sorted(grads):
+        r = rel_l2(grads[k], jg[k])
+        assert r < 2e-4, f"{k}: rel l2 {r}"
+
+
+_QATTN_SHAPES = [
+    dict(MICRO_LLAMA_CONFIG),                                 # baseline micro
+    dict(MICRO_LLAMA_CONFIG, seq=1, batch=3),                 # t = 1
+    dict(MICRO_LLAMA_CONFIG, n_head=1, d_model=8, d_ff=16),   # single head
+]
+
+
+@pytest.mark.parametrize("family", ["llama", "gpt2"])
+def test_quantized_attention_ste_matches_jax_autodiff(family):
+    """FP8 KV-cache + FP8 attention-score quantization with exact linears:
+    the manual STE backward (backward contractions over the cached
+    quantized tensors, gradients passed through the quantizers) against
+    jax autodiff through the L2 model's own _ste attention path —
+    including degenerate shapes (t=1, single head)."""
+    recipe = NpRecipe(kv=NpSpec(FP8_E4M3, 0), attn_probs=NpSpec(FP8_E4M3, 0))
+    jrecipe = L2.PrecisionRecipe(
+        name="qattn",
+        kv=QuantSpec("fp8_e4m3", "token"),
+        attn_probs=QuantSpec("fp8_e4m3", "token"),
+    )
+    for shape in _QATTN_SHAPES:
+        cfg = dict(shape, family=family)
+        cfg, model, params, batch = setup_with(cfg, recipe)
+        loss, grads, _ = model.loss_and_grads(params, batch)
+        jp = stack_for_jax(cfg, params)
+        jloss, jgrads = jax.value_and_grad(L2train.next_token_loss)(
+            jp, jnp.asarray(batch, jnp.int32), model_config(cfg), jrecipe
+        )
+        assert abs(loss - float(jloss)) < 1e-4, (family, cfg["seq"], cfg["n_head"])
+        jg = unstack_grads(cfg, jgrads)
+        for k in sorted(grads):
+            r = rel_l2(grads[k], jg[k])
+            assert r < 5e-4, f"{family} {cfg['seq']}x{cfg['n_head']} {k}: rel l2 {r}"
+
+
+def test_quantized_attention_engages_and_is_ste_consistent():
+    """The kv/attn_probs quantizers must actually change the forward, and
+    quantizing only the attention must leave the gradient *structure*
+    intact (finite, same keys, within the coarse format band of fp16)."""
+    cfg, qmodel, params, batch = setup_with(dict(MICRO_LLAMA_CONFIG), NpRecipe(
+        kv=NpSpec(FP8_E4M3, 0), attn_probs=NpSpec(FP8_E4M3, 0)
+    ))
+    fmodel = NpRefModel(cfg, NpRecipe())
+    ql, qg, (qhf, _, qcaches) = qmodel.loss_and_grads(params, batch)
+    fl, fg, (fhf, _, _) = fmodel.loss_and_grads(params, batch)
+    assert ql != fl
+    assert abs(ql - fl) / abs(fl) < 0.25, (ql, fl)
+    # the cached quantized tensors differ from the raw ones (quant engaged)
+    cc = qcaches[0]
+    assert np.any(cc["pq"] != cc["probs"])
+    for k in sorted(fg):
+        assert np.all(np.isfinite(qg[k])), k
+        assert qg[k].shape == fg[k].shape
+
+
+def test_llama_quant_path_matches_jax_ste_mirror(monkeypatch):
+    """The full llama + quantized-attention fixture recipe (FP8/FP4 linear
+    table + FP8 KV + FP8 probs) against jax autodiff with apply_qlinear
+    swapped for the refmodel-axis STE mirror."""
+    cfg, model, params, batch = setup_with(dict(MICRO_LLAMA_CONFIG), MICRO_LLAMA_QATTN)
+    loss, grads, _ = model.loss_and_grads(params, batch)
+
+    monkeypatch.setattr(L2, "apply_qlinear", _mirror_apply_qlinear)
+    jp = stack_for_jax(cfg, params)
+    jrecipe = L2.PrecisionRecipe(
+        name="mirror-llama-qattn",
+        attn=QuantSpec("fp8_e4m3", "block", 8),
+        ffn=QuantSpec("fp4_e2m1", "block", 8),
+        wgrad=QuantSpec("fp8_e4m3", "block", 8),
+        kv=QuantSpec("fp8_e4m3", "token"),
+        attn_probs=QuantSpec("fp8_e4m3", "token"),
+    )
+    jloss, jgrads = jax.value_and_grad(L2train.next_token_loss)(
+        jp, jnp.asarray(batch, jnp.int32), model_config(cfg), jrecipe
+    )
+    assert abs(loss - float(jloss)) < 2e-4, (loss, float(jloss))
+    jg = unstack_grads(cfg, jgrads)
+    for k in sorted(grads):
+        r = rel_l2(grads[k], jg[k])
+        assert r < 5e-3, f"{k}: rel l2 {r}"
+
+
 def _mirror_apply_qlinear(x, w, recipe, b=None):
     """apply_qlinear with the refmodel quantization axes: every operand
     fake-quantized along its CONTRACTION axis — trailing for activations
@@ -281,23 +452,31 @@ def test_quant_and_fp16_runs_differ_but_agree_within_format_bound():
 def test_fixture_is_reproducible_and_self_consistent(tmp_path):
     fx = refmodel_fixture(SEED)
     assert fx["config"] == MICRO_CONFIG
+    assert fx["config_llama"] == MICRO_LLAMA_CONFIG
     runs = fx["runs"]
-    assert set(runs) == {"fp16", "quant", "nvfp4_sr"}
+    assert set(runs) == {"fp16", "quant", "nvfp4_sr", "llama_qattn"}
     assert fx["recipe_nvfp4_sr"]["sr_grad"] is True
     assert fx["recipe_nvfp4_sr"]["ffn"]["two_level"] is True
+    assert fx["recipe_llama_qattn"]["kv"]["fmt"] == "fp8_e4m3"
+    assert fx["recipe_llama_qattn"]["attn_probs"]["fmt"] == "fp8_e4m3"
     # SR + two-level must produce a run distinct from both baselines
     assert runs["nvfp4_sr"]["loss"] != runs["quant"]["loss"]
     assert runs["nvfp4_sr"]["loss"] != runs["fp16"]["loss"]
     n_tok = MICRO_CONFIG["batch"] * MICRO_CONFIG["seq"]
     d = MICRO_CONFIG["d_model"]
-    for r in runs.values():
+    for name, r in runs.items():
         assert len(r["final_hidden"]) == n_tok * d
         assert len(r["block_out"]) == MICRO_CONFIG["layers"]
         assert np.isfinite(r["loss"])
-        assert set(r["grads"]) == set(fx["params"])
+        pkey = "params_llama" if name == "llama_qattn" else "params"
+        assert set(r["grads"]) == set(fx[pkey])
+    # the llama run carries llama-block parameters, not gpt2 ones
+    assert "rms_f_g" in fx["params_llama"] and "w_gate.0" in fx["params_llama"]
+    assert "wpe" not in fx["params_llama"]
     # regeneration is deterministic
     fx2 = refmodel_fixture(SEED)
     assert fx2["runs"]["quant"]["loss"] == runs["quant"]["loss"]
+    assert fx2["runs"]["llama_qattn"]["loss"] == runs["llama_qattn"]["loss"]
     np.testing.assert_allclose(
         fx2["runs"]["fp16"]["grads"]["wte"], runs["fp16"]["grads"]["wte"], rtol=0, atol=0
     )

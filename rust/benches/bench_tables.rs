@@ -11,11 +11,40 @@
 use std::path::Path;
 
 use fp4train::bench::Bencher;
+use fp4train::refmodel::qlinear::Scratch;
+use fp4train::refmodel::{presets, RefModel};
 use fp4train::reproduce::{self, ReproduceOpts};
 use fp4train::runtime::Runtime;
+use fp4train::tensor::TensorI32;
+use fp4train::util::rng::Rng;
+
+/// One fwd+bwd step of a preset model/recipe pair on a synthetic batch —
+/// isolates block-variant cost (gpt2 vs llama vs llama + quantized
+/// KV/attention-probs) from the corpus/optimizer machinery the driver
+/// benches above carry.
+fn bench_refmodel_step(b: &mut Bencher, model_name: &str, recipe_name: &str) {
+    let cfg = presets::model(model_name).unwrap();
+    let recipe = presets::recipe(recipe_name).unwrap();
+    let mut model = RefModel::new(cfg.clone(), recipe, 7);
+    let mut sc = Scratch::default();
+    let mut rng = Rng::new(0xBE7C4);
+    let bsz = 4;
+    let data: Vec<i32> =
+        (0..bsz * (cfg.seq + 1)).map(|_| rng.below(cfg.vocab as u64) as i32).collect();
+    let batch = TensorI32::from_vec(&[bsz, cfg.seq + 1], data);
+    b.bench(&format!("refmodel/{model_name}/{recipe_name}/loss_and_grads"), None, || {
+        let (loss, _, _) = model.loss_and_grads(&batch, &mut sc);
+        assert!(loss.is_finite());
+    });
+}
 
 fn main() {
     let mut b = Bencher::new(0, 1);
+
+    b.section("refmodel block variants (1 step, synthetic batch)");
+    bench_refmodel_step(&mut b, "gpt2-s-proxy", "ours");
+    bench_refmodel_step(&mut b, "llama-125m-proxy", "ours");
+    bench_refmodel_step(&mut b, "llama-125m-proxy", "ours_qattn");
 
     let host_opts = ReproduceOpts {
         steps: 6,

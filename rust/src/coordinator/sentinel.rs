@@ -600,6 +600,7 @@ mod tests {
             n_head: 2,
             d_ff: 16,
             seq: 4,
+            rope: false,
         };
         let faults = parse_numfaults("3:nan,7:spike").unwrap();
         let mut loss = 2.0f32;

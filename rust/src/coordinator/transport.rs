@@ -356,6 +356,7 @@ mod tests {
             n_head: 2,
             d_ff: 16,
             seq: 4,
+            rope: false,
         }
     }
 

@@ -326,6 +326,12 @@ fn cmd_presets(args: &fp4train::util::args::Args) -> Result<()> {
         if spec.sr_grad {
             notes.push("stochastic-rounded grads");
         }
+        if spec.kv.is_some() {
+            notes.push("fp8 kv-cache");
+        }
+        if spec.attn_probs.is_some() {
+            notes.push("fp8 attention probs");
+        }
         println!(
             "  {:<14} attn={:<5} ffn={:<5} wgrad={:<5} agrad={:<5}{}",
             name,

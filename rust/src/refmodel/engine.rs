@@ -449,7 +449,7 @@ impl TrainSetup {
         let (ds, tok) = dataset_from_geometry(info.seq, presets::BATCH, info.vocab, cfg);
         let mut val = ds.val_batches();
         val.truncate(4); // eval slice: first ≤4 val batches, like reproduce
-        let mut model = RefModel::new(info.clone(), recipe.clone(), cfg.seed);
+        let mut model = RefModel::try_new(info.clone(), recipe.clone(), cfg.seed)?;
         let opt = AdamW::new(&mut model, HParams::for_family(&info.family, cfg.steps));
         Ok(TrainSetup { info, base: recipe, target, stage1, n_shards, ds, tok, val, model, opt })
     }
@@ -818,6 +818,7 @@ mod tests {
             n_head: 2,
             d_ff: 16,
             seq: 4,
+            rope: false,
         };
         let recipe = presets::recipe("ours").unwrap();
         let mut model = RefModel::new(info.clone(), recipe, 7);

@@ -14,11 +14,24 @@
 //! | GEMM                                   | recipe knob | headline ("ours") |
 //! |----------------------------------------|-------------|-------------------|
 //! | QKV projection, attention out-proj     | `attn`      | FP8 per-block-128 |
-//! | FFN linears (fc1, fc2)                 | `ffn`       | FP4 per-block-128 |
+//! | FFN linears (fc1/fc2, gate/up/down)    | `ffn`       | FP4 per-block-128 |
 //! | weight-grad `dw = Qb(x)^T @ Qb(g)`     | `wgrad`     | FP8 per-block-128 |
 //! | act-grad `dx = Qa(g) @ Qf(w)^T`        | `agrad`     | exact (identity)  |
-//! | attention itself (QKᵀ, softmax, PV)    | —           | exact f32 (§3.1)  |
+//! | KV-cache write (k, v at attention)     | `kv`        | exact (identity)  |
+//! | attention probs before `probs @ v`     | `attn_probs`| exact (identity)  |
+//! | QKᵀ and softmax themselves             | —           | exact f32 (§3.1)  |
 //! | embeddings, norms, biases, tied head   | —           | exact f32 (App. B)|
+//!
+//! The two attention knobs push quantization past the linears: `kv`
+//! fake-quantizes k (post-RoPE on the llama block) and v per
+//! (token, head) row along head_dim at their write into the attention
+//! cache, and `attn_probs` fake-quantizes the softmax output per query
+//! row along the key axis before the `probs @ v` contraction.  Both are
+//! straight-through in the manual backward: every backward contraction
+//! reuses the *quantized* tensors the forward multiplied (`dv = pqᵀ@dctx`,
+//! `dp = dctx@vqᵀ`, `dq = dsc@kq`), while the softmax backward runs on
+//! the raw probabilities (the quantizer sits downstream of softmax), and
+//! gradients pass through the quantizers unchanged.
 //!
 //! The §3.3 target-precision schedule swaps every linear's recipe to the
 //! target recipe (FP16 ⇒ all-exact) at the stage boundary
@@ -48,14 +61,21 @@
 //!
 //! # Architecture
 //!
-//! One family is implemented: the GPT-2-style pre-norm block (layernorm →
-//! fused-QKV causal attention → out-proj; layernorm → GELU MLP), learned
-//! positions, tied LM head, mean next-token cross-entropy — the same
-//! function as `python/compile/model.py`'s gpt2 family.  LLaMA presets
-//! are *proxied* onto this architecture (their geometry — layers, widths,
-//! heads, d_ff — is kept; rmsnorm/rope/swiglu are not replicated): the
-//! host engine is an oracle for the kernel stack, the precision recipes,
-//! and the schedule, not a bit-reproduction of the AOT artifacts.
+//! Two block families are implemented, dispatched on [`Arch`] (resolved
+//! and validated from [`RefConfig`] by [`RefConfig::validate`]):
+//!
+//! * **gpt2** — layernorm → fused-QKV causal attention → out-proj;
+//!   layernorm → GELU MLP; learned positions; biases everywhere.
+//! * **llama** — rmsnorm → separate q/k/v projections with rotary
+//!   position embeddings on q/k → out-proj; rmsnorm → SwiGLU
+//!   (gate/up/down) MLP; no position table, no biases.
+//!
+//! Both share the tied LM head and mean next-token cross-entropy, and
+//! each is the same function as `python/compile/model.py`'s family of
+//! the same name.  The `llama` presets run the real llama block —
+//! inconsistent configs (unknown family, `n_head` not dividing
+//! `d_model`, rope requested on a gpt2 block) are an *error* from
+//! [`RefModel::try_new`], never a silent fallthrough to the other block.
 //!
 //! # Determinism
 //!
@@ -69,15 +89,28 @@ pub mod model;
 pub mod presets;
 pub mod qlinear;
 
+use anyhow::{bail, Result};
+
 use crate::formats::{FpFormat, Granularity};
+
+/// The block architecture a config resolves to — the dispatch key for
+/// [`model::RefModel`]'s forward/backward (see the module doc).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Arch {
+    /// layernorm / fused-QKV / GELU MLP / learned positions / biases.
+    Gpt2,
+    /// rmsnorm / split q,k,v with RoPE / SwiGLU MLP / no positions or
+    /// biases.
+    Llama,
+}
 
 /// Host-model geometry (mirror of `python/compile/presets.py` presets and
 /// the manifest's `ModelInfo`, minus artifact bookkeeping).
 #[derive(Clone, Debug, PartialEq)]
 pub struct RefConfig {
     pub name: String,
-    /// "gpt2" | "llama" — the *preset* family; the host engine proxies
-    /// both onto the gpt2-style block (see module doc).
+    /// "gpt2" | "llama" — the block family.  Resolved to an [`Arch`] and
+    /// cross-checked against the other fields by [`RefConfig::validate`].
     pub family: String,
     pub vocab: usize,
     pub layers: usize,
@@ -85,12 +118,57 @@ pub struct RefConfig {
     pub n_head: usize,
     pub d_ff: usize,
     pub seq: usize,
+    /// Rotary position embeddings on q/k.  Must agree with the family
+    /// (the llama block requires rope, the gpt2 block cannot host it) —
+    /// an explicit knob so the inconsistency is *representable* and
+    /// therefore rejectable, instead of silently implied.
+    pub rope: bool,
 }
 
 impl RefConfig {
     pub fn head_dim(&self) -> usize {
         debug_assert_eq!(self.d_model % self.n_head, 0);
         self.d_model / self.n_head
+    }
+
+    /// Resolve the block architecture, rejecting unknown or inconsistent
+    /// configs: unknown family, `n_head` not dividing `d_model`, rope on
+    /// a gpt2 block, a llama block without rope, or an odd head_dim under
+    /// rope (the half-split rotation needs pairs).  Every model
+    /// construction path goes through this ([`model::RefModel::try_new`])
+    /// so a bad config is an error, never a fallthrough to the wrong
+    /// block.
+    pub fn validate(&self) -> Result<Arch> {
+        let arch = match self.family.as_str() {
+            "gpt2" => Arch::Gpt2,
+            "llama" => Arch::Llama,
+            other => bail!("unknown model family {other:?} (expected \"gpt2\" or \"llama\")"),
+        };
+        if self.n_head == 0 || self.d_model % self.n_head != 0 {
+            bail!(
+                "n_head ({}) must divide d_model ({}) in {}",
+                self.n_head, self.d_model, self.name
+            );
+        }
+        match (arch, self.rope) {
+            (Arch::Gpt2, true) => bail!(
+                "config {}: rope requested on a gpt2 block (learned positions)",
+                self.name
+            ),
+            (Arch::Llama, false) => bail!(
+                "config {}: the llama block requires rope (no position table exists)",
+                self.name
+            ),
+            _ => {}
+        }
+        if self.rope && self.head_dim() % 2 != 0 {
+            bail!(
+                "config {}: rope needs an even head_dim (got {})",
+                self.name,
+                self.head_dim()
+            );
+        }
+        Ok(arch)
     }
 
     /// Exact trainable-parameter count of the *preset* (family-faithful
@@ -168,6 +246,17 @@ pub struct RecipePrec {
     pub ffn: Option<QSpec>,
     pub wgrad: Option<QSpec>,
     pub agrad: Option<QSpec>,
+    /// KV-cache precision: k (post-RoPE on the llama block) and v are
+    /// fake-quantized per (token, head) row along head_dim at their
+    /// write into the attention cache.  `None` = exact f32.  STE: the
+    /// quantized k/v are what every contraction — forward and backward —
+    /// consumes (see the module doc).
+    pub kv: Option<QSpec>,
+    /// Attention-score precision: the softmax probabilities are
+    /// fake-quantized per query row along the key axis before the
+    /// `probs @ v` contraction.  `None` = exact f32.  The softmax
+    /// backward itself runs on the raw probabilities.
+    pub attn_probs: Option<QSpec>,
     /// Stochastic rounding on the gradient fake-quants of every linear
     /// (see [`LinearPrec::sr_grad`]).
     pub sr_grad: bool,
@@ -182,6 +271,8 @@ impl RecipePrec {
             ffn: None,
             wgrad: None,
             agrad: None,
+            kv: None,
+            attn_probs: None,
             sr_grad: false,
         }
     }

@@ -1,33 +1,51 @@
-//! The reference transformer: GPT-2-family pre-norm block with quantized
+//! The reference transformer: two pre-norm block families with quantized
 //! linears, forward with full activation cache and manual backward —
 //! line-by-line port of `NpRefModel` in `python/compile/kernels/ref.py`
 //! (the executable spec, itself validated against jax autodiff through
 //! the repo's L2 model; see the module doc in `refmodel`).
 //!
+//! The block family is dispatched on [`Arch`] (resolved once by
+//! [`RefConfig::validate`] in [`RefModel::try_new`]):
+//!
+//! * **gpt2** — layernorm → fused-QKV attention → out-proj, layernorm →
+//!   GELU MLP, learned positions, biases everywhere.
+//! * **llama** — rmsnorm → separate q/k/v linears with RoPE on q/k →
+//!   out-proj, rmsnorm → SwiGLU (gate/up/down) MLP, no position table,
+//!   no biases.
+//!
 //! All heavy math routes through `kernels`: quantized forward GEMMs on
 //! `qgemm_bt` and backward dx GEMMs on `qgemm` (both orientations of the
 //! same K-grouped packed weights), f32 GEMMs on `matmul_into`, fake-quant
-//! on the fused LUT sweeps.  Attention, norms, GELU, softmax/CE are
-//! sequential scalar code — deterministic at any thread count by
-//! construction.
+//! on the fused LUT sweeps (including the recipe's `kv` / `attn_probs`
+//! attention-interior quantizers).  Attention, norms, GELU/SwiGLU,
+//! softmax/CE are sequential scalar code — deterministic at any thread
+//! count by construction.
+
+use anyhow::Result;
 
 use crate::tensor::{transpose_into, Tensor, TensorI32};
 use crate::util::rng::Rng;
 
 use super::qlinear::{QLinear, Scratch};
-use super::{RecipePrec, RefConfig};
+use super::{Arch, QSpec, RecipePrec, RefConfig};
 
 /// sqrt(2/pi), f64-computed then f32-cast (matches the numpy constant).
 const GELU_C: f32 = 0.797_884_56_f32;
 const GELU_A: f32 = 0.044_715_f32;
 const LN_EPS: f32 = 1e-5;
+const ROPE_BASE: f32 = 10000.0;
 
 pub struct Norm {
     pub g: Vec<f32>,
     pub b: Vec<f32>,
 }
 
-pub struct Block {
+/// RMSNorm gain — the llama norm has no bias or mean subtraction.
+pub struct RmsNorm {
+    pub g: Vec<f32>,
+}
+
+pub struct Gpt2Block {
     pub ln1: Norm,
     pub qkv: QLinear,  // (d, 3d)
     pub proj: QLinear, // (d, d)
@@ -36,17 +54,44 @@ pub struct Block {
     pub fc2: QLinear, // (f, d)
 }
 
+/// The llama block's linears carry zero biases internally (the QLinear
+/// API always has one); they are excluded from the parameter and
+/// gradient walks, so the optimizer never sees them and they stay
+/// exactly 0.0 — the family has no biases.
+pub struct LlamaBlock {
+    pub rms1: RmsNorm,
+    pub wq: QLinear, // (d, d)
+    pub wk: QLinear, // (d, d)
+    pub wv: QLinear, // (d, d)
+    pub wo: QLinear, // (d, d)
+    pub rms2: RmsNorm,
+    pub gate: QLinear, // (d, f)
+    pub up: QLinear,   // (d, f)
+    pub down: QLinear, // (f, d)
+}
+
+pub enum Block {
+    Gpt2(Gpt2Block),
+    Llama(LlamaBlock),
+}
+
 pub struct RefModel {
     pub cfg: RefConfig,
     recipe: RecipePrec,
+    /// Resolved block family ([`RefConfig::validate`]'s output, cached).
+    pub arch: Arch,
     pub wte: Tensor, // (V, d)
-    pub wpe: Tensor, // (T, d)
+    /// Learned positions (T, d) — all-zero and excluded from the
+    /// parameter walk on the llama family (positions live in RoPE).
+    pub wpe: Tensor,
+    /// Final norm: layernorm on gpt2; on llama only `g` is live (the
+    /// rms_f gain) and `b` stays zero and unwalked.
     pub lnf: Norm,
     pub blocks: Vec<Block>,
 }
 
 /// Gradients, one buffer per parameter (same shapes as the params).
-pub struct BlockGrads {
+pub struct Gpt2BlockGrads {
     pub ln1_g: Vec<f32>,
     pub ln1_b: Vec<f32>,
     pub w_qkv: Vec<f32>,
@@ -61,10 +106,30 @@ pub struct BlockGrads {
     pub b_fc2: Vec<f32>,
 }
 
+pub struct LlamaBlockGrads {
+    pub rms1_g: Vec<f32>,
+    pub w_q: Vec<f32>,
+    pub w_k: Vec<f32>,
+    pub w_v: Vec<f32>,
+    pub w_o: Vec<f32>,
+    pub rms2_g: Vec<f32>,
+    pub w_gate: Vec<f32>,
+    pub w_up: Vec<f32>,
+    pub w_down: Vec<f32>,
+}
+
+pub enum BlockGrads {
+    Gpt2(Gpt2BlockGrads),
+    Llama(LlamaBlockGrads),
+}
+
 pub struct Grads {
+    llama: bool,
     pub wte: Vec<f32>,
+    /// Empty on the llama family (no position table).
     pub wpe: Vec<f32>,
     pub lnf_g: Vec<f32>,
+    /// Empty on the llama family (rmsnorm has no bias).
     pub lnf_b: Vec<f32>,
     pub blocks: Vec<BlockGrads>,
 }
@@ -72,55 +137,97 @@ pub struct Grads {
 impl Grads {
     pub fn zeros(cfg: &RefConfig) -> Grads {
         let (d, f, v, t) = (cfg.d_model, cfg.d_ff, cfg.vocab, cfg.seq);
+        let llama = cfg.family == "llama";
         Grads {
+            llama,
             wte: vec![0.0; v * d],
-            wpe: vec![0.0; t * d],
+            wpe: if llama { Vec::new() } else { vec![0.0; t * d] },
             lnf_g: vec![0.0; d],
-            lnf_b: vec![0.0; d],
+            lnf_b: if llama { Vec::new() } else { vec![0.0; d] },
             blocks: (0..cfg.layers)
-                .map(|_| BlockGrads {
-                    ln1_g: vec![0.0; d],
-                    ln1_b: vec![0.0; d],
-                    w_qkv: vec![0.0; d * 3 * d],
-                    b_qkv: vec![0.0; 3 * d],
-                    w_o: vec![0.0; d * d],
-                    b_o: vec![0.0; d],
-                    ln2_g: vec![0.0; d],
-                    ln2_b: vec![0.0; d],
-                    w_fc1: vec![0.0; d * f],
-                    b_fc1: vec![0.0; f],
-                    w_fc2: vec![0.0; f * d],
-                    b_fc2: vec![0.0; d],
+                .map(|_| {
+                    if llama {
+                        BlockGrads::Llama(LlamaBlockGrads {
+                            rms1_g: vec![0.0; d],
+                            w_q: vec![0.0; d * d],
+                            w_k: vec![0.0; d * d],
+                            w_v: vec![0.0; d * d],
+                            w_o: vec![0.0; d * d],
+                            rms2_g: vec![0.0; d],
+                            w_gate: vec![0.0; d * f],
+                            w_up: vec![0.0; d * f],
+                            w_down: vec![0.0; f * d],
+                        })
+                    } else {
+                        BlockGrads::Gpt2(Gpt2BlockGrads {
+                            ln1_g: vec![0.0; d],
+                            ln1_b: vec![0.0; d],
+                            w_qkv: vec![0.0; d * 3 * d],
+                            b_qkv: vec![0.0; 3 * d],
+                            w_o: vec![0.0; d * d],
+                            b_o: vec![0.0; d],
+                            ln2_g: vec![0.0; d],
+                            ln2_b: vec![0.0; d],
+                            w_fc1: vec![0.0; d * f],
+                            b_fc1: vec![0.0; f],
+                            w_fc2: vec![0.0; f * d],
+                            b_fc2: vec![0.0; d],
+                        })
+                    }
                 })
                 .collect(),
         }
     }
 
     /// (name, grad) pairs in the canonical parameter order — names match
-    /// the python fixture keys (`w_qkv.0`, `ln_f_g`, …).
+    /// the python fixture keys (`w_qkv.0`, `ln_f_g`, … on gpt2;
+    /// `w_q.0`, `rms_f_g`, … on llama).
     pub fn flat(&self) -> Vec<(String, &[f32])> {
-        let mut out: Vec<(String, &[f32])> = vec![
-            ("wte".into(), &self.wte[..]),
-            ("wpe".into(), &self.wpe[..]),
-            ("ln_f_g".into(), &self.lnf_g[..]),
-            ("ln_f_b".into(), &self.lnf_b[..]),
-        ];
+        let mut out: Vec<(String, &[f32])> = if self.llama {
+            vec![("wte".into(), &self.wte[..]), ("rms_f_g".into(), &self.lnf_g[..])]
+        } else {
+            vec![
+                ("wte".into(), &self.wte[..]),
+                ("wpe".into(), &self.wpe[..]),
+                ("ln_f_g".into(), &self.lnf_g[..]),
+                ("ln_f_b".into(), &self.lnf_b[..]),
+            ]
+        };
         for (i, b) in self.blocks.iter().enumerate() {
-            for (n, v) in [
-                ("ln1_g", &b.ln1_g),
-                ("ln1_b", &b.ln1_b),
-                ("w_qkv", &b.w_qkv),
-                ("b_qkv", &b.b_qkv),
-                ("w_o", &b.w_o),
-                ("b_o", &b.b_o),
-                ("ln2_g", &b.ln2_g),
-                ("ln2_b", &b.ln2_b),
-                ("w_fc1", &b.w_fc1),
-                ("b_fc1", &b.b_fc1),
-                ("w_fc2", &b.w_fc2),
-                ("b_fc2", &b.b_fc2),
-            ] {
-                out.push((format!("{n}.{i}"), &v[..]));
+            match b {
+                BlockGrads::Gpt2(b) => {
+                    for (n, v) in [
+                        ("ln1_g", &b.ln1_g),
+                        ("ln1_b", &b.ln1_b),
+                        ("w_qkv", &b.w_qkv),
+                        ("b_qkv", &b.b_qkv),
+                        ("w_o", &b.w_o),
+                        ("b_o", &b.b_o),
+                        ("ln2_g", &b.ln2_g),
+                        ("ln2_b", &b.ln2_b),
+                        ("w_fc1", &b.w_fc1),
+                        ("b_fc1", &b.b_fc1),
+                        ("w_fc2", &b.w_fc2),
+                        ("b_fc2", &b.b_fc2),
+                    ] {
+                        out.push((format!("{n}.{i}"), &v[..]));
+                    }
+                }
+                BlockGrads::Llama(b) => {
+                    for (n, v) in [
+                        ("rms1_g", &b.rms1_g),
+                        ("w_q", &b.w_q),
+                        ("w_k", &b.w_k),
+                        ("w_v", &b.w_v),
+                        ("w_o", &b.w_o),
+                        ("rms2_g", &b.rms2_g),
+                        ("w_gate", &b.w_gate),
+                        ("w_up", &b.w_up),
+                        ("w_down", &b.w_down),
+                    ] {
+                        out.push((format!("{n}.{i}"), &v[..]));
+                    }
+                }
             }
         }
         out
@@ -131,32 +238,58 @@ impl Grads {
     /// gradient transport, which validates each file entry's name and
     /// length against this list before filling it.
     pub fn flat_mut(&mut self) -> Vec<(String, &mut Vec<f32>)> {
-        let mut out: Vec<(String, &mut Vec<f32>)> = vec![
-            ("wte".into(), &mut self.wte),
-            ("wpe".into(), &mut self.wpe),
-            ("ln_f_g".into(), &mut self.lnf_g),
-            ("ln_f_b".into(), &mut self.lnf_b),
-        ];
+        let mut out: Vec<(String, &mut Vec<f32>)> = if self.llama {
+            vec![("wte".into(), &mut self.wte), ("rms_f_g".into(), &mut self.lnf_g)]
+        } else {
+            vec![
+                ("wte".into(), &mut self.wte),
+                ("wpe".into(), &mut self.wpe),
+                ("ln_f_g".into(), &mut self.lnf_g),
+                ("ln_f_b".into(), &mut self.lnf_b),
+            ]
+        };
         for (i, b) in self.blocks.iter_mut().enumerate() {
-            let BlockGrads {
-                ln1_g, ln1_b, w_qkv, b_qkv, w_o, b_o,
-                ln2_g, ln2_b, w_fc1, b_fc1, w_fc2, b_fc2,
-            } = b;
-            for (n, v) in [
-                ("ln1_g", ln1_g),
-                ("ln1_b", ln1_b),
-                ("w_qkv", w_qkv),
-                ("b_qkv", b_qkv),
-                ("w_o", w_o),
-                ("b_o", b_o),
-                ("ln2_g", ln2_g),
-                ("ln2_b", ln2_b),
-                ("w_fc1", w_fc1),
-                ("b_fc1", b_fc1),
-                ("w_fc2", w_fc2),
-                ("b_fc2", b_fc2),
-            ] {
-                out.push((format!("{n}.{i}"), v));
+            match b {
+                BlockGrads::Gpt2(b) => {
+                    let Gpt2BlockGrads {
+                        ln1_g, ln1_b, w_qkv, b_qkv, w_o, b_o,
+                        ln2_g, ln2_b, w_fc1, b_fc1, w_fc2, b_fc2,
+                    } = b;
+                    for (n, v) in [
+                        ("ln1_g", ln1_g),
+                        ("ln1_b", ln1_b),
+                        ("w_qkv", w_qkv),
+                        ("b_qkv", b_qkv),
+                        ("w_o", w_o),
+                        ("b_o", b_o),
+                        ("ln2_g", ln2_g),
+                        ("ln2_b", ln2_b),
+                        ("w_fc1", w_fc1),
+                        ("b_fc1", b_fc1),
+                        ("w_fc2", w_fc2),
+                        ("b_fc2", b_fc2),
+                    ] {
+                        out.push((format!("{n}.{i}"), v));
+                    }
+                }
+                BlockGrads::Llama(b) => {
+                    let LlamaBlockGrads {
+                        rms1_g, w_q, w_k, w_v, w_o, rms2_g, w_gate, w_up, w_down,
+                    } = b;
+                    for (n, v) in [
+                        ("rms1_g", rms1_g),
+                        ("w_q", w_q),
+                        ("w_k", w_k),
+                        ("w_v", w_v),
+                        ("w_o", w_o),
+                        ("rms2_g", rms2_g),
+                        ("w_gate", w_gate),
+                        ("w_up", w_up),
+                        ("w_down", w_down),
+                    ] {
+                        out.push((format!("{n}.{i}"), v));
+                    }
+                }
             }
         }
         out
@@ -167,18 +300,33 @@ impl Grads {
         let mut out: Vec<&mut Vec<f32>> =
             vec![&mut self.wte, &mut self.wpe, &mut self.lnf_g, &mut self.lnf_b];
         for b in self.blocks.iter_mut() {
-            out.push(&mut b.ln1_g);
-            out.push(&mut b.ln1_b);
-            out.push(&mut b.w_qkv);
-            out.push(&mut b.b_qkv);
-            out.push(&mut b.w_o);
-            out.push(&mut b.b_o);
-            out.push(&mut b.ln2_g);
-            out.push(&mut b.ln2_b);
-            out.push(&mut b.w_fc1);
-            out.push(&mut b.b_fc1);
-            out.push(&mut b.w_fc2);
-            out.push(&mut b.b_fc2);
+            match b {
+                BlockGrads::Gpt2(b) => {
+                    out.push(&mut b.ln1_g);
+                    out.push(&mut b.ln1_b);
+                    out.push(&mut b.w_qkv);
+                    out.push(&mut b.b_qkv);
+                    out.push(&mut b.w_o);
+                    out.push(&mut b.b_o);
+                    out.push(&mut b.ln2_g);
+                    out.push(&mut b.ln2_b);
+                    out.push(&mut b.w_fc1);
+                    out.push(&mut b.b_fc1);
+                    out.push(&mut b.w_fc2);
+                    out.push(&mut b.b_fc2);
+                }
+                BlockGrads::Llama(b) => {
+                    out.push(&mut b.rms1_g);
+                    out.push(&mut b.w_q);
+                    out.push(&mut b.w_k);
+                    out.push(&mut b.w_v);
+                    out.push(&mut b.w_o);
+                    out.push(&mut b.rms2_g);
+                    out.push(&mut b.w_gate);
+                    out.push(&mut b.w_up);
+                    out.push(&mut b.w_down);
+                }
+            }
         }
         out
     }
@@ -211,14 +359,18 @@ impl Grads {
 }
 
 /// Per-layer forward cache (everything the backward reads).
-struct LayerCache {
+struct Gpt2LayerCache {
     h1: Vec<f32>,       // ln1 output (m, d) — qkv input
     ln1_xhat: Vec<f32>, // (m, d)
     ln1_inv: Vec<f32>,  // (m)
-    qkv: Vec<f32>,      // (m, 3d) incl. bias
-    probs: Vec<f32>,    // (b*h, t, t) causal attention probabilities
-    ctx: Vec<f32>,      // (m, d) — proj input
-    x1: Vec<f32>,       // post-attention residual (m, d)
+    /// (m, 3d) incl. bias; the k and v sections hold the (possibly)
+    /// fake-quantized KV-cache values the forward contracted with — the
+    /// STE backward reads quantized k/v and *raw* q from this buffer.
+    qkv: Vec<f32>,
+    probs: Vec<f32>,   // (b*h, t, t) raw causal attention probabilities
+    probs_q: Vec<f32>, // quantized probs, or empty when the knob is off
+    ctx: Vec<f32>,     // (m, d) — proj input
+    x1: Vec<f32>,      // post-attention residual (m, d)
     ln2_xhat: Vec<f32>,
     ln2_inv: Vec<f32>,
     h2: Vec<f32>,     // ln2 output (m, d) — fc1 input
@@ -228,13 +380,37 @@ struct LayerCache {
     x2: Vec<f32>,     // block output (m, d)
 }
 
+struct LlamaLayerCache {
+    h1: Vec<f32>,      // rms1 output (m, d) — q/k/v input
+    inv1: Vec<f32>,    // (m) reciprocal RMS
+    qr: Vec<f32>,      // rotated q (m, d), raw
+    kq: Vec<f32>,      // rotated k (m, d), KV-cache-quantized
+    vq: Vec<f32>,      // v (m, d), KV-cache-quantized
+    probs: Vec<f32>,   // (b*h, t, t) raw probabilities
+    probs_q: Vec<f32>, // quantized probs, or empty when the knob is off
+    ctx: Vec<f32>,     // (m, d) — wo input
+    x1: Vec<f32>,      // post-attention residual (m, d)
+    inv2: Vec<f32>,    // (m)
+    h2: Vec<f32>,      // rms2 output (m, d) — gate/up input
+    ug: Vec<f32>,      // gate linear output (m, f)
+    uu: Vec<f32>,      // up linear output (m, f)
+    sig: Vec<f32>,     // sigmoid(ug) (m, f)
+    a: Vec<f32>,       // SwiGLU output (m, f) — down input
+    x2: Vec<f32>,      // block output (m, d)
+}
+
+enum LayerCache {
+    Gpt2(Gpt2LayerCache),
+    Llama(LlamaLayerCache),
+}
+
 /// Full forward artifacts of one batch.
 pub struct Cache {
     pub b: usize,
     pub t: usize,
     pub x0: Vec<f32>, // embedding output (m, d)
     layers: Vec<LayerCache>,
-    lnf_xhat: Vec<f32>,
+    lnf_xhat: Vec<f32>, // empty on llama (rmsnorm keeps no xhat)
     lnf_inv: Vec<f32>,
     pub hf: Vec<f32>,     // final hidden (m, d)
     pub logits: Vec<f32>, // (m, V)
@@ -243,12 +419,18 @@ pub struct Cache {
 impl Cache {
     /// Block output of layer `i` (m × d) — golden-fixture comparisons.
     pub fn block_out(&self, i: usize) -> &[f32] {
-        &self.layers[i].x2
+        match &self.layers[i] {
+            LayerCache::Gpt2(c) => &c.x2,
+            LayerCache::Llama(c) => &c.x2,
+        }
     }
 
-    /// Last-layer attention probabilities, (b*h, t, t).
+    /// Last-layer raw attention probabilities, (b*h, t, t).
     pub fn attn_probs(&self) -> &[f32] {
-        &self.layers.last().expect("no layers").probs
+        match self.layers.last().expect("no layers") {
+            LayerCache::Gpt2(c) => &c.probs,
+            LayerCache::Llama(c) => &c.probs,
+        }
     }
 }
 
@@ -314,6 +496,53 @@ fn layernorm_bwd(
     dx
 }
 
+/// RMSNorm forward `y = x * inv * g`, `inv = 1/sqrt(mean(x^2) + eps)` —
+/// mirror of `np_rmsnorm`.  Returns (y, inv).
+fn rmsnorm_fwd(x: &[f32], g: &[f32], m: usize, d: usize) -> (Vec<f32>, Vec<f32>) {
+    let mut y = vec![0.0f32; m * d];
+    let mut inv = vec![0.0f32; m];
+    for r in 0..m {
+        let row = &x[r * d..(r + 1) * d];
+        let ms = row.iter().map(|&v| v * v).sum::<f32>() / d as f32;
+        let iv = 1.0 / (ms + LN_EPS).sqrt();
+        inv[r] = iv;
+        for j in 0..d {
+            y[r * d + j] = row[j] * iv * g[j];
+        }
+    }
+    (y, inv)
+}
+
+/// Backward of [`rmsnorm_fwd`] (mirror of `np_rmsnorm_bwd`): returns dx,
+/// accumulates dg.
+fn rmsnorm_bwd(
+    dy: &[f32],
+    x: &[f32],
+    g: &[f32],
+    inv: &[f32],
+    m: usize,
+    d: usize,
+    dg: &mut [f32],
+) -> Vec<f32> {
+    let mut dx = vec![0.0f32; m * d];
+    for r in 0..m {
+        let dyr = &dy[r * d..(r + 1) * d];
+        let xr = &x[r * d..(r + 1) * d];
+        let iv = inv[r];
+        let mut m2 = 0.0f32;
+        for j in 0..d {
+            m2 += dyr[j] * g[j] * xr[j];
+        }
+        m2 /= d as f32;
+        for j in 0..d {
+            let dxh = dyr[j] * g[j];
+            dx[r * d + j] = iv * (dxh - xr[j] * (iv * iv) * m2);
+            dg[j] += dyr[j] * xr[j] * iv;
+        }
+    }
+    dx
+}
+
 fn gelu_fwd(u: &[f32]) -> (Vec<f32>, Vec<f32>) {
     let mut a = vec![0.0f32; u.len()];
     let mut tv = vec![0.0f32; u.len()];
@@ -335,40 +564,153 @@ fn gelu_bwd(dy: &[f32], u: &[f32], tanh_u: &[f32]) -> Vec<f32> {
     du
 }
 
+/// SwiGLU forward `a = gate * sigmoid(gate) * up` — mirror of
+/// `np_swiglu`.  Returns (a, sig) with the sigmoid cached for backward.
+fn swiglu_fwd(gate: &[f32], up: &[f32]) -> (Vec<f32>, Vec<f32>) {
+    let mut a = vec![0.0f32; gate.len()];
+    let mut sig = vec![0.0f32; gate.len()];
+    for i in 0..gate.len() {
+        let s = 1.0 / (1.0 + (-gate[i]).exp());
+        sig[i] = s;
+        a[i] = gate[i] * s * up[i];
+    }
+    (a, sig)
+}
+
+/// Backward of [`swiglu_fwd`] (mirror of `np_swiglu_bwd`).
+fn swiglu_bwd(da: &[f32], gate: &[f32], up: &[f32], sig: &[f32]) -> (Vec<f32>, Vec<f32>) {
+    let mut dgate = vec![0.0f32; gate.len()];
+    let mut dup = vec![0.0f32; gate.len()];
+    for i in 0..gate.len() {
+        dgate[i] = da[i] * up[i] * sig[i] * (1.0 + gate[i] * (1.0 - sig[i]));
+        dup[i] = da[i] * gate[i] * sig[i];
+    }
+    (dgate, dup)
+}
+
+/// Precomputed rotary tables (t × half) — mirror of `np_rope` /
+/// `np_rope_bwd`: pair `u` of each head rotates `(x[u], x[u+half])` by
+/// angle `pos / base^(u/half)`.  The rotation is orthogonal per
+/// (position, pair), so the backward is the inverse rotation.
+struct Rope {
+    half: usize,
+    cos: Vec<f32>,
+    sin: Vec<f32>,
+}
+
+impl Rope {
+    fn new(t: usize, dh: usize) -> Rope {
+        let half = dh / 2;
+        let mut cos = vec![0.0f32; t * half];
+        let mut sin = vec![0.0f32; t * half];
+        for u in 0..half {
+            let freq = 1.0 / ROPE_BASE.powf(u as f32 / half as f32);
+            for p in 0..t {
+                let (sn, cs) = (p as f32 * freq).sin_cos();
+                cos[p * half + u] = cs;
+                sin[p * half + u] = sn;
+            }
+        }
+        Rope { half, cos, sin }
+    }
+
+    /// Rotate `x` (m × d, heads of dh contiguous within a row; row r is
+    /// sequence position `r % t`) in place; `inverse` applies the
+    /// transpose rotation (the vjp).
+    fn rotate(&self, x: &mut [f32], t: usize, d: usize, h: usize, dh: usize, inverse: bool) {
+        let half = self.half;
+        let m = x.len() / d;
+        for r in 0..m {
+            let pos = r % t;
+            for hi in 0..h {
+                let off = r * d + hi * dh;
+                for u in 0..half {
+                    let (cs, sn) = (self.cos[pos * half + u], self.sin[pos * half + u]);
+                    let (a, b) = (x[off + u], x[off + u + half]);
+                    if inverse {
+                        x[off + u] = a * cs + b * sn;
+                        x[off + u + half] = -a * sn + b * cs;
+                    } else {
+                        x[off + u] = a * cs - b * sn;
+                        x[off + u + half] = a * sn + b * cs;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Fake-quantize per (token, head) row along head_dim — the KV-cache
+/// write.  A contiguous (m, d) buffer with heads packed along d *is* a
+/// (m·h, dh) row matrix, so this is one fused LUT sweep.
+fn quant_kv(x: &[f32], m: usize, h: usize, dh: usize, spec: &QSpec) -> Vec<f32> {
+    crate::kernels::fake_quant_rows_auto(x, m * h, dh, spec.fmt, spec.gran)
+}
+
 // --- the model ---------------------------------------------------------------
 
 impl RefModel {
     /// Seeded GPT-2-style init (N(0, 0.02), residual projections scaled by
     /// 1/sqrt(2L), unit gains, zero biases) under the given recipe.
-    pub fn new(cfg: RefConfig, recipe: RecipePrec, seed: u64) -> RefModel {
+    /// Rejects inconsistent configs (see [`RefConfig::validate`]).
+    pub fn try_new(cfg: RefConfig, recipe: RecipePrec, seed: u64) -> Result<RefModel> {
+        let arch = cfg.validate()?;
         let (d, f, v, t, l) = (cfg.d_model, cfg.d_ff, cfg.vocab, cfg.seq, cfg.layers);
         let mut rng = Rng::new(seed ^ 0x5EED_40DE);
         let std = 0.02f32;
         let resid = std / (2.0 * l as f32).sqrt();
         let wte = Tensor::randn(&[v, d], std, &mut rng);
-        let wpe = Tensor::randn(&[t, d], std, &mut rng);
         let norm = |dd: usize| Norm { g: vec![1.0; dd], b: vec![0.0; dd] };
         let mut blocks = Vec::with_capacity(l);
+        let wpe = match arch {
+            Arch::Gpt2 => Tensor::randn(&[t, d], std, &mut rng),
+            // no position table on llama: kept as a zero tensor so the
+            // struct shape is family-independent, but never walked
+            Arch::Llama => Tensor::zeros(&[t, d]),
+        };
         for _ in 0..l {
             let al = recipe.attn_linear();
             let fl = recipe.ffn_linear();
-            blocks.push(Block {
-                ln1: norm(d),
-                qkv: QLinear::new(Tensor::randn(&[d, 3 * d], std, &mut rng), vec![0.0; 3 * d], al),
-                proj: QLinear::new(Tensor::randn(&[d, d], resid, &mut rng), vec![0.0; d], al),
-                ln2: norm(d),
-                fc1: QLinear::new(Tensor::randn(&[d, f], std, &mut rng), vec![0.0; f], fl),
-                fc2: QLinear::new(Tensor::randn(&[f, d], resid, &mut rng), vec![0.0; d], fl),
-            });
+            match arch {
+                Arch::Gpt2 => blocks.push(Block::Gpt2(Gpt2Block {
+                    ln1: norm(d),
+                    qkv: QLinear::new(
+                        Tensor::randn(&[d, 3 * d], std, &mut rng),
+                        vec![0.0; 3 * d],
+                        al,
+                    ),
+                    proj: QLinear::new(Tensor::randn(&[d, d], resid, &mut rng), vec![0.0; d], al),
+                    ln2: norm(d),
+                    fc1: QLinear::new(Tensor::randn(&[d, f], std, &mut rng), vec![0.0; f], fl),
+                    fc2: QLinear::new(Tensor::randn(&[f, d], resid, &mut rng), vec![0.0; d], fl),
+                })),
+                Arch::Llama => blocks.push(Block::Llama(LlamaBlock {
+                    rms1: RmsNorm { g: vec![1.0; d] },
+                    wq: QLinear::new(Tensor::randn(&[d, d], std, &mut rng), vec![0.0; d], al),
+                    wk: QLinear::new(Tensor::randn(&[d, d], std, &mut rng), vec![0.0; d], al),
+                    wv: QLinear::new(Tensor::randn(&[d, d], std, &mut rng), vec![0.0; d], al),
+                    wo: QLinear::new(Tensor::randn(&[d, d], resid, &mut rng), vec![0.0; d], al),
+                    rms2: RmsNorm { g: vec![1.0; d] },
+                    gate: QLinear::new(Tensor::randn(&[d, f], std, &mut rng), vec![0.0; f], fl),
+                    up: QLinear::new(Tensor::randn(&[d, f], std, &mut rng), vec![0.0; f], fl),
+                    down: QLinear::new(Tensor::randn(&[f, d], resid, &mut rng), vec![0.0; d], fl),
+                })),
+            }
         }
-        let mut model = RefModel { cfg, recipe, wte, wpe, lnf: norm(d), blocks };
+        let mut model = RefModel { cfg, recipe, arch, wte, wpe, lnf: norm(d), blocks };
         // stable stochastic-rounding identities: a pure function of the
         // sentinel name, so SR draws survive recipe swaps, rollback, and
         // resume (mirrored in python `NpRefModel` by the same FNV-1a hash)
         for (name, lin) in model.linears_mut() {
             lin.set_sr_key(crate::util::fnv1a64(name.as_bytes()));
         }
-        model
+        Ok(model)
+    }
+
+    /// [`RefModel::try_new`], panicking on an invalid config — for presets
+    /// and already-validated configs.
+    pub fn new(cfg: RefConfig, recipe: RecipePrec, seed: u64) -> RefModel {
+        Self::try_new(cfg, recipe, seed).expect("invalid RefConfig")
     }
 
     pub fn recipe(&self) -> &RecipePrec {
@@ -380,23 +722,52 @@ impl RefModel {
     /// exactly as the PJRT schedule swap flows buffers across executables.
     pub fn set_recipe(&mut self, recipe: RecipePrec) {
         for blk in &mut self.blocks {
-            blk.qkv.set_prec(recipe.attn_linear());
-            blk.proj.set_prec(recipe.attn_linear());
-            blk.fc1.set_prec(recipe.ffn_linear());
-            blk.fc2.set_prec(recipe.ffn_linear());
+            match blk {
+                Block::Gpt2(b) => {
+                    b.qkv.set_prec(recipe.attn_linear());
+                    b.proj.set_prec(recipe.attn_linear());
+                    b.fc1.set_prec(recipe.ffn_linear());
+                    b.fc2.set_prec(recipe.ffn_linear());
+                }
+                Block::Llama(b) => {
+                    b.wq.set_prec(recipe.attn_linear());
+                    b.wk.set_prec(recipe.attn_linear());
+                    b.wv.set_prec(recipe.attn_linear());
+                    b.wo.set_prec(recipe.attn_linear());
+                    b.gate.set_prec(recipe.ffn_linear());
+                    b.up.set_prec(recipe.ffn_linear());
+                    b.down.set_prec(recipe.ffn_linear());
+                }
+            }
         }
         self.recipe = recipe;
     }
 
     /// Visit every quantized linear with its sentinel-facing name
-    /// (`qkv.{layer}`, `proj.{layer}`, `fc1.{layer}`, `fc2.{layer}`).
+    /// (`qkv.{layer}`, `proj.{layer}`, `fc1.{layer}`, `fc2.{layer}` on
+    /// gpt2; `wq.{layer}`, `wk.{layer}`, `wv.{layer}`, `wo.{layer}`,
+    /// `gate.{layer}`, `up.{layer}`, `down.{layer}` on llama — the names
+    /// the python spec's SR keys hash).
     fn linears_mut(&mut self) -> Vec<(String, &mut QLinear)> {
-        let mut out: Vec<(String, &mut QLinear)> = Vec::with_capacity(4 * self.blocks.len());
-        for (i, b) in self.blocks.iter_mut().enumerate() {
-            out.push((format!("qkv.{i}"), &mut b.qkv));
-            out.push((format!("proj.{i}"), &mut b.proj));
-            out.push((format!("fc1.{i}"), &mut b.fc1));
-            out.push((format!("fc2.{i}"), &mut b.fc2));
+        let mut out: Vec<(String, &mut QLinear)> = Vec::with_capacity(7 * self.blocks.len());
+        for (i, blk) in self.blocks.iter_mut().enumerate() {
+            match blk {
+                Block::Gpt2(b) => {
+                    out.push((format!("qkv.{i}"), &mut b.qkv));
+                    out.push((format!("proj.{i}"), &mut b.proj));
+                    out.push((format!("fc1.{i}"), &mut b.fc1));
+                    out.push((format!("fc2.{i}"), &mut b.fc2));
+                }
+                Block::Llama(b) => {
+                    out.push((format!("wq.{i}"), &mut b.wq));
+                    out.push((format!("wk.{i}"), &mut b.wk));
+                    out.push((format!("wv.{i}"), &mut b.wv));
+                    out.push((format!("wo.{i}"), &mut b.wo));
+                    out.push((format!("gate.{i}"), &mut b.gate));
+                    out.push((format!("up.{i}"), &mut b.up));
+                    out.push((format!("down.{i}"), &mut b.down));
+                }
+            }
         }
         out
     }
@@ -411,7 +782,11 @@ impl RefModel {
         let attn = recipe.attn_linear();
         let ffn = recipe.ffn_linear();
         for (name, lin) in self.linears_mut() {
-            let base = if name.starts_with("qkv") || name.starts_with("proj") { attn } else { ffn };
+            let stem = name.split('.').next().unwrap_or("");
+            let base = match stem {
+                "qkv" | "proj" | "wq" | "wk" | "wv" | "wo" => attn,
+                _ => ffn,
+            };
             let prec = if demoted.iter().any(|d| *d == name) { base.demoted() } else { base };
             lin.set_prec(prec);
         }
@@ -454,40 +829,65 @@ impl RefModel {
     /// Re-pack every linear's quantized state from the master weights —
     /// call after each optimizer update.
     pub fn refresh_packed(&mut self) {
-        for blk in &mut self.blocks {
-            blk.qkv.refresh();
-            blk.proj.refresh();
-            blk.fc1.refresh();
-            blk.fc2.refresh();
+        for (_, lin) in self.linears_mut() {
+            lin.refresh();
         }
     }
 
     /// (name, master-parameter) pairs in canonical order (mutable: the
     /// optimizer walks this, then calls [`RefModel::refresh_packed`]).
+    /// The llama walk has no `wpe`, no biases, and no `ln_f_b` — the
+    /// family does not have them, so the optimizer cannot touch them.
     pub fn params_mut(&mut self) -> Vec<(String, &mut Vec<f32>)> {
-        let mut out: Vec<(String, &mut Vec<f32>)> = vec![
-            ("wte".into(), &mut self.wte.data),
-            ("wpe".into(), &mut self.wpe.data),
-            ("ln_f_g".into(), &mut self.lnf.g),
-            ("ln_f_b".into(), &mut self.lnf.b),
-        ];
-        for (i, b) in self.blocks.iter_mut().enumerate() {
-            let Block { ln1, qkv, proj, ln2, fc1, fc2 } = b;
-            for (n, v) in [
-                ("ln1_g", &mut ln1.g),
-                ("ln1_b", &mut ln1.b),
-                ("w_qkv", &mut qkv.w.data),
-                ("b_qkv", &mut qkv.b),
-                ("w_o", &mut proj.w.data),
-                ("b_o", &mut proj.b),
-                ("ln2_g", &mut ln2.g),
-                ("ln2_b", &mut ln2.b),
-                ("w_fc1", &mut fc1.w.data),
-                ("b_fc1", &mut fc1.b),
-                ("w_fc2", &mut fc2.w.data),
-                ("b_fc2", &mut fc2.b),
-            ] {
-                out.push((format!("{n}.{i}"), v));
+        let mut out: Vec<(String, &mut Vec<f32>)> = match self.arch {
+            Arch::Gpt2 => vec![
+                ("wte".into(), &mut self.wte.data),
+                ("wpe".into(), &mut self.wpe.data),
+                ("ln_f_g".into(), &mut self.lnf.g),
+                ("ln_f_b".into(), &mut self.lnf.b),
+            ],
+            Arch::Llama => vec![
+                ("wte".into(), &mut self.wte.data),
+                ("rms_f_g".into(), &mut self.lnf.g),
+            ],
+        };
+        for (i, blk) in self.blocks.iter_mut().enumerate() {
+            match blk {
+                Block::Gpt2(b) => {
+                    let Gpt2Block { ln1, qkv, proj, ln2, fc1, fc2 } = b;
+                    for (n, v) in [
+                        ("ln1_g", &mut ln1.g),
+                        ("ln1_b", &mut ln1.b),
+                        ("w_qkv", &mut qkv.w.data),
+                        ("b_qkv", &mut qkv.b),
+                        ("w_o", &mut proj.w.data),
+                        ("b_o", &mut proj.b),
+                        ("ln2_g", &mut ln2.g),
+                        ("ln2_b", &mut ln2.b),
+                        ("w_fc1", &mut fc1.w.data),
+                        ("b_fc1", &mut fc1.b),
+                        ("w_fc2", &mut fc2.w.data),
+                        ("b_fc2", &mut fc2.b),
+                    ] {
+                        out.push((format!("{n}.{i}"), v));
+                    }
+                }
+                Block::Llama(b) => {
+                    let LlamaBlock { rms1, wq, wk, wv, wo, rms2, gate, up, down } = b;
+                    for (n, v) in [
+                        ("rms1_g", &mut rms1.g),
+                        ("w_q", &mut wq.w.data),
+                        ("w_k", &mut wk.w.data),
+                        ("w_v", &mut wv.w.data),
+                        ("w_o", &mut wo.w.data),
+                        ("rms2_g", &mut rms2.g),
+                        ("w_gate", &mut gate.w.data),
+                        ("w_up", &mut up.w.data),
+                        ("w_down", &mut down.w.data),
+                    ] {
+                        out.push((format!("{n}.{i}"), v));
+                    }
+                }
             }
         }
         out
@@ -518,8 +918,23 @@ impl RefModel {
     }
 
     /// Forward pass.  `tokens` is (b × t) row-major; `exact` bypasses all
-    /// quantizers (eval / feature extraction).
+    /// quantizers — the linears *and* the kv/probs attention knobs (eval /
+    /// feature extraction).
     pub fn forward(&self, tokens: &[i32], b: usize, t: usize, exact: bool, sc: &mut Scratch) -> Cache {
+        match self.arch {
+            Arch::Gpt2 => self.forward_gpt2(tokens, b, t, exact, sc),
+            Arch::Llama => self.forward_llama(tokens, b, t, exact, sc),
+        }
+    }
+
+    fn forward_gpt2(
+        &self,
+        tokens: &[i32],
+        b: usize,
+        t: usize,
+        exact: bool,
+        sc: &mut Scratch,
+    ) -> Cache {
         let cfg = &self.cfg;
         let (d, f, h) = (cfg.d_model, cfg.d_ff, cfg.n_head);
         let dh = cfg.head_dim();
@@ -542,16 +957,41 @@ impl RefModel {
         }
         let x0 = x.clone();
 
+        let kv_spec = if exact { None } else { self.recipe.kv };
+        let pq_spec = if exact { None } else { self.recipe.attn_probs };
+
         let mut layers = Vec::with_capacity(cfg.layers);
         for blk in &self.blocks {
+            let blk = match blk {
+                Block::Gpt2(b) => b,
+                Block::Llama(_) => unreachable!("gpt2 forward on llama block"),
+            };
             // ln1 -> fused qkv
             let (h1, ln1_xhat, ln1_inv) = layernorm_fwd(&x, &blk.ln1.g, &blk.ln1.b, m, d);
             let mut qkv = vec![0.0f32; m * 3 * d];
             blk.qkv.forward_into(&h1, m, exact, &mut qkv, sc);
 
-            // exact causal attention per (batch, head)
+            // KV-cache write: fake-quantize the k and v sections of the
+            // fused buffer per (token, head) row along head_dim.  The
+            // quantized values are what every contraction — forward and
+            // backward — consumes (STE); the q section stays raw.
+            if let Some(spec) = &kv_spec {
+                let mut part = vec![0.0f32; m * d];
+                for sect in [d, 2 * d] {
+                    for r in 0..m {
+                        part[r * d..(r + 1) * d]
+                            .copy_from_slice(&qkv[r * 3 * d + sect..r * 3 * d + sect + d]);
+                    }
+                    let q = quant_kv(&part, m, h, dh, spec);
+                    for r in 0..m {
+                        qkv[r * 3 * d + sect..r * 3 * d + sect + d]
+                            .copy_from_slice(&q[r * d..(r + 1) * d]);
+                    }
+                }
+            }
+
+            // exact causal scores + softmax per (batch, head) ...
             let mut probs = vec![0.0f32; b * h * t * t];
-            let mut ctx = vec![0.0f32; m * d];
             let mut row_scores = vec![0.0f32; t];
             for bi in 0..b {
                 for hi in 0..h {
@@ -578,9 +1018,29 @@ impl RefModel {
                         for j in 0..=i {
                             probs[poff + i * t + j] = row_scores[j] / z;
                         }
+                    }
+                }
+            }
+
+            // ... then the probs quantizer (per query row along the key
+            // axis; the causal zeros quantize back to zero) ...
+            let probs_q = match &pq_spec {
+                Some(spec) => {
+                    crate::kernels::fake_quant_rows_auto(&probs, b * h * t, t, spec.fmt, spec.gran)
+                }
+                None => Vec::new(),
+            };
+            let pq: &[f32] = if probs_q.is_empty() { &probs } else { &probs_q };
+
+            // ... and the probs @ v contraction on the quantized operands
+            let mut ctx = vec![0.0f32; m * d];
+            for bi in 0..b {
+                for hi in 0..h {
+                    let poff = (bi * h + hi) * t * t;
+                    for i in 0..t {
                         let crow = &mut ctx[(bi * t + i) * d + hi * dh..][..dh];
                         for j in 0..=i {
-                            let p = probs[poff + i * t + j];
+                            let p = pq[poff + i * t + j];
                             let vrow = &qkv[(bi * t + j) * 3 * d + 2 * d + hi * dh..][..dh];
                             for u in 0..dh {
                                 crow[u] += p * vrow[u];
@@ -611,12 +1071,13 @@ impl RefModel {
             }
 
             x = x2.clone();
-            layers.push(LayerCache {
+            layers.push(LayerCache::Gpt2(Gpt2LayerCache {
                 h1,
                 ln1_xhat,
                 ln1_inv,
                 qkv,
                 probs,
+                probs_q,
                 ctx,
                 x1,
                 ln2_xhat,
@@ -626,19 +1087,182 @@ impl RefModel {
                 tanh_u,
                 a,
                 x2,
-            });
+            }));
         }
 
         let (hf, lnf_xhat, lnf_inv) = layernorm_fwd(&x, &self.lnf.g, &self.lnf.b, m, d);
-        // tied LM head (exact f32): logits = hf @ wte^T, the transpose
-        // re-derived into the reusable scratch buffer (wte changes every
-        // optimizer step, but the allocation need not)
-        let v = cfg.vocab;
+        let logits = self.head_logits(&hf, m, sc);
+        Cache { b, t, x0, layers, lnf_xhat, lnf_inv, hf, logits }
+    }
+
+    fn forward_llama(
+        &self,
+        tokens: &[i32],
+        b: usize,
+        t: usize,
+        exact: bool,
+        sc: &mut Scratch,
+    ) -> Cache {
+        let cfg = &self.cfg;
+        let (d, f, h) = (cfg.d_model, cfg.d_ff, cfg.n_head);
+        let dh = cfg.head_dim();
+        let m = b * t;
+        assert_eq!(tokens.len(), m);
+        assert!(t <= cfg.seq, "t {t} > seq {}", cfg.seq);
+        let scale = 1.0 / (dh as f32).sqrt();
+        let rope = Rope::new(t, dh);
+
+        // embedding: wte[token] only (positions live in RoPE)
+        let mut x = vec![0.0f32; m * d];
+        for (row, &tok) in tokens.iter().enumerate() {
+            let tok = tok as usize;
+            assert!(tok < cfg.vocab, "token {tok} out of vocab");
+            x[row * d..(row + 1) * d].copy_from_slice(&self.wte.data[tok * d..(tok + 1) * d]);
+        }
+        let x0 = x.clone();
+
+        let kv_spec = if exact { None } else { self.recipe.kv };
+        let pq_spec = if exact { None } else { self.recipe.attn_probs };
+
+        let mut layers = Vec::with_capacity(cfg.layers);
+        for blk in &self.blocks {
+            let blk = match blk {
+                Block::Llama(b) => b,
+                Block::Gpt2(_) => unreachable!("llama forward on gpt2 block"),
+            };
+            // rms1 -> separate q/k/v projections, RoPE on q and k
+            let (h1, inv1) = rmsnorm_fwd(&x, &blk.rms1.g, m, d);
+            let mut qr = vec![0.0f32; m * d];
+            blk.wq.forward_into(&h1, m, exact, &mut qr, sc);
+            let mut kr = vec![0.0f32; m * d];
+            blk.wk.forward_into(&h1, m, exact, &mut kr, sc);
+            let mut v = vec![0.0f32; m * d];
+            blk.wv.forward_into(&h1, m, exact, &mut v, sc);
+            rope.rotate(&mut qr, t, d, h, dh, false);
+            rope.rotate(&mut kr, t, d, h, dh, false);
+
+            // KV-cache write: k post-RoPE, v as projected, both quantized
+            // per (token, head) row along head_dim (STE — only these
+            // enter any contraction)
+            let (kq, vq) = match &kv_spec {
+                Some(spec) => (quant_kv(&kr, m, h, dh, spec), quant_kv(&v, m, h, dh, spec)),
+                None => (kr, v),
+            };
+
+            // causal scores + softmax per (batch, head)
+            let mut probs = vec![0.0f32; b * h * t * t];
+            let mut row_scores = vec![0.0f32; t];
+            for bi in 0..b {
+                for hi in 0..h {
+                    let poff = (bi * h + hi) * t * t;
+                    for i in 0..t {
+                        let qrow = &qr[(bi * t + i) * d + hi * dh..][..dh];
+                        let mut smax = f32::NEG_INFINITY;
+                        for j in 0..=i {
+                            let krow = &kq[(bi * t + j) * d + hi * dh..][..dh];
+                            let mut s = 0.0f32;
+                            for u in 0..dh {
+                                s += qrow[u] * krow[u];
+                            }
+                            s *= scale;
+                            row_scores[j] = s;
+                            smax = smax.max(s);
+                        }
+                        let mut z = 0.0f32;
+                        for j in 0..=i {
+                            let e = (row_scores[j] - smax).exp();
+                            row_scores[j] = e;
+                            z += e;
+                        }
+                        for j in 0..=i {
+                            probs[poff + i * t + j] = row_scores[j] / z;
+                        }
+                    }
+                }
+            }
+
+            let probs_q = match &pq_spec {
+                Some(spec) => {
+                    crate::kernels::fake_quant_rows_auto(&probs, b * h * t, t, spec.fmt, spec.gran)
+                }
+                None => Vec::new(),
+            };
+            let pq: &[f32] = if probs_q.is_empty() { &probs } else { &probs_q };
+
+            let mut ctx = vec![0.0f32; m * d];
+            for bi in 0..b {
+                for hi in 0..h {
+                    let poff = (bi * h + hi) * t * t;
+                    for i in 0..t {
+                        let crow = &mut ctx[(bi * t + i) * d + hi * dh..][..dh];
+                        for j in 0..=i {
+                            let p = pq[poff + i * t + j];
+                            let vrow = &vq[(bi * t + j) * d + hi * dh..][..dh];
+                            for u in 0..dh {
+                                crow[u] += p * vrow[u];
+                            }
+                        }
+                    }
+                }
+            }
+
+            // out-proj + residual (no bias: the linear's b is pinned 0)
+            let mut attn = vec![0.0f32; m * d];
+            blk.wo.forward_into(&ctx, m, exact, &mut attn, sc);
+            let mut x1 = vec![0.0f32; m * d];
+            for i in 0..m * d {
+                x1[i] = x[i] + attn[i];
+            }
+
+            // rms2 -> SwiGLU MLP + residual
+            let (h2, inv2) = rmsnorm_fwd(&x1, &blk.rms2.g, m, d);
+            let mut ug = vec![0.0f32; m * f];
+            blk.gate.forward_into(&h2, m, exact, &mut ug, sc);
+            let mut uu = vec![0.0f32; m * f];
+            blk.up.forward_into(&h2, m, exact, &mut uu, sc);
+            let (a, sig) = swiglu_fwd(&ug, &uu);
+            let mut mo = vec![0.0f32; m * d];
+            blk.down.forward_into(&a, m, exact, &mut mo, sc);
+            let mut x2 = vec![0.0f32; m * d];
+            for i in 0..m * d {
+                x2[i] = x1[i] + mo[i];
+            }
+
+            x = x2.clone();
+            layers.push(LayerCache::Llama(LlamaLayerCache {
+                h1,
+                inv1,
+                qr,
+                kq,
+                vq,
+                probs,
+                probs_q,
+                ctx,
+                x1,
+                inv2,
+                h2,
+                ug,
+                uu,
+                sig,
+                a,
+                x2,
+            }));
+        }
+
+        let (hf, lnf_inv) = rmsnorm_fwd(&x, &self.lnf.g, m, d);
+        let logits = self.head_logits(&hf, m, sc);
+        Cache { b, t, x0, layers, lnf_xhat: Vec::new(), lnf_inv, hf, logits }
+    }
+
+    /// Tied LM head (exact f32): logits = hf @ wte^T, the transpose
+    /// re-derived into the reusable scratch buffer (wte changes every
+    /// optimizer step, but the allocation need not).
+    fn head_logits(&self, hf: &[f32], m: usize, sc: &mut Scratch) -> Vec<f32> {
+        let (v, d) = (self.cfg.vocab, self.cfg.d_model);
         transpose_into(&self.wte.data, v, d, &mut sc.wte_t);
         let mut logits = vec![0.0f32; m * v];
-        crate::kernels::matmul_into(&hf, &sc.wte_t, m, d, v, &mut logits);
-
-        Cache { b, t, x0, layers, lnf_xhat, lnf_inv, hf, logits }
+        crate::kernels::matmul_into(hf, &sc.wte_t, m, d, v, &mut logits);
+        logits
     }
 
     /// Mean next-token cross-entropy + dlogits for a (b × (t+1)) batch.
@@ -676,9 +1300,7 @@ impl RefModel {
         let (b, t1) = (batch.shape[0], batch.shape[1]);
         let t = t1 - 1;
         let cfg = &self.cfg;
-        let (d, h, v) = (cfg.d_model, cfg.n_head, cfg.vocab);
-        let dh = cfg.head_dim();
-        let scale = 1.0 / (dh as f32).sqrt();
+        let (d, v) = (cfg.d_model, cfg.vocab);
         let m = b * t;
         let mut tokens = Vec::with_capacity(m);
         let mut targets = Vec::with_capacity(m);
@@ -702,13 +1324,46 @@ impl RefModel {
         let mut dhf = vec![0.0f32; m * d];
         crate::kernels::matmul_into(&dlogits, &self.wte.data, m, v, d, &mut dhf);
 
+        match self.arch {
+            Arch::Gpt2 => self.backward_gpt2(&tokens, &cache, &dhf, &mut g, sc),
+            Arch::Llama => self.backward_llama(&tokens, &cache, &dhf, &mut g, sc),
+        }
+
+        (loss, g, cache)
+    }
+
+    fn backward_gpt2(
+        &self,
+        tokens: &[i32],
+        cache: &Cache,
+        dhf: &[f32],
+        g: &mut Grads,
+        sc: &mut Scratch,
+    ) {
+        let cfg = &self.cfg;
+        let (b, t) = (cache.b, cache.t);
+        let (d, h) = (cfg.d_model, cfg.n_head);
+        let dh = cfg.head_dim();
+        let scale = 1.0 / (dh as f32).sqrt();
+        let m = b * t;
+
         let mut dx = layernorm_bwd(
-            &dhf, &self.lnf.g, &cache.lnf_xhat, &cache.lnf_inv, m, d, &mut g.lnf_g, &mut g.lnf_b,
+            dhf, &self.lnf.g, &cache.lnf_xhat, &cache.lnf_inv, m, d, &mut g.lnf_g, &mut g.lnf_b,
         );
 
         for (li, blk) in self.blocks.iter().enumerate().rev() {
-            let cc = &cache.layers[li];
-            let bg = &mut g.blocks[li];
+            let blk = match blk {
+                Block::Gpt2(b) => b,
+                Block::Llama(_) => unreachable!(),
+            };
+            let cc = match &cache.layers[li] {
+                LayerCache::Gpt2(c) => c,
+                LayerCache::Llama(_) => unreachable!(),
+            };
+            let bg = match &mut g.blocks[li] {
+                BlockGrads::Gpt2(bg) => bg,
+                BlockGrads::Llama(_) => unreachable!(),
+            };
             let f = cfg.d_ff;
 
             // MLP branch: x2 = x1 + fc2(gelu(fc1(ln2(x1))))
@@ -731,7 +1386,12 @@ impl RefModel {
             blk.proj
                 .backward_into(&cc.ctx, &dx1, m, &mut dctx, &mut bg.w_o, &mut bg.b_o, sc);
 
-            // exact attention backward per (batch, head)
+            // exact attention backward per (batch, head).  STE: the
+            // cached qkv's k/v sections and pq are the (possibly)
+            // quantized tensors the forward contracted with — dv uses
+            // the quantized probs, dp/dq the quantized v/k, while the
+            // softmax backward (dsc) runs on the raw probs.
+            let pqs: &[f32] = if cc.probs_q.is_empty() { &cc.probs } else { &cc.probs_q };
             let mut dqkv = vec![0.0f32; m * 3 * d];
             let mut dp = vec![0.0f32; t];
             for bi in 0..b {
@@ -739,7 +1399,7 @@ impl RefModel {
                     let poff = (bi * h + hi) * t * t;
                     for i in 0..t {
                         let drow = &dctx[(bi * t + i) * d + hi * dh..][..dh];
-                        // dp[j] = dctx_i . v_j ; dv_j += p_ij * dctx_i
+                        // dp[j] = dctx_i . vq_j ; dv_j += pq_ij * dctx_i
                         let mut dot_pp = 0.0f32;
                         for j in 0..=i {
                             let p = cc.probs[poff + i * t + j];
@@ -753,14 +1413,15 @@ impl RefModel {
                         }
                         for j in 0..=i {
                             let p = cc.probs[poff + i * t + j];
+                            let pqv = pqs[poff + i * t + j];
                             let dsc = p * (dp[j] - dot_pp) * scale;
                             // dv
                             let dvrow =
                                 &mut dqkv[(bi * t + j) * 3 * d + 2 * d + hi * dh..][..dh];
                             for u in 0..dh {
-                                dvrow[u] += p * drow[u];
+                                dvrow[u] += pqv * drow[u];
                             }
-                            // dq_i += dsc * k_j ; dk_j += dsc * q_i
+                            // dq_i += dsc * kq_j ; dk_j += dsc * q_i
                             let krow = &cc.qkv[(bi * t + j) * 3 * d + d + hi * dh..][..dh];
                             let qrow = &cc.qkv[(bi * t + i) * 3 * d + hi * dh..][..dh];
                             for u in 0..dh {
@@ -793,8 +1454,150 @@ impl RefModel {
                 g.wpe[pos * d + j] += dx[row * d + j];
             }
         }
+    }
 
-        (loss, g, cache)
+    fn backward_llama(
+        &self,
+        tokens: &[i32],
+        cache: &Cache,
+        dhf: &[f32],
+        g: &mut Grads,
+        sc: &mut Scratch,
+    ) {
+        let cfg = &self.cfg;
+        let (b, t) = (cache.b, cache.t);
+        let (d, f, h) = (cfg.d_model, cfg.d_ff, cfg.n_head);
+        let dh = cfg.head_dim();
+        let scale = 1.0 / (dh as f32).sqrt();
+        let m = b * t;
+        let rope = Rope::new(t, dh);
+
+        // final rmsnorm: its input is the last block's output (or the
+        // embedding when there are no layers)
+        let x_f: &[f32] =
+            if cfg.layers == 0 { &cache.x0 } else { cache.block_out(cfg.layers - 1) };
+        let mut dx = rmsnorm_bwd(dhf, x_f, &self.lnf.g, &cache.lnf_inv, m, d, &mut g.lnf_g);
+
+        // the llama family has no biases: the QLinear API still fills a
+        // db buffer, which is discarded (never walked by the optimizer)
+        let mut db_d = vec![0.0f32; d];
+        let mut db_f = vec![0.0f32; f];
+
+        for (li, blk) in self.blocks.iter().enumerate().rev() {
+            let blk = match blk {
+                Block::Llama(b) => b,
+                Block::Gpt2(_) => unreachable!(),
+            };
+            let cc = match &cache.layers[li] {
+                LayerCache::Llama(c) => c,
+                LayerCache::Gpt2(_) => unreachable!(),
+            };
+            let bg = match &mut g.blocks[li] {
+                BlockGrads::Llama(bg) => bg,
+                BlockGrads::Gpt2(_) => unreachable!(),
+            };
+
+            // SwiGLU MLP branch: x2 = x1 + down(silu(gate(h2)) * up(h2))
+            let mut da = vec![0.0f32; m * f];
+            blk.down
+                .backward_into(&cc.a, &dx, m, &mut da, &mut bg.w_down, &mut db_d, sc);
+            let (dug, duu) = swiglu_bwd(&da, &cc.ug, &cc.uu, &cc.sig);
+            let mut dh2 = vec![0.0f32; m * d];
+            blk.gate
+                .backward_into(&cc.h2, &dug, m, &mut dh2, &mut bg.w_gate, &mut db_f, sc);
+            let mut dh2b = vec![0.0f32; m * d];
+            blk.up
+                .backward_into(&cc.h2, &duu, m, &mut dh2b, &mut bg.w_up, &mut db_f, sc);
+            for i in 0..m * d {
+                dh2[i] += dh2b[i];
+            }
+            let mut dx1 = rmsnorm_bwd(&dh2, &cc.x1, &blk.rms2.g, &cc.inv2, m, d, &mut bg.rms2_g);
+            for i in 0..m * d {
+                dx1[i] += dx[i]; // residual
+            }
+
+            // attention branch: x1 = x + wo(ctx).  STE through the
+            // KV-cache and probs quantizers: backward contractions reuse
+            // the cached quantized kq/vq/pq (dv = pqᵀ@dctx, dp = dctx@vqᵀ,
+            // dq = dsc@kq) with the *raw* rotated q in dk and the raw
+            // probs in the softmax backward; the RoPE vjp is the inverse
+            // rotation.
+            let mut dctx = vec![0.0f32; m * d];
+            blk.wo
+                .backward_into(&cc.ctx, &dx1, m, &mut dctx, &mut bg.w_o, &mut db_d, sc);
+
+            let pqs: &[f32] = if cc.probs_q.is_empty() { &cc.probs } else { &cc.probs_q };
+            let mut dq = vec![0.0f32; m * d];
+            let mut dk = vec![0.0f32; m * d];
+            let mut dv = vec![0.0f32; m * d];
+            let mut dp = vec![0.0f32; t];
+            for bi in 0..b {
+                for hi in 0..h {
+                    let poff = (bi * h + hi) * t * t;
+                    for i in 0..t {
+                        let drow = &dctx[(bi * t + i) * d + hi * dh..][..dh];
+                        let mut dot_pp = 0.0f32;
+                        for j in 0..=i {
+                            let p = cc.probs[poff + i * t + j];
+                            let vrow = &cc.vq[(bi * t + j) * d + hi * dh..][..dh];
+                            let mut s = 0.0f32;
+                            for u in 0..dh {
+                                s += drow[u] * vrow[u];
+                            }
+                            dp[j] = s;
+                            dot_pp += s * p;
+                        }
+                        for j in 0..=i {
+                            let p = cc.probs[poff + i * t + j];
+                            let pqv = pqs[poff + i * t + j];
+                            let dsc = p * (dp[j] - dot_pp) * scale;
+                            let dvrow = &mut dv[(bi * t + j) * d + hi * dh..][..dh];
+                            for u in 0..dh {
+                                dvrow[u] += pqv * drow[u];
+                            }
+                            let krow = &cc.kq[(bi * t + j) * d + hi * dh..][..dh];
+                            let qrow = &cc.qr[(bi * t + i) * d + hi * dh..][..dh];
+                            for u in 0..dh {
+                                dq[(bi * t + i) * d + hi * dh + u] += dsc * krow[u];
+                                dk[(bi * t + j) * d + hi * dh + u] += dsc * qrow[u];
+                            }
+                        }
+                    }
+                }
+            }
+            rope.rotate(&mut dq, t, d, h, dh, true);
+            rope.rotate(&mut dk, t, d, h, dh, true);
+
+            let mut dh1 = vec![0.0f32; m * d];
+            blk.wq
+                .backward_into(&cc.h1, &dq, m, &mut dh1, &mut bg.w_q, &mut db_d, sc);
+            let mut tmp = vec![0.0f32; m * d];
+            blk.wk
+                .backward_into(&cc.h1, &dk, m, &mut tmp, &mut bg.w_k, &mut db_d, sc);
+            for i in 0..m * d {
+                dh1[i] += tmp[i];
+            }
+            blk.wv
+                .backward_into(&cc.h1, &dv, m, &mut tmp, &mut bg.w_v, &mut db_d, sc);
+            for i in 0..m * d {
+                dh1[i] += tmp[i];
+            }
+
+            let x_in: &[f32] = if li == 0 { &cache.x0 } else { cache.block_out(li - 1) };
+            let dxr = rmsnorm_bwd(&dh1, x_in, &blk.rms1.g, &cc.inv1, m, d, &mut bg.rms1_g);
+            dx = dx1;
+            for i in 0..m * d {
+                dx[i] += dxr[i];
+            }
+        }
+
+        // embedding gather (wte only — no position table)
+        for (row, &tok) in tokens.iter().enumerate() {
+            let tok = tok as usize;
+            for j in 0..d {
+                g.wte[tok * d + j] += dx[row * d + j];
+            }
+        }
     }
 
     /// Summed next-token NLL + token count under the **full-precision**

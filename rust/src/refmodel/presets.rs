@@ -37,6 +37,8 @@ pub fn model_names() -> Vec<&'static str> {
 
 /// Geometry of a model preset.
 pub fn model(name: &str) -> Option<RefConfig> {
+    // llama presets carry rope (the llama block requires it); gpt2
+    // presets use learned positions.  RefConfig::validate cross-checks.
     let c = |family: &str, vocab, layers, d_model, n_head, d_ff, seq| RefConfig {
         name: name.to_string(),
         family: family.to_string(),
@@ -46,6 +48,7 @@ pub fn model(name: &str) -> Option<RefConfig> {
         n_head,
         d_ff,
         seq,
+        rope: family == "llama",
     };
     match name {
         "gpt2-s-proxy" => Some(c("gpt2", VOCAB, 2, 128, 4, 512, SEQ)),
@@ -81,6 +84,7 @@ pub fn recipe_names() -> Vec<&'static str> {
         "fp4_agrad",
         "nvfp4",
         "nvfp4_sr",
+        "ours_qattn",
     ];
     v.sort();
     v
@@ -89,7 +93,16 @@ pub fn recipe_names() -> Vec<&'static str> {
 /// A precision recipe by name (python `presets.RECIPES`).
 pub fn recipe(name: &str) -> Option<RecipePrec> {
     let r = |attn, ffn, wgrad, agrad| {
-        Some(RecipePrec { name: name.to_string(), attn, ffn, wgrad, agrad, sr_grad: false })
+        Some(RecipePrec {
+            name: name.to_string(),
+            attn,
+            ffn,
+            wgrad,
+            agrad,
+            kv: None,
+            attn_probs: None,
+            sr_grad: false,
+        })
     };
     match name {
         "fp16" => r(None, None, None, None),
@@ -110,6 +123,15 @@ pub fn recipe(name: &str) -> Option<RecipePrec> {
         // ... and with stochastic rounding on the gradient fake-quants
         "nvfp4_sr" => r(Some(FP8B), Some(FP4TL), Some(FP8B), None).map(|mut p| {
             p.sr_grad = true;
+            p
+        }),
+        // the headline recipe with the attention interior quantized too:
+        // FP8 KV-cache (per (token, head) row along head_dim) and FP8
+        // attention scores (per query row along the key axis) — the
+        // "FP4 All the Way" / NVFP4-report extension past the linears
+        "ours_qattn" => r(Some(FP8B), Some(FP4B), Some(FP8B), None).map(|mut p| {
+            p.kv = Some(FP8T);
+            p.attn_probs = Some(FP8T);
             p
         }),
         _ => None,
@@ -137,8 +159,63 @@ mod tests {
             let m = model(name).unwrap();
             assert_eq!(m.d_model % m.n_head, 0, "{name}");
             assert!(m.param_count() > 0);
+            // every built-in preset passes arch validation, and the
+            // family ↔ arch ↔ rope mapping is explicit
+            let arch = m.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+            match m.family.as_str() {
+                "gpt2" => {
+                    assert_eq!(arch, super::super::Arch::Gpt2, "{name}");
+                    assert!(!m.rope, "{name}: gpt2 preset must not carry rope");
+                }
+                "llama" => {
+                    assert_eq!(arch, super::super::Arch::Llama, "{name}");
+                    assert!(m.rope, "{name}: llama preset must carry rope");
+                }
+                other => panic!("{name}: unexpected family {other}"),
+            }
         }
         assert!(model("nope").is_none());
+    }
+
+    #[test]
+    fn inconsistent_configs_error_instead_of_falling_through() {
+        let base = model("llama-125m-proxy").unwrap();
+
+        // unknown family is an error, not a silent gpt2 fallthrough
+        let mut m = base.clone();
+        m.family = "mamba".into();
+        let e = format!("{:#}", m.validate().unwrap_err());
+        assert!(e.contains("unknown model family"), "{e}");
+
+        // n_head must divide d_model
+        let mut m = base.clone();
+        m.n_head = 5;
+        let e = format!("{:#}", m.validate().unwrap_err());
+        assert!(e.contains("must divide d_model"), "{e}");
+
+        // rope on a gpt2 block is inconsistent
+        let mut m = model("gpt2-s-proxy").unwrap();
+        m.rope = true;
+        let e = format!("{:#}", m.validate().unwrap_err());
+        assert!(e.contains("rope requested on a gpt2 block"), "{e}");
+
+        // ... as is a llama block without rope
+        let mut m = base.clone();
+        m.rope = false;
+        let e = format!("{:#}", m.validate().unwrap_err());
+        assert!(e.contains("llama block requires rope"), "{e}");
+
+        // rope needs paired (even) head dims for the half-split rotation
+        let mut m = base.clone();
+        m.d_model = 96;
+        m.n_head = 96; // head_dim 1
+        let e = format!("{:#}", m.validate().unwrap_err());
+        assert!(e.contains("even head_dim"), "{e}");
+
+        // the real constructor surfaces the same errors
+        let mut m = base.clone();
+        m.family = "mamba".into();
+        assert!(super::super::RefModel::try_new(m, recipe("fp16").unwrap(), 0).is_err());
     }
 
     #[test]
@@ -173,6 +250,24 @@ mod tests {
         assert!(!nv.sr_grad);
         assert!(nv_sr.sr_grad);
         assert_eq!((nv.attn, nv.ffn, nv.wgrad, nv.agrad), (nv_sr.attn, nv_sr.ffn, nv_sr.wgrad, nv_sr.agrad));
+
+        // attention-interior knobs: exact everywhere except ours_qattn,
+        // which adds the FP8 per-row KV-cache and probs quantizers on top
+        // of the unchanged "ours" linear table
+        for name in recipe_names() {
+            let r = recipe(name).unwrap();
+            if name == "ours_qattn" {
+                assert_eq!(r.kv.unwrap(), FP8T, "{name}");
+                assert_eq!(r.attn_probs.unwrap(), FP8T, "{name}");
+            } else {
+                assert!(r.kv.is_none() && r.attn_probs.is_none(), "{name}");
+            }
+        }
+        let qa = recipe("ours_qattn").unwrap();
+        assert_eq!(
+            (qa.attn, qa.ffn, qa.wgrad, qa.agrad),
+            (ours.attn, ours.ffn, ours.wgrad, ours.agrad)
+        );
     }
 
     #[test]

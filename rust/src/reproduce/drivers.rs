@@ -470,8 +470,9 @@ pub fn table4(rt: &Runtime, opts: &ReproduceOpts) -> Result<()> {
 
 // ---------------------------------------------------------------------------
 // --host drivers: the same reports, trained on the pure-Rust refmodel
-// engine (no artifacts / PJRT required).  LLaMA presets run as gpt2-block
-// proxies — see refmodel's module doc.
+// engine (no artifacts / PJRT required).  LLaMA presets run the real
+// llama block (RoPE attention, SwiGLU FFN, rmsnorm) — see refmodel's
+// module doc for the block-variant dispatch.
 
 fn train_run_host(
     opts: &ReproduceOpts,
@@ -548,7 +549,7 @@ pub fn fig2_host(opts: &ReproduceOpts) -> Result<()> {
 
 pub fn table1_host(opts: &ReproduceOpts) -> Result<()> {
     let mut rep = Report::new(&opts.out_dir, "table1_host")?;
-    rep.line("Table 1 — FP4 recipe vs FP16 baseline across GPT-2 sizes");
+    rep.line("Table 1 — FP4 recipe vs FP16 baseline across GPT-2 sizes + LLaMA-125M");
     rep.line("(host refmodel engine; WikiText -> held-out fresh-seed corpus PPL;");
     rep.line(" GLUE -> 8-probe suite; see DESIGN.md)");
     rep.line("");
@@ -556,7 +557,7 @@ pub fn table1_host(opts: &ReproduceOpts) -> Result<()> {
         "model".into(), "method".into(), "val_loss".into(), "val_ppl".into(),
         "heldout_ppl".into(), "probe_mean_acc".into(),
     ]];
-    for model in ["gpt2-s-proxy", "gpt2-m-proxy", "gpt2-l-proxy"] {
+    for model in ["gpt2-s-proxy", "gpt2-m-proxy", "gpt2-l-proxy", "llama-125m-proxy"] {
         for recipe in ["ours", "fp16"] {
             let tail = if recipe == "ours" { 0.08 } else { 0.0 };
             let r = train_run_host(opts, model, recipe, tail)?;

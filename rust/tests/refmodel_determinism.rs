@@ -29,6 +29,25 @@ fn micro_cfg() -> RefConfig {
         n_head: 4,
         d_ff: 512,
         seq: 64,
+        rope: false,
+    }
+}
+
+/// LLaMA-block twin of `micro_cfg`: RoPE attention, SwiGLU FFN, rmsnorm.
+/// Same past-every-parallel-threshold sizing so the thread sweep hits the
+/// concurrent kernel paths (including the KV / attention-probs fake-quant
+/// sweeps added by the `ours_qattn` recipe).
+fn micro_llama_cfg() -> RefConfig {
+    RefConfig {
+        name: "determinism-llama-proxy".into(),
+        family: "llama".into(),
+        vocab: 64,
+        layers: 2,
+        d_model: 128,
+        n_head: 4,
+        d_ff: 384,
+        seq: 64,
+        rope: true,
     }
 }
 
@@ -46,10 +65,19 @@ fn train_bits(steps: u64, panel_cache: bool) -> (Vec<u32>, Vec<u32>) {
 }
 
 fn train_bits_recipe(recipe: &str, steps: u64, panel_cache: bool) -> (Vec<u32>, Vec<u32>) {
-    let cfg = micro_cfg();
+    train_bits_cfg(micro_cfg(), recipe, steps, panel_cache)
+}
+
+fn train_bits_cfg(
+    cfg: RefConfig,
+    recipe: &str,
+    steps: u64,
+    panel_cache: bool,
+) -> (Vec<u32>, Vec<u32>) {
     let recipe = presets::recipe(recipe).unwrap();
+    let family = cfg.family.clone();
     let mut model = RefModel::new(cfg.clone(), recipe, 17);
-    let mut opt = AdamW::new(&mut model, HParams::for_family("gpt2", steps));
+    let mut opt = AdamW::new(&mut model, HParams::for_family(&family, steps));
     let mut sc = if panel_cache { Scratch::with_panel_cache(64 << 20) } else { Scratch::default() };
     let b = 8;
     let mut losses = Vec::new();
@@ -116,6 +144,38 @@ fn sr_two_level_training_bit_identical_across_threads_and_cache() {
     let rne = train_bits_recipe("nvfp4", 3, false);
     let sr = reference.unwrap();
     assert_ne!(rne.1, sr.1, "SR gradient rounding changed no loss bit vs RNE");
+}
+
+/// Same sweep on the LLaMA block under the `ours_qattn` recipe: RoPE
+/// attention with an FP8-fake-quantized KV write and FP8 attention probs
+/// on top of the quantized linears.  The KV and probs fake-quant sweeps
+/// run over `(b*h*t, dh)` / `(b*h*t, t)` row matrices sized past
+/// `PAR_MIN_ELEMS`, so this pins the new quantization points (and the
+/// whole llama fwd/bwd) bit-identical across thread counts and
+/// panel-cache states.  The attention quantizers must also actually move
+/// the trajectory vs plain `ours` on the same block, or the knobs are
+/// dead.
+#[test]
+fn llama_qattn_training_bit_identical_across_threads_and_cache() {
+    let _env = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let mut reference: Option<(Vec<u32>, Vec<u32>)> = None;
+    for nt in THREAD_COUNTS {
+        std::env::set_var("PALLAS_THREADS", nt.to_string());
+        for cache in [false, true] {
+            let got = train_bits_cfg(micro_llama_cfg(), "ours_qattn", 3, cache);
+            match &reference {
+                None => reference = Some(got),
+                Some(r) => {
+                    assert_eq!(got.1, r.1, "llama qattn loss bits diverged at nt={nt} cache={cache}");
+                    assert_eq!(got.0, r.0, "llama qattn param bits diverged at nt={nt} cache={cache}");
+                }
+            }
+        }
+    }
+    std::env::remove_var("PALLAS_THREADS");
+    let plain = train_bits_cfg(micro_llama_cfg(), "ours", 3, false);
+    let qattn = reference.unwrap();
+    assert_ne!(plain.1, qattn.1, "KV/probs quantization changed no loss bit vs plain ours");
 }
 
 #[test]

@@ -12,7 +12,10 @@
 //! rounding boundary may legitimately differ by a full grid step, which
 //! per-element equality would misread as a bug.  The fp16 run has no
 //! quantizers, so its bound is pure accumulation noise (2e-5); the
-//! quantized bound is format-derived (5e-3).
+//! quantized bounds are format-derived (5e-3 for the gpt2 quant run,
+//! wider for the NVFP4+SR and llama + quantized-attention runs, which
+//! add more fake-quantized contractions — see the fixture's tolerance
+//! comments).
 
 use std::path::Path;
 
@@ -47,11 +50,13 @@ fn rel_l2(got: &[f32], want: &[f32]) -> f64 {
     num.sqrt() / den.sqrt().max(1e-12)
 }
 
-fn config_of(j: &Json) -> RefConfig {
-    let g = |k: &str| j.at(&["config", k]).and_then(|v| v.as_usize()).unwrap();
+fn config_of_at(j: &Json, root: &str) -> RefConfig {
+    let g = |k: &str| j.at(&[root, k]).and_then(|v| v.as_usize()).unwrap();
+    let family = j.at(&[root, "family"]).and_then(|v| v.as_str()).unwrap().to_string();
     RefConfig {
-        name: "refmodel-micro".into(),
-        family: "gpt2".into(),
+        name: format!("refmodel-micro-{family}"),
+        rope: family == "llama",
+        family,
         vocab: g("vocab"),
         layers: g("layers"),
         d_model: g("d_model"),
@@ -59,6 +64,10 @@ fn config_of(j: &Json) -> RefConfig {
         d_ff: g("d_ff"),
         seq: g("seq"),
     }
+}
+
+fn config_of(j: &Json) -> RefConfig {
+    config_of_at(j, "config")
 }
 
 fn spec_of_at(j: &Json, root: &str, knob: &str) -> Option<QSpec> {
@@ -84,11 +93,11 @@ fn spec_of(j: &Json, knob: &str) -> Option<QSpec> {
     spec_of_at(j, "recipe", knob)
 }
 
-fn build_model(j: &Json, recipe: RecipePrec) -> RefModel {
-    let cfg = config_of(j);
+fn build_model_at(j: &Json, cfg_root: &str, params_root: &str, recipe: RecipePrec) -> RefModel {
+    let cfg = config_of_at(j, cfg_root);
     let mut model = RefModel::new(cfg, recipe, 0);
     let owned: Vec<(String, Vec<f32>)> = j
-        .get("params")
+        .get(params_root)
         .and_then(|p| p.members())
         .unwrap()
         .iter()
@@ -98,6 +107,10 @@ fn build_model(j: &Json, recipe: RecipePrec) -> RefModel {
         owned.iter().map(|(n, d)| (n.as_str(), d.as_slice())).collect();
     model.set_params(&entries); // bulk load: one re-pack for all params
     model
+}
+
+fn build_model(j: &Json, recipe: RecipePrec) -> RefModel {
+    build_model_at(j, "config", "params", recipe)
 }
 
 fn batch_of(j: &Json) -> TensorI32 {
@@ -114,11 +127,11 @@ fn tol(j: &Json, key: &str) -> f64 {
     j.at(&["tolerances", key]).and_then(|v| v.as_f64()).unwrap()
 }
 
-fn replay(run: &str, recipe: RecipePrec, bound_key: &str) {
+fn replay_at(run: &str, cfg_root: &str, params_root: &str, recipe: RecipePrec, bound_key: &str) {
     let j = fixture();
     let bound = tol(&j, bound_key);
     let loss_tol = tol(&j, "loss_abs");
-    let model = build_model(&j, recipe);
+    let model = build_model_at(&j, cfg_root, params_root, recipe);
     let batch = batch_of(&j);
     let mut sc = Scratch::default();
     let (loss, grads, cache) = model.loss_and_grads(&batch, &mut sc);
@@ -153,6 +166,10 @@ fn replay(run: &str, recipe: RecipePrec, bound_key: &str) {
     }
 }
 
+fn replay(run: &str, recipe: RecipePrec, bound_key: &str) {
+    replay_at(run, "config", "params", recipe, bound_key);
+}
+
 #[test]
 fn fp16_run_matches_python_golden() {
     replay("fp16", RecipePrec::exact("fp16"), "fp16_rel_l2");
@@ -167,6 +184,8 @@ fn quant_run_matches_python_golden() {
         ffn: spec_of(&j, "ffn"),
         wgrad: spec_of(&j, "wgrad"),
         agrad: spec_of(&j, "agrad"),
+        kv: None,
+        attn_probs: None,
         sr_grad: false,
     };
     assert!(recipe.attn.is_some() && recipe.ffn.is_some() && recipe.wgrad.is_some());
@@ -189,11 +208,74 @@ fn nvfp4_sr_run_matches_python_golden() {
         ffn: spec_of_at(&j, root, "ffn"),
         wgrad: spec_of_at(&j, root, "wgrad"),
         agrad: spec_of_at(&j, root, "agrad"),
+        kv: None,
+        attn_probs: None,
         sr_grad: j.at(&[root, "sr_grad"]).and_then(|v| v.as_bool()).unwrap(),
     };
     assert!(matches!(recipe.ffn.unwrap().gran, Granularity::TwoLevelBlock(_)));
     assert!(recipe.sr_grad);
     replay("nvfp4_sr", recipe, "nvfp4_sr_rel_l2");
+}
+
+/// Replay the llama-block + quantized-attention run: rmsnorm / RoPE /
+/// SwiGLU forward-backward on the real llama block, with the FP8
+/// KV-cache (per (token, head) row along head_dim) and FP8 probs
+/// quantizers (per query row along the key axis) engaged — the python
+/// oracle mirrors the STE backward exactly (quantized kq/vq/pq in every
+/// contraction, raw probs in the softmax backward, inverse-rotation RoPE
+/// vjp), so this pins the whole quantized attention interior.
+#[test]
+fn llama_qattn_run_matches_python_golden() {
+    let j = fixture();
+    let root = "recipe_llama_qattn";
+    let recipe = RecipePrec {
+        name: "fixture-llama-qattn".into(),
+        attn: spec_of_at(&j, root, "attn"),
+        ffn: spec_of_at(&j, root, "ffn"),
+        wgrad: spec_of_at(&j, root, "wgrad"),
+        agrad: spec_of_at(&j, root, "agrad"),
+        kv: spec_of_at(&j, root, "kv"),
+        attn_probs: spec_of_at(&j, root, "attn_probs"),
+        sr_grad: false,
+    };
+    // fixture block 0 == one scale group per row
+    assert_eq!(recipe.kv.unwrap().gran, Granularity::PerRow);
+    assert_eq!(recipe.attn_probs.unwrap().gran, Granularity::PerRow);
+    replay_at(
+        "llama_qattn",
+        "config_llama",
+        "params_llama",
+        recipe,
+        "llama_qattn_rel_l2",
+    );
+}
+
+/// The attention-interior quantizers must actually engage on the llama
+/// block: the same llama model with kv/attn_probs stripped produces a
+/// different loss, and the gap stays within a coarse FP8-derived band.
+#[test]
+fn llama_kv_probs_quantizers_engage() {
+    let j = fixture();
+    let root = "recipe_llama_qattn";
+    let qattn = RecipePrec {
+        name: "fixture-llama-qattn".into(),
+        attn: spec_of_at(&j, root, "attn"),
+        ffn: spec_of_at(&j, root, "ffn"),
+        wgrad: spec_of_at(&j, root, "wgrad"),
+        agrad: spec_of_at(&j, root, "agrad"),
+        kv: spec_of_at(&j, root, "kv"),
+        attn_probs: spec_of_at(&j, root, "attn_probs"),
+        sr_grad: false,
+    };
+    let stripped = RecipePrec { kv: None, attn_probs: None, ..qattn.clone() };
+    let qm = build_model_at(&j, "config_llama", "params_llama", qattn);
+    let sm = build_model_at(&j, "config_llama", "params_llama", stripped);
+    let batch = batch_of(&j);
+    let mut sc = Scratch::default();
+    let (ql, _, _) = qm.loss_and_grads(&batch, &mut sc);
+    let (sl, _, _) = sm.loss_and_grads(&batch, &mut sc);
+    assert_ne!(ql, sl, "kv/attn_probs quantizers changed nothing");
+    assert!(((ql - sl) / sl).abs() < 0.25, "qattn {ql} vs stripped {sl}");
 }
 
 /// The quantized and exact runs must actually differ (quantization
@@ -208,6 +290,8 @@ fn quant_and_fp16_differ_within_format_band() {
         ffn: spec_of(&j, "ffn"),
         wgrad: spec_of(&j, "wgrad"),
         agrad: spec_of(&j, "agrad"),
+        kv: None,
+        attn_probs: None,
         sr_grad: false,
     };
     let qm = build_model(&j, quant);
